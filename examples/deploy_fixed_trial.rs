@@ -1,0 +1,55 @@
+//! §2.2 deployment flow — tune with a live `Trial`, deploy the winning
+//! parameter set through `FixedTrial` against the *same* objective code.
+//!
+//!     cargo run --release --example deploy_fixed_trial
+
+use optuna_rs::core::OptunaError;
+use optuna_rs::prelude::*;
+use std::sync::Arc;
+
+/// The objective is written ONCE against the TrialApi trait; both the
+/// optimizer and the deployment path call it.
+fn objective<T: TrialApi>(t: &mut T) -> Result<f64, OptunaError> {
+    let x = t.suggest_float("x", -10.0, 10.0)?;
+    let kind = t.suggest_categorical("kind", &["shifted", "plain"])?;
+    let y = if kind == "shifted" {
+        t.suggest_float("shift", -2.0, 2.0)?
+    } else {
+        0.0
+    };
+    Ok((x - 2.0).powi(2) + (y - 1.0).powi(2))
+}
+
+fn main() {
+    // ---- tune -----------------------------------------------------------
+    let study = Study::builder()
+        .name("deploy-demo")
+        .sampler(Arc::new(TpeSampler::new(3)))
+        .build()
+        .expect("study");
+    study.optimize(150, |t| objective(t)).expect("optimize");
+    let best = study.best_trial().expect("ok").expect("completed");
+    println!("tuned: best value {:.5} with {:?}", best.value.unwrap(), {
+        best.params.keys().collect::<Vec<_>>()
+    });
+
+    // ---- deploy: FixedTrial replays the recorded winning parameters ------
+    let mut deployed = FixedTrial::from_frozen(&best);
+    let replayed = objective(&mut deployed).expect("deploy objective");
+    println!("deployed FixedTrial value: {replayed:.5}");
+    assert!(
+        (replayed - best.value.unwrap()).abs() < 1e-9,
+        "deployment must reproduce the tuned objective exactly"
+    );
+
+    // ---- deploy a hand-written config (the user-defined set of §2.2) -----
+    let mut manual = FixedTrial::new(vec![
+        ("x", ParamValue::Float(2.0)),
+        ("kind", ParamValue::Cat("shifted".into())),
+        ("shift", ParamValue::Float(1.0)),
+    ]);
+    let v = objective(&mut manual).expect("manual objective");
+    println!("hand-written optimal config value: {v:.5}");
+    assert!(v < 1e-9);
+    println!("deployment flow OK");
+}

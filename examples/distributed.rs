@@ -1,0 +1,108 @@
+//! Fig 7 — distributed optimization across OS processes sharing a journal
+//! storage file. This example *is* the shell script of Fig 7b: it spawns
+//! N copies of the `optuna` CLI binary with the same storage URL and
+//! study name; the processes coordinate through the journal alone.
+//!
+//!     cargo run --release --example distributed
+//!
+//! (Also demonstrates in-process parallelism via optimize_parallel.)
+
+use optuna_rs::prelude::*;
+use std::process::Command;
+use std::sync::Arc;
+
+fn optuna_bin() -> std::path::PathBuf {
+    // target/<profile>/examples/distributed -> target/<profile>/optuna
+    let mut p = std::env::current_exe().expect("current_exe");
+    p.pop();
+    p.pop();
+    p.push("optuna");
+    p
+}
+
+fn main() {
+    let path = std::env::temp_dir().join(format!("optuna_distributed_{}.jsonl", std::process::id()));
+    let url = format!("journal://{}", path.display());
+    let bin = optuna_bin();
+    if !bin.exists() {
+        eprintln!("building the optuna CLI first: cargo build --release");
+        let ok = Command::new("cargo")
+            .args(["build", "--release", "--bin", "optuna"])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        assert!(ok && bin.exists(), "optuna binary not found at {bin:?}");
+    }
+
+    // ---- Fig 7b: create the study, then launch 4 worker processes -------
+    let status = Command::new(&bin)
+        .args(["create-study", "--storage", &url, "--study", "dist-demo"])
+        .status()
+        .expect("create-study");
+    assert!(status.success());
+
+    let n_workers = 4;
+    let trials_per_worker = 25;
+    println!("spawning {n_workers} worker processes x {trials_per_worker} trials (shared journal: {url})");
+    let children: Vec<_> = (0..n_workers)
+        .map(|w| {
+            Command::new(&bin)
+                .args([
+                    "optimize",
+                    "--storage", &url,
+                    "--study", "dist-demo",
+                    "--workload", "quadratic",
+                    "--sampler", "tpe",
+                    "--trials", &trials_per_worker.to_string(),
+                    "--seed", &(1000 + w).to_string(),
+                ])
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    for mut c in children {
+        assert!(c.wait().expect("wait").success());
+    }
+
+    // ---- verify the shared study from a fresh handle ---------------------
+    let storage = Arc::new(JournalStorage::open(&path).expect("journal"));
+    let study = Study::builder()
+        .name("dist-demo")
+        .storage(storage)
+        .build()
+        .expect("study");
+    let trials = study.trials().expect("trials");
+    let best = study.best_value().expect("ok").expect("some value");
+    println!(
+        "total trials across processes: {} (expected {})",
+        trials.len(),
+        n_workers * trials_per_worker
+    );
+    println!("best (x-2)^2 + (y+1)^2 = {best:.6}");
+    assert_eq!(trials.len(), n_workers * trials_per_worker);
+    // trial numbers must be dense & unique across processes
+    let mut nums: Vec<u64> = trials.iter().map(|t| t.number).collect();
+    nums.sort_unstable();
+    assert_eq!(nums, (0..trials.len() as u64).collect::<Vec<_>>());
+    assert!(best < 3.0, "distributed TPE should find a good region: {best}");
+
+    // ---- same architecture, in-process (threads + shared storage) --------
+    let study2 = Study::builder()
+        .name("dist-inproc")
+        .sampler(Arc::new(TpeSampler::new(5)))
+        .build()
+        .expect("study");
+    study2
+        .optimize_parallel(100, 8, |t| {
+            let x = t.suggest_float("x", -10.0, 10.0)?;
+            let y = t.suggest_float("y", -10.0, 10.0)?;
+            Ok((x - 2.0).powi(2) + (y + 1.0).powi(2))
+        })
+        .expect("parallel");
+    println!(
+        "in-process 8-thread study best: {:.6}",
+        study2.best_value().unwrap().unwrap()
+    );
+    std::fs::remove_file(&path).ok();
+    println!("distributed flow OK");
+}

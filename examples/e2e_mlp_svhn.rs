@@ -1,0 +1,127 @@
+//! END-TO-END driver (the repro's headline): all three layers compose on
+//! a real training workload.
+//!
+//!   L3  this Rust coordinator: Study + TPE sampler + ASHA pruner,
+//!       with TPE's candidate scoring running on the AOT-compiled
+//!       Pallas kernel through PJRT (TpeKernelScorer);
+//!   L2  the JAX simplified-AlexNet train/eval steps (masked widths),
+//!       compiled once by `make artifacts`, executed via PJRT CPU;
+//!   L1  the Pallas kernels inside both (tpe_score, fused dense+relu).
+//!
+//! The workload is the paper's §5.2 experiment at laptop scale: tune the
+//! 8 hyperparameters of the conv net on synthetic SVHN-like data with
+//! pruning, and log the error curve.
+//!
+//!     make artifacts && cargo run --release --example e2e_mlp_svhn
+//!
+//! Knobs: E2E_TRIALS (default 14), E2E_STEPS (default 48).
+
+use optuna_rs::core::OptunaError;
+use optuna_rs::mlmodel::{HyperParams, SyntheticSvhn, TrainSession};
+use optuna_rs::prelude::*;
+use optuna_rs::runtime::{Runtime, TpeKernelScorer};
+use optuna_rs::sampler::{TpeBackend, TpeConfig};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    if !Runtime::artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let n_trials = env_usize("E2E_TRIALS", 14);
+    let max_steps = env_usize("E2E_STEPS", 48) as u64;
+    let rt = Arc::new(Runtime::open_default().expect("runtime"));
+    println!(
+        "PJRT platform: {}; train batch {}, eval batch {}",
+        rt.platform(),
+        rt.manifest.model.train_batch,
+        rt.manifest.model.eval_batch
+    );
+
+    // L3 -> L1: TPE scores its candidates on the Pallas kernel via PJRT.
+    let scorer = TpeKernelScorer::new(Arc::clone(&rt)).expect("tpe kernel");
+    let sampler = TpeSampler::with_config(
+        42,
+        TpeConfig { n_startup_trials: 6, n_ei_candidates: 64, ..Default::default() },
+        TpeBackend::External(Arc::new(scorer)),
+    );
+    let study = Study::builder()
+        .name("e2e-svhn")
+        .sampler(Arc::new(sampler))
+        .pruner(Arc::new(AshaPruner::with_params(4, 2, 0)))
+        .build()
+        .expect("study");
+
+    let meta = rt.manifest.model.clone();
+    let rt_obj = Arc::clone(&rt);
+    let log: Arc<Mutex<Vec<(u64, f64, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+    let log_obj = Arc::clone(&log);
+    let t0 = Instant::now();
+
+    study
+        .optimize(n_trials, move |trial| {
+            // ---- define-by-run: the paper's 8 hyperparameters ----------
+            let hp = HyperParams {
+                lr: trial.suggest_float_log("lr", 1e-3, 0.5)?,
+                momentum: trial.suggest_float("momentum", 0.5, 0.99)?,
+                weight_decay: trial.suggest_float_log("weight_decay", 1e-6, 1e-2)?,
+                dropout: trial.suggest_float("dropout", 0.0, 0.5)?,
+                c1: trial.suggest_int_log("c1", 4, 16)? as usize,
+                c2: trial.suggest_int_log("c2", 8, 32)? as usize,
+                c3: trial.suggest_int_log("c3", 8, 32)? as usize,
+                fc_units: trial.suggest_int_log("fc_units", 32, 256)? as usize,
+            };
+            // ---- L2 via PJRT: train with per-step report + prune -------
+            let mut sess = TrainSession::new(Arc::clone(&rt_obj), &hp, trial.number() as i32)
+                .map_err(|e| OptunaError::Objective(e.to_string()))?;
+            let mut train = SyntheticSvhn::new(meta.img, meta.n_classes, 1000 + trial.number());
+            let mut eval = SyntheticSvhn::new(meta.img, meta.n_classes, 77);
+            let (ex, ey) = eval.batch(meta.eval_batch);
+            let mut err = 1.0;
+            for step in 1..=max_steps {
+                let (x, y) = train.batch(meta.train_batch);
+                sess.train_step(&x, &y)?;
+                if step % 4 == 0 || step == max_steps {
+                    let (_, e) = sess.eval(&ex, &ey)?;
+                    err = e;
+                    trial.report(step, err)?;
+                    if trial.should_prune()? {
+                        log_obj.lock().unwrap().push((trial.number(), err, true));
+                        return Err(OptunaError::TrialPruned);
+                    }
+                }
+            }
+            log_obj.lock().unwrap().push((trial.number(), err, false));
+            Ok(err)
+        })
+        .expect("optimize");
+
+    // ---- report ----------------------------------------------------------
+    let wall = t0.elapsed().as_secs_f64();
+    let trials = study.trials().expect("trials");
+    let pruned = trials.iter().filter(|t| t.state == TrialState::Pruned).count();
+    let complete = trials.iter().filter(|t| t.state == TrialState::Complete).count();
+    println!("\ntrial | final/last err | state");
+    for (num, err, was_pruned) in log.lock().unwrap().iter() {
+        println!(
+            "{num:>5} | {err:.4} | {}",
+            if *was_pruned { "pruned" } else { "complete" }
+        );
+    }
+    let best = study.best_trial().expect("ok").expect("completed");
+    println!(
+        "\n{n_trials} trials in {wall:.1}s ({complete} complete, {pruned} pruned by ASHA)"
+    );
+    println!("best test error: {:.4} with:", best.value.unwrap());
+    for (name, _) in &best.params {
+        println!("  {name} = {}", best.param(name).unwrap());
+    }
+    assert!(best.value.unwrap() < 0.5, "should beat chance (0.9) clearly");
+    assert!(complete >= 1);
+    println!("\nE2E OK: Rust(L3) -> PJRT -> JAX fwd/bwd(L2) -> Pallas kernels(L1)");
+}

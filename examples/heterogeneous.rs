@@ -1,0 +1,81 @@
+//! Fig 3 analog — one study exploring a *heterogeneous* space: random
+//! forest vs MLP, each branch with its own hyperparameters, factored into
+//! independent helper functions (the modular-programming point of §2.1).
+//!
+//!     cargo run --release --example heterogeneous
+
+use optuna_rs::core::OptunaError;
+use optuna_rs::prelude::*;
+use std::sync::Arc;
+
+/// Simulated validation error of a random-forest config.
+fn create_rf<T: TrialApi>(t: &mut T) -> Result<f64, OptunaError> {
+    let max_depth = t.suggest_int("rf_max_depth", 2, 32)?;
+    let n_trees = t.suggest_int_log("rf_n_trees", 8, 512)?;
+    // sweet spot: depth ~12, trees ~128
+    let err = 0.12
+        + 0.015 * ((max_depth as f64).ln() - (12f64).ln()).powi(2)
+        + 0.01 * ((n_trees as f64).log2() - 7.0).powi(2);
+    Ok(err)
+}
+
+/// Simulated validation error of an MLP config (deeper + wider is better
+/// here, so the *better branch depends on budget* — a heterogeneous space).
+fn create_mlp<T: TrialApi>(t: &mut T) -> Result<f64, OptunaError> {
+    let n_layers = t.suggest_int("mlp_n_layers", 1, 4)?;
+    let mut cap = 0.0;
+    for i in 0..n_layers {
+        let units = t.suggest_int(&format!("mlp_units_l{i}"), 4, 128)?;
+        cap += (units as f64).log2();
+    }
+    let lr = t.suggest_float_log("mlp_lr", 1e-5, 1e-1)?;
+    let err = 0.08 + 0.5 * (-cap / 8.0).exp() + 0.04 * (lr.log10() + 2.5).powi(2);
+    Ok(err)
+}
+
+fn main() {
+    let study = Study::builder()
+        .name("heterogeneous")
+        .sampler(Arc::new(TpeSampler::new(7)))
+        .build()
+        .expect("study");
+
+    study
+        .optimize(200, |trial| {
+            let classifier = trial.suggest_categorical("classifier", &["rf", "mlp"])?;
+            if classifier == "rf" {
+                create_rf(trial)
+            } else {
+                create_mlp(trial)
+            }
+        })
+        .expect("optimize");
+
+    let trials = study.trials().expect("trials");
+    let rf_count = trials
+        .iter()
+        .filter(|t| t.param("classifier") == Some(ParamValue::Cat("rf".into())))
+        .count();
+    let best = study.best_trial().expect("t").expect("completed");
+    println!(
+        "explored {} trials: {} rf, {} mlp",
+        trials.len(),
+        rf_count,
+        trials.len() - rf_count
+    );
+    println!(
+        "best = {:.4} on branch {:?}",
+        best.value.unwrap(),
+        best.param("classifier").unwrap()
+    );
+    for (name, _) in &best.params {
+        println!("  {name} = {}", best.param(name).unwrap());
+    }
+    // TPE's categorical model should route most trials to the better branch
+    let mlp_best = trials
+        .iter()
+        .filter(|t| t.param("classifier") == Some(ParamValue::Cat("mlp".into())))
+        .filter_map(|t| t.value)
+        .fold(f64::INFINITY, f64::min);
+    println!("best mlp-branch value: {mlp_best:.4}");
+}

@@ -1,0 +1,151 @@
+"""AOT lowering: jax programs -> artifacts/*.hlo.txt + manifest.json.
+
+HLO **text** (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile does
+this); it is the ONLY python entrypoint in the system — rust never shells
+out to python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import tpe_score as tsk
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_entry(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_program(fn, example_args, name, out_dir, manifest, extra=None):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_tree = jax.eval_shape(fn, *example_args)
+    outs = jax.tree_util.tree_leaves(out_tree)
+    entry = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [_spec_entry(s) for s in example_args],
+        "outputs": [_spec_entry(s) for s in outs],
+    }
+    if extra:
+        entry.update(extra)
+    manifest["programs"][name] = entry
+    print(f"  {name}: {len(text)} chars, {len(example_args)} in / {len(outs)} out")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "programs": {},
+        "model": {
+            "img": model.IMG,
+            "train_batch": model.TRAIN_BATCH,
+            "eval_batch": model.EVAL_BATCH,
+            "n_classes": model.NCLS,
+            "param_specs": [[n, list(s)] for n, s in model.PARAM_SPECS],
+            "mask_specs": [[n, list(s)] for n, s in model.MASK_SPECS],
+        },
+        "tpe": {
+            "max_candidates": tsk.MAX_CANDIDATES,
+            "max_components": tsk.MAX_COMPONENTS,
+        },
+    }
+
+    print("lowering programs:")
+    lower_program(
+        lambda *a: tsk.tpe_score(*a),
+        tsk.example_args(), "tpe_score", args.out_dir, manifest)
+    lower_program(
+        model.train_step_flat, model.train_example_args(),
+        "train_step", args.out_dir, manifest)
+    lower_program(
+        model.eval_step_flat, model.eval_example_args(),
+        "eval_step", args.out_dir, manifest)
+    lower_program(
+        model.init_params_flat, model.init_example_args(),
+        "init_params", args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+    write_tpe_fixtures(args.out_dir)
+
+
+def write_tpe_fixtures(out_dir: str) -> None:
+    """Deterministic oracle vectors for the Rust native TPE scorer
+    (rust/tests/tpe_parity.rs asserts against these)."""
+    import numpy as np
+
+    from .kernels import ref
+
+    rng = np.random.default_rng(20190725)  # the paper's compile date :)
+    cases = []
+    for (k_live_b, k_live_a, k_max, n_cand, low, high) in [
+        (3, 5, 8, 16, 0.0, 1.0),
+        (1, 1, 4, 8, -5.0, 5.0),
+        (16, 16, 16, 32, 1e-3, 10.0),
+        (7, 2, 32, 24, -100.0, 100.0),
+    ]:
+        def mk(k_live):
+            mus = rng.uniform(low, high, k_max)
+            sig = rng.uniform(0.05 * (high - low), high - low, k_max)
+            w = np.zeros(k_max)
+            w[:k_live] = rng.uniform(0.2, 1.0, k_live)
+            return mus, sig, w
+
+        bm, bs, bw = mk(k_live_b)
+        am, asg, aw = mk(k_live_a)
+        cand = rng.uniform(low, high, n_cand)
+        f32 = lambda a: np.asarray(a, np.float32)
+        score, logl, logg = ref.tpe_score_ref(
+            f32(cand), f32(bm), f32(bs), f32(bw), f32(am), f32(asg), f32(aw),
+            np.float32(low), np.float32(high))
+        cases.append({
+            "low": low, "high": high,
+            "cand": [float(v) for v in f32(cand)],
+            "below": {"mus": [float(v) for v in f32(bm)],
+                      "sigmas": [float(v) for v in f32(bs)],
+                      "weights": [float(v) for v in f32(bw)]},
+            "above": {"mus": [float(v) for v in f32(am)],
+                      "sigmas": [float(v) for v in f32(asg)],
+                      "weights": [float(v) for v in f32(aw)]},
+            "logl": [float(v) for v in np.asarray(logl)],
+            "logg": [float(v) for v in np.asarray(logg)],
+            "score": [float(v) for v in np.asarray(score)],
+        })
+    path = os.path.join(out_dir, "tpe_fixtures.json")
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {path} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

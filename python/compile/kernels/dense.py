@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused tiled dense + bias + ReLU.
+
+Used by the L2 model (model.py) for the classifier-head layers so that the
+train/eval HLO artifacts contain a Pallas-lowered region on the model's own
+hot path.  The kernel tiles the (B, K) × (K, N) matmul over a grid of
+(B/bB, N/bN) output blocks with the full K dimension resident per block —
+the VMEM-scratchpad analog of a shared-memory GEMM tile, targeting the MXU
+on real TPUs (see DESIGN.md §2/§8).  interpret=True for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 8×128 VPU lane layout; the shipped
+# model shapes (B=128, K≤1024, N≤256) keep one (bB, K) + (K, bN) operand
+# pair under 2 MiB f32 — comfortably VMEM-resident, double-bufferable.
+BLOCK_B = 64
+BLOCK_N = 128
+
+
+def _dense_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]          # [bB, K]
+    w = w_ref[...]          # [K, bN]
+    b = b_ref[...]          # [bN]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(acc + b[None, :], 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def dense_relu(x, w, b, block_b: int = BLOCK_B, block_n: int = BLOCK_N):
+    """relu(x @ w + b) with a Pallas grid over output tiles.
+
+    x: [B, K] f32, w: [K, N] f32, b: [N] f32 — B % block_b == 0,
+    N % block_n == 0 (the model picks shapes that satisfy this).
+
+    Differentiable via custom_vjp: pallas_call has no automatic reverse-mode
+    rule, so the backward pass is expressed in jnp (XLA fuses it); the
+    forward (inference + training activations) stays on the Pallas kernel.
+    """
+    return _dense_relu_fwd_impl(x, w, b, block_b, block_n)
+
+
+def _dense_relu_fwd_impl(x, w, b, block_b, block_n):
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and B % block_b == 0 and N % block_n == 0, (x.shape, w.shape)
+    grid = (B // block_b, N // block_n)
+    return pl.pallas_call(
+        _dense_relu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _dense_relu_vjp_fwd(x, w, b, block_b, block_n):
+    y = _dense_relu_fwd_impl(x, w, b, block_b, block_n)
+    return y, (x, w, y)
+
+
+def _dense_relu_vjp_bwd(block_b, block_n, res, g):
+    x, w, y = res
+    gm = jnp.where(y > 0.0, g, 0.0)
+    dx = gm @ w.T
+    dw = x.T @ gm
+    db = jnp.sum(gm, axis=0)
+    return dx, dw, db
+
+
+dense_relu.defvjp(_dense_relu_vjp_fwd, _dense_relu_vjp_bwd)

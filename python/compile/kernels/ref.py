@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (python/tests/) asserts the
+Pallas kernels in `tpe_score.py` / `dense.py` match these to float32
+tolerance, and the Rust native TPE scorer is validated against fixture
+vectors generated from these formulas (rust/tests/ fixtures produced by
+python/tests/test_tpe_fixtures.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Numerical floor shared by kernel, oracle and the Rust scorer so all three
+# agree on the formula.
+EPS = 1e-12
+SQRT2 = 1.4142135623730951
+
+
+def ndtr(z):
+    """Standard normal CDF via erf (float32-stable)."""
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / SQRT2))
+
+
+def truncnorm_mixture_logpdf(x, mus, sigmas, weights, low, high):
+    """log pdf of a weighted Gaussian mixture truncated to [low, high].
+
+    Args:
+      x:       [C] candidate points.
+      mus:     [K] component means.
+      sigmas:  [K] component stddevs (>0 for live components; padding may
+               carry any positive value).
+      weights: [K] component weights; padding components carry weight 0.
+               Weights are normalized internally.
+      low/high: scalar truncation bounds.
+    Returns: [C] float32 log densities.
+    """
+    x = x[:, None]                # [C, 1]
+    mus_b = mus[None, :]          # [1, K]
+    sig_b = sigmas[None, :]
+    z = (x - mus_b) / sig_b
+    log_norm = -0.5 * z * z - jnp.log(sig_b) - 0.5 * jnp.log(2.0 * jnp.pi)
+    # Per-component truncation mass on [low, high].
+    a = (low - mus_b) / sig_b
+    b = (high - mus_b) / sig_b
+    log_mass = jnp.log(jnp.maximum(ndtr(b) - ndtr(a), EPS))
+    w = weights / jnp.maximum(jnp.sum(weights), EPS)
+    logw = jnp.log(jnp.maximum(w, EPS))[None, :]
+    comp = logw + log_norm - log_mass
+    # Exact padding: dead components (weight == 0) contribute nothing.
+    neg_inf = jnp.asarray(-jnp.inf, dtype=comp.dtype)
+    comp = jnp.where(weights[None, :] > 0.0, comp, neg_inf)
+    # logsumexp over K with all-(-inf) guard.
+    m = jnp.max(comp, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    return jnp.log(jnp.sum(jnp.exp(comp - m), axis=1) + EPS) + m[:, 0]
+
+
+def tpe_score_ref(cand, below_mus, below_sigmas, below_w,
+                  above_mus, above_sigmas, above_w, low, high):
+    """Reference TPE acquisition: returns (log l − log g, log l, log g)."""
+    logl = truncnorm_mixture_logpdf(cand, below_mus, below_sigmas, below_w, low, high)
+    logg = truncnorm_mixture_logpdf(cand, above_mus, above_sigmas, above_w, low, high)
+    return logl - logg, logl, logg
+
+
+def dense_relu_ref(x, w, b):
+    """Reference for the fused dense kernel: relu(x @ w + b)."""
+    return jnp.maximum(x @ w + b[None, :], 0.0)

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: batched TPE Parzen-estimator scoring.
+
+This is the sampling hot-spot of the Optuna framework itself.  On every
+`suggest_float`/`suggest_int` call, TPE splits the observation history into
+a "below" (good) and an "above" (bad) set, fits one truncated-Gaussian
+mixture to each, and scores C candidate points with the acquisition
+
+    score(x) = log l(x) − log g(x)
+
+picking the argmax.  The kernel fuses the two mixture-density evaluations
+(C candidates × K components × 2 mixtures) into a single VMEM-resident
+pass.  Shapes are static (padded) so one AOT artifact serves every trial:
+dead components carry weight 0 and are masked exactly.
+
+TPU mapping (DESIGN.md §2): candidates tile the C axis into VPU lanes, the
+K axis is reduced in-register; the whole working set (3K+3K+C+4 floats)
+is ≪ 1 MiB for the shipped C=512, K=64 so a single BlockSpec block
+suffices.  No MXU use — this is a VPU (elementwise/reduction) kernel.
+
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Shipped artifact sizes (rust/src/sampler/tpe.rs must agree — they are
+# recorded in artifacts/manifest.json).
+MAX_COMPONENTS = 64
+MAX_CANDIDATES = 512
+
+EPS = 1e-12
+_SQRT2 = 1.4142135623730951
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+def _erf(x):
+    """Abramowitz–Stegun 7.1.26 rational erf (|err| < 1.5e-7).
+
+    xla_extension 0.5.1's HLO text parser predates the `erf` opcode, so the
+    kernel carries its own polynomial — the SAME one the Rust native scorer
+    uses (util::stats::erf), which keeps the two backends bit-close.
+    """
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = t * (0.254829592
+                + t * (-0.284496736
+                       + t * (1.421413741
+                              + t * (-1.453152027 + t * 1.061405429))))
+    e = 1.0 - poly * jnp.exp(-ax * ax)
+    return jnp.sign(x) * e
+
+
+def _ndtr(z):
+    return 0.5 * (1.0 + _erf(z / _SQRT2))
+
+
+def _mixture_logpdf_block(x, mus, sigmas, weights, low, high):
+    """[C] log-density of the truncated mixture, all operands in VMEM.
+
+    x: [C], mus/sigmas/weights: [K], low/high: [1] scalars-as-vectors.
+    """
+    xc = x[:, None]                     # [C, 1]
+    mu = mus[None, :]                   # [1, K]
+    sg = sigmas[None, :]
+    z = (xc - mu) / sg
+    log_norm = -0.5 * z * z - jnp.log(sg) - 0.5 * _LOG_2PI
+    a = (low - mu) / sg
+    b = (high - mu) / sg
+    log_mass = jnp.log(jnp.maximum(_ndtr(b) - _ndtr(a), EPS))
+    w = weights / jnp.maximum(jnp.sum(weights), EPS)
+    logw = jnp.log(jnp.maximum(w, EPS))[None, :]
+    comp = logw + log_norm - log_mass
+    neg = jnp.asarray(-jnp.inf, dtype=comp.dtype)
+    comp = jnp.where(weights[None, :] > 0.0, comp, neg)
+    m = jnp.max(comp, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    return jnp.log(jnp.sum(jnp.exp(comp - m), axis=1) + EPS) + m[:, 0]
+
+
+def _tpe_score_kernel(cand_ref, bmu_ref, bsg_ref, bw_ref,
+                      amu_ref, asg_ref, aw_ref, bounds_ref,
+                      score_ref, logl_ref, logg_ref):
+    """Fused kernel body: one block holds everything in VMEM."""
+    cand = cand_ref[...]
+    low = bounds_ref[0]
+    high = bounds_ref[1]
+    logl = _mixture_logpdf_block(cand, bmu_ref[...], bsg_ref[...], bw_ref[...], low, high)
+    logg = _mixture_logpdf_block(cand, amu_ref[...], asg_ref[...], aw_ref[...], low, high)
+    score_ref[...] = logl - logg
+    logl_ref[...] = logl
+    logg_ref[...] = logg
+
+
+@functools.partial(jax.jit, static_argnames=("n_cand", "n_comp"))
+def tpe_score(cand, below_mus, below_sigmas, below_w,
+              above_mus, above_sigmas, above_w, bounds,
+              n_cand: int = MAX_CANDIDATES, n_comp: int = MAX_COMPONENTS):
+    """Pallas-call wrapper. All inputs f32; bounds = [low, high] as a [2] vec.
+
+    Returns (score[C], logl[C], logg[C]).
+    """
+    out_shape = [jax.ShapeDtypeStruct((n_cand,), jnp.float32)] * 3
+    return tuple(
+        pl.pallas_call(
+            _tpe_score_kernel,
+            out_shape=out_shape,
+            interpret=True,
+        )(cand, below_mus, below_sigmas, below_w,
+          above_mus, above_sigmas, above_w, bounds)
+    )
+
+
+def example_args(n_cand: int = MAX_CANDIDATES, n_comp: int = MAX_COMPONENTS):
+    """ShapeDtypeStructs for AOT lowering (aot.py)."""
+    f32 = jnp.float32
+    c = jax.ShapeDtypeStruct((n_cand,), f32)
+    k = jax.ShapeDtypeStruct((n_comp,), f32)
+    b = jax.ShapeDtypeStruct((2,), f32)
+    return (c, k, k, k, k, k, k, b)

@@ -1,0 +1,197 @@
+"""L2 JAX model: the paper's evaluation workload (§5.2 "simplified AlexNet").
+
+The KDD'19 paper evaluates pruning/distributed optimization by tuning a
+subnetwork of AlexNet (3 conv layers + 1 FC, 8 hyperparameters) on SVHN.
+This module is the AOT-compilable analog: a 3-conv + 1-FC classifier over
+16×16×3 SVHN-like images whose **architecture widths are runtime
+hyperparameters** via channel masks (one fixed maximal HLO serves every
+trial — see DESIGN.md §3), and whose optimizer hyperparameters
+(lr / momentum / weight decay / dropout) arrive as runtime scalars.
+
+8 tunable hyperparameters, matching the paper's count:
+    lr, momentum, weight_decay, dropout, c1, c2, c3, fc_units
+
+Exported programs (lowered by aot.py, executed from rust/src/mlmodel/):
+    init_params(seed)                                  -> params + momentum
+    train_step(params, mom, x, y, hp, masks..., seed)  -> params', mom', loss
+    eval_step(params, x, y, masks...)                  -> (loss, error)
+
+Parameter layout is a flat LIST in a fixed order (manifest.json records
+names + shapes) so the Rust side can thread literals without a pytree lib.
+The FC layer runs through the L1 Pallas `dense_relu` kernel so the model
+HLO contains a Pallas-lowered region on the training hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense_relu
+
+# ---------------------------------------------------------------------------
+# Static architecture bounds (the "maximal" network that gets masked).
+# ---------------------------------------------------------------------------
+IMG = 16                 # input is IMG x IMG x 3
+C1MAX, C2MAX, C3MAX = 16, 32, 32
+FLAT = (IMG // 4) * (IMG // 4) * C3MAX   # 4*4*32 = 512 after two 2x2 pools
+HMAX = 256               # maximal FC width
+NCLS = 10
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+PARAM_SPECS = [
+    ("conv1_w", (3, 3, 3, C1MAX)),
+    ("conv1_b", (C1MAX,)),
+    ("conv2_w", (3, 3, C1MAX, C2MAX)),
+    ("conv2_b", (C2MAX,)),
+    ("conv3_w", (3, 3, C2MAX, C3MAX)),
+    ("conv3_b", (C3MAX,)),
+    ("fc1_w", (FLAT, HMAX)),
+    ("fc1_b", (HMAX,)),
+    ("out_w", (HMAX, NCLS)),
+    ("out_b", (NCLS,)),
+]
+N_PARAMS = len(PARAM_SPECS)
+MASK_SPECS = [("mask_c1", (C1MAX,)), ("mask_c2", (C2MAX,)),
+              ("mask_c3", (C3MAX,)), ("mask_fc", (HMAX,))]
+# hp vector layout (f32[4]):
+HP_LR, HP_MOMENTUM, HP_WD, HP_DROPOUT = 0, 1, 2, 3
+
+
+def _conv(x, w, b):
+    """3x3 SAME conv, NHWC."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b[None, None, None, :]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def forward(params, x, masks, dropout_rate=None, seed=None):
+    """Masked forward pass. If dropout_rate is given, applies dropout on fc1.
+
+    x: [B, IMG, IMG, 3] f32 in [0,1].  Returns logits [B, NCLS].
+    """
+    (c1w, c1b, c2w, c2b, c3w, c3b, f1w, f1b, ow, ob) = params
+    m1, m2, m3, mf = masks
+    h = jnp.maximum(_conv(x, c1w, c1b), 0.0) * m1[None, None, None, :]
+    h = _maxpool2(h)
+    h = jnp.maximum(_conv(h, c2w, c2b), 0.0) * m2[None, None, None, :]
+    h = _maxpool2(h)
+    h = jnp.maximum(_conv(h, c3w, c3b), 0.0) * m3[None, None, None, :]
+    h = h.reshape(h.shape[0], -1)                       # [B, FLAT]
+    h = dense_relu(h, f1w, f1b) * mf[None, :]           # L1 Pallas kernel
+    if dropout_rate is not None:
+        key = jax.random.PRNGKey(seed)
+        keep = jax.random.bernoulli(key, 1.0 - dropout_rate, h.shape)
+        h = jnp.where(keep, h / jnp.maximum(1.0 - dropout_rate, 1e-3), 0.0)
+    return h @ ow + ob[None, :]
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(params, mom, x, y, hp, masks, seed):
+    """One SGD-with-momentum step; returns (params', mom', loss).
+
+    params/mom: lists per PARAM_SPECS; x: [TRAIN_BATCH,IMG,IMG,3] f32;
+    y: [TRAIN_BATCH] i32; hp: f32[4]; masks: 4 f32 vectors; seed: i32.
+    """
+    lr, mu, wd, dr = hp[HP_LR], hp[HP_MOMENTUM], hp[HP_WD], hp[HP_DROPOUT]
+
+    def loss_fn(ps):
+        logits = forward(ps, x, masks, dropout_rate=dr, seed=seed)
+        return _xent(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    new_params, new_mom = [], []
+    for p, m, g in zip(params, mom, grads):
+        g = g + wd * p
+        m2 = mu * m + g
+        new_params.append(p - lr * m2)
+        new_mom.append(m2)
+    return new_params, new_mom, loss
+
+
+def eval_step(params, x, y, masks):
+    """Returns (mean xent loss, error rate) on an eval batch (no dropout)."""
+    logits = forward(params, x, masks)
+    loss = _xent(logits, y)
+    err = 1.0 - jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, err
+
+
+def init_params(seed):
+    """He-initialized params + zero momentum buffers from an i32 seed."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, N_PARAMS)
+    params = []
+    for (name, shape), k in zip(PARAM_SPECS, keys):
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+            params.append(std * jax.random.normal(k, shape, jnp.float32))
+    mom = [jnp.zeros(s, jnp.float32) for _, s in PARAM_SPECS]
+    return params, mom
+
+
+# --- flat-signature wrappers for AOT lowering (stable argument order) ------
+
+def train_step_flat(*args):
+    """args = params[10], mom[10], x, y, hp, m1, m2, m3, mf, seed."""
+    params = list(args[0:N_PARAMS])
+    mom = list(args[N_PARAMS:2 * N_PARAMS])
+    x, y, hp, m1, m2, m3, mf, seed = args[2 * N_PARAMS:]
+    new_p, new_m, loss = train_step(params, mom, x, y, hp, (m1, m2, m3, mf), seed)
+    return tuple(new_p) + tuple(new_m) + (loss,)
+
+
+def eval_step_flat(*args):
+    params = list(args[0:N_PARAMS])
+    x, y, m1, m2, m3, mf = args[N_PARAMS:]
+    loss, err = eval_step(params, x, y, (m1, m2, m3, mf))
+    return (loss, err)
+
+
+def init_params_flat(seed):
+    params, mom = init_params(seed)
+    return tuple(params) + tuple(mom)
+
+
+def train_example_args():
+    f32, i32 = jnp.float32, jnp.int32
+    specs = [jax.ShapeDtypeStruct(s, f32) for _, s in PARAM_SPECS] * 2
+    specs += [
+        jax.ShapeDtypeStruct((TRAIN_BATCH, IMG, IMG, 3), f32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH,), i32),
+        jax.ShapeDtypeStruct((4,), f32),
+    ]
+    specs += [jax.ShapeDtypeStruct(s, f32) for _, s in MASK_SPECS]
+    specs += [jax.ShapeDtypeStruct((), i32)]
+    return specs
+
+
+def eval_example_args():
+    f32, i32 = jnp.float32, jnp.int32
+    specs = [jax.ShapeDtypeStruct(s, f32) for _, s in PARAM_SPECS]
+    specs += [
+        jax.ShapeDtypeStruct((EVAL_BATCH, IMG, IMG, 3), f32),
+        jax.ShapeDtypeStruct((EVAL_BATCH,), i32),
+    ]
+    specs += [jax.ShapeDtypeStruct(s, f32) for _, s in MASK_SPECS]
+    return specs
+
+
+def init_example_args():
+    return [jax.ShapeDtypeStruct((), jnp.int32)]

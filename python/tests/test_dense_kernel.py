@@ -1,0 +1,50 @@
+"""Pallas fused dense+relu kernel vs oracle, incl. hypothesis shape sweep."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.dense import dense_relu
+
+
+def run(rng, b, k, n, block_b, block_n, scale=1.0):
+    x = (scale * rng.standard_normal((b, k))).astype(np.float32)
+    w = (scale * rng.standard_normal((k, n))).astype(np.float32)
+    bias = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(dense_relu(x, w, bias, block_b=block_b, block_n=block_n))
+    want = np.asarray(ref.dense_relu_ref(x, w, bias))
+    return got, want
+
+
+class TestDenseRelu:
+    def test_model_shapes(self):
+        """The exact shapes used by model.py's fc1."""
+        rng = np.random.default_rng(0)
+        got, want = run(rng, 64, 512, 256, 64, 128)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_relu_active(self):
+        rng = np.random.default_rng(1)
+        got, _ = run(rng, 64, 128, 128, 64, 128)
+        assert (got == 0.0).any(), "relu should clip some outputs"
+        assert (got > 0.0).any()
+
+    def test_multi_block_grid(self):
+        rng = np.random.default_rng(2)
+        got, want = run(rng, 256, 64, 512, 64, 128)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        bb=st.sampled_from([8, 16, 64]),
+        nb=st.sampled_from([16, 128]),
+        b_mult=st.integers(1, 4),
+        n_mult=st.integers(1, 3),
+        k=st.sampled_from([1, 7, 64, 300]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, bb, nb, b_mult, n_mult, k, seed):
+        rng = np.random.default_rng(seed)
+        got, want = run(rng, bb * b_mult, k, nb * n_mult, bb, nb)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

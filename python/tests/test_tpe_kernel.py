@@ -1,0 +1,119 @@
+"""Pallas tpe_score kernel vs pure-jnp oracle — the core L1 signal.
+
+Includes hypothesis sweeps over shapes/values per the repro spec.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels import tpe_score as tsk
+
+
+def make_mixture(rng, k_live, k_max, low, high):
+    mus = rng.uniform(low, high, size=k_max).astype(np.float32)
+    sigmas = rng.uniform(0.05 * (high - low), (high - low), size=k_max).astype(np.float32)
+    w = np.zeros(k_max, np.float32)
+    w[:k_live] = rng.uniform(0.2, 1.0, size=k_live).astype(np.float32)
+    return mus, sigmas, w
+
+
+def run_both(rng, n_cand, k_max, k_below, k_above, low=-3.0, high=5.0):
+    cand = rng.uniform(low, high, size=n_cand).astype(np.float32)
+    bm, bs, bw = make_mixture(rng, k_below, k_max, low, high)
+    am, asg, aw = make_mixture(rng, k_above, k_max, low, high)
+    bounds = np.array([low, high], np.float32)
+    score, logl, logg = tsk.tpe_score(
+        cand, bm, bs, bw, am, asg, aw, bounds, n_cand=n_cand, n_comp=k_max)
+    rs, rl, rg = ref.tpe_score_ref(cand, bm, bs, bw, am, asg, aw, low, high)
+    return (np.asarray(score), np.asarray(logl), np.asarray(logg),
+            np.asarray(rs), np.asarray(rl), np.asarray(rg))
+
+
+class TestTpeScoreKernel:
+    def test_matches_ref_default_shapes(self):
+        rng = np.random.default_rng(0)
+        s, l, g, rs, rl, rg = run_both(
+            rng, tsk.MAX_CANDIDATES, tsk.MAX_COMPONENTS, 20, 40)
+        np.testing.assert_allclose(l, rl, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(g, rg, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-5)
+
+    def test_single_live_component(self):
+        rng = np.random.default_rng(1)
+        s, l, g, rs, rl, rg = run_both(rng, 64, 16, 1, 1)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-5)
+
+    def test_full_occupancy(self):
+        rng = np.random.default_rng(2)
+        s, l, g, rs, rl, rg = run_both(rng, 128, 32, 32, 32)
+        np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-5)
+
+    def test_padding_exact(self):
+        """Padding components (w=0) must not perturb the result at all."""
+        rng = np.random.default_rng(3)
+        low, high = 0.0, 1.0
+        cand = rng.uniform(low, high, 64).astype(np.float32)
+        bm, bs, bw = make_mixture(rng, 4, 8, low, high)
+        am, asg, aw = make_mixture(rng, 4, 8, low, high)
+        bounds = np.array([low, high], np.float32)
+        s1, _, _ = tsk.tpe_score(cand, bm, bs, bw, am, asg, aw, bounds,
+                                 n_cand=64, n_comp=8)
+        # Change mus/sigmas of dead components arbitrarily.
+        bm2, bs2 = bm.copy(), bs.copy()
+        bm2[4:] = 99.0
+        bs2[4:] = 1e-3
+        s2, _, _ = tsk.tpe_score(cand, bm2, bs2, bw, am, asg, aw, bounds,
+                                 n_cand=64, n_comp=8)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+    def test_density_integrates_to_one(self):
+        """Trapezoid integral of exp(logpdf) over [low, high] ~= 1."""
+        rng = np.random.default_rng(4)
+        low, high = -2.0, 2.0
+        k_max = 16
+        bm, bs, bw = make_mixture(rng, 8, k_max, low, high)
+        grid = np.linspace(low, high, 2001).astype(np.float32)
+        logp = np.asarray(ref.truncnorm_mixture_logpdf(
+            jnp.asarray(grid), jnp.asarray(bm), jnp.asarray(bs),
+            jnp.asarray(bw), low, high))
+        integral = np.trapezoid(np.exp(logp), grid)
+        assert abs(integral - 1.0) < 2e-3, integral
+
+    def test_score_prefers_below_mode(self):
+        """Acquisition must rank points near the 'good' mixture higher."""
+        low, high = 0.0, 10.0
+        k = 8
+        bm = np.full(k, 2.0, np.float32); am = np.full(k, 8.0, np.float32)
+        sg = np.full(k, 0.7, np.float32)
+        w = np.zeros(k, np.float32); w[:4] = 1.0
+        cand = np.array([2.0, 8.0], np.float32)
+        bounds = np.array([low, high], np.float32)
+        s, _, _ = tsk.tpe_score(cand, bm, sg, w, am, sg, w, bounds,
+                                n_cand=2, n_comp=k)
+        s = np.asarray(s)
+        assert s[0] > s[1]
+
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        n_cand=st.sampled_from([8, 32, 64, 128]),
+        k_max=st.sampled_from([4, 16, 64]),
+        frac_below=st.floats(0.1, 1.0),
+        frac_above=st.floats(0.1, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+        low=st.floats(-100.0, 0.0),
+        width=st.floats(0.1, 200.0),
+    )
+    def test_hypothesis_sweep(self, n_cand, k_max, frac_below, frac_above,
+                              seed, low, width):
+        rng = np.random.default_rng(seed)
+        k_b = max(1, int(frac_below * k_max))
+        k_a = max(1, int(frac_above * k_max))
+        s, l, g, rs, rl, rg = run_both(
+            rng, n_cand, k_max, k_b, k_a, low=low, high=low + width)
+        np.testing.assert_allclose(s, rs, rtol=2e-4, atol=2e-4)
+        assert np.all(np.isfinite(s))

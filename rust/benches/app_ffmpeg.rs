@@ -1,0 +1,57 @@
+//! §6 FFmpeg — minimize reconstruction error; the paper's claim is that
+//! the tuned configuration lands "on par with the second best" of the
+//! developer presets.
+//!
+//! Knobs: FFMPEG_REPEATS (default 5), FFMPEG_TRIALS (default 150).
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::prelude::*;
+use optuna_rs::workloads::ffmpeg_sim::{presets, suggest_config};
+
+fn main() {
+    let repeats = env_usize("FFMPEG_REPEATS", 5);
+    let n_trials = env_usize("FFMPEG_TRIALS", 150);
+
+    print_header(
+        "§6 FFmpeg: developer presets (distortion at fixed bitrate)",
+        &["preset", "distortion", "encode seconds"],
+    );
+    let ps = presets();
+    for (name, cfg) in &ps {
+        println!("{name} | {:.4} | {:.0}", cfg.distortion(), cfg.encode_seconds());
+    }
+    let best_preset = ps.last().unwrap().1.distortion();
+    let second_best = ps[ps.len() - 2].1.distortion();
+
+    print_header(
+        "§6 FFmpeg: tuned vs presets",
+        &["sampler", "avg tuned distortion", "vs 2nd-best preset", "vs best preset"],
+    );
+    for kind in ["tpe", "random"] {
+        let mut acc = 0.0;
+        for r in 0..repeats {
+            let study = Study::builder()
+                .name(&format!("ffmpeg-{kind}-{r}"))
+                .sampler(common::make_sampler(kind, r as u64 * 23 + 11))
+                .build()
+                .unwrap();
+            study
+                .optimize(n_trials, |t| {
+                    let cfg = suggest_config(t)?;
+                    Ok(cfg.distortion())
+                })
+                .unwrap();
+            acc += study.best_value().unwrap().unwrap();
+        }
+        let tuned = acc / repeats as f64;
+        println!(
+            "{kind} | {:.4} | {:+.1}% | {:+.1}%",
+            tuned,
+            100.0 * (tuned - second_best) / second_best,
+            100.0 * (tuned - best_preset) / best_preset
+        );
+    }
+    println!("\npaper: tuned configuration on par with the 2nd-best developer preset");
+}

@@ -1,0 +1,166 @@
+//! §6 RocksDB — pruning under expensive, widely-varying trial cost.
+//!
+//! Paper: default config 372 s; tuned ≈ 30 s; within 4 hours the pruned
+//! search explores 937 parameter sets, the timeout variant 39, and the
+//! no-timeout variant only 2.
+//!
+//! Arms reproduced here (virtual time):
+//!   * TPE + ASHA pruning (progress reported per chunk)
+//!   * TPE + per-trial timeout (600 s), no pruning
+//!   * TPE, no timeout, no pruning
+//!
+//! Knobs: ROCKSDB_REPEATS (default 5).
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::core::OptunaError;
+use optuna_rs::prelude::*;
+use optuna_rs::workloads::distsim::{simulate, StepWorkload, TrialRun};
+use optuna_rs::workloads::rocksdb_sim::{suggest_config, RocksDbConfig, N_CHUNKS};
+use std::sync::Arc;
+
+const BUDGET: f64 = 4.0 * 3600.0;
+
+/// RocksDB evaluation in N_CHUNKS progressive chunks; the intermediate
+/// value is the *projected total* so pruners compare like with like, and
+/// `timeout` aborts a chunk-run past the limit (the paper's timeout arm).
+struct RocksWorkload {
+    timeout: Option<f64>,
+}
+
+struct RocksRun {
+    total: f64,
+    chunk: f64,
+    elapsed: f64,
+    timeout: Option<f64>,
+    timed_out: bool,
+}
+
+impl StepWorkload for RocksWorkload {
+    fn start(&self, trial: &mut optuna_rs::trial::Trial<'_>) -> Result<Box<dyn TrialRun>, OptunaError> {
+        let cfg: RocksDbConfig = suggest_config(trial)?;
+        Ok(Box::new(RocksRun {
+            total: cfg.total_seconds(),
+            chunk: cfg.chunk_seconds(),
+            elapsed: 0.0,
+            timeout: self.timeout,
+            timed_out: false,
+        }))
+    }
+}
+
+impl TrialRun for RocksRun {
+    fn max_steps(&self) -> u64 {
+        N_CHUNKS
+    }
+    fn step(&mut self, _step: u64) -> (f64, f64) {
+        self.elapsed += self.chunk;
+        if let Some(limit) = self.timeout {
+            if self.elapsed >= limit {
+                self.timed_out = true;
+                // projected total is at least the limit; report a large value
+                return (self.total.max(limit * 2.0), self.chunk);
+            }
+        }
+        (self.total, self.chunk)
+    }
+    fn final_value(&mut self) -> f64 {
+        if self.timed_out {
+            self.total.max(self.timeout.unwrap() * 2.0)
+        } else {
+            self.total
+        }
+    }
+}
+
+/// Timeout variant: cap steps at the timeout by shrinking max_steps.
+struct TimeoutWorkload;
+
+impl StepWorkload for TimeoutWorkload {
+    fn start(&self, trial: &mut optuna_rs::trial::Trial<'_>) -> Result<Box<dyn TrialRun>, OptunaError> {
+        let cfg: RocksDbConfig = suggest_config(trial)?;
+        let chunk = cfg.chunk_seconds();
+        let total = cfg.total_seconds();
+        // run whole chunks until the 600 s timeout trips
+        let steps = ((600.0 / chunk).ceil() as u64).clamp(1, N_CHUNKS);
+        Ok(Box::new(TimeoutRun { total, chunk, steps }))
+    }
+}
+
+struct TimeoutRun {
+    total: f64,
+    chunk: f64,
+    steps: u64,
+}
+
+impl TrialRun for TimeoutRun {
+    fn max_steps(&self) -> u64 {
+        self.steps
+    }
+    fn step(&mut self, _step: u64) -> (f64, f64) {
+        (self.total, self.chunk)
+    }
+    fn final_value(&mut self) -> f64 {
+        if self.steps < N_CHUNKS {
+            self.total.max(1200.0) // timed out: recorded as a failure-level value
+        } else {
+            self.total
+        }
+    }
+}
+
+fn main() {
+    let repeats = env_usize("ROCKSDB_REPEATS", 5);
+    let default_secs = RocksDbConfig::default_config().total_seconds();
+    println!("rocksdb: default config = {default_secs:.0}s (paper: 372s); virtual 4h per study");
+    let t0 = std::time::Instant::now();
+
+    print_header(
+        "§6 RocksDB: configurations explored in 4h and best runtime found",
+        &["arm", "trials/study", "pruned", "best seconds", "speedup vs default"],
+    );
+    let mut explored = Vec::new();
+    for (name, pruner, workload) in [
+        (
+            "tpe + asha pruning",
+            Some(Arc::new(AshaPruner::with_params(1, 4, 0)) as Arc<dyn Pruner>),
+            Box::new(RocksWorkload { timeout: None }) as Box<dyn StepWorkload>,
+        ),
+        ("tpe + 600s timeout", None, Box::new(TimeoutWorkload)),
+        ("tpe, no timeout", None, Box::new(RocksWorkload { timeout: None })),
+    ] {
+        let mut trials = 0.0;
+        let mut pruned = 0.0;
+        let mut best = 0.0;
+        for r in 0..repeats {
+            let mut b = Study::builder()
+                .name(&format!("rdb-{name}-{r}"))
+                .sampler(Arc::new(TpeSampler::new(r as u64 * 53 + 1)));
+            if let Some(p) = &pruner {
+                b = b.pruner(Arc::clone(p));
+            }
+            let study = b.build().unwrap();
+            let res = simulate(&study, workload.as_ref(), 1, BUDGET).unwrap();
+            trials += (res.n_complete + res.n_pruned) as f64;
+            pruned += res.n_pruned as f64;
+            best += res.best;
+        }
+        let n = repeats as f64;
+        println!(
+            "{name} | {:.1} | {:.1} | {:.1} | {:.1}x",
+            trials / n,
+            pruned / n,
+            best / n,
+            default_secs / (best / n)
+        );
+        explored.push(trials / n);
+    }
+    println!("\npaper: 937 (pruning) vs 39 (timeout) vs 2 (no timeout) configurations; 372s -> 30s");
+    println!(
+        "shape check: pruning/timeout explored ratio = {:.1}x, timeout/none = {:.1}x",
+        explored[0] / explored[1],
+        explored[1] / explored[2]
+    );
+    println!("app_rocksdb wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+}

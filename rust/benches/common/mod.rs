@@ -1,0 +1,63 @@
+#![allow(dead_code)]
+//! Shared helpers for the bench harnesses.
+
+use optuna_rs::prelude::*;
+use optuna_rs::sampler::Sampler;
+use optuna_rs::workloads::evalset::TestFunction;
+use std::sync::Arc;
+
+/// Read an env knob with a default (lets CI shrink the protocol:
+/// e.g. `FIG09_REPEATS=5 cargo bench --bench fig09_evalset`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The sampler line-up of Fig 9/10. Fresh instances per study (samplers
+/// carry RNG/evolution state).
+pub fn make_sampler(kind: &str, seed: u64) -> Arc<dyn Sampler> {
+    match kind {
+        "random" => Arc::new(RandomSampler::new(seed)),
+        "tpe" => Arc::new(TpeSampler::new(seed)),
+        "smac-rf" => Arc::new(RfSampler::new(seed)),
+        "gp" => Arc::new(GpSampler::new(seed)),
+        "tpe+cmaes" => Arc::new(TpeCmaEsSampler::new(seed)),
+        other => panic!("unknown sampler {other}"),
+    }
+}
+
+/// Run one study of `n_trials` over a test function; returns best value.
+pub fn run_function_study(
+    f: &TestFunction,
+    sampler: Arc<dyn Sampler>,
+    n_trials: usize,
+    tag: &str,
+) -> f64 {
+    let study = Study::builder()
+        .name(&format!("{}-{}", f.name, tag))
+        .sampler(sampler)
+        .build()
+        .expect("study");
+    let bounds = f.bounds.clone();
+    let func = f.f;
+    study
+        .optimize(n_trials, move |t| {
+            let x: Vec<f64> = bounds
+                .iter()
+                .enumerate()
+                .map(|(i, (lo, hi))| t.suggest_float(&format!("x{i}"), *lo, *hi))
+                .collect::<Result<_, _>>()?;
+            Ok(func(&x))
+        })
+        .expect("optimize");
+    study.best_value().expect("best").expect("some trials complete")
+}
+
+/// Markdown-ish row printer so bench output reads as the paper's tables.
+pub fn print_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join(" | "));
+    println!("{}", cols.iter().map(|_| "---").collect::<Vec<_>>().join(" | "));
+}

@@ -1,0 +1,84 @@
+//! Fig 9 — TPE+CMA-ES vs rivals on the 56-function suite.
+//!
+//! Protocol (§5.1): best value attained in 80 trials, repeated studies
+//! per (function, sampler), paired Mann-Whitney U test at α = 0.0005.
+//! Paper result: TPE+CMA-ES loses to random in 1/56, to Hyperopt-TPE in
+//! 1/56, to SMAC3 in 3/56; GPyOpt wins 34/56 on value (but is ~20×
+//! slower — Fig 10).
+//!
+//! Knobs: FIG09_REPEATS (default = paper protocol = 30),
+//!        FIG09_TRIALS  (default 80).
+
+mod common;
+
+use common::{env_usize, make_sampler, print_header, run_function_study};
+use optuna_rs::util::stats::{compare_paired, Comparison};
+use optuna_rs::workloads::evalset::all_functions;
+
+const ALPHA: f64 = 0.0005;
+
+fn main() {
+    let repeats = env_usize("FIG09_REPEATS", 30);
+    let n_trials = env_usize("FIG09_TRIALS", 80);
+    let rivals = ["random", "tpe", "smac-rf", "gp"];
+    let fns = all_functions();
+    println!(
+        "fig09: {} functions x {} samplers x {repeats} repeats x {n_trials} trials",
+        fns.len(),
+        rivals.len() + 1
+    );
+
+    // best-values[sampler][function][repeat]
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<Vec<Vec<f64>>> = Vec::new();
+    let all_samplers: Vec<&str> = std::iter::once("tpe+cmaes").chain(rivals).collect();
+    for (si, kind) in all_samplers.iter().enumerate() {
+        let mut per_fn = Vec::new();
+        for (fi, f) in fns.iter().enumerate() {
+            let bests: Vec<f64> = (0..repeats)
+                .map(|r| {
+                    let seed = (si * 10_000 + fi * 100 + r) as u64;
+                    run_function_study(f, make_sampler(kind, seed), n_trials, &format!("{si}-{r}"))
+                })
+                .collect();
+            per_fn.push(bests);
+        }
+        results.push(per_fn);
+        eprintln!("  [{:>9}] done in {:.1}s total", kind, t0.elapsed().as_secs_f64());
+    }
+
+    print_header(
+        "Fig 9: paired Mann-Whitney U (alpha = 0.0005), TPE+CMA-ES vs rival",
+        &["rival", "tpe+cmaes wins", "ties", "tpe+cmaes losses"],
+    );
+    for (ri, rival) in rivals.iter().enumerate() {
+        let mut wins = 0;
+        let mut ties = 0;
+        let mut losses = 0;
+        for fi in 0..fns.len() {
+            match compare_paired(&results[0][fi], &results[ri + 1][fi], ALPHA) {
+                Comparison::Win => wins += 1,
+                Comparison::Tie => ties += 1,
+                Comparison::Loss => losses += 1,
+            }
+        }
+        println!("{rival} | {wins} | {ties} | {losses}");
+    }
+    println!("\npaper: losses to random 1/56, to tpe(hyperopt) 1/56, to smac3 3/56; gp(gpyopt) wins ~34/56");
+
+    // per-function means for the appendix-style dump
+    print_header(
+        "per-function mean best value",
+        &["function", "tpe+cmaes", "random", "tpe", "smac-rf", "gp"],
+    );
+    for (fi, f) in fns.iter().enumerate() {
+        let means: Vec<String> = (0..all_samplers.len())
+            .map(|si| {
+                let xs = &results[si][fi];
+                format!("{:.4}", xs.iter().sum::<f64>() / xs.len() as f64)
+            })
+            .collect();
+        println!("{} | {}", f.name, means.join(" | "));
+    }
+    println!("\nfig09 total wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+}

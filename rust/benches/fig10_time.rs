@@ -1,0 +1,57 @@
+//! Fig 10 — computational time per study for each framework-analog.
+//!
+//! Paper result: TPE+CMA-ES / Hyperopt / SMAC3 / random finish a study in
+//! seconds even at >10 design variables; GPyOpt takes ~20× longer. The
+//! absolute numbers differ on this testbed; the *ratio* is the claim.
+//!
+//! Knobs: FIG10_REPEATS (default 3), FIG10_TRIALS (default 80).
+
+mod common;
+
+use common::{env_usize, make_sampler, print_header, run_function_study};
+use optuna_rs::workloads::evalset::all_functions;
+
+fn main() {
+    let repeats = env_usize("FIG10_REPEATS", 3);
+    let n_trials = env_usize("FIG10_TRIALS", 80);
+    let samplers = ["tpe+cmaes", "random", "tpe", "smac-rf", "gp"];
+    let fns = all_functions();
+
+    // study wallclock per sampler, averaged over functions & repeats
+    let mut avg_secs = Vec::new();
+    let mut max_secs = Vec::new();
+    for (si, kind) in samplers.iter().enumerate() {
+        let mut total = 0.0;
+        let mut worst: (f64, &str) = (0.0, "");
+        for (fi, f) in fns.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            for r in 0..repeats {
+                let seed = (si * 10_000 + fi * 100 + r) as u64;
+                run_function_study(f, make_sampler(kind, seed), n_trials, &format!("t{si}-{r}"));
+            }
+            let per_study = t0.elapsed().as_secs_f64() / repeats as f64;
+            total += per_study;
+            if per_study > worst.0 {
+                worst = (per_study, f.name);
+            }
+        }
+        avg_secs.push(total / fns.len() as f64);
+        max_secs.push(worst);
+        eprintln!("  [{kind:>9}] avg {:.3}s/study", total / fns.len() as f64);
+    }
+
+    print_header(
+        "Fig 10: seconds per study (80 trials)",
+        &["sampler", "avg s/study", "worst s/study", "worst case fn", "x vs tpe+cmaes"],
+    );
+    for (si, kind) in samplers.iter().enumerate() {
+        println!(
+            "{kind} | {:.3} | {:.3} | {} | {:.1}x",
+            avg_secs[si],
+            max_secs[si].0,
+            max_secs[si].1,
+            avg_secs[si] / avg_secs[0]
+        );
+    }
+    println!("\npaper shape: gp ~20x slower than the others; the rest finish in seconds");
+}

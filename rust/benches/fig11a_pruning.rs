@@ -1,0 +1,118 @@
+//! Fig 11a — effect of pruning on TPE and random search (SVHN surrogate,
+//! virtual 4-hour studies).
+//!
+//! Paper numbers to reproduce in shape:
+//!   * trials/study: TPE 35.8 -> 1278.6 with pruning (1271.5 pruned);
+//!     random 36.0 -> 1119.3 (1111.3 pruned);
+//!   * pruning accelerates both samplers; ASHA beats median pruning.
+//!
+//! Knobs: FIG11A_REPEATS (default 10; paper = 40).
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::prelude::*;
+use optuna_rs::workloads::distsim::{best_at, simulate, SurrogateWorkload};
+use std::sync::Arc;
+
+const BUDGET: f64 = 4.0 * 3600.0;
+
+fn arm(
+    sampler_kind: &str,
+    pruner_kind: &str,
+    repeats: usize,
+) -> (f64, f64, f64, Vec<f64>) {
+    // returns (avg trials, avg pruned, avg best, err-at-time-grid)
+    let grid: Vec<f64> = (1..=16).map(|i| BUDGET * i as f64 / 16.0).collect();
+    let mut trials = 0.0;
+    let mut pruned = 0.0;
+    let mut best = 0.0;
+    let mut curve = vec![0.0; grid.len()];
+    for r in 0..repeats {
+        let seed = r as u64 * 977 + 13;
+        let sampler: Arc<dyn Sampler> = match sampler_kind {
+            "tpe" => Arc::new(TpeSampler::new(seed)),
+            _ => Arc::new(RandomSampler::new(seed)),
+        };
+        let pruner: Arc<dyn Pruner> = match pruner_kind {
+            "asha" => Arc::new(AshaPruner::new()),
+            "median" => Arc::new(MedianPruner::new()),
+            _ => Arc::new(NopPruner),
+        };
+        let study = Study::builder()
+            .name(&format!("f11a-{sampler_kind}-{pruner_kind}-{r}"))
+            .sampler(sampler)
+            .pruner(pruner)
+            .build()
+            .unwrap();
+        let res = simulate(&study, &SurrogateWorkload, 1, BUDGET).unwrap();
+        trials += (res.n_complete + res.n_pruned) as f64;
+        pruned += res.n_pruned as f64;
+        best += res.best;
+        for (i, t) in grid.iter().enumerate() {
+            curve[i] += best_at(&res.trace, *t).unwrap_or(0.9);
+        }
+    }
+    let n = repeats as f64;
+    (
+        trials / n,
+        pruned / n,
+        best / n,
+        curve.into_iter().map(|v| v / n).collect(),
+    )
+}
+
+fn main() {
+    let repeats = env_usize("FIG11A_REPEATS", 10);
+    println!("fig11a: virtual 4h studies, {repeats} repeats per arm (paper: 40)");
+    let arms = [
+        ("tpe", "none"),
+        ("tpe", "asha"),
+        ("tpe", "median"),
+        ("random", "none"),
+        ("random", "asha"),
+    ];
+    let t0 = std::time::Instant::now();
+    let mut rows = Vec::new();
+    for (s, p) in arms {
+        let (tr, prn, best, curve) = arm(s, p, repeats);
+        eprintln!("  {s}+{p}: {:.1} trials, best {:.4}", tr, best);
+        rows.push((s, p, tr, prn, best, curve));
+    }
+
+    print_header(
+        "Fig 11a: trials per 4h study and final error",
+        &["sampler", "pruner", "trials/study", "pruned/study", "avg final best err"],
+    );
+    for (s, p, tr, prn, best, _) in &rows {
+        println!("{s} | {p} | {tr:.1} | {prn:.1} | {best:.4}");
+    }
+    println!("\npaper: tpe 35.8 -> 1278.6 trials (1271.5 pruned); random 36.0 -> 1119.3 (1111.3 pruned)");
+
+    print_header(
+        "Fig 11a curve: avg best test error vs wallclock (15-min grid)",
+        &["arm", "t=1h", "t=2h", "t=3h", "t=4h"],
+    );
+    for (s, p, _, _, _, curve) in &rows {
+        println!(
+            "{s}+{p} | {:.4} | {:.4} | {:.4} | {:.4}",
+            curve[3], curve[7], curve[11], curve[15]
+        );
+    }
+    // the paper's two claims, checked mechanically:
+    let by_name = |s: &str, p: &str| rows.iter().find(|r| r.0 == s && r.1 == p).unwrap();
+    let tpe_nop = by_name("tpe", "none");
+    let tpe_asha = by_name("tpe", "asha");
+    let tpe_median = by_name("tpe", "median");
+    println!(
+        "\nshape checks: pruning trial-count multiplier = {:.1}x (paper ~35x); \
+         asha err {:.4} vs median err {:.4} (paper: asha better); \
+         asha err {:.4} vs no-pruning err {:.4} (paper: pruning better)",
+        tpe_asha.2 / tpe_nop.2,
+        tpe_asha.4,
+        tpe_median.4,
+        tpe_asha.4,
+        tpe_nop.4,
+    );
+    println!("fig11a total wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+}

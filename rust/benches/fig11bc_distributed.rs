@@ -1,0 +1,96 @@
+//! Fig 11b/c — distributed optimization scalability (no pruning).
+//!
+//! 11b: best error vs wallclock for 1/2/4/8 workers — convergence speeds
+//! up with workers. 11c: best error vs *number of trials* — curves
+//! overlap across worker counts (parallelization efficiency ~constant),
+//! which is the paper's linear-scaling argument.
+//!
+//! Knobs: FIG11BC_REPEATS (default 10).
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::prelude::*;
+use optuna_rs::workloads::distsim::{best_after_trials, best_at, simulate, SurrogateWorkload};
+use std::sync::Arc;
+
+const BUDGET: f64 = 4.0 * 3600.0;
+
+fn main() {
+    let repeats = env_usize("FIG11BC_REPEATS", 10);
+    let worker_counts = [1usize, 2, 4, 8];
+    println!("fig11b/c: TPE, no pruning, virtual 4h, {repeats} repeats");
+    let t0 = std::time::Instant::now();
+
+    let time_grid: Vec<f64> = vec![0.5, 1.0, 2.0, 3.0, 4.0]
+        .into_iter()
+        .map(|h| h * 3600.0)
+        .collect();
+    let trial_grid: Vec<u64> = vec![8, 16, 32, 64, 128];
+
+    let mut by_time: Vec<Vec<f64>> = Vec::new();
+    let mut by_trials: Vec<Vec<f64>> = Vec::new();
+    let mut totals: Vec<f64> = Vec::new();
+    for &w in &worker_counts {
+        let mut t_acc = vec![0.0; time_grid.len()];
+        let mut n_acc = vec![0.0; trial_grid.len()];
+        let mut total = 0.0;
+        for r in 0..repeats {
+            let study = Study::builder()
+                .name(&format!("f11bc-{w}-{r}"))
+                .sampler(Arc::new(TpeSampler::new(r as u64 * 31 + 7)))
+                .build()
+                .unwrap();
+            let res = simulate(&study, &SurrogateWorkload, w, BUDGET).unwrap();
+            total += res.n_complete as f64;
+            for (i, t) in time_grid.iter().enumerate() {
+                t_acc[i] += best_at(&res.trace, *t).unwrap_or(0.9);
+            }
+            for (i, n) in trial_grid.iter().enumerate() {
+                n_acc[i] += best_after_trials(&res.trace, *n).unwrap_or(0.9);
+            }
+        }
+        let nf = repeats as f64;
+        by_time.push(t_acc.into_iter().map(|v| v / nf).collect());
+        by_trials.push(n_acc.into_iter().map(|v| v / nf).collect());
+        totals.push(total / nf);
+        eprintln!("  {w} workers done ({:.1}s)", t0.elapsed().as_secs_f64());
+    }
+
+    print_header(
+        "Fig 11b: avg best error vs wallclock",
+        &["workers", "t=0.5h", "t=1h", "t=2h", "t=3h", "t=4h", "trials/study"],
+    );
+    for (i, &w) in worker_counts.iter().enumerate() {
+        println!(
+            "{w} | {} | {:.1}",
+            by_time[i]
+                .iter()
+                .map(|v| format!("{v:.4}"))
+                .collect::<Vec<_>>()
+                .join(" | "),
+            totals[i]
+        );
+    }
+    println!("paper shape: more workers -> faster convergence at equal wallclock");
+
+    print_header(
+        "Fig 11c: avg best error vs #finished trials",
+        &["workers", "n=8", "n=16", "n=32", "n=64", "n=128"],
+    );
+    for (i, &w) in worker_counts.iter().enumerate() {
+        println!(
+            "{w} | {}",
+            by_trials[i]
+                .iter()
+                .map(|v| format!("{v:.4}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        );
+    }
+    println!(
+        "paper shape: error-vs-trials nearly independent of worker count \
+         (parallelization efficiency constant => linear scaling)"
+    );
+    println!("\nfig11bc total wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+}

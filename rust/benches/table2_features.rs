@@ -1,0 +1,33 @@
+//! Table 2 — framework feature matrix, with the optuna-rs column verified
+//! against the code (each checkmark is backed by a symbol that exists and
+//! a bench/test that exercises it).
+
+fn main() {
+    println!("== Table 2: comparison of hyperparameter optimization frameworks ==");
+    println!("framework | api style | pruning | lightweight | distributed | dashboard | oss");
+    println!("--- | --- | --- | --- | --- | --- | ---");
+    for row in [
+        ("SMAC", "define-and-run", "x", "ok", "x", "x", "ok"),
+        ("GPyOpt", "define-and-run", "x", "ok", "x", "x", "ok"),
+        ("Spearmint", "define-and-run", "x", "ok", "ok", "x", "ok"),
+        ("Hyperopt", "define-and-run", "x", "ok", "ok", "x", "ok"),
+        ("Autotune", "define-and-run", "ok", "x", "ok", "ok", "x"),
+        ("Vizier", "define-and-run", "ok", "x", "ok", "ok", "x"),
+        ("Katib", "define-and-run", "ok", "x", "ok", "ok", "ok"),
+        ("Tune", "define-and-run", "ok", "x", "ok", "ok", "ok"),
+        ("optuna-rs (this work)", "define-by-run", "ok", "ok", "ok", "ok", "ok"),
+    ] {
+        println!(
+            "{} | {} | {} | {} | {} | {} | {}",
+            row.0, row.1, row.2, row.3, row.4, row.5, row.6
+        );
+    }
+    println!();
+    println!("optuna-rs checkmarks are backed by:");
+    println!("  define-by-run : trial::TrialApi + closures (examples/quickstart.rs)");
+    println!("  pruning       : pruner::AshaPruner et al. (benches/fig11a_pruning.rs)");
+    println!("  lightweight   : storage::InMemoryStorage zero-setup default");
+    println!("  distributed   : storage::JournalStorage + CLI workers (examples/distributed.rs)");
+    println!("  dashboard     : dashboard::render_html (`optuna dashboard`)");
+    println!("  oss           : MIT, this repository");
+}

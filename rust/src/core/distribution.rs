@@ -1,0 +1,328 @@
+//! Parameter distributions of the suggest API.
+//!
+//! A distribution describes the domain a single `suggest_*` call draws
+//! from. Samplers operate on an *internal representation*: every
+//! distribution maps its values onto `f64` (log-domain for log-scaled
+//! ones, category index for categoricals), which is what storage records
+//! and what TPE/CMA-ES/GP consume.
+
+use crate::core::types::{OptunaError, ParamValue};
+use crate::util::json::Json;
+
+/// Domain of one hyperparameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Distribution {
+    /// Continuous on [low, high]; `log` ⇒ sampled in log-space;
+    /// `step` ⇒ discretized to low + k·step.
+    Float {
+        low: f64,
+        high: f64,
+        log: bool,
+        step: Option<f64>,
+    },
+    /// Integer on [low, high] inclusive; `log` ⇒ log-spaced; step ≥ 1.
+    Int {
+        low: i64,
+        high: i64,
+        log: bool,
+        step: i64,
+    },
+    /// Unordered categorical over string choices.
+    Categorical { choices: Vec<String> },
+}
+
+impl Distribution {
+    pub fn float(low: f64, high: f64) -> Self {
+        Distribution::Float { low, high, log: false, step: None }
+    }
+
+    pub fn log_float(low: f64, high: f64) -> Self {
+        Distribution::Float { low, high, log: true, step: None }
+    }
+
+    pub fn int(low: i64, high: i64) -> Self {
+        Distribution::Int { low, high, log: false, step: 1 }
+    }
+
+    pub fn categorical<S: Into<String>>(choices: Vec<S>) -> Self {
+        Distribution::Categorical {
+            choices: choices.into_iter().map(Into::into).collect(),
+        }
+    }
+
+    /// Bounds of the internal representation, as a closed interval.
+    /// Categorical internal values are category indices [0, n−1].
+    pub fn internal_range(&self) -> (f64, f64) {
+        match self {
+            Distribution::Float { low, high, log, .. } => {
+                if *log {
+                    (low.ln(), high.ln())
+                } else {
+                    (*low, *high)
+                }
+            }
+            Distribution::Int { low, high, log, .. } => {
+                if *log {
+                    ((*low as f64).ln(), (*high as f64).ln())
+                } else {
+                    (*low as f64, *high as f64)
+                }
+            }
+            Distribution::Categorical { choices } => (0.0, (choices.len() - 1) as f64),
+        }
+    }
+
+    /// True when the domain holds a single value (no search needed).
+    pub fn is_single(&self) -> bool {
+        match self {
+            Distribution::Float { low, high, step, .. } => match step {
+                Some(s) => low + s > *high,
+                None => low >= high,
+            },
+            Distribution::Int { low, high, step, .. } => low + step > *high,
+            Distribution::Categorical { choices } => choices.len() <= 1,
+        }
+    }
+
+    /// Map an internal `f64` (possibly out of range — samplers clip here)
+    /// to the external value.
+    pub fn external(&self, internal: f64) -> ParamValue {
+        match self {
+            Distribution::Float { low, high, log, step } => {
+                let mut v = if *log { internal.exp() } else { internal };
+                if let Some(s) = step {
+                    let k = ((v - low) / s).round();
+                    v = low + k * s;
+                }
+                ParamValue::Float(v.clamp(*low, *high))
+            }
+            Distribution::Int { low, high, log, step } => {
+                let raw = if *log { internal.exp() } else { internal };
+                let mut v = raw.round() as i64;
+                let k = ((v - low) as f64 / *step as f64).round() as i64;
+                v = low + k * step;
+                ParamValue::Int(v.clamp(*low, *high))
+            }
+            Distribution::Categorical { choices } => {
+                let idx = (internal.round() as i64).clamp(0, choices.len() as i64 - 1);
+                ParamValue::Cat(choices[idx as usize].clone())
+            }
+        }
+    }
+
+    /// Map an external value to the internal `f64`.
+    pub fn internal(&self, value: &ParamValue) -> Result<f64, OptunaError> {
+        match (self, value) {
+            (Distribution::Float { log, .. }, ParamValue::Float(v)) => {
+                Ok(if *log { v.ln() } else { *v })
+            }
+            (Distribution::Int { log, .. }, ParamValue::Int(v)) => {
+                Ok(if *log { (*v as f64).ln() } else { *v as f64 })
+            }
+            (Distribution::Categorical { choices }, ParamValue::Cat(s)) => choices
+                .iter()
+                .position(|c| c == s)
+                .map(|i| i as f64)
+                .ok_or_else(|| OptunaError::InvalidParam(format!("choice '{s}' not in {choices:?}"))),
+            _ => Err(OptunaError::InvalidParam(format!(
+                "value {value:?} incompatible with distribution {self:?}"
+            ))),
+        }
+    }
+
+    /// Whether an external value lies in the domain.
+    pub fn contains(&self, value: &ParamValue) -> bool {
+        match (self, value) {
+            (Distribution::Float { low, high, .. }, ParamValue::Float(v)) => {
+                *v >= *low && *v <= *high
+            }
+            (Distribution::Int { low, high, .. }, ParamValue::Int(v)) => {
+                *v >= *low && *v <= *high
+            }
+            (Distribution::Categorical { choices }, ParamValue::Cat(s)) => {
+                choices.iter().any(|c| c == s)
+            }
+            _ => false,
+        }
+    }
+
+    /// Number of categories (categorical only).
+    pub fn n_categories(&self) -> Option<usize> {
+        match self {
+            Distribution::Categorical { choices } => Some(choices.len()),
+            _ => None,
+        }
+    }
+
+    // ----- JSON (journal storage / export) --------------------------------
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Distribution::Float { low, high, log, step } => Json::obj(vec![
+                ("kind", Json::Str("float".into())),
+                ("low", Json::Num(*low)),
+                ("high", Json::Num(*high)),
+                ("log", Json::Bool(*log)),
+                (
+                    "step",
+                    step.map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ]),
+            Distribution::Int { low, high, log, step } => Json::obj(vec![
+                ("kind", Json::Str("int".into())),
+                ("low", Json::Num(*low as f64)),
+                ("high", Json::Num(*high as f64)),
+                ("log", Json::Bool(*log)),
+                ("step", Json::Num(*step as f64)),
+            ]),
+            Distribution::Categorical { choices } => Json::obj(vec![
+                ("kind", Json::Str("categorical".into())),
+                (
+                    "choices",
+                    Json::Arr(choices.iter().map(|c| Json::Str(c.clone())).collect()),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, OptunaError> {
+        let kind = j
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| OptunaError::Storage("distribution missing kind".into()))?;
+        let err = |m: &str| OptunaError::Storage(format!("bad distribution json: {m}"));
+        match kind {
+            "float" => Ok(Distribution::Float {
+                low: j.get("low").and_then(|v| v.as_f64()).ok_or_else(|| err("low"))?,
+                high: j.get("high").and_then(|v| v.as_f64()).ok_or_else(|| err("high"))?,
+                log: j.get("log").and_then(|v| v.as_bool()).unwrap_or(false),
+                step: j.get("step").and_then(|v| v.as_f64()),
+            }),
+            "int" => Ok(Distribution::Int {
+                low: j.get("low").and_then(|v| v.as_i64()).ok_or_else(|| err("low"))?,
+                high: j.get("high").and_then(|v| v.as_i64()).ok_or_else(|| err("high"))?,
+                log: j.get("log").and_then(|v| v.as_bool()).unwrap_or(false),
+                step: j.get("step").and_then(|v| v.as_i64()).unwrap_or(1),
+            }),
+            "categorical" => {
+                let choices = j
+                    .get("choices")
+                    .and_then(|c| c.as_arr())
+                    .ok_or_else(|| err("choices"))?
+                    .iter()
+                    .map(|c| c.as_str().map(String::from).ok_or_else(|| err("choice")))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Distribution::Categorical { choices })
+            }
+            other => Err(err(&format!("kind {other}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_internal_external_roundtrip() {
+        let d = Distribution::float(-1.0, 3.0);
+        let v = d.external(1.25);
+        assert_eq!(v, ParamValue::Float(1.25));
+        assert_eq!(d.internal(&v).unwrap(), 1.25);
+        // clipping
+        assert_eq!(d.external(10.0), ParamValue::Float(3.0));
+        assert_eq!(d.external(-10.0), ParamValue::Float(-1.0));
+    }
+
+    #[test]
+    fn log_float_maps_through_log_space() {
+        let d = Distribution::log_float(1e-4, 1e-1);
+        let (lo, hi) = d.internal_range();
+        assert!((lo - (1e-4f64).ln()).abs() < 1e-12);
+        assert!((hi - (1e-1f64).ln()).abs() < 1e-12);
+        let v = d.external((1e-2f64).ln());
+        match v {
+            ParamValue::Float(f) => assert!((f - 1e-2).abs() < 1e-12),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn stepped_float_snaps() {
+        let d = Distribution::Float { low: 0.0, high: 1.0, log: false, step: Some(0.25) };
+        assert_eq!(d.external(0.3), ParamValue::Float(0.25));
+        assert_eq!(d.external(0.4), ParamValue::Float(0.5));
+    }
+
+    #[test]
+    fn int_rounds_and_clips() {
+        let d = Distribution::int(1, 10);
+        assert_eq!(d.external(3.4), ParamValue::Int(3));
+        assert_eq!(d.external(3.6), ParamValue::Int(4));
+        assert_eq!(d.external(99.0), ParamValue::Int(10));
+        assert_eq!(d.internal(&ParamValue::Int(7)).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn int_step_snaps() {
+        let d = Distribution::Int { low: 0, high: 12, log: false, step: 4 };
+        assert_eq!(d.external(5.0), ParamValue::Int(4));
+        assert_eq!(d.external(6.5), ParamValue::Int(8));
+    }
+
+    #[test]
+    fn log_int() {
+        let d = Distribution::Int { low: 1, high: 1024, log: true, step: 1 };
+        let v = d.external((64.0f64).ln());
+        assert_eq!(v, ParamValue::Int(64));
+    }
+
+    #[test]
+    fn categorical_index_mapping() {
+        let d = Distribution::categorical(vec!["sgd", "adam", "rmsprop"]);
+        assert_eq!(d.external(1.0), ParamValue::Cat("adam".into()));
+        assert_eq!(d.external(5.0), ParamValue::Cat("rmsprop".into()));
+        assert_eq!(d.internal(&ParamValue::Cat("sgd".into())).unwrap(), 0.0);
+        assert!(d.internal(&ParamValue::Cat("nadam".into())).is_err());
+        assert_eq!(d.n_categories(), Some(3));
+    }
+
+    #[test]
+    fn contains_checks_domain() {
+        let d = Distribution::float(0.0, 1.0);
+        assert!(d.contains(&ParamValue::Float(0.5)));
+        assert!(!d.contains(&ParamValue::Float(1.5)));
+        assert!(!d.contains(&ParamValue::Int(0)));
+    }
+
+    #[test]
+    fn single_detection() {
+        assert!(Distribution::float(2.0, 2.0).is_single());
+        assert!(!Distribution::float(1.0, 2.0).is_single());
+        assert!(Distribution::int(3, 3).is_single());
+        assert!(Distribution::categorical(vec!["only"]).is_single());
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        let ds = vec![
+            Distribution::float(0.0, 1.0),
+            Distribution::log_float(1e-5, 1e-1),
+            Distribution::Float { low: 0.0, high: 1.0, log: false, step: Some(0.1) },
+            Distribution::int(-5, 5),
+            Distribution::Int { low: 1, high: 128, log: true, step: 1 },
+            Distribution::categorical(vec!["a", "b"]),
+        ];
+        for d in ds {
+            let j = d.to_json();
+            let parsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Distribution::from_json(&parsed).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn incompatible_value_errors() {
+        let d = Distribution::float(0.0, 1.0);
+        assert!(d.internal(&ParamValue::Cat("x".into())).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! `FrozenTrial` — the immutable record of a trial as stored.
+
+use std::collections::BTreeMap;
+
+use crate::core::distribution::Distribution;
+use crate::core::types::{OptunaError, ParamValue, TrialState};
+
+/// A snapshot of one trial: the unit samplers and pruners reason over.
+#[derive(Debug, Clone)]
+pub struct FrozenTrial {
+    /// Storage-assigned unique id (unique within a storage backend).
+    pub id: u64,
+    /// 0-based position within the study.
+    pub number: u64,
+    pub state: TrialState,
+    /// Final objective value (set when state is Complete; pruned trials may
+    /// carry their last intermediate value).
+    pub value: Option<f64>,
+    /// name → (distribution, internal representation). BTreeMap gives
+    /// deterministic iteration for samplers.
+    pub params: BTreeMap<String, (Distribution, f64)>,
+    /// step → reported intermediate objective value.
+    pub intermediate: BTreeMap<u64, f64>,
+    /// Free-form user attributes (string → string).
+    pub user_attrs: BTreeMap<String, String>,
+}
+
+impl FrozenTrial {
+    pub fn new(id: u64, number: u64) -> Self {
+        FrozenTrial {
+            id,
+            number,
+            state: TrialState::Running,
+            value: None,
+            params: BTreeMap::new(),
+            intermediate: BTreeMap::new(),
+            user_attrs: BTreeMap::new(),
+        }
+    }
+
+    /// External (user-facing) value of a parameter.
+    pub fn param(&self, name: &str) -> Option<ParamValue> {
+        self.params.get(name).map(|(d, internal)| d.external(*internal))
+    }
+
+    /// Internal representation of a parameter.
+    pub fn param_internal(&self, name: &str) -> Option<f64> {
+        self.params.get(name).map(|(_, v)| *v)
+    }
+
+    /// Last reported intermediate step, if any.
+    pub fn last_step(&self) -> Option<u64> {
+        self.intermediate.keys().next_back().copied()
+    }
+
+    /// Intermediate value at a step.
+    pub fn intermediate_at(&self, step: u64) -> Option<f64> {
+        self.intermediate.get(&step).copied()
+    }
+
+    /// Final value or (for running/pruned trials) the latest intermediate.
+    pub fn value_or_last_intermediate(&self) -> Option<f64> {
+        self.value.or_else(|| {
+            self.last_step().and_then(|s| self.intermediate_at(s))
+        })
+    }
+
+    /// Require the final value (objective bookkeeping).
+    pub fn require_value(&self) -> Result<f64, OptunaError> {
+        self.value.ok_or_else(|| {
+            OptunaError::Storage(format!("trial {} has no value", self.number))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial_with_param() -> FrozenTrial {
+        let mut t = FrozenTrial::new(7, 3);
+        t.params.insert(
+            "lr".into(),
+            (Distribution::log_float(1e-5, 1e-1), (1e-3f64).ln()),
+        );
+        t
+    }
+
+    #[test]
+    fn param_external_view() {
+        let t = trial_with_param();
+        match t.param("lr").unwrap() {
+            ParamValue::Float(v) => assert!((v - 1e-3).abs() < 1e-12),
+            _ => panic!(),
+        }
+        assert!(t.param("missing").is_none());
+        assert!((t.param_internal("lr").unwrap() - (1e-3f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intermediate_bookkeeping() {
+        let mut t = FrozenTrial::new(0, 0);
+        assert_eq!(t.last_step(), None);
+        t.intermediate.insert(1, 0.9);
+        t.intermediate.insert(4, 0.5);
+        t.intermediate.insert(2, 0.7);
+        assert_eq!(t.last_step(), Some(4));
+        assert_eq!(t.intermediate_at(2), Some(0.7));
+        assert_eq!(t.value_or_last_intermediate(), Some(0.5));
+        t.value = Some(0.42);
+        assert_eq!(t.value_or_last_intermediate(), Some(0.42));
+    }
+
+    #[test]
+    fn require_value_errors_when_missing() {
+        let t = FrozenTrial::new(0, 0);
+        assert!(t.require_value().is_err());
+    }
+}

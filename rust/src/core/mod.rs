@@ -1,0 +1,9 @@
+//! Core vocabulary types shared across the framework.
+
+pub mod distribution;
+pub mod frozen;
+pub mod types;
+
+pub use distribution::Distribution;
+pub use frozen::FrozenTrial;
+pub use types::{OptunaError, ParamValue, StudyDirection, TrialState};

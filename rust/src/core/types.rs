@@ -1,0 +1,199 @@
+//! Fundamental enums and the error type.
+
+use std::fmt;
+
+/// Optimization direction of a study.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StudyDirection {
+    Minimize,
+    Maximize,
+}
+
+impl StudyDirection {
+    /// True if `a` is a better objective value than `b` in this direction.
+    pub fn is_better(&self, a: f64, b: f64) -> bool {
+        match self {
+            StudyDirection::Minimize => a < b,
+            StudyDirection::Maximize => a > b,
+        }
+    }
+
+    /// Sign that converts this direction to minimization (+1 for minimize).
+    pub fn min_sign(&self) -> f64 {
+        match self {
+            StudyDirection::Minimize => 1.0,
+            StudyDirection::Maximize => -1.0,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StudyDirection::Minimize => "minimize",
+            StudyDirection::Maximize => "maximize",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, OptunaError> {
+        match s {
+            "minimize" => Ok(StudyDirection::Minimize),
+            "maximize" => Ok(StudyDirection::Maximize),
+            other => Err(OptunaError::Storage(format!("bad direction '{other}'"))),
+        }
+    }
+}
+
+/// Life-cycle state of a trial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialState {
+    Running,
+    Complete,
+    Pruned,
+    Failed,
+}
+
+impl TrialState {
+    pub fn is_finished(&self) -> bool {
+        !matches!(self, TrialState::Running)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrialState::Running => "running",
+            TrialState::Complete => "complete",
+            TrialState::Pruned => "pruned",
+            TrialState::Failed => "failed",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, OptunaError> {
+        match s {
+            "running" => Ok(TrialState::Running),
+            "complete" => Ok(TrialState::Complete),
+            "pruned" => Ok(TrialState::Pruned),
+            "failed" => Ok(TrialState::Failed),
+            other => Err(OptunaError::Storage(format!("bad state '{other}'"))),
+        }
+    }
+}
+
+/// External (user-facing) value of a suggested parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Float(f64),
+    Int(i64),
+    /// Categorical choice (the selected string).
+    Cat(String),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::Float(v) => Some(*v),
+            ParamValue::Int(v) => Some(*v as f64),
+            ParamValue::Cat(_) => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Cat(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Float(v) => write!(f, "{v}"),
+            ParamValue::Int(v) => write!(f, "{v}"),
+            ParamValue::Cat(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Framework error type.
+#[derive(Debug)]
+pub enum OptunaError {
+    /// Storage-layer failure (I/O, lock, corrupt journal, unknown ids).
+    Storage(String),
+    /// Suggest API misuse (e.g. same name with a different distribution).
+    InvalidParam(String),
+    /// Signal that the running trial should be pruned (raised by
+    /// `Trial::should_prune` users; caught by `Study::optimize`).
+    TrialPruned,
+    /// Objective function failure.
+    Objective(String),
+    /// PJRT runtime failure.
+    Runtime(String),
+}
+
+impl fmt::Display for OptunaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptunaError::Storage(m) => write!(f, "storage error: {m}"),
+            OptunaError::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
+            OptunaError::TrialPruned => write!(f, "trial pruned"),
+            OptunaError::Objective(m) => write!(f, "objective error: {m}"),
+            OptunaError::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for OptunaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_better() {
+        assert!(StudyDirection::Minimize.is_better(1.0, 2.0));
+        assert!(!StudyDirection::Minimize.is_better(2.0, 1.0));
+        assert!(StudyDirection::Maximize.is_better(2.0, 1.0));
+        assert_eq!(StudyDirection::Minimize.min_sign(), 1.0);
+        assert_eq!(StudyDirection::Maximize.min_sign(), -1.0);
+    }
+
+    #[test]
+    fn enum_string_roundtrip() {
+        for d in [StudyDirection::Minimize, StudyDirection::Maximize] {
+            assert_eq!(StudyDirection::from_str(d.as_str()).unwrap(), d);
+        }
+        for s in [
+            TrialState::Running,
+            TrialState::Complete,
+            TrialState::Pruned,
+            TrialState::Failed,
+        ] {
+            assert_eq!(TrialState::from_str(s.as_str()).unwrap(), s);
+        }
+        assert!(StudyDirection::from_str("sideways").is_err());
+        assert!(TrialState::from_str("zombie").is_err());
+    }
+
+    #[test]
+    fn param_value_accessors() {
+        assert_eq!(ParamValue::Float(1.5).as_f64(), Some(1.5));
+        assert_eq!(ParamValue::Int(3).as_f64(), Some(3.0));
+        assert_eq!(ParamValue::Int(3).as_i64(), Some(3));
+        assert_eq!(ParamValue::Cat("a".into()).as_str(), Some("a"));
+        assert_eq!(ParamValue::Cat("a".into()).as_f64(), None);
+        assert_eq!(ParamValue::Float(1.0).as_i64(), None);
+    }
+
+    #[test]
+    fn finished_states() {
+        assert!(!TrialState::Running.is_finished());
+        assert!(TrialState::Complete.is_finished());
+        assert!(TrialState::Pruned.is_finished());
+        assert!(TrialState::Failed.is_finished());
+    }
+}

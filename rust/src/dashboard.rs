@@ -1,0 +1,264 @@
+//! Static dashboard (Fig 8 analog): renders a study to a self-contained
+//! HTML page with inline SVG — optimization history, parallel
+//! coordinates, intermediate-value curves, and the trials table.
+//! No server required; `optuna dashboard --out report.html` writes it.
+
+use crate::core::{OptunaError, TrialState};
+use crate::study::Study;
+use std::fmt::Write as _;
+
+/// Map a value range to SVG y (flipped).
+fn y_of(v: f64, lo: f64, hi: f64, height: f64) -> f64 {
+    if hi <= lo {
+        return height / 2.0;
+    }
+    height - (v - lo) / (hi - lo) * height
+}
+
+/// SVG polyline from points.
+fn polyline(points: &[(f64, f64)], stroke: &str) -> String {
+    let pts: Vec<String> = points.iter().map(|(x, y)| format!("{x:.1},{y:.1}")).collect();
+    format!(
+        "<polyline fill='none' stroke='{stroke}' stroke-width='1.5' points='{}'/>",
+        pts.join(" ")
+    )
+}
+
+/// Render the study report.
+pub fn render_html(study: &Study) -> Result<String, OptunaError> {
+    let trials = study.trials()?;
+    let finished: Vec<_> = trials
+        .iter()
+        .filter(|t| t.state == TrialState::Complete || t.state == TrialState::Pruned)
+        .collect();
+    let values: Vec<(u64, f64, TrialState)> = finished
+        .iter()
+        .filter_map(|t| t.value.map(|v| (t.number, v, t.state)))
+        .collect();
+
+    let mut html = String::new();
+    let _ = write!(
+        html,
+        "<!doctype html><html><head><meta charset='utf-8'>\
+         <title>optuna-rs: {name}</title>\
+         <style>body{{font-family:sans-serif;margin:2em}}table{{border-collapse:collapse}}\
+         td,th{{border:1px solid #ccc;padding:2px 8px;font-size:12px}}\
+         .pruned{{color:#b65}}.complete{{color:#276}}h2{{margin-top:1.5em}}</style>\
+         </head><body><h1>Study: {name} ({dir})</h1>",
+        name = study.name,
+        dir = study.direction.as_str()
+    );
+
+    // ---- optimization history ------------------------------------------
+    let (w, h) = (640.0, 240.0);
+    if !values.is_empty() {
+        let lo = values.iter().map(|v| v.1).fold(f64::INFINITY, f64::min);
+        let hi = values.iter().map(|v| v.1).fold(f64::NEG_INFINITY, f64::max);
+        let n = values.iter().map(|v| v.0).max().unwrap().max(1) as f64;
+        let mut dots = String::new();
+        let mut best_pts = Vec::new();
+        let mut best = f64::NAN;
+        for (num, v, state) in &values {
+            let x = *num as f64 / n * w;
+            let y = y_of(*v, lo, hi, h);
+            let color = if *state == TrialState::Pruned { "#cc8855" } else { "#227766" };
+            let _ = write!(dots, "<circle cx='{x:.1}' cy='{y:.1}' r='2.2' fill='{color}'/>");
+            if *state == TrialState::Complete {
+                if best.is_nan() || study.direction.is_better(*v, best) {
+                    best = *v;
+                }
+                best_pts.push((x, y_of(best, lo, hi, h)));
+            }
+        }
+        let _ = write!(
+            html,
+            "<h2>Optimization history</h2>\
+             <svg width='{w}' height='{h}' style='background:#fafafa;border:1px solid #ddd'>\
+             {dots}{line}</svg>\
+             <div>range [{lo:.6} … {hi:.6}]; best line in blue</div>",
+            line = polyline(&best_pts, "#3355cc"),
+        );
+    }
+
+    // ---- parallel coordinates -------------------------------------------
+    let mut names: Vec<String> = Vec::new();
+    for t in &finished {
+        for k in t.params.keys() {
+            if !names.contains(k) {
+                names.push(k.clone());
+            }
+        }
+    }
+    names.sort();
+    if !names.is_empty() && !values.is_empty() {
+        let lo = values.iter().map(|v| v.1).fold(f64::INFINITY, f64::min);
+        let hi = values.iter().map(|v| v.1).fold(f64::NEG_INFINITY, f64::max);
+        let mut lines = String::new();
+        let cols = names.len().max(2);
+        for t in &finished {
+            let Some(v) = t.value else { continue };
+            // color by objective rank (greener = better)
+            let frac = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+            let frac = match study.direction {
+                crate::core::StudyDirection::Minimize => frac,
+                crate::core::StudyDirection::Maximize => 1.0 - frac,
+            };
+            let red = (64.0 + 180.0 * frac) as u32;
+            let green = (190.0 - 140.0 * frac) as u32;
+            let mut pts = Vec::new();
+            for (ci, name) in names.iter().enumerate() {
+                if let Some((dist, internal)) = t.params.get(name) {
+                    let (dlo, dhi) = dist.internal_range();
+                    let fy = if dhi > dlo { (internal - dlo) / (dhi - dlo) } else { 0.5 };
+                    let x = ci as f64 / (cols - 1) as f64 * w;
+                    pts.push((x, h - fy * h));
+                }
+            }
+            if pts.len() >= 2 {
+                let _ = write!(
+                    lines,
+                    "{}",
+                    polyline(&pts, &format!("rgba({red},{green},110,0.45)"))
+                );
+            }
+        }
+        let axis_labels: Vec<String> = names
+            .iter()
+            .enumerate()
+            .map(|(ci, name)| {
+                let x = ci as f64 / (cols - 1) as f64 * w;
+                format!(
+                    "<line x1='{x:.0}' y1='0' x2='{x:.0}' y2='{h}' stroke='#bbb'/>\
+                     <text x='{x:.0}' y='{ty}' font-size='10'>{name}</text>",
+                    ty = h + 12.0
+                )
+            })
+            .collect();
+        let _ = write!(
+            html,
+            "<h2>Parallel coordinates</h2>\
+             <svg width='{w}' height='{hh}' style='background:#fafafa;border:1px solid #ddd'>\
+             {axes}{lines}</svg>",
+            hh = h + 18.0,
+            axes = axis_labels.join("")
+        );
+    }
+
+    // ---- intermediate values (learning curves) ---------------------------
+    let curves: Vec<_> = finished.iter().filter(|t| !t.intermediate.is_empty()).collect();
+    if !curves.is_empty() {
+        let max_step = curves
+            .iter()
+            .flat_map(|t| t.intermediate.keys())
+            .max()
+            .copied()
+            .unwrap_or(1) as f64;
+        let vlo = curves
+            .iter()
+            .flat_map(|t| t.intermediate.values())
+            .fold(f64::INFINITY, |a, &b| a.min(b));
+        let vhi = curves
+            .iter()
+            .flat_map(|t| t.intermediate.values())
+            .fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        let mut lines = String::new();
+        for t in curves.iter().take(200) {
+            let pts: Vec<(f64, f64)> = t
+                .intermediate
+                .iter()
+                .map(|(s, v)| (*s as f64 / max_step * w, y_of(*v, vlo, vhi, h)))
+                .collect();
+            let color = if t.state == TrialState::Pruned {
+                "rgba(204,136,85,0.5)"
+            } else {
+                "rgba(34,119,102,0.7)"
+            };
+            let _ = write!(lines, "{}", polyline(&pts, color));
+        }
+        let _ = write!(
+            html,
+            "<h2>Intermediate values</h2>\
+             <svg width='{w}' height='{h}' style='background:#fafafa;border:1px solid #ddd'>{lines}</svg>\
+             <div>orange = pruned, green = completed (first 200 trials)</div>"
+        );
+    }
+
+    // ---- trials table -----------------------------------------------------
+    let _ = write!(
+        html,
+        "<h2>Trials ({} total)</h2><table><tr><th>#</th><th>state</th><th>value</th>{}</tr>",
+        trials.len(),
+        names.iter().map(|n| format!("<th>{n}</th>")).collect::<String>()
+    );
+    for t in trials.iter().take(500) {
+        let _ = write!(
+            html,
+            "<tr class='{cls}'><td>{num}</td><td>{state}</td><td>{val}</td>{cells}</tr>",
+            cls = t.state.as_str(),
+            num = t.number,
+            state = t.state.as_str(),
+            val = t.value.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            cells = names
+                .iter()
+                .map(|n| format!(
+                    "<td>{}</td>",
+                    t.param(n).map(|p| p.to_string()).unwrap_or_default()
+                ))
+                .collect::<String>()
+        );
+    }
+    html.push_str("</table></body></html>");
+    Ok(html)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+    use std::sync::Arc;
+
+    fn demo_study() -> Study {
+        let study = Study::builder()
+            .name("dash-demo")
+            .sampler(Arc::new(RandomSampler::new(0)))
+            .pruner(Arc::new(AshaPruner::new()))
+            .build()
+            .unwrap();
+        study
+            .optimize(25, |t| {
+                let x = t.suggest_float("x", -2.0, 2.0)?;
+                let c = t.suggest_categorical("kind", &["a", "b"])?;
+                for step in 1..=8 {
+                    t.report(step, x * x + 1.0 / step as f64)?;
+                    if t.should_prune()? {
+                        return Err(OptunaError::TrialPruned);
+                    }
+                }
+                Ok(x * x + if c == "a" { 0.0 } else { 0.1 })
+            })
+            .unwrap();
+        study
+    }
+
+    #[test]
+    fn renders_all_sections() {
+        let study = demo_study();
+        let html = render_html(&study).unwrap();
+        assert!(html.contains("Optimization history"));
+        assert!(html.contains("Parallel coordinates"));
+        assert!(html.contains("Intermediate values"));
+        assert!(html.contains("Trials ("));
+        assert!(html.contains("<svg"));
+        assert!(html.contains("dash-demo"));
+        // well-formed-ish: tags balance for the big ones
+        assert_eq!(html.matches("<table>").count(), html.matches("</table>").count());
+        assert_eq!(html.matches("<svg").count(), html.matches("</svg>").count());
+    }
+
+    #[test]
+    fn empty_study_renders() {
+        let study = Study::builder().name("empty").build().unwrap();
+        let html = render_html(&study).unwrap();
+        assert!(html.contains("Trials (0 total)"));
+    }
+}

@@ -1,0 +1,69 @@
+//! # optuna-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **"Optuna: A Next-generation
+//! Hyperparameter Optimization Framework"** (Akiba et al., KDD 2019).
+//!
+//! The three design criteria of the paper, as realized here:
+//!
+//! 1. **Define-by-run API** — objectives are plain Rust closures that
+//!    receive a live [`trial::Trial`] and construct the search space
+//!    dynamically via `suggest_*` calls ([`trial::TrialApi`]).
+//! 2. **Efficient sampling and pruning** — [`sampler`] (random, TPE,
+//!    CMA-ES, TPE+CMA-ES, GP-EI, RF-EI, grid) and [`pruner`] (ASHA =
+//!    Algorithm 1, median, sync-SH, percentile, Hyperband). The TPE
+//!    scoring hot loop can run on an AOT-compiled Pallas kernel through
+//!    PJRT ([`runtime`]).
+//! 3. **Easy-to-setup, versatile architecture** — [`storage`] backends
+//!    from zero-setup in-memory to a multi-process journal file; workers
+//!    share studies through storage alone (Fig 7), in-process via
+//!    [`study::Study::optimize_parallel`] or across OS processes via the
+//!    `optuna` CLI.
+//!
+//! ```no_run
+//! use optuna_rs::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let study = Study::builder()
+//!     .name("quadratic")
+//!     .sampler(Arc::new(TpeSampler::new(42)))
+//!     .build()
+//!     .unwrap();
+//! study.optimize(100, |trial| {
+//!     let x = trial.suggest_float("x", -10.0, 10.0)?;
+//!     Ok((x - 2.0).powi(2))
+//! }).unwrap();
+//! println!("best = {:?}", study.best_value().unwrap());
+//! ```
+
+pub mod core;
+pub mod util;
+
+pub mod cli;
+pub mod dashboard;
+
+pub mod mlmodel;
+pub mod pruner;
+pub mod runtime;
+pub mod sampler;
+pub mod storage;
+pub mod workloads;
+pub mod study;
+pub mod trial;
+
+/// Common imports for user code.
+pub mod prelude {
+    pub use crate::core::{
+        Distribution, FrozenTrial, OptunaError, ParamValue, StudyDirection, TrialState,
+    };
+    pub use crate::pruner::{
+        AshaPruner, HyperbandPruner, MedianPruner, NopPruner, PercentilePruner, Pruner,
+        SyncHalvingPruner,
+    };
+    pub use crate::sampler::{
+        CmaEsSampler, GpSampler, GridSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler,
+        TpeSampler,
+    };
+    pub use crate::storage::{InMemoryStorage, JournalStorage, Storage};
+    pub use crate::study::{Study, StudyBuilder, TrialOutcome};
+    pub use crate::trial::{FixedTrial, Trial, TrialApi};
+}

@@ -1,0 +1,6 @@
+//! `optuna` binary — see cli::run for the command set (Fig 7 workflow).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(optuna_rs::cli::run(&argv));
+}

@@ -1,0 +1,271 @@
+//! Rust driver for the L2 JAX model (the §5.2 "simplified AlexNet"
+//! analog): holds the parameter/momentum literals across steps and invokes
+//! the AOT-compiled `init_params` / `train_step` / `eval_step` programs
+//! through PJRT.
+//!
+//! The model's 8 hyperparameters (matching the paper's count) are:
+//! `lr`, `momentum`, `weight_decay`, `dropout` — runtime scalars — and
+//! `c1`, `c2`, `c3`, `fc_units` — architecture widths realized as channel
+//! masks over the maximal network, so one fixed HLO serves every trial
+//! (DESIGN.md §3).
+
+use std::sync::Arc;
+
+use crate::core::OptunaError;
+use crate::runtime::{literal_f32, literal_i32, scalar_i32, to_vec_f32, Runtime};
+use crate::util::rng::Pcg64;
+
+/// The tunable hyperparameters of one trial.
+#[derive(Debug, Clone)]
+pub struct HyperParams {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub dropout: f64,
+    /// Effective widths (≤ the maximal widths in the manifest).
+    pub c1: usize,
+    pub c2: usize,
+    pub c3: usize,
+    pub fc_units: usize,
+}
+
+impl HyperParams {
+    /// A reasonable mid-range default (useful for smoke tests).
+    pub fn default_config() -> HyperParams {
+        HyperParams {
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            dropout: 0.1,
+            c1: 16,
+            c2: 32,
+            c3: 32,
+            fc_units: 256,
+        }
+    }
+}
+
+/// A synthetic SVHN-like dataset: per-class templates + Gaussian noise.
+/// Learnable but non-trivial; the same construction as the python-side
+/// test generator.
+pub struct SyntheticSvhn {
+    img: usize,
+    n_classes: usize,
+    templates: Vec<Vec<f32>>, // per class, img*img*3
+    rng: Pcg64,
+}
+
+impl SyntheticSvhn {
+    pub fn new(img: usize, n_classes: usize, seed: u64) -> SyntheticSvhn {
+        let mut trng = Pcg64::new(1234);
+        let templates = (0..n_classes)
+            .map(|_| {
+                (0..img * img * 3)
+                    .map(|_| trng.uniform() as f32)
+                    .collect::<Vec<f32>>()
+            })
+            .collect();
+        SyntheticSvhn { img, n_classes, templates, rng: Pcg64::new(seed) }
+    }
+
+    /// Sample a batch: (x flat [n, img, img, 3], y [n]).
+    pub fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let pix = self.img * self.img * 3;
+        let mut xs = Vec::with_capacity(n * pix);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = self.rng.index(self.n_classes);
+            ys.push(cls as i32);
+            let tpl = &self.templates[cls];
+            for p in 0..pix {
+                let v = tpl[p] as f64 + 0.25 * self.rng.normal();
+                xs.push(v.clamp(0.0, 1.0) as f32);
+            }
+        }
+        (xs, ys)
+    }
+}
+
+/// One training session = one trial's model state.
+pub struct TrainSession {
+    runtime: Arc<Runtime>,
+    /// params then momentum literals, in manifest order (2·n_params).
+    state: Vec<xla::Literal>,
+    masks: [Vec<f32>; 4],
+    hp_vec: [f32; 4],
+    step_count: u64,
+}
+
+impl TrainSession {
+    /// Initialize model parameters on-device for the given hyperparams.
+    pub fn new(runtime: Arc<Runtime>, hp: &HyperParams, seed: i32) -> Result<Self, OptunaError> {
+        let meta = &runtime.manifest.model;
+        let mask_dims: Vec<usize> = meta.mask_specs.iter().map(|(_, s)| s[0]).collect();
+        let widths = [hp.c1, hp.c2, hp.c3, hp.fc_units];
+        let mut masks: [Vec<f32>; 4] = Default::default();
+        for i in 0..4 {
+            if widths[i] > mask_dims[i] {
+                return Err(OptunaError::InvalidParam(format!(
+                    "width {} exceeds maximal {}",
+                    widths[i], mask_dims[i]
+                )));
+            }
+            let mut m = vec![0.0f32; mask_dims[i]];
+            for v in m.iter_mut().take(widths[i]) {
+                *v = 1.0;
+            }
+            masks[i] = m;
+        }
+        let state = runtime.execute("init_params", &[scalar_i32(seed)])?;
+        Ok(TrainSession {
+            runtime,
+            state,
+            masks,
+            hp_vec: [
+                hp.lr as f32,
+                hp.momentum as f32,
+                hp.weight_decay as f32,
+                hp.dropout as f32,
+            ],
+            step_count: 0,
+        })
+    }
+
+    /// One SGD step on a batch; returns the training loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[i32]) -> Result<f64, OptunaError> {
+        let meta = &self.runtime.manifest.model;
+        let b = meta.train_batch;
+        let img = meta.img;
+        let n_params = meta.param_specs.len();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * n_params + 8);
+        // params + momentum (moved out; replaced by the step outputs)
+        inputs.append(&mut self.state);
+        inputs.push(literal_f32(x, &[b, img, img, 3])?);
+        inputs.push(literal_i32(y, &[b])?);
+        inputs.push(literal_f32(&self.hp_vec, &[4])?);
+        for m in &self.masks {
+            inputs.push(literal_f32(m, &[m.len()])?);
+        }
+        inputs.push(scalar_i32(self.step_count as i32));
+        let mut outs = self.runtime.execute("train_step", &inputs)?;
+        let loss_lit = outs.pop().expect("train_step outputs");
+        self.state = outs; // params' + momentum'
+        self.step_count += 1;
+        let loss = to_vec_f32(&loss_lit)?[0] as f64;
+        Ok(loss)
+    }
+
+    /// Evaluate on a batch; returns (loss, error-rate).
+    pub fn eval(&self, x: &[f32], y: &[i32]) -> Result<(f64, f64), OptunaError> {
+        let meta = &self.runtime.manifest.model;
+        let b = meta.eval_batch;
+        let img = meta.img;
+        let n_params = meta.param_specs.len();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(n_params + 6);
+        for lit in self.state.iter().take(n_params) {
+            // Literal has no cheap clone; round-trip through raw f32s.
+            let data = to_vec_f32(lit)?;
+            let spec = &self.runtime.manifest.programs["eval_step"].inputs[inputs.len()];
+            inputs.push(literal_f32(&data, &spec.shape)?);
+        }
+        inputs.push(literal_f32(x, &[b, img, img, 3])?);
+        inputs.push(literal_i32(y, &[b])?);
+        for m in &self.masks {
+            inputs.push(literal_f32(m, &[m.len()])?);
+        }
+        let outs = self.runtime.execute("eval_step", &inputs)?;
+        let loss = to_vec_f32(&outs[0])?[0] as f64;
+        let err = to_vec_f32(&outs[1])?[0] as f64;
+        Ok((loss, err))
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<Arc<Runtime>> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Arc::new(Runtime::open(dir).unwrap()))
+    }
+
+    #[test]
+    fn synthetic_data_shapes_and_classes() {
+        let mut ds = SyntheticSvhn::new(16, 10, 0);
+        let (x, y) = ds.batch(64);
+        assert_eq!(x.len(), 64 * 16 * 16 * 3);
+        assert_eq!(y.len(), 64);
+        assert!(y.iter().all(|&c| (0..10).contains(&c)));
+        assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // batches differ
+        let (x2, _) = ds.batch(64);
+        assert_ne!(x, x2);
+    }
+
+    #[test]
+    fn templates_are_shared_across_instances() {
+        let mut a = SyntheticSvhn::new(16, 10, 1);
+        let mut b = SyntheticSvhn::new(16, 10, 2);
+        // same class templates (deterministic), different noise
+        let (xa, _) = a.batch(4);
+        let (xb, _) = b.batch(4);
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn train_session_learns_on_synthetic_data() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let meta = rt.manifest.model.clone();
+        let hp = HyperParams::default_config();
+        let mut sess = TrainSession::new(Arc::clone(&rt), &hp, 7).unwrap();
+        let mut ds = SyntheticSvhn::new(meta.img, meta.n_classes, 3);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..20 {
+            let (x, y) = ds.batch(meta.train_batch);
+            let loss = sess.train_step(&x, &y).unwrap();
+            assert!(loss.is_finite());
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap(), "loss {first:?} -> {last}");
+        let (ex, ey) = ds.batch(meta.eval_batch);
+        let (eloss, eerr) = sess.eval(&ex, &ey).unwrap();
+        assert!(eloss.is_finite());
+        assert!((0.0..=1.0).contains(&eerr));
+        assert_eq!(sess.steps_taken(), 20);
+    }
+
+    #[test]
+    fn narrow_architecture_also_trains() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let meta = rt.manifest.model.clone();
+        let hp = HyperParams {
+            c1: 4,
+            c2: 8,
+            c3: 8,
+            fc_units: 32,
+            ..HyperParams::default_config()
+        };
+        let mut sess = TrainSession::new(Arc::clone(&rt), &hp, 1).unwrap();
+        let mut ds = SyntheticSvhn::new(meta.img, meta.n_classes, 5);
+        let (x, y) = ds.batch(meta.train_batch);
+        let loss = sess.train_step(&x, &y).unwrap();
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn oversized_width_rejected() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let hp = HyperParams { c1: 9999, ..HyperParams::default_config() };
+        assert!(TrainSession::new(rt, &hp, 0).is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Asynchronous Successive Halving — Algorithm 1 of the paper, verbatim.
+//!
+//! ```text
+//! Input: trial, current step, min resource r, reduction factor η,
+//!        minimum early-stopping rate s.
+//! 1  rung ← max(0, ⌊log_η(step / r)⌋ − s)
+//! 2  if step ≠ r·η^(s+rung) then return false
+//! 5  value  ← trial's intermediate value at step
+//! 6  values ← all trials' intermediate values at step
+//! 7  top_k_values ← top_k(values, ⌊|values|/η⌋)
+//! 8  if top_k_values = ∅ then top_k_values ← top_k(values, 1)
+//! 11 return value ∉ top_k_values
+//! ```
+//!
+//! No repechage: a pruned trial never re-enters (the paper's choice, to
+//! avoid storing checkpoint snapshots). Because the decision uses only
+//! the *currently recorded* intermediate values, a worker never waits on
+//! its peers — the property that makes the method scale linearly in
+//! Fig 12.
+
+use crate::pruner::{in_top_k, Pruner, PruningContext};
+
+/// ASHA pruner (Optuna's `SuccessiveHalvingPruner`).
+pub struct AshaPruner {
+    /// Minimum resource `r` before pruning is considered.
+    pub min_resource: u64,
+    /// Reduction factor `η`.
+    pub reduction_factor: u64,
+    /// Minimum early-stopping rate `s` (larger ⇒ later first rung).
+    pub min_early_stopping_rate: u64,
+}
+
+impl AshaPruner {
+    pub fn new() -> Self {
+        AshaPruner {
+            min_resource: 1,
+            reduction_factor: 4,
+            min_early_stopping_rate: 0,
+        }
+    }
+
+    pub fn with_params(min_resource: u64, reduction_factor: u64, s: u64) -> Self {
+        assert!(min_resource >= 1 && reduction_factor >= 2);
+        AshaPruner {
+            min_resource,
+            reduction_factor,
+            min_early_stopping_rate: s,
+        }
+    }
+
+    /// Line 1: current rung of a step.
+    pub fn rung_of(&self, step: u64) -> u64 {
+        let ratio = step as f64 / self.min_resource as f64;
+        if ratio < 1.0 {
+            return 0;
+        }
+        let log = ratio.log(self.reduction_factor as f64).floor() as i64;
+        (log - self.min_early_stopping_rate as i64).max(0) as u64
+    }
+
+    /// Line 2 predicate: is `step` a promotion step?
+    pub fn is_promotion_step(&self, step: u64) -> bool {
+        let rung = self.rung_of(step);
+        let expected = self.min_resource
+            * self
+                .reduction_factor
+                .pow((self.min_early_stopping_rate + rung) as u32);
+        step == expected
+    }
+}
+
+impl Default for AshaPruner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pruner for AshaPruner {
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool {
+        let step = ctx.step;
+        // lines 1–4
+        if !self.is_promotion_step(step) {
+            return false;
+        }
+        // line 5
+        let Some(value) = ctx.trial.intermediate_at(step) else {
+            return false;
+        };
+        // line 6
+        let values = ctx.values_at_step(step);
+        // lines 7–10
+        let mut k = values.len() / self.reduction_factor as usize; // ⌊|values|/η⌋
+        if k == 0 {
+            k = 1;
+        }
+        // line 11
+        !in_top_k(ctx.direction, &values, value, k)
+    }
+
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FrozenTrial, StudyDirection};
+    use crate::prop_assert;
+    use crate::pruner::testutil::{ctx, curve_trial};
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn rung_schedule_eta4() {
+        let p = AshaPruner::new(); // r=1, η=4, s=0
+        assert_eq!(p.rung_of(1), 0);
+        assert_eq!(p.rung_of(3), 0);
+        assert_eq!(p.rung_of(4), 1);
+        assert_eq!(p.rung_of(15), 1);
+        assert_eq!(p.rung_of(16), 2);
+        assert_eq!(p.rung_of(64), 3);
+        assert!(p.is_promotion_step(1));
+        assert!(!p.is_promotion_step(2));
+        assert!(p.is_promotion_step(4));
+        assert!(!p.is_promotion_step(5));
+        assert!(p.is_promotion_step(16));
+    }
+
+    #[test]
+    fn early_stopping_rate_delays_rungs() {
+        let p = AshaPruner::with_params(1, 4, 1); // s=1
+        assert!(!p.is_promotion_step(1));
+        assert!(p.is_promotion_step(4)); // first rung at r·η^s
+        assert!(p.is_promotion_step(16));
+        assert_eq!(p.rung_of(4), 0);
+        assert_eq!(p.rung_of(16), 1);
+    }
+
+    #[test]
+    fn non_promotion_step_never_prunes() {
+        let p = AshaPruner::new();
+        let others: Vec<FrozenTrial> =
+            (0..8).map(|i| curve_trial(i, &[0.0, 0.0, 0.0])).collect();
+        let worst = curve_trial(8, &[9.9, 9.9, 9.9]);
+        let mut all = others;
+        all.push(worst.clone());
+        // step 2 is not a promotion step under η=4
+        assert!(!p.should_prune(&ctx(&all, &worst, 2)));
+    }
+
+    #[test]
+    fn worst_trial_pruned_at_promotion_step() {
+        let p = AshaPruner::new();
+        // 8 trials at step 4: values 0..7; η=4 ⇒ top ⌊8/4⌋=2 survive
+        let mut all: Vec<FrozenTrial> = (0..8)
+            .map(|i| {
+                let v = i as f64;
+                curve_trial(i, &[v, v, v, v])
+            })
+            .collect();
+        let good = all[1].clone(); // value 1.0, rank 2 → survives
+        let bad = all[2].clone(); // value 2.0, rank 3 → pruned
+        let worst = all[7].clone();
+        assert!(!p.should_prune(&ctx(&all, &good, 4)));
+        assert!(p.should_prune(&ctx(&all, &bad, 4)));
+        assert!(p.should_prune(&ctx(&all, &worst, 4)));
+        // direction flip reverses the verdicts
+        let mut c = ctx(&all, &worst, 4);
+        c.direction = StudyDirection::Maximize;
+        assert!(!p.should_prune(&c));
+        let mut c = ctx(&all, &good, 4);
+        c.direction = StudyDirection::Maximize;
+        assert!(p.should_prune(&c));
+        all.clear();
+    }
+
+    #[test]
+    fn lone_trial_promoted_via_top1_fallback() {
+        let p = AshaPruner::new();
+        // fewer than η trials at the rung: best survives (lines 8–10)
+        let t0 = curve_trial(0, &[5.0]);
+        let t1 = curve_trial(1, &[7.0]);
+        let all = vec![t0.clone(), t1.clone()];
+        assert!(!p.should_prune(&ctx(&all, &t0, 1))); // best of 2 → top-1
+        assert!(p.should_prune(&ctx(&all, &t1, 1)));
+        // truly alone → survives
+        let only = vec![t0.clone()];
+        assert!(!p.should_prune(&ctx(&only, &t0, 1)));
+    }
+
+    #[test]
+    fn missing_report_never_prunes() {
+        let p = AshaPruner::new();
+        let t = FrozenTrial::new(0, 0); // no intermediates
+        let all = vec![t.clone()];
+        assert!(!p.should_prune(&ctx(&all, &t, 4)));
+    }
+
+    #[test]
+    fn property_survivor_fraction_is_one_over_eta() {
+        // At a fully-populated rung, ASHA keeps exactly ⌊n/η⌋ trials
+        // (ties aside) — the invariant that drives the 30× trial-count
+        // increase in Fig 11a.
+        check("asha_survivor_fraction", 20, |rng| {
+            let eta = [2u64, 3, 4][rng.index(3)];
+            let n = rng.int_range(eta as i64, 60) as u64;
+            let p = AshaPruner::with_params(1, eta, 0);
+            let step = eta; // promotion step for rung 1... use step=1 (rung 0)
+            let trials: Vec<FrozenTrial> = (0..n)
+                .map(|i| {
+                    let mut t = FrozenTrial::new(i, i);
+                    // distinct values ⇒ no tie ambiguity
+                    t.intermediate.insert(1, i as f64);
+                    let _ = step;
+                    t
+                })
+                .collect();
+            let survivors = trials
+                .iter()
+                .filter(|t| {
+                    !p.should_prune(&PruningContext {
+                        direction: StudyDirection::Minimize,
+                        trials: &trials,
+                        trial: t,
+                        step: 1,
+                    })
+                })
+                .count();
+            let expect = ((n / eta) as usize).max(1);
+            prop_assert!(
+                survivors == expect,
+                "n={n} eta={eta}: survivors={survivors} expect={expect}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_monotone_no_repechage_shape() {
+        // If a trial is pruned at rung k with value v, any trial with a
+        // worse value at the same step is also pruned (monotonicity).
+        check("asha_monotone", 20, |rng| {
+            let p = AshaPruner::new();
+            let n = rng.int_range(4, 40) as u64;
+            let trials: Vec<FrozenTrial> = (0..n)
+                .map(|i| {
+                    let mut t = FrozenTrial::new(i, i);
+                    t.intermediate.insert(4, rng.uniform());
+                    t
+                })
+                .collect();
+            let verdicts: Vec<(f64, bool)> = trials
+                .iter()
+                .map(|t| {
+                    (
+                        t.intermediate_at(4).unwrap(),
+                        p.should_prune(&PruningContext {
+                            direction: StudyDirection::Minimize,
+                            trials: &trials,
+                            trial: t,
+                            step: 4,
+                        }),
+                    )
+                })
+                .collect();
+            for &(v1, pruned1) in &verdicts {
+                for &(v2, pruned2) in &verdicts {
+                    if pruned1 && v2 > v1 {
+                        prop_assert!(pruned2, "v2={v2} worse than pruned v1={v1} but kept");
+                    }
+                    let _ = pruned2;
+                }
+            }
+            Ok(())
+        });
+    }
+}

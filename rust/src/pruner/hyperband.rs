@@ -1,0 +1,65 @@
+//! Hyperband pruner (Li et al. 2018) — extension feature: a portfolio of
+//! ASHA brackets with different early-stopping rates, so aggressive and
+//! conservative halving schedules hedge each other.
+
+use crate::pruner::{AshaPruner, Pruner, PruningContext};
+
+/// Assigns each trial (by number) round-robin to one of `n_brackets` ASHA
+/// pruners whose `min_early_stopping_rate` grows with the bracket index.
+pub struct HyperbandPruner {
+    brackets: Vec<AshaPruner>,
+}
+
+impl HyperbandPruner {
+    pub fn new(n_brackets: usize, min_resource: u64, reduction_factor: u64) -> Self {
+        assert!(n_brackets >= 1);
+        let brackets = (0..n_brackets)
+            .map(|s| AshaPruner::with_params(min_resource, reduction_factor, s as u64))
+            .collect();
+        HyperbandPruner { brackets }
+    }
+
+    pub fn n_brackets(&self) -> usize {
+        self.brackets.len()
+    }
+
+    fn bracket_of(&self, trial_number: u64) -> &AshaPruner {
+        &self.brackets[(trial_number % self.brackets.len() as u64) as usize]
+    }
+}
+
+impl Pruner for HyperbandPruner {
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool {
+        self.bracket_of(ctx.trial.number).should_prune(ctx)
+    }
+
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::FrozenTrial;
+    use crate::pruner::testutil::{ctx, curve_trial};
+
+    #[test]
+    fn brackets_get_increasing_stopping_rates() {
+        let hb = HyperbandPruner::new(3, 1, 4);
+        assert_eq!(hb.n_brackets(), 3);
+        assert_eq!(hb.brackets[0].min_early_stopping_rate, 0);
+        assert_eq!(hb.brackets[2].min_early_stopping_rate, 2);
+    }
+
+    #[test]
+    fn conservative_bracket_spares_early_steps() {
+        let hb = HyperbandPruner::new(2, 1, 4);
+        // 8 trials with curves; trial numbers decide brackets
+        let all: Vec<FrozenTrial> = (0..8).map(|i| curve_trial(i, &[i as f64])).collect();
+        let bad_even = all[6].clone(); // bracket 0 (s=0): step 1 is a rung
+        let bad_odd = all[7].clone(); // bracket 1 (s=1): first rung at step 4
+        assert!(hb.should_prune(&ctx(&all, &bad_even, 1)));
+        assert!(!hb.should_prune(&ctx(&all, &bad_odd, 1)));
+    }
+}

@@ -1,0 +1,117 @@
+//! Median pruner — the Vizier-style rival ASHA beats in Fig 11a.
+
+use crate::core::StudyDirection;
+use crate::pruner::{Pruner, PruningContext};
+use crate::util::stats::median;
+
+/// Prunes when the trial's latest intermediate value is worse than the
+/// median of the intermediate values other trials reported at the same
+/// step ("automated early stopping" as featured in Vizier).
+pub struct MedianPruner {
+    /// Never prune while fewer than this many trials reported at the step.
+    pub n_startup_trials: usize,
+    /// Never prune before this step.
+    pub n_warmup_steps: u64,
+}
+
+impl MedianPruner {
+    pub fn new() -> Self {
+        MedianPruner { n_startup_trials: 5, n_warmup_steps: 0 }
+    }
+
+    pub fn with_params(n_startup_trials: usize, n_warmup_steps: u64) -> Self {
+        MedianPruner { n_startup_trials, n_warmup_steps }
+    }
+}
+
+impl Default for MedianPruner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pruner for MedianPruner {
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool {
+        if ctx.step < self.n_warmup_steps {
+            return false;
+        }
+        let Some(value) = ctx.trial.intermediate_at(ctx.step) else {
+            return false;
+        };
+        // values of OTHER trials at this step
+        let others: Vec<f64> = ctx
+            .trials
+            .iter()
+            .filter(|t| t.id != ctx.trial.id)
+            .filter_map(|t| t.intermediate_at(ctx.step))
+            .collect();
+        if others.len() < self.n_startup_trials {
+            return false;
+        }
+        let med = median(&others);
+        match ctx.direction {
+            StudyDirection::Minimize => value > med,
+            StudyDirection::Maximize => value < med,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "median"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::FrozenTrial;
+    use crate::pruner::testutil::{ctx, curve_trial};
+
+    fn cohort() -> Vec<FrozenTrial> {
+        // values at step 1: 0,1,2,3,4,5 → median of any 5 others well-defined
+        (0..6).map(|i| curve_trial(i, &[i as f64])).collect()
+    }
+
+    #[test]
+    fn below_median_survives_above_dies() {
+        let p = MedianPruner::new();
+        let all = cohort();
+        let good = all[1].clone(); // 1.0, others median = (0+2+3+4+5)/.. = 3
+        let bad = all[4].clone(); // 4.0, others median = 2.0
+        assert!(!p.should_prune(&ctx(&all, &good, 1)));
+        assert!(p.should_prune(&ctx(&all, &bad, 1)));
+    }
+
+    #[test]
+    fn startup_trials_guard() {
+        let p = MedianPruner::new(); // needs 5 others
+        let all: Vec<FrozenTrial> = (0..3).map(|i| curve_trial(i, &[i as f64])).collect();
+        let worst = all[2].clone();
+        assert!(!p.should_prune(&ctx(&all, &worst, 1)));
+    }
+
+    #[test]
+    fn warmup_steps_guard() {
+        let p = MedianPruner::with_params(1, 3);
+        let all = cohort();
+        let worst = all[5].clone();
+        assert!(!p.should_prune(&ctx(&all, &worst, 1))); // step 1 < warmup 3
+    }
+
+    #[test]
+    fn maximize_flips() {
+        let p = MedianPruner::new();
+        let all = cohort();
+        let low = all[0].clone();
+        let mut c = ctx(&all, &low, 1);
+        c.direction = StudyDirection::Maximize;
+        assert!(p.should_prune(&c));
+    }
+
+    #[test]
+    fn exactly_median_survives() {
+        let p = MedianPruner::with_params(2, 0);
+        let all: Vec<FrozenTrial> = (0..3).map(|i| curve_trial(i, &[i as f64])).collect();
+        let mid = all[1].clone(); // others = [0,2], median 1.0, value 1.0 → keep
+        assert!(!p.should_prune(&ctx(&all, &mid, 1)));
+    }
+}

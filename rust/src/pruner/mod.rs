@@ -1,0 +1,145 @@
+//! Pruners — the "performance estimation strategy" half of §3.
+//!
+//! A pruner looks at the intermediate values every trial has reported so
+//! far (`report API`) and decides whether the current trial is unpromising
+//! (`should_prune API`, Fig 5). The paper's contribution is an
+//! asynchronous variant of Successive Halving (Algorithm 1) that never
+//! waits for other workers — see [`AshaPruner`].
+
+mod asha;
+mod hyperband;
+mod median;
+mod nop;
+mod percentile;
+mod successive_halving;
+
+pub use asha::AshaPruner;
+pub use hyperband::HyperbandPruner;
+pub use median::MedianPruner;
+pub use nop::NopPruner;
+pub use percentile::PercentilePruner;
+pub use successive_halving::SyncHalvingPruner;
+
+use crate::core::{FrozenTrial, StudyDirection};
+
+/// Everything a pruner may consult when deciding.
+pub struct PruningContext<'a> {
+    pub direction: StudyDirection,
+    /// Snapshot of every trial in the study (any state).
+    pub trials: &'a [FrozenTrial],
+    /// The trial under consideration (its `intermediate` map already
+    /// contains the value just reported at `step`).
+    pub trial: &'a FrozenTrial,
+    /// The step that was just reported.
+    pub step: u64,
+}
+
+impl<'a> PruningContext<'a> {
+    /// Intermediate values of all *other* trials at `step`, plus this
+    /// trial's — i.e. Algorithm 1's `get_all_trials_intermediate_values`.
+    pub fn values_at_step(&self, step: u64) -> Vec<f64> {
+        self.trials
+            .iter()
+            .filter_map(|t| t.intermediate_at(step))
+            .collect()
+    }
+}
+
+/// The pruning strategy interface.
+pub trait Pruner: Send + Sync {
+    /// True ⇒ the trial should stop now.
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Direction-aware "is `value` within the best k of `values`" — the
+/// `value ∉ top_k(values, k)` test of Algorithm 1, with ties resolved
+/// in the trial's favor.
+pub(crate) fn in_top_k(
+    direction: StudyDirection,
+    values: &[f64],
+    value: f64,
+    k: usize,
+) -> bool {
+    if k == 0 || values.is_empty() {
+        return false;
+    }
+    if k >= values.len() {
+        return true;
+    }
+    let mut sorted = values.to_vec();
+    // best first
+    sorted.sort_by(|a, b| match direction {
+        StudyDirection::Minimize => a.partial_cmp(b).unwrap(),
+        StudyDirection::Maximize => b.partial_cmp(a).unwrap(),
+    });
+    let threshold = sorted[k - 1];
+    match direction {
+        StudyDirection::Minimize => value <= threshold,
+        StudyDirection::Maximize => value >= threshold,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::core::FrozenTrial;
+
+    /// Build a trial with a learning curve (step i → values[i]).
+    pub fn curve_trial(number: u64, values: &[f64]) -> FrozenTrial {
+        let mut t = FrozenTrial::new(number, number);
+        for (i, v) in values.iter().enumerate() {
+            t.intermediate.insert((i + 1) as u64, *v);
+        }
+        t
+    }
+
+    pub fn ctx<'a>(
+        trials: &'a [FrozenTrial],
+        trial: &'a FrozenTrial,
+        step: u64,
+    ) -> PruningContext<'a> {
+        PruningContext {
+            direction: StudyDirection::Minimize,
+            trials,
+            trial,
+            step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_top_k_minimize() {
+        let vals = [1.0, 2.0, 3.0, 4.0];
+        assert!(in_top_k(StudyDirection::Minimize, &vals, 1.0, 1));
+        assert!(!in_top_k(StudyDirection::Minimize, &vals, 2.0, 1));
+        assert!(in_top_k(StudyDirection::Minimize, &vals, 2.0, 2));
+        assert!(in_top_k(StudyDirection::Minimize, &vals, 0.5, 1));
+    }
+
+    #[test]
+    fn in_top_k_maximize() {
+        let vals = [1.0, 2.0, 3.0, 4.0];
+        assert!(in_top_k(StudyDirection::Maximize, &vals, 4.0, 1));
+        assert!(!in_top_k(StudyDirection::Maximize, &vals, 3.0, 1));
+        assert!(in_top_k(StudyDirection::Maximize, &vals, 3.0, 2));
+    }
+
+    #[test]
+    fn in_top_k_ties_favor_trial() {
+        let vals = [1.0, 1.0, 2.0];
+        assert!(in_top_k(StudyDirection::Minimize, &vals, 1.0, 1));
+    }
+
+    #[test]
+    fn in_top_k_edge_cases() {
+        assert!(!in_top_k(StudyDirection::Minimize, &[], 1.0, 1));
+        assert!(!in_top_k(StudyDirection::Minimize, &[1.0], 1.0, 0));
+        assert!(in_top_k(StudyDirection::Minimize, &[1.0, 2.0], 9.0, 5));
+    }
+}

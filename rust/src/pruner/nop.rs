@@ -1,0 +1,32 @@
+//! No-op pruner: the "without pruning" arm of Fig 11a.
+
+use crate::pruner::{Pruner, PruningContext};
+
+/// Never prunes.
+pub struct NopPruner;
+
+impl Pruner for NopPruner {
+    fn should_prune(&self, _ctx: &PruningContext<'_>) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "nop"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::testutil::{ctx, curve_trial};
+
+    #[test]
+    fn never_prunes() {
+        let p = NopPruner;
+        let all: Vec<_> = (0..4).map(|i| curve_trial(i, &[i as f64, i as f64])).collect();
+        let worst = all[3].clone();
+        for step in 1..=2 {
+            assert!(!p.should_prune(&ctx(&all, &worst, step)));
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Percentile pruner — the generalization of the median rule (keep a
+//! trial only if it is within the best q-percent at its step).
+
+use crate::core::StudyDirection;
+use crate::pruner::{Pruner, PruningContext};
+use crate::util::stats::quantile;
+
+/// Prunes when the trial falls outside the best `percentile` percent of
+/// intermediate values other trials reported at the same step.
+pub struct PercentilePruner {
+    /// Keep percentile in (0, 100]: 25.0 ⇒ survive only in the best 25%.
+    pub percentile: f64,
+    pub n_startup_trials: usize,
+    pub n_warmup_steps: u64,
+}
+
+impl PercentilePruner {
+    pub fn new(percentile: f64) -> Self {
+        assert!(percentile > 0.0 && percentile <= 100.0);
+        PercentilePruner { percentile, n_startup_trials: 5, n_warmup_steps: 0 }
+    }
+}
+
+impl Pruner for PercentilePruner {
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool {
+        if ctx.step < self.n_warmup_steps {
+            return false;
+        }
+        let Some(value) = ctx.trial.intermediate_at(ctx.step) else {
+            return false;
+        };
+        let others: Vec<f64> = ctx
+            .trials
+            .iter()
+            .filter(|t| t.id != ctx.trial.id)
+            .filter_map(|t| t.intermediate_at(ctx.step))
+            .collect();
+        if others.len() < self.n_startup_trials {
+            return false;
+        }
+        let q = self.percentile / 100.0;
+        match ctx.direction {
+            StudyDirection::Minimize => value > quantile(&others, q),
+            StudyDirection::Maximize => value < quantile(&others, 1.0 - q),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "percentile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::FrozenTrial;
+    use crate::pruner::testutil::{ctx, curve_trial};
+
+    fn cohort(n: u64) -> Vec<FrozenTrial> {
+        (0..n).map(|i| curve_trial(i, &[i as f64])).collect()
+    }
+
+    #[test]
+    fn stricter_percentile_prunes_more() {
+        let all = cohort(11);
+        let mid = all[5].clone(); // value 5 of 0..10
+        let lenient = PercentilePruner::new(90.0);
+        let strict = PercentilePruner::new(10.0);
+        assert!(!lenient.should_prune(&ctx(&all, &mid, 1)));
+        assert!(strict.should_prune(&ctx(&all, &mid, 1)));
+    }
+
+    #[test]
+    fn percentile_50_matches_median_semantics() {
+        let all = cohort(6);
+        let p = PercentilePruner::new(50.0);
+        let good = all[1].clone();
+        let bad = all[4].clone();
+        assert!(!p.should_prune(&ctx(&all, &good, 1)));
+        assert!(p.should_prune(&ctx(&all, &bad, 1)));
+    }
+
+    #[test]
+    fn maximize_direction() {
+        let all = cohort(11);
+        let p = PercentilePruner::new(25.0);
+        let high = all[9].clone();
+        let low = all[1].clone();
+        let mut c = ctx(&all, &high, 1);
+        c.direction = StudyDirection::Maximize;
+        assert!(!p.should_prune(&c));
+        let mut c = ctx(&all, &low, 1);
+        c.direction = StudyDirection::Maximize;
+        assert!(p.should_prune(&c));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_percentile_rejected() {
+        PercentilePruner::new(0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Synchronous Successive Halving (Jamieson & Talwalkar 2016) — the
+//! ablation baseline ASHA improves on.
+//!
+//! True synchronous SH waits for a full cohort before promoting; a pruner
+//! API cannot block, so this implementation encodes the synchronization
+//! as a *cohort-completeness requirement*: at rung k it only prunes once
+//! at least `cohort_size / η^k` trials have reported the promotion step.
+//! Until the cohort fills, every trial keeps running — which is exactly
+//! the waiting that costs synchronous SH its worker utilization and what
+//! the fig11a bench contrasts with ASHA.
+
+use crate::pruner::{in_top_k, Pruner, PruningContext};
+
+/// Cohort-synchronized successive halving.
+pub struct SyncHalvingPruner {
+    pub min_resource: u64,
+    pub reduction_factor: u64,
+    /// Cohort size at rung 0 (the paper's SH bracket size).
+    pub cohort: usize,
+}
+
+impl SyncHalvingPruner {
+    pub fn new(cohort: usize) -> Self {
+        SyncHalvingPruner { min_resource: 1, reduction_factor: 4, cohort }
+    }
+
+    fn rung_of(&self, step: u64) -> Option<u64> {
+        let ratio = step as f64 / self.min_resource as f64;
+        if ratio < 1.0 {
+            return None;
+        }
+        let rung = ratio.log(self.reduction_factor as f64).floor() as u64;
+        let expected = self.min_resource * self.reduction_factor.pow(rung as u32);
+        (step == expected).then_some(rung)
+    }
+
+    /// Trials expected to reach rung k.
+    fn cohort_at(&self, rung: u64) -> usize {
+        let div = (self.reduction_factor as usize).pow(rung as u32);
+        (self.cohort / div).max(1)
+    }
+}
+
+impl Pruner for SyncHalvingPruner {
+    fn should_prune(&self, ctx: &PruningContext<'_>) -> bool {
+        let Some(rung) = self.rung_of(ctx.step) else {
+            return false;
+        };
+        let Some(value) = ctx.trial.intermediate_at(ctx.step) else {
+            return false;
+        };
+        let values = ctx.values_at_step(ctx.step);
+        // synchronization: wait for the cohort to fill before judging
+        if values.len() < self.cohort_at(rung) {
+            return false;
+        }
+        let k = (values.len() / self.reduction_factor as usize).max(1);
+        !in_top_k(ctx.direction, &values, value, k)
+    }
+
+    fn name(&self) -> &'static str {
+        "sync-sh"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::FrozenTrial;
+    use crate::pruner::testutil::{ctx, curve_trial};
+
+    #[test]
+    fn waits_for_cohort() {
+        let p = SyncHalvingPruner::new(8);
+        // only 3 of 8 reported at step 1 → nobody pruned yet
+        let all: Vec<FrozenTrial> = (0..3).map(|i| curve_trial(i, &[i as f64])).collect();
+        let worst = all[2].clone();
+        assert!(!p.should_prune(&ctx(&all, &worst, 1)));
+    }
+
+    #[test]
+    fn prunes_once_cohort_full() {
+        let p = SyncHalvingPruner::new(8);
+        let all: Vec<FrozenTrial> = (0..8).map(|i| curve_trial(i, &[i as f64])).collect();
+        let good = all[0].clone();
+        let bad = all[5].clone();
+        assert!(!p.should_prune(&ctx(&all, &good, 1)));
+        assert!(p.should_prune(&ctx(&all, &bad, 1)));
+    }
+
+    #[test]
+    fn higher_rungs_need_smaller_cohorts() {
+        let p = SyncHalvingPruner::new(16);
+        assert_eq!(p.cohort_at(0), 16);
+        assert_eq!(p.cohort_at(1), 4);
+        assert_eq!(p.cohort_at(2), 1);
+    }
+
+    #[test]
+    fn non_promotion_steps_pass() {
+        let p = SyncHalvingPruner::new(4);
+        let all: Vec<FrozenTrial> =
+            (0..4).map(|i| curve_trial(i, &[i as f64, i as f64, i as f64])).collect();
+        let worst = all[3].clone();
+        assert!(!p.should_prune(&ctx(&all, &worst, 3))); // 3 is not 4^k
+    }
+}

@@ -1,0 +1,203 @@
+//! `artifacts/manifest.json` reader — the contract between the python
+//! compile path (aot.py) and the rust execution path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::core::OptunaError;
+use crate::util::json::Json;
+
+/// Shape + dtype of one program input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, OptunaError> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| OptunaError::Runtime("spec missing shape".into()))?
+            .iter()
+            .map(|d| d.as_i64().map(|v| v as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| OptunaError::Runtime("bad shape".into()))?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| OptunaError::Runtime("spec missing dtype".into()))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-lowered program.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub programs: BTreeMap<String, ProgramSpec>,
+    /// model metadata (img size, batch sizes, param/mask specs)
+    pub model: ModelMeta,
+    /// TPE kernel padding sizes
+    pub tpe_max_candidates: usize,
+    pub tpe_max_components: usize,
+}
+
+/// Model geometry recorded by aot.py.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub img: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub n_classes: usize,
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub mask_specs: Vec<(String, Vec<usize>)>,
+}
+
+fn named_specs(j: &Json, key: &str) -> Result<Vec<(String, Vec<usize>)>, OptunaError> {
+    j.get(key)
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| OptunaError::Runtime(format!("manifest missing {key}")))?
+        .iter()
+        .map(|entry| {
+            let arr = entry
+                .as_arr()
+                .ok_or_else(|| OptunaError::Runtime("bad spec entry".into()))?;
+            let name = arr[0]
+                .as_str()
+                .ok_or_else(|| OptunaError::Runtime("bad spec name".into()))?
+                .to_string();
+            let dims = arr[1]
+                .as_arr()
+                .ok_or_else(|| OptunaError::Runtime("bad spec dims".into()))?
+                .iter()
+                .map(|d| d.as_i64().map(|v| v as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| OptunaError::Runtime("bad dim".into()))?;
+            Ok((name, dims))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, OptunaError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| OptunaError::Runtime(format!("read {path:?}: {e}")))?;
+        let j = Json::parse(&text)
+            .map_err(|e| OptunaError::Runtime(format!("parse manifest: {e}")))?;
+
+        let mut programs = BTreeMap::new();
+        let progs = j
+            .get("programs")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| OptunaError::Runtime("manifest missing programs".into()))?;
+        for (name, entry) in progs {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| OptunaError::Runtime("program missing file".into()))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, OptunaError> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| OptunaError::Runtime(format!("program missing {key}")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            programs.insert(
+                name.clone(),
+                ProgramSpec { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+            );
+        }
+
+        let model_j = j
+            .get("model")
+            .ok_or_else(|| OptunaError::Runtime("manifest missing model".into()))?;
+        let geti = |key: &str| -> Result<usize, OptunaError> {
+            model_j
+                .get(key)
+                .and_then(|v| v.as_i64())
+                .map(|v| v as usize)
+                .ok_or_else(|| OptunaError::Runtime(format!("model missing {key}")))
+        };
+        let model = ModelMeta {
+            img: geti("img")?,
+            train_batch: geti("train_batch")?,
+            eval_batch: geti("eval_batch")?,
+            n_classes: geti("n_classes")?,
+            param_specs: named_specs(model_j, "param_specs")?,
+            mask_specs: named_specs(model_j, "mask_specs")?,
+        };
+
+        let tpe = j
+            .get("tpe")
+            .ok_or_else(|| OptunaError::Runtime("manifest missing tpe".into()))?;
+        let tpe_max_candidates = tpe
+            .get("max_candidates")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(512) as usize;
+        let tpe_max_components = tpe
+            .get("max_components")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(64) as usize;
+
+        Ok(Manifest { programs, model, tpe_max_candidates, tpe_max_components })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Default artifacts dir relative to the crate root.
+    pub fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["tpe_score", "train_step", "eval_step", "init_params"] {
+            assert!(m.programs.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.tpe_max_candidates, 512);
+        assert_eq!(m.tpe_max_components, 64);
+        assert_eq!(m.model.param_specs.len(), 10);
+        assert_eq!(m.model.mask_specs.len(), 4);
+        let ts = &m.programs["train_step"];
+        assert_eq!(ts.inputs.len(), 28);
+        assert_eq!(ts.outputs.len(), 21);
+        // spec sanity
+        assert_eq!(
+            m.programs["tpe_score"].inputs[0].element_count(),
+            m.tpe_max_candidates
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("runtime error"));
+    }
+}

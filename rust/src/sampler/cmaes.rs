@@ -1,0 +1,484 @@
+//! CMA-ES relational sampler (Hansen & Ostermeier 2001).
+//!
+//! The paper's §3.1 relational-sampling example: once the intersection
+//! search space has been inferred from completed trials, CMA-ES models
+//! the joint distribution of the numeric parameters (normalized to the
+//! unit cube) with full covariance adaptation — rank-1 + rank-μ updates,
+//! cumulative step-size adaptation, and an eigendecomposition from
+//! `util::linalg::eigh`.
+//!
+//! Ask/tell bookkeeping: every relative sample is an "ask" remembered by
+//! trial number; completed trials matching outstanding asks are fed back
+//! as a generation once λ results are in. Categorical and out-of-space
+//! parameters fall back to independent sampling (random by default —
+//! mirroring Optuna's `CmaEsSampler`).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::core::{Distribution, TrialState};
+use crate::sampler::random::RandomSampler;
+use crate::sampler::search_space::{intersection_search_space, trial_coords};
+use crate::sampler::{Sampler, SearchSpace, StudyContext};
+use crate::util::linalg::{eigh, Mat};
+use crate::util::rng::Pcg64;
+
+/// Core CMA-ES state over the unit cube [0,1]^d.
+struct CmaState {
+    dim: usize,
+    lambda: usize,
+    mu: usize,
+    weights: Vec<f64>,
+    mu_eff: f64,
+    c_c: f64,
+    c_sigma: f64,
+    c_1: f64,
+    c_mu: f64,
+    d_sigma: f64,
+    chi_n: f64,
+    mean: Vec<f64>,
+    sigma: f64,
+    cov: Mat,
+    p_c: Vec<f64>,
+    p_sigma: Vec<f64>,
+    /// eigendecomposition cache of cov: C = B diag(d²) Bᵀ
+    eig_b: Mat,
+    eig_d: Vec<f64>,
+    generation: u64,
+    /// outstanding asks: trial number → y (the N(0,C) draw, pre-sigma)
+    asked: HashMap<u64, Vec<f64>>,
+    /// completed (loss, y) pairs waiting for a generation update
+    told: Vec<(f64, Vec<f64>)>,
+    /// highest trial number already consumed into `told`
+    consumed_through: i64,
+    /// identity of the space this state was built for
+    space_key: String,
+}
+
+impl CmaState {
+    fn new(dim: usize, mean: Vec<f64>, sigma: f64) -> CmaState {
+        let lambda = 4 + (3.0 * (dim as f64).ln()).floor() as usize;
+        let mu = lambda / 2;
+        // log-rank weights
+        let raw: Vec<f64> = (0..mu)
+            .map(|i| ((mu as f64 + 0.5).ln() - ((i + 1) as f64).ln()).max(0.0))
+            .collect();
+        let wsum: f64 = raw.iter().sum();
+        let weights: Vec<f64> = raw.iter().map(|w| w / wsum).collect();
+        let mu_eff = 1.0 / weights.iter().map(|w| w * w).sum::<f64>();
+        let n = dim as f64;
+        let c_sigma = (mu_eff + 2.0) / (n + mu_eff + 5.0);
+        let d_sigma = 1.0
+            + 2.0 * (0.0f64).max(((mu_eff - 1.0) / (n + 1.0)).sqrt() - 1.0)
+            + c_sigma;
+        let c_c = (4.0 + mu_eff / n) / (n + 4.0 + 2.0 * mu_eff / n);
+        let c_1 = 2.0 / ((n + 1.3) * (n + 1.3) + mu_eff);
+        let c_mu = (1.0 - c_1).min(
+            2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((n + 2.0) * (n + 2.0) + mu_eff),
+        );
+        let chi_n = n.sqrt() * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n * n));
+        CmaState {
+            dim,
+            lambda,
+            mu,
+            weights,
+            mu_eff,
+            c_c,
+            c_sigma,
+            c_1,
+            c_mu,
+            d_sigma,
+            chi_n,
+            mean,
+            sigma,
+            cov: Mat::eye(dim),
+            p_c: vec![0.0; dim],
+            p_sigma: vec![0.0; dim],
+            eig_b: Mat::eye(dim),
+            eig_d: vec![1.0; dim],
+            generation: 0,
+            asked: HashMap::new(),
+            told: Vec::new(),
+            consumed_through: -1,
+            space_key: String::new(),
+        }
+    }
+
+    fn refresh_eig(&mut self) {
+        let (vals, vecs) = eigh(&self.cov);
+        self.eig_d = vals.iter().map(|v| v.max(1e-20).sqrt()).collect();
+        self.eig_b = vecs;
+    }
+
+    /// Draw y ~ N(0, C); x = mean + sigma·y clipped to the unit cube.
+    fn ask(&mut self, rng: &mut Pcg64, trial_number: u64) -> Vec<f64> {
+        let z: Vec<f64> = (0..self.dim).map(|_| rng.normal()).collect();
+        // y = B (D .* z)
+        let dz: Vec<f64> = z.iter().zip(&self.eig_d).map(|(zi, di)| zi * di).collect();
+        let y = self.eig_b.matvec(&dz);
+        self.asked.insert(trial_number, y.clone());
+        y.iter()
+            .zip(&self.mean)
+            .map(|(yi, mi)| (mi + self.sigma * yi).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    /// One generation update from the best-μ of λ told solutions.
+    fn update(&mut self) {
+        self.told
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let ys: Vec<&Vec<f64>> = self.told.iter().take(self.mu).map(|(_, y)| y).collect();
+        let n = self.dim;
+        // weighted mean step  y_w
+        let mut y_w = vec![0.0; n];
+        for (w, y) in self.weights.iter().zip(&ys) {
+            for i in 0..n {
+                y_w[i] += w * y[i];
+            }
+        }
+        // mean update
+        for i in 0..n {
+            self.mean[i] = (self.mean[i] + self.sigma * y_w[i]).clamp(0.0, 1.0);
+        }
+        // p_sigma: C^{-1/2} y_w = B diag(1/d) Bᵀ y_w
+        let bt_yw = self.eig_b.t().matvec(&y_w);
+        let scaled: Vec<f64> = bt_yw
+            .iter()
+            .zip(&self.eig_d)
+            .map(|(v, d)| v / d.max(1e-20))
+            .collect();
+        let c_inv_sqrt_yw = self.eig_b.matvec(&scaled);
+        let cs = self.c_sigma;
+        let coef = (cs * (2.0 - cs) * self.mu_eff).sqrt();
+        for i in 0..n {
+            self.p_sigma[i] = (1.0 - cs) * self.p_sigma[i] + coef * c_inv_sqrt_yw[i];
+        }
+        let p_sigma_norm = self.p_sigma.iter().map(|v| v * v).sum::<f64>().sqrt();
+        // step-size
+        self.sigma *= ((cs / self.d_sigma) * (p_sigma_norm / self.chi_n - 1.0)).exp();
+        self.sigma = self.sigma.clamp(1e-8, 1.0);
+        // h_sigma (stall indicator)
+        let gen1 = self.generation as f64 + 1.0;
+        let h_sigma = if p_sigma_norm
+            / (1.0 - (1.0 - cs).powf(2.0 * gen1)).sqrt()
+            < (1.4 + 2.0 / (n as f64 + 1.0)) * self.chi_n
+        {
+            1.0
+        } else {
+            0.0
+        };
+        // p_c
+        let cc = self.c_c;
+        let coef_c = (cc * (2.0 - cc) * self.mu_eff).sqrt();
+        for i in 0..n {
+            self.p_c[i] = (1.0 - cc) * self.p_c[i] + h_sigma * coef_c * y_w[i];
+        }
+        // covariance: rank-1 + rank-mu
+        let delta_h = (1.0 - h_sigma) * cc * (2.0 - cc);
+        let old_coef = 1.0 - self.c_1 - self.c_mu;
+        let mut new_cov = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = old_coef * self.cov[(i, j)]
+                    + self.c_1
+                        * (self.p_c[i] * self.p_c[j] + delta_h * self.cov[(i, j)]);
+                for (w, y) in self.weights.iter().zip(&ys) {
+                    v += self.c_mu * w * y[i] * y[j];
+                }
+                new_cov[(i, j)] = v;
+            }
+        }
+        // symmetrize (numerical)
+        for i in 0..n {
+            for j in 0..i {
+                let avg = 0.5 * (new_cov[(i, j)] + new_cov[(j, i)]);
+                new_cov[(i, j)] = avg;
+                new_cov[(j, i)] = avg;
+            }
+        }
+        self.cov = new_cov;
+        self.refresh_eig();
+        self.generation += 1;
+        self.told.clear();
+    }
+}
+
+/// The sampler (state behind a mutex; see module docs for the ask/tell
+/// protocol).
+pub struct CmaEsSampler {
+    rng: Mutex<Pcg64>,
+    state: Mutex<Option<CmaState>>,
+    fallback: RandomSampler,
+    /// Initial global step size on the unit cube.
+    pub sigma0: f64,
+    /// Trials before relational sampling kicks in.
+    pub n_startup_trials: usize,
+}
+
+impl CmaEsSampler {
+    pub fn new(seed: u64) -> Self {
+        CmaEsSampler {
+            rng: Mutex::new(Pcg64::new(seed)),
+            state: Mutex::new(None),
+            fallback: RandomSampler::new(seed ^ 0x5eed),
+            sigma0: 0.25,
+            n_startup_trials: 4,
+        }
+    }
+
+    fn space_key(space: &SearchSpace) -> String {
+        let mut key = String::new();
+        for (name, dist) in space {
+            key.push_str(name);
+            key.push('|');
+            key.push_str(&dist.to_json().to_string());
+            key.push(';');
+        }
+        key
+    }
+
+    /// Normalize internal value to [0,1] within the distribution range.
+    fn normalize(dist: &Distribution, v: f64) -> f64 {
+        let (lo, hi) = dist.internal_range();
+        if hi <= lo {
+            return 0.5;
+        }
+        ((v - lo) / (hi - lo)).clamp(0.0, 1.0)
+    }
+
+    fn denormalize(dist: &Distribution, u: f64) -> f64 {
+        let (lo, hi) = dist.internal_range();
+        lo + u.clamp(0.0, 1.0) * (hi - lo)
+    }
+
+    /// Numeric-only subset of the intersection space (CMA-ES cannot model
+    /// unordered categoricals).
+    fn numeric_space(ctx: &StudyContext<'_>) -> SearchSpace {
+        let mut space = intersection_search_space(ctx.trials);
+        space.retain(|_, d| !matches!(d, Distribution::Categorical { .. }));
+        space
+    }
+}
+
+impl Sampler for CmaEsSampler {
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
+        let space = Self::numeric_space(ctx);
+        if space.is_empty()
+            || ctx.complete().count() < self.n_startup_trials
+        {
+            return SearchSpace::new();
+        }
+        space
+    }
+
+    fn sample_relative(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        if space.is_empty() {
+            return BTreeMap::new();
+        }
+        let key = Self::space_key(space);
+        let dim = space.len();
+        let mut guard = self.state.lock().unwrap();
+        // (re)initialize when the space changes
+        let reinit = match guard.as_ref() {
+            Some(st) => st.space_key != key,
+            None => true,
+        };
+        if reinit {
+            // start from the best completed trial's coords (exploitation)
+            let sign = ctx.direction.min_sign();
+            let mut best: Option<(f64, Vec<f64>)> = None;
+            for t in ctx.trials.iter().filter(|t| t.state == TrialState::Complete) {
+                if let (Some(v), Some(coords)) = (t.value, trial_coords(t, space)) {
+                    let loss = sign * v;
+                    let norm: Vec<f64> = coords
+                        .iter()
+                        .zip(space.values())
+                        .map(|(c, d)| Self::normalize(d, *c))
+                        .collect();
+                    if best.as_ref().map(|(b, _)| loss < *b).unwrap_or(true) {
+                        best = Some((loss, norm));
+                    }
+                }
+            }
+            let mean = best.map(|(_, m)| m).unwrap_or_else(|| vec![0.5; dim]);
+            let mut st = CmaState::new(dim, mean, self.sigma0);
+            st.space_key = key.clone();
+            *guard = Some(st);
+        }
+        let st = guard.as_mut().unwrap();
+
+        // Tell: absorb completed trials that match outstanding asks.
+        let sign = ctx.direction.min_sign();
+        for t in ctx.trials.iter().filter(|t| t.state == TrialState::Complete) {
+            if (t.number as i64) <= st.consumed_through {
+                continue;
+            }
+            if let (Some(v), Some(y)) = (t.value, st.asked.remove(&t.number)) {
+                st.told.push((sign * v, y));
+                st.consumed_through = st.consumed_through.max(t.number as i64);
+            }
+        }
+        while st.told.len() >= st.lambda {
+            st.update();
+        }
+
+        // Ask.
+        let mut rng = self.rng.lock().unwrap();
+        let x = st.ask(&mut rng, trial_number);
+        drop(rng);
+        space
+            .iter()
+            .zip(x)
+            .map(|((name, dist), u)| (name.clone(), Self::denormalize(dist, u)))
+            .collect()
+    }
+
+    fn sample_independent(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        self.fallback.sample_independent(ctx, trial_number, name, dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "cmaes"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FrozenTrial, ParamValue, StudyDirection};
+    use crate::sampler::testutil::completed_trial;
+
+    fn sphere_trial(number: u64, x: f64, y: f64) -> FrozenTrial {
+        let d = Distribution::float(-5.0, 5.0);
+        completed_trial(
+            number,
+            &[
+                ("x", d.clone(), ParamValue::Float(x)),
+                ("y", d.clone(), ParamValue::Float(y)),
+            ],
+            x * x + y * y,
+        )
+    }
+
+    #[test]
+    fn relative_space_needs_history() {
+        let s = CmaEsSampler::new(0);
+        let trials: Vec<FrozenTrial> = vec![sphere_trial(0, 1.0, 1.0)];
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        assert!(s.infer_relative_search_space(&ctx).is_empty());
+    }
+
+    #[test]
+    fn optimizes_sphere_end_to_end() {
+        // Simulate the study loop: ask via sample_relative, evaluate
+        // sphere, append to history. CMA-ES must converge toward 0.
+        let s = CmaEsSampler::new(1);
+        let _d = Distribution::float(-5.0, 5.0);
+        let mut trials: Vec<FrozenTrial> = Vec::new();
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        // seed random history
+        for i in 0..6 {
+            let x = rng.uniform_range(-5.0, 5.0);
+            let y = rng.uniform_range(-5.0, 5.0);
+            trials.push(sphere_trial(i, x, y));
+        }
+        let mut best = f64::INFINITY;
+        for i in 6..160 {
+            let (xv, yv);
+            {
+                let ctx = StudyContext {
+                    direction: StudyDirection::Minimize,
+                    trials: &trials,
+                };
+                let space = s.infer_relative_search_space(&ctx);
+                assert_eq!(space.len(), 2, "space at iter {i}");
+                let rel = s.sample_relative(&ctx, i, &space);
+                xv = *rel.get("x").unwrap();
+                yv = *rel.get("y").unwrap();
+            }
+            assert!((-5.0..=5.0).contains(&xv));
+            let loss = xv * xv + yv * yv;
+            best = best.min(loss);
+            trials.push(sphere_trial(i, xv, yv));
+        }
+        assert!(best < 0.3, "best={best}");
+        // ... and clearly better than the random seeds
+        let seed_best = trials[..6]
+            .iter()
+            .map(|t| t.value.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < seed_best);
+    }
+
+    #[test]
+    fn categorical_excluded_from_space() {
+        let dnum = Distribution::float(0.0, 1.0);
+        let dcat = Distribution::categorical(vec!["a", "b"]);
+        let trials: Vec<FrozenTrial> = (0..8)
+            .map(|i| {
+                completed_trial(
+                    i,
+                    &[
+                        ("x", dnum.clone(), ParamValue::Float(0.5)),
+                        ("c", dcat.clone(), ParamValue::Cat("a".into())),
+                    ],
+                    1.0,
+                )
+            })
+            .collect();
+        let s = CmaEsSampler::new(3);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let space = s.infer_relative_search_space(&ctx);
+        assert!(!space.contains_key("c"));
+    }
+
+    #[test]
+    fn state_reinitializes_on_space_change() {
+        let s = CmaEsSampler::new(4);
+        let d = Distribution::float(-5.0, 5.0);
+        let trials: Vec<FrozenTrial> = (0..8).map(|i| sphere_trial(i, 1.0, 1.0)).collect();
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let space = s.infer_relative_search_space(&ctx);
+        let _ = s.sample_relative(&ctx, 8, &space);
+        // now a different space (x only)
+        let mut space2 = SearchSpace::new();
+        space2.insert("x".into(), d.clone());
+        let rel = s.sample_relative(&ctx, 9, &space2);
+        assert_eq!(rel.len(), 1);
+        assert!(rel.contains_key("x"));
+    }
+
+    #[test]
+    fn cma_state_update_shrinks_toward_optimum() {
+        // Directly exercise the generation update: feed points whose best
+        // cluster sits at 0.2 — the mean must move toward it.
+        let mut st = CmaState::new(2, vec![0.8, 0.8], 0.3);
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        for gen in 0..10 {
+            let nums: Vec<u64> = (0..st.lambda as u64).map(|i| gen * 100 + i).collect();
+            let xs: Vec<(u64, Vec<f64>)> = nums
+                .iter()
+                .map(|&n| (n, st.ask(&mut rng, n)))
+                .collect();
+            for (n, x) in xs {
+                let loss = (x[0] - 0.2).powi(2) + (x[1] - 0.2).powi(2);
+                let y = st.asked.remove(&n).unwrap();
+                st.told.push((loss, y));
+            }
+            st.update();
+        }
+        assert!((st.mean[0] - 0.2).abs() < 0.15, "mean={:?}", st.mean);
+        assert!((st.mean[1] - 0.2).abs() < 0.15, "mean={:?}", st.mean);
+    }
+}

@@ -1,0 +1,135 @@
+//! Samplers — the "searching strategy" half of §3.
+//!
+//! Optuna's sampler interface splits a trial's parameters into two groups
+//! (§3.1):
+//!
+//! * **relative (relational) sampling** — before the objective runs, the
+//!   sampler infers the search space that past trials have in *common*
+//!   (the concurrence relations discoverable on a dynamically-constructed
+//!   space) and may sample those parameters jointly (CMA-ES, GP).
+//! * **independent sampling** — any parameter outside the relative space
+//!   (first occurrences, conditional branches) is sampled on its own
+//!   (random, TPE).
+//!
+//! Samplers are shared across worker threads, so implementations keep
+//! their mutable state (RNG, CMA-ES evolution paths) behind a `Mutex`.
+
+mod cmaes;
+mod gp;
+mod grid;
+mod parzen;
+mod random;
+mod rf;
+mod search_space;
+mod tpe;
+mod tpe_cmaes;
+
+pub use cmaes::CmaEsSampler;
+pub use gp::GpSampler;
+pub use grid::GridSampler;
+pub use parzen::ParzenEstimator;
+pub use random::RandomSampler;
+pub use rf::RfSampler;
+pub use search_space::intersection_search_space;
+pub use tpe::{CandidateScorer, TpeBackend, TpeConfig, TpeSampler};
+pub use tpe_cmaes::TpeCmaEsSampler;
+
+use std::collections::BTreeMap;
+
+use crate::core::{Distribution, FrozenTrial, StudyDirection};
+
+/// Read-only study context handed to samplers.
+pub struct StudyContext<'a> {
+    pub direction: StudyDirection,
+    /// Snapshot of all trials (any state), ordered by number.
+    pub trials: &'a [FrozenTrial],
+}
+
+impl<'a> StudyContext<'a> {
+    /// Completed trials only (what most samplers learn from).
+    pub fn complete(&self) -> impl Iterator<Item = &'a FrozenTrial> + '_ {
+        self.trials
+            .iter()
+            .filter(|t| t.state == crate::core::TrialState::Complete && t.value.is_some())
+    }
+
+    /// Objective values converted to minimization sign.
+    pub fn losses_of(&self, trials: &[&'a FrozenTrial]) -> Vec<f64> {
+        let sign = self.direction.min_sign();
+        trials.iter().map(|t| sign * t.value.unwrap()).collect()
+    }
+}
+
+/// Search-space map used by relative sampling (BTreeMap: deterministic
+/// iteration order).
+pub type SearchSpace = BTreeMap<String, Distribution>;
+
+/// The sampling strategy interface (mirrors Optuna's `BaseSampler`).
+pub trait Sampler: Send + Sync {
+    /// Infer the sub-space eligible for joint (relational) sampling.
+    /// Returning an empty map opts out of relative sampling entirely.
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace;
+
+    /// Jointly sample every parameter of `space`; keyed by name, values are
+    /// *internal* representations. Called once per trial, before the
+    /// objective runs.
+    fn sample_relative(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        space: &SearchSpace,
+    ) -> BTreeMap<String, f64>;
+
+    /// Sample a single parameter outside the relative space. Called from
+    /// inside `suggest_*` during the objective.
+    fn sample_independent(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64;
+
+    /// Human-readable name (logs, dashboards, benches).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Helpers shared by sampler unit tests.
+
+    use super::*;
+    use crate::core::{ParamValue, TrialState};
+
+    /// Build a completed FrozenTrial from (name, dist, external value) plus
+    /// an objective value.
+    pub fn completed_trial(
+        number: u64,
+        params: &[(&str, Distribution, ParamValue)],
+        value: f64,
+    ) -> FrozenTrial {
+        let mut t = FrozenTrial::new(number, number);
+        for (name, dist, val) in params {
+            let internal = dist.internal(val).unwrap();
+            t.params.insert(name.to_string(), (dist.clone(), internal));
+        }
+        t.state = TrialState::Complete;
+        t.value = Some(value);
+        t
+    }
+
+    /// Quadratic-bowl history: x in [-5, 5], loss = x².
+    pub fn bowl_history(n: usize, seed: u64) -> Vec<FrozenTrial> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..n)
+            .map(|i| {
+                let x = rng.uniform_range(-5.0, 5.0);
+                completed_trial(
+                    i as u64,
+                    &[("x", Distribution::float(-5.0, 5.0), ParamValue::Float(x))],
+                    x * x,
+                )
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,131 @@
+//! Uniform random sampling — the Fig 9/11 baseline.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::core::Distribution;
+use crate::sampler::{Sampler, SearchSpace, StudyContext};
+use crate::util::rng::Pcg64;
+
+/// Samples every parameter independently and uniformly (log-uniform for
+/// log-scaled distributions, uniform over categories for categoricals).
+pub struct RandomSampler {
+    rng: Mutex<Pcg64>,
+}
+
+impl RandomSampler {
+    pub fn new(seed: u64) -> Self {
+        RandomSampler { rng: Mutex::new(Pcg64::new(seed)) }
+    }
+
+    /// Uniform draw in a distribution's internal space.
+    pub fn draw(rng: &mut Pcg64, dist: &Distribution) -> f64 {
+        match dist {
+            Distribution::Categorical { choices } => rng.index(choices.len()) as f64,
+            _ => {
+                let (lo, hi) = dist.internal_range();
+                rng.uniform_range(lo, hi)
+            }
+        }
+    }
+}
+
+impl Sampler for RandomSampler {
+    fn infer_relative_search_space(&self, _ctx: &StudyContext<'_>) -> SearchSpace {
+        SearchSpace::new() // purely independent
+    }
+
+    fn sample_relative(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        BTreeMap::new()
+    }
+
+    fn sample_independent(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        Self::draw(&mut self.rng.lock().unwrap(), dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ParamValue, StudyDirection};
+
+    fn ctx<'a>(trials: &'a [crate::core::FrozenTrial]) -> StudyContext<'a> {
+        StudyContext { direction: StudyDirection::Minimize, trials }
+    }
+
+    #[test]
+    fn uniform_within_bounds() {
+        let s = RandomSampler::new(0);
+        let d = Distribution::float(-2.0, 3.0);
+        for i in 0..1000 {
+            let v = s.sample_independent(&ctx(&[]), i, "x", &d);
+            assert!((-2.0..=3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn log_uniform_is_log_spaced() {
+        let s = RandomSampler::new(1);
+        let d = Distribution::log_float(1e-6, 1.0);
+        let mut below_1e3 = 0;
+        let n = 4000;
+        for i in 0..n {
+            let internal = s.sample_independent(&ctx(&[]), i, "x", &d);
+            if let ParamValue::Float(v) = d.external(internal) {
+                if v < 1e-3 {
+                    below_1e3 += 1;
+                }
+            }
+        }
+        // log-uniform => half the mass below the geometric midpoint 1e-3
+        let frac = below_1e3 as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn categorical_covers_choices() {
+        let s = RandomSampler::new(2);
+        let d = Distribution::categorical(vec!["a", "b", "c"]);
+        let mut seen = [false; 3];
+        for i in 0..200 {
+            let v = s.sample_independent(&ctx(&[]), i, "c", &d);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn relative_space_empty() {
+        let s = RandomSampler::new(3);
+        assert!(s.infer_relative_search_space(&ctx(&[])).is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = Distribution::float(0.0, 1.0);
+        let a: Vec<f64> = {
+            let s = RandomSampler::new(42);
+            (0..10).map(|i| s.sample_independent(&ctx(&[]), i, "x", &d)).collect()
+        };
+        let b: Vec<f64> = {
+            let s = RandomSampler::new(42);
+            (0..10).map(|i| s.sample_independent(&ctx(&[]), i, "x", &d)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,329 @@
+//! Random-forest EI sampler — the SMAC3 adversary of Fig 9/10.
+//!
+//! SMAC (Hutter et al. 2011) replaces the GP surrogate with a random
+//! forest whose across-tree variance provides the uncertainty estimate
+//! for expected improvement. This implementation: bootstrap-bagged
+//! regression trees with random split dimensions over the normalized
+//! intersection space, EI maximized over random + incumbent-jitter
+//! candidates.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::core::{Distribution, TrialState};
+use crate::sampler::random::RandomSampler;
+use crate::sampler::search_space::{intersection_search_space, trial_coords};
+use crate::sampler::{Sampler, SearchSpace, StudyContext};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{erf, mean};
+
+/// One regression-tree node (index-based arena).
+enum Node {
+    Leaf { value: f64 },
+    Split { dim: usize, threshold: f64, left: usize, right: usize },
+}
+
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        idx: &mut [usize],
+        max_depth: usize,
+        min_leaf: usize,
+        rng: &mut Pcg64,
+    ) -> Tree {
+        let mut tree = Tree { nodes: Vec::new() };
+        tree.build(xs, ys, idx, max_depth, min_leaf, rng);
+        tree
+    }
+
+    fn build(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        idx: &mut [usize],
+        depth: usize,
+        min_leaf: usize,
+        rng: &mut Pcg64,
+    ) -> usize {
+        let node_mean = mean(&idx.iter().map(|&i| ys[i]).collect::<Vec<_>>());
+        if depth == 0 || idx.len() < 2 * min_leaf {
+            self.nodes.push(Node::Leaf { value: node_mean });
+            return self.nodes.len() - 1;
+        }
+        let dim_count = xs[0].len();
+        // try a few random (dim, threshold) splits; keep the best SSE drop
+        let mut best: Option<(f64, usize, f64)> = None;
+        for _ in 0..(dim_count.max(4)) {
+            let d = rng.index(dim_count);
+            let pivot = xs[idx[rng.index(idx.len())]][d];
+            let (mut ln, mut ls, mut rn, mut rs) = (0usize, 0.0f64, 0usize, 0.0f64);
+            for &i in idx.iter() {
+                if xs[i][d] < pivot {
+                    ln += 1;
+                    ls += ys[i];
+                } else {
+                    rn += 1;
+                    rs += ys[i];
+                }
+            }
+            if ln < min_leaf || rn < min_leaf {
+                continue;
+            }
+            // negative within-split SSE proxy: maximize separation
+            let lm = ls / ln as f64;
+            let rm = rs / rn as f64;
+            let gain = (ln as f64) * lm * lm + (rn as f64) * rm * rm;
+            if best.map(|(g, _, _)| gain > g).unwrap_or(true) {
+                best = Some((gain, d, pivot));
+            }
+        }
+        let Some((_, d, pivot)) = best else {
+            self.nodes.push(Node::Leaf { value: node_mean });
+            return self.nodes.len() - 1;
+        };
+        // partition in place
+        let mut left: Vec<usize> = Vec::new();
+        let mut right: Vec<usize> = Vec::new();
+        for &i in idx.iter() {
+            if xs[i][d] < pivot {
+                left.push(i);
+            } else {
+                right.push(i);
+            }
+        }
+        let placeholder = self.nodes.len();
+        self.nodes.push(Node::Leaf { value: node_mean }); // replaced below
+        let l = self.build(xs, ys, &mut left, depth - 1, min_leaf, rng);
+        let r = self.build(xs, ys, &mut right, depth - 1, min_leaf, rng);
+        self.nodes[placeholder] = Node::Split { dim: d, threshold: pivot, left: l, right: r };
+        placeholder
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        // root is node 0 (build pushes it first)
+        let mut cur = 0usize;
+        loop {
+            match &self.nodes[cur] {
+                Node::Leaf { value } => return *value,
+                Node::Split { dim, threshold, left, right } => {
+                    cur = if x[*dim] < *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// SMAC-style random-forest sampler.
+pub struct RfSampler {
+    rng: Mutex<Pcg64>,
+    fallback: RandomSampler,
+    pub n_startup_trials: usize,
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    pub n_candidates: usize,
+    pub max_observations: usize,
+}
+
+impl RfSampler {
+    pub fn new(seed: u64) -> Self {
+        RfSampler {
+            rng: Mutex::new(Pcg64::new(seed)),
+            fallback: RandomSampler::new(seed ^ 0x5fac),
+            n_startup_trials: 5,
+            n_trees: 16,
+            max_depth: 8,
+            min_leaf: 2,
+            n_candidates: 256,
+            max_observations: 300,
+        }
+    }
+
+    fn normal_cdf(z: f64) -> f64 {
+        0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+    }
+
+    fn normal_pdf(z: f64) -> f64 {
+        (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+    }
+
+    fn ei(mu: f64, sigma: f64, best: f64) -> f64 {
+        if sigma <= 1e-12 {
+            return (best - mu).max(0.0);
+        }
+        let z = (best - mu) / sigma;
+        (best - mu) * Self::normal_cdf(z) + sigma * Self::normal_pdf(z)
+    }
+}
+
+impl Sampler for RfSampler {
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
+        let mut space = intersection_search_space(ctx.trials);
+        space.retain(|_, d| !matches!(d, Distribution::Categorical { .. }));
+        if space.is_empty() || ctx.complete().count() < self.n_startup_trials {
+            return SearchSpace::new();
+        }
+        space
+    }
+
+    fn sample_relative(
+        &self,
+        ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        if space.is_empty() {
+            return BTreeMap::new();
+        }
+        let sign = ctx.direction.min_sign();
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for t in ctx
+            .trials
+            .iter()
+            .filter(|t| t.state == TrialState::Complete)
+            .rev()
+            .take(self.max_observations)
+        {
+            if let (Some(v), Some(coords)) = (t.value, trial_coords(t, space)) {
+                let norm: Vec<f64> = coords
+                    .iter()
+                    .zip(space.values())
+                    .map(|(c, d)| {
+                        let (lo, hi) = d.internal_range();
+                        if hi <= lo { 0.5 } else { ((c - lo) / (hi - lo)).clamp(0.0, 1.0) }
+                    })
+                    .collect();
+                xs.push(norm);
+                ys.push(sign * v);
+            }
+        }
+        if xs.len() < 2 {
+            return BTreeMap::new();
+        }
+        let mut rng = self.rng.lock().unwrap();
+        // bootstrap-bagged forest
+        let n = xs.len();
+        let trees: Vec<Tree> = (0..self.n_trees)
+            .map(|_| {
+                let mut idx: Vec<usize> = (0..n).map(|_| rng.index(n)).collect();
+                Tree::fit(&xs, &ys, &mut idx, self.max_depth, self.min_leaf, &mut rng)
+            })
+            .collect();
+        let best_y = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let incumbent = xs[ys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)]
+        .clone();
+        let dim = space.len();
+        let mut best_cand: Option<(f64, Vec<f64>)> = None;
+        for c in 0..self.n_candidates {
+            let cand: Vec<f64> = if c % 4 == 0 {
+                incumbent
+                    .iter()
+                    .map(|v| (v + 0.05 * rng.normal()).clamp(0.0, 1.0))
+                    .collect()
+            } else {
+                (0..dim).map(|_| rng.uniform()).collect()
+            };
+            let preds: Vec<f64> = trees.iter().map(|t| t.predict(&cand)).collect();
+            let mu = mean(&preds);
+            let var = preds.iter().map(|p| (p - mu) * (p - mu)).sum::<f64>()
+                / preds.len() as f64;
+            let ei = Self::ei(mu, var.sqrt().max(1e-9), best_y);
+            if best_cand.as_ref().map(|(b, _)| ei > *b).unwrap_or(true) {
+                best_cand = Some((ei, cand));
+            }
+        }
+        drop(rng);
+        let chosen = best_cand.map(|(_, c)| c).unwrap_or(incumbent);
+        space
+            .iter()
+            .zip(chosen)
+            .map(|((name, dist), u)| {
+                let (lo, hi) = dist.internal_range();
+                (name.clone(), lo + u * (hi - lo))
+            })
+            .collect()
+    }
+
+    fn sample_independent(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        self.fallback.sample_independent(ctx, trial_number, name, dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "rf"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FrozenTrial, ParamValue, StudyDirection};
+    use crate::sampler::testutil::completed_trial;
+
+    #[test]
+    fn tree_fits_step_function() {
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64 / 49.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| if x[0] < 0.5 { 0.0 } else { 1.0 }).collect();
+        let mut rng = Pcg64::new(0);
+        let mut idx: Vec<usize> = (0..50).collect();
+        let tree = Tree::fit(&xs, &ys, &mut idx, 6, 2, &mut rng);
+        assert!(tree.predict(&[0.1]) < 0.3);
+        assert!(tree.predict(&[0.9]) > 0.7);
+    }
+
+    #[test]
+    fn forest_concentrates_near_minimum() {
+        let d = Distribution::float(0.0, 1.0);
+        let trials: Vec<FrozenTrial> = (0..30)
+            .map(|i| {
+                let x = i as f64 / 29.0;
+                completed_trial(
+                    i,
+                    &[("x", d.clone(), ParamValue::Float(x))],
+                    (x - 0.7) * (x - 0.7),
+                )
+            })
+            .collect();
+        let s = RfSampler::new(1);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let space = s.infer_relative_search_space(&ctx);
+        assert_eq!(space.len(), 1);
+        let mut hits = 0;
+        for i in 0..20 {
+            let rel = s.sample_relative(&ctx, 30 + i, &space);
+            if (rel["x"] - 0.7).abs() < 0.2 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 10, "hits={hits}");
+    }
+
+    #[test]
+    fn startup_empty_space() {
+        let s = RfSampler::new(2);
+        let d = Distribution::float(0.0, 1.0);
+        let trials: Vec<FrozenTrial> = (0..2)
+            .map(|i| completed_trial(i, &[("x", d.clone(), ParamValue::Float(0.1))], 1.0))
+            .collect();
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        assert!(s.infer_relative_search_space(&ctx).is_empty());
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,153 @@
+//! Intersection search-space inference (§3.1).
+//!
+//! On a define-by-run (dynamically constructed) space, the concurrence
+//! relations between parameters are not declared up front. Following the
+//! paper, the framework identifies them *from data*: the intersection of
+//! the parameter sets of all completed trials is the subspace in which
+//! every past trial is informative, and is therefore safe for relational
+//! samplers (CMA-ES, GP) to model jointly.
+
+use crate::core::{FrozenTrial, TrialState};
+use crate::sampler::SearchSpace;
+
+/// Compute the intersection search space over completed trials: parameters
+/// present — with identical distributions — in every completed trial.
+/// Single-valued distributions are excluded (nothing to optimize).
+pub fn intersection_search_space(trials: &[FrozenTrial]) -> SearchSpace {
+    let mut completed = trials
+        .iter()
+        .filter(|t| t.state == TrialState::Complete);
+    let mut space: SearchSpace = match completed.next() {
+        None => return SearchSpace::new(),
+        Some(first) => first
+            .params
+            .iter()
+            .map(|(name, (dist, _))| (name.clone(), dist.clone()))
+            .collect(),
+    };
+    for t in completed {
+        space.retain(|name, dist| {
+            t.params
+                .get(name)
+                .map(|(d, _)| d == dist)
+                .unwrap_or(false)
+        });
+        if space.is_empty() {
+            break;
+        }
+    }
+    space.retain(|_, dist| !dist.is_single());
+    space
+}
+
+/// The subset of `space` a trial has values for, as an ordered vector —
+/// the fixed coordinate layout relational samplers use.
+pub fn trial_coords(trial: &FrozenTrial, space: &SearchSpace) -> Option<Vec<f64>> {
+    let mut out = Vec::with_capacity(space.len());
+    for (name, dist) in space {
+        match trial.params.get(name) {
+            Some((d, v)) if d == dist => out.push(*v),
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Distribution, ParamValue};
+    use crate::sampler::testutil::completed_trial;
+
+    #[test]
+    fn empty_for_no_trials() {
+        assert!(intersection_search_space(&[]).is_empty());
+    }
+
+    #[test]
+    fn intersection_drops_branch_only_params() {
+        let d_lr = Distribution::log_float(1e-5, 1e-1);
+        let d_units = Distribution::int(1, 128);
+        let t1 = completed_trial(
+            0,
+            &[
+                ("lr", d_lr.clone(), ParamValue::Float(1e-3)),
+                ("units", d_units.clone(), ParamValue::Int(64)),
+            ],
+            0.5,
+        );
+        let t2 = completed_trial(
+            1,
+            &[("lr", d_lr.clone(), ParamValue::Float(1e-2))],
+            0.4,
+        );
+        let space = intersection_search_space(&[t1, t2]);
+        assert_eq!(space.len(), 1);
+        assert!(space.contains_key("lr"));
+    }
+
+    #[test]
+    fn distribution_mismatch_excludes() {
+        let t1 = completed_trial(
+            0,
+            &[("x", Distribution::float(0.0, 1.0), ParamValue::Float(0.5))],
+            0.1,
+        );
+        let t2 = completed_trial(
+            1,
+            &[("x", Distribution::float(0.0, 2.0), ParamValue::Float(0.5))],
+            0.2,
+        );
+        assert!(intersection_search_space(&[t1, t2]).is_empty());
+    }
+
+    #[test]
+    fn running_trials_ignored() {
+        let t1 = completed_trial(
+            0,
+            &[("x", Distribution::float(0.0, 1.0), ParamValue::Float(0.5))],
+            0.1,
+        );
+        let mut t2 = crate::core::FrozenTrial::new(1, 1);
+        t2.params
+            .insert("y".into(), (Distribution::float(0.0, 1.0), 0.1));
+        // t2 still Running: must not restrict the intersection
+        let space = intersection_search_space(&[t1, t2]);
+        assert_eq!(space.len(), 1);
+        assert!(space.contains_key("x"));
+    }
+
+    #[test]
+    fn single_valued_excluded() {
+        let t = completed_trial(
+            0,
+            &[
+                ("fixed", Distribution::float(2.0, 2.0), ParamValue::Float(2.0)),
+                ("free", Distribution::float(0.0, 1.0), ParamValue::Float(0.3)),
+            ],
+            0.0,
+        );
+        let space = intersection_search_space(&[t]);
+        assert!(!space.contains_key("fixed"));
+        assert!(space.contains_key("free"));
+    }
+
+    #[test]
+    fn trial_coords_ordering_and_missing() {
+        let d = Distribution::float(0.0, 1.0);
+        let t = completed_trial(
+            0,
+            &[
+                ("b", d.clone(), ParamValue::Float(0.2)),
+                ("a", d.clone(), ParamValue::Float(0.1)),
+            ],
+            0.0,
+        );
+        let mut space = SearchSpace::new();
+        space.insert("a".into(), d.clone());
+        space.insert("b".into(), d.clone());
+        assert_eq!(trial_coords(&t, &space), Some(vec![0.1, 0.2]));
+        space.insert("c".into(), d.clone());
+        assert_eq!(trial_coords(&t, &space), None);
+    }
+}

@@ -1,0 +1,390 @@
+//! Tree-structured Parzen Estimator sampler (Bergstra et al. 2011) — the
+//! paper's default searching strategy and its Hyperopt baseline.
+//!
+//! For each parameter, completed trials are split by objective into a
+//! "below" (best γ-quantile) and "above" set; a Parzen estimator is fitted
+//! to each; candidates are drawn from the below-model and ranked by the
+//! acquisition log l(x) − log g(x).
+//!
+//! The candidate-scoring hot loop has two interchangeable backends:
+//! * [`TpeBackend::Native`] — the in-process scorer (`ParzenEstimator::logpdf`);
+//! * [`TpeBackend::External`] — any [`CandidateScorer`], in practice the
+//!   AOT-compiled Pallas kernel executed through PJRT
+//!   (`runtime::TpeKernelScorer`), demonstrating the L3→L1 path on the
+//!   framework's own hot loop.
+//! Both backends implement the same formulas (ref.py is the ground truth);
+//! the perf_micro bench measures the crossover.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Distribution, TrialState};
+use crate::sampler::parzen::ParzenEstimator;
+use crate::sampler::random::RandomSampler;
+use crate::sampler::{Sampler, SearchSpace, StudyContext};
+use crate::util::rng::Pcg64;
+
+/// Scores TPE candidates against a below/above mixture pair. `low/high`
+/// are the internal-space interval; returns log l − log g per candidate.
+pub trait CandidateScorer: Send + Sync {
+    fn score(
+        &self,
+        cand: &[f64],
+        below: &ParzenEstimator,
+        above: &ParzenEstimator,
+    ) -> Vec<f64>;
+
+    /// Max mixture components the backend supports (kernel padding size).
+    fn max_components(&self) -> usize;
+
+    /// Max candidates per call.
+    fn max_candidates(&self) -> usize;
+}
+
+/// Scoring backend selector.
+pub enum TpeBackend {
+    /// Pure-Rust scoring.
+    Native,
+    /// External scorer (PJRT-compiled Pallas kernel).
+    External(Arc<dyn CandidateScorer>),
+}
+
+/// TPE configuration (defaults mirror Optuna v0.x).
+pub struct TpeConfig {
+    /// Random sampling for the first N trials.
+    pub n_startup_trials: usize,
+    /// Candidates drawn per suggest call.
+    pub n_ei_candidates: usize,
+    /// Cap on mixture components (minus prior); observations beyond the
+    /// cap are rank-subsampled so native and kernel backends stay
+    /// equivalent.
+    pub max_observations: usize,
+}
+
+impl Default for TpeConfig {
+    fn default() -> Self {
+        TpeConfig {
+            n_startup_trials: 10,
+            n_ei_candidates: 24,
+            max_observations: 63,
+        }
+    }
+}
+
+/// The sampler.
+pub struct TpeSampler {
+    rng: Mutex<Pcg64>,
+    config: TpeConfig,
+    backend: TpeBackend,
+}
+
+impl TpeSampler {
+    pub fn new(seed: u64) -> Self {
+        Self::with_config(seed, TpeConfig::default(), TpeBackend::Native)
+    }
+
+    pub fn with_backend(seed: u64, backend: TpeBackend) -> Self {
+        Self::with_config(seed, TpeConfig::default(), backend)
+    }
+
+    pub fn with_config(seed: u64, config: TpeConfig, backend: TpeBackend) -> Self {
+        TpeSampler { rng: Mutex::new(Pcg64::new(seed)), config, backend }
+    }
+
+    /// γ(n): number of trials in the "below" (good) split.
+    fn gamma(n: usize) -> usize {
+        ((0.25 * (n as f64).sqrt()).ceil() as usize).clamp(1, 25).min(n)
+    }
+
+    /// Observations of `name` among finished trials, with min-sign losses.
+    /// Pruned trials participate with their last recorded value (mirrors
+    /// Optuna: the pruning experiments rely on TPE learning from the
+    /// hundreds of early-stopped trials, not just the few completed ones).
+    fn observations(
+        ctx: &StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+    ) -> Vec<(f64, f64)> {
+        let sign = ctx.direction.min_sign();
+        ctx.trials
+            .iter()
+            .filter(|t| matches!(t.state, TrialState::Complete | TrialState::Pruned))
+            .filter_map(|t| {
+                let (d, v) = t.params.get(name)?;
+                if d != dist {
+                    return None;
+                }
+                Some((*v, sign * t.value_or_last_intermediate()?))
+            })
+            .collect()
+    }
+
+    /// Split observations into (below values, above values) by loss.
+    fn split(mut obs: Vec<(f64, f64)>, max_each: usize) -> (Vec<f64>, Vec<f64>) {
+        obs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let n_below = Self::gamma(obs.len());
+        let below: Vec<f64> = obs[..n_below].iter().map(|(v, _)| *v).collect();
+        let above: Vec<f64> = obs[n_below..].iter().map(|(v, _)| *v).collect();
+        (subsample(below, max_each), subsample(above, max_each))
+    }
+
+    fn score(
+        &self,
+        cand: &[f64],
+        below: &ParzenEstimator,
+        above: &ParzenEstimator,
+    ) -> Vec<f64> {
+        match &self.backend {
+            TpeBackend::Native => cand
+                .iter()
+                .map(|&x| below.logpdf(x) - above.logpdf(x))
+                .collect(),
+            TpeBackend::External(scorer) => scorer.score(cand, below, above),
+        }
+    }
+
+    /// Continuous/int suggestion in internal space.
+    fn suggest_numeric(
+        &self,
+        ctx: &StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        let obs = Self::observations(ctx, name, dist);
+        let mut rng = self.rng.lock().unwrap();
+        if obs.len() < self.config.n_startup_trials {
+            return RandomSampler::draw(&mut rng, dist);
+        }
+        let max_obs = match &self.backend {
+            TpeBackend::External(s) => self.config.max_observations.min(s.max_components() - 1),
+            TpeBackend::Native => self.config.max_observations,
+        };
+        let (below_obs, above_obs) = Self::split(obs, max_obs);
+        let (lo, hi) = dist.internal_range();
+        let below = ParzenEstimator::fit(&below_obs, lo, hi);
+        let above = ParzenEstimator::fit(&above_obs, lo, hi);
+        let n_cand = match &self.backend {
+            TpeBackend::External(s) => self.config.n_ei_candidates.min(s.max_candidates()),
+            TpeBackend::Native => self.config.n_ei_candidates,
+        };
+        let cand: Vec<f64> = (0..n_cand).map(|_| below.sample(&mut rng)).collect();
+        drop(rng);
+        let scores = self.score(&cand, &below, &above);
+        let mut best = 0usize;
+        for i in 1..cand.len() {
+            if scores[i] > scores[best] {
+                best = i;
+            }
+        }
+        cand[best]
+    }
+
+    /// Categorical suggestion: weighted-count ratio over categories.
+    fn suggest_categorical(
+        &self,
+        ctx: &StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+        n_categories: usize,
+    ) -> f64 {
+        let obs = Self::observations(ctx, name, dist);
+        let mut rng = self.rng.lock().unwrap();
+        if obs.len() < self.config.n_startup_trials {
+            return RandomSampler::draw(&mut rng, dist);
+        }
+        drop(rng);
+        let (below, above) = Self::split(obs, usize::MAX);
+        let weight = |vals: &[f64]| -> Vec<f64> {
+            // Laplace-smoothed category frequencies
+            let mut w = vec![1.0f64; n_categories];
+            for &v in vals {
+                let idx = (v.round() as i64).clamp(0, n_categories as i64 - 1) as usize;
+                w[idx] += 1.0;
+            }
+            let total: f64 = w.iter().sum();
+            w.iter().map(|x| x / total).collect()
+        };
+        let wb = weight(&below);
+        let wa = weight(&above);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for c in 0..n_categories {
+            let s = wb[c].ln() - wa[c].ln();
+            if s > best_score {
+                best_score = s;
+                best = c;
+            }
+        }
+        best as f64
+    }
+}
+
+/// Deterministic rank-stratified subsample to at most `max` items.
+fn subsample(vals: Vec<f64>, max: usize) -> Vec<f64> {
+    let n = vals.len();
+    if n <= max {
+        return vals;
+    }
+    (0..max)
+        .map(|i| vals[i * n / max])
+        .collect()
+}
+
+impl Sampler for TpeSampler {
+    fn infer_relative_search_space(&self, _ctx: &StudyContext<'_>) -> SearchSpace {
+        SearchSpace::new() // TPE is a purely independent sampler
+    }
+
+    fn sample_relative(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        BTreeMap::new()
+    }
+
+    fn sample_independent(
+        &self,
+        ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        match dist {
+            Distribution::Categorical { choices } => {
+                self.suggest_categorical(ctx, name, dist, choices.len())
+            }
+            _ => self.suggest_numeric(ctx, name, dist),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.backend {
+            TpeBackend::Native => "tpe",
+            TpeBackend::External(_) => "tpe-pjrt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FrozenTrial, ParamValue, StudyDirection};
+    use crate::sampler::testutil::{bowl_history, completed_trial};
+
+    fn ctx<'a>(trials: &'a [FrozenTrial]) -> StudyContext<'a> {
+        StudyContext { direction: StudyDirection::Minimize, trials }
+    }
+
+    #[test]
+    fn gamma_schedule() {
+        assert_eq!(TpeSampler::gamma(1), 1);
+        assert_eq!(TpeSampler::gamma(16), 1);
+        assert_eq!(TpeSampler::gamma(64), 2);
+        assert_eq!(TpeSampler::gamma(100), 3);
+        assert_eq!(TpeSampler::gamma(100_000), 25); // capped
+    }
+
+    #[test]
+    fn startup_phase_is_random_but_bounded() {
+        let s = TpeSampler::new(0);
+        let d = Distribution::float(-1.0, 1.0);
+        let trials = bowl_history(3, 7); // < n_startup
+        for i in 0..50 {
+            let v = s.sample_independent(&ctx(&trials), i, "x", &d);
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn concentrates_near_optimum_on_bowl() {
+        // With 60 observed trials of loss = x², TPE should suggest near 0
+        // far more often than uniform.
+        let trials = bowl_history(60, 3);
+        let s = TpeSampler::new(1);
+        let d = Distribution::float(-5.0, 5.0);
+        let mut near = 0;
+        let n = 100;
+        for i in 0..n {
+            let v = s.sample_independent(&ctx(&trials), i, "x", &d);
+            if v.abs() < 1.5 {
+                near += 1;
+            }
+        }
+        // uniform would give ~30%; require clear concentration
+        assert!(near > 60, "near={near}/{n}");
+    }
+
+    #[test]
+    fn maximize_direction_flips_split() {
+        // loss = -(x²) maximized at ±5; TPE maximizing −x² must AVOID 0.
+        let mut trials = Vec::new();
+        let d = Distribution::float(-5.0, 5.0);
+        let mut rng = Pcg64::new(5);
+        for i in 0..60 {
+            let x = rng.uniform_range(-5.0, 5.0);
+            trials.push(completed_trial(
+                i,
+                &[("x", d.clone(), ParamValue::Float(x))],
+                x * x, // value; with Maximize, best are large |x|
+            ));
+        }
+        let s = TpeSampler::new(2);
+        let ctx = StudyContext { direction: StudyDirection::Maximize, trials: &trials };
+        let mut far = 0;
+        for i in 0..100 {
+            let v = s.sample_independent(&ctx, i, "x", &d);
+            if v.abs() > 3.0 {
+                far += 1;
+            }
+        }
+        assert!(far > 55, "far={far}");
+    }
+
+    #[test]
+    fn categorical_prefers_good_branch() {
+        let d = Distribution::categorical(vec!["good", "bad"]);
+        let mut trials = Vec::new();
+        for i in 0..40 {
+            let (cat, loss) = if i % 2 == 0 { ("good", 0.1) } else { ("bad", 1.0) };
+            trials.push(completed_trial(
+                i,
+                &[("c", d.clone(), ParamValue::Cat(cat.into()))],
+                loss + (i as f64) * 1e-4,
+            ));
+        }
+        let s = TpeSampler::new(3);
+        let v = s.sample_independent(&ctx(&trials), 40, "c", &d);
+        assert_eq!(v, 0.0, "should pick 'good'");
+    }
+
+    #[test]
+    fn subsample_preserves_order_and_caps() {
+        let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let out = subsample(vals.clone(), 10);
+        assert_eq!(out.len(), 10);
+        for w in out.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(subsample(vals.clone(), 200), vals);
+    }
+
+    #[test]
+    fn mixed_distribution_history_filtered() {
+        // Same name, different distribution must be ignored, not crash.
+        let d1 = Distribution::float(0.0, 1.0);
+        let d2 = Distribution::float(0.0, 2.0);
+        let mut trials = bowl_history(20, 11);
+        trials.push(completed_trial(
+            20,
+            &[("x", d2, ParamValue::Float(1.7))],
+            0.01,
+        ));
+        let s = TpeSampler::new(4);
+        let v = s.sample_independent(&ctx(&trials), 21, "x", &d1);
+        assert!((0.0..=1.0).contains(&v) || (-5.0..=5.0).contains(&v));
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,145 @@
+//! TPE+CMA-ES mixture — the headline sampler of §5.1 / Fig 9.
+//!
+//! "For TPE+CMA-ES, we used TPE for the first 40 steps and used CMA-ES
+//! for the rest." TPE's independent sampling handles the early
+//! exploration and any parameter outside the relational subspace;
+//! after the switch point, CMA-ES jointly samples the intersection
+//! search space.
+
+use std::collections::BTreeMap;
+
+use crate::core::{Distribution, TrialState};
+use crate::sampler::{CmaEsSampler, Sampler, SearchSpace, StudyContext, TpeSampler};
+
+/// The mixture sampler.
+pub struct TpeCmaEsSampler {
+    tpe: TpeSampler,
+    cmaes: CmaEsSampler,
+    /// Completed-trial count at which CMA-ES takes over (paper: 40).
+    pub n_switch: usize,
+}
+
+impl TpeCmaEsSampler {
+    pub fn new(seed: u64) -> Self {
+        Self::with_switch(seed, 40)
+    }
+
+    pub fn with_switch(seed: u64, n_switch: usize) -> Self {
+        TpeCmaEsSampler {
+            tpe: TpeSampler::new(seed),
+            cmaes: CmaEsSampler::new(seed ^ 0xc0a),
+            n_switch,
+        }
+    }
+
+    fn n_complete(ctx: &StudyContext<'_>) -> usize {
+        ctx.trials
+            .iter()
+            .filter(|t| t.state == TrialState::Complete)
+            .count()
+    }
+}
+
+impl Sampler for TpeCmaEsSampler {
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
+        if Self::n_complete(ctx) < self.n_switch {
+            SearchSpace::new() // TPE phase: independent sampling only
+        } else {
+            self.cmaes.infer_relative_search_space(ctx)
+        }
+    }
+
+    fn sample_relative(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        if space.is_empty() {
+            return BTreeMap::new();
+        }
+        self.cmaes.sample_relative(ctx, trial_number, space)
+    }
+
+    fn sample_independent(
+        &self,
+        ctx: &StudyContext<'_>,
+        trial_number: u64,
+        name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        // TPE covers everything the relational phase doesn't.
+        self.tpe.sample_independent(ctx, trial_number, name, dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "tpe+cmaes"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{FrozenTrial, ParamValue, StudyDirection};
+    use crate::sampler::testutil::completed_trial;
+
+    fn history(n: usize) -> Vec<FrozenTrial> {
+        let d = Distribution::float(-5.0, 5.0);
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        (0..n)
+            .map(|i| {
+                let x = rng.uniform_range(-5.0, 5.0);
+                completed_trial(
+                    i as u64,
+                    &[("x", d.clone(), ParamValue::Float(x))],
+                    x * x,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tpe_phase_has_no_relative_space() {
+        let s = TpeCmaEsSampler::new(0);
+        let trials = history(39);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        assert!(s.infer_relative_search_space(&ctx).is_empty());
+    }
+
+    #[test]
+    fn cmaes_phase_activates_after_switch() {
+        let s = TpeCmaEsSampler::new(0);
+        let trials = history(45);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let space = s.infer_relative_search_space(&ctx);
+        assert_eq!(space.len(), 1);
+        let rel = s.sample_relative(&ctx, 45, &space);
+        assert!(rel.contains_key("x"));
+        assert!((-5.0..=5.0).contains(&rel["x"]));
+    }
+
+    #[test]
+    fn custom_switch_point() {
+        let s = TpeCmaEsSampler::with_switch(0, 5);
+        let trials = history(6);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        assert!(!s.infer_relative_search_space(&ctx).is_empty());
+    }
+
+    #[test]
+    fn independent_falls_back_to_tpe() {
+        let s = TpeCmaEsSampler::new(1);
+        let d = Distribution::float(-5.0, 5.0);
+        let trials = history(60);
+        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        // concentration check (TPE behaviour)
+        let mut near = 0;
+        for i in 0..60 {
+            let v = s.sample_independent(&ctx, 60 + i, "x", &d);
+            if v.abs() < 1.5 {
+                near += 1;
+            }
+        }
+        assert!(near > 35, "near={near}");
+    }
+}

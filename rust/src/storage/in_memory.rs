@@ -1,0 +1,296 @@
+//! In-memory storage — the zero-setup default backend (§4: "when there is
+//! no specification given, Optuna automatically uses its built-in
+//! in-memory data-structure as the storage back-end").
+//!
+//! A single `Mutex` guards the whole store: every operation is a few map
+//! lookups, so contention is negligible next to objective evaluation, and
+//! the simple locking keeps the backend obviously correct. (The perf pass
+//! measured the trade-off — see EXPERIMENTS.md §Perf.)
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::storage::Storage;
+
+struct StudyRec {
+    name: String,
+    direction: StudyDirection,
+    /// trial ids in creation order
+    trials: Vec<u64>,
+}
+
+struct Inner {
+    studies: Vec<StudyRec>,
+    by_name: HashMap<String, u64>,
+    trials: Vec<FrozenTrial>,
+    /// study id of each trial (parallel to `trials`)
+    trial_study: Vec<u64>,
+}
+
+/// Process-local storage backend.
+pub struct InMemoryStorage {
+    inner: Mutex<Inner>,
+}
+
+impl InMemoryStorage {
+    pub fn new() -> Self {
+        InMemoryStorage {
+            inner: Mutex::new(Inner {
+                studies: Vec::new(),
+                by_name: HashMap::new(),
+                trials: Vec::new(),
+                trial_study: Vec::new(),
+            }),
+        }
+    }
+}
+
+impl Default for InMemoryStorage {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bad_trial(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown trial id {id}"))
+}
+
+fn bad_study(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown study id {id}"))
+}
+
+impl Storage for InMemoryStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.by_name.contains_key(name) {
+            return Err(OptunaError::Storage(format!("study '{name}' already exists")));
+        }
+        let id = g.studies.len() as u64;
+        g.studies.push(StudyRec {
+            name: name.to_string(),
+            direction,
+            trials: Vec::new(),
+        });
+        g.by_name.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        Ok(self.inner.lock().unwrap().by_name.get(name).copied())
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        g.studies
+            .get(study_id as usize)
+            .map(|s| s.direction)
+            .ok_or_else(|| bad_study(study_id))
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        Ok(self
+            .inner
+            .lock()
+            .unwrap()
+            .studies
+            .iter()
+            .map(|s| s.name.clone())
+            .collect())
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        if study_id as usize >= g.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        let trial_id = g.trials.len() as u64;
+        let number = g.studies[study_id as usize].trials.len() as u64;
+        g.trials.push(FrozenTrial::new(trial_id, number));
+        g.trial_study.push(study_id);
+        g.studies[study_id as usize].trials.push(trial_id);
+        Ok((trial_id, number))
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        t.params.insert(name.to_string(), (dist.clone(), internal));
+        Ok(())
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        t.intermediate.insert(step, value);
+        Ok(())
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        t.user_attrs.insert(key.to_string(), value.to_string());
+        Ok(())
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        if !state.is_finished() {
+            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        }
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        if t.state.is_finished() {
+            return Err(OptunaError::Storage(format!(
+                "trial {trial_id} already finished as {}",
+                t.state.as_str()
+            )));
+        }
+        t.state = state;
+        if value.is_some() {
+            t.value = value;
+        }
+        Ok(())
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        g.trials
+            .get(trial_id as usize)
+            .cloned()
+            .ok_or_else(|| bad_trial(trial_id))
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        let s = g.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
+        Ok(s.trials
+            .iter()
+            .map(|&tid| g.trials[tid as usize].clone())
+            .collect())
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        g.studies
+            .get(study_id as usize)
+            .map(|s| s.trials.len())
+            .ok_or_else(|| bad_study(study_id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::storage::conformance;
+    use crate::util::quickcheck::check;
+    use std::sync::Arc;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run_all(&InMemoryStorage::new());
+    }
+
+    #[test]
+    fn double_finish_rejected() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("x", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        s.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        assert!(s.finish_trial(tid, TrialState::Failed, None).is_err());
+    }
+
+    #[test]
+    fn concurrent_trial_creation_unique_numbers() {
+        let s = Arc::new(InMemoryStorage::new());
+        let sid = s.create_study("par", StudyDirection::Minimize).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s2 = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                (0..50).map(|_| s2.create_trial(sid).unwrap().1).collect::<Vec<_>>()
+            }));
+        }
+        let mut numbers: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        numbers.sort_unstable();
+        assert_eq!(numbers, (0..400).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn property_trial_state_machine() {
+        // Property: any interleaving of valid ops keeps the store coherent:
+        // numbers dense per study, finished trials immutable-by-rejection.
+        check("in_memory_state_machine", 30, |rng| {
+            let s = InMemoryStorage::new();
+            let sid = s
+                .create_study("p", StudyDirection::Minimize)
+                .map_err(|e| e.to_string())?;
+            let mut live: Vec<u64> = Vec::new();
+            let mut finished = 0usize;
+            for _ in 0..rng.int_range(5, 60) {
+                match rng.index(4) {
+                    0 => {
+                        let (tid, _) = s.create_trial(sid).map_err(|e| e.to_string())?;
+                        live.push(tid);
+                    }
+                    1 if !live.is_empty() => {
+                        let tid = live[rng.index(live.len())];
+                        s.set_trial_intermediate(tid, rng.int_range(0, 10) as u64, rng.uniform())
+                            .map_err(|e| e.to_string())?;
+                    }
+                    2 if !live.is_empty() => {
+                        let tid = live.swap_remove(rng.index(live.len()));
+                        s.finish_trial(tid, TrialState::Complete, Some(rng.uniform()))
+                            .map_err(|e| e.to_string())?;
+                        finished += 1;
+                    }
+                    _ => {}
+                }
+            }
+            let all = s.get_all_trials(sid).map_err(|e| e.to_string())?;
+            // numbers dense & ordered
+            for (i, t) in all.iter().enumerate() {
+                prop_assert!(t.number == i as u64, "number {} at idx {}", t.number, i);
+            }
+            let n_finished = all.iter().filter(|t| t.state.is_finished()).count();
+            prop_assert!(n_finished == finished, "finished {n_finished} != {finished}");
+            Ok(())
+        });
+    }
+}

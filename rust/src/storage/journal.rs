@@ -1,0 +1,595 @@
+//! Journal storage: append-only JSONL + advisory `flock`.
+//!
+//! The multi-process backend behind the paper's Fig 7 workflow — run the
+//! same binary N times with the same journal path and the workers share
+//! one study with no coordinator process. This is the architectural
+//! equivalent of the paper's SQLite backend: a single file, crash-safe by
+//! construction (the journal is replayed from the top; a torn final line
+//! is ignored), and safe across processes on one host via `flock(2)`.
+//!
+//! Entry grammar (one JSON object per line):
+//! ```text
+//! {"op":"create_study","name":N,"direction":D}
+//! {"op":"create_trial","study":S}
+//! {"op":"param","trial":T,"name":N,"dist":{..},"value":V}
+//! {"op":"intermediate","trial":T,"step":K,"value":V}
+//! {"op":"attr","trial":T,"key":K,"value":V}
+//! {"op":"finish","trial":T,"state":ST,"value":V|null}
+//! ```
+//! Ids are implicit: the i-th `create_study` line defines study id i, the
+//! i-th `create_trial` line defines trial id i — so every process derives
+//! identical ids from the identical byte stream.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::storage::Storage;
+use crate::util::json::Json;
+
+struct StudyRec {
+    name: String,
+    direction: StudyDirection,
+    trials: Vec<u64>,
+}
+
+#[derive(Default)]
+struct Replayed {
+    studies: Vec<StudyRec>,
+    by_name: HashMap<String, u64>,
+    trials: Vec<FrozenTrial>,
+    trial_study: Vec<u64>,
+    /// Byte offset of the first unapplied journal byte.
+    offset: u64,
+}
+
+/// File-backed multi-process storage.
+pub struct JournalStorage {
+    path: PathBuf,
+    state: Mutex<Replayed>,
+    /// Whether to fsync after each append (durability vs throughput; the
+    /// perf ablation in benches/perf_micro.rs measures both).
+    pub fsync: bool,
+}
+
+struct FileLock {
+    file: File,
+}
+
+impl FileLock {
+    fn acquire(file: File, exclusive: bool) -> Result<FileLock, OptunaError> {
+        let op = if exclusive { libc::LOCK_EX } else { libc::LOCK_SH };
+        let rc = unsafe { libc::flock(file.as_raw_fd(), op) };
+        if rc != 0 {
+            return Err(OptunaError::Storage(format!(
+                "flock failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(FileLock { file })
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        unsafe { libc::flock(self.file.as_raw_fd(), libc::LOCK_UN) };
+    }
+}
+
+impl JournalStorage {
+    /// Open (creating if absent) a journal at `path`.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self, OptunaError> {
+        let path = path.as_ref().to_path_buf();
+        OpenOptions::new()
+            .create(true)
+            .append(true)
+            .read(true)
+            .open(&path)
+            .map_err(|e| OptunaError::Storage(format!("open {path:?}: {e}")))?;
+        Ok(JournalStorage {
+            path,
+            state: Mutex::new(Replayed::default()),
+            fsync: false,
+        })
+    }
+
+    fn io_err(&self, what: &str, e: std::io::Error) -> OptunaError {
+        OptunaError::Storage(format!("{what} {:?}: {e}", self.path))
+    }
+
+    fn open_file(&self) -> Result<File, OptunaError> {
+        OpenOptions::new()
+            .read(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| self.io_err("open", e))
+    }
+
+    /// Read and apply journal bytes past the cached offset. Caller must
+    /// hold at least a shared flock for cross-process consistency.
+    fn refresh_locked(&self, state: &mut Replayed, file: &mut File) -> Result<(), OptunaError> {
+        let len = file
+            .seek(SeekFrom::End(0))
+            .map_err(|e| self.io_err("seek", e))?;
+        if len <= state.offset {
+            return Ok(());
+        }
+        file.seek(SeekFrom::Start(state.offset))
+            .map_err(|e| self.io_err("seek", e))?;
+        let mut buf = Vec::with_capacity((len - state.offset) as usize);
+        file.read_to_end(&mut buf).map_err(|e| self.io_err("read", e))?;
+        let mut consumed = 0usize;
+        let mut start = 0usize;
+        while let Some(nl) = buf[start..].iter().position(|&b| b == b'\n') {
+            let line = &buf[start..start + nl];
+            if !line.is_empty() {
+                let text = std::str::from_utf8(line)
+                    .map_err(|_| OptunaError::Storage("journal not utf-8".into()))?;
+                let entry = Json::parse(text)
+                    .map_err(|e| OptunaError::Storage(format!("corrupt journal line: {e}")))?;
+                apply(state, &entry)?;
+            }
+            start += nl + 1;
+            consumed = start;
+        }
+        // Trailing bytes without '\n' are a torn write: leave them for the
+        // writer that owns them (they are re-read next refresh).
+        state.offset += consumed as u64;
+        Ok(())
+    }
+
+    /// Run `f` with a refreshed state under a shared (read) lock.
+    fn with_read<T>(
+        &self,
+        f: impl FnOnce(&Replayed) -> Result<T, OptunaError>,
+    ) -> Result<T, OptunaError> {
+        let mut state = self.state.lock().unwrap();
+        let lock = FileLock::acquire(self.open_file()?, false)?;
+        let mut file = lock.file.try_clone().map_err(|e| self.io_err("clone", e))?;
+        self.refresh_locked(&mut state, &mut file)?;
+        drop(lock);
+        f(&state)
+    }
+
+    /// Refresh, validate, append one entry, apply it — under an exclusive
+    /// lock so id assignment is race-free across processes.
+    fn append(
+        &self,
+        validate: impl FnOnce(&Replayed) -> Result<(), OptunaError>,
+        entry: Json,
+    ) -> Result<u64, OptunaError> {
+        let mut state = self.state.lock().unwrap();
+        let lock = FileLock::acquire(self.open_file()?, true)?;
+        let mut file = lock.file.try_clone().map_err(|e| self.io_err("clone", e))?;
+        self.refresh_locked(&mut state, &mut file)?;
+        validate(&state)?;
+        let mut line = entry.to_string();
+        line.push('\n');
+        file.seek(SeekFrom::End(0)).map_err(|e| self.io_err("seek", e))?;
+        file.write_all(line.as_bytes())
+            .map_err(|e| self.io_err("write", e))?;
+        if self.fsync {
+            file.sync_data().map_err(|e| self.io_err("fsync", e))?;
+        }
+        apply(&mut state, &entry)?;
+        state.offset += line.len() as u64;
+        // Return the id that a create op just assigned (callers that don't
+        // create ignore this).
+        Ok(state.trials.len().max(1) as u64 - 1)
+    }
+}
+
+fn bad_trial(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown trial id {id}"))
+}
+
+fn bad_study(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown study id {id}"))
+}
+
+/// Apply one journal entry to the replayed state.
+fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
+    let op = entry
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or_else(|| OptunaError::Storage("journal entry missing op".into()))?;
+    let get_trial = |state: &mut Replayed, entry: &Json| -> Result<usize, OptunaError> {
+        let tid = entry
+            .get("trial")
+            .and_then(|t| t.as_i64())
+            .ok_or_else(|| OptunaError::Storage("entry missing trial".into()))? as usize;
+        if tid >= state.trials.len() {
+            return Err(bad_trial(tid as u64));
+        }
+        Ok(tid)
+    };
+    match op {
+        "create_study" => {
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| OptunaError::Storage("create_study missing name".into()))?
+                .to_string();
+            let direction = StudyDirection::from_str(
+                entry.get("direction").and_then(|d| d.as_str()).unwrap_or(""),
+            )?;
+            let id = state.studies.len() as u64;
+            state.by_name.insert(name.clone(), id);
+            state.studies.push(StudyRec { name, direction, trials: Vec::new() });
+        }
+        "create_trial" => {
+            let sid = entry
+                .get("study")
+                .and_then(|s| s.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trial missing study".into()))?
+                as usize;
+            if sid >= state.studies.len() {
+                return Err(bad_study(sid as u64));
+            }
+            let tid = state.trials.len() as u64;
+            let number = state.studies[sid].trials.len() as u64;
+            state.trials.push(FrozenTrial::new(tid, number));
+            state.trial_study.push(sid as u64);
+            state.studies[sid].trials.push(tid);
+        }
+        "param" => {
+            let tid = get_trial(state, entry)?;
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| OptunaError::Storage("param missing name".into()))?;
+            let dist = Distribution::from_json(
+                entry
+                    .get("dist")
+                    .ok_or_else(|| OptunaError::Storage("param missing dist".into()))?,
+            )?;
+            let value = entry
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| OptunaError::Storage("param missing value".into()))?;
+            state.trials[tid].params.insert(name.to_string(), (dist, value));
+        }
+        "intermediate" => {
+            let tid = get_trial(state, entry)?;
+            let step = entry.get("step").and_then(|s| s.as_i64()).unwrap_or(0) as u64;
+            let value = entry
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| OptunaError::Storage("intermediate missing value".into()))?;
+            state.trials[tid].intermediate.insert(step, value);
+        }
+        "attr" => {
+            let tid = get_trial(state, entry)?;
+            let key = entry.get("key").and_then(|k| k.as_str()).unwrap_or("");
+            let value = entry.get("value").and_then(|v| v.as_str()).unwrap_or("");
+            state.trials[tid]
+                .user_attrs
+                .insert(key.to_string(), value.to_string());
+        }
+        "finish" => {
+            let tid = get_trial(state, entry)?;
+            let st = TrialState::from_str(
+                entry.get("state").and_then(|s| s.as_str()).unwrap_or(""),
+            )?;
+            state.trials[tid].state = st;
+            if let Some(v) = entry.get("value").and_then(|v| v.as_f64()) {
+                state.trials[tid].value = Some(v);
+            }
+        }
+        other => {
+            return Err(OptunaError::Storage(format!("unknown journal op '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+impl Storage for JournalStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        let name_owned = name.to_string();
+        self.append(
+            move |state| {
+                if state.by_name.contains_key(&name_owned) {
+                    Err(OptunaError::Storage(format!("study '{name_owned}' already exists")))
+                } else {
+                    Ok(())
+                }
+            },
+            Json::obj(vec![
+                ("op", Json::Str("create_study".into())),
+                ("name", Json::Str(name.into())),
+                ("direction", Json::Str(direction.as_str().into())),
+            ]),
+        )?;
+        // id = index of the study we just appended
+        self.with_read(|s| {
+            s.by_name
+                .get(name)
+                .copied()
+                .ok_or_else(|| OptunaError::Storage("study vanished".into()))
+        })
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        self.with_read(|s| Ok(s.by_name.get(name).copied()))
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        self.with_read(|s| {
+            s.studies
+                .get(study_id as usize)
+                .map(|st| st.direction)
+                .ok_or_else(|| bad_study(study_id))
+        })
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        self.with_read(|s| Ok(s.studies.iter().map(|st| st.name.clone()).collect()))
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        let mut state = self.state.lock().unwrap();
+        let lock = FileLock::acquire(self.open_file()?, true)?;
+        let mut file = lock.file.try_clone().map_err(|e| self.io_err("clone", e))?;
+        self.refresh_locked(&mut state, &mut file)?;
+        if study_id as usize >= state.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        let entry = Json::obj(vec![
+            ("op", Json::Str("create_trial".into())),
+            ("study", Json::Num(study_id as f64)),
+        ]);
+        let mut line = entry.to_string();
+        line.push('\n');
+        file.seek(SeekFrom::End(0)).map_err(|e| self.io_err("seek", e))?;
+        file.write_all(line.as_bytes())
+            .map_err(|e| self.io_err("write", e))?;
+        if self.fsync {
+            file.sync_data().map_err(|e| self.io_err("fsync", e))?;
+        }
+        apply(&mut state, &entry)?;
+        state.offset += line.len() as u64;
+        let tid = state.trials.len() as u64 - 1;
+        let number = state.trials[tid as usize].number;
+        Ok((tid, number))
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        self.append(
+            move |state| {
+                if trial_id as usize >= state.trials.len() {
+                    Err(bad_trial(trial_id))
+                } else {
+                    Ok(())
+                }
+            },
+            Json::obj(vec![
+                ("op", Json::Str("param".into())),
+                ("trial", Json::Num(trial_id as f64)),
+                ("name", Json::Str(name.into())),
+                ("dist", dist.to_json()),
+                ("value", Json::Num(internal)),
+            ]),
+        )
+        .map(|_| ())
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        self.append(
+            move |state| {
+                if trial_id as usize >= state.trials.len() {
+                    Err(bad_trial(trial_id))
+                } else {
+                    Ok(())
+                }
+            },
+            Json::obj(vec![
+                ("op", Json::Str("intermediate".into())),
+                ("trial", Json::Num(trial_id as f64)),
+                ("step", Json::Num(step as f64)),
+                ("value", Json::Num(value)),
+            ]),
+        )
+        .map(|_| ())
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        self.append(
+            move |state| {
+                if trial_id as usize >= state.trials.len() {
+                    Err(bad_trial(trial_id))
+                } else {
+                    Ok(())
+                }
+            },
+            Json::obj(vec![
+                ("op", Json::Str("attr".into())),
+                ("trial", Json::Num(trial_id as f64)),
+                ("key", Json::Str(key.into())),
+                ("value", Json::Str(value.into())),
+            ]),
+        )
+        .map(|_| ())
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        if !state.is_finished() {
+            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        }
+        self.append(
+            move |replayed| match replayed.trials.get(trial_id as usize) {
+                None => Err(bad_trial(trial_id)),
+                Some(t) if t.state.is_finished() => Err(OptunaError::Storage(format!(
+                    "trial {trial_id} already finished as {}",
+                    t.state.as_str()
+                ))),
+                Some(_) => Ok(()),
+            },
+            Json::obj(vec![
+                ("op", Json::Str("finish".into())),
+                ("trial", Json::Num(trial_id as f64)),
+                ("state", Json::Str(state.as_str().into())),
+                ("value", value.map(Json::Num).unwrap_or(Json::Null)),
+            ]),
+        )
+        .map(|_| ())
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        self.with_read(|s| {
+            s.trials
+                .get(trial_id as usize)
+                .cloned()
+                .ok_or_else(|| bad_trial(trial_id))
+        })
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.with_read(|s| {
+            let st = s.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
+            Ok(st.trials.iter().map(|&tid| s.trials[tid as usize].clone()).collect())
+        })
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        self.with_read(|s| {
+            s.studies
+                .get(study_id as usize)
+                .map(|st| st.trials.len())
+                .ok_or_else(|| bad_study(study_id))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::conformance;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "optuna_rs_journal_{tag}_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        p
+    }
+
+    #[test]
+    fn conformance_suite() {
+        let p = tmp_path("conf");
+        conformance::run_all(&JournalStorage::open(&p).unwrap());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn second_handle_sees_writes() {
+        let p = tmp_path("shared");
+        let a = JournalStorage::open(&p).unwrap();
+        let b = JournalStorage::open(&p).unwrap();
+        let sid = a.create_study("s", StudyDirection::Minimize).unwrap();
+        assert_eq!(b.get_study_id("s").unwrap(), Some(sid));
+        let (tid, _) = a.create_trial(sid).unwrap();
+        a.finish_trial(tid, TrialState::Complete, Some(0.5)).unwrap();
+        let trials = b.get_all_trials(sid).unwrap();
+        assert_eq!(trials.len(), 1);
+        assert_eq!(trials[0].value, Some(0.5));
+        // and writes interleave: b creates, a sees it
+        let (tid2, n2) = b.create_trial(sid).unwrap();
+        assert_eq!(n2, 1);
+        assert_eq!(a.get_trial(tid2).unwrap().number, 1);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn replay_after_reopen() {
+        let p = tmp_path("reopen");
+        {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study("s", StudyDirection::Maximize).unwrap();
+            let (tid, _) = s.create_trial(sid).unwrap();
+            s.set_trial_param(tid, "x", &Distribution::float(0.0, 1.0), 0.25)
+                .unwrap();
+            s.set_trial_intermediate(tid, 3, 0.9).unwrap();
+            s.finish_trial(tid, TrialState::Complete, Some(0.9)).unwrap();
+        }
+        let s = JournalStorage::open(&p).unwrap();
+        let sid = s.get_study_id("s").unwrap().unwrap();
+        assert_eq!(s.get_study_direction(sid).unwrap(), StudyDirection::Maximize);
+        let t = &s.get_all_trials(sid).unwrap()[0];
+        assert_eq!(t.state, TrialState::Complete);
+        assert!((t.params["x"].1 - 0.25).abs() < 1e-12);
+        assert_eq!(t.intermediate_at(3), Some(0.9));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn torn_final_line_ignored() {
+        let p = tmp_path("torn");
+        {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study("s", StudyDirection::Minimize).unwrap();
+            s.create_trial(sid).unwrap();
+        }
+        // simulate a crash mid-append
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"op\":\"create_trial\",\"stu").unwrap();
+        }
+        let s = JournalStorage::open(&p).unwrap();
+        let sid = s.get_study_id("s").unwrap().unwrap();
+        assert_eq!(s.n_trials(sid).unwrap(), 1); // torn line invisible
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn multithread_unique_trial_numbers() {
+        use std::sync::Arc;
+        let p = tmp_path("mt");
+        let s = Arc::new(JournalStorage::open(&p).unwrap());
+        let sid = s.create_study("s", StudyDirection::Minimize).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s2 = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                (0..25).map(|_| s2.create_trial(sid).unwrap().1).collect::<Vec<_>>()
+            }));
+        }
+        let mut nums: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        nums.sort_unstable();
+        assert_eq!(nums, (0..100).collect::<Vec<u64>>());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,179 @@
+//! Storage backends — the architectural heart of the paper's §4.
+//!
+//! Workers never talk to each other: every trial reads and writes the
+//! shared storage, which is what makes distributed optimization a matter
+//! of "run the same binary N times against the same storage URL" (Fig 7).
+//!
+//! Two backends ship:
+//! * [`InMemoryStorage`] — zero-setup default for light-weight /
+//!   interactive use (the paper's Jupyter story).
+//! * [`JournalStorage`] — append-only JSONL file with advisory `flock`,
+//!   the SQLite-analog that lets independent OS processes share a study.
+
+mod in_memory;
+mod journal;
+
+pub use in_memory::InMemoryStorage;
+pub use journal::JournalStorage;
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+
+/// Abstract storage. All methods are process-safe (backends lock
+/// internally); ids are backend-assigned and opaque to callers.
+pub trait Storage: Send + Sync {
+    /// Create a study; error if the name exists.
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError>;
+
+    /// Look up a study id by name.
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError>;
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError>;
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError>;
+
+    /// Create a running trial; returns (trial_id, trial_number).
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError>;
+
+    /// Record a sampled parameter (internal representation).
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError>;
+
+    /// Record an intermediate objective value at a step.
+    fn set_trial_intermediate(&self, trial_id: u64, step: u64, value: f64)
+        -> Result<(), OptunaError>;
+
+    fn set_trial_user_attr(&self, trial_id: u64, key: &str, value: &str)
+        -> Result<(), OptunaError>;
+
+    /// Transition a trial to a finished state (Complete/Pruned/Failed).
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError>;
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError>;
+
+    /// Snapshot of every trial in the study, ordered by trial number.
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError>;
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError>;
+}
+
+/// Get an existing study id or create the study (the CLI / distributed
+/// workers race on this; backends make it atomic enough via their locks).
+pub fn get_or_create_study(
+    storage: &dyn Storage,
+    name: &str,
+    direction: StudyDirection,
+) -> Result<u64, OptunaError> {
+    if let Some(id) = storage.get_study_id(name)? {
+        let existing = storage.get_study_direction(id)?;
+        if existing != direction {
+            return Err(OptunaError::Storage(format!(
+                "study '{name}' exists with direction {}",
+                existing.as_str()
+            )));
+        }
+        return Ok(id);
+    }
+    match storage.create_study(name, direction) {
+        Ok(id) => Ok(id),
+        // lost the race: someone created it between our check and create
+        Err(_) => storage
+            .get_study_id(name)?
+            .ok_or_else(|| OptunaError::Storage(format!("cannot create study '{name}'"))),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! Backend-agnostic conformance suite: both backends must pass
+    //! identical behaviour tests.
+
+    use super::*;
+
+    pub fn run_all(storage: &dyn Storage) {
+        study_lifecycle(storage);
+        trial_lifecycle(storage);
+        params_and_intermediates(storage);
+        trial_isolation(storage);
+    }
+
+    fn study_lifecycle(s: &dyn Storage) {
+        assert_eq!(s.get_study_id("conf-a").unwrap(), None);
+        let id = s.create_study("conf-a", StudyDirection::Minimize).unwrap();
+        assert_eq!(s.get_study_id("conf-a").unwrap(), Some(id));
+        assert_eq!(s.get_study_direction(id).unwrap(), StudyDirection::Minimize);
+        assert!(s.create_study("conf-a", StudyDirection::Minimize).is_err());
+        assert!(s.study_names().unwrap().contains(&"conf-a".to_string()));
+        let id2 = s.create_study("conf-b", StudyDirection::Maximize).unwrap();
+        assert_ne!(id, id2);
+        assert_eq!(s.get_study_direction(id2).unwrap(), StudyDirection::Maximize);
+    }
+
+    fn trial_lifecycle(s: &dyn Storage) {
+        let sid = s.create_study("conf-trials", StudyDirection::Minimize).unwrap();
+        let (t0, n0) = s.create_trial(sid).unwrap();
+        let (t1, n1) = s.create_trial(sid).unwrap();
+        assert_eq!(n0, 0);
+        assert_eq!(n1, 1);
+        assert_ne!(t0, t1);
+        assert_eq!(s.n_trials(sid).unwrap(), 2);
+
+        let tr = s.get_trial(t0).unwrap();
+        assert_eq!(tr.state, TrialState::Running);
+        assert_eq!(tr.number, 0);
+
+        s.finish_trial(t0, TrialState::Complete, Some(1.5)).unwrap();
+        let tr = s.get_trial(t0).unwrap();
+        assert_eq!(tr.state, TrialState::Complete);
+        assert_eq!(tr.value, Some(1.5));
+
+        s.finish_trial(t1, TrialState::Pruned, Some(9.0)).unwrap();
+        assert_eq!(s.get_trial(t1).unwrap().state, TrialState::Pruned);
+
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].number, 0);
+        assert_eq!(all[1].number, 1);
+    }
+
+    fn params_and_intermediates(s: &dyn Storage) {
+        let sid = s.create_study("conf-params", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        let d = Distribution::log_float(1e-5, 1e-1);
+        s.set_trial_param(tid, "lr", &d, (1e-3f64).ln()).unwrap();
+        let d2 = Distribution::categorical(vec!["a", "b"]);
+        s.set_trial_param(tid, "opt", &d2, 1.0).unwrap();
+        s.set_trial_intermediate(tid, 1, 0.9).unwrap();
+        s.set_trial_intermediate(tid, 2, 0.7).unwrap();
+        s.set_trial_user_attr(tid, "note", "hello").unwrap();
+
+        let tr = s.get_trial(tid).unwrap();
+        assert_eq!(tr.params.len(), 2);
+        assert_eq!(tr.params["lr"].0, d);
+        assert!((tr.params["lr"].1 - (1e-3f64).ln()).abs() < 1e-9);
+        assert_eq!(tr.intermediate_at(2), Some(0.7));
+        assert_eq!(tr.user_attrs["note"], "hello");
+    }
+
+    fn trial_isolation(s: &dyn Storage) {
+        let sid_a = s.create_study("conf-iso-a", StudyDirection::Minimize).unwrap();
+        let sid_b = s.create_study("conf-iso-b", StudyDirection::Minimize).unwrap();
+        let (ta, _) = s.create_trial(sid_a).unwrap();
+        let (_tb, _) = s.create_trial(sid_b).unwrap();
+        s.finish_trial(ta, TrialState::Complete, Some(0.0)).unwrap();
+        assert_eq!(s.n_trials(sid_a).unwrap(), 1);
+        assert_eq!(s.n_trials(sid_b).unwrap(), 1);
+        let b_trials = s.get_all_trials(sid_b).unwrap();
+        assert_eq!(b_trials.len(), 1);
+        assert_eq!(b_trials[0].state, TrialState::Running);
+    }
+}

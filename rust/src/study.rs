@@ -1,0 +1,482 @@
+//! `Study` — one optimization process (§2): owns storage, sampler and
+//! pruner, runs the optimize loop, and exposes ask/tell for custom loops.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::core::{FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::pruner::{NopPruner, Pruner};
+use crate::sampler::{Sampler, StudyContext, TpeSampler};
+use crate::storage::{get_or_create_study, InMemoryStorage, Storage};
+use crate::trial::Trial;
+
+/// A study: the unit of optimization. Cheap to share across threads by
+/// reference (`optimize_parallel` uses scoped threads).
+pub struct Study {
+    pub(crate) storage: Arc<dyn Storage>,
+    pub(crate) sampler: Arc<dyn Sampler>,
+    pub(crate) pruner: Arc<dyn Pruner>,
+    pub study_id: u64,
+    pub direction: StudyDirection,
+    pub name: String,
+}
+
+/// Fluent construction (`Study::builder().sampler(...).build()?`).
+pub struct StudyBuilder {
+    name: String,
+    direction: StudyDirection,
+    storage: Option<Arc<dyn Storage>>,
+    sampler: Option<Arc<dyn Sampler>>,
+    pruner: Option<Arc<dyn Pruner>>,
+}
+
+impl StudyBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn direction(mut self, direction: StudyDirection) -> Self {
+        self.direction = direction;
+        self
+    }
+
+    pub fn storage(mut self, storage: Arc<dyn Storage>) -> Self {
+        self.storage = Some(storage);
+        self
+    }
+
+    pub fn sampler(mut self, sampler: Arc<dyn Sampler>) -> Self {
+        self.sampler = Some(sampler);
+        self
+    }
+
+    pub fn pruner(mut self, pruner: Arc<dyn Pruner>) -> Self {
+        self.pruner = Some(pruner);
+        self
+    }
+
+    /// Create (or join, for shared storage) the study.
+    pub fn build(self) -> Result<Study, OptunaError> {
+        let storage = self
+            .storage
+            .unwrap_or_else(|| Arc::new(InMemoryStorage::new()));
+        let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
+        let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
+        let study_id = get_or_create_study(storage.as_ref(), &self.name, self.direction)?;
+        Ok(Study {
+            storage,
+            sampler,
+            pruner,
+            study_id,
+            direction: self.direction,
+            name: self.name,
+        })
+    }
+}
+
+/// Result an objective hands back through [`Study::tell`].
+pub enum TrialOutcome {
+    Complete(f64),
+    Pruned,
+    Failed(String),
+}
+
+impl Study {
+    pub fn builder() -> StudyBuilder {
+        StudyBuilder {
+            name: "study".to_string(),
+            direction: StudyDirection::Minimize,
+            storage: None,
+            sampler: None,
+            pruner: None,
+        }
+    }
+
+    /// Begin a trial: creates it in storage and runs relational sampling.
+    /// The history snapshot taken here is reused for every independent
+    /// suggest in the trial (one clone per trial, not per parameter).
+    pub fn ask(&self) -> Result<Trial<'_>, OptunaError> {
+        let (trial_id, number) = self.storage.create_trial(self.study_id)?;
+        let trials = Arc::new(self.storage.get_all_trials(self.study_id)?);
+        let ctx = StudyContext { direction: self.direction, trials: &trials };
+        let space = self.sampler.infer_relative_search_space(&ctx);
+        let relative = if space.is_empty() {
+            Default::default()
+        } else {
+            self.sampler.sample_relative(&ctx, number, &space)
+        };
+        Ok(Trial::new(self, trial_id, number, relative, space, trials))
+    }
+
+    /// Finish a trial with an outcome.
+    pub fn tell(&self, trial: Trial<'_>, outcome: TrialOutcome) -> Result<(), OptunaError> {
+        match outcome {
+            TrialOutcome::Complete(v) => {
+                self.storage.finish_trial(trial.trial_id, TrialState::Complete, Some(v))
+            }
+            TrialOutcome::Pruned => {
+                let v = trial.last_report.map(|(_, v)| v);
+                self.storage.finish_trial(trial.trial_id, TrialState::Pruned, v)
+            }
+            TrialOutcome::Failed(msg) => {
+                self.storage
+                    .set_trial_user_attr(trial.trial_id, "fail_reason", &msg)
+                    .ok();
+                self.storage.finish_trial(trial.trial_id, TrialState::Failed, None)
+            }
+        }
+    }
+
+    /// Run one trial through `objective` (the optimize-loop body).
+    pub fn run_one<F>(&self, objective: &F) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
+    {
+        let mut trial = self.ask()?;
+        let outcome = match objective(&mut trial) {
+            Ok(v) if v.is_finite() => TrialOutcome::Complete(v),
+            Ok(v) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
+            Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
+            Err(e) => TrialOutcome::Failed(e.to_string()),
+        };
+        self.tell(trial, outcome)
+    }
+
+    /// Evaluate `objective` for `n_trials` trials (the 'optimize API').
+    /// Pruned and failed trials are recorded, not fatal.
+    pub fn optimize<F>(&self, n_trials: usize, objective: F) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
+    {
+        for _ in 0..n_trials {
+            self.run_one(&objective)?;
+        }
+        Ok(())
+    }
+
+    /// Parallel optimization with `n_workers` threads sharing this study's
+    /// storage — the paper's Fig 7/11b architecture in-process. The total
+    /// across workers is `n_trials`.
+    pub fn optimize_parallel<F>(
+        &self,
+        n_trials: usize,
+        n_workers: usize,
+        objective: F,
+    ) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError> + Sync,
+        Self: Sync,
+    {
+        assert!(n_workers >= 1);
+        let budget = AtomicUsize::new(n_trials);
+        let first_error = std::sync::Mutex::new(None::<OptunaError>);
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    // claim a trial slot
+                    let prev = budget.fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |b| b.checked_sub(1),
+                    );
+                    if prev.is_err() {
+                        break;
+                    }
+                    if let Err(e) = self.run_one(&objective) {
+                        *first_error.lock().unwrap() = Some(e);
+                        break;
+                    }
+                });
+            }
+        });
+        match first_error.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// All trials, ordered by number.
+    pub fn trials(&self) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.storage.get_all_trials(self.study_id)
+    }
+
+    /// Best completed trial under the study direction.
+    pub fn best_trial(&self) -> Result<Option<FrozenTrial>, OptunaError> {
+        let trials = self.trials()?;
+        Ok(trials
+            .into_iter()
+            .filter(|t| t.state == TrialState::Complete && t.value.is_some())
+            .reduce(|best, t| {
+                if self.direction.is_better(t.value.unwrap(), best.value.unwrap()) {
+                    t
+                } else {
+                    best
+                }
+            }))
+    }
+
+    /// Best objective value, if any trial completed.
+    pub fn best_value(&self) -> Result<Option<f64>, OptunaError> {
+        Ok(self.best_trial()?.and_then(|t| t.value))
+    }
+
+    /// Export the trial table as CSV (the pandas-dataframe analog, §4).
+    pub fn to_csv(&self) -> Result<String, OptunaError> {
+        let trials = self.trials()?;
+        // union of parameter names, ordered
+        let mut names: Vec<String> = Vec::new();
+        for t in &trials {
+            for k in t.params.keys() {
+                if !names.contains(k) {
+                    names.push(k.clone());
+                }
+            }
+        }
+        names.sort();
+        let mut out = String::from("number,state,value");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for t in &trials {
+            out.push_str(&format!(
+                "{},{},{}",
+                t.number,
+                t.state.as_str(),
+                t.value.map(|v| v.to_string()).unwrap_or_default()
+            ));
+            for n in &names {
+                out.push(',');
+                if let Some(v) = t.param(n) {
+                    out.push_str(&v.to_string());
+                }
+            }
+            out.push('\n');
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ParamValue;
+    use crate::pruner::AshaPruner;
+    use crate::sampler::RandomSampler;
+    use crate::trial::TrialApi;
+
+    fn quadratic_study(seed: u64) -> Study {
+        Study::builder()
+            .name("quad")
+            .sampler(Arc::new(RandomSampler::new(seed)))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn optimize_records_trials_and_best() {
+        let study = quadratic_study(0);
+        study
+            .optimize(50, |t| {
+                let x = t.suggest_float("x", -5.0, 5.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 50);
+        assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+        let best = study.best_trial().unwrap().unwrap();
+        assert!(best.value.unwrap() < 1.0, "best={:?}", best.value);
+        match best.param("x").unwrap() {
+            ParamValue::Float(x) => {
+                assert!((x * x - best.value.unwrap()).abs() < 1e-9)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dynamic_conditional_space() {
+        // Fig 3 analog: branch on a categorical; params exist per-branch.
+        let study = quadratic_study(1);
+        study
+            .optimize(40, |t| {
+                let kind = t.suggest_categorical("model", &["linear", "mlp"])?;
+                if kind == "mlp" {
+                    let n_layers = t.suggest_int("n_layers", 1, 3)?;
+                    let mut total = 0.0;
+                    for i in 0..n_layers {
+                        total += t.suggest_int(&format!("units_l{i}"), 4, 64)? as f64;
+                    }
+                    Ok(total / 64.0)
+                } else {
+                    let reg = t.suggest_float_log("reg", 1e-5, 1.0)?;
+                    Ok(reg.ln().abs() / 10.0)
+                }
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 40);
+        let mlps = trials
+            .iter()
+            .filter(|t| t.param("model") == Some(ParamValue::Cat("mlp".into())))
+            .count();
+        assert!(mlps > 5 && mlps < 35, "mlps={mlps}");
+        // branch params only exist where taken
+        for t in &trials {
+            let is_mlp = t.param("model") == Some(ParamValue::Cat("mlp".into()));
+            assert_eq!(t.params.contains_key("n_layers"), is_mlp);
+            assert_eq!(t.params.contains_key("reg"), !is_mlp);
+        }
+    }
+
+    #[test]
+    fn resuggest_same_name_is_idempotent() {
+        let study = quadratic_study(2);
+        study
+            .optimize(3, |t| {
+                let a = t.suggest_float("x", 0.0, 1.0)?;
+                let b = t.suggest_float("x", 0.0, 1.0)?;
+                assert_eq!(a, b);
+                // changing the distribution mid-trial is an error
+                assert!(t.suggest_float("x", 0.0, 2.0).is_err());
+                Ok(a)
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn failed_trials_recorded_not_fatal() {
+        let study = quadratic_study(3);
+        study
+            .optimize(10, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                if x < 0.5 {
+                    Err(OptunaError::Objective("boom".into()))
+                } else {
+                    Ok(x)
+                }
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 10);
+        let failed = trials.iter().filter(|t| t.state == TrialState::Failed).count();
+        assert!(failed > 0);
+        assert!(trials
+            .iter()
+            .filter(|t| t.state == TrialState::Failed)
+            .all(|t| t.user_attrs.contains_key("fail_reason")));
+    }
+
+    #[test]
+    fn non_finite_objective_fails_trial() {
+        let study = quadratic_study(4);
+        study.optimize(2, |_t| Ok(f64::NAN)).unwrap();
+        assert!(study
+            .trials()
+            .unwrap()
+            .iter()
+            .all(|t| t.state == TrialState::Failed));
+    }
+
+    #[test]
+    fn pruning_loop_fig5() {
+        // Fig 5 pattern: report + should_prune inside iterative training.
+        let study = Study::builder()
+            .name("pruned")
+            .sampler(Arc::new(RandomSampler::new(5)))
+            .pruner(Arc::new(AshaPruner::new()))
+            .build()
+            .unwrap();
+        study
+            .optimize(60, |t| {
+                let lr = t.suggest_float("lr", 0.0, 1.0)?;
+                // simple synthetic curve: bad lr ⇒ high plateau
+                let mut v = 1.0;
+                for step in 1..=16u64 {
+                    v = (lr - 0.3).abs() + 1.0 / step as f64;
+                    t.report(step, v)?;
+                    if t.should_prune()? {
+                        return Err(OptunaError::TrialPruned);
+                    }
+                }
+                Ok(v)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        let pruned = trials.iter().filter(|t| t.state == TrialState::Pruned).count();
+        let complete = trials.iter().filter(|t| t.state == TrialState::Complete).count();
+        assert!(pruned > 10, "pruned={pruned}");
+        assert!(complete > 0);
+        // pruned trials carry their last intermediate as value
+        assert!(trials
+            .iter()
+            .filter(|t| t.state == TrialState::Pruned)
+            .all(|t| t.value.is_some()));
+    }
+
+    #[test]
+    fn parallel_optimize_shares_history() {
+        let study = quadratic_study(6);
+        study
+            .optimize_parallel(64, 8, |t| {
+                let x = t.suggest_float("x", -5.0, 5.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 64);
+        let mut numbers: Vec<u64> = trials.iter().map(|t| t.number).collect();
+        numbers.sort_unstable();
+        assert_eq!(numbers, (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn ask_tell_api() {
+        let study = quadratic_study(7);
+        let mut t = study.ask().unwrap();
+        let x = t.suggest_float("x", 0.0, 1.0).unwrap();
+        study.tell(t, TrialOutcome::Complete(x)).unwrap();
+        let t2 = study.ask().unwrap();
+        assert_eq!(t2.number(), 1);
+        study.tell(t2, TrialOutcome::Failed("skip".into())).unwrap();
+        assert_eq!(study.trials().unwrap().len(), 2);
+        assert_eq!(study.best_value().unwrap(), Some(x));
+    }
+
+    #[test]
+    fn csv_export_contains_params() {
+        let study = quadratic_study(8);
+        study
+            .optimize(5, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                let c = t.suggest_categorical("c", &["a", "b"])?;
+                Ok(x + if c == "a" { 0.0 } else { 1.0 })
+            })
+            .unwrap();
+        let csv = study.to_csv().unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].starts_with("number,state,value"));
+        assert!(lines[0].contains(",c") && lines[0].contains(",x"));
+    }
+
+    #[test]
+    fn maximize_direction_best() {
+        let study = Study::builder()
+            .name("max")
+            .direction(StudyDirection::Maximize)
+            .sampler(Arc::new(RandomSampler::new(9)))
+            .build()
+            .unwrap();
+        study
+            .optimize(30, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(x)
+            })
+            .unwrap();
+        assert!(study.best_value().unwrap().unwrap() > 0.8);
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free utilities (the offline build carries its own RNG,
+//! JSON, linear algebra, statistics, and property-test harness).
+
+pub mod json;
+pub mod linalg;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,251 @@
+//! Deterministic PRNG: PCG64 (O'Neill 2014, XSL-RR 128/64 variant).
+//!
+//! The offline build has no `rand` crate, so the framework carries its own
+//! generator. Every stochastic component (samplers, workload simulators,
+//! synthetic data) takes an explicit seed so studies replay exactly.
+
+/// PCG64 XSL-RR: 128-bit LCG state, 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second output of Box-Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with an arbitrary u64; stream constant fixed.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream for e.g. per-worker generators.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [low, high).
+    pub fn uniform_range(&mut self, low: f64, high: f64) -> f64 {
+        low + (high - low) * self.uniform()
+    }
+
+    /// Uniform integer in [low, high] inclusive (unbiased via rejection).
+    pub fn int_range(&mut self, low: i64, high: i64) -> i64 {
+        debug_assert!(low <= high);
+        let span = (high - low) as u64 + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64() as i64;
+        }
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return low + (v % span) as i64;
+            }
+        }
+    }
+
+    /// Index in [0, n).
+    pub fn index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        self.int_range(0, n as i64 - 1) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Normal truncated to [low, high] by rejection (falls back to uniform
+    /// after 100 rejections — only reachable for pathological bounds).
+    pub fn trunc_normal(&mut self, mean: f64, std: f64, low: f64, high: f64) -> f64 {
+        debug_assert!(low < high);
+        for _ in 0..100 {
+            let v = self.normal_ms(mean, std);
+            if v >= low && v <= high {
+                return v;
+            }
+        }
+        self.uniform_range(low, high)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from unnormalized weights; weights must be >= 0, sum > 0.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fresh generator split off this one (for child tasks).
+    pub fn split(&mut self) -> Pcg64 {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        Pcg64::with_stream(seed, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_variance() {
+        let mut r = Pcg64::new(3);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn int_range_covers_and_bounds() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            let v = r.int_range(10, 14);
+            assert!((10..=14).contains(&v));
+            seen[(v - 10) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn trunc_normal_respects_bounds() {
+        let mut r = Pcg64::new(13);
+        for _ in 0..5000 {
+            let v = r.trunc_normal(0.0, 10.0, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn weighted_index_prefers_heavy() {
+        let mut r = Pcg64::new(17);
+        let w = [0.0, 1.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[2] > 5 * counts[1] / 2);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut parent = Pcg64::new(23);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let a: Vec<u64> = (0..8).map(|_| c1.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| c2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,302 @@
+//! Statistics for the evaluation protocol and the TPE/GP samplers.
+//!
+//! Fig 9 of the paper compares samplers with a paired Mann-Whitney U test
+//! at α = 0.0005 over 30 repeated studies; this module provides that test
+//! (both the classic unpaired U and the paired Wilcoxon signed-rank the
+//! "paired Mann-Whitney" phrasing refers to), midrank utilities, the
+//! standard normal CDF/quantile, and descriptive statistics.
+
+/// Arithmetic mean; NaN for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1); 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// p-quantile with linear interpolation, p in [0,1].
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (idx - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Midranks (1-based, ties averaged) — the ranking used by U and W tests.
+pub fn midranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26 rational approx,
+/// |err| < 1.5e-7 — ample for test decisions at α = 5e-4).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let e = poly * (-ax * ax).exp();
+    if x >= 0.0 {
+        e
+    } else {
+        2.0 - e
+    }
+}
+
+/// erf(x) = 1 − erfc(x).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// One-sided Mann-Whitney U test that `xs` tends SMALLER than `ys`
+/// (H1: P(X < Y) > 1/2). Returns (U statistic of xs, one-sided p-value)
+/// using the normal approximation with tie correction.
+pub fn mann_whitney_u_less(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n1 = xs.len() as f64;
+    let n2 = ys.len() as f64;
+    assert!(n1 > 0.0 && n2 > 0.0);
+    let mut all: Vec<f64> = Vec::with_capacity(xs.len() + ys.len());
+    all.extend_from_slice(xs);
+    all.extend_from_slice(ys);
+    let ranks = midranks(&all);
+    let r1: f64 = ranks[..xs.len()].iter().sum();
+    let u1 = r1 - n1 * (n1 + 1.0) / 2.0; // "big when xs big"
+    let mu = n1 * n2 / 2.0;
+    // tie correction
+    let mut sorted = all.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = n1 + n2;
+    let mut tie_term = 0.0;
+    let mut i = 0;
+    while i < sorted.len() {
+        let mut j = i;
+        while j + 1 < sorted.len() && sorted[j + 1] == sorted[i] {
+            j += 1;
+        }
+        let t = (j - i + 1) as f64;
+        tie_term += t * t * t - t;
+        i = j + 1;
+    }
+    let sigma2 = n1 * n2 / 12.0 * ((n + 1.0) - tie_term / (n * (n - 1.0)));
+    if sigma2 <= 0.0 {
+        return (u1, 0.5); // all values identical
+    }
+    // H1 "xs smaller" => u1 small => z negative
+    let z = (u1 - mu + 0.5) / sigma2.sqrt(); // continuity correction toward H1
+    (u1, normal_cdf(z))
+}
+
+/// Paired one-sided Wilcoxon signed-rank test that paired differences
+/// d = x − y tend NEGATIVE (xs smaller), i.e. the "paired Mann-Whitney"
+/// protocol of Fig 9. Returns (W+, one-sided p) by normal approximation;
+/// zero differences dropped (Wilcoxon's method).
+pub fn wilcoxon_signed_rank_less(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let diffs: Vec<f64> = xs
+        .iter()
+        .zip(ys)
+        .map(|(a, b)| a - b)
+        .filter(|d| *d != 0.0)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return (0.0, 0.5);
+    }
+    let abs: Vec<f64> = diffs.iter().map(|d| d.abs()).collect();
+    let ranks = midranks(&abs);
+    let w_plus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d > 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+    let nf = n as f64;
+    let mu = nf * (nf + 1.0) / 4.0;
+    // tie correction over |d| ranks
+    let mut sorted = abs.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut tie_term = 0.0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && sorted[j + 1] == sorted[i] {
+            j += 1;
+        }
+        let t = (j - i + 1) as f64;
+        tie_term += t * t * t - t;
+        i = j + 1;
+    }
+    let sigma2 = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_term / 48.0;
+    if sigma2 <= 0.0 {
+        return (w_plus, 0.5);
+    }
+    // H1 "x < y" => diffs negative => W+ small
+    let z = (w_plus - mu + 0.5) / sigma2.sqrt();
+    (w_plus, normal_cdf(z))
+}
+
+/// Outcome of the Fig 9 three-way comparison at significance `alpha`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Comparison {
+    /// First sampler statistically better (smaller losses).
+    Win,
+    /// Second sampler statistically better.
+    Loss,
+    /// Neither direction significant.
+    Tie,
+}
+
+/// Paired comparison of best-values across repeated studies (lower=better),
+/// per the Fig 9 protocol.
+pub fn compare_paired(a: &[f64], b: &[f64], alpha: f64) -> Comparison {
+    let (_, p_a_less) = wilcoxon_signed_rank_less(a, b);
+    let (_, p_b_less) = wilcoxon_signed_rank_less(b, a);
+    if p_a_less < alpha {
+        Comparison::Win
+    } else if p_b_less < alpha {
+        Comparison::Loss
+    } else {
+        Comparison::Tie
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn descriptive_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((std_dev(&xs) - 1.2909944487).abs() < 1e-9);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn midranks_with_ties() {
+        let r = midranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((normal_cdf(-3.29) - 0.0005).abs() < 2e-4);
+        assert!(normal_cdf(8.0) > 0.999999);
+    }
+
+    #[test]
+    fn mann_whitney_detects_shift() {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..40).map(|_| rng.normal() + 2.0).collect();
+        let (_, p) = mann_whitney_u_less(&xs, &ys);
+        assert!(p < 1e-4, "p={p}");
+        let (_, p_rev) = mann_whitney_u_less(&ys, &xs);
+        assert!(p_rev > 0.5, "p_rev={p_rev}");
+    }
+
+    #[test]
+    fn mann_whitney_null_uniform() {
+        let mut rng = Pcg64::new(6);
+        let xs: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let (_, p) = mann_whitney_u_less(&xs, &ys);
+        assert!(p > 0.001 && p < 0.999, "p={p}");
+    }
+
+    #[test]
+    fn wilcoxon_detects_paired_shift() {
+        let mut rng = Pcg64::new(7);
+        let base: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let xs: Vec<f64> = base.iter().map(|b| b - 1.0 + 0.1 * rng.normal()).collect();
+        let ys = base;
+        let (_, p) = wilcoxon_signed_rank_less(&xs, &ys);
+        assert!(p < 5e-4, "p={p}");
+    }
+
+    #[test]
+    fn wilcoxon_all_equal_is_tie() {
+        let xs = vec![1.0; 10];
+        let (_, p) = wilcoxon_signed_rank_less(&xs, &xs);
+        assert_eq!(p, 0.5);
+    }
+
+    #[test]
+    fn compare_paired_three_outcomes() {
+        let mut rng = Pcg64::new(8);
+        let base: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let better: Vec<f64> = base.iter().map(|b| b - 2.0).collect();
+        assert_eq!(compare_paired(&better, &base, 5e-4), Comparison::Win);
+        assert_eq!(compare_paired(&base, &better, 5e-4), Comparison::Loss);
+        assert_eq!(compare_paired(&base, &base, 5e-4), Comparison::Tie);
+    }
+}

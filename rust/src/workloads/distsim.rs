@@ -1,0 +1,255 @@
+//! Virtual-time simulator for distributed studies (Fig 11/12 harness).
+//!
+//! The paper's distributed experiments measure *wallclock* convergence
+//! with 1–8 workers sharing one study. Re-running them in real time would
+//! take days; instead this module simulates the exact asynchronous
+//! execution on a virtual clock: each worker is an independent timeline,
+//! trials advance step by step (each step costs simulated seconds), and
+//! the globally-earliest worker always acts next — which reproduces the
+//! interleaving a real cluster would produce, deterministically.
+//!
+//! The simulator drives a real [`Study`] (real storage, sampler, pruner);
+//! only *time* is virtual.
+
+use crate::core::{OptunaError, TrialState};
+use crate::study::{Study, TrialOutcome};
+use crate::trial::{Trial, TrialApi};
+
+/// A step-wise workload: maps a started trial to a curve of
+/// (per-step error, per-step cost) plus a final objective value.
+pub trait StepWorkload {
+    /// Called once when a trial starts; suggests parameters and returns a
+    /// per-trial state object.
+    fn start(&self, trial: &mut Trial<'_>) -> Result<Box<dyn TrialRun>, OptunaError>;
+}
+
+/// Per-trial execution state.
+pub trait TrialRun {
+    /// Total steps a full (unpruned) trial takes.
+    fn max_steps(&self) -> u64;
+    /// Advance to `step` (1-based, monotonic); returns (value, seconds).
+    fn step(&mut self, step: u64) -> (f64, f64);
+    /// Final objective value after the last executed step.
+    fn final_value(&mut self) -> f64;
+}
+
+/// One sampled point of the convergence trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    /// Virtual seconds since study start.
+    pub time: f64,
+    /// Trials completed (any state) when the best changed.
+    pub n_finished: u64,
+    /// Best completed objective value so far.
+    pub best: f64,
+}
+
+/// Result of one simulated study.
+#[derive(Debug)]
+pub struct SimResult {
+    pub trace: Vec<TracePoint>,
+    pub n_complete: u64,
+    pub n_pruned: u64,
+    /// Best value at budget end (+inf if nothing completed).
+    pub best: f64,
+}
+
+/// Run `study` with `n_workers` simulated workers for `budget` virtual
+/// seconds. Workers act in global virtual-time order; pruning decisions
+/// happen at every step through the study's pruner, exactly as in the
+/// real optimize loop (Fig 5 pattern).
+pub fn simulate(
+    study: &Study,
+    workload: &dyn StepWorkload,
+    n_workers: usize,
+    budget: f64,
+) -> Result<SimResult, OptunaError> {
+    struct WorkerState<'s> {
+        clock: f64,
+        run: Option<(Trial<'s>, Box<dyn TrialRun>, u64)>, // (trial, state, next step)
+    }
+    let mut workers: Vec<WorkerState> = (0..n_workers)
+        .map(|_| WorkerState { clock: 0.0, run: None })
+        .collect();
+    let mut trace: Vec<TracePoint> = Vec::new();
+    let mut best = f64::INFINITY;
+    let sign = study.direction.min_sign();
+    let mut n_complete = 0u64;
+    let mut n_pruned = 0u64;
+    let mut n_finished = 0u64;
+
+    loop {
+        // earliest worker acts next
+        let (wi, _) = workers
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.clock.partial_cmp(&b.1.clock).unwrap())
+            .unwrap();
+        if workers[wi].clock >= budget {
+            break; // every other worker is at least this late
+        }
+        let w = &mut workers[wi];
+        match w.run.take() {
+            None => {
+                // start a new trial
+                let mut trial = study.ask()?;
+                let run = workload.start(&mut trial)?;
+                w.run = Some((trial, run, 1));
+            }
+            Some((mut trial, mut run, step)) => {
+                let (value, secs) = run.step(step);
+                w.clock += secs;
+                trial.report(step, value)?;
+                let pruned = trial.should_prune()?;
+                let done = step >= run.max_steps();
+                if pruned && !done {
+                    study.tell(trial, TrialOutcome::Pruned)?;
+                    n_pruned += 1;
+                    n_finished += 1;
+                } else if done {
+                    let v = run.final_value();
+                    study.tell(trial, TrialOutcome::Complete(v))?;
+                    n_complete += 1;
+                    n_finished += 1;
+                    if sign * v < sign * best || best.is_infinite() {
+                        best = v;
+                        trace.push(TracePoint { time: w.clock, n_finished, best });
+                    }
+                } else {
+                    w.run = Some((trial, run, step + 1));
+                }
+            }
+        }
+    }
+    // abandon still-running trials (budget exhausted mid-trial)
+    for w in workers {
+        if let Some((trial, _, _)) = w.run {
+            study.tell(trial, TrialOutcome::Failed("budget exhausted".into()))?;
+        }
+    }
+    Ok(SimResult { trace, n_complete, n_pruned, best })
+}
+
+/// Best-so-far value at a given virtual time (steps through the trace).
+pub fn best_at(trace: &[TracePoint], time: f64) -> Option<f64> {
+    trace
+        .iter()
+        .take_while(|p| p.time <= time)
+        .last()
+        .map(|p| p.best)
+}
+
+/// Best-so-far value after the first `n` finished trials.
+pub fn best_after_trials(trace: &[TracePoint], n: u64) -> Option<f64> {
+    trace
+        .iter()
+        .take_while(|p| p.n_finished <= n)
+        .last()
+        .map(|p| p.best)
+}
+
+/// Count trials by state in a study (reporting convenience).
+pub fn state_counts(study: &Study) -> Result<(u64, u64, u64), OptunaError> {
+    let trials = study.trials()?;
+    let c = trials.iter().filter(|t| t.state == TrialState::Complete).count() as u64;
+    let p = trials.iter().filter(|t| t.state == TrialState::Pruned).count() as u64;
+    let f = trials.iter().filter(|t| t.state == TrialState::Failed).count() as u64;
+    Ok((c, p, f))
+}
+
+/// The Fig 11/12 workload: the SVHN learning-curve surrogate as a
+/// [`StepWorkload`].
+pub struct SurrogateWorkload;
+
+struct SurrogateRun {
+    curve: crate::workloads::svhn_surrogate::TrialCurve,
+    last: f64,
+}
+
+impl StepWorkload for SurrogateWorkload {
+    fn start(&self, trial: &mut Trial<'_>) -> Result<Box<dyn TrialRun>, OptunaError> {
+        let p = crate::workloads::svhn_surrogate::suggest_params(trial)?;
+        Ok(Box::new(SurrogateRun { curve: p.curve(trial.number()), last: 0.9 }))
+    }
+}
+
+impl TrialRun for SurrogateRun {
+    fn max_steps(&self) -> u64 {
+        crate::workloads::svhn_surrogate::MAX_STEPS
+    }
+    fn step(&mut self, step: u64) -> (f64, f64) {
+        self.last = self.curve.err_at(step);
+        (self.last, self.curve.step_seconds)
+    }
+    fn final_value(&mut self) -> f64 {
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+    use std::sync::Arc;
+
+    fn run(n_workers: usize, pruner: Arc<dyn Pruner>, budget: f64, seed: u64) -> SimResult {
+        let study = Study::builder()
+            .name("sim")
+            .sampler(Arc::new(TpeSampler::new(seed)))
+            .pruner(pruner)
+            .build()
+            .unwrap();
+        simulate(&study, &SurrogateWorkload, n_workers, budget).unwrap()
+    }
+
+    #[test]
+    fn no_pruning_completes_a_handful_of_trials() {
+        // 4h budget / ~400 s per trial ≈ 36 trials (paper's no-pruning arm)
+        let r = run(1, Arc::new(NopPruner), 4.0 * 3600.0, 0);
+        assert_eq!(r.n_pruned, 0);
+        assert!((20..60).contains(&(r.n_complete as i64)), "{}", r.n_complete);
+        assert!(r.best < 0.5);
+    }
+
+    #[test]
+    fn asha_explores_order_of_magnitude_more() {
+        let nop = run(1, Arc::new(NopPruner), 4.0 * 3600.0, 1);
+        let asha = run(1, Arc::new(AshaPruner::new()), 4.0 * 3600.0, 1);
+        let total_asha = asha.n_complete + asha.n_pruned;
+        let total_nop = nop.n_complete + nop.n_pruned;
+        assert!(
+            total_asha > 5 * total_nop,
+            "asha {total_asha} vs nop {total_nop}"
+        );
+        assert!(asha.n_pruned > asha.n_complete);
+    }
+
+    #[test]
+    fn more_workers_do_more_work_in_same_time() {
+        let w1 = run(1, Arc::new(NopPruner), 2.0 * 3600.0, 2);
+        let w4 = run(4, Arc::new(NopPruner), 2.0 * 3600.0, 2);
+        let t1 = w1.n_complete;
+        let t4 = w4.n_complete;
+        assert!(t4 > 3 * t1, "w1={t1} w4={t4}");
+    }
+
+    #[test]
+    fn trace_is_monotone_in_time_and_best() {
+        let r = run(2, Arc::new(AshaPruner::new()), 3600.0, 3);
+        for w in r.trace.windows(2) {
+            assert!(w[0].time <= w[1].time);
+            assert!(w[1].best <= w[0].best); // minimize
+        }
+        assert_eq!(best_at(&r.trace, f64::INFINITY), Some(r.best));
+        assert_eq!(best_at(&r.trace, -1.0), None);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(4, Arc::new(AshaPruner::new()), 3600.0, 7);
+        let b = run(4, Arc::new(AshaPruner::new()), 3600.0, 7);
+        assert_eq!(a.n_complete, b.n_complete);
+        assert_eq!(a.n_pruned, b.n_pruned);
+        assert_eq!(a.best, b.best);
+    }
+}

@@ -1,0 +1,576 @@
+//! The 56 test functions. Formulas follow the standard references
+//! (Jamil & Yang 2013 survey; virtual library of simulation experiments).
+//! Every function is minimized; `fmin`/`argmin` as documented there.
+
+use super::TestFunction;
+use std::f64::consts::{E, PI};
+
+fn sq(v: f64) -> f64 {
+    v * v
+}
+
+fn sum_sq(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum()
+}
+
+// ----- individual functions -------------------------------------------------
+
+fn ackley(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let s1 = sum_sq(x) / n;
+    let s2 = x.iter().map(|v| (2.0 * PI * v).cos()).sum::<f64>() / n;
+    -20.0 * (-0.2 * s1.sqrt()).exp() - s2.exp() + 20.0 + E
+}
+
+fn adjiman(x: &[f64]) -> f64 {
+    x[0].cos() * x[1].sin() - x[0] / (sq(x[1]) + 1.0)
+}
+
+fn alpine01(x: &[f64]) -> f64 {
+    x.iter().map(|v| (v * v.sin() + 0.1 * v).abs()).sum()
+}
+
+fn alpine02(x: &[f64]) -> f64 {
+    // product form; the global minimum on [0,10]^2 is attained with one
+    // negative sin factor (Jamil & Yang 2013, f_6)
+    x.iter().map(|v| v.sqrt() * v.sin()).product::<f64>()
+}
+
+fn beale(x: &[f64]) -> f64 {
+    sq(1.5 - x[0] + x[0] * x[1])
+        + sq(2.25 - x[0] + x[0] * sq(x[1]))
+        + sq(2.625 - x[0] + x[0] * x[1].powi(3))
+}
+
+fn bird(x: &[f64]) -> f64 {
+    x[0].sin() * (sq(1.0 - x[1].cos())).exp()
+        + x[1].cos() * (sq(1.0 - x[0].sin())).exp()
+        + sq(x[0] - x[1])
+}
+
+fn bohachevsky1(x: &[f64]) -> f64 {
+    sq(x[0]) + 2.0 * sq(x[1]) - 0.3 * (3.0 * PI * x[0]).cos() - 0.4 * (4.0 * PI * x[1]).cos()
+        + 0.7
+}
+
+fn booth(x: &[f64]) -> f64 {
+    sq(x[0] + 2.0 * x[1] - 7.0) + sq(2.0 * x[0] + x[1] - 5.0)
+}
+
+fn branin(x: &[f64]) -> f64 {
+    let a = 1.0;
+    let b = 5.1 / (4.0 * PI * PI);
+    let c = 5.0 / PI;
+    let r = 6.0;
+    let s = 10.0;
+    let t = 1.0 / (8.0 * PI);
+    a * sq(x[1] - b * sq(x[0]) + c * x[0] - r) + s * (1.0 - t) * x[0].cos() + s
+}
+
+
+fn bukin06(x: &[f64]) -> f64 {
+    100.0 * (x[1] - 0.01 * sq(x[0])).abs().sqrt() + 0.01 * (x[0] + 10.0).abs()
+}
+
+fn carrom_table(x: &[f64]) -> f64 {
+    let g = (1.0 - (sq(x[0]) + sq(x[1])).sqrt() / PI).abs();
+    -(1.0 / 30.0) * (x[0].cos() * x[1].cos() * g.exp()).powi(2)
+}
+
+
+fn cigar(x: &[f64]) -> f64 {
+    sq(x[0]) + 1e6 * x[1..].iter().map(|v| v * v).sum::<f64>()
+}
+
+fn cross_in_tray(x: &[f64]) -> f64 {
+    let g = (100.0 - (sq(x[0]) + sq(x[1])).sqrt() / PI).abs();
+    -0.0001 * ((x[0].sin() * x[1].sin() * g.exp()).abs() + 1.0).powf(0.1)
+}
+
+fn csendes(x: &[f64]) -> f64 {
+    x.iter()
+        .map(|v| {
+            if *v == 0.0 {
+                0.0
+            } else {
+                v.powi(6) * (2.0 + (1.0 / v).sin())
+            }
+        })
+        .sum()
+}
+
+fn deb01(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    -x.iter().map(|v| (5.0 * PI * v).sin().powi(6)).sum::<f64>() / n
+}
+
+fn deflected_corrugated_spring(x: &[f64]) -> f64 {
+    let alpha = 5.0;
+    let k = 5.0;
+    let r2: f64 = x.iter().map(|v| sq(v - alpha)).sum();
+    0.1 * r2 - (k * r2.sqrt()).cos() + 1.0
+}
+
+fn dixon_price(x: &[f64]) -> f64 {
+    sq(x[0] - 1.0)
+        + x.iter()
+            .enumerate()
+            .skip(1)
+            .map(|(i, v)| (i as f64 + 1.0) * sq(2.0 * v * v - x[i - 1]))
+            .sum::<f64>()
+}
+
+fn drop_wave(x: &[f64]) -> f64 {
+    let r2 = sq(x[0]) + sq(x[1]);
+    -(1.0 + (12.0 * r2.sqrt()).cos()) / (0.5 * r2 + 2.0)
+}
+
+fn easom(x: &[f64]) -> f64 {
+    -x[0].cos() * x[1].cos() * (-(sq(x[0] - PI) + sq(x[1] - PI))).exp()
+}
+
+
+fn egg_holder(x: &[f64]) -> f64 {
+    let a = -(x[1] + 47.0) * (x[1] + x[0] / 2.0 + 47.0).abs().sqrt().sin();
+    let b = -x[0] * (x[0] - (x[1] + 47.0)).abs().sqrt().sin();
+    a + b
+}
+
+fn exponential(x: &[f64]) -> f64 {
+    -(-0.5 * sum_sq(x)).exp()
+}
+
+fn giunta(x: &[f64]) -> f64 {
+    0.6 + x
+        .iter()
+        .map(|v| {
+            let u = 16.0 / 15.0 * v - 1.0;
+            u.sin() + sq(u.sin()) + (1.0 / 50.0) * (4.0 * u).sin()
+        })
+        .sum::<f64>()
+}
+
+fn goldstein_price(x: &[f64]) -> f64 {
+    let (a, b) = (x[0], x[1]);
+    let t1 = 1.0
+        + sq(a + b + 1.0)
+            * (19.0 - 14.0 * a + 3.0 * a * a - 14.0 * b + 6.0 * a * b + 3.0 * b * b);
+    let t2 = 30.0
+        + sq(2.0 * a - 3.0 * b)
+            * (18.0 - 32.0 * a + 12.0 * a * a + 48.0 * b - 36.0 * a * b + 27.0 * b * b);
+    t1 * t2
+}
+
+fn griewank(x: &[f64]) -> f64 {
+    let s = sum_sq(x) / 4000.0;
+    let p: f64 = x
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos())
+        .product();
+    s - p + 1.0
+}
+
+fn hansen(x: &[f64]) -> f64 {
+    let s1: f64 = (0..5)
+        .map(|i| {
+            let i = i as f64;
+            (i + 1.0) * ((i + (i + 1.0) * x[0]).cos())
+        })
+        .sum();
+    let s2: f64 = (0..5)
+        .map(|j| {
+            let j = j as f64;
+            (j + 1.0) * ((j + 2.0 + (j + 1.0) * x[1]).cos())
+        })
+        .sum();
+    s1 * s2
+}
+
+const H3_A: [[f64; 3]; 4] = [
+    [3.0, 10.0, 30.0],
+    [0.1, 10.0, 35.0],
+    [3.0, 10.0, 30.0],
+    [0.1, 10.0, 35.0],
+];
+const H3_P: [[f64; 3]; 4] = [
+    [0.3689, 0.1170, 0.2673],
+    [0.4699, 0.4387, 0.7470],
+    [0.1091, 0.8732, 0.5547],
+    [0.0381, 0.5743, 0.8828],
+];
+const H_C: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+
+fn hartmann3(x: &[f64]) -> f64 {
+    -(0..4)
+        .map(|i| {
+            let s: f64 = (0..3).map(|j| H3_A[i][j] * sq(x[j] - H3_P[i][j])).sum();
+            H_C[i] * (-s).exp()
+        })
+        .sum::<f64>()
+}
+
+const H6_A: [[f64; 6]; 4] = [
+    [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+    [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+    [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+    [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+];
+const H6_P: [[f64; 6]; 4] = [
+    [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+    [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+    [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+    [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+];
+
+fn hartmann6(x: &[f64]) -> f64 {
+    -(0..4)
+        .map(|i| {
+            let s: f64 = (0..6).map(|j| H6_A[i][j] * sq(x[j] - H6_P[i][j])).sum();
+            H_C[i] * (-s).exp()
+        })
+        .sum::<f64>()
+}
+
+fn helical_valley(x: &[f64]) -> f64 {
+    let theta = if x[0] >= 0.0 {
+        (x[1] / x[0].max(1e-12)).atan() / (2.0 * PI)
+    } else {
+        ((x[1] / x[0].min(-1e-12)).atan() + PI) / (2.0 * PI)
+    };
+    100.0 * (sq(x[2] - 10.0 * theta) + sq((sq(x[0]) + sq(x[1])).sqrt() - 1.0)) + sq(x[2])
+}
+
+fn himmelblau(x: &[f64]) -> f64 {
+    sq(sq(x[0]) + x[1] - 11.0) + sq(x[0] + sq(x[1]) - 7.0)
+}
+
+fn holder_table(x: &[f64]) -> f64 {
+    let g = (1.0 - (sq(x[0]) + sq(x[1])).sqrt() / PI).abs();
+    -(x[0].sin() * x[1].cos() * g.exp()).abs()
+}
+
+fn hosaki(x: &[f64]) -> f64 {
+    (1.0 - 8.0 * x[0] + 7.0 * sq(x[0]) - 7.0 / 3.0 * x[0].powi(3) + 0.25 * x[0].powi(4))
+        * sq(x[1])
+        * (-x[1]).exp()
+}
+
+fn jennrich_sampson(x: &[f64]) -> f64 {
+    (1..=10)
+        .map(|i| {
+            let i = i as f64;
+            sq(2.0 + 2.0 * i - ((i * x[0]).exp() + (i * x[1]).exp()))
+        })
+        .sum()
+}
+
+fn langermann(x: &[f64]) -> f64 {
+    const A: [[f64; 2]; 5] = [[3.0, 5.0], [5.0, 2.0], [2.0, 1.0], [1.0, 4.0], [7.0, 9.0]];
+    const C: [f64; 5] = [1.0, 2.0, 5.0, 2.0, 3.0];
+    -(0..5)
+        .map(|i| {
+            let s = sq(x[0] - A[i][0]) + sq(x[1] - A[i][1]);
+            C[i] * (-s / PI).exp() * (PI * s).cos()
+        })
+        .sum::<f64>()
+}
+
+fn levy(x: &[f64]) -> f64 {
+    let w: Vec<f64> = x.iter().map(|v| 1.0 + (v - 1.0) / 4.0).collect();
+    let n = w.len();
+    let mut s = sq((PI * w[0]).sin());
+    for i in 0..n - 1 {
+        s += sq(w[i] - 1.0) * (1.0 + 10.0 * sq((PI * w[i] + 1.0).sin()));
+    }
+    s + sq(w[n - 1] - 1.0) * (1.0 + sq((2.0 * PI * w[n - 1]).sin()))
+}
+
+fn levy13(x: &[f64]) -> f64 {
+    sq((3.0 * PI * x[0]).sin())
+        + sq(x[0] - 1.0) * (1.0 + sq((3.0 * PI * x[1]).sin()))
+        + sq(x[1] - 1.0) * (1.0 + sq((2.0 * PI * x[1]).sin()))
+}
+
+
+fn mccormick(x: &[f64]) -> f64 {
+    (x[0] + x[1]).sin() + sq(x[0] - x[1]) - 1.5 * x[0] + 2.5 * x[1] + 1.0
+}
+
+fn michalewicz(x: &[f64]) -> f64 {
+    let m = 10.0;
+    -x.iter()
+        .enumerate()
+        .map(|(i, v)| v.sin() * ((i as f64 + 1.0) * sq(*v) / PI).sin().powf(2.0 * m))
+        .sum::<f64>()
+}
+
+fn miele_cantrell(x: &[f64]) -> f64 {
+    (x[0].exp() - x[1]).powi(4)
+        + 100.0 * (x[1] - x[2]).powi(6)
+        + (x[2] - x[3]).tan().powi(4)
+        + x[0].powi(8)
+}
+
+
+fn periodic(x: &[f64]) -> f64 {
+    1.0 + sq(x[0].sin()) + sq(x[1].sin()) - 0.1 * (-(sq(x[0]) + sq(x[1]))).exp()
+}
+
+fn powell(x: &[f64]) -> f64 {
+    sq(x[0] + 10.0 * x[1])
+        + 5.0 * sq(x[2] - x[3])
+        + (x[1] - 2.0 * x[2]).powi(4)
+        + 10.0 * (x[0] - x[3]).powi(4)
+}
+
+fn qing(x: &[f64]) -> f64 {
+    x.iter()
+        .enumerate()
+        .map(|(i, v)| sq(v * v - (i as f64 + 1.0)))
+        .sum()
+}
+
+fn rastrigin(x: &[f64]) -> f64 {
+    10.0 * x.len() as f64
+        + x.iter()
+            .map(|v| v * v - 10.0 * (2.0 * PI * v).cos())
+            .sum::<f64>()
+}
+
+fn rosenbrock(x: &[f64]) -> f64 {
+    x.windows(2)
+        .map(|w| 100.0 * sq(w[1] - sq(w[0])) + sq(1.0 - w[0]))
+        .sum()
+}
+
+fn salomon(x: &[f64]) -> f64 {
+    let r = sum_sq(x).sqrt();
+    1.0 - (2.0 * PI * r).cos() + 0.1 * r
+}
+
+fn schaffer2(x: &[f64]) -> f64 {
+    let num = sq((sq(x[0]) - sq(x[1])).sin()) - 0.5;
+    let den = sq(1.0 + 0.001 * (sq(x[0]) + sq(x[1])));
+    0.5 + num / den
+}
+
+fn schwefel26(x: &[f64]) -> f64 {
+    418.9829 * x.len() as f64
+        - x.iter().map(|v| v * v.abs().sqrt().sin()).sum::<f64>()
+}
+
+fn shekel5(x: &[f64]) -> f64 {
+    const A: [[f64; 4]; 5] = [
+        [4.0, 4.0, 4.0, 4.0],
+        [1.0, 1.0, 1.0, 1.0],
+        [8.0, 8.0, 8.0, 8.0],
+        [6.0, 6.0, 6.0, 6.0],
+        [3.0, 7.0, 3.0, 7.0],
+    ];
+    const C: [f64; 5] = [0.1, 0.2, 0.2, 0.4, 0.4];
+    -(0..5)
+        .map(|i| {
+            let s: f64 = (0..4).map(|j| sq(x[j] - A[i][j])).sum();
+            1.0 / (s + C[i])
+        })
+        .sum::<f64>()
+}
+
+fn shubert(x: &[f64]) -> f64 {
+    let s1: f64 = (1..=5)
+        .map(|i| {
+            let i = i as f64;
+            i * ((i + 1.0) * x[0] + i).cos()
+        })
+        .sum();
+    let s2: f64 = (1..=5)
+        .map(|i| {
+            let i = i as f64;
+            i * ((i + 1.0) * x[1] + i).cos()
+        })
+        .sum();
+    s1 * s2
+}
+
+fn six_hump_camel(x: &[f64]) -> f64 {
+    (4.0 - 2.1 * sq(x[0]) + x[0].powi(4) / 3.0) * sq(x[0]) + x[0] * x[1]
+        + (-4.0 + 4.0 * sq(x[1])) * sq(x[1])
+}
+
+fn sphere(x: &[f64]) -> f64 {
+    sum_sq(x)
+}
+
+fn styblinski_tang(x: &[f64]) -> f64 {
+    0.5 * x
+        .iter()
+        .map(|v| v.powi(4) - 16.0 * sq(*v) + 5.0 * v)
+        .sum::<f64>()
+}
+
+fn trid(x: &[f64]) -> f64 {
+    let s1: f64 = x.iter().map(|v| sq(v - 1.0)).sum();
+    let s2: f64 = x.windows(2).map(|w| w[0] * w[1]).sum();
+    s1 - s2
+}
+
+fn weierstrass(x: &[f64]) -> f64 {
+    let (a, b, kmax) = (0.5f64, 3.0f64, 20);
+    let n = x.len() as f64;
+    let inner = |v: f64| -> f64 {
+        (0..=kmax)
+            .map(|k| a.powi(k) * (2.0 * PI * b.powi(k) * (v + 0.5)).cos())
+            .sum()
+    };
+    let offset: f64 = (0..=kmax)
+        .map(|k| a.powi(k) * (PI * b.powi(k)).cos())
+        .sum();
+    x.iter().map(|v| inner(*v)).sum::<f64>() - n * offset
+}
+
+fn zakharov(x: &[f64]) -> f64 {
+    let s1 = sum_sq(x);
+    let s2: f64 = x
+        .iter()
+        .enumerate()
+        .map(|(i, v)| 0.5 * (i as f64 + 1.0) * v)
+        .sum();
+    s1 + sq(s2) + s2.powi(4)
+}
+
+
+
+
+
+
+
+
+fn trigonometric02(x: &[f64]) -> f64 {
+    1.0 + x
+        .iter()
+        .map(|v| {
+            8.0 * sq((7.0 * sq(v - 0.9)).sin())
+                + 6.0 * sq((14.0 * sq(v - 0.9)).sin())
+                + sq(v - 0.9)
+        })
+        .sum::<f64>()
+}
+
+
+fn wayburn_seader02(x: &[f64]) -> f64 {
+    sq(1.613 - 4.0 * sq(x[0] - 0.3125) - 4.0 * sq(x[1] - 1.625)) + sq(x[1] - 1.0)
+}
+
+// ----- the registry ----------------------------------------------------------
+
+/// All 56 problems with evalset-style bounds.
+pub fn all_functions() -> Vec<TestFunction> {
+    let c = TestFunction::cube;
+    vec![
+        c("ackley", 5, -15.0, 30.0, 0.0, Some(vec![0.0; 5]), ackley),
+        TestFunction {
+            name: "adjiman",
+            dim: 2,
+            bounds: vec![(-1.0, 2.0), (-1.0, 1.0)],
+            fmin: -2.02181,
+            argmin: Some(vec![2.0, 0.10578]),
+            f: adjiman,
+        },
+        c("alpine01", 6, -10.0, 10.0, 0.0, Some(vec![0.0; 6]), alpine01),
+        c("alpine02", 2, 0.0, 10.0, -6.1295, Some(vec![7.91705268, 4.81584232]), alpine02),
+        c("beale", 2, -4.5, 4.5, 0.0, Some(vec![3.0, 0.5]), beale),
+        c("bird", 2, -2.0 * PI, 2.0 * PI, -106.7645367, Some(vec![4.70104313, 3.15294601]), bird),
+        c("bohachevsky1", 2, -100.0, 100.0, 0.0, Some(vec![0.0, 0.0]), bohachevsky1),
+        c("booth", 2, -10.0, 10.0, 0.0, Some(vec![1.0, 3.0]), booth),
+        TestFunction {
+            name: "branin",
+            dim: 2,
+            bounds: vec![(-5.0, 10.0), (0.0, 15.0)],
+            fmin: 0.39788735772973816,
+            argmin: Some(vec![PI, 2.275]),
+            f: branin,
+        },
+        TestFunction {
+            name: "bukin06",
+            dim: 2,
+            bounds: vec![(-15.0, -5.0), (-3.0, 3.0)],
+            fmin: 0.0,
+            argmin: Some(vec![-10.0, 1.0]),
+            f: bukin06,
+        },
+        c("carrom_table", 2, -10.0, 10.0, -24.15681551650653, Some(vec![9.646157266348881, 9.646134286497169]), carrom_table),
+        c("cigar", 8, -10.0, 10.0, 0.0, Some(vec![0.0; 8]), cigar),
+        c("cross_in_tray", 2, -10.0, 10.0, -2.062611870822739, Some(vec![1.349406685353340, 1.349406608602084]), cross_in_tray),
+        c("csendes", 4, -1.0, 1.0, 0.0, Some(vec![0.0; 4]), csendes),
+        c("deb01", 4, -1.0, 1.0, -1.0, Some(vec![0.1; 4]), deb01),
+        c("deflected_corrugated_spring", 4, 0.0, 10.0, 0.0, Some(vec![5.0; 4]), deflected_corrugated_spring),
+        c("dixon_price", 4, -10.0, 10.0, 0.0, Some(vec![
+            1.0,
+            2f64.powf(-0.5),
+            2f64.powf(-0.75),
+            2f64.powf(-0.875),
+        ]), dixon_price),
+        c("drop_wave", 2, -5.12, 5.12, -1.0, Some(vec![0.0, 0.0]), drop_wave),
+        c("easom", 2, -100.0, 100.0, -1.0, Some(vec![PI, PI]), easom),
+        c("egg_holder", 2, -512.0, 512.0, -959.6406627208506, Some(vec![512.0, 404.2318058008512]), egg_holder),
+        c("exponential", 6, -1.0, 1.0, -1.0, Some(vec![0.0; 6]), exponential),
+        c("giunta", 2, -1.0, 1.0, 0.06447042053690566, Some(vec![0.4673200277395354, 0.4673200169591304]), giunta),
+        c("goldstein_price", 2, -2.0, 2.0, 3.0, Some(vec![0.0, -1.0]), goldstein_price),
+        c("griewank", 6, -600.0, 600.0, 0.0, Some(vec![0.0; 6]), griewank),
+        c("hansen", 2, -10.0, 10.0, -176.54179, None, hansen),
+        c("hartmann3", 3, 0.0, 1.0, -3.8627797873327696, Some(vec![0.11461434, 0.55564885, 0.85254695]), hartmann3),
+        c("hartmann6", 6, 0.0, 1.0, -3.322368011391339, Some(vec![
+            0.20168952, 0.15001069, 0.47687398, 0.27533243, 0.31165162, 0.65730054,
+        ]), hartmann6),
+        c("helical_valley", 3, -10.0, 10.0, 0.0, Some(vec![1.0, 0.0, 0.0]), helical_valley),
+        c("himmelblau", 2, -6.0, 6.0, 0.0, Some(vec![3.0, 2.0]), himmelblau),
+        c("holder_table", 2, -10.0, 10.0, -19.20850256788675, Some(vec![8.055023472141116, 9.664590028909654]), holder_table),
+        TestFunction {
+            name: "hosaki",
+            dim: 2,
+            bounds: vec![(0.0, 5.0), (0.0, 6.0)],
+            fmin: -2.3458115761013247,
+            argmin: Some(vec![4.0, 2.0]),
+            f: hosaki,
+        },
+        c("jennrich_sampson", 2, -1.0, 1.0, 124.36218235561473, Some(vec![0.257825, 0.257825]), jennrich_sampson),
+        c("langermann", 2, 0.0, 10.0, -5.1621259, None, langermann),
+        c("levy", 8, -10.0, 10.0, 0.0, Some(vec![1.0; 8]), levy),
+        c("levy13", 2, -10.0, 10.0, 0.0, Some(vec![1.0, 1.0]), levy13),
+        TestFunction {
+            name: "mccormick",
+            dim: 2,
+            bounds: vec![(-1.5, 4.0), (-3.0, 4.0)],
+            fmin: -1.913222954981037,
+            argmin: Some(vec![-0.5471975602214493, -1.547197559268372]),
+            f: mccormick,
+        },
+        c("michalewicz", 5, 0.0, PI, -4.687658, None, michalewicz),
+        c("miele_cantrell", 4, -1.0, 1.0, 0.0, Some(vec![0.0, 1.0, 1.0, 1.0]), miele_cantrell),
+        c("periodic", 2, -10.0, 10.0, 0.9, Some(vec![0.0, 0.0]), periodic),
+        c("powell", 4, -4.0, 5.0, 0.0, Some(vec![0.0; 4]), powell),
+        c("qing", 5, -500.0, 500.0, 0.0, Some(vec![
+            1.0,
+            2f64.sqrt(),
+            3f64.sqrt(),
+            2.0,
+            5f64.sqrt(),
+        ]), qing),
+        c("rastrigin", 8, -5.12, 5.12, 0.0, Some(vec![0.0; 8]), rastrigin),
+        c("rosenbrock", 5, -5.0, 10.0, 0.0, Some(vec![1.0; 5]), rosenbrock),
+        c("salomon", 5, -100.0, 100.0, 0.0, Some(vec![0.0; 5]), salomon),
+        c("schaffer2", 2, -100.0, 100.0, 0.0, Some(vec![0.0, 0.0]), schaffer2),
+        c("schwefel26", 2, -500.0, 500.0, 0.0, Some(vec![420.968746, 420.968746]), schwefel26),
+        c("shekel5", 4, 0.0, 10.0, -10.152719932456289, Some(vec![4.0, 4.0, 4.0, 4.0]), shekel5),
+        c("shubert", 2, -10.0, 10.0, -186.7309, None, shubert),
+        c("six_hump_camel", 2, -3.0, 3.0, -1.031628453489877, Some(vec![0.08984201368301331, -0.7126564032704135]), six_hump_camel),
+        c("sphere", 7, -5.12, 5.12, 0.0, Some(vec![0.0; 7]), sphere),
+        c("styblinski_tang", 5, -5.0, 5.0, -39.16616570377142 * 5.0, Some(vec![-2.903534018185960; 5]), styblinski_tang),
+        c("trid", 6, -36.0, 36.0, -50.0, Some(vec![6.0, 10.0, 12.0, 12.0, 10.0, 6.0]), trid),
+        c("trigonometric02", 5, -500.0, 500.0, 1.0, Some(vec![0.9; 5]), trigonometric02),
+        c("wayburn_seader02", 2, -500.0, 500.0, 0.0, Some(vec![0.200138974728779, 1.0]), wayburn_seader02),
+        c("weierstrass", 4, -0.5, 0.5, 0.0, Some(vec![0.0; 4]), weierstrass),
+        c("zakharov", 5, -5.0, 10.0, 0.0, Some(vec![0.0; 5]), zakharov),
+    ]
+}

@@ -1,0 +1,167 @@
+//! High-Performance Linpack tuning workload (§6): a performance model of
+//! HPL on a 16-node cluster (the MN-1b substitution).
+//!
+//! HPL's achieved GFLOPS depends strongly on the problem size N, the
+//! panel block size NB, the P×Q process grid, and the broadcast/lookahead
+//! algorithms; the model below reproduces the well-known sensitivities
+//! (NB sweet spot from cache/panel trade-off, flat-ish N saturation,
+//! tall-thin grids hurting broadcast, algorithmic variants worth a few
+//! percent). Objective: maximize GFLOPS.
+
+use crate::core::OptunaError;
+use crate::trial::TrialApi;
+
+/// Cluster peak in GFLOPS (16 nodes × 500 GFLOPS).
+pub const PEAK_GFLOPS: f64 = 8000.0;
+/// Total processes (P×Q must equal this).
+pub const N_PROCS: i64 = 16;
+
+/// One HPL configuration.
+#[derive(Debug, Clone)]
+pub struct HplConfig {
+    pub n: i64,
+    pub nb: i64,
+    pub p: i64,
+    pub q: i64,
+    pub bcast: String,
+    pub depth: i64,
+    pub swap: String,
+    pub lookahead: i64,
+}
+
+/// Suggest the HPL space. P is drawn from the divisors of 16; Q follows.
+pub fn suggest_config<T: TrialApi>(t: &mut T) -> Result<HplConfig, OptunaError> {
+    let p_str = t.suggest_categorical("p", &["1", "2", "4", "8", "16"])?;
+    let p: i64 = p_str.parse().unwrap();
+    Ok(HplConfig {
+        n: t.suggest_int("n_thousands", 10, 120)? * 1000,
+        nb: t.suggest_int("nb", 32, 512)?,
+        p,
+        q: N_PROCS / p,
+        bcast: t.suggest_categorical("bcast", &["1rg", "1rM", "2rg", "2rM", "blonG", "blonM"])?,
+        depth: t.suggest_int("depth", 0, 1)?,
+        swap: t.suggest_categorical("swap", &["bin-exch", "long", "mix"])?,
+        lookahead: t.suggest_int("lookahead", 0, 2)?,
+    })
+}
+
+impl HplConfig {
+    /// Modeled sustained GFLOPS (maximize).
+    pub fn gflops(&self) -> f64 {
+        // N saturation: efficiency rises with memory utilization
+        let n_eff = {
+            let frac = self.n as f64 / 120_000.0;
+            (0.55 + 0.45 * frac.powf(0.35)).min(1.0)
+        };
+        // NB sweet spot near 192 (cache blocking vs panel overhead)
+        let nb_eff = {
+            let x = (self.nb as f64 / 192.0).ln();
+            (1.0 - 0.16 * x * x).max(0.4)
+        };
+        // grid: near-square grids broadcast best; Q >= P preferred
+        let grid_eff = {
+            let ratio = self.q as f64 / self.p as f64; // 16→1/16 .. 16
+            let lr = (ratio / 4.0).ln(); // optimum around Q/P = 4 (2x8? use 4)
+            (1.0 - 0.05 * lr * lr).max(0.6)
+        };
+        let bcast_eff = match self.bcast.as_str() {
+            "1rM" => 1.00,
+            "1rg" => 0.985,
+            "2rM" => 0.995,
+            "2rg" => 0.98,
+            "blonM" => 0.99,
+            _ => 0.975,
+        };
+        let depth_eff = if self.depth == 1 { 1.005 } else { 1.0 };
+        let swap_eff = match self.swap.as_str() {
+            "mix" => 1.0,
+            "long" => 0.995,
+            _ => 0.985,
+        };
+        let la_eff = match self.lookahead {
+            1 => 1.01,
+            2 => 1.005, // deeper lookahead costs memory
+            _ => 1.0,
+        };
+        PEAK_GFLOPS * n_eff * nb_eff * grid_eff * bcast_eff * depth_eff * swap_eff * la_eff
+    }
+
+    /// Simulated wallclock of one benchmark run (2/3·N³ flops).
+    pub fn run_seconds(&self) -> f64 {
+        let flops = 2.0 / 3.0 * (self.n as f64).powi(3);
+        flops / (self.gflops() * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> HplConfig {
+        HplConfig {
+            n: 100_000,
+            nb: 192,
+            p: 2,
+            q: 8,
+            bcast: "1rM".into(),
+            depth: 1,
+            swap: "mix".into(),
+            lookahead: 1,
+        }
+    }
+
+    #[test]
+    fn good_config_near_peak() {
+        let g = base().gflops();
+        assert!(g > 0.85 * PEAK_GFLOPS, "g={g}");
+        assert!(g <= PEAK_GFLOPS * 1.03);
+    }
+
+    #[test]
+    fn tiny_problem_is_inefficient() {
+        let small = HplConfig { n: 10_000, ..base() };
+        assert!(small.gflops() < 0.75 * PEAK_GFLOPS);
+    }
+
+    #[test]
+    fn extreme_nb_hurts() {
+        let tiny_nb = HplConfig { nb: 32, ..base() };
+        let huge_nb = HplConfig { nb: 512, ..base() };
+        assert!(tiny_nb.gflops() < base().gflops());
+        assert!(huge_nb.gflops() < base().gflops());
+    }
+
+    #[test]
+    fn degenerate_grid_hurts() {
+        let flat = HplConfig { p: 1, q: 16, ..base() };
+        let tall = HplConfig { p: 16, q: 1, ..base() };
+        assert!(tall.gflops() < base().gflops());
+        assert!(tall.gflops() < flat.gflops()); // Q >= P preferred
+    }
+
+    #[test]
+    fn runtime_grows_with_n() {
+        let small = HplConfig { n: 20_000, ..base() };
+        assert!(base().run_seconds() > small.run_seconds());
+    }
+
+    #[test]
+    fn study_finds_near_optimal() {
+        use crate::prelude::*;
+        use std::sync::Arc;
+        let study = Study::builder()
+            .name("hpl")
+            .direction(StudyDirection::Maximize)
+            .sampler(Arc::new(TpeSampler::new(0)))
+            .build()
+            .unwrap();
+        study
+            .optimize(120, |t| {
+                let cfg = suggest_config(t)?;
+                Ok(cfg.gflops())
+            })
+            .unwrap();
+        let best = study.best_value().unwrap().unwrap();
+        assert!(best > 0.9 * PEAK_GFLOPS, "best={best}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workloads: the benchmark problems and simulated applications the
+//! paper's evaluation section runs the framework on.
+
+pub mod distsim;
+pub mod evalset;
+pub mod ffmpeg_sim;
+pub mod hpl_sim;
+pub mod rocksdb_sim;
+pub mod svhn_surrogate;

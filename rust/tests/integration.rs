@@ -1,0 +1,225 @@
+//! Cross-module integration tests: full studies exercising sampler ×
+//! pruner × storage combinations, the distributed journal flow, and
+//! failure injection.
+
+use optuna_rs::core::OptunaError;
+use optuna_rs::prelude::*;
+use optuna_rs::sampler::Sampler;
+use std::sync::Arc;
+
+fn tmp_journal(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "optuna_it_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// Rosenbrock-2d objective used across combinations.
+fn rosenbrock(t: &mut Trial<'_>) -> Result<f64, OptunaError> {
+    let x = t.suggest_float("x", -2.0, 2.0)?;
+    let y = t.suggest_float("y", -1.0, 3.0)?;
+    Ok(100.0 * (y - x * x).powi(2) + (1.0 - x).powi(2))
+}
+
+#[test]
+fn every_sampler_improves_over_first_trials() {
+    let samplers: Vec<(&str, Arc<dyn Sampler>)> = vec![
+        ("random", Arc::new(RandomSampler::new(1))),
+        ("tpe", Arc::new(TpeSampler::new(1))),
+        ("cmaes", Arc::new(CmaEsSampler::new(1))),
+        ("tpe+cmaes", Arc::new(TpeCmaEsSampler::new(1))),
+        ("gp", Arc::new(GpSampler::new(1))),
+        ("rf", Arc::new(RfSampler::new(1))),
+        ("grid", Arc::new(GridSampler::new(
+            vec![
+                ("x".into(), Distribution::float(-2.0, 2.0),
+                 (0..10).map(|i| -2.0 + 4.0 * i as f64 / 9.0).collect()),
+                ("y".into(), Distribution::float(-1.0, 3.0),
+                 (0..10).map(|i| -1.0 + 4.0 * i as f64 / 9.0).collect()),
+            ],
+            1,
+        ))),
+    ];
+    for (name, sampler) in samplers {
+        let study = Study::builder()
+            .name(&format!("it-{name}"))
+            .sampler(sampler)
+            .build()
+            .unwrap();
+        study.optimize(80, rosenbrock).unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 80, "{name}");
+        let first10 = trials[..10]
+            .iter()
+            .filter_map(|t| t.value)
+            .fold(f64::INFINITY, f64::min);
+        let best = study.best_value().unwrap().unwrap();
+        assert!(best <= first10, "{name}: best {best} vs first-10 {first10}");
+        assert!(best < 120.0, "{name}: best {best} unreasonably bad");
+    }
+}
+
+#[test]
+fn every_pruner_composes_with_study_loop() {
+    let pruners: Vec<(&str, Arc<dyn Pruner>)> = vec![
+        ("nop", Arc::new(NopPruner)),
+        ("asha", Arc::new(AshaPruner::new())),
+        ("median", Arc::new(MedianPruner::new())),
+        ("percentile", Arc::new(PercentilePruner::new(40.0))),
+        ("sync-sh", Arc::new(SyncHalvingPruner::new(16))),
+        ("hyperband", Arc::new(HyperbandPruner::new(3, 1, 4))),
+    ];
+    for (name, pruner) in pruners {
+        let study = Study::builder()
+            .name(&format!("itp-{name}"))
+            .sampler(Arc::new(RandomSampler::new(2)))
+            .pruner(pruner)
+            .build()
+            .unwrap();
+        study
+            .optimize(60, |t| {
+                let q = t.suggest_float("q", 0.0, 1.0)?;
+                for step in 1..=16u64 {
+                    t.report(step, q + 1.0 / step as f64)?;
+                    if t.should_prune()? {
+                        return Err(OptunaError::TrialPruned);
+                    }
+                }
+                Ok(q)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 60, "{name}");
+        let complete = trials.iter().filter(|t| t.state == TrialState::Complete).count();
+        assert!(complete >= 1, "{name}: nothing completed");
+        if name != "nop" {
+            let pruned = trials.iter().filter(|t| t.state == TrialState::Pruned).count();
+            assert!(pruned > 0, "{name}: pruner never fired");
+        }
+    }
+}
+
+#[test]
+fn journal_storage_multithread_study_with_pruning() {
+    let path = tmp_journal("mt");
+    let storage = Arc::new(JournalStorage::open(&path).unwrap());
+    let study = Study::builder()
+        .name("it-journal")
+        .storage(storage)
+        .sampler(Arc::new(TpeSampler::new(3)))
+        .pruner(Arc::new(AshaPruner::new()))
+        .build()
+        .unwrap();
+    study
+        .optimize_parallel(48, 6, |t| {
+            let x = t.suggest_float("x", -3.0, 3.0)?;
+            for step in 1..=8u64 {
+                t.report(step, x * x + 2.0 / step as f64)?;
+                if t.should_prune()? {
+                    return Err(OptunaError::TrialPruned);
+                }
+            }
+            Ok(x * x)
+        })
+        .unwrap();
+    // a second handle replays the same study
+    let verify = Study::builder()
+        .name("it-journal")
+        .storage(Arc::new(JournalStorage::open(&path).unwrap()))
+        .build()
+        .unwrap();
+    let trials = verify.trials().unwrap();
+    assert_eq!(trials.len(), 48);
+    let mut nums: Vec<u64> = trials.iter().map(|t| t.number).collect();
+    nums.sort_unstable();
+    assert_eq!(nums, (0..48).collect::<Vec<u64>>());
+    assert!(verify.best_value().unwrap().unwrap() < 1.0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn objective_panics_do_not_corrupt_storage() {
+    // a failing objective (error, not panic) midway must leave a coherent
+    // study behind
+    let study = Study::builder()
+        .name("it-fail")
+        .sampler(Arc::new(RandomSampler::new(4)))
+        .build()
+        .unwrap();
+    study
+        .optimize(30, |t| {
+            let x = t.suggest_float("x", 0.0, 1.0)?;
+            if (t.number() % 3) == 1 {
+                return Err(OptunaError::Objective("injected".into()));
+            }
+            Ok(x)
+        })
+        .unwrap();
+    let trials = study.trials().unwrap();
+    assert_eq!(trials.len(), 30);
+    assert_eq!(
+        trials.iter().filter(|t| t.state == TrialState::Failed).count(),
+        10
+    );
+    // failed trials never pollute the sampler's observations
+    assert!(study.best_value().unwrap().unwrap() >= 0.0);
+}
+
+#[test]
+fn dynamic_space_with_relational_sampler_stays_consistent() {
+    // CMA-ES + conditional branches: the intersection space shrinks to the
+    // common params; branch params fall back to independent sampling.
+    let study = Study::builder()
+        .name("it-dyn")
+        .sampler(Arc::new(CmaEsSampler::new(5)))
+        .build()
+        .unwrap();
+    study
+        .optimize(60, |t| {
+            let x = t.suggest_float("x", -1.0, 1.0)?; // common
+            let branch = t.suggest_categorical("b", &["p", "q"])?;
+            let extra = if branch == "p" {
+                t.suggest_float("p_only", 0.0, 1.0)?
+            } else {
+                t.suggest_float("q_only", 0.0, 2.0)?
+            };
+            Ok(x * x + extra * 0.1)
+        })
+        .unwrap();
+    let trials = study.trials().unwrap();
+    assert_eq!(trials.len(), 60);
+    for t in &trials {
+        let has_p = t.params.contains_key("p_only");
+        let has_q = t.params.contains_key("q_only");
+        assert!(has_p ^ has_q, "exactly one branch param per trial");
+    }
+}
+
+#[test]
+fn maximize_and_minimize_directions_agree_with_sign_flip() {
+    let run = |direction: StudyDirection| -> f64 {
+        let study = Study::builder()
+            .name("it-dir")
+            .direction(direction)
+            .sampler(Arc::new(TpeSampler::new(6)))
+            .build()
+            .unwrap();
+        let sign = direction.min_sign();
+        study
+            .optimize(60, move |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(sign * (x - 0.7) * (x - 0.7))
+            })
+            .unwrap();
+        let best = study.best_trial().unwrap().unwrap();
+        best.param("x").unwrap().as_f64().unwrap()
+    };
+    let x_min = run(StudyDirection::Minimize);
+    let x_max = run(StudyDirection::Maximize);
+    assert!((x_min - 0.7).abs() < 0.15, "minimize found {x_min}");
+    assert!((x_max - 0.7).abs() < 0.15, "maximize found {x_max}");
+}

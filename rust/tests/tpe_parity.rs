@@ -1,0 +1,166 @@
+//! Cross-language parity: the Rust native TPE scorer must reproduce the
+//! pure-jnp oracle (ref.py) on the fixture vectors `make artifacts`
+//! writes, and the PJRT Pallas-kernel backend must agree with the native
+//! backend on live inputs.
+
+use optuna_rs::runtime::{Runtime, TpeKernelScorer};
+use optuna_rs::sampler::{CandidateScorer, ParzenEstimator};
+use optuna_rs::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn mixture_from_json(j: &Json, low: f64, high: f64) -> ParzenEstimator {
+    let get = |k: &str| -> Vec<f64> {
+        j.get(k)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    // keep only live components (weight > 0): the Rust estimator carries
+    // no padding
+    let mus = get("mus");
+    let sigmas = get("sigmas");
+    let weights = get("weights");
+    let mut pe = ParzenEstimator { mus: vec![], sigmas: vec![], weights: vec![], low, high };
+    for i in 0..mus.len() {
+        if weights[i] > 0.0 {
+            pe.mus.push(mus[i]);
+            pe.sigmas.push(sigmas[i]);
+            pe.weights.push(weights[i]);
+        }
+    }
+    pe
+}
+
+#[test]
+fn native_scorer_matches_jnp_oracle_fixtures() {
+    let path = artifacts_dir().join("tpe_fixtures.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping: run `make artifacts` first ({path:?} missing)");
+        return;
+    };
+    let doc = Json::parse(&text).unwrap();
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let low = case.get("low").unwrap().as_f64().unwrap();
+        let high = case.get("high").unwrap().as_f64().unwrap();
+        let below = mixture_from_json(case.get("below").unwrap(), low, high);
+        let above = mixture_from_json(case.get("above").unwrap(), low, high);
+        let cand: Vec<f64> = case
+            .get("cand")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let want_logl: Vec<f64> = case
+            .get("logl")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let want_logg: Vec<f64> = case
+            .get("logg")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (i, &x) in cand.iter().enumerate() {
+            let gl = below.logpdf(x);
+            let gg = above.logpdf(x);
+            // oracle ran in f32; allow f32-level slack
+            assert!(
+                (gl - want_logl[i]).abs() < 3e-4 * (1.0 + want_logl[i].abs()),
+                "case {ci} cand {i}: logl {gl} vs oracle {}",
+                want_logl[i]
+            );
+            assert!(
+                (gg - want_logg[i]).abs() < 3e-4 * (1.0 + want_logg[i].abs()),
+                "case {ci} cand {i}: logg {gg} vs oracle {}",
+                want_logg[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_kernel_backend_matches_native() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::open(artifacts_dir()).unwrap());
+    let scorer = TpeKernelScorer::new(rt).unwrap();
+    let mut rng = optuna_rs::util::rng::Pcg64::new(99);
+    for case in 0..10 {
+        let low = rng.uniform_range(-10.0, 0.0);
+        let high = low + rng.uniform_range(0.5, 20.0);
+        let obs_b: Vec<f64> = (0..rng.int_range(1, 40) as usize)
+            .map(|_| rng.uniform_range(low, high))
+            .collect();
+        let obs_a: Vec<f64> = (0..rng.int_range(1, 60) as usize)
+            .map(|_| rng.uniform_range(low, high))
+            .collect();
+        let below = ParzenEstimator::fit(&obs_b, low, high);
+        let above = ParzenEstimator::fit(&obs_a, low, high);
+        let cand: Vec<f64> = (0..64).map(|_| rng.uniform_range(low, high)).collect();
+        let kernel_scores = scorer.score(&cand, &below, &above);
+        for (i, &x) in cand.iter().enumerate() {
+            let native = below.logpdf(x) - above.logpdf(x);
+            assert!(
+                (kernel_scores[i] - native).abs() < 2e-3 * (1.0 + native.abs()),
+                "case {case} cand {i}: kernel {} vs native {native}",
+                kernel_scores[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_and_native_backends_pick_same_argmax() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Arc::new(Runtime::open(artifacts_dir()).unwrap());
+    let scorer = TpeKernelScorer::new(rt).unwrap();
+    let mut rng = optuna_rs::util::rng::Pcg64::new(7);
+    let mut agree = 0;
+    let total = 20;
+    for _ in 0..total {
+        let low = 0.0;
+        let high = 10.0;
+        let obs_b: Vec<f64> = (0..8).map(|_| rng.uniform_range(2.0, 4.0)).collect();
+        let obs_a: Vec<f64> = (0..20).map(|_| rng.uniform_range(low, high)).collect();
+        let below = ParzenEstimator::fit(&obs_b, low, high);
+        let above = ParzenEstimator::fit(&obs_a, low, high);
+        let cand: Vec<f64> = (0..24).map(|_| rng.uniform_range(low, high)).collect();
+        let ks = scorer.score(&cand, &below, &above);
+        let ns: Vec<f64> = cand.iter().map(|&x| below.logpdf(x) - above.logpdf(x)).collect();
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        if argmax(&ks) == argmax(&ns) {
+            agree += 1;
+        }
+    }
+    // identical formulas; near-ties may flip under f32, allow one
+    assert!(agree >= total - 1, "argmax agreement {agree}/{total}");
+}
