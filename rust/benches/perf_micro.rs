@@ -7,6 +7,7 @@
 //!   4. Parzen logpdf throughput
 //!   5. storage throughput: in-memory vs journal (fsync off/on)
 //!   6. ASHA should_prune decision latency
+//!   7. delta-snapshot cache: ask/tell cycle cost, cached vs raw storage
 //!
 //! Knob: PERF_QUICK=1 shrinks iteration counts ~10x.
 
@@ -218,6 +219,47 @@ fn gamma_ablation() {
     }
 }
 
+fn storage_cache_ablation() {
+    print_header(
+        "delta-snapshot cache: ask/tell cycle on a pre-filled study",
+        &["prefill trials", "raw us/cycle", "cached us/cycle", "speedup"],
+    );
+    // The raw path pays one full-history deep clone per ask (O(n) per
+    // trial, O(n²) per study); the cached path folds in only the delta
+    // since the previous generation. ISSUE 1 acceptance: >= 5x at n=2000.
+    for &n in &[500usize, 2000] {
+        let mut cycle_us = [0.0f64; 2];
+        for (slot, cached) in [(0usize, false), (1, true)] {
+            let study = Study::builder()
+                .name("cache-ablation")
+                .storage_caching(cached)
+                .sampler(Arc::new(RandomSampler::new(0)))
+                .build()
+                .unwrap();
+            study
+                .optimize(n, |t| {
+                    let x = t.suggest_float("x", 0.0, 1.0)?;
+                    Ok(x)
+                })
+                .unwrap();
+            let cycles = scale(300);
+            let t0 = Instant::now();
+            for _ in 0..cycles {
+                let mut trial = study.ask().unwrap();
+                let x = trial.suggest_float("x", 0.0, 1.0).unwrap();
+                study.tell(trial, TrialOutcome::Complete(x)).unwrap();
+            }
+            cycle_us[slot] = t0.elapsed().as_secs_f64() / cycles as f64 * 1e6;
+        }
+        println!(
+            "{n} | {:.1} | {:.1} | {:.1}x",
+            cycle_us[0],
+            cycle_us[1],
+            cycle_us[0] / cycle_us[1]
+        );
+    }
+}
+
 fn main() {
     println!("perf_micro: set PERF_QUICK=1 for a fast smoke run");
     study_loop_overhead();
@@ -226,4 +268,5 @@ fn main() {
     parzen_throughput();
     asha_latency();
     gamma_ablation();
+    storage_cache_ablation();
 }

@@ -19,7 +19,15 @@
 //!    [`study::Study::optimize_parallel`] or across OS processes via the
 //!    `optuna` CLI.
 //!
-//! ```no_run
+//! Because storage is the only communication channel, it is also the
+//! scaling bottleneck; [`storage::CachedStorage`] (applied automatically
+//! by [`study::StudyBuilder`]) keeps generation-stamped shared snapshots
+//! and refreshes them with [`storage::Storage::get_trials_since`] deltas,
+//! making per-trial overhead O(new trials) instead of O(all trials). The
+//! consistency contract lives on the [`storage::Storage`] trait; the
+//! design rationale in `docs/ARCHITECTURE.md`.
+//!
+//! ```
 //! use optuna_rs::prelude::*;
 //! use std::sync::Arc;
 //!
@@ -28,12 +36,19 @@
 //!     .sampler(Arc::new(TpeSampler::new(42)))
 //!     .build()
 //!     .unwrap();
-//! study.optimize(100, |trial| {
+//! study.optimize(30, |trial| {
 //!     let x = trial.suggest_float("x", -10.0, 10.0)?;
 //!     Ok((x - 2.0).powi(2))
 //! }).unwrap();
 //! println!("best = {:?}", study.best_value().unwrap());
 //! ```
+//!
+//! # Feature flags
+//!
+//! * `pjrt` (off by default) — the PJRT/XLA execution path behind
+//!   [`runtime`] and [`mlmodel`]; needs the vendored `xla` binding crate.
+//!   Without it those modules compile as graceful stubs and the TPE
+//!   sampler scores candidates natively.
 
 pub mod core;
 pub mod util;
@@ -63,7 +78,7 @@ pub mod prelude {
         CmaEsSampler, GpSampler, GridSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler,
         TpeSampler,
     };
-    pub use crate::storage::{InMemoryStorage, JournalStorage, Storage};
+    pub use crate::storage::{CachedStorage, InMemoryStorage, JournalStorage, Storage};
     pub use crate::study::{Study, StudyBuilder, TrialOutcome};
     pub use crate::trial::{FixedTrial, Trial, TrialApi};
 }

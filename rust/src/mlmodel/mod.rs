@@ -12,7 +12,9 @@
 use std::sync::Arc;
 
 use crate::core::OptunaError;
-use crate::runtime::{literal_f32, literal_i32, scalar_i32, to_vec_f32, Runtime};
+use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
+use crate::runtime::{literal_f32, literal_i32, scalar_i32, to_vec_f32};
 use crate::util::rng::Pcg64;
 
 /// The tunable hyperparameters of one trial.
@@ -87,6 +89,7 @@ impl SyntheticSvhn {
 }
 
 /// One training session = one trial's model state.
+#[cfg(feature = "pjrt")]
 pub struct TrainSession {
     runtime: Arc<Runtime>,
     /// params then momentum literals, in manifest order (2·n_params).
@@ -96,6 +99,7 @@ pub struct TrainSession {
     step_count: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainSession {
     /// Initialize model parameters on-device for the given hyperparams.
     pub fn new(runtime: Arc<Runtime>, hp: &HyperParams, seed: i32) -> Result<Self, OptunaError> {
@@ -184,10 +188,45 @@ impl TrainSession {
     }
 }
 
+/// Stub session compiled when the `pjrt` feature is off: construction
+/// fails with `OptunaError::Runtime`, mirroring `runtime::Runtime`'s
+/// stub (a `Runtime` can never be opened, so no caller reaches the
+/// other methods).
+#[cfg(not(feature = "pjrt"))]
+pub struct TrainSession {
+    step_count: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl TrainSession {
+    pub fn new(
+        _runtime: Arc<Runtime>,
+        _hp: &HyperParams,
+        _seed: i32,
+    ) -> Result<Self, OptunaError> {
+        Err(OptunaError::Runtime(
+            "TrainSession needs the `pjrt` feature (vendored `xla` crate)".into(),
+        ))
+    }
+
+    pub fn train_step(&mut self, _x: &[f32], _y: &[i32]) -> Result<f64, OptunaError> {
+        Err(OptunaError::Runtime("pjrt feature disabled".into()))
+    }
+
+    pub fn eval(&self, _x: &[f32], _y: &[i32]) -> Result<(f64, f64), OptunaError> {
+        Err(OptunaError::Runtime("pjrt feature disabled".into()))
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step_count
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     fn runtime_or_skip() -> Option<Arc<Runtime>> {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
@@ -220,6 +259,7 @@ mod tests {
         assert_ne!(xa, xb);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn train_session_learns_on_synthetic_data() {
         let Some(rt) = runtime_or_skip() else { return };
@@ -244,6 +284,7 @@ mod tests {
         assert_eq!(sess.steps_taken(), 20);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn narrow_architecture_also_trains() {
         let Some(rt) = runtime_or_skip() else { return };
@@ -262,6 +303,7 @@ mod tests {
         assert!(loss.is_finite());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn oversized_width_rejected() {
         let Some(rt) = runtime_or_skip() else { return };

@@ -23,6 +23,11 @@ pub use successive_halving::SyncHalvingPruner;
 use crate::core::{FrozenTrial, StudyDirection};
 
 /// Everything a pruner may consult when deciding.
+///
+/// `trials` borrows the delta-refreshed storage snapshot fetched by
+/// `Trial::should_prune` (see [`crate::storage::CachedStorage`]), so a
+/// decision sees every intermediate value reported before the call
+/// without paying a full trial-table clone per step.
 pub struct PruningContext<'a> {
     pub direction: StudyDirection,
     /// Snapshot of every trial in the study (any state).

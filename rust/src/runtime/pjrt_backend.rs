@@ -1,0 +1,255 @@
+//! The real PJRT-backed runtime (`pjrt` feature): compiles HLO artifacts
+//! through the vendored `xla` crate and executes them on the CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::core::OptunaError;
+use crate::runtime::Manifest;
+use crate::sampler::{CandidateScorer, ParzenEstimator};
+
+fn rt_err<E: std::fmt::Display>(what: &str) -> impl FnOnce(E) -> OptunaError + '_ {
+    move |e| OptunaError::Runtime(format!("{what}: {e}"))
+}
+
+/// A PJRT CPU client plus a cache of compiled executables.
+///
+/// Thread-safety: the `xla` crate wrappers hold `Rc`s and raw pointers and
+/// are therefore not auto-`Send`/`Sync`, but the underlying PJRT CPU
+/// client is internally synchronized. All client/executable access is
+/// serialized behind `inner`'s mutex, and no wrapper object ever escapes
+/// this struct, so sharing `Runtime` across threads is sound — hence the
+/// manual `unsafe impl`s below.
+pub struct Runtime {
+    inner: Mutex<RuntimeInner>,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the runtime over an artifacts directory (from `make artifacts`).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime, OptunaError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        Ok(Runtime {
+            inner: Mutex::new(RuntimeInner { client, executables: HashMap::new() }),
+            dir,
+            manifest,
+        })
+    }
+
+    /// Default artifacts location: `$OPTUNA_RS_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime, OptunaError> {
+        let dir = std::env::var("OPTUNA_RS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    /// True if an artifacts directory looks usable (lets tests/examples
+    /// degrade gracefully when `make artifacts` hasn't run).
+    pub fn artifacts_available() -> bool {
+        let dir = std::env::var("OPTUNA_RS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Path::new(&dir).join("manifest.json").exists()
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    /// Compile a program into the executable cache (warm-up; `execute`
+    /// compiles lazily otherwise).
+    pub fn load(&self, name: &str) -> Result<(), OptunaError> {
+        let mut inner = self.inner.lock().unwrap();
+        self.load_locked(&mut inner, name)
+    }
+
+    fn load_locked(&self, inner: &mut RuntimeInner, name: &str) -> Result<(), OptunaError> {
+        if inner.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .ok_or_else(|| OptunaError::Runtime(format!("unknown program '{name}'")))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| OptunaError::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(rt_err("parse HLO text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner.client.compile(&comp).map_err(rt_err("compile"))?;
+        inner.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a program; returns the untupled output literals.
+    /// (aot.py lowers with return_tuple=True, so the raw result is a tuple.)
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, OptunaError> {
+        let spec = &self.manifest.programs[name];
+        if inputs.len() != spec.inputs.len() {
+            return Err(OptunaError::Runtime(format!(
+                "program '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        self.load_locked(&mut inner, name)?;
+        let exe = &inner.executables[name];
+        let result = exe.execute::<xla::Literal>(inputs).map_err(rt_err("execute"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync"))?;
+        drop(inner);
+        let outs = tuple.to_tuple().map_err(rt_err("untuple"))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(OptunaError::Runtime(format!(
+                "program '{name}' produced {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+// ----- literal helpers ------------------------------------------------------
+
+/// f32 vector → Literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal, OptunaError> {
+    let count: usize = shape.iter().product::<usize>().max(1);
+    if count != data.len() {
+        return Err(OptunaError::Runtime(format!(
+            "literal shape {shape:?} wants {count} elements, got {}",
+            data.len()
+        )));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(rt_err("reshape"))
+}
+
+/// i32 vector → Literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal, OptunaError> {
+    let count: usize = shape.iter().product::<usize>().max(1);
+    if count != data.len() {
+        return Err(OptunaError::Runtime(format!(
+            "literal shape {shape:?} wants {count} elements, got {}",
+            data.len()
+        )));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(rt_err("reshape"))
+}
+
+/// Scalar i32 Literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal → Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, OptunaError> {
+    lit.to_vec::<f32>().map_err(rt_err("to_vec f32"))
+}
+
+// ----- the TPE kernel scorer -------------------------------------------------
+
+/// [`CandidateScorer`] backed by the AOT-compiled Pallas `tpe_score`
+/// kernel: the L3 coordinator invoking the L1 kernel through PJRT on the
+/// sampler's hot loop.
+pub struct TpeKernelScorer {
+    runtime: Arc<Runtime>,
+    n_cand: usize,
+    n_comp: usize,
+}
+
+impl TpeKernelScorer {
+    pub fn new(runtime: Arc<Runtime>) -> Result<Self, OptunaError> {
+        // force-compile up front so suggest latency excludes compilation
+        runtime.load("tpe_score")?;
+        let n_cand = runtime.manifest.tpe_max_candidates;
+        let n_comp = runtime.manifest.tpe_max_components;
+        Ok(TpeKernelScorer { runtime, n_cand, n_comp })
+    }
+}
+
+impl CandidateScorer for TpeKernelScorer {
+    fn score(
+        &self,
+        cand: &[f64],
+        below: &ParzenEstimator,
+        above: &ParzenEstimator,
+    ) -> Vec<f64> {
+        // The trait has no Result channel (sampler hot path); on runtime
+        // failure we fall back to native scoring rather than panic.
+        let native = || -> Vec<f64> {
+            cand.iter()
+                .map(|&x| below.logpdf(x) - above.logpdf(x))
+                .collect()
+        };
+        if cand.len() > self.n_cand {
+            return native();
+        }
+        let run = || -> Result<Vec<f64>, OptunaError> {
+            let mut cand_pad = vec![0.0f32; self.n_cand];
+            for (i, &c) in cand.iter().enumerate() {
+                cand_pad[i] = c as f32;
+            }
+            let (bm, bs, bw) = below.to_kernel_inputs(self.n_comp);
+            let (am, asg, aw) = above.to_kernel_inputs(self.n_comp);
+            let bounds = [below.low as f32, below.high as f32];
+            let inputs = vec![
+                literal_f32(&cand_pad, &[self.n_cand])?,
+                literal_f32(&bm, &[self.n_comp])?,
+                literal_f32(&bs, &[self.n_comp])?,
+                literal_f32(&bw, &[self.n_comp])?,
+                literal_f32(&am, &[self.n_comp])?,
+                literal_f32(&asg, &[self.n_comp])?,
+                literal_f32(&aw, &[self.n_comp])?,
+                literal_f32(&bounds, &[2])?,
+            ];
+            let outs = self.runtime.execute("tpe_score", &inputs)?;
+            let score = to_vec_f32(&outs[0])?;
+            Ok(score[..cand.len()].iter().map(|&v| v as f64).collect())
+        };
+        match run() {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("tpe_score kernel failed ({e}); falling back to native");
+                native()
+            }
+        }
+    }
+
+    fn max_components(&self) -> usize {
+        self.n_comp
+    }
+
+    fn max_candidates(&self) -> usize {
+        self.n_cand
+    }
+}

@@ -1,0 +1,85 @@
+//! Stub runtime compiled when the `pjrt` feature is **off** (the
+//! default, since the vendored `xla` crate is not always present).
+//!
+//! Keeps the public `runtime` API shape so callers type-check unchanged:
+//! artifacts are reported unavailable, constructors fail with
+//! `OptunaError::Runtime`, and the TPE scorer falls back to the native
+//! formulas — exactly the degraded path callers already take when
+//! `make artifacts` hasn't run.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::core::OptunaError;
+use crate::runtime::Manifest;
+use crate::sampler::{CandidateScorer, ParzenEstimator};
+
+fn unavailable() -> OptunaError {
+    OptunaError::Runtime(
+        "optuna-rs was built without the `pjrt` feature; add the vendored \
+         `xla` PJRT binding to rust/Cargo.toml [dependencies], then rebuild \
+         with `--features pjrt`"
+            .into(),
+    )
+}
+
+/// Stub for the PJRT runtime; never constructible.
+pub struct Runtime {
+    /// Present so `rt.manifest.…` accesses type-check against the stub.
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn open<P: AsRef<Path>>(_dir: P) -> Result<Runtime, OptunaError> {
+        Err(unavailable())
+    }
+
+    pub fn open_default() -> Result<Runtime, OptunaError> {
+        Err(unavailable())
+    }
+
+    /// Without the PJRT backend no artifact can be executed, so none are
+    /// ever "available" — callers take their graceful-skip path.
+    pub fn artifacts_available() -> bool {
+        false
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    pub fn load(&self, _name: &str) -> Result<(), OptunaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub kernel scorer: construction fails; if somehow scored (it cannot
+/// be, absent a `Runtime`), it would compute the native formulas.
+pub struct TpeKernelScorer;
+
+impl TpeKernelScorer {
+    pub fn new(_runtime: Arc<Runtime>) -> Result<Self, OptunaError> {
+        Err(unavailable())
+    }
+}
+
+impl CandidateScorer for TpeKernelScorer {
+    fn score(
+        &self,
+        cand: &[f64],
+        below: &ParzenEstimator,
+        above: &ParzenEstimator,
+    ) -> Vec<f64> {
+        cand.iter()
+            .map(|&x| below.logpdf(x) - above.logpdf(x))
+            .collect()
+    }
+
+    fn max_components(&self) -> usize {
+        usize::MAX
+    }
+
+    fn max_candidates(&self) -> usize {
+        usize::MAX
+    }
+}

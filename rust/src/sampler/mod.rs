@@ -39,6 +39,12 @@ use std::collections::BTreeMap;
 use crate::core::{Distribution, FrozenTrial, StudyDirection};
 
 /// Read-only study context handed to samplers.
+///
+/// `trials` borrows the storage-layer snapshot taken once per `ask` (see
+/// [`crate::storage::CachedStorage`]): every suggest within a trial — and
+/// every concurrent worker on the same study generation — reads the same
+/// immutable history, so sampler implementations should never fetch from
+/// storage themselves.
 pub struct StudyContext<'a> {
     pub direction: StudyDirection,
     /// Snapshot of all trials (any state), ordered by number.

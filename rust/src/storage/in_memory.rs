@@ -11,13 +11,16 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::Storage;
+use crate::storage::{Storage, TrialDelta};
 
 struct StudyRec {
     name: String,
     direction: StudyDirection,
     /// trial ids in creation order
     trials: Vec<u64>,
+    /// monotonic write counter (the delta-API generation; see the
+    /// consistency contract on [`Storage::study_seq`])
+    seq: u64,
 }
 
 struct Inner {
@@ -26,6 +29,17 @@ struct Inner {
     trials: Vec<FrozenTrial>,
     /// study id of each trial (parallel to `trials`)
     trial_study: Vec<u64>,
+    /// study seq at each trial's last modification (parallel to `trials`)
+    trial_seq: Vec<u64>,
+}
+
+impl Inner {
+    /// Record that `trial_id` changed: bump its study's seq and restamp.
+    fn touch(&mut self, trial_id: u64) {
+        let sid = self.trial_study[trial_id as usize] as usize;
+        self.studies[sid].seq += 1;
+        self.trial_seq[trial_id as usize] = self.studies[sid].seq;
+    }
 }
 
 /// Process-local storage backend.
@@ -41,6 +55,7 @@ impl InMemoryStorage {
                 by_name: HashMap::new(),
                 trials: Vec::new(),
                 trial_study: Vec::new(),
+                trial_seq: Vec::new(),
             }),
         }
     }
@@ -71,6 +86,7 @@ impl Storage for InMemoryStorage {
             name: name.to_string(),
             direction,
             trials: Vec::new(),
+            seq: 0,
         });
         g.by_name.insert(name.to_string(), id);
         Ok(id)
@@ -108,7 +124,9 @@ impl Storage for InMemoryStorage {
         let number = g.studies[study_id as usize].trials.len() as u64;
         g.trials.push(FrozenTrial::new(trial_id, number));
         g.trial_study.push(study_id);
+        g.trial_seq.push(0);
         g.studies[study_id as usize].trials.push(trial_id);
+        g.touch(trial_id);
         Ok((trial_id, number))
     }
 
@@ -125,6 +143,7 @@ impl Storage for InMemoryStorage {
             .get_mut(trial_id as usize)
             .ok_or_else(|| bad_trial(trial_id))?;
         t.params.insert(name.to_string(), (dist.clone(), internal));
+        g.touch(trial_id);
         Ok(())
     }
 
@@ -140,6 +159,7 @@ impl Storage for InMemoryStorage {
             .get_mut(trial_id as usize)
             .ok_or_else(|| bad_trial(trial_id))?;
         t.intermediate.insert(step, value);
+        g.touch(trial_id);
         Ok(())
     }
 
@@ -155,6 +175,7 @@ impl Storage for InMemoryStorage {
             .get_mut(trial_id as usize)
             .ok_or_else(|| bad_trial(trial_id))?;
         t.user_attrs.insert(key.to_string(), value.to_string());
+        g.touch(trial_id);
         Ok(())
     }
 
@@ -182,6 +203,7 @@ impl Storage for InMemoryStorage {
         if value.is_some() {
             t.value = value;
         }
+        g.touch(trial_id);
         Ok(())
     }
 
@@ -209,6 +231,32 @@ impl Storage for InMemoryStorage {
             .map(|s| s.trials.len())
             .ok_or_else(|| bad_study(study_id))
     }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        g.studies
+            .get(study_id as usize)
+            .map(|s| s.seq)
+            .ok_or_else(|| bad_study(study_id))
+    }
+
+    fn get_trials_since(
+        &self,
+        study_id: u64,
+        since_seq: u64,
+    ) -> Result<TrialDelta, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        let s = g.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
+        // `s.trials` is in creation (= number) order, so the filtered
+        // result is number-ordered too, as the contract requires
+        let trials = s
+            .trials
+            .iter()
+            .filter(|&&tid| g.trial_seq[tid as usize] > since_seq)
+            .map(|&tid| g.trials[tid as usize].clone())
+            .collect();
+        Ok(TrialDelta { seq: s.seq, trials })
+    }
 }
 
 #[cfg(test)]
@@ -222,6 +270,23 @@ mod tests {
     #[test]
     fn conformance_suite() {
         conformance::run_all(&InMemoryStorage::new());
+    }
+
+    #[test]
+    fn seq_counts_writes_per_study() {
+        let s = InMemoryStorage::new();
+        let a = s.create_study("a", StudyDirection::Minimize).unwrap();
+        let b = s.create_study("b", StudyDirection::Minimize).unwrap();
+        assert_eq!(s.study_seq(a).unwrap(), 0);
+        let (ta, _) = s.create_trial(a).unwrap();
+        assert_eq!(s.study_seq(a).unwrap(), 1);
+        assert_eq!(s.study_seq(b).unwrap(), 0, "other study untouched");
+        s.set_trial_intermediate(ta, 1, 0.5).unwrap();
+        s.finish_trial(ta, TrialState::Complete, Some(0.5)).unwrap();
+        assert_eq!(s.study_seq(a).unwrap(), 3);
+        // failed writes don't advance the counter
+        assert!(s.finish_trial(ta, TrialState::Failed, None).is_err());
+        assert_eq!(s.study_seq(a).unwrap(), 3);
     }
 
     #[test]

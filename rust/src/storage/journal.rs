@@ -28,13 +28,31 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::Storage;
+use crate::storage::{Storage, TrialDelta};
 use crate::util::json::Json;
+
+/// Minimal `flock(2)` binding so the crate stays dependency-free. The
+/// constants are identical on Linux and the BSDs (including macOS).
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const LOCK_SH: c_int = 1;
+    pub const LOCK_EX: c_int = 2;
+    pub const LOCK_UN: c_int = 8;
+
+    extern "C" {
+        pub fn flock(fd: c_int, operation: c_int) -> c_int;
+    }
+}
 
 struct StudyRec {
     name: String,
     direction: StudyDirection,
     trials: Vec<u64>,
+    /// Monotonic write counter, derived purely from the journal byte
+    /// stream during replay — so every process that has replayed the same
+    /// prefix reports the same sequence number (see [`Storage::study_seq`]).
+    seq: u64,
 }
 
 #[derive(Default)]
@@ -43,8 +61,18 @@ struct Replayed {
     by_name: HashMap<String, u64>,
     trials: Vec<FrozenTrial>,
     trial_study: Vec<u64>,
+    /// Study seq at each trial's last modification (parallel to `trials`).
+    trial_seq: Vec<u64>,
     /// Byte offset of the first unapplied journal byte.
     offset: u64,
+}
+
+impl Replayed {
+    fn touch(&mut self, trial_id: usize) {
+        let sid = self.trial_study[trial_id] as usize;
+        self.studies[sid].seq += 1;
+        self.trial_seq[trial_id] = self.studies[sid].seq;
+    }
 }
 
 /// File-backed multi-process storage.
@@ -62,8 +90,8 @@ struct FileLock {
 
 impl FileLock {
     fn acquire(file: File, exclusive: bool) -> Result<FileLock, OptunaError> {
-        let op = if exclusive { libc::LOCK_EX } else { libc::LOCK_SH };
-        let rc = unsafe { libc::flock(file.as_raw_fd(), op) };
+        let op = if exclusive { sys::LOCK_EX } else { sys::LOCK_SH };
+        let rc = unsafe { sys::flock(file.as_raw_fd(), op) };
         if rc != 0 {
             return Err(OptunaError::Storage(format!(
                 "flock failed: {}",
@@ -76,7 +104,7 @@ impl FileLock {
 
 impl Drop for FileLock {
     fn drop(&mut self) {
-        unsafe { libc::flock(self.file.as_raw_fd(), libc::LOCK_UN) };
+        unsafe { sys::flock(self.file.as_raw_fd(), sys::LOCK_UN) };
     }
 }
 
@@ -219,7 +247,7 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
             )?;
             let id = state.studies.len() as u64;
             state.by_name.insert(name.clone(), id);
-            state.studies.push(StudyRec { name, direction, trials: Vec::new() });
+            state.studies.push(StudyRec { name, direction, trials: Vec::new(), seq: 0 });
         }
         "create_trial" => {
             let sid = entry
@@ -234,7 +262,9 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
             let number = state.studies[sid].trials.len() as u64;
             state.trials.push(FrozenTrial::new(tid, number));
             state.trial_study.push(sid as u64);
+            state.trial_seq.push(0);
             state.studies[sid].trials.push(tid);
+            state.touch(tid as usize);
         }
         "param" => {
             let tid = get_trial(state, entry)?;
@@ -252,6 +282,7 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
                 .and_then(|v| v.as_f64())
                 .ok_or_else(|| OptunaError::Storage("param missing value".into()))?;
             state.trials[tid].params.insert(name.to_string(), (dist, value));
+            state.touch(tid);
         }
         "intermediate" => {
             let tid = get_trial(state, entry)?;
@@ -261,6 +292,7 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
                 .and_then(|v| v.as_f64())
                 .ok_or_else(|| OptunaError::Storage("intermediate missing value".into()))?;
             state.trials[tid].intermediate.insert(step, value);
+            state.touch(tid);
         }
         "attr" => {
             let tid = get_trial(state, entry)?;
@@ -269,6 +301,7 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
             state.trials[tid]
                 .user_attrs
                 .insert(key.to_string(), value.to_string());
+            state.touch(tid);
         }
         "finish" => {
             let tid = get_trial(state, entry)?;
@@ -279,6 +312,7 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
             if let Some(v) = entry.get("value").and_then(|v| v.as_f64()) {
                 state.trials[tid].value = Some(v);
             }
+            state.touch(tid);
         }
         other => {
             return Err(OptunaError::Storage(format!("unknown journal op '{other}'")));
@@ -483,6 +517,36 @@ impl Storage for JournalStorage {
                 .ok_or_else(|| bad_study(study_id))
         })
     }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        self.with_read(|s| {
+            s.studies
+                .get(study_id as usize)
+                .map(|st| st.seq)
+                .ok_or_else(|| bad_study(study_id))
+        })
+    }
+
+    /// Delta fetch: the incremental journal replay (a shared `flock` plus
+    /// reading only the unseen suffix) refreshes the in-process index, and
+    /// only the trials stamped after `since_seq` are cloned out — the
+    /// full-snapshot clone of `get_all_trials` is gone from the hot path.
+    fn get_trials_since(
+        &self,
+        study_id: u64,
+        since_seq: u64,
+    ) -> Result<TrialDelta, OptunaError> {
+        self.with_read(|s| {
+            let st = s.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
+            let trials = st
+                .trials
+                .iter()
+                .filter(|&&tid| s.trial_seq[tid as usize] > since_seq)
+                .map(|&tid| s.trials[tid as usize].clone())
+                .collect();
+            Ok(TrialDelta { seq: st.seq, trials })
+        })
+    }
 }
 
 #[cfg(test)]
@@ -526,6 +590,28 @@ mod tests {
         let (tid2, n2) = b.create_trial(sid).unwrap();
         assert_eq!(n2, 1);
         assert_eq!(a.get_trial(tid2).unwrap().number, 1);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn seq_is_deterministic_across_handles() {
+        // seq is a pure function of the journal bytes, so two independent
+        // handles (≈ two processes) must always agree on it.
+        let p = tmp_path("seq");
+        let a = JournalStorage::open(&p).unwrap();
+        let b = JournalStorage::open(&p).unwrap();
+        let sid = a.create_study("s", StudyDirection::Minimize).unwrap();
+        let (t0, _) = a.create_trial(sid).unwrap();
+        a.set_trial_intermediate(t0, 1, 0.1).unwrap();
+        assert_eq!(a.study_seq(sid).unwrap(), 2);
+        assert_eq!(b.study_seq(sid).unwrap(), 2);
+        // b writes; a's delta stream picks it up with a consistent cursor
+        let seq = a.study_seq(sid).unwrap();
+        b.finish_trial(t0, TrialState::Complete, Some(0.1)).unwrap();
+        let d = a.get_trials_since(sid, seq).unwrap();
+        assert_eq!(d.seq, 3);
+        assert_eq!(d.trials.len(), 1);
+        assert_eq!(d.trials[0].state, TrialState::Complete);
         std::fs::remove_file(p).ok();
     }
 

@@ -9,17 +9,95 @@
 //!   interactive use (the paper's Jupyter story).
 //! * [`JournalStorage`] — append-only JSONL file with advisory `flock`,
 //!   the SQLite-analog that lets independent OS processes share a study.
+//!
+//! On top of either backend sits [`CachedStorage`], a write-through
+//! decorator that turns the O(all trials) per-call snapshot cost of
+//! `get_all_trials` into an O(new trials) delta merge, using the
+//! sequence-number contract documented on [`Storage::study_seq`].
+//! [`crate::study::StudyBuilder`] applies it automatically.
 
+mod cached;
 mod in_memory;
 mod journal;
 
+pub use cached::CachedStorage;
 pub use in_memory::InMemoryStorage;
 pub use journal::JournalStorage;
 
+use std::sync::Arc;
+
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+
+/// Sentinel sequence number meaning "this backend does not track
+/// per-study sequence numbers". See [`Storage::study_seq`].
+pub const SEQ_UNTRACKED: u64 = u64::MAX;
+
+/// A batch of trial changes, as returned by [`Storage::get_trials_since`].
+#[derive(Debug, Clone)]
+pub struct TrialDelta {
+    /// The study's sequence number as of this read. Feed it back into the
+    /// next `get_trials_since` call to continue the delta stream. Equal to
+    /// [`SEQ_UNTRACKED`] when the backend cannot track deltas, in which
+    /// case `trials` is always the complete trial list.
+    pub seq: u64,
+    /// Every trial created or modified after the requested sequence number
+    /// (in its *current* state, not a diff), ordered by trial number.
+    pub trials: Vec<FrozenTrial>,
+}
 
 /// Abstract storage. All methods are process-safe (backends lock
 /// internally); ids are backend-assigned and opaque to callers.
+///
+/// # Delta / cache consistency contract
+///
+/// Backends with native delta support maintain one **monotonic sequence
+/// number per study**, starting at 0 for a fresh study and incremented by
+/// every write that touches one of the study's trials (`create_trial`,
+/// `set_trial_param`, `set_trial_intermediate`, `set_trial_user_attr`,
+/// `finish_trial`). The guarantees are:
+///
+/// * `study_seq` never decreases, and it increases iff a trial of the
+///   study changed — equal sequence numbers mean byte-identical
+///   `get_all_trials` results.
+/// * `get_trials_since(study, s)` returns every trial whose last
+///   modification happened after sequence number `s`, together with the
+///   current sequence number. Merging those trials (keyed by trial
+///   number) into a snapshot previously taken at `s` reconstructs exactly
+///   `get_all_trials` at the returned sequence number.
+/// * Sequence numbers are only meaningful against the storage handle (or,
+///   for [`JournalStorage`], the journal file) that produced them: the
+///   journal derives sequence numbers deterministically from the shared
+///   byte stream, so every process observes the same numbering.
+///
+/// Backends without native support inherit the default methods:
+/// `study_seq` reports [`SEQ_UNTRACKED`] and `get_trials_since` degrades
+/// to a full fetch, which keeps [`CachedStorage`] correct (it replaces
+/// its snapshot wholesale) at the cost of the pre-cache clone behaviour.
+///
+/// Snapshots returned by `get_trials_snapshot` are immutable: later
+/// writes never mutate a snapshot a caller already holds. A snapshot is
+/// guaranteed to include every write that completed before the call
+/// started (read-your-writes through any handle on the same backend).
+///
+/// ```
+/// use optuna_rs::core::{StudyDirection, TrialState};
+/// use optuna_rs::storage::{InMemoryStorage, Storage};
+///
+/// let store = InMemoryStorage::new();
+/// let sid = store.create_study("demo", StudyDirection::Minimize).unwrap();
+/// let seq0 = store.study_seq(sid).unwrap();
+///
+/// let (tid, _number) = store.create_trial(sid).unwrap();
+/// store.finish_trial(tid, TrialState::Complete, Some(0.5)).unwrap();
+///
+/// // Everything that changed since seq0, plus the new cursor.
+/// let delta = store.get_trials_since(sid, seq0).unwrap();
+/// assert_eq!(delta.trials.len(), 1);
+/// assert_eq!(delta.trials[0].value, Some(0.5));
+///
+/// // Nothing changed since: the delta stream is quiet.
+/// assert!(store.get_trials_since(sid, delta.seq).unwrap().trials.is_empty());
+/// ```
 pub trait Storage: Send + Sync {
     /// Create a study; error if the name exists.
     fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError>;
@@ -64,6 +142,46 @@ pub trait Storage: Send + Sync {
     fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError>;
 
     fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError>;
+
+    /// Current sequence number of the study (see the trait-level contract).
+    /// The default reports [`SEQ_UNTRACKED`], meaning the backend cannot
+    /// answer "what changed?" and callers must treat every read as a full
+    /// snapshot.
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        // validate the study id so the default behaves like native impls
+        self.n_trials(study_id)?;
+        Ok(SEQ_UNTRACKED)
+    }
+
+    /// Trials created or modified after `since_seq`, plus the current
+    /// sequence number. The default is the full-fetch fallback: it ignores
+    /// `since_seq` and returns every trial with `seq ==`
+    /// [`SEQ_UNTRACKED`].
+    fn get_trials_since(
+        &self,
+        study_id: u64,
+        since_seq: u64,
+    ) -> Result<TrialDelta, OptunaError> {
+        let _ = since_seq;
+        Ok(TrialDelta { seq: SEQ_UNTRACKED, trials: self.get_all_trials(study_id)? })
+    }
+
+    /// Shared, immutable snapshot of the study's trials, ordered by trial
+    /// number. The default materializes a fresh snapshot per call;
+    /// [`CachedStorage`] overrides it to hand every concurrent caller the
+    /// same `Arc` until the study actually changes.
+    fn get_trials_snapshot(
+        &self,
+        study_id: u64,
+    ) -> Result<Arc<Vec<FrozenTrial>>, OptunaError> {
+        Ok(Arc::new(self.get_all_trials(study_id)?))
+    }
+
+    /// True for write-through cache decorators ([`CachedStorage`]), so
+    /// builders don't stack a cache on top of a cache.
+    fn is_write_through_cache(&self) -> bool {
+        false
+    }
 }
 
 /// Get an existing study id or create the study (the CLI / distributed
@@ -104,6 +222,8 @@ pub(crate) mod conformance {
         trial_lifecycle(storage);
         params_and_intermediates(storage);
         trial_isolation(storage);
+        delta_stream(storage);
+        snapshot_consistency(storage);
     }
 
     fn study_lifecycle(s: &dyn Storage) {
@@ -162,6 +282,88 @@ pub(crate) mod conformance {
         assert!((tr.params["lr"].1 - (1e-3f64).ln()).abs() < 1e-9);
         assert_eq!(tr.intermediate_at(2), Some(0.7));
         assert_eq!(tr.user_attrs["note"], "hello");
+    }
+
+    fn delta_stream(s: &dyn Storage) {
+        let sid = s.create_study("conf-delta", StudyDirection::Minimize).unwrap();
+        if s.study_seq(sid).unwrap() == SEQ_UNTRACKED {
+            // fallback contract: every delta is the complete list
+            s.create_trial(sid).unwrap();
+            let d = s.get_trials_since(sid, SEQ_UNTRACKED).unwrap();
+            assert_eq!(d.seq, SEQ_UNTRACKED);
+            assert_eq!(d.trials.len(), 1);
+            return;
+        }
+        let seq0 = s.study_seq(sid).unwrap();
+        let d = s.get_trials_since(sid, seq0).unwrap();
+        assert_eq!(d.seq, seq0);
+        assert!(d.trials.is_empty());
+
+        let (t0, _) = s.create_trial(sid).unwrap();
+        let (t1, _) = s.create_trial(sid).unwrap();
+        let d = s.get_trials_since(sid, seq0).unwrap();
+        assert_eq!(d.trials.len(), 2);
+        assert!(d.seq > seq0);
+        let seq1 = d.seq;
+        assert_eq!(s.study_seq(sid).unwrap(), seq1);
+        // a quiet study yields an empty delta
+        assert!(s.get_trials_since(sid, seq1).unwrap().trials.is_empty());
+
+        // touching one trial surfaces only that trial, in its new state
+        s.finish_trial(t1, TrialState::Complete, Some(1.0)).unwrap();
+        let d = s.get_trials_since(sid, seq1).unwrap();
+        assert_eq!(d.trials.len(), 1);
+        assert_eq!(d.trials[0].id, t1);
+        assert_eq!(d.trials[0].state, TrialState::Complete);
+        assert!(d.seq > seq1);
+
+        // writes to other studies must not advance this study's seq
+        let other = s.create_study("conf-delta-b", StudyDirection::Minimize).unwrap();
+        s.create_trial(other).unwrap();
+        assert_eq!(s.study_seq(sid).unwrap(), d.seq);
+
+        // a param write bumps too; replay from seq1 now shows both trials,
+        // ordered by number
+        s.set_trial_param(t0, "x", &Distribution::float(0.0, 1.0), 0.5).unwrap();
+        let d = s.get_trials_since(sid, seq1).unwrap();
+        assert_eq!(d.trials.len(), 2);
+        assert_eq!(d.trials[0].id, t0);
+        assert_eq!(d.trials[1].id, t1);
+
+        // replay from 0 reconstructs get_all_trials exactly
+        let from_zero = s.get_trials_since(sid, 0).unwrap();
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(from_zero.seq, s.study_seq(sid).unwrap());
+        assert_eq!(from_zero.trials.len(), all.len());
+        for (a, b) in from_zero.trials.iter().zip(&all) {
+            assert_eq!(a.number, b.number);
+            assert_eq!(a.state, b.state);
+            assert_eq!(a.params, b.params);
+        }
+    }
+
+    fn snapshot_consistency(s: &dyn Storage) {
+        let sid = s.create_study("conf-snap", StudyDirection::Minimize).unwrap();
+        let snap0 = s.get_trials_snapshot(sid).unwrap();
+        assert!(snap0.is_empty());
+
+        let (t0, _) = s.create_trial(sid).unwrap();
+        s.set_trial_intermediate(t0, 1, 0.25).unwrap();
+        let snap1 = s.get_trials_snapshot(sid).unwrap();
+        assert_eq!(snap1.len(), 1);
+        assert_eq!(snap1[0].intermediate_at(1), Some(0.25));
+        // snapshots are immutable: the earlier one still sees no trials
+        assert!(snap0.is_empty());
+
+        s.finish_trial(t0, TrialState::Pruned, Some(0.25)).unwrap();
+        let snap2 = s.get_trials_snapshot(sid).unwrap();
+        assert_eq!(snap2[0].state, TrialState::Pruned);
+        assert_eq!(snap1[0].state, TrialState::Running);
+
+        // read-your-writes: a fresh snapshot equals get_all_trials
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(snap2.len(), all.len());
+        assert_eq!(snap2[0].value, all[0].value);
     }
 
     fn trial_isolation(s: &dyn Storage) {

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::core::{FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
-use crate::storage::{get_or_create_study, InMemoryStorage, Storage};
+use crate::storage::{get_or_create_study, CachedStorage, InMemoryStorage, Storage};
 use crate::trial::Trial;
 
 /// A study: the unit of optimization. Cheap to share across threads by
@@ -28,6 +28,7 @@ pub struct StudyBuilder {
     storage: Option<Arc<dyn Storage>>,
     sampler: Option<Arc<dyn Sampler>>,
     pruner: Option<Arc<dyn Pruner>>,
+    cache: bool,
 }
 
 impl StudyBuilder {
@@ -56,11 +57,21 @@ impl StudyBuilder {
         self
     }
 
+    /// Enable/disable the write-through snapshot cache around the storage
+    /// backend (see [`CachedStorage`]). On by default; turning it off
+    /// restores the one-full-clone-per-read behaviour — useful for
+    /// benchmarking the raw path (`benches/perf_micro.rs` does).
+    pub fn storage_caching(mut self, enabled: bool) -> Self {
+        self.cache = enabled;
+        self
+    }
+
     /// Create (or join, for shared storage) the study.
     pub fn build(self) -> Result<Study, OptunaError> {
         let storage = self
             .storage
             .unwrap_or_else(|| Arc::new(InMemoryStorage::new()));
+        let storage = if self.cache { CachedStorage::wrap(storage) } else { storage };
         let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
         let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
         let study_id = get_or_create_study(storage.as_ref(), &self.name, self.direction)?;
@@ -90,15 +101,18 @@ impl Study {
             storage: None,
             sampler: None,
             pruner: None,
+            cache: true,
         }
     }
 
     /// Begin a trial: creates it in storage and runs relational sampling.
-    /// The history snapshot taken here is reused for every independent
-    /// suggest in the trial (one clone per trial, not per parameter).
+    /// The history snapshot taken here is shared by every independent
+    /// suggest in the trial, and — through the storage cache — with every
+    /// concurrent worker: unless the study changed since the last read,
+    /// no trial data is cloned at all.
     pub fn ask(&self) -> Result<Trial<'_>, OptunaError> {
         let (trial_id, number) = self.storage.create_trial(self.study_id)?;
-        let trials = Arc::new(self.storage.get_all_trials(self.study_id)?);
+        let trials = self.storage.get_trials_snapshot(self.study_id)?;
         let ctx = StudyContext { direction: self.direction, trials: &trials };
         let space = self.sampler.infer_relative_search_space(&ctx);
         let relative = if space.is_empty() {
@@ -145,6 +159,18 @@ impl Study {
 
     /// Evaluate `objective` for `n_trials` trials (the 'optimize API').
     /// Pruned and failed trials are recorded, not fatal.
+    ///
+    /// ```
+    /// use optuna_rs::prelude::*;
+    ///
+    /// let study = Study::builder().name("doc-optimize").build().unwrap();
+    /// study.optimize(20, |trial| {
+    ///     let x = trial.suggest_float("x", -10.0, 10.0)?;
+    ///     Ok((x - 2.0).powi(2))
+    /// }).unwrap();
+    /// assert_eq!(study.trials().unwrap().len(), 20);
+    /// assert!(study.best_value().unwrap().is_some());
+    /// ```
     pub fn optimize<F>(&self, n_trials: usize, objective: F) -> Result<(), OptunaError>
     where
         F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
@@ -157,7 +183,23 @@ impl Study {
 
     /// Parallel optimization with `n_workers` threads sharing this study's
     /// storage — the paper's Fig 7/11b architecture in-process. The total
-    /// across workers is `n_trials`.
+    /// across workers is `n_trials`. Workers coordinate only through
+    /// storage; the snapshot cache hands all of them the same `Arc`'d
+    /// trial history per generation — the history is copied at most once
+    /// per storage generation (when a delta lands while workers still
+    /// hold the previous snapshot), not once per reader as on the
+    /// uncached path.
+    ///
+    /// ```
+    /// use optuna_rs::prelude::*;
+    ///
+    /// let study = Study::builder().name("doc-parallel").build().unwrap();
+    /// study.optimize_parallel(16, 4, |trial| {
+    ///     let x = trial.suggest_float("x", 0.0, 1.0)?;
+    ///     Ok(x * x)
+    /// }).unwrap();
+    /// assert_eq!(study.trials().unwrap().len(), 16);
+    /// ```
     pub fn optimize_parallel<F>(
         &self,
         n_trials: usize,
@@ -201,11 +243,12 @@ impl Study {
         self.storage.get_all_trials(self.study_id)
     }
 
-    /// Best completed trial under the study direction.
+    /// Best completed trial under the study direction. Scans the shared
+    /// snapshot and clones only the winner.
     pub fn best_trial(&self) -> Result<Option<FrozenTrial>, OptunaError> {
-        let trials = self.trials()?;
+        let trials = self.storage.get_trials_snapshot(self.study_id)?;
         Ok(trials
-            .into_iter()
+            .iter()
             .filter(|t| t.state == TrialState::Complete && t.value.is_some())
             .reduce(|best, t| {
                 if self.direction.is_better(t.value.unwrap(), best.value.unwrap()) {
@@ -213,7 +256,8 @@ impl Study {
                 } else {
                     best
                 }
-            }))
+            })
+            .cloned())
     }
 
     /// Best objective value, if any trial completed.
@@ -431,6 +475,40 @@ mod tests {
         let mut numbers: Vec<u64> = trials.iter().map(|t| t.number).collect();
         numbers.sort_unstable();
         assert_eq!(numbers, (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn cached_and_uncached_storage_agree() {
+        // same seed, caching on vs off: identical trajectories
+        let run = |cached: bool| -> Vec<Option<f64>> {
+            let study = Study::builder()
+                .name("cache-eq")
+                .sampler(Arc::new(RandomSampler::new(11)))
+                .storage_caching(cached)
+                .build()
+                .unwrap();
+            study
+                .optimize(25, |t| {
+                    let x = t.suggest_float("x", -1.0, 1.0)?;
+                    t.report(1, x)?;
+                    Ok(x)
+                })
+                .unwrap();
+            study.trials().unwrap().into_iter().map(|t| t.value).collect()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn builder_wraps_storage_in_cache_by_default() {
+        let study = quadratic_study(12);
+        assert!(study.storage.is_write_through_cache());
+        let raw = Study::builder()
+            .name("raw")
+            .storage_caching(false)
+            .build()
+            .unwrap();
+        assert!(!raw.storage.is_write_through_cache());
     }
 
     #[test]

@@ -105,9 +105,10 @@ pub struct Trial<'s> {
     /// Last reported (step, value) — pruned trials record this as value.
     pub(crate) last_report: Option<(u64, f64)>,
     /// History snapshot taken at ask() time, shared by every independent
-    /// suggest in this trial. One storage snapshot per trial instead of
-    /// one per parameter — the §Perf fix that removed the quadratic
-    /// clone cost from the study loop (EXPERIMENTS.md §Perf).
+    /// suggest in this trial — and, through [`crate::storage::CachedStorage`],
+    /// with every concurrent worker on the same generation. One snapshot
+    /// per trial instead of one per parameter, and zero clones when the
+    /// study hasn't changed between asks.
     pub(crate) snapshot: Arc<Vec<FrozenTrial>>,
 }
 
@@ -179,7 +180,10 @@ impl TrialApi for Trial<'_> {
         let Some((step, _)) = self.last_report else {
             return Ok(false); // nothing reported yet
         };
-        let trials = self.study.storage.get_all_trials(self.study.study_id)?;
+        // Fresh shared snapshot (delta-refreshed, not a full clone): the
+        // pruner must see the intermediates other workers just reported,
+        // and our own `report` above.
+        let trials = self.study.storage.get_trials_snapshot(self.study.study_id)?;
         let Some(me) = trials.iter().find(|t| t.id == self.trial_id) else {
             return Err(OptunaError::Storage(format!(
                 "trial {} missing from snapshot",

@@ -5,6 +5,7 @@
 use optuna_rs::core::OptunaError;
 use optuna_rs::prelude::*;
 use optuna_rs::sampler::Sampler;
+use optuna_rs::storage::CachedStorage;
 use std::sync::Arc;
 
 fn tmp_journal(tag: &str) -> std::path::PathBuf {
@@ -138,6 +139,56 @@ fn journal_storage_multithread_study_with_pruning() {
     nums.sort_unstable();
     assert_eq!(nums, (0..48).collect::<Vec<u64>>());
     assert!(verify.best_value().unwrap().unwrap() < 1.0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cached_decorators_stay_coherent_across_processes_and_threads() {
+    // Two studies in "different processes" (separate JournalStorage
+    // handles, separate caches) interleave writes; each cache must track
+    // the other's trials through the journal's delta stream.
+    let path = tmp_journal("cached");
+    let open = || -> Study {
+        Study::builder()
+            .name("it-cached")
+            .storage(CachedStorage::wrap(Arc::new(
+                JournalStorage::open(&path).unwrap(),
+            )))
+            .sampler(Arc::new(TpeSampler::new(9)))
+            .pruner(Arc::new(MedianPruner::new()))
+            .build()
+            .unwrap()
+    };
+    let a = open();
+    let b = open();
+    for round in 0..5usize {
+        a.optimize_parallel(8, 2, |t| {
+            let x = t.suggest_float("x", -2.0, 2.0)?;
+            t.report(1, x * x)?;
+            if t.should_prune()? {
+                return Err(OptunaError::TrialPruned);
+            }
+            Ok(x * x)
+        })
+        .unwrap();
+        b.optimize(2, |t| {
+            let x = t.suggest_float("x", -2.0, 2.0)?;
+            Ok(x * x)
+        })
+        .unwrap();
+        let expect = (round + 1) * 10;
+        assert_eq!(a.trials().unwrap().len(), expect, "a at round {round}");
+        assert_eq!(b.trials().unwrap().len(), expect, "b at round {round}");
+    }
+    // both caches converge to the same table
+    let ta = a.trials().unwrap();
+    let tb = b.trials().unwrap();
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(x.number, y.number);
+        assert_eq!(x.state, y.state);
+        assert_eq!(x.value, y.value);
+    }
+    assert_eq!(a.best_value().unwrap(), b.best_value().unwrap());
     std::fs::remove_file(&path).ok();
 }
 
