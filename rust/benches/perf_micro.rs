@@ -6,8 +6,11 @@
 //!   3. TPE scoring backend: native vs PJRT Pallas kernel vs candidates
 //!   4. Parzen logpdf throughput
 //!   5. storage throughput: in-memory vs journal (fsync off/on)
-//!   6. ASHA should_prune decision latency
+//!   6. ASHA should_prune decision latency (scan vs observation index)
 //!   7. delta-snapshot cache: ask/tell cycle cost, cached vs raw storage
+//!   8. observation index: TPE ask latency vs prefilled trial count,
+//!      indexed vs seed (scan) path — also written to BENCH_samplers.json
+//!      (override the path with BENCH_SAMPLERS_JSON)
 //!
 //! Knob: PERF_QUICK=1 shrinks iteration counts ~10x.
 
@@ -96,7 +99,7 @@ fn tpe_suggest_latency() {
             })
             .collect();
         let s = TpeSampler::new(0);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let us = bench(scale(2000), || {
             let _ = s.sample_independent(&ctx, 0, "x", &d);
         }) * 1e6;
@@ -164,8 +167,11 @@ fn parzen_throughput() {
 }
 
 fn asha_latency() {
-    print_header("ASHA should_prune decision", &["trials at rung", "us/decision"]);
-    use optuna_rs::core::FrozenTrial;
+    print_header(
+        "ASHA should_prune decision: scan vs observation index",
+        &["trials at rung", "scan us", "indexed us", "speedup"],
+    );
+    use optuna_rs::core::{FrozenTrial, ObservationIndex};
     use optuna_rs::pruner::{Pruner, PruningContext};
     for n in [100usize, 1000, 10_000] {
         let trials: Vec<FrozenTrial> = (0..n)
@@ -176,16 +182,24 @@ fn asha_latency() {
             })
             .collect();
         let p = AshaPruner::new();
-        let ctx = PruningContext {
-            direction: StudyDirection::Minimize,
-            trials: &trials,
-            trial: &trials[n / 2],
-            step: 4,
-        };
-        let us = bench(scale(2000), || {
+        let ctx = PruningContext::new(
+            StudyDirection::Minimize,
+            &trials,
+            &trials[n / 2],
+            4,
+        );
+        let scan_us = bench(scale(2000), || {
             std::hint::black_box(p.should_prune(&ctx));
         }) * 1e6;
-        println!("{n} | {us:.1}");
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let snap = ix.apply(&trials, 1);
+        let mut indexed_ctx =
+            PruningContext::new(StudyDirection::Minimize, &trials, &trials[n / 2], 4);
+        indexed_ctx.index = Some(&*snap);
+        let indexed_us = bench(scale(2000), || {
+            std::hint::black_box(p.should_prune(&indexed_ctx));
+        }) * 1e6;
+        println!("{n} | {scan_us:.2} | {indexed_us:.2} | {:.1}x", scan_us / indexed_us);
     }
 }
 
@@ -260,6 +274,85 @@ fn storage_cache_ablation() {
     }
 }
 
+fn sampler_index_ablation() {
+    print_header(
+        "observation index: TPE ask latency on a pre-filled study",
+        &["prefill trials", "seed us/ask", "indexed us/ask", "speedup"],
+    );
+    use optuna_rs::core::Distribution;
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &n in &[100usize, 1000, 10_000] {
+        let mut us = [0.0f64; 2];
+        for (slot, indexed) in [(0usize, false), (1, true)] {
+            // pre-fill through raw storage writes (fast), then measure the
+            // ask+suggest+tell cycle through a TPE study over it
+            let storage: Arc<dyn Storage> = Arc::new(InMemoryStorage::new());
+            let d = Distribution::float(-5.0, 5.0);
+            let sid = storage
+                .create_study("idx-ablation", StudyDirection::Minimize)
+                .unwrap();
+            for i in 0..n {
+                let (tid, _) = storage.create_trial(sid).unwrap();
+                let x = (i as f64 / n as f64) * 10.0 - 5.0;
+                storage.set_trial_param(tid, "x", &d, x).unwrap();
+                storage
+                    .finish_trial(tid, TrialState::Complete, Some(x * x))
+                    .unwrap();
+            }
+            let study = Study::builder()
+                .name("idx-ablation")
+                .storage(storage)
+                .observation_index(indexed)
+                .sampler(Arc::new(TpeSampler::new(0)))
+                .build()
+                .unwrap();
+            // warm the snapshot cache + index once, outside the timing
+            {
+                let mut t = study.ask().unwrap();
+                let _ = t.suggest_float("x", -5.0, 5.0).unwrap();
+                study.tell(t, TrialOutcome::Failed("warmup".into())).unwrap();
+            }
+            let cycles = scale(200);
+            let t0 = Instant::now();
+            for _ in 0..cycles {
+                let mut trial = study.ask().unwrap();
+                let _ = trial.suggest_float("x", -5.0, 5.0).unwrap();
+                // Failed keeps the observation set fixed across cycles
+                study
+                    .tell(trial, TrialOutcome::Failed("bench".into()))
+                    .unwrap();
+            }
+            us[slot] = t0.elapsed().as_secs_f64() / cycles as f64 * 1e6;
+        }
+        println!("{n} | {:.1} | {:.1} | {:.1}x", us[0], us[1], us[0] / us[1]);
+        rows.push((n, us[0], us[1]));
+    }
+    write_bench_samplers_json(&rows);
+}
+
+/// Machine-readable results for CI trend tracking (ISSUE 2 acceptance:
+/// >= 5x lower ask latency at 10k trials, sublinear growth when indexed).
+fn write_bench_samplers_json(rows: &[(usize, f64, f64)]) {
+    let path = std::env::var("BENCH_SAMPLERS_JSON")
+        .unwrap_or_else(|_| "BENCH_samplers.json".to_string());
+    let mut body = String::from(
+        "{\n  \"bench\": \"tpe_ask_latency\",\n  \"unit\": \"us_per_ask\",\n  \"rows\": [\n",
+    );
+    for (i, &(n, seed, indexed)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        body.push_str(&format!(
+            "    {{\"n_trials\": {n}, \"seed_us\": {seed:.3}, \
+             \"indexed_us\": {indexed:.3}, \"speedup\": {:.3}}}{comma}\n",
+            seed / indexed,
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     println!("perf_micro: set PERF_QUICK=1 for a fast smoke run");
     study_loop_overhead();
@@ -267,6 +360,7 @@ fn main() {
     scoring_backends();
     parzen_throughput();
     asha_latency();
+    sampler_index_ablation();
     gamma_ablation();
     storage_cache_ablation();
 }

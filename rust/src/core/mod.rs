@@ -2,8 +2,10 @@
 
 pub mod distribution;
 pub mod frozen;
+pub mod obs_index;
 pub mod types;
 
 pub use distribution::Distribution;
 pub use frozen::FrozenTrial;
+pub use obs_index::{IndexSnapshot, ObservationIndex, ParamColumn, StepColumn};
 pub use types::{OptunaError, ParamValue, StudyDirection, TrialState};

@@ -1,0 +1,612 @@
+//! Generation-stamped observation index — O(delta) sampler/pruner state.
+//!
+//! PR 1 made *storage reads* O(delta) via [`crate::storage::CachedStorage`]
+//! snapshots, but the decision layers on top still re-derived everything
+//! per call: every TPE suggest re-scanned all trials for one parameter's
+//! observations and re-sorted them by loss, and every median/percentile/
+//! ASHA prune decision re-collected and re-sorted the rival intermediate
+//! values at its step — O(n·p) work per ask that dwarfed the storage win.
+//!
+//! [`ObservationIndex`] piggybacks on the same per-study sequence numbers
+//! (the generation stamps of the cache layer): it keeps a cursor into the
+//! [`crate::storage::Storage::get_trials_since`] delta stream and folds
+//! each delta into
+//!
+//! * per `(param, distribution)` **loss-sorted observation columns** —
+//!   flat structure-of-arrays `f64` buffers ordered by ascending
+//!   minimization loss, so TPE's below/above split is a slice window
+//!   instead of a scan + sort;
+//! * per `step` **sorted intermediate-value columns**, so pruners answer
+//!   quantile and top-k queries in O(log n);
+//! * the **intersection search space** over completed trials, maintained
+//!   incrementally (it only ever shrinks), so relational samplers skip
+//!   the per-ask O(n·p) recomputation.
+//!
+//! Readers get an immutable [`IndexSnapshot`]; columns are `Arc`-shared
+//! across generations and copied-on-write per column, mirroring the
+//! snapshot semantics of the storage cache. All orderings use
+//! [`nan_max_cmp`], i.e. NaN losses/values sort to the "worst" end
+//! instead of panicking.
+//!
+//! ## Consistency contract
+//!
+//! * Ingestion is **idempotent**: re-applying a delta containing
+//!   already-ingested trial state is a no-op, which is what keeps the
+//!   index correct over the `SEQ_UNTRACKED` full-fetch degradation of
+//!   backends without native delta support (at O(n) re-check cost).
+//! * A finished trial's loss observations are ingested exactly once, at
+//!   the first delta that shows the trial finished (finished trials never
+//!   change again). Intermediate values are diffed per trial per step;
+//!   a re-reported step replaces the old value in its column.
+//! * In single-worker studies, loss ties keep trial order, matching the
+//!   stable sort of the scan fallback; concurrent workers may interleave
+//!   exact ties in finish order instead — both are valid TPE orderings.
+//! * Cost: a changed observation costs an O(log n) search plus an O(n)
+//!   `Vec::insert` memmove within its column — a flat `memcpy` with a
+//!   tiny constant (microseconds at 100k observations), not a rebuild;
+//!   replace with a tiered/merge structure if columns ever outgrow it.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::core::{Distribution, FrozenTrial, StudyDirection, TrialState};
+use crate::util::stats::nan_max_cmp;
+
+/// Loss-ordered observations of one `(param, distribution)` pair, as flat
+/// parallel `f64` buffers (structure-of-arrays).
+#[derive(Debug, Clone)]
+pub struct ParamColumn {
+    dist: Distribution,
+    /// Minimization losses, ascending under [`nan_max_cmp`].
+    losses: Vec<f64>,
+    /// Internal parameter values, parallel to `losses`.
+    values: Vec<f64>,
+}
+
+impl ParamColumn {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Internal parameter values ordered by ascending loss: TPE's
+    /// below/above split is `values_by_loss()[..gamma]` /
+    /// `values_by_loss()[gamma..]`.
+    pub fn values_by_loss(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn distribution(&self) -> &Distribution {
+        &self.dist
+    }
+
+    fn insert(&mut self, loss: f64, value: f64) {
+        // upper bound: equal losses keep ingestion order, matching the
+        // stable scan-and-sort fallback in single-worker studies
+        let pos = self
+            .losses
+            .partition_point(|l| nan_max_cmp(l, &loss) != Ordering::Greater);
+        self.losses.insert(pos, loss);
+        self.values.insert(pos, value);
+    }
+}
+
+/// Sorted intermediate values reported at one step (all trials, own
+/// included). Quantile/top-k queries mirror the formulas of
+/// [`crate::util::stats`] exactly, so indexed and scan pruner paths are
+/// decision-identical.
+#[derive(Debug, Clone, Default)]
+pub struct StepColumn {
+    /// Ascending under [`nan_max_cmp`].
+    values: Vec<f64>,
+}
+
+impl StepColumn {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    fn insert(&mut self, v: f64) {
+        let pos = self
+            .values
+            .partition_point(|x| nan_max_cmp(x, &v) != Ordering::Greater);
+        self.values.insert(pos, v);
+    }
+
+    fn remove(&mut self, v: f64) -> bool {
+        match self.position_of(v) {
+            Some(i) => {
+                self.values.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Index of one element equal to `v` (NaN matches NaN), if present.
+    fn position_of(&self, v: f64) -> Option<usize> {
+        let i = self
+            .values
+            .partition_point(|x| nan_max_cmp(x, &v) == Ordering::Less);
+        (i < self.values.len() && nan_max_cmp(&self.values[i], &v) == Ordering::Equal)
+            .then_some(i)
+    }
+
+    /// Median of every value except one occurrence of `own` — the
+    /// `MedianPruner` query — in O(log n). `None` when `own` is absent
+    /// (stale index: caller should fall back to scanning) or when no
+    /// other value exists. Matches [`crate::util::stats::median`] on the
+    /// same multiset exactly.
+    pub fn median_excluding(&self, own: f64) -> Option<f64> {
+        let j = self.position_of(own)?;
+        let n = self.values.len() - 1;
+        if n == 0 {
+            return None;
+        }
+        let at = |i: usize| {
+            if i < j {
+                self.values[i]
+            } else {
+                self.values[i + 1]
+            }
+        };
+        Some(if n % 2 == 1 {
+            at(n / 2)
+        } else {
+            0.5 * (at(n / 2 - 1) + at(n / 2))
+        })
+    }
+
+    /// Linearly-interpolated p-quantile of every value except one
+    /// occurrence of `own`, in O(log n); the `PercentilePruner` query.
+    /// Matches [`crate::util::stats::quantile`] on the same multiset.
+    pub fn quantile_excluding(&self, own: f64, p: f64) -> Option<f64> {
+        let j = self.position_of(own)?;
+        let n = self.values.len() - 1;
+        if n == 0 {
+            return None;
+        }
+        let at = |i: usize| {
+            if i < j {
+                self.values[i]
+            } else {
+                self.values[i + 1]
+            }
+        };
+        let idx = p.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        Some(if lo == hi {
+            at(lo)
+        } else {
+            at(lo) + (idx - lo as f64) * (at(hi) - at(lo))
+        })
+    }
+
+    /// Direction-aware "is `own` within the best k values at this step,
+    /// ties in the trial's favor" — Algorithm 1's membership test — in
+    /// O(log n). NaN values rank worst in BOTH directions (a diverged
+    /// report never displaces a healthy trial from the top-k), matching
+    /// the scan-path `in_top_k`. `None` when `own` is not in the column
+    /// (stale index).
+    pub fn in_top_k(&self, direction: StudyDirection, own: f64, k: usize) -> Option<bool> {
+        self.position_of(own)?;
+        let n = self.values.len();
+        if k == 0 {
+            return Some(false);
+        }
+        if k >= n {
+            return Some(true);
+        }
+        Some(match direction {
+            StudyDirection::Minimize => {
+                nan_max_cmp(&own, &self.values[k - 1]) != Ordering::Greater
+            }
+            StudyDirection::Maximize => {
+                // NaNs sit at the top end of the ascending column; the
+                // k-th best is the k-th largest NON-NaN value
+                let non_nan = self.values.partition_point(|x| !x.is_nan());
+                if own.is_nan() {
+                    k > non_nan // only "best" once every non-NaN slot is in
+                } else if k <= non_nan {
+                    own >= self.values[non_nan - k]
+                } else {
+                    true
+                }
+            }
+        })
+    }
+}
+
+/// Immutable, generation-stamped view of the index — what samplers and
+/// pruners read. Cheap to clone: columns are `Arc`-shared across
+/// generations; a delta touching a column copies only that column.
+#[derive(Debug, Clone, Default)]
+pub struct IndexSnapshot {
+    /// Per parameter name, one column per distinct distribution observed
+    /// under that name (linear scan: names rarely have more than one).
+    params: HashMap<String, Vec<Arc<ParamColumn>>>,
+    steps: HashMap<u64, Arc<StepColumn>>,
+    /// Intersection of the `(name, distribution)` sets of all Complete
+    /// trials; `None` until the first Complete trial.
+    intersection: Option<BTreeMap<String, Distribution>>,
+    n_finished: usize,
+}
+
+impl IndexSnapshot {
+    /// The loss-sorted observation column of `(name, dist)`, if any
+    /// finished trial observed it.
+    pub fn param_column(&self, name: &str, dist: &Distribution) -> Option<&ParamColumn> {
+        self.params
+            .get(name)?
+            .iter()
+            .map(Arc::as_ref)
+            .find(|c| c.dist == *dist)
+    }
+
+    /// The sorted intermediate-value column at `step`, if any trial
+    /// reported there.
+    pub fn step_column(&self, step: u64) -> Option<&StepColumn> {
+        self.steps.get(&step).map(Arc::as_ref)
+    }
+
+    /// Intersection search space over completed trials, single-valued
+    /// distributions excluded — incrementally-maintained equivalent of
+    /// [`crate::sampler::intersection_search_space`], in O(p) instead of
+    /// O(n·p).
+    pub fn intersection_space(&self) -> BTreeMap<String, Distribution> {
+        match &self.intersection {
+            None => BTreeMap::new(),
+            Some(space) => space
+                .iter()
+                .filter(|(_, d)| !d.is_single())
+                .map(|(n, d)| (n.clone(), d.clone()))
+                .collect(),
+        }
+    }
+
+    /// Finished (Complete/Pruned/Failed) trials ingested so far.
+    pub fn n_finished(&self) -> usize {
+        self.n_finished
+    }
+}
+
+/// Per-trial ingestion bookkeeping (keyed by trial number).
+#[derive(Debug, Clone, Default)]
+struct TrialTrack {
+    finished: bool,
+    /// step → value already folded into the step columns.
+    steps: BTreeMap<u64, f64>,
+}
+
+/// The mutable index: advances an `Arc`'d [`IndexSnapshot`] from storage
+/// deltas. One per `Study`, behind a mutex; see the module docs for the
+/// consistency contract.
+#[derive(Debug)]
+pub struct ObservationIndex {
+    direction: StudyDirection,
+    seq: u64,
+    snap: Arc<IndexSnapshot>,
+    trail: Vec<TrialTrack>,
+}
+
+impl ObservationIndex {
+    pub fn new(direction: StudyDirection) -> Self {
+        ObservationIndex {
+            direction,
+            seq: 0,
+            snap: Arc::new(IndexSnapshot::default()),
+            trail: Vec::new(),
+        }
+    }
+
+    /// Sequence number (storage generation) the snapshot is synced to —
+    /// feed it into [`crate::storage::Storage::get_trials_since`] to
+    /// fetch the next delta.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The current snapshot, without syncing.
+    pub fn snapshot(&self) -> Arc<IndexSnapshot> {
+        Arc::clone(&self.snap)
+    }
+
+    /// Fold a storage delta (changed trials + the new sequence number)
+    /// into the index and return the advanced snapshot. Idempotent per
+    /// trial state.
+    pub fn apply(&mut self, changed: &[FrozenTrial], seq: u64) -> Arc<IndexSnapshot> {
+        for t in changed {
+            self.ingest(t);
+        }
+        self.seq = seq;
+        Arc::clone(&self.snap)
+    }
+
+    fn ingest(&mut self, t: &FrozenTrial) {
+        let n = t.number as usize;
+        if self.trail.len() <= n {
+            self.trail.resize(n + 1, TrialTrack::default());
+        }
+        self.ingest_intermediates(t, n);
+        if !t.state.is_finished() || self.trail[n].finished {
+            return;
+        }
+        self.trail[n].finished = true;
+        let snap = Arc::make_mut(&mut self.snap);
+        snap.n_finished += 1;
+        // Loss observations: what TPE learns from — Complete and Pruned
+        // trials with a final or last-intermediate value.
+        if matches!(t.state, TrialState::Complete | TrialState::Pruned) {
+            if let Some(v) = t.value_or_last_intermediate() {
+                let loss = self.direction.min_sign() * v;
+                for (name, (dist, internal)) in &t.params {
+                    let cols = snap.params.entry(name.clone()).or_default();
+                    let col = match cols.iter_mut().position(|c| c.dist == *dist) {
+                        Some(i) => Arc::make_mut(&mut cols[i]),
+                        None => {
+                            cols.push(Arc::new(ParamColumn {
+                                dist: dist.clone(),
+                                losses: Vec::new(),
+                                values: Vec::new(),
+                            }));
+                            Arc::make_mut(cols.last_mut().expect("just pushed"))
+                        }
+                    };
+                    col.insert(loss, *internal);
+                }
+            }
+        }
+        // Intersection space: Complete trials only (mirrors
+        // `intersection_search_space`); it only ever shrinks.
+        if t.state == TrialState::Complete {
+            match &mut snap.intersection {
+                None => {
+                    snap.intersection = Some(
+                        t.params
+                            .iter()
+                            .map(|(k, (d, _))| (k.clone(), d.clone()))
+                            .collect(),
+                    );
+                }
+                Some(space) => {
+                    space.retain(|k, d| {
+                        t.params.get(k).map(|(td, _)| td == d).unwrap_or(false)
+                    });
+                }
+            }
+        }
+    }
+
+    fn ingest_intermediates(&mut self, t: &FrozenTrial, n: usize) {
+        for (&step, &v) in &t.intermediate {
+            let prev = self.trail[n].steps.get(&step).copied();
+            if let Some(old) = prev {
+                if old == v || (old.is_nan() && v.is_nan()) {
+                    continue; // already ingested
+                }
+            }
+            let snap = Arc::make_mut(&mut self.snap);
+            let col = Arc::make_mut(snap.steps.entry(step).or_default());
+            if let Some(old) = prev {
+                col.remove(old); // step re-reported: replace the value
+            }
+            col.insert(v);
+            self.trail[n].steps.insert(step, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ParamValue;
+    use crate::util::stats::{median, quantile};
+
+    fn finished(number: u64, x: f64, loss: f64) -> FrozenTrial {
+        let d = Distribution::float(-5.0, 5.0);
+        let mut t = FrozenTrial::new(number, number);
+        t.params
+            .insert("x".into(), (d.clone(), d.internal(&ParamValue::Float(x)).unwrap()));
+        t.state = TrialState::Complete;
+        t.value = Some(loss);
+        t
+    }
+
+    #[test]
+    fn param_column_sorted_by_loss() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let trials: Vec<FrozenTrial> = [(0u64, 1.0, 3.0), (1, -2.0, 1.0), (2, 0.5, 2.0)]
+            .iter()
+            .map(|&(n, x, l)| finished(n, x, l))
+            .collect();
+        let snap = ix.apply(&trials, 3);
+        let d = Distribution::float(-5.0, 5.0);
+        let col = snap.param_column("x", &d).unwrap();
+        assert_eq!(col.len(), 3);
+        assert_eq!(col.values_by_loss(), &[-2.0, 0.5, 1.0]);
+        assert!(snap.param_column("x", &Distribution::float(0.0, 1.0)).is_none());
+        assert!(snap.param_column("y", &d).is_none());
+    }
+
+    #[test]
+    fn maximize_direction_flips_loss_order() {
+        let mut ix = ObservationIndex::new(StudyDirection::Maximize);
+        let trials: Vec<FrozenTrial> =
+            [(0u64, 1.0, 3.0), (1, -2.0, 1.0)].iter().map(|&(n, x, l)| finished(n, x, l)).collect();
+        let snap = ix.apply(&trials, 2);
+        let d = Distribution::float(-5.0, 5.0);
+        // maximize: loss = -value, so the value-3.0 trial ranks first
+        assert_eq!(snap.param_column("x", &d).unwrap().values_by_loss(), &[1.0, -2.0]);
+    }
+
+    #[test]
+    fn apply_is_idempotent_and_incremental() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let t0 = finished(0, 1.0, 1.0);
+        let snap1 = ix.apply(std::slice::from_ref(&t0), 1);
+        // SEQ_UNTRACKED-style re-application of the same state: no change,
+        // and the quiet re-apply does not even copy the snapshot
+        let snap2 = ix.apply(std::slice::from_ref(&t0), 2);
+        assert!(Arc::ptr_eq(&snap1, &snap2));
+        let d = Distribution::float(-5.0, 5.0);
+        assert_eq!(snap2.param_column("x", &d).unwrap().len(), 1);
+        // a new trial lands incrementally; the held snapshot is untouched
+        let t1 = finished(1, 2.0, 0.5);
+        let snap3 = ix.apply(std::slice::from_ref(&t1), 3);
+        assert_eq!(snap3.param_column("x", &d).unwrap().values_by_loss(), &[2.0, 1.0]);
+        assert_eq!(snap1.param_column("x", &d).unwrap().len(), 1);
+        assert_eq!(ix.seq(), 3);
+    }
+
+    #[test]
+    fn running_then_finished_ingested_once() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let mut t = finished(0, 1.0, 1.0);
+        t.state = TrialState::Running;
+        t.value = None;
+        ix.apply(std::slice::from_ref(&t), 1);
+        let d = Distribution::float(-5.0, 5.0);
+        assert!(ix.snapshot().param_column("x", &d).is_none());
+        t.state = TrialState::Complete;
+        t.value = Some(1.0);
+        // the finished state may surface in several consecutive deltas
+        ix.apply(std::slice::from_ref(&t), 2);
+        let snap = ix.apply(std::slice::from_ref(&t), 3);
+        assert_eq!(snap.param_column("x", &d).unwrap().len(), 1);
+        assert_eq!(snap.n_finished(), 1);
+    }
+
+    #[test]
+    fn failed_trials_tracked_but_not_observed() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let mut t = finished(0, 1.0, 1.0);
+        t.state = TrialState::Failed;
+        t.value = None;
+        let snap = ix.apply(std::slice::from_ref(&t), 1);
+        assert_eq!(snap.n_finished(), 1);
+        assert!(snap.param_column("x", &Distribution::float(-5.0, 5.0)).is_none());
+    }
+
+    #[test]
+    fn nan_loss_sorts_to_the_above_end() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let trials = vec![
+            finished(0, 1.0, f64::NAN),
+            finished(1, 2.0, 5.0),
+            finished(2, 3.0, 0.5),
+        ];
+        let snap = ix.apply(&trials, 3);
+        let col = snap.param_column("x", &Distribution::float(-5.0, 5.0)).unwrap();
+        assert_eq!(col.values_by_loss(), &[3.0, 2.0, 1.0]); // NaN last
+    }
+
+    #[test]
+    fn step_columns_track_reports_and_rewrites() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let mut t0 = FrozenTrial::new(0, 0);
+        t0.intermediate.insert(1, 0.9);
+        let mut t1 = FrozenTrial::new(1, 1);
+        t1.intermediate.insert(1, 0.4);
+        let snap = ix.apply(&[t0.clone(), t1.clone()], 2);
+        assert_eq!(snap.step_column(1).unwrap().values(), &[0.4, 0.9]);
+        assert!(snap.step_column(2).is_none());
+        // trial 0 reports step 2 and *re*-reports step 1
+        t0.intermediate.insert(2, 0.7);
+        t0.intermediate.insert(1, 0.1);
+        let snap = ix.apply(std::slice::from_ref(&t0), 4);
+        assert_eq!(snap.step_column(1).unwrap().values(), &[0.1, 0.4]);
+        assert_eq!(snap.step_column(2).unwrap().values(), &[0.7]);
+    }
+
+    #[test]
+    fn excluding_queries_match_stats_formulas() {
+        let mut col = StepColumn::default();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            col.insert(v);
+        }
+        // others of own=3.0 are [1,2,4,5]
+        let others = [1.0, 2.0, 4.0, 5.0];
+        assert_eq!(col.median_excluding(3.0), Some(median(&others)));
+        for p in [0.0, 0.25, 0.4, 0.5, 0.75, 1.0] {
+            assert_eq!(col.quantile_excluding(3.0, p), Some(quantile(&others, p)), "p={p}");
+        }
+        assert_eq!(col.median_excluding(9.0), None, "own value absent");
+        let lone = {
+            let mut c = StepColumn::default();
+            c.insert(1.0);
+            c
+        };
+        assert_eq!(lone.median_excluding(1.0), None, "no others");
+    }
+
+    #[test]
+    fn top_k_matches_scan_semantics() {
+        let mut col = StepColumn::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            col.insert(v);
+        }
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 1.0, 1), Some(true));
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 2.0, 1), Some(false));
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 2.0, 2), Some(true));
+        assert_eq!(col.in_top_k(StudyDirection::Maximize, 4.0, 1), Some(true));
+        assert_eq!(col.in_top_k(StudyDirection::Maximize, 3.0, 1), Some(false));
+        assert_eq!(col.in_top_k(StudyDirection::Maximize, 3.0, 2), Some(true));
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 1.0, 0), Some(false));
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 4.0, 9), Some(true));
+        assert_eq!(col.in_top_k(StudyDirection::Minimize, 9.9, 2), None);
+        // ties favor the trial
+        let mut tied = StepColumn::default();
+        for v in [1.0, 1.0, 2.0] {
+            tied.insert(v);
+        }
+        assert_eq!(tied.in_top_k(StudyDirection::Minimize, 1.0, 1), Some(true));
+        // NaN ranks worst in both directions
+        let mut with_nan = StepColumn::default();
+        for v in [1.0, f64::NAN, 2.0] {
+            with_nan.insert(v);
+        }
+        assert_eq!(with_nan.in_top_k(StudyDirection::Minimize, f64::NAN, 2), Some(false));
+        assert_eq!(with_nan.in_top_k(StudyDirection::Maximize, 2.0, 1), Some(true));
+        assert_eq!(with_nan.in_top_k(StudyDirection::Maximize, 1.0, 1), Some(false));
+        assert_eq!(with_nan.in_top_k(StudyDirection::Maximize, 1.0, 2), Some(true));
+        assert_eq!(with_nan.in_top_k(StudyDirection::Maximize, f64::NAN, 2), Some(false));
+        assert_eq!(with_nan.in_top_k(StudyDirection::Maximize, f64::NAN, 3), Some(true));
+    }
+
+    #[test]
+    fn intersection_space_shrinks_incrementally() {
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let d = Distribution::float(0.0, 1.0);
+        let dcat = Distribution::categorical(vec!["a", "b"]);
+        let mk = |n: u64, with_cat: bool| {
+            let mut t = FrozenTrial::new(n, n);
+            t.params.insert("x".into(), (d.clone(), 0.5));
+            if with_cat {
+                t.params.insert("c".into(), (dcat.clone(), 0.0));
+            }
+            t.state = TrialState::Complete;
+            t.value = Some(1.0);
+            t
+        };
+        assert!(ix.snapshot().intersection_space().is_empty());
+        let snap = ix.apply(&[mk(0, true)], 1);
+        assert_eq!(snap.intersection_space().len(), 2);
+        let snap = ix.apply(&[mk(1, false)], 2);
+        let space = snap.intersection_space();
+        assert_eq!(space.len(), 1);
+        assert!(space.contains_key("x"));
+    }
+}

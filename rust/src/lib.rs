@@ -24,8 +24,13 @@
 //! by [`study::StudyBuilder`]) keeps generation-stamped shared snapshots
 //! and refreshes them with [`storage::Storage::get_trials_since`] deltas,
 //! making per-trial overhead O(new trials) instead of O(all trials). The
-//! consistency contract lives on the [`storage::Storage`] trait; the
-//! design rationale in `docs/ARCHITECTURE.md`.
+//! same delta stream feeds the per-study [`crate::core::ObservationIndex`]
+//! (also on by default), which keeps loss-sorted observation columns for
+//! samplers and per-step sorted value columns for pruners, so TPE
+//! suggests and prune decisions stay O(delta)/O(log n) as trial counts
+//! grow into the thousands. The consistency contracts live on the
+//! [`storage::Storage`] trait and in `core::obs_index`; the design
+//! rationale in `docs/ARCHITECTURE.md`.
 //!
 //! ```
 //! use optuna_rs::prelude::*;

@@ -86,6 +86,16 @@ impl Pruner for AshaPruner {
         let Some(value) = ctx.trial.intermediate_at(step) else {
             return false;
         };
+        // lines 6–11, O(log n) indexed path: the sorted step column IS
+        // `get_all_trials_intermediate_values(step)`, so the top-k
+        // membership test is a binary search + one threshold compare.
+        if let Some(col) = ctx.index.and_then(|ix| ix.step_column(step)) {
+            let k = (col.len() / self.reduction_factor as usize).max(1);
+            if let Some(in_top) = col.in_top_k(ctx.direction, value, k) {
+                return !in_top;
+            }
+            // own value not in the column ⇒ stale index: fall through
+        }
         // line 6
         let values = ctx.values_at_step(step);
         // lines 7–10
@@ -175,6 +185,28 @@ mod tests {
     }
 
     #[test]
+    fn indexed_and_scan_verdicts_agree() {
+        use crate::pruner::testutil::assert_verdict_both_paths;
+        let p = AshaPruner::new();
+        let all: Vec<FrozenTrial> = (0..8)
+            .map(|i| {
+                let v = i as f64;
+                curve_trial(i, &[v, v, v, v])
+            })
+            .collect();
+        // η=4, 8 values at step 4 ⇒ top 2 survive; verify every trial on
+        // both the indexed and scan paths
+        for t in &all {
+            assert_verdict_both_paths(&p, &all, t, 4, t.intermediate_at(4).unwrap() >= 2.0);
+        }
+        // non-promotion steps never prune on either path
+        assert_verdict_both_paths(&p, &all, &all[7], 2, false);
+        // lone-trial top-1 fallback
+        let only = vec![curve_trial(0, &[5.0])];
+        assert_verdict_both_paths(&p, &only, &only[0], 1, false);
+    }
+
+    #[test]
     fn lone_trial_promoted_via_top1_fallback() {
         let p = AshaPruner::new();
         // fewer than η trials at the rung: best survives (lines 8–10)
@@ -218,12 +250,12 @@ mod tests {
             let survivors = trials
                 .iter()
                 .filter(|t| {
-                    !p.should_prune(&PruningContext {
-                        direction: StudyDirection::Minimize,
-                        trials: &trials,
-                        trial: t,
-                        step: 1,
-                    })
+                    !p.should_prune(&PruningContext::new(
+                        StudyDirection::Minimize,
+                        &trials,
+                        t,
+                        1,
+                    ))
                 })
                 .count();
             let expect = ((n / eta) as usize).max(1);
@@ -254,12 +286,12 @@ mod tests {
                 .map(|t| {
                     (
                         t.intermediate_at(4).unwrap(),
-                        p.should_prune(&PruningContext {
-                            direction: StudyDirection::Minimize,
-                            trials: &trials,
-                            trial: t,
-                            step: 4,
-                        }),
+                        p.should_prune(&PruningContext::new(
+                            StudyDirection::Minimize,
+                            &trials,
+                            t,
+                            4,
+                        )),
                     )
                 })
                 .collect();

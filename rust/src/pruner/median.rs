@@ -38,7 +38,22 @@ impl Pruner for MedianPruner {
         let Some(value) = ctx.trial.intermediate_at(ctx.step) else {
             return false;
         };
-        // values of OTHER trials at this step
+        // O(log n) indexed path: the step column holds every value
+        // reported at this step (own included), so the rivals' median is
+        // one rank query — no per-decision collect + sort.
+        if let Some(col) = ctx.index.and_then(|ix| ix.step_column(ctx.step)) {
+            if let Some(med) = col.median_excluding(value) {
+                if col.len() - 1 < self.n_startup_trials {
+                    return false;
+                }
+                return match ctx.direction {
+                    StudyDirection::Minimize => value > med,
+                    StudyDirection::Maximize => value < med,
+                };
+            }
+            // own value absent or alone ⇒ stale/trivial: fall through
+        }
+        // scan fallback: values of OTHER trials at this step
         let others: Vec<f64> = ctx
             .trials
             .iter()
@@ -64,7 +79,7 @@ impl Pruner for MedianPruner {
 mod tests {
     use super::*;
     use crate::core::FrozenTrial;
-    use crate::pruner::testutil::{ctx, curve_trial};
+    use crate::pruner::testutil::{assert_verdict_both_paths, ctx, curve_trial};
 
     fn cohort() -> Vec<FrozenTrial> {
         // values at step 1: 0,1,2,3,4,5 → median of any 5 others well-defined
@@ -112,6 +127,44 @@ mod tests {
         let p = MedianPruner::with_params(2, 0);
         let all: Vec<FrozenTrial> = (0..3).map(|i| curve_trial(i, &[i as f64])).collect();
         let mid = all[1].clone(); // others = [0,2], median 1.0, value 1.0 → keep
-        assert!(!p.should_prune(&ctx(&all, &mid, 1)));
+        assert_verdict_both_paths(&p, &all, &mid, 1, false);
+    }
+
+    #[test]
+    fn boundary_warmup_step_edge_both_paths() {
+        // n_warmup_steps = 3: step 2 is guarded, step 3 (== warmup) is
+        // the first prunable step.
+        let p = MedianPruner::with_params(1, 3);
+        let all: Vec<FrozenTrial> = (0..6)
+            .map(|i| curve_trial(i, &[i as f64, i as f64, i as f64]))
+            .collect();
+        let worst = all[5].clone();
+        assert_verdict_both_paths(&p, &all, &worst, 2, false);
+        assert_verdict_both_paths(&p, &all, &worst, 3, true);
+    }
+
+    #[test]
+    fn boundary_startup_off_by_one_both_paths() {
+        // n_startup_trials = 5 requires >= 5 OTHER trials at the step:
+        // 4 others → guarded; 5 others → decision active.
+        let p = MedianPruner::new();
+        let five: Vec<FrozenTrial> = (0..5).map(|i| curve_trial(i, &[i as f64])).collect();
+        let worst4 = five[4].clone(); // 4 others
+        assert_verdict_both_paths(&p, &five, &worst4, 1, false);
+        let six: Vec<FrozenTrial> = (0..6).map(|i| curve_trial(i, &[i as f64])).collect();
+        let worst5 = six[5].clone(); // 5 others, worse than their median
+        assert_verdict_both_paths(&p, &six, &worst5, 1, true);
+    }
+
+    #[test]
+    fn verdicts_agree_across_paths_on_cohort() {
+        let p = MedianPruner::with_params(2, 0);
+        let all = cohort();
+        // values 0..5: the others' median is 3 for v<3 and 2 for v>=3,
+        // so exactly the top half dies
+        let expects = [false, false, false, true, true, true];
+        for (t, &e) in all.iter().zip(expects.iter()) {
+            assert_verdict_both_paths(&p, &all, t, 1, e);
+        }
     }
 }

@@ -20,7 +20,7 @@ pub use nop::NopPruner;
 pub use percentile::PercentilePruner;
 pub use successive_halving::SyncHalvingPruner;
 
-use crate::core::{FrozenTrial, StudyDirection};
+use crate::core::{FrozenTrial, IndexSnapshot, StudyDirection};
 
 /// Everything a pruner may consult when deciding.
 ///
@@ -37,9 +37,26 @@ pub struct PruningContext<'a> {
     pub trial: &'a FrozenTrial,
     /// The step that was just reported.
     pub step: u64,
+    /// Per-step sorted value columns synced to the same storage state as
+    /// `trials` — including this trial's own report at `step` (the
+    /// sync-after-report invariant of `Trial::should_prune`; see
+    /// [`crate::core::ObservationIndex`]). Pruners answer quantile/top-k
+    /// queries from it in O(log n) and fall back to scanning `trials`
+    /// when it is `None` or does not contain the trial's own value.
+    pub index: Option<&'a IndexSnapshot>,
 }
 
 impl<'a> PruningContext<'a> {
+    /// Context without an observation index (pruners scan `trials`).
+    pub fn new(
+        direction: StudyDirection,
+        trials: &'a [FrozenTrial],
+        trial: &'a FrozenTrial,
+        step: u64,
+    ) -> Self {
+        PruningContext { direction, trials, trial, step, index: None }
+    }
+
     /// Intermediate values of all *other* trials at `step`, plus this
     /// trial's — i.e. Algorithm 1's `get_all_trials_intermediate_values`.
     pub fn values_at_step(&self, step: u64) -> Vec<f64> {
@@ -58,9 +75,27 @@ pub trait Pruner: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Best-first total order for `direction`: a diverged (NaN) value ranks
+/// worst under BOTH directions — a NaN report must never displace a
+/// healthy trial from the top-k.
+fn best_first_cmp(direction: StudyDirection, a: &f64, b: &f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater, // NaN to the back
+        (false, true) => Ordering::Less,
+        (false, false) => match direction {
+            StudyDirection::Minimize => a.partial_cmp(b).unwrap(),
+            StudyDirection::Maximize => b.partial_cmp(a).unwrap(),
+        },
+    }
+}
+
 /// Direction-aware "is `value` within the best k of `values`" — the
 /// `value ∉ top_k(values, k)` test of Algorithm 1, with ties resolved
-/// in the trial's favor.
+/// in the trial's favor. NaN values rank as worst in both directions
+/// (per [`best_first_cmp`]); the indexed equivalent is
+/// [`crate::core::StepColumn::in_top_k`].
 pub(crate) fn in_top_k(
     direction: StudyDirection,
     values: &[f64],
@@ -74,16 +109,9 @@ pub(crate) fn in_top_k(
         return true;
     }
     let mut sorted = values.to_vec();
-    // best first
-    sorted.sort_by(|a, b| match direction {
-        StudyDirection::Minimize => a.partial_cmp(b).unwrap(),
-        StudyDirection::Maximize => b.partial_cmp(a).unwrap(),
-    });
+    sorted.sort_unstable_by(|a, b| best_first_cmp(direction, a, b));
     let threshold = sorted[k - 1];
-    match direction {
-        StudyDirection::Minimize => value <= threshold,
-        StudyDirection::Maximize => value >= threshold,
-    }
+    best_first_cmp(direction, &value, &threshold) != std::cmp::Ordering::Greater
 }
 
 #[cfg(test)]
@@ -105,12 +133,33 @@ pub(crate) mod testutil {
         trial: &'a FrozenTrial,
         step: u64,
     ) -> PruningContext<'a> {
-        PruningContext {
-            direction: StudyDirection::Minimize,
-            trials,
-            trial,
-            step,
-        }
+        PruningContext::new(StudyDirection::Minimize, trials, trial, step)
+    }
+
+    /// Assert a minimize-direction verdict on BOTH the scan path and the
+    /// indexed path (an `ObservationIndex` built from `trials`): the two
+    /// implementations must never disagree.
+    pub fn assert_verdict_both_paths(
+        p: &dyn Pruner,
+        trials: &[FrozenTrial],
+        trial: &FrozenTrial,
+        step: u64,
+        expect: bool,
+    ) {
+        assert_eq!(
+            p.should_prune(&ctx(trials, trial, step)),
+            expect,
+            "scan path, step {step}"
+        );
+        let mut ix = crate::core::ObservationIndex::new(StudyDirection::Minimize);
+        let snap = ix.apply(trials, 1);
+        let mut indexed = ctx(trials, trial, step);
+        indexed.index = Some(&*snap);
+        assert_eq!(
+            p.should_prune(&indexed),
+            expect,
+            "indexed path, step {step}"
+        );
     }
 }
 
@@ -139,6 +188,20 @@ mod tests {
     fn in_top_k_ties_favor_trial() {
         let vals = [1.0, 1.0, 2.0];
         assert!(in_top_k(StudyDirection::Minimize, &vals, 1.0, 1));
+    }
+
+    #[test]
+    fn in_top_k_nan_ranks_worst_in_both_directions() {
+        let vals = [1.0, f64::NAN, 2.0];
+        assert!(in_top_k(StudyDirection::Minimize, &vals, 1.0, 1));
+        assert!(!in_top_k(StudyDirection::Minimize, &vals, f64::NAN, 2));
+        assert!(in_top_k(StudyDirection::Minimize, &vals, f64::NAN, 3));
+        // a diverged trial must not displace a healthy one when maximizing
+        assert!(in_top_k(StudyDirection::Maximize, &vals, 2.0, 1));
+        assert!(!in_top_k(StudyDirection::Maximize, &vals, 1.0, 1));
+        assert!(in_top_k(StudyDirection::Maximize, &vals, 1.0, 2));
+        assert!(!in_top_k(StudyDirection::Maximize, &vals, f64::NAN, 2));
+        assert!(in_top_k(StudyDirection::Maximize, &vals, f64::NAN, 3));
     }
 
     #[test]

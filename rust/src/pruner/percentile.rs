@@ -29,6 +29,25 @@ impl Pruner for PercentilePruner {
         let Some(value) = ctx.trial.intermediate_at(ctx.step) else {
             return false;
         };
+        let q = self.percentile / 100.0;
+        // O(log n) indexed path: quantile query against the pre-sorted
+        // step column, excluding our own report.
+        if let Some(col) = ctx.index.and_then(|ix| ix.step_column(ctx.step)) {
+            let p = match ctx.direction {
+                StudyDirection::Minimize => q,
+                StudyDirection::Maximize => 1.0 - q,
+            };
+            if let Some(threshold) = col.quantile_excluding(value, p) {
+                if col.len() - 1 < self.n_startup_trials {
+                    return false;
+                }
+                return match ctx.direction {
+                    StudyDirection::Minimize => value > threshold,
+                    StudyDirection::Maximize => value < threshold,
+                };
+            }
+            // own value absent or alone ⇒ stale/trivial: fall through
+        }
         let others: Vec<f64> = ctx
             .trials
             .iter()
@@ -38,7 +57,6 @@ impl Pruner for PercentilePruner {
         if others.len() < self.n_startup_trials {
             return false;
         }
-        let q = self.percentile / 100.0;
         match ctx.direction {
             StudyDirection::Minimize => value > quantile(&others, q),
             StudyDirection::Maximize => value < quantile(&others, 1.0 - q),
@@ -54,7 +72,7 @@ impl Pruner for PercentilePruner {
 mod tests {
     use super::*;
     use crate::core::FrozenTrial;
-    use crate::pruner::testutil::{ctx, curve_trial};
+    use crate::pruner::testutil::{assert_verdict_both_paths, ctx, curve_trial};
 
     fn cohort(n: u64) -> Vec<FrozenTrial> {
         (0..n).map(|i| curve_trial(i, &[i as f64])).collect()
@@ -98,5 +116,50 @@ mod tests {
     #[should_panic]
     fn zero_percentile_rejected() {
         PercentilePruner::new(0.0);
+    }
+
+    #[test]
+    fn boundary_exactly_at_percentile_survives_both_paths() {
+        // others of trial value 2 are [0,1,3..10]; their 25%-quantile is
+        // 3.25 >= 2, so value 2 is inside the best quartile and lives;
+        // value 3's threshold is 2.5 < 3, so it dies.
+        let all = cohort(11);
+        let p = PercentilePruner::new(25.0);
+        assert_verdict_both_paths(&p, &all, &all[2], 1, false);
+        assert_verdict_both_paths(&p, &all, &all[3], 1, true);
+    }
+
+    #[test]
+    fn boundary_startup_off_by_one_both_paths() {
+        let p = PercentilePruner::new(50.0); // n_startup_trials = 5
+        let five = cohort(5);
+        assert_verdict_both_paths(&p, &five, &five[4], 1, false); // 4 others
+        let six = cohort(6);
+        assert_verdict_both_paths(&p, &six, &six[5], 1, true); // 5 others
+    }
+
+    #[test]
+    fn boundary_warmup_edge_both_paths() {
+        let mut p = PercentilePruner::new(50.0);
+        p.n_startup_trials = 1;
+        p.n_warmup_steps = 2;
+        let all: Vec<FrozenTrial> = (0..6)
+            .map(|i| curve_trial(i, &[i as f64, i as f64]))
+            .collect();
+        let worst = all[5].clone();
+        assert_verdict_both_paths(&p, &all, &worst, 1, false); // step < warmup
+        assert_verdict_both_paths(&p, &all, &worst, 2, true); // step == warmup
+    }
+
+    #[test]
+    fn verdicts_agree_across_paths_on_cohort() {
+        let all = cohort(11);
+        for pct in [10.0, 25.0, 50.0, 75.0, 90.0] {
+            let p = PercentilePruner::new(pct);
+            for t in &all {
+                let scan = p.should_prune(&ctx(&all, t, 1));
+                assert_verdict_both_paths(&p, &all, t, 1, scan);
+            }
+        }
     }
 }

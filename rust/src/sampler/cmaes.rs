@@ -18,7 +18,7 @@ use std::sync::Mutex;
 
 use crate::core::{Distribution, TrialState};
 use crate::sampler::random::RandomSampler;
-use crate::sampler::search_space::{intersection_search_space, trial_coords};
+use crate::sampler::search_space::{intersection_search_space_ctx, trial_coords};
 use crate::sampler::{Sampler, SearchSpace, StudyContext};
 use crate::util::linalg::{eigh, Mat};
 use crate::util::rng::Pcg64;
@@ -125,8 +125,9 @@ impl CmaState {
 
     /// One generation update from the best-μ of λ told solutions.
     fn update(&mut self) {
+        // NaN-safe: a diverged (NaN) objective ranks worst, not a panic
         self.told
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            .sort_by(|a, b| crate::util::stats::nan_max_cmp(&a.0, &b.0));
         let ys: Vec<&Vec<f64>> = self.told.iter().take(self.mu).map(|(_, y)| y).collect();
         let n = self.dim;
         // weighted mean step  y_w
@@ -254,7 +255,7 @@ impl CmaEsSampler {
     /// Numeric-only subset of the intersection space (CMA-ES cannot model
     /// unordered categoricals).
     fn numeric_space(ctx: &StudyContext<'_>) -> SearchSpace {
-        let mut space = intersection_search_space(ctx.trials);
+        let mut space = intersection_search_space_ctx(ctx);
         space.retain(|_, d| !matches!(d, Distribution::Categorical { .. }));
         space
     }
@@ -375,7 +376,7 @@ mod tests {
     fn relative_space_needs_history() {
         let s = CmaEsSampler::new(0);
         let trials: Vec<FrozenTrial> = vec![sphere_trial(0, 1.0, 1.0)];
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         assert!(s.infer_relative_search_space(&ctx).is_empty());
     }
 
@@ -397,10 +398,7 @@ mod tests {
         for i in 6..160 {
             let (xv, yv);
             {
-                let ctx = StudyContext {
-                    direction: StudyDirection::Minimize,
-                    trials: &trials,
-                };
+                let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
                 let space = s.infer_relative_search_space(&ctx);
                 assert_eq!(space.len(), 2, "space at iter {i}");
                 let rel = s.sample_relative(&ctx, i, &space);
@@ -438,7 +436,7 @@ mod tests {
             })
             .collect();
         let s = CmaEsSampler::new(3);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         assert!(!space.contains_key("c"));
     }
@@ -448,7 +446,7 @@ mod tests {
         let s = CmaEsSampler::new(4);
         let d = Distribution::float(-5.0, 5.0);
         let trials: Vec<FrozenTrial> = (0..8).map(|i| sphere_trial(i, 1.0, 1.0)).collect();
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         let _ = s.sample_relative(&ctx, 8, &space);
         // now a different space (x only)

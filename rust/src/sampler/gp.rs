@@ -12,7 +12,7 @@ use std::sync::Mutex;
 
 use crate::core::{Distribution, TrialState};
 use crate::sampler::random::RandomSampler;
-use crate::sampler::search_space::{intersection_search_space, trial_coords};
+use crate::sampler::search_space::{intersection_search_space_ctx, trial_coords};
 use crate::sampler::{Sampler, SearchSpace, StudyContext};
 use crate::util::linalg::{cholesky, solve_lower, solve_lower_t, Mat};
 use crate::util::rng::Pcg64;
@@ -110,7 +110,7 @@ impl GpSampler {
 
 impl Sampler for GpSampler {
     fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
-        let mut space = intersection_search_space(ctx.trials);
+        let mut space = intersection_search_space_ctx(ctx);
         space.retain(|_, d| !matches!(d, Distribution::Categorical { .. }));
         if space.is_empty() || ctx.complete().count() < self.n_startup_trials {
             return SearchSpace::new();
@@ -182,7 +182,7 @@ impl Sampler for GpSampler {
         let incumbent = xs[y_std
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| crate::util::stats::nan_max_cmp(a.1, b.1))
             .map(|(i, _)| i)
             .unwrap_or(0)]
         .clone();
@@ -268,7 +268,7 @@ mod tests {
             .map(|i| quad_trial(i, (i as f64) / 19.0))
             .collect();
         let s = GpSampler::new(0);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         assert_eq!(space.len(), 1);
         let mut hits = 0;
@@ -298,7 +298,7 @@ mod tests {
             })
             .collect();
         let s = GpSampler::new(1);
-        let ctx = StudyContext { direction: StudyDirection::Maximize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Maximize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         let mut hits = 0;
         for i in 0..20 {
@@ -314,7 +314,7 @@ mod tests {
     fn startup_defers_to_fallback() {
         let s = GpSampler::new(2);
         let trials: Vec<FrozenTrial> = (0..2).map(|i| quad_trial(i, 0.5)).collect();
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         assert!(s.infer_relative_search_space(&ctx).is_empty());
     }
 }

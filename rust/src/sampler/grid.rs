@@ -114,7 +114,7 @@ mod tests {
     fn covers_full_product() {
         let g = mk();
         assert_eq!(g.len(), 6);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &[] };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &[]);
         let space = g.infer_relative_search_space(&ctx);
         let mut seen = std::collections::BTreeSet::new();
         for i in 0..6 {
@@ -127,7 +127,7 @@ mod tests {
     #[test]
     fn wraps_around() {
         let g = mk();
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &[] };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &[]);
         let space = g.infer_relative_search_space(&ctx);
         let first = g.sample_relative(&ctx, 0, &space);
         for i in 1..6 {

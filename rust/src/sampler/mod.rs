@@ -30,13 +30,13 @@ pub use grid::GridSampler;
 pub use parzen::ParzenEstimator;
 pub use random::RandomSampler;
 pub use rf::RfSampler;
-pub use search_space::intersection_search_space;
-pub use tpe::{CandidateScorer, TpeBackend, TpeConfig, TpeSampler};
+pub use search_space::{intersection_search_space, intersection_search_space_ctx};
+pub use tpe::{CandidateScorer, ScoreGroup, TpeBackend, TpeConfig, TpeSampler};
 pub use tpe_cmaes::TpeCmaEsSampler;
 
 use std::collections::BTreeMap;
 
-use crate::core::{Distribution, FrozenTrial, StudyDirection};
+use crate::core::{Distribution, FrozenTrial, IndexSnapshot, StudyDirection};
 
 /// Read-only study context handed to samplers.
 ///
@@ -49,9 +49,28 @@ pub struct StudyContext<'a> {
     pub direction: StudyDirection,
     /// Snapshot of all trials (any state), ordered by number.
     pub trials: &'a [FrozenTrial],
+    /// Observation index synced to the same storage generation as
+    /// `trials`, when the study maintains one (the default; see
+    /// [`crate::core::ObservationIndex`]). Samplers read loss-sorted
+    /// observation columns from it instead of re-scanning `trials`, and
+    /// must fall back to scanning when it is `None`.
+    pub index: Option<&'a IndexSnapshot>,
 }
 
 impl<'a> StudyContext<'a> {
+    /// Context without an observation index (samplers scan `trials`).
+    pub fn new(direction: StudyDirection, trials: &'a [FrozenTrial]) -> Self {
+        StudyContext { direction, trials, index: None }
+    }
+
+    /// Context backed by an observation index snapshot.
+    pub fn with_index(
+        direction: StudyDirection,
+        trials: &'a [FrozenTrial],
+        index: Option<&'a IndexSnapshot>,
+    ) -> Self {
+        StudyContext { direction, trials, index }
+    }
     /// Completed trials only (what most samplers learn from).
     pub fn complete(&self) -> impl Iterator<Item = &'a FrozenTrial> + '_ {
         self.trials

@@ -32,6 +32,14 @@ fn ndtr(z: f64) -> f64 {
     0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
 }
 
+impl Default for ParzenEstimator {
+    /// An unfitted placeholder (prior over [0, 1]); call
+    /// [`ParzenEstimator::fit_into`] before use.
+    fn default() -> Self {
+        ParzenEstimator::fit(&[], 0.0, 1.0)
+    }
+}
+
 impl ParzenEstimator {
     /// Fit to observations (internal-representation values in [low, high]).
     ///
@@ -41,40 +49,54 @@ impl ParzenEstimator {
     /// * a prior component N(midpoint, high−low) with equal weight, which
     ///   keeps exploration alive for small n.
     pub fn fit(observations: &[f64], low: f64, high: f64) -> ParzenEstimator {
+        let mut pe = ParzenEstimator {
+            mus: Vec::with_capacity(observations.len() + 1),
+            sigmas: Vec::with_capacity(observations.len() + 1),
+            weights: Vec::with_capacity(observations.len() + 1),
+            low,
+            high,
+        };
+        pe.fit_into(observations, low, high);
+        pe
+    }
+
+    /// [`Self::fit`] into an existing estimator, reusing its buffer
+    /// allocations — the TPE hot path refits two estimators per suggest
+    /// and would otherwise churn three Vecs each.
+    pub fn fit_into(&mut self, observations: &[f64], low: f64, high: f64) {
         assert!(low < high, "degenerate interval [{low}, {high}]");
+        self.low = low;
+        self.high = high;
+        self.mus.clear();
+        self.sigmas.clear();
+        self.weights.clear();
         let n = observations.len();
+        let interval = high - low;
         if n == 0 {
             // prior only
-            return ParzenEstimator {
-                mus: vec![0.5 * (low + high)],
-                sigmas: vec![high - low],
-                weights: vec![1.0],
-                low,
-                high,
-            };
+            self.mus.push(0.5 * (low + high));
+            self.sigmas.push(interval);
+            self.weights.push(1.0);
+            return;
         }
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| observations[a].partial_cmp(&observations[b]).unwrap());
-        let sorted: Vec<f64> = order.iter().map(|&i| observations[i]).collect();
+        // mus doubles as the sorted-observation buffer; NaN-safe ordering
+        // keeps a poisoned observation from panicking the whole suggest
+        self.mus.extend_from_slice(observations);
+        self.mus.sort_unstable_by(crate::util::stats::nan_max_cmp);
 
-        let interval = high - low;
         let sigma_max = interval;
         let sigma_min = interval / (1.0 + n as f64).min(100.0);
-
-        let mut mus = Vec::with_capacity(n + 1);
-        let mut sigmas = Vec::with_capacity(n + 1);
-        for (rank, &mu) in sorted.iter().enumerate() {
-            let left = if rank == 0 { low } else { sorted[rank - 1] };
-            let right = if rank + 1 == n { high } else { sorted[rank + 1] };
+        for rank in 0..n {
+            let mu = self.mus[rank];
+            let left = if rank == 0 { low } else { self.mus[rank - 1] };
+            let right = if rank + 1 == n { high } else { self.mus[rank + 1] };
             let bw = (mu - left).max(right - mu).clamp(sigma_min, sigma_max);
-            mus.push(mu);
-            sigmas.push(bw);
+            self.sigmas.push(bw);
         }
         // prior component
-        mus.push(0.5 * (low + high));
-        sigmas.push(interval);
-        let weights = vec![1.0; n + 1];
-        ParzenEstimator { mus, sigmas, weights, low, high }
+        self.mus.push(0.5 * (low + high));
+        self.sigmas.push(interval);
+        self.weights.resize(n + 1, 1.0);
     }
 
     /// Number of mixture components.
@@ -181,6 +203,21 @@ mod tests {
         let pe = ParzenEstimator::fit(&[3.0, 3.1, 2.9], 0.0, 10.0);
         assert!(pe.logpdf(3.0) > pe.logpdf(8.0));
         assert!(pe.logpdf(3.0) > pe.logpdf(0.5));
+    }
+
+    #[test]
+    fn fit_into_reuse_matches_fresh_fit() {
+        let mut reused = ParzenEstimator::default();
+        // fit a large mixture first so the buffers carry stale capacity
+        reused.fit_into(&(0..50).map(|i| i as f64 * 0.1).collect::<Vec<_>>(), -1.0, 6.0);
+        for obs in [&[][..], &[2.0][..], &[2.0, 2.5, 7.0][..]] {
+            reused.fit_into(obs, 0.0, 10.0);
+            let fresh = ParzenEstimator::fit(obs, 0.0, 10.0);
+            assert_eq!(reused.mus, fresh.mus);
+            assert_eq!(reused.sigmas, fresh.sigmas);
+            assert_eq!(reused.weights, fresh.weights);
+            assert_eq!((reused.low, reused.high), (fresh.low, fresh.high));
+        }
     }
 
     #[test]

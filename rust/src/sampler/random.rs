@@ -65,7 +65,7 @@ mod tests {
     use crate::core::{ParamValue, StudyDirection};
 
     fn ctx<'a>(trials: &'a [crate::core::FrozenTrial]) -> StudyContext<'a> {
-        StudyContext { direction: StudyDirection::Minimize, trials }
+        StudyContext::new(StudyDirection::Minimize, trials)
     }
 
     #[test]

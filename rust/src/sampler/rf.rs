@@ -12,7 +12,7 @@ use std::sync::Mutex;
 
 use crate::core::{Distribution, TrialState};
 use crate::sampler::random::RandomSampler;
-use crate::sampler::search_space::{intersection_search_space, trial_coords};
+use crate::sampler::search_space::{intersection_search_space_ctx, trial_coords};
 use crate::sampler::{Sampler, SearchSpace, StudyContext};
 use crate::util::rng::Pcg64;
 use crate::util::stats::{erf, mean};
@@ -163,7 +163,7 @@ impl RfSampler {
 
 impl Sampler for RfSampler {
     fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
-        let mut space = intersection_search_space(ctx.trials);
+        let mut space = intersection_search_space_ctx(ctx);
         space.retain(|_, d| !matches!(d, Distribution::Categorical { .. }));
         if space.is_empty() || ctx.complete().count() < self.n_startup_trials {
             return SearchSpace::new();
@@ -219,7 +219,7 @@ impl Sampler for RfSampler {
         let incumbent = xs[ys
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| crate::util::stats::nan_max_cmp(a.1, b.1))
             .map(|(i, _)| i)
             .unwrap_or(0)]
         .clone();
@@ -301,7 +301,7 @@ mod tests {
             })
             .collect();
         let s = RfSampler::new(1);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         assert_eq!(space.len(), 1);
         let mut hits = 0;
@@ -321,7 +321,7 @@ mod tests {
         let trials: Vec<FrozenTrial> = (0..2)
             .map(|i| completed_trial(i, &[("x", d.clone(), ParamValue::Float(0.1))], 1.0))
             .collect();
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         assert!(s.infer_relative_search_space(&ctx).is_empty());
     }
 

@@ -8,7 +8,20 @@
 //! samplers (CMA-ES, GP) to model jointly.
 
 use crate::core::{FrozenTrial, TrialState};
-use crate::sampler::SearchSpace;
+use crate::sampler::{SearchSpace, StudyContext};
+
+/// Intersection search space for a sampler context: served from the
+/// incrementally-maintained observation index in O(p) when present
+/// (see [`crate::core::IndexSnapshot::intersection_space`]), otherwise
+/// recomputed by scanning every completed trial. Relational samplers
+/// (CMA-ES, GP, RF, group-TPE) call this once per ask, so on large
+/// studies the index turns their space inference from O(n·p) into O(p).
+pub fn intersection_search_space_ctx(ctx: &StudyContext<'_>) -> SearchSpace {
+    match ctx.index {
+        Some(ix) => ix.intersection_space(),
+        None => intersection_search_space(ctx.trials),
+    }
+}
 
 /// Compute the intersection search space over completed trials: parameters
 /// present — with identical distributions — in every completed trial.

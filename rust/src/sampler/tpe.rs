@@ -6,14 +6,27 @@
 //! to each; candidates are drawn from the below-model and ranked by the
 //! acquisition log l(x) − log g(x).
 //!
-//! The candidate-scoring hot loop has two interchangeable backends:
-//! * [`TpeBackend::Native`] — the in-process scorer (`ParzenEstimator::logpdf`);
-//! * [`TpeBackend::External`] — any [`CandidateScorer`], in practice the
-//!   AOT-compiled Pallas kernel executed through PJRT
-//!   (`runtime::TpeKernelScorer`), demonstrating the L3→L1 path on the
-//!   framework's own hot loop.
-//! Both backends implement the same formulas (ref.py is the ground truth);
-//! the perf_micro bench measures the crossover.
+//! Two aspects of the hot path are swappable:
+//!
+//! * **Observation source.** When the study maintains an
+//!   [`crate::core::ObservationIndex`] (the default), each suggest reads a
+//!   pre-sorted loss column — the below/above split is a slice window and
+//!   the per-call cost is O(γ + max_observations), independent of trial
+//!   count. Without an index the sampler falls back to the pre-index scan
+//!   (O(n) filter + sort per call). Both paths are decision-for-decision
+//!   identical under a fixed seed (rust/tests/obs_index_equiv.rs).
+//! * **Scoring backend.** [`TpeBackend::Native`] runs
+//!   `ParzenEstimator::logpdf` in-process; [`TpeBackend::External`] is any
+//!   [`CandidateScorer`], in practice the AOT-compiled Pallas kernel
+//!   executed through PJRT (`runtime::TpeKernelScorer`). Both implement
+//!   the same formulas (ref.py is the ground truth); the perf_micro bench
+//!   measures the crossover.
+//!
+//! With [`TpeConfig::group`] set, parameters in the intersection search
+//! space are additionally sampled *relatively* (before the objective
+//! runs) and scored through one batched
+//! [`CandidateScorer::score_groups`] call per ask — one kernel dispatch
+//! per trial instead of one per parameter.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -21,8 +34,18 @@ use std::sync::{Arc, Mutex};
 use crate::core::{Distribution, TrialState};
 use crate::sampler::parzen::ParzenEstimator;
 use crate::sampler::random::RandomSampler;
+use crate::sampler::search_space::intersection_search_space_ctx;
 use crate::sampler::{Sampler, SearchSpace, StudyContext};
 use crate::util::rng::Pcg64;
+use crate::util::stats::nan_max_cmp;
+
+/// One (candidates, below, above) scoring task for
+/// [`CandidateScorer::score_groups`].
+pub struct ScoreGroup<'a> {
+    pub cand: &'a [f64],
+    pub below: &'a ParzenEstimator,
+    pub above: &'a ParzenEstimator,
+}
 
 /// Scores TPE candidates against a below/above mixture pair. `low/high`
 /// are the internal-space interval; returns log l − log g per candidate.
@@ -33,6 +56,17 @@ pub trait CandidateScorer: Send + Sync {
         below: &ParzenEstimator,
         above: &ParzenEstimator,
     ) -> Vec<f64>;
+
+    /// Score several independent groups in one call — the flattened
+    /// batched layout group-mode TPE emits (one call per ask instead of
+    /// one per parameter). The default delegates to [`Self::score`] per
+    /// group; kernel backends can override it to amortize dispatch.
+    fn score_groups(&self, groups: &[ScoreGroup<'_>]) -> Vec<Vec<f64>> {
+        groups
+            .iter()
+            .map(|g| self.score(g.cand, g.below, g.above))
+            .collect()
+    }
 
     /// Max mixture components the backend supports (kernel padding size).
     fn max_components(&self) -> usize;
@@ -59,6 +93,12 @@ pub struct TpeConfig {
     /// cap are rank-subsampled so native and kernel backends stay
     /// equivalent.
     pub max_observations: usize,
+    /// Opt-in batched relative sampling: parameters in the intersection
+    /// search space are sampled jointly before the objective runs, with
+    /// one [`CandidateScorer::score_groups`] call per ask. Off by
+    /// default — the streamed per-`suggest` path stays decision-identical
+    /// with prior versions.
+    pub group: bool,
 }
 
 impl Default for TpeConfig {
@@ -67,8 +107,34 @@ impl Default for TpeConfig {
             n_startup_trials: 10,
             n_ei_candidates: 24,
             max_observations: 63,
+            group: false,
         }
     }
+}
+
+/// Reusable suggest-call buffers: once warm, the indexed hot path
+/// allocates nothing per call.
+#[derive(Default)]
+struct TpeScratch {
+    below_obs: Vec<f64>,
+    above_obs: Vec<f64>,
+    cand: Vec<f64>,
+    scores: Vec<f64>,
+    below: ParzenEstimator,
+    above: ParzenEstimator,
+}
+
+/// Outcome of preparing one numeric parameter for (possibly batched)
+/// scoring.
+enum Prepared {
+    /// Resolved without scoring (startup-phase random draw).
+    Drawn(f64),
+    /// Fitted mixtures + candidates awaiting a score call.
+    Pending {
+        below: ParzenEstimator,
+        above: ParzenEstimator,
+        cand: Vec<f64>,
+    },
 }
 
 /// The sampler.
@@ -76,6 +142,7 @@ pub struct TpeSampler {
     rng: Mutex<Pcg64>,
     config: TpeConfig,
     backend: TpeBackend,
+    scratch: Mutex<TpeScratch>,
 }
 
 impl TpeSampler {
@@ -88,7 +155,12 @@ impl TpeSampler {
     }
 
     pub fn with_config(seed: u64, config: TpeConfig, backend: TpeBackend) -> Self {
-        TpeSampler { rng: Mutex::new(Pcg64::new(seed)), config, backend }
+        TpeSampler {
+            rng: Mutex::new(Pcg64::new(seed)),
+            config,
+            backend,
+            scratch: Mutex::new(TpeScratch::default()),
+        }
     }
 
     /// γ(n): number of trials in the "below" (good) split.
@@ -100,6 +172,10 @@ impl TpeSampler {
     /// Pruned trials participate with their last recorded value (mirrors
     /// Optuna: the pruning experiments rely on TPE learning from the
     /// hundreds of early-stopped trials, not just the few completed ones).
+    ///
+    /// This is the index-free fallback; with an observation index the
+    /// equivalent data comes pre-sorted from
+    /// [`crate::core::IndexSnapshot::param_column`].
     fn observations(
         ctx: &StudyContext<'_>,
         name: &str,
@@ -119,64 +195,156 @@ impl TpeSampler {
             .collect()
     }
 
-    /// Split observations into (below values, above values) by loss.
-    fn split(mut obs: Vec<(f64, f64)>, max_each: usize) -> (Vec<f64>, Vec<f64>) {
-        obs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        let n_below = Self::gamma(obs.len());
-        let below: Vec<f64> = obs[..n_below].iter().map(|(v, _)| *v).collect();
-        let above: Vec<f64> = obs[n_below..].iter().map(|(v, _)| *v).collect();
-        (subsample(below, max_each), subsample(above, max_each))
+    /// Sort (value, loss) observations by ascending loss (stable; NaN
+    /// losses to the "above" end) and strip to values.
+    fn sort_by_loss(mut obs: Vec<(f64, f64)>) -> Vec<f64> {
+        obs.sort_by(|a, b| nan_max_cmp(&a.1, &b.1));
+        obs.into_iter().map(|(v, _)| v).collect()
     }
 
-    fn score(
-        &self,
-        cand: &[f64],
-        below: &ParzenEstimator,
-        above: &ParzenEstimator,
-    ) -> Vec<f64> {
-        match &self.backend {
-            TpeBackend::Native => cand
-                .iter()
-                .map(|&x| below.logpdf(x) - above.logpdf(x))
-                .collect(),
-            TpeBackend::External(scorer) => scorer.score(cand, below, above),
+    /// Split observations into (below values, above values) by loss —
+    /// kept for the scan fallback and tests; the indexed path slices the
+    /// pre-sorted column directly.
+    fn split(obs: Vec<(f64, f64)>, max_each: usize) -> (Vec<f64>, Vec<f64>) {
+        let sorted = Self::sort_by_loss(obs);
+        let n_below = Self::gamma(sorted.len());
+        (
+            subsample(sorted[..n_below].to_vec(), max_each),
+            subsample(sorted[n_below..].to_vec(), max_each),
+        )
+    }
+
+    /// Loss-ordered observation values for `(name, dist)`: from the index
+    /// when available (O(1)), otherwise scanned out of the trial snapshot
+    /// (O(n log n)). `owned` is the backing store for the scan path.
+    fn values_by_loss<'a>(
+        ctx: &'a StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+        owned: &'a mut Vec<f64>,
+    ) -> &'a [f64] {
+        match ctx.index {
+            Some(ix) => ix
+                .param_column(name, dist)
+                .map_or(&[][..], |c| c.values_by_loss()),
+            None => {
+                *owned = Self::sort_by_loss(Self::observations(ctx, name, dist));
+                &owned[..]
+            }
         }
     }
 
-    /// Continuous/int suggestion in internal space.
+    /// (max observations per split, candidates per call) under the
+    /// backend's capacity limits.
+    fn backend_limits(&self) -> (usize, usize) {
+        match &self.backend {
+            TpeBackend::External(s) => (
+                self.config.max_observations.min(s.max_components() - 1),
+                self.config.n_ei_candidates.min(s.max_candidates()),
+            ),
+            TpeBackend::Native => {
+                (self.config.max_observations, self.config.n_ei_candidates)
+            }
+        }
+    }
+
+    /// Continuous/int suggestion in internal space. Runs entirely out of
+    /// the reusable scratch buffers — no per-call Vec churn.
     fn suggest_numeric(
         &self,
         ctx: &StudyContext<'_>,
         name: &str,
         dist: &Distribution,
     ) -> f64 {
-        let obs = Self::observations(ctx, name, dist);
-        let mut rng = self.rng.lock().unwrap();
-        if obs.len() < self.config.n_startup_trials {
+        let mut owned = Vec::new();
+        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        if values.len() < self.config.n_startup_trials {
+            let mut rng = self.rng.lock().unwrap();
             return RandomSampler::draw(&mut rng, dist);
         }
-        let max_obs = match &self.backend {
-            TpeBackend::External(s) => self.config.max_observations.min(s.max_components() - 1),
-            TpeBackend::Native => self.config.max_observations,
-        };
-        let (below_obs, above_obs) = Self::split(obs, max_obs);
+        let (max_obs, n_cand) = self.backend_limits();
+        let n_below = Self::gamma(values.len());
         let (lo, hi) = dist.internal_range();
-        let below = ParzenEstimator::fit(&below_obs, lo, hi);
-        let above = ParzenEstimator::fit(&above_obs, lo, hi);
-        let n_cand = match &self.backend {
-            TpeBackend::External(s) => self.config.n_ei_candidates.min(s.max_candidates()),
-            TpeBackend::Native => self.config.n_ei_candidates,
-        };
-        let cand: Vec<f64> = (0..n_cand).map(|_| below.sample(&mut rng)).collect();
-        drop(rng);
-        let scores = self.score(&cand, &below, &above);
-        let mut best = 0usize;
-        for i in 1..cand.len() {
-            if scores[i] > scores[best] {
-                best = i;
+
+        let mut scratch = self.scratch.lock().unwrap();
+        {
+            let s = &mut *scratch;
+            subsample_into(&values[..n_below], max_obs, &mut s.below_obs);
+            subsample_into(&values[n_below..], max_obs, &mut s.above_obs);
+            s.below.fit_into(&s.below_obs, lo, hi);
+            s.above.fit_into(&s.above_obs, lo, hi);
+            s.cand.clear();
+            let mut rng = self.rng.lock().unwrap();
+            for _ in 0..n_cand {
+                s.cand.push(s.below.sample(&mut rng));
             }
         }
-        cand[best]
+        match &self.backend {
+            TpeBackend::Native => {
+                // cheap in-process scoring: stay inside the scratch lock,
+                // zero allocation per call
+                let s = &mut *scratch;
+                s.scores.clear();
+                for &x in &s.cand {
+                    s.scores.push(s.below.logpdf(x) - s.above.logpdf(x));
+                }
+                let mut best = 0usize;
+                for i in 1..s.cand.len() {
+                    if s.scores[i] > s.scores[best] {
+                        best = i;
+                    }
+                }
+                s.cand[best]
+            }
+            TpeBackend::External(scorer) => {
+                // kernel dispatch dominates and must overlap across
+                // workers: move the inputs out and release the lock first
+                let cand = std::mem::take(&mut scratch.cand);
+                let below = scratch.below.clone();
+                let above = scratch.above.clone();
+                drop(scratch);
+                let scores = scorer.score(&cand, &below, &above);
+                let mut best = 0usize;
+                for i in 1..cand.len() {
+                    if scores[i] > scores[best] {
+                        best = i;
+                    }
+                }
+                cand[best]
+            }
+        }
+    }
+
+    /// Like [`Self::suggest_numeric`] but defers scoring, so group-mode
+    /// relative sampling can batch every parameter's candidates into one
+    /// [`CandidateScorer::score_groups`] call.
+    fn prepare_numeric(
+        &self,
+        ctx: &StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+    ) -> Prepared {
+        let mut owned = Vec::new();
+        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        if values.len() < self.config.n_startup_trials {
+            let mut rng = self.rng.lock().unwrap();
+            return Prepared::Drawn(RandomSampler::draw(&mut rng, dist));
+        }
+        let (max_obs, n_cand) = self.backend_limits();
+        let n_below = Self::gamma(values.len());
+        let (lo, hi) = dist.internal_range();
+        let below =
+            ParzenEstimator::fit(&subsample(values[..n_below].to_vec(), max_obs), lo, hi);
+        let above =
+            ParzenEstimator::fit(&subsample(values[n_below..].to_vec(), max_obs), lo, hi);
+        let mut cand = Vec::with_capacity(n_cand);
+        {
+            let mut rng = self.rng.lock().unwrap();
+            for _ in 0..n_cand {
+                cand.push(below.sample(&mut rng));
+            }
+        }
+        Prepared::Pending { below, above, cand }
     }
 
     /// Categorical suggestion: weighted-count ratio over categories.
@@ -187,13 +355,13 @@ impl TpeSampler {
         dist: &Distribution,
         n_categories: usize,
     ) -> f64 {
-        let obs = Self::observations(ctx, name, dist);
-        let mut rng = self.rng.lock().unwrap();
-        if obs.len() < self.config.n_startup_trials {
+        let mut owned = Vec::new();
+        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        if values.len() < self.config.n_startup_trials {
+            let mut rng = self.rng.lock().unwrap();
             return RandomSampler::draw(&mut rng, dist);
         }
-        drop(rng);
-        let (below, above) = Self::split(obs, usize::MAX);
+        let (below, above) = values.split_at(Self::gamma(values.len()));
         let weight = |vals: &[f64]| -> Vec<f64> {
             // Laplace-smoothed category frequencies
             let mut w = vec![1.0f64; n_categories];
@@ -204,8 +372,8 @@ impl TpeSampler {
             let total: f64 = w.iter().sum();
             w.iter().map(|x| x / total).collect()
         };
-        let wb = weight(&below);
-        let wa = weight(&above);
+        let wb = weight(below);
+        let wa = weight(above);
         let mut best = 0usize;
         let mut best_score = f64::NEG_INFINITY;
         for c in 0..n_categories {
@@ -221,27 +389,88 @@ impl TpeSampler {
 
 /// Deterministic rank-stratified subsample to at most `max` items.
 fn subsample(vals: Vec<f64>, max: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    subsample_into(&vals, max, &mut out);
+    out
+}
+
+/// [`subsample`] into a reusable buffer (identical picks).
+fn subsample_into(vals: &[f64], max: usize, out: &mut Vec<f64>) {
+    out.clear();
     let n = vals.len();
     if n <= max {
-        return vals;
+        out.extend_from_slice(vals);
+        return;
     }
-    (0..max)
-        .map(|i| vals[i * n / max])
-        .collect()
+    out.extend((0..max).map(|i| vals[i * n / max]));
 }
 
 impl Sampler for TpeSampler {
-    fn infer_relative_search_space(&self, _ctx: &StudyContext<'_>) -> SearchSpace {
-        SearchSpace::new() // TPE is a purely independent sampler
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
+        if !self.config.group {
+            return SearchSpace::new(); // purely independent sampling
+        }
+        intersection_search_space_ctx(ctx)
     }
 
     fn sample_relative(
         &self,
-        _ctx: &StudyContext<'_>,
+        ctx: &StudyContext<'_>,
         _trial_number: u64,
-        _space: &SearchSpace,
+        space: &SearchSpace,
     ) -> BTreeMap<String, f64> {
-        BTreeMap::new()
+        let mut out = BTreeMap::new();
+        if !self.config.group || space.is_empty() {
+            return out;
+        }
+        // Prepare every numeric parameter first, then score all of them
+        // through ONE batched call: External backends pay one dispatch
+        // per ask instead of one per parameter.
+        let mut pending: Vec<(String, ParzenEstimator, ParzenEstimator, Vec<f64>)> =
+            Vec::new();
+        for (name, dist) in space {
+            if let Distribution::Categorical { choices } = dist {
+                let v = self.suggest_categorical(ctx, name, dist, choices.len());
+                out.insert(name.clone(), v);
+                continue;
+            }
+            match self.prepare_numeric(ctx, name, dist) {
+                Prepared::Drawn(v) => {
+                    out.insert(name.clone(), v);
+                }
+                Prepared::Pending { below, above, cand } => {
+                    pending.push((name.clone(), below, above, cand));
+                }
+            }
+        }
+        if pending.is_empty() {
+            return out;
+        }
+        let scores: Vec<Vec<f64>> = match &self.backend {
+            TpeBackend::Native => pending
+                .iter()
+                .map(|(_, b, a, c)| {
+                    c.iter().map(|&x| b.logpdf(x) - a.logpdf(x)).collect()
+                })
+                .collect(),
+            TpeBackend::External(scorer) => {
+                let groups: Vec<ScoreGroup<'_>> = pending
+                    .iter()
+                    .map(|(_, b, a, c)| ScoreGroup { cand: c, below: b, above: a })
+                    .collect();
+                scorer.score_groups(&groups)
+            }
+        };
+        for ((name, _, _, cand), sc) in pending.iter().zip(&scores) {
+            let mut best = 0usize;
+            for i in 1..cand.len() {
+                if sc[i] > sc[best] {
+                    best = i;
+                }
+            }
+            out.insert(name.clone(), cand[best]);
+        }
+        out
     }
 
     fn sample_independent(
@@ -270,11 +499,11 @@ impl Sampler for TpeSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{FrozenTrial, ParamValue, StudyDirection};
+    use crate::core::{FrozenTrial, ObservationIndex, ParamValue, StudyDirection};
     use crate::sampler::testutil::{bowl_history, completed_trial};
 
     fn ctx<'a>(trials: &'a [FrozenTrial]) -> StudyContext<'a> {
-        StudyContext { direction: StudyDirection::Minimize, trials }
+        StudyContext::new(StudyDirection::Minimize, trials)
     }
 
     #[test]
@@ -317,6 +546,27 @@ mod tests {
     }
 
     #[test]
+    fn indexed_and_scan_paths_agree_suggestion_for_suggestion() {
+        let trials = bowl_history(80, 13);
+        let d = Distribution::float(-5.0, 5.0);
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let snap = ix.apply(&trials, 1);
+        // two samplers with the same seed, one per observation source
+        let scan = TpeSampler::new(17);
+        let indexed = TpeSampler::new(17);
+        for i in 0..50 {
+            let a = scan.sample_independent(&ctx(&trials), i, "x", &d);
+            let c = StudyContext::with_index(
+                StudyDirection::Minimize,
+                &trials,
+                Some(&*snap),
+            );
+            let b = indexed.sample_independent(&c, i, "x", &d);
+            assert_eq!(a, b, "suggestion {i} diverged");
+        }
+    }
+
+    #[test]
     fn maximize_direction_flips_split() {
         // loss = -(x²) maximized at ±5; TPE maximizing −x² must AVOID 0.
         let mut trials = Vec::new();
@@ -331,7 +581,7 @@ mod tests {
             ));
         }
         let s = TpeSampler::new(2);
-        let ctx = StudyContext { direction: StudyDirection::Maximize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Maximize, &trials);
         let mut far = 0;
         for i in 0..100 {
             let v = s.sample_independent(&ctx, i, "x", &d);
@@ -360,6 +610,129 @@ mod tests {
     }
 
     #[test]
+    fn nan_loss_does_not_panic_and_is_ranked_worst() {
+        // A diverged trial tell'd with NaN used to panic the
+        // partial_cmp(..).unwrap() sort in split(); it must now be sorted
+        // to the "above" end and sampling must proceed.
+        let d = Distribution::float(-5.0, 5.0);
+        let mut trials = bowl_history(30, 9);
+        let mut diverged =
+            completed_trial(30, &[("x", d.clone(), ParamValue::Float(4.9))], 0.0);
+        diverged.value = Some(f64::NAN);
+        trials.push(diverged);
+        let s = TpeSampler::new(7);
+        for i in 0..20 {
+            let v = s.sample_independent(&ctx(&trials), i, "x", &d);
+            assert!((-5.0..=5.0).contains(&v));
+        }
+        // and the NaN observation lands last in the loss ordering
+        let sorted = TpeSampler::sort_by_loss(TpeSampler::observations(
+            &ctx(&trials),
+            "x",
+            &d,
+        ));
+        assert_eq!(*sorted.last().unwrap(), 4.9);
+    }
+
+    #[test]
+    fn group_mode_samples_intersection_relatively() {
+        let trials = bowl_history(40, 21);
+        let s = TpeSampler::with_config(
+            4,
+            TpeConfig { group: true, ..Default::default() },
+            TpeBackend::Native,
+        );
+        let c = ctx(&trials);
+        let space = s.infer_relative_search_space(&c);
+        assert_eq!(space.len(), 1, "intersection is {{x}}");
+        let rel = s.sample_relative(&c, 40, &space);
+        let x = rel["x"];
+        assert!((-5.0..=5.0).contains(&x));
+        // default (non-group) config opts out of relative sampling
+        let plain = TpeSampler::new(4);
+        assert!(plain.infer_relative_search_space(&c).is_empty());
+    }
+
+    #[test]
+    fn group_mode_batches_one_score_call_per_ask() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Counts score_groups calls; scores natively.
+        struct CountingScorer {
+            group_calls: AtomicUsize,
+            single_calls: AtomicUsize,
+        }
+        impl CandidateScorer for CountingScorer {
+            fn score(
+                &self,
+                cand: &[f64],
+                below: &ParzenEstimator,
+                above: &ParzenEstimator,
+            ) -> Vec<f64> {
+                self.single_calls.fetch_add(1, Ordering::SeqCst);
+                cand.iter()
+                    .map(|&x| below.logpdf(x) - above.logpdf(x))
+                    .collect()
+            }
+            fn score_groups(&self, groups: &[ScoreGroup<'_>]) -> Vec<Vec<f64>> {
+                self.group_calls.fetch_add(1, Ordering::SeqCst);
+                groups
+                    .iter()
+                    .map(|g| {
+                        g.cand
+                            .iter()
+                            .map(|&x| g.below.logpdf(x) - g.above.logpdf(x))
+                            .collect()
+                    })
+                    .collect()
+            }
+            fn max_components(&self) -> usize {
+                usize::MAX
+            }
+            fn max_candidates(&self) -> usize {
+                usize::MAX
+            }
+        }
+
+        let d = Distribution::float(-5.0, 5.0);
+        let mut rng = Pcg64::new(31);
+        let trials: Vec<FrozenTrial> = (0..30)
+            .map(|i| {
+                let x = rng.uniform_range(-5.0, 5.0);
+                let y = rng.uniform_range(-5.0, 5.0);
+                completed_trial(
+                    i,
+                    &[
+                        ("x", d.clone(), ParamValue::Float(x)),
+                        ("y", d.clone(), ParamValue::Float(y)),
+                    ],
+                    x * x + y * y,
+                )
+            })
+            .collect();
+        let scorer = Arc::new(CountingScorer {
+            group_calls: AtomicUsize::new(0),
+            single_calls: AtomicUsize::new(0),
+        });
+        let s = TpeSampler::with_config(
+            5,
+            TpeConfig { group: true, ..Default::default() },
+            TpeBackend::External(scorer.clone()),
+        );
+        let c = ctx(&trials);
+        let space = s.infer_relative_search_space(&c);
+        assert_eq!(space.len(), 2);
+        let rel = s.sample_relative(&c, 30, &space);
+        assert_eq!(rel.len(), 2);
+        assert_eq!(
+            scorer.group_calls.load(Ordering::SeqCst),
+            1,
+            "two numeric params, ONE batched call"
+        );
+        assert_eq!(scorer.single_calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
     fn subsample_preserves_order_and_caps() {
         let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
         let out = subsample(vals.clone(), 10);
@@ -368,6 +741,15 @@ mod tests {
             assert!(w[0] < w[1]);
         }
         assert_eq!(subsample(vals.clone(), 200), vals);
+    }
+
+    #[test]
+    fn split_still_serves_scan_fallback() {
+        let obs: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (20 - i) as f64)).collect();
+        let (below, above) = TpeSampler::split(obs, usize::MAX);
+        assert_eq!(below.len(), TpeSampler::gamma(20));
+        assert_eq!(below[0], 19.0, "lowest loss first");
+        assert_eq!(below.len() + above.len(), 20);
     }
 
     #[test]

@@ -102,7 +102,7 @@ mod tests {
     fn tpe_phase_has_no_relative_space() {
         let s = TpeCmaEsSampler::new(0);
         let trials = history(39);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         assert!(s.infer_relative_search_space(&ctx).is_empty());
     }
 
@@ -110,7 +110,7 @@ mod tests {
     fn cmaes_phase_activates_after_switch() {
         let s = TpeCmaEsSampler::new(0);
         let trials = history(45);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         let space = s.infer_relative_search_space(&ctx);
         assert_eq!(space.len(), 1);
         let rel = s.sample_relative(&ctx, 45, &space);
@@ -122,7 +122,7 @@ mod tests {
     fn custom_switch_point() {
         let s = TpeCmaEsSampler::with_switch(0, 5);
         let trials = history(6);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         assert!(!s.infer_relative_search_space(&ctx).is_empty());
     }
 
@@ -131,7 +131,7 @@ mod tests {
         let s = TpeCmaEsSampler::new(1);
         let d = Distribution::float(-5.0, 5.0);
         let trials = history(60);
-        let ctx = StudyContext { direction: StudyDirection::Minimize, trials: &trials };
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials);
         // concentration check (TPE behaviour)
         let mut near = 0;
         for i in 0..60 {

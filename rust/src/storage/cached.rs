@@ -28,6 +28,12 @@
 //! provides, and any number of decorators (e.g. one per process over a
 //! shared [`super::JournalStorage`]) stay coherent because every read
 //! re-syncs from the backend's sequence number.
+//!
+//! The same generation stamps drive the decision-layer index: a study's
+//! [`crate::core::ObservationIndex`] keeps its own cursor into the
+//! [`Storage::get_trials_since`] delta stream (see
+//! [`CachedStorage::generation`] for the handshake), so sampler/pruner
+//! columns advance in O(delta) lock-step with the snapshot cache.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -65,6 +71,24 @@ impl CachedStorage {
     /// The decorated backend.
     pub fn inner(&self) -> &Arc<dyn Storage> {
         &self.inner
+    }
+
+    /// The generation (backend sequence number) the cached snapshot of
+    /// `study_id` is currently synced to, without refreshing; 0 if the
+    /// study has never been read through this cache.
+    ///
+    /// This is the handshake the [`crate::core::ObservationIndex`] layers
+    /// on: the index keeps its own cursor into the same
+    /// [`Storage::get_trials_since`] delta stream, so "cache generation ==
+    /// index cursor" means the sampler columns are exactly as fresh as the
+    /// trial snapshot, and a quiet study costs both layers one sequence
+    /// number compare.
+    pub fn generation(&self, study_id: u64) -> u64 {
+        self.cache
+            .lock()
+            .unwrap()
+            .get(&study_id)
+            .map_or(0, |entry| entry.seq)
     }
 
     /// Sync the study's cache entry to the backend's current sequence
@@ -328,6 +352,17 @@ mod tests {
         let snap = a.get_trials_snapshot(sid).unwrap();
         assert_eq!(snap[0].state, TrialState::Complete);
         assert_eq!(snap[0].value, Some(2.0));
+    }
+
+    #[test]
+    fn generation_tracks_backend_seq() {
+        let cached = CachedStorage::new(Arc::new(InMemoryStorage::new()));
+        let sid = cached.create_study("gen", StudyDirection::Minimize).unwrap();
+        assert_eq!(cached.generation(sid), 0, "never read through the cache");
+        let (tid, _) = cached.create_trial(sid).unwrap();
+        cached.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        cached.get_trials_snapshot(sid).unwrap();
+        assert_eq!(cached.generation(sid), cached.study_seq(sid).unwrap());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! the simple locking keeps the backend obviously correct. (The perf pass
 //! measured the trade-off — see EXPERIMENTS.md §Perf.)
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
@@ -21,6 +21,11 @@ struct StudyRec {
     /// monotonic write counter (the delta-API generation; see the
     /// consistency contract on [`Storage::study_seq`])
     seq: u64,
+    /// Append-only (seq, trial_id) write log: `get_trials_since` binary-
+    /// searches it so a delta fetch costs O(log writes + changed trials)
+    /// instead of scanning every trial id of the study. Memory is bounded
+    /// by total writes (a handful of entries per trial lifecycle).
+    write_log: Vec<(u64, u64)>,
 }
 
 struct Inner {
@@ -34,11 +39,14 @@ struct Inner {
 }
 
 impl Inner {
-    /// Record that `trial_id` changed: bump its study's seq and restamp.
+    /// Record that `trial_id` changed: bump its study's seq, restamp, and
+    /// append to the study's write log.
     fn touch(&mut self, trial_id: u64) {
         let sid = self.trial_study[trial_id as usize] as usize;
         self.studies[sid].seq += 1;
         self.trial_seq[trial_id as usize] = self.studies[sid].seq;
+        let seq = self.studies[sid].seq;
+        self.studies[sid].write_log.push((seq, trial_id));
     }
 }
 
@@ -87,6 +95,7 @@ impl Storage for InMemoryStorage {
             direction,
             trials: Vec::new(),
             seq: 0,
+            write_log: Vec::new(),
         });
         g.by_name.insert(name.to_string(), id);
         Ok(id)
@@ -247,14 +256,21 @@ impl Storage for InMemoryStorage {
     ) -> Result<TrialDelta, OptunaError> {
         let g = self.inner.lock().unwrap();
         let s = g.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
-        // `s.trials` is in creation (= number) order, so the filtered
-        // result is number-ordered too, as the contract requires
-        let trials = s
-            .trials
-            .iter()
-            .filter(|&&tid| g.trial_seq[tid as usize] > since_seq)
-            .map(|&tid| g.trials[tid as usize].clone())
-            .collect();
+        // Binary-search the write log (seqs are strictly increasing) and
+        // dedup the tail: O(log writes + changed), not O(all trials) —
+        // this is the hot call of both the snapshot cache and the
+        // observation index.
+        let start = s.write_log.partition_point(|&(seq, _)| seq <= since_seq);
+        let mut seen = HashSet::new();
+        let mut ids: Vec<u64> = Vec::new();
+        for &(_, tid) in &s.write_log[start..] {
+            if seen.insert(tid) {
+                ids.push(tid);
+            }
+        }
+        // the contract requires number order
+        ids.sort_unstable_by_key(|&tid| g.trials[tid as usize].number);
+        let trials = ids.iter().map(|&tid| g.trials[tid as usize].clone()).collect();
         Ok(TrialDelta { seq: s.seq, trials })
     }
 }
@@ -287,6 +303,27 @@ mod tests {
         // failed writes don't advance the counter
         assert!(s.finish_trial(ta, TrialState::Failed, None).is_err());
         assert_eq!(s.study_seq(a).unwrap(), 3);
+    }
+
+    #[test]
+    fn delta_write_log_dedups_and_orders() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("log", StudyDirection::Minimize).unwrap();
+        let (t0, _) = s.create_trial(sid).unwrap();
+        let (t1, _) = s.create_trial(sid).unwrap();
+        let seq0 = s.study_seq(sid).unwrap();
+        // several writes to t1 then one to t0: the delta carries each
+        // trial once (current state), ordered by number
+        s.set_trial_intermediate(t1, 1, 0.1).unwrap();
+        s.set_trial_intermediate(t1, 2, 0.2).unwrap();
+        s.set_trial_param(t0, "x", &Distribution::float(0.0, 1.0), 0.5).unwrap();
+        let d = s.get_trials_since(sid, seq0).unwrap();
+        assert_eq!(d.trials.len(), 2);
+        assert_eq!(d.trials[0].id, t0);
+        assert_eq!(d.trials[1].id, t1);
+        assert_eq!(d.trials[1].intermediate_at(2), Some(0.2));
+        // quiet tail
+        assert!(s.get_trials_since(sid, d.seq).unwrap().trials.is_empty());
     }
 
     #[test]

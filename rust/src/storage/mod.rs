@@ -15,6 +15,12 @@
 //! `get_all_trials` into an O(new trials) delta merge, using the
 //! sequence-number contract documented on [`Storage::study_seq`].
 //! [`crate::study::StudyBuilder`] applies it automatically.
+//!
+//! The delta stream has a second consumer: the per-study
+//! [`crate::core::ObservationIndex`] folds the same
+//! [`Storage::get_trials_since`] batches into loss-sorted observation
+//! columns for samplers and per-step value columns for pruners, keeping
+//! the *decision* layer O(delta) too, not just the snapshot reads.
 
 mod cached;
 mod in_memory;

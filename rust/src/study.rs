@@ -2,12 +2,14 @@
 //! pruner, runs the optimize loop, and exposes ask/tell for custom loops.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use crate::core::{FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{
+    FrozenTrial, IndexSnapshot, ObservationIndex, OptunaError, StudyDirection, TrialState,
+};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
-use crate::storage::{get_or_create_study, CachedStorage, InMemoryStorage, Storage};
+use crate::storage::{get_or_create_study, CachedStorage, InMemoryStorage, Storage, SEQ_UNTRACKED};
 use crate::trial::Trial;
 
 /// A study: the unit of optimization. Cheap to share across threads by
@@ -16,6 +18,9 @@ pub struct Study {
     pub(crate) storage: Arc<dyn Storage>,
     pub(crate) sampler: Arc<dyn Sampler>,
     pub(crate) pruner: Arc<dyn Pruner>,
+    /// Generation-stamped observation index over this study's trials
+    /// (`None` when disabled via [`StudyBuilder::observation_index`]).
+    pub(crate) obs_index: Option<Mutex<ObservationIndex>>,
     pub study_id: u64,
     pub direction: StudyDirection,
     pub name: String,
@@ -29,6 +34,7 @@ pub struct StudyBuilder {
     sampler: Option<Arc<dyn Sampler>>,
     pruner: Option<Arc<dyn Pruner>>,
     cache: bool,
+    index: bool,
 }
 
 impl StudyBuilder {
@@ -66,6 +72,17 @@ impl StudyBuilder {
         self
     }
 
+    /// Enable/disable the generation-stamped observation index (see
+    /// [`crate::core::ObservationIndex`]). On by default; turning it off
+    /// restores the scan-per-call sampler/pruner hot paths — useful for
+    /// benchmarking and for the equivalence suite
+    /// (rust/tests/obs_index_equiv.rs), which proves the two paths make
+    /// identical decisions.
+    pub fn observation_index(mut self, enabled: bool) -> Self {
+        self.index = enabled;
+        self
+    }
+
     /// Create (or join, for shared storage) the study.
     pub fn build(self) -> Result<Study, OptunaError> {
         let storage = self
@@ -75,10 +92,14 @@ impl StudyBuilder {
         let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
         let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
         let study_id = get_or_create_study(storage.as_ref(), &self.name, self.direction)?;
+        let obs_index = self
+            .index
+            .then(|| Mutex::new(ObservationIndex::new(self.direction)));
         Ok(Study {
             storage,
             sampler,
             pruner,
+            obs_index,
             study_id,
             direction: self.direction,
             name: self.name,
@@ -102,25 +123,47 @@ impl Study {
             sampler: None,
             pruner: None,
             cache: true,
+            index: true,
         }
+    }
+
+    /// Advance the observation index to the storage's current sequence
+    /// number and return its snapshot (`None` when the index is
+    /// disabled). O(1) on a quiet study — a sequence-number compare —
+    /// and O(changed trials) otherwise, via the same delta stream the
+    /// snapshot cache uses.
+    pub(crate) fn sync_obs_index(&self) -> Result<Option<Arc<IndexSnapshot>>, OptunaError> {
+        let Some(index) = &self.obs_index else {
+            return Ok(None);
+        };
+        let mut ix = index.lock().unwrap();
+        let seq = self.storage.study_seq(self.study_id)?;
+        if seq != SEQ_UNTRACKED && seq == ix.seq() {
+            return Ok(Some(ix.snapshot()));
+        }
+        let delta = self.storage.get_trials_since(self.study_id, ix.seq())?;
+        Ok(Some(ix.apply(&delta.trials, delta.seq)))
     }
 
     /// Begin a trial: creates it in storage and runs relational sampling.
     /// The history snapshot taken here is shared by every independent
     /// suggest in the trial, and — through the storage cache — with every
     /// concurrent worker: unless the study changed since the last read,
-    /// no trial data is cloned at all.
+    /// no trial data is cloned at all. The observation index is synced to
+    /// the same generation, so every suggest in the trial reads pre-sorted
+    /// observation columns instead of scanning the snapshot.
     pub fn ask(&self) -> Result<Trial<'_>, OptunaError> {
         let (trial_id, number) = self.storage.create_trial(self.study_id)?;
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
-        let ctx = StudyContext { direction: self.direction, trials: &trials };
+        let index = self.sync_obs_index()?;
+        let ctx = StudyContext::with_index(self.direction, &trials, index.as_deref());
         let space = self.sampler.infer_relative_search_space(&ctx);
         let relative = if space.is_empty() {
             Default::default()
         } else {
             self.sampler.sample_relative(&ctx, number, &space)
         };
-        Ok(Trial::new(self, trial_id, number, relative, space, trials))
+        Ok(Trial::new(self, trial_id, number, relative, space, trials, index))
     }
 
     /// Finish a trial with an outcome.
@@ -509,6 +552,48 @@ mod tests {
             .build()
             .unwrap();
         assert!(!raw.storage.is_write_through_cache());
+    }
+
+    #[test]
+    fn builder_observation_index_default_on_and_optional() {
+        let study = quadratic_study(13);
+        assert!(study.obs_index.is_some());
+        let plain = Study::builder()
+            .name("no-index")
+            .observation_index(false)
+            .build()
+            .unwrap();
+        assert!(plain.obs_index.is_none());
+        assert!(plain.sync_obs_index().unwrap().is_none());
+    }
+
+    #[test]
+    fn obs_index_tracks_study_through_optimize() {
+        let study = Study::builder()
+            .name("idx-sync")
+            .sampler(Arc::new(RandomSampler::new(14)))
+            .build()
+            .unwrap();
+        study
+            .optimize(12, |t| {
+                let x = t.suggest_float("x", -1.0, 1.0)?;
+                t.report(1, x)?;
+                Ok(x)
+            })
+            .unwrap();
+        let snap = study.sync_obs_index().unwrap().unwrap();
+        assert_eq!(snap.n_finished(), 12);
+        let d = crate::core::Distribution::float(-1.0, 1.0);
+        let col = snap.param_column("x", &d).unwrap();
+        assert_eq!(col.len(), 12);
+        // losses come out ascending
+        for w in col.values_by_loss().windows(2) {
+            assert!(w[0] <= w[1], "losses (=values here) must ascend");
+        }
+        assert_eq!(snap.step_column(1).unwrap().len(), 12);
+        // quiet study: repeated syncs share the same snapshot Arc
+        let again = study.sync_obs_index().unwrap().unwrap();
+        assert!(Arc::ptr_eq(&snap, &again));
     }
 
     #[test]

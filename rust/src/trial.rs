@@ -14,7 +14,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, ParamValue};
+use crate::core::{Distribution, FrozenTrial, IndexSnapshot, OptunaError, ParamValue};
 use crate::pruner::PruningContext;
 use crate::sampler::{SearchSpace, StudyContext};
 use crate::study::Study;
@@ -110,6 +110,10 @@ pub struct Trial<'s> {
     /// per trial instead of one per parameter, and zero clones when the
     /// study hasn't changed between asks.
     pub(crate) snapshot: Arc<Vec<FrozenTrial>>,
+    /// Observation-index snapshot synced to the same generation as
+    /// `snapshot` (`None` when the study runs without an index); gives
+    /// samplers pre-sorted observation columns per suggest.
+    pub(crate) index: Option<Arc<IndexSnapshot>>,
 }
 
 impl<'s> Trial<'s> {
@@ -120,6 +124,7 @@ impl<'s> Trial<'s> {
         relative_params: BTreeMap<String, f64>,
         relative_space: SearchSpace,
         snapshot: Arc<Vec<FrozenTrial>>,
+        index: Option<Arc<IndexSnapshot>>,
     ) -> Self {
         Trial {
             study,
@@ -130,6 +135,7 @@ impl<'s> Trial<'s> {
             cache: BTreeMap::new(),
             last_report: None,
             snapshot,
+            index,
         }
     }
 
@@ -182,8 +188,12 @@ impl TrialApi for Trial<'_> {
         };
         // Fresh shared snapshot (delta-refreshed, not a full clone): the
         // pruner must see the intermediates other workers just reported,
-        // and our own `report` above.
+        // and our own `report` above. The index is synced after the
+        // snapshot for the same reason — its step columns must contain
+        // our own report (the sync-after-report invariant pruners rely
+        // on for their O(log n) queries).
         let trials = self.study.storage.get_trials_snapshot(self.study.study_id)?;
+        let index = self.study.sync_obs_index()?;
         let Some(me) = trials.iter().find(|t| t.id == self.trial_id) else {
             return Err(OptunaError::Storage(format!(
                 "trial {} missing from snapshot",
@@ -195,6 +205,7 @@ impl TrialApi for Trial<'_> {
             trials: &trials,
             trial: me,
             step,
+            index: index.as_deref(),
         };
         Ok(self.study.pruner.should_prune(&ctx))
     }
@@ -214,10 +225,11 @@ impl Trial<'_> {
             let (lo, _) = dist.internal_range();
             return Ok(lo);
         }
-        let ctx = StudyContext {
-            direction: self.study.direction,
-            trials: &self.snapshot,
-        };
+        let ctx = StudyContext::with_index(
+            self.study.direction,
+            &self.snapshot,
+            self.index.as_deref(),
+        );
         Ok(self
             .study
             .sampler

@@ -6,6 +6,26 @@
 //! "paired Mann-Whitney" phrasing refers to), midrank utilities, the
 //! standard normal CDF/quantile, and descriptive statistics.
 
+use std::cmp::Ordering;
+
+/// Total order on `f64` with every NaN treated as the greatest value
+/// (and all NaNs equal, regardless of sign/payload bits).
+///
+/// This is the one comparator the framework sorts objective values with:
+/// a diverged trial tell'd with `NaN` lands at the "worst" end of a
+/// minimization ranking instead of panicking the
+/// `partial_cmp(..).unwrap()` the samplers and pruners used to call.
+/// For NaN-free inputs it orders exactly like `partial_cmp`.
+#[inline]
+pub fn nan_max_cmp(a: &f64, b: &f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.partial_cmp(b).unwrap(),
+    }
+}
+
 /// Arithmetic mean; NaN for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -31,28 +51,37 @@ pub fn sem(xs: &[f64]) -> f64 {
     std_dev(xs) / (xs.len() as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median via partial selection — O(n) expected instead of the former
+/// copy-and-full-sort, which dominated `MedianPruner` decisions on the
+/// non-indexed path. NaN-safe per [`nan_max_cmp`]; NaN for empty input.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
+    let (below, mid, _) = v.select_nth_unstable_by(n / 2, nan_max_cmp);
     if n % 2 == 1 {
-        v[n / 2]
+        *mid
     } else {
-        0.5 * (v[n / 2 - 1] + v[n / 2])
+        // the n/2-1 ranked element is the max of the left partition
+        let lower = below
+            .iter()
+            .copied()
+            .max_by(nan_max_cmp)
+            .expect("even n >= 2 has a non-empty left partition");
+        0.5 * (lower + *mid)
     }
 }
 
-/// p-quantile with linear interpolation, p in [0,1].
+/// p-quantile with linear interpolation, p in [0,1]. NaN-safe per
+/// [`nan_max_cmp`].
 pub fn quantile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_unstable_by(nan_max_cmp);
     let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -237,6 +266,32 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 4.0);
         assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn median_matches_full_sort_reference() {
+        let mut rng = Pcg64::new(11);
+        for n in 1..40usize {
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform_range(-3.0, 3.0)).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let reference = if n % 2 == 1 {
+                sorted[n / 2]
+            } else {
+                0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+            };
+            assert_eq!(median(&xs), reference, "n={n}");
+        }
+    }
+
+    #[test]
+    fn nan_sorts_greatest_not_panics() {
+        // a NaN entry must not panic and must rank as the worst value
+        assert_eq!(median(&[1.0, f64::NAN, 3.0]), 3.0);
+        assert_eq!(quantile(&[1.0, 2.0, f64::NAN], 0.0), 1.0);
+        assert_eq!(nan_max_cmp(&f64::NAN, &f64::INFINITY), Ordering::Greater);
+        assert_eq!(nan_max_cmp(&-f64::NAN, &f64::NAN), Ordering::Equal);
+        assert_eq!(nan_max_cmp(&1.0, &2.0), Ordering::Less);
     }
 
     #[test]

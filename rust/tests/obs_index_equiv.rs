@@ -1,0 +1,180 @@
+//! ISSUE 2 acceptance gate: the generation-stamped observation index must
+//! be **decision-for-decision identical** with the pre-index scan
+//! implementation — same parameter suggestions from `TpeSampler` over a
+//! 500-trial study under a fixed seed, and same prune decisions from
+//! every pruner — with the only difference being where the hot paths
+//! read their observations from.
+
+use optuna_rs::prelude::*;
+use std::sync::Arc;
+
+/// Full per-trial fingerprint: number, exact parameter internals, final
+/// value, and terminal state (the state encodes every prune decision).
+type Fingerprint = Vec<(u64, String, Option<f64>, String)>;
+
+fn run_study(
+    indexed: bool,
+    pruner: Arc<dyn Pruner>,
+    n_trials: usize,
+    seed: u64,
+    direction: StudyDirection,
+) -> Fingerprint {
+    let study = Study::builder()
+        .name("equiv")
+        .direction(direction)
+        .sampler(Arc::new(TpeSampler::new(seed)))
+        .pruner(pruner)
+        .observation_index(indexed)
+        .build()
+        .unwrap();
+    study
+        .optimize(n_trials, |t| {
+            let x = t.suggest_float("x", -5.0, 5.0)?;
+            let lr = t.suggest_float_log("lr", 1e-4, 1.0)?;
+            let layers = t.suggest_int("layers", 1, 4)?;
+            let act = t.suggest_categorical("act", &["relu", "tanh"])?;
+            let bonus = if act == "relu" { 0.0 } else { 0.25 };
+            let base = x * x + lr.ln().abs() / 10.0 + layers as f64 * 0.05 + bonus;
+            for step in 1..=6u64 {
+                t.report(step, base + 1.0 / step as f64)?;
+                if t.should_prune()? {
+                    return Err(OptunaError::TrialPruned);
+                }
+            }
+            Ok(base)
+        })
+        .unwrap();
+    study
+        .trials()
+        .unwrap()
+        .into_iter()
+        .map(|t| {
+            let params = t
+                .params
+                .iter()
+                .map(|(k, (_, v))| format!("{k}={v:.17e}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            (t.number, params, t.value, t.state.as_str().to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn tpe_suggestions_identical_over_500_trials() {
+    let indexed = run_study(
+        true,
+        Arc::new(MedianPruner::new()),
+        500,
+        42,
+        StudyDirection::Minimize,
+    );
+    let scan = run_study(
+        false,
+        Arc::new(MedianPruner::new()),
+        500,
+        42,
+        StudyDirection::Minimize,
+    );
+    assert_eq!(indexed.len(), 500);
+    assert_eq!(indexed, scan);
+    // sanity: pruning actually fired, so prune parity was exercised
+    assert!(
+        indexed.iter().any(|(_, _, _, s)| s == "pruned"),
+        "equivalence must cover pruned trials"
+    );
+}
+
+#[test]
+fn every_pruner_makes_identical_decisions() {
+    let pruners: Vec<(&str, fn() -> Arc<dyn Pruner>)> = vec![
+        ("asha", || Arc::new(AshaPruner::new())),
+        ("median", || Arc::new(MedianPruner::with_params(3, 1))),
+        ("percentile", || Arc::new(PercentilePruner::new(25.0))),
+        ("hyperband", || Arc::new(HyperbandPruner::new(3, 1, 4))),
+    ];
+    for (name, mk) in pruners {
+        let indexed = run_study(true, mk(), 200, 7, StudyDirection::Minimize);
+        let scan = run_study(false, mk(), 200, 7, StudyDirection::Minimize);
+        assert_eq!(indexed, scan, "pruner {name} diverged between paths");
+    }
+}
+
+#[test]
+fn maximize_direction_equivalent() {
+    let indexed = run_study(
+        true,
+        Arc::new(PercentilePruner::new(60.0)),
+        150,
+        11,
+        StudyDirection::Maximize,
+    );
+    let scan = run_study(
+        false,
+        Arc::new(PercentilePruner::new(60.0)),
+        150,
+        11,
+        StudyDirection::Maximize,
+    );
+    assert_eq!(indexed, scan);
+}
+
+#[test]
+fn nan_objective_equivalent_and_no_panic() {
+    // A diverged trial tell'd with Complete(NaN) lands in the observation
+    // set as a worst-ranked loss on both paths — no panic, no divergence.
+    let run_nan = |indexed: bool| -> Vec<f64> {
+        let study = Study::builder()
+            .name("nan-equiv")
+            .sampler(Arc::new(TpeSampler::new(3)))
+            .observation_index(indexed)
+            .build()
+            .unwrap();
+        for i in 0..40 {
+            let mut t = study.ask().unwrap();
+            let x = t.suggest_float("x", -1.0, 1.0).unwrap();
+            let v = if i % 13 == 5 { f64::NAN } else { x * x };
+            study.tell(t, TrialOutcome::Complete(v)).unwrap();
+        }
+        study
+            .trials()
+            .unwrap()
+            .iter()
+            .map(|t| t.params["x"].1)
+            .collect()
+    };
+    assert_eq!(run_nan(true), run_nan(false));
+}
+
+#[test]
+fn parallel_workers_with_index_stay_consistent() {
+    // Concurrency smoke: the shared index must stay coherent under
+    // optimize_parallel (exact decision parity is only defined for the
+    // single-worker schedule; here we assert invariants).
+    let study = Study::builder()
+        .name("par-idx")
+        .sampler(Arc::new(TpeSampler::new(9)))
+        .pruner(Arc::new(AshaPruner::new()))
+        .build()
+        .unwrap();
+    study
+        .optimize_parallel(120, 6, |t| {
+            let x = t.suggest_float("x", -2.0, 2.0)?;
+            for step in 1..=4u64 {
+                t.report(step, x * x + 1.0 / step as f64)?;
+                if t.should_prune()? {
+                    return Err(OptunaError::TrialPruned);
+                }
+            }
+            Ok(x * x)
+        })
+        .unwrap();
+    let trials = study.trials().unwrap();
+    assert_eq!(trials.len(), 120);
+    assert!(trials.iter().all(|t| t.state.is_finished()));
+    let finished_with_value = trials
+        .iter()
+        .filter(|t| t.state == TrialState::Complete)
+        .count();
+    assert!(finished_with_value > 0);
+}
