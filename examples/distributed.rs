@@ -6,6 +6,12 @@
 //!     cargo run --release --example distributed
 //!
 //! (Also demonstrates in-process parallelism via optimize_parallel.)
+//!
+//! For the *fault-tolerant* version of this workflow — workers that
+//! survive peers being SIGKILLed mid-trial via heartbeats, stale-trial
+//! reaping and the retry queue — see the `worker` and `distributed`
+//! CLI commands (`optuna distributed --workers 4 --kill-one true ...`)
+//! and docs/ARCHITECTURE.md §Fault tolerance.
 
 use optuna_rs::prelude::*;
 use std::process::Command;

@@ -11,6 +11,8 @@
 //!   8. observation index: TPE ask latency vs prefilled trial count,
 //!      indexed vs seed (scan) path — also written to BENCH_samplers.json
 //!      (override the path with BENCH_SAMPLERS_JSON)
+//!   9. failover primitives: heartbeat stamp, enqueue+pop round-trip, and
+//!      a fail-stale scan over a busy study, per backend
 //!
 //! Knob: PERF_QUICK=1 shrinks iteration counts ~10x.
 
@@ -353,6 +355,70 @@ fn write_bench_samplers_json(rows: &[(usize, f64, f64)]) {
     }
 }
 
+fn failover_primitives() {
+    use optuna_rs::core::TrialState;
+    use optuna_rs::storage::ParamSet;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    print_header(
+        "failover primitives (us/op)",
+        &["backend", "heartbeat", "enqueue+pop", "fail_stale scan"],
+    );
+    let iters = scale(2_000);
+    for backend in ["in-memory", "journal"] {
+        let path = std::env::temp_dir().join(format!(
+            "optuna_perf_failover_{}_{backend}.jsonl",
+            std::process::id()
+        ));
+        let storage: Arc<dyn Storage> = match backend {
+            "in-memory" => Arc::new(InMemoryStorage::new()),
+            _ => Arc::new(JournalStorage::open(&path).unwrap()),
+        };
+        let sid = storage.create_study("fo", StudyDirection::Minimize).unwrap();
+        // a busy study: 200 finished + 8 running trials to scan past
+        for i in 0..200 {
+            let (tid, _) = storage.create_trial(sid).unwrap();
+            storage
+                .finish_trial(tid, TrialState::Complete, Some(i as f64))
+                .unwrap();
+        }
+        let (hb_tid, _) = storage.create_trial(sid).unwrap();
+        for _ in 0..7 {
+            storage.create_trial(sid).unwrap();
+        }
+
+        let hb_us = bench(iters, || {
+            storage.record_heartbeat(hb_tid).unwrap();
+        }) * 1e6;
+
+        let mut params = ParamSet::new();
+        params.insert(
+            "x".to_string(),
+            (optuna_rs::core::Distribution::float(0.0, 1.0), 0.5),
+        );
+        let attrs = BTreeMap::new();
+        let queue_iters = (iters / 4).max(1);
+        let q_us = bench(queue_iters, || {
+            storage.enqueue_trial(sid, &params, &attrs).unwrap();
+            let (tid, _) = storage.pop_waiting_trial(sid).unwrap().unwrap();
+            storage.finish_trial(tid, TrialState::Pruned, None).unwrap();
+        }) * 1e6;
+
+        // live trials, generous grace: the scan finds nothing but walks
+        // the study — the per-iteration reap cost of the optimize loops
+        let reap_us = bench(iters, || {
+            let v = storage
+                .fail_stale_trials(sid, Duration::from_secs(3600), &|_| None)
+                .unwrap();
+            assert!(v.is_empty());
+        }) * 1e6;
+
+        println!("{backend} | {hb_us:.1} | {q_us:.1} | {reap_us:.1}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
 fn main() {
     println!("perf_micro: set PERF_QUICK=1 for a fast smoke run");
     study_loop_overhead();
@@ -363,4 +429,5 @@ fn main() {
     sampler_index_ablation();
     gamma_ablation();
     storage_cache_ablation();
+    failover_primitives();
 }

@@ -13,18 +13,31 @@
 //! Distributed optimization = run `optimize` from several processes with
 //! the same `--storage` URL and `--study` name; the journal file is the
 //! only coordination point (examples/distributed.rs does exactly this).
+//!
+//! Two commands make that workflow fault-tolerant:
+//!
+//! * `worker` — a crash-safe budget-cooperating worker: heartbeats its
+//!   in-flight trial, reaps stale trials abandoned by dead peers,
+//!   re-enqueues their configurations, and claims shared-budget slots
+//!   atomically, so N workers finish `--trials` *exactly* even if some
+//!   of them are SIGKILLed mid-trial.
+//! * `distributed` — an orchestrator that spawns `--workers` worker
+//!   processes against one journal (optionally SIGKILLing one mid-trial
+//!   with `--kill-one true`), waits, and verifies the invariants: full
+//!   budget completed, zero stranded Running/Waiting trials.
 
-use crate::core::{OptunaError, StudyDirection};
+use crate::core::{OptunaError, StudyDirection, TrialState};
 use crate::pruner::{AshaPruner, HyperbandPruner, MedianPruner, NopPruner, Pruner};
 use crate::sampler::{
     CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
 };
-use crate::storage::{InMemoryStorage, JournalStorage, Storage};
-use crate::study::Study;
-use crate::trial::TrialApi;
+use crate::storage::{now_ms, InMemoryStorage, JournalStorage, Storage};
+use crate::study::{FailoverConfig, Study};
+use crate::trial::{Trial, TrialApi};
 use crate::workloads::{ffmpeg_sim, hpl_sim, rocksdb_sim, svhn_surrogate};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed `--key value` options + positional command.
 pub struct Args {
@@ -64,11 +77,13 @@ impl Args {
 }
 
 fn usage() -> String {
-    "usage: optuna <create-study|optimize|best|export|dashboard|studies> \
+    "usage: optuna <create-study|optimize|worker|distributed|best|export|dashboard|studies> \
      --storage <memory:|journal://PATH> --study NAME \
      [--direction minimize|maximize] [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf] \
      [--pruner none|asha|median|hyperband] [--trials N] [--seed N] \
-     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate] [--out FILE]"
+     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate] [--out FILE] \
+     [--heartbeat-ms N] [--grace-ms N] [--max-retry N] [--trial-sleep-ms N] \
+     [--workers N] [--kill-one true] [--timeout-ms N]"
         .to_string()
 }
 
@@ -105,7 +120,46 @@ pub fn make_pruner(kind: &str) -> Result<Arc<dyn Pruner>, String> {
     })
 }
 
-fn build_study(args: &Args, create: bool) -> Result<Study, String> {
+/// Parse the failover flags. `default`: policy applied when the command
+/// wants failover on even without explicit flags (the `worker` command);
+/// `None` means failover engages only when a failover flag
+/// (`--heartbeat-ms`, `--grace-ms`, `--max-retry`) is given — any one of
+/// them opts in, so no flag is ever silently ignored.
+fn parse_failover(
+    args: &Args,
+    default: Option<FailoverConfig>,
+) -> Result<Option<FailoverConfig>, String> {
+    let hb = args.get("heartbeat-ms");
+    let any_flag =
+        hb.is_some() || args.get("grace-ms").is_some() || args.get("max-retry").is_some();
+    if !any_flag && default.is_none() {
+        return Ok(None);
+    }
+    let base = default.unwrap_or_default();
+    let hb_ms: u64 = match hb {
+        Some(s) => s.parse().map_err(|e| format!("bad --heartbeat-ms: {e}"))?,
+        None => base.heartbeat_interval.as_millis() as u64,
+    };
+    let grace_ms: u64 = match args.get("grace-ms") {
+        Some(s) => s.parse().map_err(|e| format!("bad --grace-ms: {e}"))?,
+        None => hb_ms.saturating_mul(10),
+    };
+    let max_retry: u32 = args
+        .get_or("max-retry", "3")
+        .parse()
+        .map_err(|e| format!("bad --max-retry: {e}"))?;
+    Ok(Some(FailoverConfig {
+        heartbeat_interval: Duration::from_millis(hb_ms.max(1)),
+        grace: Duration::from_millis(grace_ms.max(1)),
+        max_retry,
+    }))
+}
+
+fn build_study(
+    args: &Args,
+    create: bool,
+    failover_default: Option<FailoverConfig>,
+) -> Result<Study, String> {
     let storage = open_storage(args.require("storage")?)?;
     let name = args.require("study")?.to_string();
     let direction = StudyDirection::from_str(&args.get_or("direction", "minimize"))
@@ -114,25 +168,30 @@ fn build_study(args: &Args, create: bool) -> Result<Study, String> {
         return Err(format!("study '{name}' does not exist in this storage"));
     }
     let seed: u64 = args.get_or("seed", "42").parse().map_err(|e| format!("bad --seed: {e}"))?;
-    Study::builder()
+    let mut builder = Study::builder()
         .name(&name)
         .direction(direction)
         .storage(storage)
         .sampler(make_sampler(&args.get_or("sampler", "tpe"), seed)?)
-        .pruner(make_pruner(&args.get_or("pruner", "none"))?)
-        .build()
-        .map_err(|e| e.to_string())
+        .pruner(make_pruner(&args.get_or("pruner", "none"))?);
+    if let Some(cfg) = parse_failover(args, failover_default)? {
+        builder = builder.failover(cfg);
+    }
+    builder.build().map_err(|e| e.to_string())
 }
 
+/// A boxed CLI objective (the workload closures all erased to one type).
+type Objective = Box<dyn Fn(&mut Trial<'_>) -> Result<f64, OptunaError> + Send + Sync>;
+
 /// The built-in workload objectives runnable from the CLI.
-fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), OptunaError> {
-    match workload {
-        "quadratic" => study.optimize(n_trials, |t| {
+fn workload_objective(workload: &str) -> Result<Objective, String> {
+    Ok(match workload {
+        "quadratic" => Box::new(|t: &mut Trial<'_>| {
             let x = t.suggest_float("x", -10.0, 10.0)?;
             let y = t.suggest_float("y", -10.0, 10.0)?;
             Ok((x - 2.0).powi(2) + (y + 1.0).powi(2))
         }),
-        "rocksdb" => study.optimize(n_trials, |t| {
+        "rocksdb" => Box::new(|t: &mut Trial<'_>| {
             let cfg = rocksdb_sim::suggest_config(t)?;
             let chunk = cfg.chunk_seconds();
             for step in 1..=rocksdb_sim::N_CHUNKS {
@@ -144,15 +203,15 @@ fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), Op
             }
             Ok(cfg.total_seconds())
         }),
-        "hpl" => study.optimize(n_trials, |t| {
+        "hpl" => Box::new(|t: &mut Trial<'_>| {
             let cfg = hpl_sim::suggest_config(t)?;
             Ok(cfg.gflops())
         }),
-        "ffmpeg" => study.optimize(n_trials, |t| {
+        "ffmpeg" => Box::new(|t: &mut Trial<'_>| {
             let cfg = ffmpeg_sim::suggest_config(t)?;
             Ok(cfg.distortion())
         }),
-        "svhn-surrogate" => study.optimize(n_trials, |t| {
+        "svhn-surrogate" => Box::new(|t: &mut Trial<'_>| {
             let p = svhn_surrogate::suggest_params(t)?;
             let mut curve = p.curve(t.number());
             for step in 1..=svhn_surrogate::MAX_STEPS {
@@ -164,8 +223,13 @@ fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), Op
             }
             Ok(curve.final_err())
         }),
-        other => Err(OptunaError::Objective(format!("unknown workload '{other}'"))),
-    }
+        other => return Err(format!("unknown workload '{other}'")),
+    })
+}
+
+fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), OptunaError> {
+    let obj = workload_objective(workload).map_err(OptunaError::Objective)?;
+    study.optimize(n_trials, move |t| obj(t))
 }
 
 /// Entry point; returns the process exit code.
@@ -195,7 +259,7 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
             Ok(format!("{name}\n"))
         }
         "optimize" => {
-            let study = build_study(&args, false)?;
+            let study = build_study(&args, false, None)?;
             let n_trials: usize = args
                 .get_or("trials", "20")
                 .parse()
@@ -208,8 +272,49 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
                 best.map(|v| v.to_string()).unwrap_or_else(|| "n/a".into())
             ))
         }
+        "worker" => {
+            // fault-tolerant budget-cooperating worker (failover defaults
+            // on; flags override)
+            let study = build_study(
+                &args,
+                false,
+                Some(FailoverConfig::new(Duration::from_millis(100))),
+            )?;
+            let target: u64 = args
+                .get_or("trials", "20")
+                .parse()
+                .map_err(|e| format!("bad --trials: {e}"))?;
+            let sleep_ms: u64 = args
+                .get_or("trial-sleep-ms", "0")
+                .parse()
+                .map_err(|e| format!("bad --trial-sleep-ms: {e}"))?;
+            let workload = args.get_or("workload", "quadratic");
+            let inner = workload_objective(&workload)?;
+            let pid = std::process::id().to_string();
+            study
+                .optimize_until(target, move |t| {
+                    let v = inner(t)?;
+                    // attributes each trial to this OS process (the
+                    // orchestrator uses it to pick a mid-trial victim);
+                    // set *after* the suggests so an observed trial
+                    // already carries its full parameter set
+                    t.set_user_attr("worker_pid", &pid)?;
+                    if sleep_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(sleep_ms));
+                    }
+                    Ok(v)
+                })
+                .map_err(|e| e.to_string())?;
+            let best = study.best_value().map_err(|e| e.to_string())?;
+            Ok(format!(
+                "worker {} done; study at {target} finished trials; best = {}\n",
+                std::process::id(),
+                best.map(|v| v.to_string()).unwrap_or_else(|| "n/a".into())
+            ))
+        }
+        "distributed" => run_distributed(&args),
         "best" => {
-            let study = build_study(&args, false)?;
+            let study = build_study(&args, false, None)?;
             match study.best_trial().map_err(|e| e.to_string())? {
                 None => Ok("no completed trials\n".to_string()),
                 Some(t) => {
@@ -222,7 +327,7 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
             }
         }
         "export" => {
-            let study = build_study(&args, false)?;
+            let study = build_study(&args, false, None)?;
             let csv = study.to_csv().map_err(|e| e.to_string())?;
             match args.get("out") {
                 Some(path) => {
@@ -233,7 +338,7 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
             }
         }
         "dashboard" => {
-            let study = build_study(&args, false)?;
+            let study = build_study(&args, false, None)?;
             let html = crate::dashboard::render_html(&study).map_err(|e| e.to_string())?;
             let out = args.get_or("out", "report.html");
             std::fs::write(&out, &html).map_err(|e| e.to_string())?;
@@ -246,6 +351,196 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
         }
         other => Err(format!("unknown command '{other}'")),
     }
+}
+
+/// Orchestrate `--workers` worker processes sharing one journal file,
+/// optionally SIGKILLing one mid-trial (`--kill-one true`), then verify
+/// the fault-tolerance invariants: the study finished its budget
+/// *exactly* and no `Running`/`Waiting` trial is stranded. Returns an
+/// error (non-zero exit) when any invariant is violated, so CI can gate
+/// on this command directly.
+fn run_distributed(args: &Args) -> Result<String, String> {
+    let url = args.require("storage")?.to_string();
+    if !url.starts_with("journal://") {
+        return Err(
+            "distributed requires --storage journal://PATH (shared across processes)".into(),
+        );
+    }
+    let name = args.require("study")?.to_string();
+    let direction = StudyDirection::from_str(&args.get_or("direction", "minimize"))
+        .map_err(|e| e.to_string())?;
+    let trials: u64 = args
+        .get_or("trials", "24")
+        .parse()
+        .map_err(|e| format!("bad --trials: {e}"))?;
+    let workers: usize = args
+        .get_or("workers", "4")
+        .parse()
+        .map_err(|e| format!("bad --workers: {e}"))?;
+    if workers == 0 {
+        return Err("--workers must be >= 1".into());
+    }
+    let kill_one = matches!(args.get_or("kill-one", "false").as_str(), "true" | "1" | "yes");
+    let sleep_ms: u64 = args
+        .get_or("trial-sleep-ms", if kill_one { "60" } else { "0" })
+        .parse()
+        .map_err(|e| format!("bad --trial-sleep-ms: {e}"))?;
+    let hb_ms = args.get_or("heartbeat-ms", "25");
+    let grace_ms = args.get_or("grace-ms", "500");
+    let max_retry = args.get_or("max-retry", "3");
+    let seed: u64 = args.get_or("seed", "42").parse().map_err(|e| format!("bad --seed: {e}"))?;
+    let timeout_ms: u64 = args
+        .get_or("timeout-ms", "120000")
+        .parse()
+        .map_err(|e| format!("bad --timeout-ms: {e}"))?;
+    let workload = args.get_or("workload", "quadratic");
+    let sampler = args.get_or("sampler", "tpe");
+    let pruner = args.get_or("pruner", "none");
+
+    let storage = open_storage(&url)?;
+    let sid = crate::storage::get_or_create_study(storage.as_ref(), &name, direction)
+        .map_err(|e| e.to_string())?;
+
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let trials_s = trials.to_string();
+    let sleep_s = sleep_ms.to_string();
+    let mut children = Vec::new();
+    for i in 0..workers {
+        let seed_s = (seed + i as u64).to_string();
+        let worker_args: &[&str] = &[
+            "worker",
+            "--storage",
+            url.as_str(),
+            "--study",
+            name.as_str(),
+            "--direction",
+            direction.as_str(),
+            "--trials",
+            trials_s.as_str(),
+            "--workload",
+            workload.as_str(),
+            "--sampler",
+            sampler.as_str(),
+            "--pruner",
+            pruner.as_str(),
+            "--seed",
+            seed_s.as_str(),
+            "--heartbeat-ms",
+            hb_ms.as_str(),
+            "--grace-ms",
+            grace_ms.as_str(),
+            "--max-retry",
+            max_retry.as_str(),
+            "--trial-sleep-ms",
+            sleep_s.as_str(),
+        ];
+        let child = std::process::Command::new(&exe)
+            .args(worker_args)
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .map_err(|e| format!("spawn worker: {e}"))?;
+        children.push(child);
+    }
+
+    let deadline = std::time::Instant::now() + Duration::from_millis(timeout_ms);
+    let mut killed_pid: Option<u32> = None;
+
+    if kill_one {
+        // Watch the journal for a *fresh* Running trial owned by one of
+        // our children and SIGKILL that child mid-trial: the worker sets
+        // `worker_pid` after its suggests and then sleeps
+        // --trial-sleep-ms, so a young Running trial carrying the
+        // attribute is deterministically still being "evaluated" — its
+        // parameters are in storage and the kill strands it.
+        let fresh_ms = (sleep_ms / 2).max(20);
+        let kill_deadline = std::time::Instant::now() + Duration::from_millis(10_000);
+        'hunt: while std::time::Instant::now() < kill_deadline {
+            let all = storage.get_all_trials(sid).map_err(|e| e.to_string())?;
+            for t in &all {
+                if t.state != TrialState::Running {
+                    continue;
+                }
+                let Some(start) = t.datetime_start else { continue };
+                if now_ms().saturating_sub(start) >= fresh_ms {
+                    continue;
+                }
+                let Some(pid_attr) = t.user_attrs.get("worker_pid") else { continue };
+                if let Some(child) =
+                    children.iter_mut().find(|c| c.id().to_string() == *pid_attr)
+                {
+                    child.kill().ok();
+                    killed_pid = Some(child.id());
+                    break 'hunt;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        if killed_pid.is_none() {
+            // never caught one mid-trial (tiny budgets / zero sleep):
+            // fall back to killing the first worker
+            children[0].kill().ok();
+            killed_pid = Some(children[0].id());
+        }
+    }
+
+    // wait for everyone, bounded by the global timeout
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; children.len()];
+    while statuses.iter().any(|s| s.is_none()) {
+        for (i, c) in children.iter_mut().enumerate() {
+            if statuses[i].is_none() {
+                statuses[i] = c.try_wait().map_err(|e| e.to_string())?;
+            }
+        }
+        if std::time::Instant::now() > deadline {
+            for c in children.iter_mut() {
+                c.kill().ok();
+                c.wait().ok();
+            }
+            return Err(format!("distributed run timed out after {timeout_ms}ms"));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for (i, (c, st)) in children.iter().zip(&statuses).enumerate() {
+        if Some(c.id()) == killed_pid {
+            continue; // the victim died by design
+        }
+        match st {
+            Some(st) if st.success() => {}
+            Some(st) => return Err(format!("worker {i} (pid {}) exited with {st}", c.id())),
+            None => unreachable!("wait loop exits only when every status is known"),
+        }
+    }
+
+    // verify the fault-tolerance invariants
+    let all = storage.get_all_trials(sid).map_err(|e| e.to_string())?;
+    let count = |s: TrialState| all.iter().filter(|t| t.state == s).count();
+    let complete = count(TrialState::Complete);
+    let pruned = count(TrialState::Pruned);
+    let failed = count(TrialState::Failed);
+    let running = count(TrialState::Running);
+    let waiting = count(TrialState::Waiting);
+    let retried = all
+        .iter()
+        .filter(|t| t.user_attrs.contains_key("retried_from"))
+        .count();
+    let out = format!(
+        "distributed: {workers} workers, budget {trials}, killed {}\n\
+         states: complete={complete} pruned={pruned} failed={failed} \
+         running={running} waiting={waiting}\nretried={retried}\n",
+        if killed_pid.is_some() { 1 } else { 0 },
+    );
+    if running != 0 || waiting != 0 {
+        return Err(format!(
+            "{out}FAIL: stranded trials (running={running}, waiting={waiting})"
+        ));
+    }
+    if (complete + pruned) as u64 != trials {
+        return Err(format!(
+            "{out}FAIL: finished {} trials, budget was {trials}",
+            complete + pruned
+        ));
+    }
+    Ok(format!("{out}ok: exact budget, no stranded trials\n"))
 }
 
 #[cfg(test)]
@@ -311,6 +606,61 @@ mod tests {
         assert!(open_storage("redis://x").is_err());
         assert!(make_sampler("genetic", 0).is_err());
         assert!(make_pruner("oracle").is_err());
+    }
+
+    #[test]
+    fn worker_command_cooperates_on_a_shared_budget() {
+        let url = tmp_journal("worker");
+        run_inner(&argv(&["create-study", "--storage", &url, "--study", "w1"])).unwrap();
+        let out = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "w1", "--trials", "8",
+            "--sampler", "random", "--seed", "3", "--heartbeat-ms", "20",
+        ]))
+        .unwrap();
+        assert!(out.contains("done"), "{out}");
+        // budget already met: a second worker returns without adding trials
+        let out2 = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "w1", "--trials", "8",
+            "--sampler", "random",
+        ]))
+        .unwrap();
+        assert!(out2.contains("done"), "{out2}");
+        let csv = run_inner(&argv(&["export", "--storage", &url, "--study", "w1"])).unwrap();
+        assert_eq!(csv.lines().count(), 9, "header + exactly 8 trials:\n{csv}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn distributed_requires_journal_storage() {
+        let err = run_inner(&argv(&[
+            "distributed", "--storage", "memory:", "--study", "x",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("journal://"), "{err}");
+    }
+
+    #[test]
+    fn failover_flags_parse() {
+        let args = Args::parse(&argv(&[
+            "worker", "--heartbeat-ms", "50", "--max-retry", "7",
+        ]))
+        .unwrap();
+        let cfg = parse_failover(&args, None).unwrap().unwrap();
+        assert_eq!(cfg.heartbeat_interval, Duration::from_millis(50));
+        assert_eq!(cfg.grace, Duration::from_millis(500), "grace defaults to 10x");
+        assert_eq!(cfg.max_retry, 7);
+        // no flags, no default: failover stays off
+        let plain = Args::parse(&argv(&["optimize"])).unwrap();
+        assert!(parse_failover(&plain, None).unwrap().is_none());
+        // command default engages without flags
+        let cfg = parse_failover(&plain, Some(FailoverConfig::default())).unwrap().unwrap();
+        assert_eq!(cfg.heartbeat_interval, Duration::from_millis(500));
+        // any failover flag opts in — --grace-ms alone must not be
+        // silently dropped
+        let grace_only = Args::parse(&argv(&["optimize", "--grace-ms", "2000"])).unwrap();
+        let cfg = parse_failover(&grace_only, None).unwrap().unwrap();
+        assert_eq!(cfg.grace, Duration::from_millis(2000));
+        assert_eq!(cfg.heartbeat_interval, Duration::from_millis(500), "default heartbeat");
     }
 
     #[test]

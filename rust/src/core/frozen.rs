@@ -23,6 +23,18 @@ pub struct FrozenTrial {
     pub intermediate: BTreeMap<u64, f64>,
     /// Free-form user attributes (string → string).
     pub user_attrs: BTreeMap<String, String>,
+    /// Epoch milliseconds when the trial started running (stamped by the
+    /// backend at `create_trial` / pop-from-queue; `None` for `Waiting`
+    /// trials and records replayed from pre-timestamp journals).
+    pub datetime_start: Option<u64>,
+    /// Epoch milliseconds when the trial reached a finished state.
+    pub datetime_complete: Option<u64>,
+    /// Epoch milliseconds of the owning worker's last liveness signal
+    /// (`Storage::record_heartbeat`). The failover layer reaps `Running`
+    /// trials whose [`FrozenTrial::last_alive_ms`] exceeds the grace
+    /// period — the crashed-worker story the paper's Fig 7 architecture
+    /// otherwise lacks.
+    pub last_heartbeat: Option<u64>,
 }
 
 impl FrozenTrial {
@@ -35,7 +47,27 @@ impl FrozenTrial {
             params: BTreeMap::new(),
             intermediate: BTreeMap::new(),
             user_attrs: BTreeMap::new(),
+            datetime_start: None,
+            datetime_complete: None,
+            last_heartbeat: None,
         }
+    }
+
+    /// Epoch milliseconds of the most recent liveness evidence: the last
+    /// heartbeat if one was ever recorded, else the start stamp. `None`
+    /// (no evidence at all — e.g. a pre-timestamp journal record) is
+    /// treated as *not* reapable by `Storage::fail_stale_trials`.
+    pub fn last_alive_ms(&self) -> Option<u64> {
+        self.last_heartbeat.or(self.datetime_start)
+    }
+
+    /// How many times this parameter set has been retried by the failover
+    /// layer (0 when the trial is not a retry).
+    pub fn retry_count(&self) -> u32 {
+        self.user_attrs
+            .get("retry_count")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
     }
 
     /// External (user-facing) value of a parameter.
@@ -115,5 +147,20 @@ mod tests {
     fn require_value_errors_when_missing() {
         let t = FrozenTrial::new(0, 0);
         assert!(t.require_value().is_err());
+    }
+
+    #[test]
+    fn liveness_and_retry_bookkeeping() {
+        let mut t = FrozenTrial::new(0, 0);
+        assert_eq!(t.last_alive_ms(), None);
+        assert_eq!(t.retry_count(), 0);
+        t.datetime_start = Some(100);
+        assert_eq!(t.last_alive_ms(), Some(100));
+        t.last_heartbeat = Some(250);
+        assert_eq!(t.last_alive_ms(), Some(250));
+        t.user_attrs.insert("retry_count".into(), "2".into());
+        assert_eq!(t.retry_count(), 2);
+        t.user_attrs.insert("retry_count".into(), "junk".into());
+        assert_eq!(t.retry_count(), 0);
     }
 }

@@ -501,6 +501,40 @@ mod tests {
     }
 
     #[test]
+    fn waiting_retry_lifecycle_ingested_once_at_completion() {
+        // Failover lifecycle through the delta stream: a Waiting (retry)
+        // trial carries params but is not an observation; claiming it
+        // (Running) still isn't; the reaped victim (Running → Failed)
+        // counts as finished without observations; the retry's eventual
+        // Complete lands exactly once.
+        let d = Distribution::float(-5.0, 5.0);
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        // victim reaped by a peer
+        let mut victim = finished(0, 1.0, 1.0);
+        victim.state = TrialState::Running;
+        victim.value = None;
+        ix.apply(std::slice::from_ref(&victim), 1);
+        victim.state = TrialState::Failed;
+        let snap = ix.apply(std::slice::from_ref(&victim), 2);
+        assert_eq!(snap.n_finished(), 1);
+        assert!(snap.param_column("x", &d).is_none());
+        // its configuration re-enqueued as trial 1
+        let mut retry = finished(1, 1.0, 1.0);
+        retry.state = TrialState::Waiting;
+        retry.value = None;
+        let snap = ix.apply(std::slice::from_ref(&retry), 3);
+        assert_eq!(snap.n_finished(), 1, "waiting trial is not finished");
+        assert!(snap.param_column("x", &d).is_none());
+        retry.state = TrialState::Running;
+        ix.apply(std::slice::from_ref(&retry), 4);
+        retry.state = TrialState::Complete;
+        retry.value = Some(0.5);
+        let snap = ix.apply(std::slice::from_ref(&retry), 5);
+        assert_eq!(snap.n_finished(), 2);
+        assert_eq!(snap.param_column("x", &d).unwrap().len(), 1);
+    }
+
+    #[test]
     fn nan_loss_sorts_to_the_above_end() {
         let mut ix = ObservationIndex::new(StudyDirection::Minimize);
         let trials = vec![

@@ -45,6 +45,9 @@ impl StudyDirection {
 /// Life-cycle state of a trial.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrialState {
+    /// Enqueued with a fixed parameter set, not yet claimed by a worker
+    /// (the failover retry queue; see `Storage::enqueue_trial`).
+    Waiting,
     Running,
     Complete,
     Pruned,
@@ -53,11 +56,12 @@ pub enum TrialState {
 
 impl TrialState {
     pub fn is_finished(&self) -> bool {
-        !matches!(self, TrialState::Running)
+        !matches!(self, TrialState::Running | TrialState::Waiting)
     }
 
     pub fn as_str(&self) -> &'static str {
         match self {
+            TrialState::Waiting => "waiting",
             TrialState::Running => "running",
             TrialState::Complete => "complete",
             TrialState::Pruned => "pruned",
@@ -67,6 +71,7 @@ impl TrialState {
 
     pub fn from_str(s: &str) -> Result<Self, OptunaError> {
         match s {
+            "waiting" => Ok(TrialState::Waiting),
             "running" => Ok(TrialState::Running),
             "complete" => Ok(TrialState::Complete),
             "pruned" => Ok(TrialState::Pruned),
@@ -124,6 +129,10 @@ impl fmt::Display for ParamValue {
 pub enum OptunaError {
     /// Storage-layer failure (I/O, lock, corrupt journal, unknown ids).
     Storage(String),
+    /// Lost a storage race: the write conflicts with state another worker
+    /// installed first (e.g. finishing a trial a peer already reaped to
+    /// `Failed`). Benign under failover — the optimize loops skip these.
+    Conflict(String),
     /// Suggest API misuse (e.g. same name with a different distribution).
     InvalidParam(String),
     /// Signal that the running trial should be pruned (raised by
@@ -139,6 +148,7 @@ impl fmt::Display for OptunaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             OptunaError::Storage(m) => write!(f, "storage error: {m}"),
+            OptunaError::Conflict(m) => write!(f, "storage conflict: {m}"),
             OptunaError::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
             OptunaError::TrialPruned => write!(f, "trial pruned"),
             OptunaError::Objective(m) => write!(f, "objective error: {m}"),
@@ -168,6 +178,7 @@ mod tests {
             assert_eq!(StudyDirection::from_str(d.as_str()).unwrap(), d);
         }
         for s in [
+            TrialState::Waiting,
             TrialState::Running,
             TrialState::Complete,
             TrialState::Pruned,
@@ -191,6 +202,7 @@ mod tests {
 
     #[test]
     fn finished_states() {
+        assert!(!TrialState::Waiting.is_finished());
         assert!(!TrialState::Running.is_finished());
         assert!(TrialState::Complete.is_finished());
         assert!(TrialState::Pruned.is_finished());

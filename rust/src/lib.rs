@@ -84,6 +84,6 @@ pub mod prelude {
         TpeSampler,
     };
     pub use crate::storage::{CachedStorage, InMemoryStorage, JournalStorage, Storage};
-    pub use crate::study::{Study, StudyBuilder, TrialOutcome};
+    pub use crate::study::{FailoverConfig, Study, StudyBuilder, TrialOutcome};
     pub use crate::trial::{FixedTrial, Trial, TrialApi};
 }

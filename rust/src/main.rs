@@ -1,4 +1,6 @@
-//! `optuna` binary — see cli::run for the command set (Fig 7 workflow).
+//! `optuna` binary — see cli::run for the command set: the Fig 7
+//! workflow (create-study/optimize/best/export/dashboard/studies) plus
+//! the fault-tolerant distributed commands (`worker`, `distributed`).
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

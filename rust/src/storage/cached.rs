@@ -35,11 +35,12 @@
 //! [`CachedStorage::generation`] for the handshake), so sampler/pruner
 //! columns advance in O(delta) lock-step with the snapshot cache.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{Storage, TrialDelta, SEQ_UNTRACKED};
+use crate::storage::{ParamSet, Storage, TrialDelta, SEQ_UNTRACKED};
 
 #[derive(Default)]
 struct StudyCache {
@@ -225,6 +226,45 @@ impl Storage for CachedStorage {
     fn is_write_through_cache(&self) -> bool {
         true
     }
+
+    // Fault-tolerance ops pass straight through: they are writes, so the
+    // backend bumps its sequence number and the next `refresh` (and the
+    // observation index's delta cursor) picks up the state flips —
+    // reaped `Running → Failed` trials surface as ordinary deltas.
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        self.inner.record_heartbeat(trial_id)
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.inner.fail_stale_trials(study_id, grace, requeue)
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        self.inner.enqueue_trial(study_id, params, user_attrs)
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.inner.pop_waiting_trial(study_id)
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.inner.create_trial_capped(study_id, cap)
+    }
 }
 
 #[cfg(test)]
@@ -363,6 +403,46 @@ mod tests {
         cached.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
         cached.get_trials_snapshot(sid).unwrap();
         assert_eq!(cached.generation(sid), cached.study_seq(sid).unwrap());
+    }
+
+    #[test]
+    fn reaped_trials_surface_as_generation_bumped_deltas() {
+        // A stale-trial reap is a write like any other: the cache's next
+        // refresh must see the Running → Failed flip, and a delta cursor
+        // (the observation index's handshake) must receive the victim.
+        let cached = CachedStorage::new(Arc::new(InMemoryStorage::new()));
+        let sid = cached.create_study("reap", StudyDirection::Minimize).unwrap();
+        let (tid, _) = cached.create_trial(sid).unwrap();
+        let before = cached.get_trials_snapshot(sid).unwrap();
+        assert_eq!(before[0].state, TrialState::Running);
+        let gen_before = cached.generation(sid);
+        let cursor = cached.study_seq(sid).unwrap();
+
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let victims = cached
+            .fail_stale_trials(sid, Duration::from_millis(5), &|_| None)
+            .unwrap();
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].id, tid);
+
+        let after = cached.get_trials_snapshot(sid).unwrap();
+        assert_eq!(after[0].state, TrialState::Failed);
+        assert!(cached.generation(sid) > gen_before);
+        // held generation untouched; the delta stream carries the flip
+        assert_eq!(before[0].state, TrialState::Running);
+        let d = cached.get_trials_since(sid, cursor).unwrap();
+        assert!(d.trials.iter().any(|t| t.id == tid && t.state == TrialState::Failed));
+
+        // queue ops round-trip through the decorator too
+        let (qid, _) = cached
+            .enqueue_trial(sid, &before[0].params, &BTreeMap::new())
+            .unwrap();
+        assert_eq!(cached.get_trial(qid).unwrap().state, TrialState::Waiting);
+        let (pid, _) = cached.pop_waiting_trial(sid).unwrap().unwrap();
+        assert_eq!(pid, qid);
+        cached.record_heartbeat(pid).unwrap();
+        assert!(cached.get_trial(pid).unwrap().last_heartbeat.is_some());
+        assert_eq!(cached.get_trials_snapshot(sid).unwrap().len(), 2);
     }
 
     #[test]

@@ -7,11 +7,12 @@
 //! the simple locking keeps the backend obviously correct. (The perf pass
 //! measured the trade-off — see EXPERIMENTS.md §Perf.)
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{Storage, TrialDelta};
+use crate::storage::{now_ms, ParamSet, Storage, TrialDelta};
 
 struct StudyRec {
     name: String,
@@ -26,6 +27,11 @@ struct StudyRec {
     /// instead of scanning every trial id of the study. Memory is bounded
     /// by total writes (a handful of entries per trial lifecycle).
     write_log: Vec<(u64, u64)>,
+    /// FIFO of `Waiting` trial ids so `pop_waiting_trial` — called on
+    /// every `ask` — is O(1) when the queue is empty instead of a scan
+    /// over the study's trials. Entries whose trial left `Waiting` by a
+    /// non-pop path are dropped lazily at pop time.
+    waiting: VecDeque<u64>,
 }
 
 struct Inner {
@@ -47,6 +53,49 @@ impl Inner {
         self.trial_seq[trial_id as usize] = self.studies[sid].seq;
         let seq = self.studies[sid].seq;
         self.studies[sid].write_log.push((seq, trial_id));
+    }
+
+    /// Append a new trial record for `study_id` (caller has validated the
+    /// study id) and return (trial_id, number).
+    fn push_trial(&mut self, study_id: u64, trial: FrozenTrial) -> (u64, u64) {
+        let trial_id = trial.id;
+        let number = trial.number;
+        self.trials.push(trial);
+        self.trial_study.push(study_id);
+        self.trial_seq.push(0);
+        self.studies[study_id as usize].trials.push(trial_id);
+        self.touch(trial_id);
+        (trial_id, number)
+    }
+
+    /// Create a fresh `Running` trial (the shared body of `create_trial`
+    /// and `create_trial_capped`).
+    fn create_running(&mut self, study_id: u64) -> (u64, u64) {
+        let trial_id = self.trials.len() as u64;
+        let number = self.studies[study_id as usize].trials.len() as u64;
+        let mut t = FrozenTrial::new(trial_id, number);
+        t.datetime_start = Some(now_ms());
+        self.push_trial(study_id, t)
+    }
+
+    /// Create a `Waiting` trial carrying a fixed parameter set (the shared
+    /// body of `enqueue_trial` and the atomic requeue in
+    /// `fail_stale_trials`).
+    fn enqueue_waiting(
+        &mut self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> (u64, u64) {
+        let trial_id = self.trials.len() as u64;
+        let number = self.studies[study_id as usize].trials.len() as u64;
+        let mut t = FrozenTrial::new(trial_id, number);
+        t.state = TrialState::Waiting;
+        t.params = params.clone();
+        t.user_attrs = user_attrs.clone();
+        let out = self.push_trial(study_id, t);
+        self.studies[study_id as usize].waiting.push_back(trial_id);
+        out
     }
 }
 
@@ -96,6 +145,7 @@ impl Storage for InMemoryStorage {
             trials: Vec::new(),
             seq: 0,
             write_log: Vec::new(),
+            waiting: VecDeque::new(),
         });
         g.by_name.insert(name.to_string(), id);
         Ok(id)
@@ -129,14 +179,7 @@ impl Storage for InMemoryStorage {
         if study_id as usize >= g.studies.len() {
             return Err(bad_study(study_id));
         }
-        let trial_id = g.trials.len() as u64;
-        let number = g.studies[study_id as usize].trials.len() as u64;
-        g.trials.push(FrozenTrial::new(trial_id, number));
-        g.trial_study.push(study_id);
-        g.trial_seq.push(0);
-        g.studies[study_id as usize].trials.push(trial_id);
-        g.touch(trial_id);
-        Ok((trial_id, number))
+        Ok(g.create_running(study_id))
     }
 
     fn set_trial_param(
@@ -203,7 +246,7 @@ impl Storage for InMemoryStorage {
             .get_mut(trial_id as usize)
             .ok_or_else(|| bad_trial(trial_id))?;
         if t.state.is_finished() {
-            return Err(OptunaError::Storage(format!(
+            return Err(OptunaError::Conflict(format!(
                 "trial {trial_id} already finished as {}",
                 t.state.as_str()
             )));
@@ -212,6 +255,7 @@ impl Storage for InMemoryStorage {
         if value.is_some() {
             t.value = value;
         }
+        t.datetime_complete = Some(now_ms());
         g.touch(trial_id);
         Ok(())
     }
@@ -272,6 +316,119 @@ impl Storage for InMemoryStorage {
         ids.sort_unstable_by_key(|&tid| g.trials[tid as usize].number);
         let trials = ids.iter().map(|&tid| g.trials[tid as usize].clone()).collect();
         Ok(TrialDelta { seq: s.seq, trials })
+    }
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        if t.state != TrialState::Running {
+            return Ok(()); // ticker raced a completion/reap: benign
+        }
+        t.last_heartbeat = Some(now_ms());
+        // deliberately NO touch(): heartbeats are liveness metadata read
+        // directly by fail_stale_trials, not snapshot state — bumping the
+        // seq here would invalidate every worker's cached snapshot (an
+        // O(n) rebuild) once per heartbeat interval for no consumer
+        Ok(())
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let now = now_ms();
+        let cutoff = now.saturating_sub(grace.as_millis() as u64);
+        let mut g = self.inner.lock().unwrap();
+        if study_id as usize >= g.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        let stale: Vec<u64> = g.studies[study_id as usize]
+            .trials
+            .iter()
+            .copied()
+            .filter(|&tid| {
+                let t = &g.trials[tid as usize];
+                t.state == TrialState::Running
+                    && t.last_alive_ms().map(|ms| ms < cutoff).unwrap_or(false)
+            })
+            .collect();
+        let mut victims = Vec::with_capacity(stale.len());
+        for tid in stale {
+            let t = &mut g.trials[tid as usize];
+            t.state = TrialState::Failed;
+            t.datetime_complete = Some(now);
+            t.user_attrs
+                .insert("fail_reason".to_string(), "heartbeat expired".to_string());
+            victims.push(t.clone());
+            g.touch(tid);
+            // retry atomically with the flip (see the trait contract)
+            let victim = victims.last().expect("just pushed");
+            if let Some(attrs) = requeue(victim) {
+                let params = victim.params.clone();
+                g.enqueue_waiting(study_id, &params, &attrs);
+            }
+        }
+        Ok(victims)
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        if study_id as usize >= g.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        Ok(g.enqueue_waiting(study_id, params, user_attrs))
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        if study_id as usize >= g.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        let tid = loop {
+            match g.studies[study_id as usize].waiting.pop_front() {
+                None => return Ok(None),
+                Some(tid) if g.trials[tid as usize].state == TrialState::Waiting => break tid,
+                Some(_) => continue, // left Waiting by a non-pop path: drop
+            }
+        };
+        let now = now_ms();
+        let t = &mut g.trials[tid as usize];
+        t.state = TrialState::Running;
+        t.datetime_start = Some(now);
+        t.last_heartbeat = Some(now);
+        let number = t.number;
+        g.touch(tid);
+        Ok(Some((tid, number)))
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        let mut g = self.inner.lock().unwrap();
+        if study_id as usize >= g.studies.len() {
+            return Err(bad_study(study_id));
+        }
+        let active = g.studies[study_id as usize]
+            .trials
+            .iter()
+            .filter(|&&tid| g.trials[tid as usize].state != TrialState::Failed)
+            .count() as u64;
+        if active >= cap {
+            return Ok(None);
+        }
+        Ok(Some(g.create_running(study_id)))
     }
 }
 

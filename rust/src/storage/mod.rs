@@ -30,9 +30,24 @@ pub use cached::CachedStorage;
 pub use in_memory::InMemoryStorage;
 pub use journal::JournalStorage;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+
+/// Wall-clock epoch milliseconds — the timestamp unit of
+/// [`FrozenTrial::datetime_start`] and the heartbeat machinery.
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Parameter set carried by an enqueued (retried) trial:
+/// name → (distribution, internal representation).
+pub type ParamSet = BTreeMap<String, (Distribution, f64)>;
 
 /// Sentinel sequence number meaning "this backend does not track
 /// per-study sequence numbers". See [`Storage::study_seq`].
@@ -64,7 +79,9 @@ pub struct TrialDelta {
 ///
 /// * `study_seq` never decreases, and it increases iff a trial of the
 ///   study changed — equal sequence numbers mean byte-identical
-///   `get_all_trials` results.
+///   `get_all_trials` results, with one carve-out: `last_heartbeat`
+///   stamps are liveness metadata outside this contract (see
+///   [`Storage::record_heartbeat`]).
 /// * `get_trials_since(study, s)` returns every trial whose last
 ///   modification happened after sequence number `s`, together with the
 ///   current sequence number. Merging those trials (keyed by trial
@@ -188,6 +205,105 @@ pub trait Storage: Send + Sync {
     fn is_write_through_cache(&self) -> bool {
         false
     }
+
+    // --- Fault tolerance (heartbeats, stale-trial failover, retry queue) ---
+    //
+    // The paper's Fig 7 workflow runs the same binary N times against one
+    // storage URL; these methods are what keeps that workflow correct when
+    // one of the N dies mid-trial. Backends without native support inherit
+    // safe defaults: heartbeats are no-ops, nothing is ever considered
+    // stale, the waiting queue is empty, and budget caps degrade to a
+    // (racy) check-then-create. The shipped backends override all of them.
+
+    /// Stamp the trial's `last_heartbeat` with the current wall clock.
+    /// A no-op (not an error) on trials that are not `Running` — the
+    /// heartbeat ticker races benignly with trial completion.
+    ///
+    /// Heartbeats are liveness metadata **outside the sequence-number /
+    /// delta contract**: backends do not bump `study_seq` for them (a
+    /// bump per heartbeat interval would churn every worker's cached
+    /// snapshot for data no snapshot consumer reads), so snapshots may
+    /// carry stale `last_heartbeat` values. [`Storage::fail_stale_trials`]
+    /// reads liveness from backend state directly. The default only
+    /// validates the id.
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        self.get_trial(trial_id).map(|_| ())
+    }
+
+    /// Atomically flip every `Running` trial of the study whose
+    /// [`FrozenTrial::last_alive_ms`] is older than `grace` to `Failed`
+    /// (stamping `datetime_complete` and a `fail_reason` user attribute),
+    /// and return the victims in their post-flip state. Trials with no
+    /// liveness evidence at all are never reaped.
+    ///
+    /// `requeue` is consulted per victim **inside the same critical
+    /// section**: returning `Some(attrs)` creates a `Waiting` retry trial
+    /// carrying the victim's parameters plus `attrs`, atomically with the
+    /// `Failed` flip. The atomicity is what keeps capped budgets exact —
+    /// the victim's freed non-`Failed` slot and the retry that re-consumes
+    /// it change places in one step, so a concurrent
+    /// [`Storage::create_trial_capped`] can never race into the gap.
+    /// The hook must not call back into the storage (backends hold their
+    /// lock while invoking it). The default reaps nothing.
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let (_, _) = (grace, requeue);
+        self.n_trials(study_id)?;
+        Ok(Vec::new())
+    }
+
+    /// Create a `Waiting` trial carrying a fixed parameter set (and
+    /// bookkeeping user attributes) — the retry queue a reaped trial's
+    /// configuration re-enters so another worker can resume it. Returns
+    /// (trial_id, trial_number). The default errors: a backend must opt
+    /// in to queue semantics.
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        let (_, _, _) = (study_id, params, user_attrs);
+        Err(OptunaError::Storage(
+            "backend does not support the waiting-trial queue".into(),
+        ))
+    }
+
+    /// Atomically claim the oldest `Waiting` trial of the study: flip it
+    /// to `Running`, stamp `datetime_start`/`last_heartbeat`, and return
+    /// its (trial_id, trial_number); `Ok(None)` when the queue is empty.
+    /// At most one caller (across processes) wins each waiting trial.
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.n_trials(study_id)?;
+        Ok(None)
+    }
+
+    /// Budget-capped trial creation: create a `Running` trial only if the
+    /// study currently holds fewer than `cap` non-`Failed` trials, else
+    /// `Ok(None)`. Native backends make the count-and-create atomic, which
+    /// is what lets N crash-prone processes finish a shared budget
+    /// *exactly* (failed trials release their slot; retries re-consume
+    /// it). The default is a non-atomic check-then-create — correct in a
+    /// single process, best-effort across processes.
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        let active = self
+            .get_all_trials(study_id)?
+            .iter()
+            .filter(|t| t.state != TrialState::Failed)
+            .count() as u64;
+        if active >= cap {
+            return Ok(None);
+        }
+        self.create_trial(study_id).map(Some)
+    }
 }
 
 /// Get an existing study id or create the study (the CLI / distributed
@@ -230,6 +346,9 @@ pub(crate) mod conformance {
         trial_isolation(storage);
         delta_stream(storage);
         snapshot_consistency(storage);
+        heartbeat_and_stale_reaping(storage);
+        waiting_queue(storage);
+        capped_creation(storage);
     }
 
     fn study_lifecycle(s: &dyn Storage) {
@@ -370,6 +489,129 @@ pub(crate) mod conformance {
         let all = s.get_all_trials(sid).unwrap();
         assert_eq!(snap2.len(), all.len());
         assert_eq!(snap2[0].value, all[0].value);
+    }
+
+    fn heartbeat_and_stale_reaping(s: &dyn Storage) {
+        let no_requeue = |_: &FrozenTrial| -> Option<BTreeMap<String, String>> { None };
+        let sid = s.create_study("conf-hb", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        s.record_heartbeat(tid).unwrap();
+        if s.get_trial(tid).unwrap().last_heartbeat.is_none() {
+            // trait-default backend: heartbeats are no-ops; nothing to test
+            return;
+        }
+        // fresh heartbeat, generous grace: nobody is stale
+        assert!(s
+            .fail_stale_trials(sid, Duration::from_secs(3600), &no_requeue)
+            .unwrap()
+            .is_empty());
+        // a second running trial with only its start stamp also counts as alive
+        let (tid2, _) = s.create_trial(sid).unwrap();
+        assert!(s.get_trial(tid2).unwrap().datetime_start.is_some());
+
+        std::thread::sleep(Duration::from_millis(20));
+        // both trials' last liveness evidence is now > 5ms old; requeue
+        // one of the two, atomically with its flip
+        let mut victims = s
+            .fail_stale_trials(sid, Duration::from_millis(5), &|v: &FrozenTrial| {
+                (v.number == 0).then(|| {
+                    let mut attrs = BTreeMap::new();
+                    attrs.insert("retry_count".to_string(), "1".to_string());
+                    attrs
+                })
+            })
+            .unwrap();
+        victims.sort_by_key(|t| t.number);
+        assert_eq!(victims.len(), 2);
+        for v in &victims {
+            assert_eq!(v.state, TrialState::Failed);
+            assert!(v.datetime_complete.is_some());
+            assert!(v.user_attrs.contains_key("fail_reason"));
+        }
+        // the flip is persisted and idempotent
+        assert_eq!(s.get_trial(tid).unwrap().state, TrialState::Failed);
+        assert!(s
+            .fail_stale_trials(sid, Duration::from_millis(5), &no_requeue)
+            .unwrap()
+            .is_empty());
+        // the requeued victim's configuration is Waiting with the attrs
+        let all = s.get_all_trials(sid).unwrap();
+        let retries: Vec<_> =
+            all.iter().filter(|t| t.state == TrialState::Waiting).collect();
+        assert_eq!(retries.len(), 1, "exactly victim #0 was requeued");
+        assert_eq!(retries[0].retry_count(), 1);
+        // heartbeating a finished trial is a benign no-op
+        s.record_heartbeat(tid).unwrap();
+        assert_eq!(s.get_trial(tid).unwrap().state, TrialState::Failed);
+    }
+
+    fn waiting_queue(s: &dyn Storage) {
+        let sid = s.create_study("conf-queue", StudyDirection::Minimize).unwrap();
+        assert_eq!(s.pop_waiting_trial(sid).unwrap(), None);
+        let mut params = ParamSet::new();
+        params.insert("x".to_string(), (Distribution::float(0.0, 1.0), 0.25));
+        let mut attrs = BTreeMap::new();
+        attrs.insert("retry_count".to_string(), "1".to_string());
+        let Ok((q0, n0)) = s.enqueue_trial(sid, &params, &attrs) else {
+            // trait-default backend: no queue support
+            return;
+        };
+        assert_eq!(n0, 0);
+        let (q1, n1) = s.enqueue_trial(sid, &params, &BTreeMap::new()).unwrap();
+        assert_eq!(n1, 1);
+        assert_eq!(s.n_trials(sid).unwrap(), 2);
+
+        let t = s.get_trial(q0).unwrap();
+        assert_eq!(t.state, TrialState::Waiting);
+        assert_eq!(t.datetime_start, None);
+        assert!((t.params["x"].1 - 0.25).abs() < 1e-12);
+        assert_eq!(t.user_attrs["retry_count"], "1");
+        assert_eq!(t.retry_count(), 1);
+
+        // FIFO pop: oldest waiting trial first, flipped to Running with
+        // liveness stamps
+        let (p0, pn0) = s.pop_waiting_trial(sid).unwrap().unwrap();
+        assert_eq!((p0, pn0), (q0, n0));
+        let t = s.get_trial(p0).unwrap();
+        assert_eq!(t.state, TrialState::Running);
+        assert!(t.datetime_start.is_some());
+        assert!(t.last_alive_ms().is_some());
+        // a popped trial finishes like any other
+        s.finish_trial(p0, TrialState::Complete, Some(0.5)).unwrap();
+
+        let (p1, _) = s.pop_waiting_trial(sid).unwrap().unwrap();
+        assert_eq!(p1, q1);
+        assert_eq!(s.pop_waiting_trial(sid).unwrap(), None);
+
+        // queue ops feed the delta stream like every other write
+        if s.study_seq(sid).unwrap() != SEQ_UNTRACKED {
+            let seq = s.study_seq(sid).unwrap();
+            s.enqueue_trial(sid, &params, &BTreeMap::new()).unwrap();
+            let d = s.get_trials_since(sid, seq).unwrap();
+            assert_eq!(d.trials.len(), 1);
+            assert_eq!(d.trials[0].state, TrialState::Waiting);
+            let seq = d.seq;
+            s.pop_waiting_trial(sid).unwrap().unwrap();
+            let d = s.get_trials_since(sid, seq).unwrap();
+            assert_eq!(d.trials.len(), 1);
+            assert_eq!(d.trials[0].state, TrialState::Running);
+        }
+    }
+
+    fn capped_creation(s: &dyn Storage) {
+        let sid = s.create_study("conf-cap", StudyDirection::Minimize).unwrap();
+        let (t0, _) = s.create_trial_capped(sid, 2).unwrap().unwrap();
+        let (t1, _) = s.create_trial_capped(sid, 2).unwrap().unwrap();
+        assert_eq!(s.create_trial_capped(sid, 2).unwrap(), None);
+        // finished-ok trials keep their slot...
+        s.finish_trial(t0, TrialState::Complete, Some(1.0)).unwrap();
+        assert_eq!(s.create_trial_capped(sid, 2).unwrap(), None);
+        // ...failed trials release it (that's what makes retry budgets exact)
+        s.finish_trial(t1, TrialState::Failed, None).unwrap();
+        let (t2, _) = s.create_trial_capped(sid, 2).unwrap().unwrap();
+        assert_ne!(t2, t1);
+        assert_eq!(s.create_trial_capped(sid, 2).unwrap(), None);
+        assert_eq!(s.n_trials(sid).unwrap(), 3);
     }
 
     fn trial_isolation(s: &dyn Storage) {

@@ -1,8 +1,10 @@
 //! `Study` — one optimization process (§2): owns storage, sampler and
 //! pruner, runs the optimize loop, and exposes ask/tell for custom loops.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::core::{
     FrozenTrial, IndexSnapshot, ObservationIndex, OptunaError, StudyDirection, TrialState,
@@ -11,6 +13,53 @@ use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
 use crate::storage::{get_or_create_study, CachedStorage, InMemoryStorage, Storage, SEQ_UNTRACKED};
 use crate::trial::Trial;
+use crate::util::stats::nan_max_cmp;
+
+/// Fault-tolerance policy for crash-prone (distributed) execution: how
+/// often live workers prove their trials alive, how long a silent trial
+/// may stay `Running` before peers reap it, and how many times a reaped
+/// configuration is re-enqueued.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverConfig {
+    /// Interval between `Storage::record_heartbeat` stamps for in-flight
+    /// trials.
+    pub heartbeat_interval: Duration,
+    /// A `Running` trial whose last liveness evidence is older than this
+    /// is considered abandoned and flipped to `Failed`. Must comfortably
+    /// exceed `heartbeat_interval` (10× is a good default) or scheduler
+    /// hiccups reap live workers.
+    pub grace: Duration,
+    /// Maximum times one configuration is re-enqueued after being reaped.
+    pub max_retry: u32,
+}
+
+impl FailoverConfig {
+    /// Config with `grace = 10 × heartbeat_interval` and 3 retries.
+    pub fn new(heartbeat_interval: Duration) -> Self {
+        FailoverConfig {
+            heartbeat_interval,
+            grace: heartbeat_interval * 10,
+            max_retry: 3,
+        }
+    }
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        FailoverConfig::new(Duration::from_millis(500))
+    }
+}
+
+/// Hook deciding whether a reaped trial's configuration is re-enqueued
+/// (the `RetryFailedTrialCallback` analog): return `false` to drop it.
+/// Retry-budget accounting (`max_retry`) runs before the hook.
+///
+/// The hook runs **inside the storage backend's critical section** (that
+/// atomicity is what keeps capped budgets exact under concurrent reaps —
+/// see [`Storage::fail_stale_trials`]), so it must decide from the
+/// victim alone and **must not call back into the study or its storage**:
+/// the backend lock is held and is not reentrant.
+pub type RetryCallback = dyn Fn(&FrozenTrial) -> bool + Send + Sync;
 
 /// A study: the unit of optimization. Cheap to share across threads by
 /// reference (`optimize_parallel` uses scoped threads).
@@ -21,6 +70,9 @@ pub struct Study {
     /// Generation-stamped observation index over this study's trials
     /// (`None` when disabled via [`StudyBuilder::observation_index`]).
     pub(crate) obs_index: Option<Mutex<ObservationIndex>>,
+    /// Heartbeat/reap/retry policy (`None` = failover disabled).
+    pub(crate) failover: Option<FailoverConfig>,
+    pub(crate) retry_cb: Option<Arc<RetryCallback>>,
     pub study_id: u64,
     pub direction: StudyDirection,
     pub name: String,
@@ -35,6 +87,8 @@ pub struct StudyBuilder {
     pruner: Option<Arc<dyn Pruner>>,
     cache: bool,
     index: bool,
+    failover: Option<FailoverConfig>,
+    retry_cb: Option<Arc<RetryCallback>>,
 }
 
 impl StudyBuilder {
@@ -83,6 +137,27 @@ impl StudyBuilder {
         self
     }
 
+    /// Enable fault-tolerant execution: in-flight trials heartbeat on
+    /// `cfg.heartbeat_interval`, the optimize loops reap peers' stale
+    /// `Running` trials after `cfg.grace`, and reaped configurations are
+    /// re-enqueued up to `cfg.max_retry` times. Off by default.
+    pub fn failover(mut self, cfg: FailoverConfig) -> Self {
+        self.failover = Some(cfg);
+        self
+    }
+
+    /// Custom retry decision hook; only consulted when failover is
+    /// enabled. The hook runs while the storage lock is held and must
+    /// not call back into the study or its storage — see
+    /// [`RetryCallback`] for the full contract.
+    pub fn retry_callback(
+        mut self,
+        cb: impl Fn(&FrozenTrial) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        self.retry_cb = Some(Arc::new(cb));
+        self
+    }
+
     /// Create (or join, for shared storage) the study.
     pub fn build(self) -> Result<Study, OptunaError> {
         let storage = self
@@ -100,10 +175,35 @@ impl StudyBuilder {
             sampler,
             pruner,
             obs_index,
+            failover: self.failover,
+            retry_cb: self.retry_cb,
             study_id,
             direction: self.direction,
             name: self.name,
         })
+    }
+}
+
+/// Shared set of in-flight trial ids that the heartbeat ticker stamps.
+struct HeartbeatRegistry {
+    trials: Mutex<HashSet<u64>>,
+}
+
+impl HeartbeatRegistry {
+    fn new() -> Self {
+        HeartbeatRegistry { trials: Mutex::new(HashSet::new()) }
+    }
+
+    fn insert(&self, trial_id: u64) {
+        self.trials.lock().unwrap().insert(trial_id);
+    }
+
+    fn remove(&self, trial_id: u64) {
+        self.trials.lock().unwrap().remove(&trial_id);
+    }
+
+    fn ids(&self) -> Vec<u64> {
+        self.trials.lock().unwrap().iter().copied().collect()
     }
 }
 
@@ -124,6 +224,8 @@ impl Study {
             pruner: None,
             cache: true,
             index: true,
+            failover: None,
+            retry_cb: None,
         }
     }
 
@@ -145,15 +247,86 @@ impl Study {
         Ok(Some(ix.apply(&delta.trials, delta.seq)))
     }
 
-    /// Begin a trial: creates it in storage and runs relational sampling.
-    /// The history snapshot taken here is shared by every independent
-    /// suggest in the trial, and — through the storage cache — with every
-    /// concurrent worker: unless the study changed since the last read,
-    /// no trial data is cloned at all. The observation index is synced to
-    /// the same generation, so every suggest in the trial reads pre-sorted
-    /// observation columns instead of scanning the snapshot.
+    /// Begin a trial. `Waiting` trials (reaped configurations re-enqueued
+    /// by the failover layer, or anything queued via
+    /// [`Storage::enqueue_trial`]) are popped before a fresh trial is
+    /// created, so retried configurations resume first.
+    ///
+    /// For fresh trials, creation in storage is followed by relational
+    /// sampling. The history snapshot taken here is shared by every
+    /// independent suggest in the trial, and — through the storage cache —
+    /// with every concurrent worker: unless the study changed since the
+    /// last read, no trial data is cloned at all. The observation index is
+    /// synced to the same generation, so every suggest in the trial reads
+    /// pre-sorted observation columns instead of scanning the snapshot.
     pub fn ask(&self) -> Result<Trial<'_>, OptunaError> {
+        self.ask_registered(None)
+    }
+
+    fn ask_registered(
+        &self,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<Trial<'_>, OptunaError> {
+        if let Some((trial_id, number)) = self.storage.pop_waiting_trial(self.study_id)? {
+            return self.finish_ask(trial_id, number, false, heartbeats);
+        }
         let (trial_id, number) = self.storage.create_trial(self.study_id)?;
+        self.finish_ask(trial_id, number, true, heartbeats)
+    }
+
+    /// Budget-capped [`Study::ask`]: pops a waiting trial if one exists,
+    /// else creates a fresh trial only while the study holds fewer than
+    /// `cap` non-`Failed` trials (see [`Storage::create_trial_capped`]).
+    /// `Ok(None)` means the budget is claimed — by finished work or by
+    /// peers' in-flight trials.
+    pub fn ask_capped(&self, cap: u64) -> Result<Option<Trial<'_>>, OptunaError> {
+        self.ask_capped_registered(cap, None)
+    }
+
+    fn ask_capped_registered(
+        &self,
+        cap: u64,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<Option<Trial<'_>>, OptunaError> {
+        if let Some((trial_id, number)) = self.storage.pop_waiting_trial(self.study_id)? {
+            return self.finish_ask(trial_id, number, false, heartbeats).map(Some);
+        }
+        match self.storage.create_trial_capped(self.study_id, cap)? {
+            Some((trial_id, number)) => {
+                self.finish_ask(trial_id, number, true, heartbeats).map(Some)
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Second half of an ask: register the claimed trial for heartbeats
+    /// *before* the (possibly slow) snapshot sync + relational sampling —
+    /// otherwise a long sampling phase has only `datetime_start` as
+    /// liveness evidence and a peer could reap the live trial mid-ask.
+    fn finish_ask(
+        &self,
+        trial_id: u64,
+        number: u64,
+        fresh: bool,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<Trial<'_>, OptunaError> {
+        if let Some(reg) = heartbeats {
+            reg.insert(trial_id);
+        }
+        let built = if fresh {
+            self.build_fresh_trial(trial_id, number)
+        } else {
+            self.resume_popped(trial_id, number)
+        };
+        if built.is_err() {
+            if let Some(reg) = heartbeats {
+                reg.remove(trial_id);
+            }
+        }
+        built
+    }
+
+    fn build_fresh_trial(&self, trial_id: u64, number: u64) -> Result<Trial<'_>, OptunaError> {
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
         let index = self.sync_obs_index()?;
         let ctx = StudyContext::with_index(self.direction, &trials, index.as_deref());
@@ -164,6 +337,68 @@ impl Study {
             self.sampler.sample_relative(&ctx, number, &space)
         };
         Ok(Trial::new(self, trial_id, number, relative, space, trials, index))
+    }
+
+    /// Build the live-trial view of a just-popped `Waiting` trial: its
+    /// stored parameters become the suggest cache, so the objective's
+    /// `suggest_*` calls replay the enqueued configuration instead of
+    /// sampling anew.
+    fn resume_popped(&self, trial_id: u64, number: u64) -> Result<Trial<'_>, OptunaError> {
+        let seeded = self.storage.get_trial(trial_id)?.params;
+        let trials = self.storage.get_trials_snapshot(self.study_id)?;
+        let index = self.sync_obs_index()?;
+        Ok(Trial::resumed(self, trial_id, number, seeded, trials, index))
+    }
+
+    /// Reap stale `Running` trials (dead peers' work) and re-enqueue
+    /// their configurations, honoring `max_retry` and the retry callback.
+    /// The requeue decision runs inside the storage's critical section
+    /// (see [`Storage::fail_stale_trials`]), so the victim's freed budget
+    /// slot and the `Waiting` retry that re-consumes it swap atomically —
+    /// a concurrent capped creation can't race into the gap and overshoot
+    /// an exact budget. Returns the reaped victims; no-op without a
+    /// failover config.
+    pub fn reap_stale_trials(&self) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let Some(cfg) = self.failover else {
+            return Ok(Vec::new());
+        };
+        let retry_cb = self.retry_cb.clone();
+        let requeue = move |v: &FrozenTrial| -> Option<BTreeMap<String, String>> {
+            let retries = v.retry_count();
+            if retries >= cfg.max_retry {
+                return None;
+            }
+            if let Some(cb) = &retry_cb {
+                if !cb(v) {
+                    return None;
+                }
+            }
+            let mut attrs = BTreeMap::new();
+            attrs.insert("retry_count".to_string(), (retries + 1).to_string());
+            attrs.insert("retried_from".to_string(), v.number.to_string());
+            Some(attrs)
+        };
+        self.storage.fail_stale_trials(self.study_id, cfg.grace, &requeue)
+    }
+
+    /// Heartbeat ticker body: every `interval`, stamp all registered
+    /// in-flight trials. Runs until `stop` is set; polls in small slices
+    /// so shutdown doesn't wait out a long interval.
+    fn heartbeat_loop(&self, interval: Duration, registry: &HeartbeatRegistry, stop: &AtomicBool) {
+        let slice = interval.min(Duration::from_millis(10)).max(Duration::from_millis(1));
+        let mut elapsed = Duration::ZERO;
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(slice);
+            elapsed += slice;
+            if elapsed < interval {
+                continue;
+            }
+            elapsed = Duration::ZERO;
+            for id in registry.ids() {
+                // best effort: a failed heartbeat only risks an early reap
+                let _ = self.storage.record_heartbeat(id);
+            }
+        }
     }
 
     /// Finish a trial with an outcome.
@@ -190,14 +425,46 @@ impl Study {
     where
         F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
     {
-        let mut trial = self.ask()?;
+        let trial = self.ask()?;
+        self.run_trial(trial, objective, None)
+    }
+
+    /// Evaluate `objective` on an already-asked trial and tell the
+    /// outcome. Registers the trial with the heartbeat registry for the
+    /// duration when one is provided. With failover configured, a storage
+    /// [`OptunaError::Conflict`] on tell (the trial was reaped by a peer
+    /// that thought us dead — it is already `Failed` and re-enqueued) is
+    /// swallowed: the work is superseded, not broken. Without failover,
+    /// conflicts propagate.
+    fn run_trial<F>(
+        &self,
+        mut trial: Trial<'_>,
+        objective: &F,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
+    {
+        let trial_id = trial.id();
+        if let Some(reg) = heartbeats {
+            reg.insert(trial_id);
+        }
         let outcome = match objective(&mut trial) {
             Ok(v) if v.is_finite() => TrialOutcome::Complete(v),
             Ok(v) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
             Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
             Err(e) => TrialOutcome::Failed(e.to_string()),
         };
-        self.tell(trial, outcome)
+        let result = self.tell(trial, outcome);
+        if let Some(reg) = heartbeats {
+            reg.remove(trial_id);
+        }
+        match result {
+            // only under an explicit failover policy: a study that never
+            // opted into reaping should surface conflicts, not eat results
+            Err(OptunaError::Conflict(_)) if self.failover.is_some() => Ok(()),
+            other => other,
+        }
     }
 
     /// Evaluate `objective` for `n_trials` trials (the 'optimize API').
@@ -256,29 +523,133 @@ impl Study {
         assert!(n_workers >= 1);
         let budget = AtomicUsize::new(n_trials);
         let first_error = std::sync::Mutex::new(None::<OptunaError>);
+        let registry = HeartbeatRegistry::new();
+        let stop_ticker = AtomicBool::new(false);
         std::thread::scope(|scope| {
-            for _ in 0..n_workers {
-                scope.spawn(|| loop {
-                    // claim a trial slot
-                    let prev = budget.fetch_update(
-                        Ordering::SeqCst,
-                        Ordering::SeqCst,
-                        |b| b.checked_sub(1),
-                    );
-                    if prev.is_err() {
-                        break;
-                    }
-                    if let Err(e) = self.run_one(&objective) {
-                        *first_error.lock().unwrap() = Some(e);
-                        break;
-                    }
-                });
+            let ticker = self.failover.map(|cfg| {
+                let interval = cfg.heartbeat_interval;
+                let (reg, stop) = (&registry, &stop_ticker);
+                scope.spawn(move || self.heartbeat_loop(interval, reg, stop))
+            });
+            let workers: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    scope.spawn(|| loop {
+                        // claim a trial slot
+                        let prev = budget.fetch_update(
+                            Ordering::SeqCst,
+                            Ordering::SeqCst,
+                            |b| b.checked_sub(1),
+                        );
+                        if prev.is_err() {
+                            break;
+                        }
+                        let result = self
+                            .reap_stale_trials()
+                            .and_then(|_| self.ask_registered(Some(&registry)))
+                            .and_then(|trial| {
+                                self.run_trial(trial, &objective, Some(&registry))
+                            });
+                        if let Err(e) = result {
+                            // a worker failed: stop draining the budget —
+                            // the study is in an error state, running the
+                            // remaining trials would mask it
+                            budget.store(0, Ordering::SeqCst);
+                            // keep the *first* error; later workers fail
+                            // as a consequence and must not overwrite it
+                            let mut slot = first_error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            break;
+                        }
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().expect("worker thread panicked");
+            }
+            stop_ticker.store(true, Ordering::SeqCst);
+            if let Some(t) = ticker {
+                t.join().expect("heartbeat ticker panicked");
             }
         });
         match first_error.into_inner().unwrap() {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Fault-tolerant cooperative optimization: run trials until the
+    /// study holds `target` finished non-failed (Complete or Pruned)
+    /// trials — **across all workers and processes sharing the storage**.
+    /// This is the distributed worker loop behind the CLI's
+    /// `worker`/`distributed` commands: each process runs the same call
+    /// against the same storage URL, and the shared budget is claimed
+    /// atomically through [`Storage::create_trial_capped`], so the study
+    /// finishes its exact budget even when workers crash mid-trial
+    /// (their trials are reaped to `Failed`, releasing the slot, and —
+    /// with failover configured — their configurations are re-enqueued
+    /// and resumed by survivors).
+    ///
+    /// With a [`FailoverConfig`] set, a background ticker heartbeats the
+    /// in-flight trial and every iteration reaps stale peers. Without
+    /// one, the loop still cooperates on the budget but waits on peers'
+    /// in-flight trials indefinitely (nothing is ever reaped).
+    pub fn optimize_until<F>(&self, target: u64, objective: F) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError> + Sync,
+        Self: Sync,
+    {
+        let registry = HeartbeatRegistry::new();
+        let stop_ticker = AtomicBool::new(false);
+        let poll = self
+            .failover
+            .map(|cfg| cfg.heartbeat_interval)
+            .unwrap_or(Duration::from_millis(25))
+            .clamp(Duration::from_millis(5), Duration::from_millis(100));
+        std::thread::scope(|scope| {
+            let ticker = self.failover.map(|cfg| {
+                let interval = cfg.heartbeat_interval;
+                let (reg, stop) = (&registry, &stop_ticker);
+                scope.spawn(move || self.heartbeat_loop(interval, reg, stop))
+            });
+            let run: Result<(), OptunaError> = (|| {
+                loop {
+                    self.reap_stale_trials()?;
+                    match self.ask_capped_registered(target, Some(&registry))? {
+                        Some(trial) => {
+                            self.run_trial(trial, &objective, Some(&registry))?;
+                        }
+                        None => {
+                            // budget fully claimed; done when it is all
+                            // finished work, else wait on peers' trials
+                            // (which either finish or go stale and are
+                            // reaped on a later iteration)
+                            let trials =
+                                self.storage.get_trials_snapshot(self.study_id)?;
+                            let done = trials
+                                .iter()
+                                .filter(|t| {
+                                    matches!(
+                                        t.state,
+                                        TrialState::Complete | TrialState::Pruned
+                                    )
+                                })
+                                .count() as u64;
+                            if done >= target {
+                                return Ok(());
+                            }
+                            std::thread::sleep(poll);
+                        }
+                    }
+                }
+            })();
+            stop_ticker.store(true, Ordering::SeqCst);
+            if let Some(t) = ticker {
+                t.join().expect("heartbeat ticker panicked");
+            }
+            run
+        })
     }
 
     /// All trials, ordered by number.
@@ -288,13 +659,22 @@ impl Study {
 
     /// Best completed trial under the study direction. Scans the shared
     /// snapshot and clones only the winner.
+    ///
+    /// NaN objective values (possible through the raw ask/tell API) rank
+    /// *worst in both directions* via [`nan_max_cmp`] on the
+    /// direction-normalized loss — the sampler/pruner convention. The
+    /// naive `is_better` reduce was NaN-poisoned: `is_better(x, NaN)` is
+    /// false both ways, so a NaN incumbent won forever.
     pub fn best_trial(&self) -> Result<Option<FrozenTrial>, OptunaError> {
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
+        let sign = self.direction.min_sign();
         Ok(trials
             .iter()
             .filter(|t| t.state == TrialState::Complete && t.value.is_some())
             .reduce(|best, t| {
-                if self.direction.is_better(t.value.unwrap(), best.value.unwrap()) {
+                let candidate = sign * t.value.unwrap();
+                let incumbent = sign * best.value.unwrap();
+                if nan_max_cmp(&candidate, &incumbent) == std::cmp::Ordering::Less {
                     t
                 } else {
                     best
@@ -624,6 +1004,283 @@ mod tests {
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("number,state,value"));
         assert!(lines[0].contains(",c") && lines[0].contains(",x"));
+    }
+
+    /// Storage decorator whose `finish_trial` starts failing permanently
+    /// after `fail_after` successful finishes. The first failure is
+    /// "primary failure"; later ones stall 100ms inside the storage and
+    /// fail as "secondary failure" — so the regression test below can
+    /// tell whether `optimize_parallel` kept the chronologically first
+    /// error or let a follower overwrite it.
+    struct FailingFinish {
+        inner: InMemoryStorage,
+        finishes: AtomicUsize,
+        fail_after: usize,
+    }
+
+    impl Storage for FailingFinish {
+        fn create_study(
+            &self,
+            n: &str,
+            d: StudyDirection,
+        ) -> Result<u64, OptunaError> {
+            self.inner.create_study(n, d)
+        }
+        fn get_study_id(&self, n: &str) -> Result<Option<u64>, OptunaError> {
+            self.inner.get_study_id(n)
+        }
+        fn get_study_direction(&self, s: u64) -> Result<StudyDirection, OptunaError> {
+            self.inner.get_study_direction(s)
+        }
+        fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+            self.inner.study_names()
+        }
+        fn create_trial(&self, s: u64) -> Result<(u64, u64), OptunaError> {
+            self.inner.create_trial(s)
+        }
+        fn set_trial_param(
+            &self,
+            t: u64,
+            n: &str,
+            d: &crate::core::Distribution,
+            v: f64,
+        ) -> Result<(), OptunaError> {
+            self.inner.set_trial_param(t, n, d, v)
+        }
+        fn set_trial_intermediate(&self, t: u64, s: u64, v: f64) -> Result<(), OptunaError> {
+            self.inner.set_trial_intermediate(t, s, v)
+        }
+        fn set_trial_user_attr(&self, t: u64, k: &str, v: &str) -> Result<(), OptunaError> {
+            self.inner.set_trial_user_attr(t, k, v)
+        }
+        fn finish_trial(
+            &self,
+            t: u64,
+            st: TrialState,
+            v: Option<f64>,
+        ) -> Result<(), OptunaError> {
+            let n = self.finishes.fetch_add(1, Ordering::SeqCst);
+            if n < self.fail_after {
+                return self.inner.finish_trial(t, st, v);
+            }
+            if n == self.fail_after {
+                Err(OptunaError::Storage("primary failure".into()))
+            } else {
+                std::thread::sleep(Duration::from_millis(100));
+                Err(OptunaError::Storage("secondary failure".into()))
+            }
+        }
+        fn get_trial(&self, t: u64) -> Result<FrozenTrial, OptunaError> {
+            self.inner.get_trial(t)
+        }
+        fn get_all_trials(&self, s: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+            self.inner.get_all_trials(s)
+        }
+        fn n_trials(&self, s: u64) -> Result<usize, OptunaError> {
+            self.inner.n_trials(s)
+        }
+    }
+
+    #[test]
+    fn parallel_worker_error_stops_budget_and_keeps_first_error() {
+        let storage = Arc::new(FailingFinish {
+            inner: InMemoryStorage::new(),
+            finishes: AtomicUsize::new(0),
+            fail_after: 2,
+        });
+        let study = Study::builder()
+            .name("boom")
+            .storage(storage)
+            .sampler(Arc::new(RandomSampler::new(0)))
+            .build()
+            .unwrap();
+        let err = study
+            .optimize_parallel(1000, 4, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(x)
+            })
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("primary failure"),
+            "the first worker error must be preserved, got: {err}"
+        );
+        // the budget must be zeroed on error: without the fix all 1000
+        // slots keep draining after the failure
+        let n = study.trials().unwrap().len();
+        assert!(n < 100, "budget kept draining after worker error: {n} trials ran");
+    }
+
+    #[test]
+    fn nan_complete_trial_does_not_poison_best() {
+        let study = quadratic_study(20);
+        // NaN lands first, so the naive reduce would keep it forever
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Complete(f64::NAN)).unwrap();
+        let mut t = study.ask().unwrap();
+        let x = t.suggest_float("x", 0.0, 1.0).unwrap();
+        study.tell(t, TrialOutcome::Complete(5.0)).unwrap();
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Complete(f64::NAN)).unwrap();
+        let best = study.best_trial().unwrap().unwrap();
+        assert_eq!(best.value, Some(5.0), "NaN must rank worst under minimize");
+        let _ = x;
+
+        let study = Study::builder()
+            .name("nan-max")
+            .direction(StudyDirection::Maximize)
+            .build()
+            .unwrap();
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Complete(f64::NAN)).unwrap();
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Complete(-3.0)).unwrap();
+        assert_eq!(
+            study.best_value().unwrap(),
+            Some(-3.0),
+            "NaN must rank worst under maximize too"
+        );
+    }
+
+    #[test]
+    fn ask_pops_waiting_trials_first_and_replays_params() {
+        let study = quadratic_study(21);
+        let mut params = crate::storage::ParamSet::new();
+        let d = crate::core::Distribution::float(0.0, 1.0);
+        params.insert("x".into(), (d, 0.25));
+        let mut attrs = BTreeMap::new();
+        attrs.insert("retry_count".to_string(), "1".to_string());
+        study.storage.enqueue_trial(study.study_id, &params, &attrs).unwrap();
+
+        let mut t = study.ask().unwrap();
+        assert_eq!(t.suggest_float("x", 0.0, 1.0).unwrap(), 0.25, "replays enqueued value");
+        // same name under a different distribution is rejected, as in any
+        // live trial
+        assert!(t.suggest_float("x", 0.0, 2.0).is_err());
+        study.tell(t, TrialOutcome::Complete(0.25)).unwrap();
+
+        // queue drained: the next ask creates a fresh trial
+        let t2 = study.ask().unwrap();
+        assert_eq!(t2.number(), 1);
+        study.tell(t2, TrialOutcome::Failed("skip".into())).unwrap();
+
+        let trials = study.trials().unwrap();
+        assert_eq!(trials[0].state, TrialState::Complete);
+        assert_eq!(trials[0].value, Some(0.25));
+        assert_eq!(trials[0].retry_count(), 1);
+    }
+
+    #[test]
+    fn stale_trials_reaped_and_retried_up_to_max_retry() {
+        let study = Study::builder()
+            .name("failover")
+            .sampler(Arc::new(RandomSampler::new(22)))
+            .failover(FailoverConfig {
+                heartbeat_interval: Duration::from_millis(10),
+                grace: Duration::from_millis(30),
+                max_retry: 1,
+            })
+            .build()
+            .unwrap();
+        // a worker that died mid-trial: asked + suggested, never told
+        let mut dead = study.ask().unwrap();
+        let x = dead.suggest_float("x", -1.0, 1.0).unwrap();
+        let dead_id = dead.id();
+        drop(dead);
+        std::thread::sleep(Duration::from_millis(50));
+
+        let victims = study.reap_stale_trials().unwrap();
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].id, dead_id);
+        assert_eq!(victims[0].state, TrialState::Failed);
+
+        // the configuration waits in the queue; ask resumes it verbatim
+        let mut retry = study.ask().unwrap();
+        assert_eq!(retry.suggest_float("x", -1.0, 1.0).unwrap(), x);
+        let retry_id = retry.id();
+        drop(retry); // ... and dies again
+        std::thread::sleep(Duration::from_millis(50));
+
+        let victims = study.reap_stale_trials().unwrap();
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].id, retry_id);
+        assert_eq!(victims[0].retry_count(), 1);
+        // max_retry exhausted: nothing re-enqueued
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert!(trials.iter().all(|t| t.state != TrialState::Waiting));
+    }
+
+    #[test]
+    fn retry_callback_can_veto_requeue() {
+        let study = Study::builder()
+            .name("veto")
+            .failover(FailoverConfig {
+                heartbeat_interval: Duration::from_millis(10),
+                grace: Duration::from_millis(20),
+                max_retry: 5,
+            })
+            .retry_callback(|_| false)
+            .build()
+            .unwrap();
+        let t = study.ask().unwrap();
+        drop(t);
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(study.reap_stale_trials().unwrap().len(), 1);
+        assert!(study
+            .trials()
+            .unwrap()
+            .iter()
+            .all(|t| t.state != TrialState::Waiting));
+    }
+
+    #[test]
+    fn optimize_until_finishes_exact_budget_despite_stranded_peer() {
+        let study = Study::builder()
+            .name("until")
+            .sampler(Arc::new(RandomSampler::new(23)))
+            .failover(FailoverConfig {
+                heartbeat_interval: Duration::from_millis(10),
+                // generous vs. the instant objective below, so a slow CI
+                // box cannot false-reap the live retry mid-run
+                grace: Duration::from_millis(150),
+                max_retry: 3,
+            })
+            .build()
+            .unwrap();
+        // a "dead peer" left a parameterized Running trial behind
+        let mut dead = study.ask().unwrap();
+        dead.suggest_float("x", -5.0, 5.0).unwrap();
+        drop(dead);
+        std::thread::sleep(Duration::from_millis(200));
+
+        study
+            .optimize_until(6, |t| {
+                let x = t.suggest_float("x", -5.0, 5.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+
+        let trials = study.trials().unwrap();
+        let complete = trials.iter().filter(|t| t.state == TrialState::Complete).count();
+        assert_eq!(complete, 6, "exact budget of finished trials");
+        assert!(trials
+            .iter()
+            .all(|t| !matches!(t.state, TrialState::Running | TrialState::Waiting)));
+        // the stranded trial was reaped, and its exact configuration retried
+        let failed: Vec<_> =
+            trials.iter().filter(|t| t.state == TrialState::Failed).collect();
+        assert_eq!(failed.len(), 1);
+        assert!(failed[0].user_attrs.contains_key("fail_reason"));
+        let retried = trials.iter().find(|t| {
+            t.user_attrs.get("retried_from") == Some(&failed[0].number.to_string())
+        });
+        let retried = retried.expect("the victim's configuration must be retried");
+        assert_eq!(retried.state, TrialState::Complete);
+        assert_eq!(
+            retried.param_internal("x"),
+            failed[0].param_internal("x"),
+            "the retry resumes the victim's parameters verbatim"
+        );
     }
 
     #[test]

@@ -139,6 +139,31 @@ impl<'s> Trial<'s> {
         }
     }
 
+    /// View of a popped `Waiting` trial (a retried configuration): the
+    /// stored parameters seed the suggest cache, so `suggest_*` calls
+    /// replay the enqueued values instead of sampling — and, as always,
+    /// asking for a *different* distribution under the same name errors.
+    pub(crate) fn resumed(
+        study: &'s Study,
+        trial_id: u64,
+        number: u64,
+        seeded: BTreeMap<String, (Distribution, f64)>,
+        snapshot: Arc<Vec<FrozenTrial>>,
+        index: Option<Arc<IndexSnapshot>>,
+    ) -> Self {
+        Trial {
+            study,
+            trial_id,
+            number,
+            relative_params: BTreeMap::new(),
+            relative_space: Default::default(),
+            cache: seeded,
+            last_report: None,
+            snapshot,
+            index,
+        }
+    }
+
     pub fn id(&self) -> u64 {
         self.trial_id
     }

@@ -1,0 +1,155 @@
+//! Multi-process fault-tolerance integration tests (ISSUE 3 acceptance):
+//! N OS processes share one journal file, one is SIGKILLed mid-trial, and
+//! the study must still finish its exact budget — the victim's trial
+//! reaped to `Failed` within the grace period and its parameters retried
+//! from the `Waiting` queue.
+//!
+//! The tests drive the real `optuna` binary's `distributed` orchestrator
+//! (which spawns `worker` subprocesses), then re-open the journal
+//! in-process to assert on the trial table directly.
+
+use std::process::Command;
+
+use optuna_rs::core::TrialState;
+use optuna_rs::storage::{JournalStorage, Storage};
+
+fn tmp_journal(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "optuna_rs_dist_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn run_distributed(path: &std::path::Path, extra: &[&str]) -> String {
+    let url = format!("journal://{}", path.display());
+    let mut args: Vec<&str> = vec![
+        "distributed",
+        "--storage",
+        url.as_str(),
+        "--study",
+        "dist",
+        "--trials",
+        "24",
+        "--workers",
+        "4",
+        "--workload",
+        "quadratic",
+        "--sampler",
+        "random",
+        "--timeout-ms",
+        "90000",
+    ];
+    args.extend_from_slice(extra);
+    let out = Command::new(env!("CARGO_BIN_EXE_optuna"))
+        .args(&args)
+        .output()
+        .expect("spawn optuna distributed");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(
+        out.status.success(),
+        "distributed run failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    stdout
+}
+
+#[test]
+fn four_processes_share_one_journal_exact_budget() {
+    let p = tmp_journal("plain");
+    let out = run_distributed(&p, &["--trial-sleep-ms", "10"]);
+    assert!(out.contains("ok: exact budget"), "{out}");
+
+    let s = JournalStorage::open(&p).unwrap();
+    let sid = s.get_study_id("dist").unwrap().unwrap();
+    let trials = s.get_all_trials(sid).unwrap();
+    let finished_ok = trials
+        .iter()
+        .filter(|t| matches!(t.state, TrialState::Complete | TrialState::Pruned))
+        .count();
+    assert_eq!(finished_ok, 24, "exact budget");
+    assert!(trials
+        .iter()
+        .all(|t| !matches!(t.state, TrialState::Running | TrialState::Waiting)));
+    // multiple workers actually participated
+    let pids: std::collections::HashSet<_> = trials
+        .iter()
+        .filter_map(|t| t.user_attrs.get("worker_pid"))
+        .collect();
+    assert!(pids.len() >= 2, "expected >= 2 workers to run trials, saw {pids:?}");
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn sigkilled_worker_is_reaped_and_its_params_retried() {
+    let p = tmp_journal("kill");
+    let out = run_distributed(
+        &p,
+        &[
+            "--kill-one",
+            "true",
+            "--trial-sleep-ms",
+            "80",
+            "--heartbeat-ms",
+            "25",
+            "--grace-ms",
+            "600",
+        ],
+    );
+    assert!(out.contains("killed 1"), "{out}");
+    assert!(out.contains("ok: exact budget"), "{out}");
+
+    let s = JournalStorage::open(&p).unwrap();
+    let sid = s.get_study_id("dist").unwrap().unwrap();
+    let trials = s.get_all_trials(sid).unwrap();
+
+    // exact budget despite the crash, zero stranded trials
+    let finished_ok = trials
+        .iter()
+        .filter(|t| matches!(t.state, TrialState::Complete | TrialState::Pruned))
+        .count();
+    assert_eq!(finished_ok, 24, "exact budget despite SIGKILL");
+    assert!(
+        trials
+            .iter()
+            .all(|t| !matches!(t.state, TrialState::Running | TrialState::Waiting)),
+        "zero stranded Running/Waiting trials"
+    );
+
+    // the victim's trial was reaped to Failed by a surviving peer
+    let reaped: Vec<_> = trials
+        .iter()
+        .filter(|t| {
+            t.state == TrialState::Failed
+                && t.user_attrs.get("fail_reason").map(|r| r.as_str())
+                    == Some("heartbeat expired")
+        })
+        .collect();
+    assert!(!reaped.is_empty(), "the SIGKILLed worker's trial must be reaped");
+    for v in &reaped {
+        assert!(v.datetime_complete.is_some());
+        // reaped while mid-"evaluation": its parameters were already in
+        // storage when the kill landed
+        assert!(!v.params.is_empty(), "victim carries its parameter set");
+    }
+
+    // ... and its exact configuration was retried from the Waiting queue
+    let victim = reaped[0];
+    let retry = trials
+        .iter()
+        .find(|t| t.user_attrs.get("retried_from") == Some(&victim.number.to_string()))
+        .expect("victim's configuration must re-enter via the retry queue");
+    assert!(retry.retry_count() >= 1);
+    for (name, (dist, internal)) in &victim.params {
+        let (rdist, rinternal) = retry
+            .params
+            .get(name)
+            .unwrap_or_else(|| panic!("retry missing param '{name}'"));
+        assert_eq!(rdist, dist);
+        assert_eq!(rinternal, internal, "retried value must match the victim's");
+    }
+    std::fs::remove_file(p).ok();
+}
