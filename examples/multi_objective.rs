@@ -1,0 +1,68 @@
+//! Multi-objective quick-start: tune a model for accuracy AND latency at
+//! once. A scalar objective forces a hand-picked trade-off weight; a
+//! vector objective lets the study return the whole Pareto front and
+//! defers the trade-off decision to deployment time.
+//!
+//!     cargo run --release --example multi_objective
+
+use optuna_rs::prelude::*;
+use std::sync::Arc;
+
+/// A stand-in (error, latency-ms) surface for a width/quantization
+/// choice: wider models are more accurate but slower; aggressive
+/// quantization is fast but costs accuracy. The two objectives genuinely
+/// conflict, so there is no single best configuration.
+fn evaluate(width: i64, bits: i64, lr: f64) -> (f64, f64) {
+    let capacity = (width as f64).log2() + bits as f64 / 8.0;
+    let err = 0.30 - 0.025 * capacity + (lr.log10() + 2.0).powi(2) * 0.02;
+    let latency = 0.4 * width as f64 * (bits as f64 / 8.0).sqrt();
+    (err.max(0.01), latency)
+}
+
+fn main() {
+    let study = Study::builder()
+        .name("accuracy-vs-latency")
+        // one direction PER OBJECTIVE, in the order the objective
+        // reports them: minimize error, minimize latency
+        .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+        .sampler(Arc::new(NsgaIiSampler::with_config(
+            42,
+            NsgaIiConfig { population_size: 24, ..NsgaIiConfig::default() },
+        )))
+        .build()
+        .expect("study");
+
+    study
+        .optimize_multi(150, |trial| {
+            let width = trial.suggest_int_log("width", 8, 512)?;
+            let bits = trial.suggest_int("bits", 2, 8)?;
+            let lr = trial.suggest_float_log("lr", 1e-4, 1e-1)?;
+            let (err, latency_ms) = evaluate(width, bits, lr);
+            Ok(vec![err, latency_ms]) // one value per direction
+        })
+        .expect("optimize");
+
+    // there is no single best trial on a multi-objective study...
+    assert!(study.best_value().is_err());
+
+    // ...the result is the Pareto front: every configuration nobody beats
+    // on BOTH objectives at once
+    let front = study.best_trials().expect("front");
+    println!("pareto front: {} of {} trials", front.len(), 150);
+    for t in &front {
+        let v = t.objective_values();
+        println!(
+            "  #{:>3}  err={:.4}  latency={:7.1}ms  width={} bits={}",
+            t.number,
+            v[0],
+            v[1],
+            t.param("width").unwrap(),
+            t.param("bits").unwrap(),
+        );
+    }
+
+    // the hypervolume indicator condenses front quality into one number
+    // (reference point = worst interesting corner of objective space)
+    let hv = study.hypervolume(&[0.4, 250.0]).expect("hypervolume");
+    println!("hypervolume at (err=0.4, latency=250ms): {hv:.2}");
+}

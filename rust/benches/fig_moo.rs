@@ -1,0 +1,117 @@
+//! Multi-objective quality bench: hypervolume vs trial budget for
+//! NSGA-II against the random baseline on the evalset MOO table
+//! (ZDT1/ZDT2/DTLZ2), repeated over seeds. Prints a paper-style table
+//! and writes machine-readable results to `BENCH_moo.json` (override
+//! the path with `BENCH_MOO_JSON`) so CI can archive the trend.
+//!
+//! Knobs: `MOO_QUICK=1` shrinks the protocol ~4x; `MOO_REPEATS`,
+//! `MOO_BUDGET` override the repeat count / largest budget directly.
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::multi::{NsgaIiConfig, NsgaIiSampler};
+use optuna_rs::prelude::*;
+use optuna_rs::sampler::Sampler;
+use optuna_rs::util::stats::mean;
+use optuna_rs::workloads::evalset::{moo_functions, MooFunction};
+use std::sync::Arc;
+
+fn make_moo_sampler(kind: &str, seed: u64) -> Arc<dyn Sampler> {
+    match kind {
+        "random" => Arc::new(RandomSampler::new(seed)),
+        "nsga2" => Arc::new(NsgaIiSampler::with_config(
+            seed,
+            NsgaIiConfig { population_size: 20, ..NsgaIiConfig::default() },
+        )),
+        other => panic!("unknown sampler {other}"),
+    }
+}
+
+/// One study over `f`; returns the front hypervolume at each checkpoint.
+fn run_study(
+    f: &MooFunction,
+    sampler: Arc<dyn Sampler>,
+    checkpoints: &[usize],
+    tag: &str,
+) -> Vec<f64> {
+    let study = Study::builder()
+        .name(&format!("{}-{tag}", f.name))
+        .directions(&vec![StudyDirection::Minimize; f.n_obj])
+        .sampler(sampler)
+        .build()
+        .expect("study");
+    let mut hvs = Vec::with_capacity(checkpoints.len());
+    let mut done = 0;
+    for &budget in checkpoints {
+        study
+            .optimize_multi(budget - done, |t| f.objective(t))
+            .expect("optimize_multi");
+        done = budget;
+        hvs.push(study.hypervolume(&f.ref_point).expect("hypervolume"));
+    }
+    hvs
+}
+
+fn main() {
+    let quick = std::env::var("MOO_QUICK").is_ok();
+    let repeats = env_usize("MOO_REPEATS", if quick { 3 } else { 10 });
+    let budget = env_usize("MOO_BUDGET", if quick { 60 } else { 200 });
+    let checkpoints: Vec<usize> = [budget / 4, budget / 2, budget]
+        .iter()
+        .copied()
+        .filter(|&b| b > 0)
+        .collect();
+
+    let mut rows: Vec<(String, String, usize, f64, f64)> = Vec::new();
+    for f in moo_functions() {
+        print_header(
+            &format!("{} (d={}, m={})", f.name, f.dim, f.n_obj),
+            &["sampler", "trials", "mean HV", "sem"],
+        );
+        for sampler_kind in ["random", "nsga2"] {
+            let mut per_checkpoint: Vec<Vec<f64>> = vec![Vec::new(); checkpoints.len()];
+            for rep in 0..repeats {
+                let seed = 1000 + rep as u64;
+                let hvs = run_study(
+                    &f,
+                    make_moo_sampler(sampler_kind, seed),
+                    &checkpoints,
+                    &format!("{sampler_kind}-{rep}"),
+                );
+                for (slot, hv) in hvs.into_iter().enumerate() {
+                    per_checkpoint[slot].push(hv);
+                }
+            }
+            for (slot, &trials) in checkpoints.iter().enumerate() {
+                let m = mean(&per_checkpoint[slot]);
+                let s = optuna_rs::util::stats::sem(&per_checkpoint[slot]);
+                println!("{sampler_kind} | {trials} | {m:.4} | {s:.4}");
+                rows.push((f.name.to_string(), sampler_kind.to_string(), trials, m, s));
+            }
+        }
+    }
+    write_bench_moo_json(&rows);
+}
+
+/// Machine-readable results for CI artifacts (ISSUE 4: NSGA-II must beat
+/// random on final hypervolume; the JSON keeps the trend auditable).
+fn write_bench_moo_json(rows: &[(String, String, usize, f64, f64)]) {
+    let path =
+        std::env::var("BENCH_MOO_JSON").unwrap_or_else(|_| "BENCH_moo.json".to_string());
+    let mut body = String::from(
+        "{\n  \"bench\": \"moo_hypervolume\",\n  \"unit\": \"hypervolume\",\n  \"rows\": [\n",
+    );
+    for (i, (function, sampler, trials, m, s)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        body.push_str(&format!(
+            "    {{\"function\": \"{function}\", \"sampler\": \"{sampler}\", \
+             \"n_trials\": {trials}, \"mean_hv\": {m:.6}, \"sem\": {s:.6}}}{comma}\n"
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

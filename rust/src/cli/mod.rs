@@ -27,6 +27,7 @@
 //!   budget completed, zero stranded Running/Waiting trials.
 
 use crate::core::{OptunaError, StudyDirection, TrialState};
+use crate::multi::{hypervolume, to_losses, NsgaIiSampler};
 use crate::pruner::{AshaPruner, HyperbandPruner, MedianPruner, NopPruner, Pruner};
 use crate::sampler::{
     CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
@@ -77,11 +78,13 @@ impl Args {
 }
 
 fn usage() -> String {
-    "usage: optuna <create-study|optimize|worker|distributed|best|export|dashboard|studies> \
+    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies> \
      --storage <memory:|journal://PATH> --study NAME \
-     [--direction minimize|maximize] [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf] \
+     [--direction minimize|maximize] [--directions minimize,maximize,..] \
+     [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2] \
      [--pruner none|asha|median|hyperband] [--trials N] [--seed N] \
-     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate] [--out FILE] \
+     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate|zdt1|zdt2|dtlz2] [--out FILE] \
+     [--ref V0,V1,..] \
      [--heartbeat-ms N] [--grace-ms N] [--max-retry N] [--trial-sleep-ms N] \
      [--workers N] [--kill-one true] [--timeout-ms N]"
         .to_string()
@@ -106,6 +109,7 @@ pub fn make_sampler(kind: &str, seed: u64) -> Result<Arc<dyn Sampler>, String> {
         "tpe+cmaes" => Arc::new(TpeCmaEsSampler::new(seed)),
         "gp" => Arc::new(GpSampler::new(seed)),
         "rf" => Arc::new(RfSampler::new(seed)),
+        "nsga2" => Arc::new(NsgaIiSampler::new(seed)),
         other => return Err(format!("unknown sampler '{other}'")),
     })
 }
@@ -155,6 +159,25 @@ fn parse_failover(
     }))
 }
 
+/// Parse an explicit `--directions a,b,..` (or scalar `--direction`) flag;
+/// `Ok(None)` when neither was given.
+fn parse_directions(args: &Args) -> Result<Option<Vec<StudyDirection>>, String> {
+    if let Some(list) = args.get("directions") {
+        let dirs = list
+            .split(',')
+            .map(|s| StudyDirection::from_str(s.trim()).map_err(|e| e.to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        if dirs.is_empty() {
+            return Err("--directions needs at least one direction".into());
+        }
+        return Ok(Some(dirs));
+    }
+    if let Some(d) = args.get("direction") {
+        return Ok(Some(vec![StudyDirection::from_str(d).map_err(|e| e.to_string())?]));
+    }
+    Ok(None)
+}
+
 fn build_study(
     args: &Args,
     create: bool,
@@ -162,15 +185,25 @@ fn build_study(
 ) -> Result<Study, String> {
     let storage = open_storage(args.require("storage")?)?;
     let name = args.require("study")?.to_string();
-    let direction = StudyDirection::from_str(&args.get_or("direction", "minimize"))
-        .map_err(|e| e.to_string())?;
-    if !create && storage.get_study_id(&name).map_err(|e| e.to_string())?.is_none() {
+    let existing = storage.get_study_id(&name).map_err(|e| e.to_string())?;
+    if !create && existing.is_none() {
         return Err(format!("study '{name}' does not exist in this storage"));
     }
+    // explicit flags win (and must match an existing study — the builder
+    // enforces that); otherwise joining a study inherits its stored
+    // directions, so read-only commands (best/pareto/export/dashboard)
+    // never need the flag repeated
+    let directions = match parse_directions(args)? {
+        Some(dirs) => dirs,
+        None => match existing {
+            Some(id) => storage.get_study_directions(id).map_err(|e| e.to_string())?,
+            None => vec![StudyDirection::Minimize],
+        },
+    };
     let seed: u64 = args.get_or("seed", "42").parse().map_err(|e| format!("bad --seed: {e}"))?;
     let mut builder = Study::builder()
         .name(&name)
-        .direction(direction)
+        .directions(&directions)
         .storage(storage)
         .sampler(make_sampler(&args.get_or("sampler", "tpe"), seed)?)
         .pruner(make_pruner(&args.get_or("pruner", "none"))?);
@@ -232,6 +265,21 @@ fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), Op
     study.optimize(n_trials, move |t| obj(t))
 }
 
+/// A boxed multi-objective CLI objective.
+type MooObjective = Box<dyn Fn(&mut Trial<'_>) -> Result<Vec<f64>, OptunaError> + Send + Sync>;
+
+/// Multi-objective workloads (the evalset MOO table): `None` when the
+/// workload is single-objective. Returns the objective, its arity, and
+/// the function's hypervolume reference point.
+fn moo_workload_objective(workload: &str) -> Option<(MooObjective, usize, Vec<f64>)> {
+    let f = crate::workloads::evalset::moo_functions()
+        .into_iter()
+        .find(|f| f.name == workload)?;
+    let (n_obj, ref_point) = (f.n_obj, f.ref_point.clone());
+    let objective: MooObjective = Box::new(move |t: &mut Trial<'_>| f.objective(t));
+    Some((objective, n_obj, ref_point))
+}
+
 /// Entry point; returns the process exit code.
 pub fn run(argv: &[String]) -> i32 {
     match run_inner(argv) {
@@ -252,19 +300,61 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
         "create-study" => {
             let storage = open_storage(args.require("storage")?)?;
             let name = args.require("study")?;
-            let direction = StudyDirection::from_str(&args.get_or("direction", "minimize"))
-                .map_err(|e| e.to_string())?;
-            crate::storage::get_or_create_study(storage.as_ref(), name, direction)
+            let directions = parse_directions(&args)?
+                .unwrap_or_else(|| vec![StudyDirection::Minimize]);
+            crate::storage::get_or_create_study_multi(storage.as_ref(), name, &directions)
                 .map_err(|e| e.to_string())?;
             Ok(format!("{name}\n"))
         }
         "optimize" => {
-            let study = build_study(&args, false, None)?;
             let n_trials: usize = args
                 .get_or("trials", "20")
                 .parse()
                 .map_err(|e| format!("bad --trials: {e}"))?;
             let workload = args.get_or("workload", "quadratic");
+            let study = build_study(&args, false, None)?;
+            if let Some((objective, n_obj, ref_point)) = moo_workload_objective(&workload) {
+                if study.n_objectives() != n_obj {
+                    return Err(format!(
+                        "workload '{workload}' has {n_obj} objectives but study \
+                         '{}' has {} — create it with --directions",
+                        study.name,
+                        study.n_objectives()
+                    ));
+                }
+                // the evalset MOO table defines all objectives as
+                // minimized; a maximize direction would silently invert
+                // an objective's front and zero the hypervolume
+                if study.directions.iter().any(|d| *d != StudyDirection::Minimize) {
+                    return Err(format!(
+                        "workload '{workload}' minimizes every objective but study \
+                         '{}' has directions [{}]",
+                        study.name,
+                        study
+                            .directions
+                            .iter()
+                            .map(|d| d.as_str())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ));
+                }
+                study
+                    .optimize_multi(n_trials, move |t| objective(t))
+                    .map_err(|e| e.to_string())?;
+                // one front computation serves both outputs
+                let front = study.best_trials().map_err(|e| e.to_string())?;
+                let points: Vec<Vec<f64>> = front
+                    .iter()
+                    .map(|t| to_losses(&t.objective_values(), &study.directions))
+                    .collect();
+                let hv = hypervolume(&points, &to_losses(&ref_point, &study.directions))
+                    .map_err(|e| e.to_string())?;
+                return Ok(format!(
+                    "completed {n_trials} trials on '{workload}'; \
+                     pareto front = {} trial(s), hypervolume = {hv:.4}\n",
+                    front.len()
+                ));
+            }
             run_workload(&study, &workload, n_trials).map_err(|e| e.to_string())?;
             let best = study.best_value().map_err(|e| e.to_string())?;
             Ok(format!(
@@ -274,7 +364,17 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
         }
         "worker" => {
             // fault-tolerant budget-cooperating worker (failover defaults
-            // on; flags override)
+            // on; flags override). Single-objective only: the exact-budget
+            // loop ranks by one value — say so instead of "unknown
+            // workload" when given a MOO workload.
+            if let Some(w) = args.get("workload") {
+                if moo_workload_objective(w).is_some() {
+                    return Err(format!(
+                        "workload '{w}' is multi-objective; `worker`/`distributed` \
+                         are single-objective loops — run it via `optimize`"
+                    ));
+                }
+            }
             let study = build_study(
                 &args,
                 false,
@@ -325,6 +425,59 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
                     Ok(out)
                 }
             }
+        }
+        "pareto" => {
+            // print (and optionally export) the Pareto front; with --ref
+            // also report the exact hypervolume
+            let study = build_study(&args, false, None)?;
+            let front = study.best_trials().map_err(|e| e.to_string())?;
+            let mut out = format!(
+                "pareto front of '{}': {} trial(s), {} objective(s)\n",
+                study.name,
+                front.len(),
+                study.n_objectives()
+            );
+            for t in &front {
+                let values = t
+                    .objective_values()
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                out.push_str(&format!("trial #{} values [{values}]\n", t.number));
+                for (name, _) in t.params.iter() {
+                    out.push_str(&format!("  {name} = {}\n", t.param(name).unwrap()));
+                }
+            }
+            // --ref and --out both reuse the front computed above — the
+            // O(N²) nondominated sort and the storage snapshot run once
+            // per invocation, not once per output
+            if let Some(spec) = args.get("ref") {
+                let ref_point: Vec<f64> = spec
+                    .split(',')
+                    .map(|s| s.trim().parse().map_err(|e| format!("bad --ref: {e}")))
+                    .collect::<Result<_, _>>()?;
+                if ref_point.len() != study.n_objectives() {
+                    return Err(format!(
+                        "--ref has {} coordinates, study has {} objectives",
+                        ref_point.len(),
+                        study.n_objectives()
+                    ));
+                }
+                let reference = to_losses(&ref_point, &study.directions);
+                let points: Vec<Vec<f64>> = front
+                    .iter()
+                    .map(|t| to_losses(&t.objective_values(), &study.directions))
+                    .collect();
+                let hv = hypervolume(&points, &reference).map_err(|e| e.to_string())?;
+                out.push_str(&format!("hypervolume at [{spec}] = {hv}\n"));
+            }
+            if let Some(path) = args.get("out") {
+                let csv = crate::study::trials_to_csv(&front, study.n_objectives());
+                std::fs::write(path, &csv).map_err(|e| e.to_string())?;
+                out.push_str(&format!("wrote {path}\n"));
+            }
+            Ok(out)
         }
         "export" => {
             let study = build_study(&args, false, None)?;
@@ -394,6 +547,12 @@ fn run_distributed(args: &Args) -> Result<String, String> {
         .parse()
         .map_err(|e| format!("bad --timeout-ms: {e}"))?;
     let workload = args.get_or("workload", "quadratic");
+    if moo_workload_objective(&workload).is_some() {
+        return Err(format!(
+            "workload '{workload}' is multi-objective; `worker`/`distributed` \
+             are single-objective loops — run it via `optimize`"
+        ));
+    }
     let sampler = args.get_or("sampler", "tpe");
     let pruner = args.get_or("pruner", "none");
 
@@ -627,6 +786,97 @@ mod tests {
         assert!(out2.contains("done"), "{out2}");
         let csv = run_inner(&argv(&["export", "--storage", &url, "--study", "w1"])).unwrap();
         assert_eq!(csv.lines().count(), 9, "header + exactly 8 trials:\n{csv}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn multi_objective_cli_flow() {
+        let url = tmp_journal("moo");
+        let out = run_inner(&argv(&[
+            "create-study", "--storage", &url, "--study", "m1",
+            "--directions", "minimize,minimize",
+        ]))
+        .unwrap();
+        assert_eq!(out, "m1\n");
+        // optimize a 2-objective workload; directions inherited from storage
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "m1", "--trials", "6",
+            "--workload", "zdt1", "--sampler", "nsga2", "--seed", "5",
+        ]))
+        .unwrap();
+        assert!(out.contains("pareto front ="), "{out}");
+        assert!(out.contains("hypervolume ="), "{out}");
+        // pareto prints the front and the hypervolume at a reference
+        let out = run_inner(&argv(&[
+            "pareto", "--storage", &url, "--study", "m1", "--ref", "1.1,11.0",
+        ]))
+        .unwrap();
+        assert!(out.contains("pareto front of 'm1'"), "{out}");
+        assert!(out.contains("2 objective(s)"), "{out}");
+        assert!(out.contains("values ["), "{out}");
+        assert!(out.contains("hypervolume at [1.1,11.0]"), "{out}");
+        // export carries one value column per objective
+        let csv = run_inner(&argv(&["export", "--storage", &url, "--study", "m1"])).unwrap();
+        assert!(csv.starts_with("number,state,value_0,value_1,"), "{csv}");
+        assert_eq!(csv.lines().count(), 7, "header + 6 trials:\n{csv}");
+        // `best` refuses with the typed multi-objective error
+        let err = run_inner(&argv(&["best", "--storage", &url, "--study", "m1"])).unwrap_err();
+        assert!(err.contains("multi-objective"), "{err}");
+        // arity mismatch between workload and study is caught up front
+        let err = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "m1", "--trials", "1",
+            "--workload", "dtlz2",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("3 objectives"), "{err}");
+        // the single-objective worker loop names the real restriction
+        // instead of claiming the workload is unknown
+        let err = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "m1", "--trials", "1",
+            "--workload", "zdt1",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("single-objective"), "{err}");
+        // wrong per-objective direction is refused, not silently inverted
+        run_inner(&argv(&[
+            "create-study", "--storage", &url, "--study", "m2",
+            "--directions", "minimize,maximize",
+        ]))
+        .unwrap();
+        let err = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "m2", "--trials", "1",
+            "--workload", "zdt1",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("minimizes every objective"), "{err}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn pareto_out_writes_front_csv() {
+        let url = tmp_journal("pareto_out");
+        run_inner(&argv(&[
+            "create-study", "--storage", &url, "--study", "p1",
+            "--directions", "minimize,minimize",
+        ]))
+        .unwrap();
+        run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "p1", "--trials", "5",
+            "--workload", "zdt2", "--sampler", "random", "--seed", "1",
+        ]))
+        .unwrap();
+        let out_path = std::env::temp_dir()
+            .join(format!("optuna_cli_front_{}.csv", std::process::id()));
+        let out = run_inner(&argv(&[
+            "pareto", "--storage", &url, "--study", "p1",
+            "--out", out_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.contains("wrote "), "{out}");
+        let csv = std::fs::read_to_string(&out_path).unwrap();
+        assert!(csv.starts_with("number,state,value_0,value_1,"), "{csv}");
+        assert!(csv.lines().count() >= 2, "front has at least one member:\n{csv}");
+        std::fs::remove_file(out_path).ok();
         std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
     }
 

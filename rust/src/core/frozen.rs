@@ -14,8 +14,17 @@ pub struct FrozenTrial {
     pub number: u64,
     pub state: TrialState,
     /// Final objective value (set when state is Complete; pruned trials may
-    /// carry their last intermediate value).
+    /// carry their last intermediate value). On a multi-objective trial
+    /// this is objective 0 — the scalar accessor single-objective call
+    /// sites (samplers, pruners, obs_index ingest) keep reading.
     pub value: Option<f64>,
+    /// The full objective vector of a multi-objective trial, ordered by
+    /// objective index; empty for single-objective records (including
+    /// everything replayed from pre-`values` journals). When non-empty,
+    /// `value == Some(values[0])` — backends maintain the invariant in
+    /// `finish_trial_values`. Read through [`FrozenTrial::objective_values`],
+    /// which folds the scalar fallback in.
+    pub values: Vec<f64>,
     /// name → (distribution, internal representation). BTreeMap gives
     /// deterministic iteration for samplers.
     pub params: BTreeMap<String, (Distribution, f64)>,
@@ -44,6 +53,7 @@ impl FrozenTrial {
             number,
             state: TrialState::Running,
             value: None,
+            values: Vec::new(),
             params: BTreeMap::new(),
             intermediate: BTreeMap::new(),
             user_attrs: BTreeMap::new(),
@@ -51,6 +61,25 @@ impl FrozenTrial {
             datetime_complete: None,
             last_heartbeat: None,
         }
+    }
+
+    /// The trial's objective vector: `values` when a vector was recorded,
+    /// else the scalar `value` as a 1-vector, else empty. This is the one
+    /// reader multi-objective code uses — it makes single- and
+    /// multi-objective records uniform.
+    pub fn objective_values(&self) -> Vec<f64> {
+        if !self.values.is_empty() {
+            self.values.clone()
+        } else {
+            self.value.map(|v| vec![v]).unwrap_or_default()
+        }
+    }
+
+    /// Install an objective vector, keeping the `value == values[0]`
+    /// invariant (the scalar mirror single-objective readers see).
+    pub fn set_values(&mut self, vals: &[f64]) {
+        self.value = vals.first().copied();
+        self.values = if vals.len() > 1 { vals.to_vec() } else { Vec::new() };
     }
 
     /// Epoch milliseconds of the most recent liveness evidence: the last
@@ -147,6 +176,29 @@ mod tests {
     fn require_value_errors_when_missing() {
         let t = FrozenTrial::new(0, 0);
         assert!(t.require_value().is_err());
+    }
+
+    #[test]
+    fn objective_values_scalar_and_vector_views() {
+        let mut t = FrozenTrial::new(0, 0);
+        assert!(t.objective_values().is_empty());
+        // scalar path: `values` stays empty, the Option mirrors it
+        t.set_values(&[0.5]);
+        assert_eq!(t.value, Some(0.5));
+        assert!(t.values.is_empty());
+        assert_eq!(t.objective_values(), vec![0.5]);
+        // vector path: objective 0 mirrored into `value`
+        t.set_values(&[0.5, 2.0]);
+        assert_eq!(t.value, Some(0.5));
+        assert_eq!(t.values, vec![0.5, 2.0]);
+        assert_eq!(t.objective_values(), vec![0.5, 2.0]);
+        // records written through the old scalar API still read uniformly
+        let mut old = FrozenTrial::new(1, 1);
+        old.value = Some(7.0);
+        assert_eq!(old.objective_values(), vec![7.0]);
+        t.set_values(&[]);
+        assert_eq!(t.value, None);
+        assert!(t.objective_values().is_empty());
     }
 
     #[test]

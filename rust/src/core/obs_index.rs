@@ -294,6 +294,13 @@ struct TrialTrack {
 /// The mutable index: advances an `Arc`'d [`IndexSnapshot`] from storage
 /// deltas. One per `Study`, behind a mutex; see the module docs for the
 /// consistency contract.
+///
+/// Multi-objective studies: the index is a *single-objective* decision
+/// structure — it ingests the scalar [`FrozenTrial::value`] mirror, i.e.
+/// objective 0 under `directions[0]`. That keeps TPE/pruner columns
+/// well-defined (and cheap) on vector-valued studies; the multi-objective
+/// decision layer ([`crate::multi`]) reads full vectors from the trial
+/// snapshot instead.
 #[derive(Debug)]
 pub struct ObservationIndex {
     direction: StudyDirection,

@@ -135,6 +135,11 @@ pub enum OptunaError {
     Conflict(String),
     /// Suggest API misuse (e.g. same name with a different distribution).
     InvalidParam(String),
+    /// A single-objective API (`best_trial`, `best_value`, scalar `tell`)
+    /// was called on a multi-objective study, or vice versa. There is no
+    /// single "best" trial under a vector objective — use
+    /// `Study::best_trials` (the Pareto front) instead.
+    MultiObjective(String),
     /// Signal that the running trial should be pruned (raised by
     /// `Trial::should_prune` users; caught by `Study::optimize`).
     TrialPruned,
@@ -150,6 +155,7 @@ impl fmt::Display for OptunaError {
             OptunaError::Storage(m) => write!(f, "storage error: {m}"),
             OptunaError::Conflict(m) => write!(f, "storage conflict: {m}"),
             OptunaError::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
+            OptunaError::MultiObjective(m) => write!(f, "multi-objective misuse: {m}"),
             OptunaError::TrialPruned => write!(f, "trial pruned"),
             OptunaError::Objective(m) => write!(f, "objective error: {m}"),
             OptunaError::Runtime(m) => write!(f, "runtime error: {m}"),

@@ -24,6 +24,37 @@ fn polyline(points: &[(f64, f64)], stroke: &str) -> String {
     )
 }
 
+/// Human-readable wall-clock duration from epoch-ms start/complete stamps
+/// (empty when either stamp is missing, e.g. pre-timestamp journals).
+fn fmt_duration(start: Option<u64>, complete: Option<u64>) -> String {
+    match (start, complete) {
+        (Some(s), Some(c)) if c >= s => {
+            let ms = c - s;
+            if ms < 1000 {
+                format!("{ms}ms")
+            } else {
+                format!("{:.1}s", ms as f64 / 1000.0)
+            }
+        }
+        _ => String::new(),
+    }
+}
+
+/// The trial's objective cell: the scalar value, or all values of a
+/// multi-objective trial joined with `;`.
+fn fmt_values(t: &crate::core::FrozenTrial) -> String {
+    let values = t.objective_values();
+    match values.len() {
+        0 => String::new(),
+        1 => format!("{:.6}", values[0]),
+        _ => values
+            .iter()
+            .map(|v| format!("{v:.6}"))
+            .collect::<Vec<_>>()
+            .join("; "),
+    }
+}
+
 /// Render the study report.
 pub fn render_html(study: &Study) -> Result<String, OptunaError> {
     let trials = study.trials()?;
@@ -46,7 +77,12 @@ pub fn render_html(study: &Study) -> Result<String, OptunaError> {
          .pruned{{color:#b65}}.complete{{color:#276}}h2{{margin-top:1.5em}}</style>\
          </head><body><h1>Study: {name} ({dir})</h1>",
         name = study.name,
-        dir = study.direction.as_str()
+        dir = study
+            .directions
+            .iter()
+            .map(|d| d.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
     );
 
     // ---- optimization history ------------------------------------------
@@ -183,21 +219,96 @@ pub fn render_html(study: &Study) -> Result<String, OptunaError> {
         );
     }
 
+    // ---- Pareto front (multi-objective studies) --------------------------
+    if study.is_multi_objective() {
+        let front = study.best_trials()?;
+        let front_numbers: std::collections::HashSet<u64> =
+            front.iter().map(|t| t.number).collect();
+        let _ = write!(
+            html,
+            "<h2>Pareto front ({} of {} completed trials)</h2>",
+            front.len(),
+            trials.iter().filter(|t| t.state == TrialState::Complete).count()
+        );
+        // objective-space scatter for the 2-objective case: dominated
+        // trials in grey, the front highlighted
+        if study.n_objectives() == 2 {
+            let pts: Vec<(u64, f64, f64)> = trials
+                .iter()
+                .filter(|t| t.state == TrialState::Complete)
+                .filter_map(|t| {
+                    let v = t.objective_values();
+                    // non-finite values would render as cx='NaN' — skip
+                    (v.len() == 2 && v.iter().all(|x| x.is_finite()))
+                        .then(|| (t.number, v[0], v[1]))
+                })
+                .collect();
+            if !pts.is_empty() {
+                let (xlo, xhi) = pts
+                    .iter()
+                    .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), p| {
+                        (l.min(p.1), h.max(p.1))
+                    });
+                let (ylo, yhi) = pts
+                    .iter()
+                    .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), p| {
+                        (l.min(p.2), h.max(p.2))
+                    });
+                let mut dots = String::new();
+                for (num, v0, v1) in &pts {
+                    let x = if xhi > xlo { (v0 - xlo) / (xhi - xlo) * w } else { w / 2.0 };
+                    let y = y_of(*v1, ylo, yhi, h);
+                    let (color, r) = if front_numbers.contains(num) {
+                        ("#3355cc", 3.0)
+                    } else {
+                        ("#bbbbbb", 2.0)
+                    };
+                    let _ = write!(
+                        dots,
+                        "<circle cx='{x:.1}' cy='{y:.1}' r='{r}' fill='{color}'/>"
+                    );
+                }
+                let _ = write!(
+                    html,
+                    "<svg width='{w}' height='{h}' style='background:#fafafa;\
+                     border:1px solid #ddd'>{dots}</svg>\
+                     <div>objective 0 → / objective 1 ↑; front in blue</div>"
+                );
+            }
+        }
+        let _ = write!(html, "<table><tr><th>#</th><th>values</th></tr>");
+        for t in front.iter().take(200) {
+            let _ = write!(
+                html,
+                "<tr><td>{}</td><td>{}</td></tr>",
+                t.number,
+                fmt_values(t)
+            );
+        }
+        html.push_str("</table>");
+    }
+
     // ---- trials table -----------------------------------------------------
     let _ = write!(
         html,
-        "<h2>Trials ({} total)</h2><table><tr><th>#</th><th>state</th><th>value</th>{}</tr>",
+        "<h2>Trials ({} total)</h2><table><tr><th>#</th><th>state</th><th>value</th>\
+         <th>start</th><th>end</th><th>duration</th><th>retries</th>{}</tr>",
         trials.len(),
         names.iter().map(|n| format!("<th>{n}</th>")).collect::<String>()
     );
     for t in trials.iter().take(500) {
         let _ = write!(
             html,
-            "<tr class='{cls}'><td>{num}</td><td>{state}</td><td>{val}</td>{cells}</tr>",
+            "<tr class='{cls}'><td>{num}</td><td>{state}</td><td>{val}</td>\
+             <td>{start}</td><td>{end}</td><td>{dur}</td><td>{retries}</td>{cells}</tr>",
             cls = t.state.as_str(),
             num = t.number,
             state = t.state.as_str(),
-            val = t.value.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            val = fmt_values(t),
+            start = t.datetime_start.map(|m| m.to_string()).unwrap_or_default(),
+            end = t.datetime_complete.map(|m| m.to_string()).unwrap_or_default(),
+            dur = fmt_duration(t.datetime_start, t.datetime_complete),
+            retries = t.retry_count(),
             cells = names
                 .iter()
                 .map(|n| format!(
@@ -260,5 +371,49 @@ mod tests {
         let study = Study::builder().name("empty").build().unwrap();
         let html = render_html(&study).unwrap();
         assert!(html.contains("Trials (0 total)"));
+    }
+
+    #[test]
+    fn trial_rows_carry_timestamps_durations_and_retries() {
+        let study = demo_study();
+        let html = render_html(&study).unwrap();
+        for th in ["<th>start</th>", "<th>end</th>", "<th>duration</th>", "<th>retries</th>"] {
+            assert!(html.contains(th), "missing column {th}");
+        }
+        // in-memory trials are stamped, so durations must render
+        assert!(
+            html.contains("ms</td>") || html.contains("s</td>"),
+            "no rendered duration found"
+        );
+        // completed trials all have retry count 0 here
+        assert!(html.contains("<td>0</td>"));
+    }
+
+    #[test]
+    fn multi_objective_study_renders_pareto_front() {
+        let study = Study::builder()
+            .name("dash-moo")
+            .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+            .sampler(Arc::new(RandomSampler::new(3)))
+            .build()
+            .unwrap();
+        study
+            .optimize_multi(20, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                let y = t.suggest_float("y", 0.0, 1.0)?;
+                Ok(vec![x + 0.1 * y, 1.0 - x + 0.1 * y])
+            })
+            .unwrap();
+        let html = render_html(&study).unwrap();
+        assert!(html.contains("minimize, minimize"), "all directions in the title");
+        assert!(html.contains("Pareto front ("), "front section present");
+        assert!(html.contains("front in blue"), "2-objective scatter present");
+        // multi-objective value cells join both objectives
+        assert!(html.contains("; "), "joined objective values");
+        assert_eq!(html.matches("<table>").count(), html.matches("</table>").count());
+        assert_eq!(html.matches("<svg").count(), html.matches("</svg>").count());
+        // single-objective studies render no front section
+        let single = demo_study();
+        assert!(!render_html(&single).unwrap().contains("Pareto front ("));
     }
 }

@@ -62,6 +62,7 @@ pub mod cli;
 pub mod dashboard;
 
 pub mod mlmodel;
+pub mod multi;
 pub mod pruner;
 pub mod runtime;
 pub mod sampler;
@@ -75,6 +76,7 @@ pub mod prelude {
     pub use crate::core::{
         Distribution, FrozenTrial, OptunaError, ParamValue, StudyDirection, TrialState,
     };
+    pub use crate::multi::{NsgaIiConfig, NsgaIiSampler};
     pub use crate::pruner::{
         AshaPruner, HyperbandPruner, MedianPruner, NopPruner, PercentilePruner, Pruner,
         SyncHalvingPruner,

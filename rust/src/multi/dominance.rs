@@ -1,0 +1,57 @@
+//! Pareto dominance over minimization losses.
+
+use std::cmp::Ordering;
+
+use crate::util::stats::nan_max_cmp;
+
+/// True iff loss vector `a` Pareto-dominates `b`: no worse in every
+/// objective and strictly better in at least one. Both vectors are
+/// minimization losses (see [`crate::multi::to_losses`]) of equal length.
+///
+/// NaN-safe per [`nan_max_cmp`]: a NaN loss is the worst possible value
+/// in its objective, so a vector with a NaN component can only dominate
+/// vectors that are NaN there too — and equal-NaN components compare
+/// equal instead of poisoning the comparison.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        match nan_max_cmp(x, y) {
+            Ordering::Greater => return false,
+            Ordering::Less => strictly_better = true,
+            Ordering::Equal => {}
+        }
+    }
+    strictly_better
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strict_and_weak_cases() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]), "equal in one, better in other");
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal vectors do not dominate");
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "trade-off: incomparable");
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn single_objective_reduces_to_less_than() {
+        assert!(dominates(&[1.0], &[2.0]));
+        assert!(!dominates(&[2.0], &[1.0]));
+        assert!(!dominates(&[1.0], &[1.0]));
+    }
+
+    #[test]
+    fn nan_ranks_worst_not_poisonous() {
+        // NaN component: can be dominated, cannot dominate a finite value
+        assert!(dominates(&[1.0, 1.0], &[1.0, f64::NAN]));
+        assert!(!dominates(&[1.0, f64::NAN], &[1.0, 1.0]));
+        // equal NaNs compare equal: the finite objective decides
+        assert!(dominates(&[1.0, f64::NAN], &[2.0, f64::NAN]));
+        assert!(!dominates(&[f64::NAN, f64::NAN], &[f64::NAN, f64::NAN]));
+    }
+}

@@ -1,0 +1,267 @@
+//! Exact hypervolume indicator for 1–3 objectives.
+//!
+//! Hypervolume of a point set `P` w.r.t. a reference point `r` (all in
+//! minimization-loss space): the Lebesgue measure of
+//! `⋃_{p ∈ P} [p, r]` — the region dominated by at least one point and
+//! bounded by the reference. It is the standard strictly-Pareto-compliant
+//! quality indicator, which is what makes the NSGA-II-beats-random
+//! acceptance gate of `rust/tests/moo.rs` meaningful.
+//!
+//! * d=1 — `r - min(p)`.
+//! * d=2 — WFG-style sweep: sort the nondominated set ascending by the
+//!   first loss (second loss then descends) and sum the disjoint strips.
+//! * d=3 — slicing: sweep the third axis over the points' distinct
+//!   values; each slab contributes `(z_next - z_k) × HV2(points with
+//!   loss₂ ≤ z_k)`.
+//!
+//! Points that do not strictly dominate the reference point (including
+//! any with a NaN loss, which ranks worst) contribute nothing and are
+//! filtered up front. Higher dimensions need an exponential-in-d
+//! algorithm (WFG/HBDA) and return an error rather than a wrong number.
+
+use crate::core::OptunaError;
+use crate::multi::dominance::dominates;
+use crate::util::stats::nan_max_cmp;
+
+/// Exact hypervolume of `points` (minimization losses) w.r.t. `reference`.
+/// Supports 1, 2 or 3 objectives; every point must have the reference's
+/// length. Returns 0.0 when no point strictly dominates the reference.
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> Result<f64, OptunaError> {
+    let d = reference.len();
+    if d == 0 || d > 3 {
+        return Err(OptunaError::MultiObjective(format!(
+            "exact hypervolume supports 1-3 objectives, got {d}"
+        )));
+    }
+    for p in points {
+        if p.len() != d {
+            return Err(OptunaError::MultiObjective(format!(
+                "hypervolume point has {} objectives, reference has {d}",
+                p.len()
+            )));
+        }
+    }
+    // only points strictly inside the reference box contribute volume
+    // (NaN losses fail the < comparison and drop out here)
+    let inside: Vec<&[f64]> = points
+        .iter()
+        .map(|p| p.as_slice())
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+        .collect();
+    Ok(match d {
+        1 => inside
+            .iter()
+            .map(|p| reference[0] - p[0])
+            .fold(0.0, f64::max),
+        2 => hv2(&inside, reference[0], reference[1]),
+        _ => hv3(&inside, reference),
+    })
+}
+
+/// 2-d sweep over the nondominated subset. `points` are strictly inside
+/// the (r0, r1) box.
+fn hv2(points: &[&[f64]], r0: f64, r1: f64) -> f64 {
+    let mut front = pareto_filter(points);
+    // ascending loss 0 ⇒ (strictly) descending loss 1 on a nondominated set
+    front.sort_by(|a, b| nan_max_cmp(&a[0], &b[0]));
+    let mut hv = 0.0;
+    let mut prev1 = r1;
+    for p in front {
+        hv += (r0 - p[0]) * (prev1 - p[1]);
+        prev1 = p[1];
+    }
+    hv
+}
+
+/// 3-d slicing along the third axis.
+fn hv3(points: &[&[f64]], reference: &[f64]) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let mut zs: Vec<f64> = points.iter().map(|p| p[2]).collect();
+    zs.sort_by(nan_max_cmp);
+    zs.dedup();
+    let mut hv = 0.0;
+    for (k, &z) in zs.iter().enumerate() {
+        let z_next = zs.get(k + 1).copied().unwrap_or(reference[2]);
+        let slab = z_next - z;
+        if slab <= 0.0 {
+            continue;
+        }
+        let active: Vec<&[f64]> = points
+            .iter()
+            .copied()
+            .filter(|p| p[2] <= z)
+            .map(|p| &p[..2])
+            .collect();
+        hv += slab * hv2(&active, reference[0], reference[1]);
+    }
+    hv
+}
+
+/// Drop dominated (and duplicate) points — the sweeps assume a
+/// mutually-nondominated input.
+fn pareto_filter<'a>(points: &[&'a [f64]]) -> Vec<&'a [f64]> {
+    let mut kept: Vec<&[f64]> = Vec::with_capacity(points.len());
+    'outer: for &p in points {
+        for &q in points {
+            if !std::ptr::eq(p, q) && dominates(q, p) {
+                continue 'outer;
+            }
+        }
+        if kept
+            .iter()
+            .any(|&k| k.iter().zip(p).all(|(a, b)| nan_max_cmp(a, b) == std::cmp::Ordering::Equal))
+        {
+            continue; // exact duplicate already counted
+        }
+        kept.push(p);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::quickcheck::check;
+
+    fn hv(points: &[Vec<f64>], r: &[f64]) -> f64 {
+        hypervolume(points, r).unwrap()
+    }
+
+    /// Brute-force HV by coordinate compression: a grid cell is covered
+    /// iff some point is ≤ its lower corner in every objective. Exact for
+    /// any dimension; O(n^(d+1)) — test-only.
+    fn hv_brute(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+        let d = reference.len();
+        let inside: Vec<&Vec<f64>> = points
+            .iter()
+            .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+            .collect();
+        if inside.is_empty() {
+            return 0.0;
+        }
+        // per-axis sorted breakpoints: point coords + reference
+        let mut axes: Vec<Vec<f64>> = Vec::with_capacity(d);
+        for m in 0..d {
+            let mut xs: Vec<f64> = inside.iter().map(|p| p[m]).collect();
+            xs.push(reference[m]);
+            xs.sort_by(nan_max_cmp);
+            xs.dedup();
+            axes.push(xs);
+        }
+        // iterate all cells via mixed-radix counter over axis intervals
+        let radix: Vec<usize> = axes.iter().map(|a| a.len() - 1).collect();
+        if radix.iter().any(|&r| r == 0) {
+            return 0.0;
+        }
+        let mut idx = vec![0usize; d];
+        let mut total = 0.0;
+        loop {
+            let corner: Vec<f64> = (0..d).map(|m| axes[m][idx[m]]).collect();
+            if inside
+                .iter()
+                .any(|p| p.iter().zip(&corner).all(|(a, b)| a <= b))
+            {
+                let vol: f64 = (0..d).map(|m| axes[m][idx[m] + 1] - axes[m][idx[m]]).product();
+                total += vol;
+            }
+            // increment counter
+            let mut m = 0;
+            loop {
+                idx[m] += 1;
+                if idx[m] < radix[m] {
+                    break;
+                }
+                idx[m] = 0;
+                m += 1;
+                if m == d {
+                    return total;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_point_is_its_box() {
+        assert_eq!(hv(&[vec![1.0, 1.0]], &[2.0, 3.0]), 2.0);
+        assert_eq!(hv(&[vec![0.5]], &[2.0]), 1.5);
+        assert_eq!(hv(&[vec![1.0, 1.0, 1.0]], &[2.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn union_not_sum_in_2d() {
+        let pts = vec![vec![1.0, 2.0], vec![2.0, 1.0]];
+        // boxes 2x1 and 1x2 overlapping in 1x1
+        assert_eq!(hv(&pts, &[3.0, 3.0]), 3.0);
+        // dominated and duplicate points change nothing
+        let with_noise = vec![
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![2.5, 2.5],
+            vec![1.0, 2.0],
+        ];
+        assert_eq!(hv(&with_noise, &[3.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn outside_reference_contributes_nothing() {
+        assert_eq!(hv(&[], &[1.0, 1.0]), 0.0);
+        assert_eq!(hv(&[vec![2.0, 0.0]], &[1.0, 1.0]), 0.0, "on/over the edge");
+        assert_eq!(hv(&[vec![1.0, 0.0]], &[1.0, 1.0]), 0.0, "boundary is exclusive");
+        assert_eq!(hv(&[vec![f64::NAN, 0.0]], &[1.0, 1.0]), 0.0, "NaN loss drops out");
+    }
+
+    #[test]
+    fn three_d_slicing_hand_case() {
+        // two boxes: [1,2]^3 from (1,1,1) and a thin slab from (0,0,1.5)
+        let pts = vec![vec![1.0, 1.0, 1.0], vec![0.0, 0.0, 1.5]];
+        // box1 = 1, box2 = 2*2*0.5 = 2, overlap = 1*1*0.5 = 0.5
+        assert!((hv(&pts, &[2.0, 2.0, 2.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dimension_errors() {
+        assert!(hypervolume(&[vec![0.0; 4]], &[1.0; 4]).is_err());
+        assert!(hypervolume(&[], &[]).is_err());
+        assert!(hypervolume(&[vec![0.0, 0.0]], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn property_matches_brute_force_2d_and_3d() {
+        check("hv_vs_brute", 40, |rng| {
+            let d = rng.int_range(2, 3) as usize; // exact path covers d <= 3
+            let n = rng.int_range(0, 12) as usize;
+            // coarse grid coords stress ties, duplicates and boundary hits
+            let points: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.int_range(0, 5) as f64 / 2.0).collect())
+                .collect();
+            let reference = vec![2.0; d];
+            let fast = hypervolume(&points, &reference).map_err(|e| e.to_string())?;
+            let brute = hv_brute(&points, &reference);
+            prop_assert!(
+                (fast - brute).abs() < 1e-9,
+                "d={d} fast={fast} brute={brute} points={points:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_monotone_under_adding_points() {
+        check("hv_monotone", 30, |rng| {
+            let d = rng.int_range(2, 3) as usize;
+            let mut points: Vec<Vec<f64>> = Vec::new();
+            let reference = vec![1.0; d];
+            let mut prev = 0.0;
+            for _ in 0..10 {
+                points.push((0..d).map(|_| rng.uniform()).collect());
+                let now = hypervolume(&points, &reference).map_err(|e| e.to_string())?;
+                prop_assert!(now >= prev - 1e-12, "HV shrank: {prev} -> {now}");
+                prev = now;
+            }
+            Ok(())
+        });
+    }
+}

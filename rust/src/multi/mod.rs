@@ -1,0 +1,52 @@
+//! Multi-objective optimization — vector objectives end to end.
+//!
+//! The paper's criterion (3) asks for a "versatile architecture that can
+//! be deployed for various purposes"; accuracy-vs-latency and
+//! quality-vs-size tuning are the canonical purposes a scalar-objective
+//! framework cannot express. This subsystem opens that workload class:
+//!
+//! * [`dominance`] — Pareto dominance over direction-normalized losses,
+//!   NaN-safe via [`crate::util::stats::nan_max_cmp`] (a diverged
+//!   objective ranks worst, it never panics a comparison);
+//! * [`nds`] — fast nondominated sorting (Deb's domination-count
+//!   algorithm, O(M·N²)) and crowding distance, the selection machinery
+//!   of NSGA-II and of [`crate::study::Study::best_trials`];
+//! * [`NsgaIiSampler`] — constraint-free NSGA-II as a drop-in
+//!   [`crate::sampler::Sampler`]: binary tournament selection on
+//!   (rank, crowding), simulated-binary crossover and polynomial mutation
+//!   over the intersection search space, falling back to uniform random
+//!   sampling until `population_size` trials have completed;
+//! * [`hypervolume()`] — exact hypervolume indicator for
+//!   1–3 objectives (sweep for d=2, slicing over the third axis for
+//!   d=3), the quality number `BENCH_moo.json` tracks and
+//!   [`crate::study::Study::hypervolume`] exposes.
+//!
+//! Everything here works on plain `&[Vec<f64>]` objective matrices plus a
+//! `&[StudyDirection]` vector, so it is reusable outside the study layer
+//! (benches and the CLI `pareto` command call it directly). Trials enter
+//! the subsystem through [`crate::core::FrozenTrial::objective_values`],
+//! which folds pre-multi scalar records into 1-vectors.
+
+pub mod dominance;
+pub mod hypervolume;
+pub mod nds;
+mod nsga2;
+
+pub use dominance::dominates;
+pub use hypervolume::hypervolume;
+pub use nds::{crowding_distance, nondominated_sort};
+pub use nsga2::{NsgaIiConfig, NsgaIiSampler};
+
+use crate::core::StudyDirection;
+
+/// Direction-normalize an objective vector to minimization losses
+/// (`loss[i] = min_sign(directions[i]) * values[i]`): the canonical space
+/// every routine in this module compares in.
+pub fn to_losses(values: &[f64], directions: &[StudyDirection]) -> Vec<f64> {
+    debug_assert_eq!(values.len(), directions.len());
+    values
+        .iter()
+        .zip(directions)
+        .map(|(v, d)| d.min_sign() * v)
+        .collect()
+}

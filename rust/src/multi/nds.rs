@@ -1,0 +1,235 @@
+//! Fast nondominated sorting and crowding distance (Deb et al., the
+//! NSGA-II selection machinery).
+
+use std::cmp::Ordering;
+
+use crate::multi::dominance::dominates;
+use crate::util::stats::nan_max_cmp;
+
+/// Partition loss vectors into Pareto fronts: `fronts[0]` is the
+/// nondominated set, `fronts[k]` is nondominated once fronts `0..k` are
+/// removed. Every input index appears in exactly one front. Deb's
+/// domination-count algorithm: O(M·N²) comparisons, O(N²) worst-case
+/// memory for the dominated-by lists.
+///
+/// All vectors must share one length; losses are minimization-normalized
+/// (see [`crate::multi::to_losses`]) and NaN-safe per the dominance
+/// comparator.
+pub fn nondominated_sort(losses: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = losses.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // dominated[i] = indices i dominates; count[i] = how many dominate i
+    let mut dominated: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&losses[i], &losses[j]) {
+                dominated[i].push(j);
+                count[j] += 1;
+            } else if dominates(&losses[j], &losses[i]) {
+                dominated[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of one front (indices into `losses`):
+/// boundary points per objective get `f64::INFINITY`, interior points sum
+/// the normalized gap between their neighbors. Larger = lonelier =
+/// preferred at truncation time. Degenerate objectives (zero or NaN
+/// spread) contribute nothing.
+pub fn crowding_distance(losses: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n == 0 {
+        return dist;
+    }
+    let n_obj = losses[front[0]].len();
+    let mut order: Vec<usize> = (0..n).collect(); // positions within `front`
+    for m in 0..n_obj {
+        order.sort_by(|&a, &b| nan_max_cmp(&losses[front[a]][m], &losses[front[b]][m]));
+        let lo = losses[front[order[0]]][m];
+        let hi = losses[front[order[n - 1]]][m];
+        let spread = hi - lo;
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        if !(spread > 0.0) || !spread.is_finite() {
+            continue; // all equal (or NaN spread): no interior information
+        }
+        for w in 1..n - 1 {
+            let gap = losses[front[order[w + 1]]][m] - losses[front[order[w - 1]]][m];
+            if gap.is_finite() {
+                dist[order[w]] += gap / spread;
+            }
+        }
+    }
+    dist
+}
+
+/// Sort key for NSGA-II truncation/tournaments: lower front rank wins,
+/// ties broken by larger crowding distance.
+pub fn rank_crowding_cmp(rank_a: usize, crowd_a: f64, rank_b: usize, crowd_b: f64) -> Ordering {
+    rank_a
+        .cmp(&rank_b)
+        .then_with(|| nan_max_cmp(&crowd_a, &crowd_b).reverse())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn hand_built_fronts() {
+        // front 0: (1,4), (2,2), (4,1); front 1: (3,3), (2,5); front 2: (5,5)
+        let losses = vec![
+            vec![1.0, 4.0],
+            vec![3.0, 3.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![2.0, 5.0],
+            vec![5.0, 5.0],
+        ];
+        let fronts = nondominated_sort(&losses);
+        assert_eq!(fronts.len(), 3);
+        let mut f0 = fronts[0].clone();
+        f0.sort_unstable();
+        assert_eq!(f0, vec![0, 2, 3]);
+        let mut f1 = fronts[1].clone();
+        f1.sort_unstable();
+        assert_eq!(f1, vec![1, 4]);
+        assert_eq!(fronts[2], vec![5]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(nondominated_sort(&[]).is_empty());
+        let one = nondominated_sort(&[vec![1.0, 2.0]]);
+        assert_eq!(one, vec![vec![0]]);
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite_interior_ordered() {
+        // colinear front: interior spacing should reward the lonely point
+        let losses = vec![
+            vec![0.0, 10.0],
+            vec![1.0, 9.0],
+            vec![2.0, 8.0],
+            vec![9.0, 1.0], // far from its neighbors
+            vec![10.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&losses, &front);
+        assert!(d[0].is_infinite() && d[4].is_infinite());
+        assert!(d[3] > d[1], "isolated interior point must be lonelier: {d:?}");
+        assert!(d[1] > 0.0 && d[2] > 0.0);
+    }
+
+    #[test]
+    fn crowding_degenerate_objective_is_noop() {
+        let losses = vec![vec![1.0, 5.0], vec![2.0, 5.0], vec![3.0, 5.0]];
+        let front: Vec<usize> = (0..3).collect();
+        let d = crowding_distance(&losses, &front);
+        // objective 1 has zero spread; objective 0 still ranks them
+        assert!(d[0].is_infinite() && d[2].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn rank_then_crowding() {
+        assert_eq!(rank_crowding_cmp(0, 0.1, 1, 9.9), Ordering::Less);
+        assert_eq!(rank_crowding_cmp(1, 0.5, 1, 0.2), Ordering::Less, "lonelier wins ties");
+        assert_eq!(rank_crowding_cmp(1, 0.2, 1, 0.5), Ordering::Greater);
+        assert_eq!(rank_crowding_cmp(2, f64::INFINITY, 2, 1.0), Ordering::Less);
+    }
+
+    /// ISSUE 4 property: front 0 is mutually nondominated, and every
+    /// excluded point is dominated by at least one front-0 member.
+    #[test]
+    fn property_front0_nondominated_and_covering() {
+        check("nds_front0", 40, |rng| {
+            let n = rng.int_range(1, 60) as usize;
+            let dim = rng.int_range(2, 4) as usize;
+            // coarse grid values make dominance ties/duplicates common
+            let losses: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.int_range(0, 6) as f64).collect())
+                .collect();
+            let fronts = nondominated_sort(&losses);
+            let front0 = &fronts[0];
+            for (ai, &a) in front0.iter().enumerate() {
+                for &b in &front0[ai + 1..] {
+                    prop_assert!(
+                        !dominates(&losses[a], &losses[b]) && !dominates(&losses[b], &losses[a]),
+                        "front 0 members {a} and {b} not mutually nondominated"
+                    );
+                }
+            }
+            let in_front0: Vec<bool> = {
+                let mut v = vec![false; n];
+                front0.iter().for_each(|&i| v[i] = true);
+                v
+            };
+            for i in (0..n).filter(|&i| !in_front0[i]) {
+                prop_assert!(
+                    front0.iter().any(|&f| dominates(&losses[f], &losses[i])),
+                    "excluded point {i} ({:?}) dominated by nobody on the front",
+                    losses[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Fronts partition the input, and ranks are consistent: nothing in
+    /// front k dominates anything in front <= k.
+    #[test]
+    fn property_fronts_partition_and_are_ordered() {
+        check("nds_partition", 40, |rng| {
+            let n = rng.int_range(1, 50) as usize;
+            let dim = rng.int_range(2, 4) as usize;
+            let losses: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.uniform()).collect())
+                .collect();
+            let fronts = nondominated_sort(&losses);
+            let mut seen = vec![false; n];
+            for f in &fronts {
+                for &i in f {
+                    prop_assert!(!seen[i], "index {i} in two fronts");
+                    seen[i] = true;
+                }
+            }
+            prop_assert!(seen.iter().all(|&s| s), "some index missing from all fronts");
+            for (k, f) in fronts.iter().enumerate().skip(1) {
+                for &i in f {
+                    // each member of front k is dominated by someone in front k-1
+                    prop_assert!(
+                        fronts[k - 1].iter().any(|&j| dominates(&losses[j], &losses[i])),
+                        "front {k} member {i} undominated by front {}",
+                        k - 1
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,371 @@
+//! NSGA-II (Deb et al. 2002) as a drop-in [`Sampler`] — constraint-free.
+//!
+//! Ask-time flow: the relative search space is the intersection space
+//! over completed trials (the same inference CMA-ES/GP use, §3.1). Once
+//! `population_size` comparable trials have completed, each new trial is
+//! bred jointly over that space: the elite population is selected by
+//! nondominated rank + crowding distance, two parents win binary
+//! tournaments, and the child is produced by simulated-binary crossover
+//! (SBX) plus polynomial mutation in *internal* parameter space
+//! (categoricals use uniform crossover and random-reset mutation).
+//! Before the population fills — and for any parameter outside the
+//! intersection space (conditional branches, first occurrences) — the
+//! sampler falls back to uniform random sampling.
+//!
+//! Everything is seeded and behind a `Mutex`, like every other sampler
+//! here, so studies are reproducible and shareable across workers.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::core::{Distribution, FrozenTrial, TrialState};
+use crate::multi::nds::{crowding_distance, nondominated_sort, rank_crowding_cmp};
+use crate::multi::to_losses;
+use crate::sampler::{
+    intersection_search_space_ctx, RandomSampler, Sampler, SearchSpace, StudyContext,
+};
+use crate::util::rng::Pcg64;
+
+/// NSGA-II knobs; [`Default`] follows the literature-standard settings.
+#[derive(Clone, Copy, Debug)]
+pub struct NsgaIiConfig {
+    /// Elite population size; also the number of completed trials required
+    /// before genetic sampling starts (random warm-up until then).
+    pub population_size: usize,
+    /// Per-parameter probability of crossing the two parents (else the
+    /// child inherits the first parent's value verbatim).
+    pub crossover_prob: f64,
+    /// SBX distribution index η_c (larger = children closer to parents).
+    pub eta_crossover: f64,
+    /// Per-parameter mutation probability; `None` = `1 / |space|`.
+    pub mutation_prob: Option<f64>,
+    /// Polynomial-mutation distribution index η_m.
+    pub eta_mutation: f64,
+}
+
+impl Default for NsgaIiConfig {
+    fn default() -> Self {
+        NsgaIiConfig {
+            population_size: 50,
+            crossover_prob: 0.9,
+            eta_crossover: 20.0,
+            mutation_prob: None,
+            eta_mutation: 20.0,
+        }
+    }
+}
+
+/// The multi-objective genetic sampler. See the module docs for the
+/// algorithm; see [`crate::study::StudyBuilder::directions`] for wiring a
+/// study to more than one objective.
+pub struct NsgaIiSampler {
+    cfg: NsgaIiConfig,
+    rng: Mutex<Pcg64>,
+}
+
+impl NsgaIiSampler {
+    pub fn new(seed: u64) -> Self {
+        NsgaIiSampler::with_config(seed, NsgaIiConfig::default())
+    }
+
+    pub fn with_config(seed: u64, cfg: NsgaIiConfig) -> Self {
+        assert!(cfg.population_size >= 2, "population_size must be >= 2");
+        NsgaIiSampler { cfg, rng: Mutex::new(Pcg64::new(seed)) }
+    }
+
+    /// Completed trials comparable under this study's objectives: full
+    /// objective vector of the right arity and a value for every
+    /// parameter of the intersection space (guaranteed for completed
+    /// trials by the intersection inference itself).
+    fn population<'a>(
+        ctx: &'a StudyContext<'_>,
+        n_obj: usize,
+    ) -> (Vec<&'a FrozenTrial>, Vec<Vec<f64>>) {
+        let directions = ctx.directions();
+        let mut pop = Vec::new();
+        let mut losses = Vec::new();
+        for t in ctx.trials.iter().filter(|t| t.state == TrialState::Complete) {
+            let values = t.objective_values();
+            if values.len() != n_obj {
+                continue;
+            }
+            losses.push(to_losses(&values, directions));
+            pop.push(t);
+        }
+        (pop, losses)
+    }
+}
+
+/// Bounded SBX: cross `x1, x2` within `[lo, hi]`, returning one child.
+fn sbx(rng: &mut Pcg64, x1: f64, x2: f64, lo: f64, hi: f64, eta: f64) -> f64 {
+    if (x1 - x2).abs() < 1e-14 || hi <= lo {
+        return x1;
+    }
+    let (a, b) = if x1 < x2 { (x1, x2) } else { (x2, x1) };
+    let beta = 1.0 + 2.0 * (a - lo).min(hi - b).max(0.0) / (b - a);
+    let alpha = 2.0 - beta.powf(-(eta + 1.0));
+    let u = rng.uniform();
+    let betaq = if u <= 1.0 / alpha {
+        (u * alpha).powf(1.0 / (eta + 1.0))
+    } else {
+        (1.0 / (2.0 - u * alpha)).powf(1.0 / (eta + 1.0))
+    };
+    let mid = 0.5 * (a + b);
+    let spread = 0.5 * betaq * (b - a);
+    let child = if rng.uniform() < 0.5 { mid - spread } else { mid + spread };
+    child.clamp(lo, hi)
+}
+
+/// Bounded polynomial mutation of `x` within `[lo, hi]`.
+fn polynomial_mutation(rng: &mut Pcg64, x: f64, lo: f64, hi: f64, eta: f64) -> f64 {
+    let range = hi - lo;
+    if range <= 0.0 {
+        return x;
+    }
+    // a parent outside the range (enqueue_trial performs no bounds
+    // validation) would drive xy below 0 and powf to NaN — clamp first
+    let x = x.clamp(lo, hi);
+    let u = rng.uniform();
+    let mut_pow = 1.0 / (eta + 1.0);
+    let deltaq = if u < 0.5 {
+        let xy = 1.0 - (x - lo) / range;
+        (2.0 * u + (1.0 - 2.0 * u) * xy.powf(eta + 1.0)).powf(mut_pow) - 1.0
+    } else {
+        let xy = 1.0 - (hi - x) / range;
+        1.0 - (2.0 * (1.0 - u) + 2.0 * (u - 0.5) * xy.powf(eta + 1.0)).powf(mut_pow)
+    };
+    (x + deltaq * range).clamp(lo, hi)
+}
+
+impl Sampler for NsgaIiSampler {
+    fn infer_relative_search_space(&self, ctx: &StudyContext<'_>) -> SearchSpace {
+        intersection_search_space_ctx(ctx)
+    }
+
+    fn sample_relative(
+        &self,
+        ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        let n_obj = ctx.directions().len();
+        let (pop, losses) = Self::population(ctx, n_obj);
+        if pop.len() < self.cfg.population_size || space.is_empty() {
+            return BTreeMap::new(); // random warm-up via sample_independent
+        }
+        // elite selection: fill from successive fronts, truncating the
+        // last one by descending crowding distance
+        let fronts = nondominated_sort(&losses);
+        let mut rank = vec![0usize; pop.len()];
+        let mut crowd = vec![0.0f64; pop.len()];
+        let mut elite: Vec<usize> = Vec::with_capacity(self.cfg.population_size);
+        for (r, front) in fronts.iter().enumerate() {
+            let d = crowding_distance(&losses, front);
+            for (slot, &i) in front.iter().enumerate() {
+                rank[i] = r;
+                crowd[i] = d[slot];
+            }
+            if elite.len() + front.len() <= self.cfg.population_size {
+                elite.extend_from_slice(front);
+            } else {
+                let mut rest: Vec<usize> = front.clone();
+                rest.sort_by(|&a, &b| rank_crowding_cmp(rank[a], crowd[a], rank[b], crowd[b]));
+                rest.truncate(self.cfg.population_size - elite.len());
+                elite.extend(rest);
+            }
+            if elite.len() >= self.cfg.population_size {
+                break;
+            }
+        }
+
+        let mut rng = self.rng.lock().unwrap();
+        let mut tournament = |rng: &mut Pcg64| -> usize {
+            let a = elite[rng.index(elite.len())];
+            let b = elite[rng.index(elite.len())];
+            match rank_crowding_cmp(rank[a], crowd[a], rank[b], crowd[b]) {
+                std::cmp::Ordering::Greater => b,
+                _ => a,
+            }
+        };
+        let p1 = tournament(&mut rng);
+        let p2 = tournament(&mut rng);
+        let mutation_prob = self
+            .cfg
+            .mutation_prob
+            .unwrap_or(1.0 / space.len().max(1) as f64);
+
+        let mut child = BTreeMap::new();
+        for (name, dist) in space {
+            // intersection space ⇒ every completed trial carries the param
+            let Some((_, x1)) = pop[p1].params.get(name) else { continue };
+            let Some((_, x2)) = pop[p2].params.get(name) else { continue };
+            let (x1, x2) = (*x1, *x2);
+            let v = match dist {
+                Distribution::Categorical { choices } => {
+                    // uniform crossover, random-reset mutation
+                    let mut v = if rng.uniform() < 0.5 { x1 } else { x2 };
+                    if rng.uniform() < mutation_prob {
+                        v = rng.index(choices.len()) as f64;
+                    }
+                    v
+                }
+                _ => {
+                    let (lo, hi) = dist.internal_range();
+                    let mut v = if rng.uniform() < self.cfg.crossover_prob {
+                        sbx(&mut rng, x1, x2, lo, hi, self.cfg.eta_crossover)
+                    } else {
+                        x1
+                    };
+                    if rng.uniform() < mutation_prob {
+                        v = polynomial_mutation(&mut rng, v, lo, hi, self.cfg.eta_mutation);
+                    }
+                    v
+                }
+            };
+            child.insert(name.clone(), v);
+        }
+        child
+    }
+
+    fn sample_independent(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        RandomSampler::draw(&mut self.rng.lock().unwrap(), dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ParamValue, StudyDirection};
+
+    fn multi_trial(number: u64, x: f64, y: f64, values: &[f64]) -> FrozenTrial {
+        let dx = Distribution::float(0.0, 1.0);
+        let dy = Distribution::float(0.0, 1.0);
+        let mut t = FrozenTrial::new(number, number);
+        t.params
+            .insert("x".into(), (dx.clone(), dx.internal(&ParamValue::Float(x)).unwrap()));
+        t.params
+            .insert("y".into(), (dy.clone(), dy.internal(&ParamValue::Float(y)).unwrap()));
+        t.state = TrialState::Complete;
+        t.set_values(values);
+        t
+    }
+
+    fn small_cfg() -> NsgaIiConfig {
+        NsgaIiConfig { population_size: 4, ..NsgaIiConfig::default() }
+    }
+
+    fn dirs2() -> [StudyDirection; 2] {
+        [StudyDirection::Minimize, StudyDirection::Minimize]
+    }
+
+    #[test]
+    fn random_warm_up_below_population_size() {
+        let s = NsgaIiSampler::with_config(0, small_cfg());
+        let trials: Vec<FrozenTrial> =
+            (0..3).map(|i| multi_trial(i, 0.5, 0.5, &[1.0, 1.0])).collect();
+        let dirs = dirs2();
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials).with_directions(&dirs);
+        let space = s.infer_relative_search_space(&ctx);
+        assert_eq!(space.len(), 2);
+        assert!(
+            s.sample_relative(&ctx, 3, &space).is_empty(),
+            "below population_size the sampler must defer to random"
+        );
+        // independent fallback stays inside the distribution
+        let d = Distribution::float(0.0, 1.0);
+        for i in 0..100 {
+            let v = s.sample_independent(&ctx, i, "x", &d);
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn breeds_full_space_within_bounds_once_populated() {
+        let s = NsgaIiSampler::with_config(1, small_cfg());
+        let mut rng = Pcg64::new(7);
+        let trials: Vec<FrozenTrial> = (0..8)
+            .map(|i| {
+                let x = rng.uniform();
+                let y = rng.uniform();
+                multi_trial(i, x, y, &[x, 1.0 - x + y])
+            })
+            .collect();
+        let dirs = dirs2();
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials).with_directions(&dirs);
+        let space = s.infer_relative_search_space(&ctx);
+        for n in 0..50 {
+            let child = s.sample_relative(&ctx, n, &space);
+            assert_eq!(child.len(), 2, "every space param bred");
+            for (name, v) in &child {
+                let (lo, hi) = space[name].internal_range();
+                assert!((lo..=hi).contains(v), "{name}={v} outside [{lo}, {hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let trials: Vec<FrozenTrial> = (0..6)
+            .map(|i| multi_trial(i, i as f64 / 5.0, 1.0 - i as f64 / 5.0, &[i as f64, 5.0 - i as f64]))
+            .collect();
+        let dirs = dirs2();
+        let run = |seed: u64| -> Vec<BTreeMap<String, f64>> {
+            let s = NsgaIiSampler::with_config(seed, small_cfg());
+            let ctx =
+                StudyContext::new(StudyDirection::Minimize, &trials).with_directions(&dirs);
+            let space = s.infer_relative_search_space(&ctx);
+            (0..10).map(|n| s.sample_relative(&ctx, n, &space)).collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43), "different seeds explore differently");
+    }
+
+    #[test]
+    fn mixed_arity_trials_excluded_from_population() {
+        // a scalar trial (pre-multi record) must not crash or join the
+        // 2-objective population
+        let s = NsgaIiSampler::with_config(2, small_cfg());
+        let mut trials: Vec<FrozenTrial> =
+            (0..4).map(|i| multi_trial(i, 0.3, 0.7, &[1.0, 2.0])).collect();
+        let mut scalar = multi_trial(4, 0.5, 0.5, &[1.0]);
+        scalar.values.clear();
+        scalar.value = Some(1.0);
+        trials.push(scalar);
+        let dirs = dirs2();
+        let ctx = StudyContext::new(StudyDirection::Minimize, &trials).with_directions(&dirs);
+        let space = s.infer_relative_search_space(&ctx);
+        let child = s.sample_relative(&ctx, 5, &space);
+        assert_eq!(child.len(), 2, "4 comparable trials = population_size, breeding starts");
+    }
+
+    #[test]
+    fn sbx_and_mutation_respect_bounds() {
+        let mut rng = Pcg64::new(0);
+        for _ in 0..2000 {
+            let c = sbx(&mut rng, 0.1, 0.9, 0.0, 1.0, 15.0);
+            assert!((0.0..=1.0).contains(&c));
+            let m = polynomial_mutation(&mut rng, c, 0.0, 1.0, 20.0);
+            assert!((0.0..=1.0).contains(&m));
+        }
+        // identical parents short-circuit
+        assert_eq!(sbx(&mut rng, 0.4, 0.4, 0.0, 1.0, 15.0), 0.4);
+        // degenerate range is a no-op
+        assert_eq!(polynomial_mutation(&mut rng, 0.5, 0.5, 0.5, 20.0), 0.5);
+        // out-of-range parents (possible via unvalidated enqueue_trial)
+        // are clamped, never NaN
+        for _ in 0..200 {
+            let m = polynomial_mutation(&mut rng, 1.7, 0.0, 1.0, 20.0);
+            assert!((0.0..=1.0).contains(&m), "got {m}");
+        }
+    }
+}

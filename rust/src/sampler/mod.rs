@@ -55,12 +55,18 @@ pub struct StudyContext<'a> {
     /// observation columns from it instead of re-scanning `trials`, and
     /// must fall back to scanning when it is `None`.
     pub index: Option<&'a IndexSnapshot>,
+    /// Per-objective directions of a multi-objective study (`None` on a
+    /// single-objective study — `direction` is authoritative there).
+    /// Multi-objective samplers ([`crate::multi::NsgaIiSampler`]) read
+    /// this; single-objective samplers ignore it and see objective 0
+    /// through `direction`/`losses_of` as before.
+    pub directions: Option<&'a [StudyDirection]>,
 }
 
 impl<'a> StudyContext<'a> {
     /// Context without an observation index (samplers scan `trials`).
     pub fn new(direction: StudyDirection, trials: &'a [FrozenTrial]) -> Self {
-        StudyContext { direction, trials, index: None }
+        StudyContext { direction, trials, index: None, directions: None }
     }
 
     /// Context backed by an observation index snapshot.
@@ -69,7 +75,25 @@ impl<'a> StudyContext<'a> {
         trials: &'a [FrozenTrial],
         index: Option<&'a IndexSnapshot>,
     ) -> Self {
-        StudyContext { direction, trials, index }
+        StudyContext { direction, trials, index, directions: None }
+    }
+
+    /// Attach the study's full direction vector (multi-objective studies;
+    /// builder-style so existing construction sites stay untouched).
+    pub fn with_directions(mut self, directions: &'a [StudyDirection]) -> Self {
+        if directions.len() > 1 {
+            self.directions = Some(directions);
+        }
+        self
+    }
+
+    /// The per-objective directions: the full vector on a multi-objective
+    /// study, else `direction` as a 1-slice.
+    pub fn directions(&self) -> &[StudyDirection] {
+        match self.directions {
+            Some(ds) => ds,
+            None => std::slice::from_ref(&self.direction),
+        }
     }
     /// Completed trials only (what most samplers learn from).
     pub fn complete(&self) -> impl Iterator<Item = &'a FrozenTrial> + '_ {

@@ -135,6 +135,18 @@ impl Storage for CachedStorage {
         self.inner.create_study(name, direction)
     }
 
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        self.inner.create_study_multi(name, directions)
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        self.inner.get_study_directions(study_id)
+    }
+
     fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
         self.inner.get_study_id(name)
     }
@@ -186,6 +198,18 @@ impl Storage for CachedStorage {
         value: Option<f64>,
     ) -> Result<(), OptunaError> {
         self.inner.finish_trial(trial_id, state, value)
+    }
+
+    /// Write-through like `finish_trial`: the backend bumps its sequence
+    /// number, so the next refresh merges the finished vector-valued
+    /// trial into every reader's snapshot.
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.inner.finish_trial_values(trial_id, state, values)
     }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {

@@ -16,7 +16,9 @@ use crate::storage::{now_ms, ParamSet, Storage, TrialDelta};
 
 struct StudyRec {
     name: String,
-    direction: StudyDirection,
+    /// One direction per objective; `directions[0]` is what the scalar
+    /// `get_study_direction` reports.
+    directions: Vec<StudyDirection>,
     /// trial ids in creation order
     trials: Vec<u64>,
     /// monotonic write counter (the delta-API generation; see the
@@ -124,6 +126,40 @@ impl Default for InMemoryStorage {
     }
 }
 
+impl InMemoryStorage {
+    /// Shared body of `finish_trial` / `finish_trial_values`: state-machine
+    /// checks, then the objective vector (empty = keep whatever the trial
+    /// carried, e.g. a pruned trial's last intermediate).
+    fn finish_with(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        if !state.is_finished() {
+            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        }
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .trials
+            .get_mut(trial_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        if t.state.is_finished() {
+            return Err(OptunaError::Conflict(format!(
+                "trial {trial_id} already finished as {}",
+                t.state.as_str()
+            )));
+        }
+        t.state = state;
+        if !values.is_empty() {
+            t.set_values(values);
+        }
+        t.datetime_complete = Some(now_ms());
+        g.touch(trial_id);
+        Ok(())
+    }
+}
+
 fn bad_trial(id: u64) -> OptunaError {
     OptunaError::Storage(format!("unknown trial id {id}"))
 }
@@ -134,6 +170,19 @@ fn bad_study(id: u64) -> OptunaError {
 
 impl Storage for InMemoryStorage {
     fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        self.create_study_multi(name, &[direction])
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        if directions.is_empty() {
+            return Err(OptunaError::MultiObjective(
+                "a study needs at least one objective direction".into(),
+            ));
+        }
         let mut g = self.inner.lock().unwrap();
         if g.by_name.contains_key(name) {
             return Err(OptunaError::Storage(format!("study '{name}' already exists")));
@@ -141,7 +190,7 @@ impl Storage for InMemoryStorage {
         let id = g.studies.len() as u64;
         g.studies.push(StudyRec {
             name: name.to_string(),
-            direction,
+            directions: directions.to_vec(),
             trials: Vec::new(),
             seq: 0,
             write_log: Vec::new(),
@@ -159,7 +208,15 @@ impl Storage for InMemoryStorage {
         let g = self.inner.lock().unwrap();
         g.studies
             .get(study_id as usize)
-            .map(|s| s.direction)
+            .map(|s| s.directions[0])
+            .ok_or_else(|| bad_study(study_id))
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        let g = self.inner.lock().unwrap();
+        g.studies
+            .get(study_id as usize)
+            .map(|s| s.directions.clone())
             .ok_or_else(|| bad_study(study_id))
     }
 
@@ -237,27 +294,19 @@ impl Storage for InMemoryStorage {
         state: TrialState,
         value: Option<f64>,
     ) -> Result<(), OptunaError> {
-        if !state.is_finished() {
-            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        match value {
+            Some(v) => self.finish_with(trial_id, state, &[v]),
+            None => self.finish_with(trial_id, state, &[]),
         }
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        if t.state.is_finished() {
-            return Err(OptunaError::Conflict(format!(
-                "trial {trial_id} already finished as {}",
-                t.state.as_str()
-            )));
-        }
-        t.state = state;
-        if value.is_some() {
-            t.value = value;
-        }
-        t.datetime_complete = Some(now_ms());
-        g.touch(trial_id);
-        Ok(())
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.finish_with(trial_id, state, values)
     }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {

@@ -9,12 +9,12 @@
 //!
 //! Entry grammar (one JSON object per line):
 //! ```text
-//! {"op":"create_study","name":N,"direction":D}
+//! {"op":"create_study","name":N,"direction":D,"directions":[D,..]}
 //! {"op":"create_trial","study":S,"time":MS}
 //! {"op":"param","trial":T,"name":N,"dist":{..},"value":V}
 //! {"op":"intermediate","trial":T,"step":K,"value":V}
 //! {"op":"attr","trial":T,"key":K,"value":V}
-//! {"op":"finish","trial":T,"state":ST,"value":V|null,"time":MS}
+//! {"op":"finish","trial":T,"state":ST,"value":V|null,"time":MS,"values":[V,..]}
 //! {"op":"heartbeat","trial":T,"time":MS}          (fault tolerance)
 //! {"op":"enqueue","study":S,"params":[..],"attrs":[..]}
 //! {"op":"start","trial":T,"time":MS}              (claim a Waiting trial)
@@ -34,6 +34,14 @@
 //! id. Ops unknown to this binary are ignored on replay, so old binaries
 //! can read journals written by newer ones. `time` fields record the
 //! *writer's* clock, keeping replay deterministic across processes.
+//!
+//! Replay is **unknown-field-tolerant** in both directions: the
+//! multi-objective fields (`directions` on `create_study`, `values` on
+//! `finish`) are plain extra keys, so journals written by pre-multi
+//! binaries replay here (scalar `value`/`direction` are the fallback),
+//! and multi-objective journals replay on pre-multi binaries as their
+//! objective-0 projection (the `value`/`direction` mirrors are always
+//! written alongside the vectors).
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fs::{File, OpenOptions};
@@ -63,7 +71,9 @@ mod sys {
 
 struct StudyRec {
     name: String,
-    direction: StudyDirection,
+    /// One direction per objective; `directions[0]` feeds the scalar
+    /// `get_study_direction`.
+    directions: Vec<StudyDirection>,
     trials: Vec<u64>,
     /// Monotonic write counter, derived purely from the journal byte
     /// stream during replay — so every process that has replayed the same
@@ -312,6 +322,55 @@ impl JournalStorage {
         f(&mut state, &mut file)
     }
 
+    /// Shared body of `finish_trial` / `finish_trial_values`: the scalar
+    /// `value` mirrors objective 0 (what pre-multi binaries replay); the
+    /// optional `values` array carries the full vector.
+    fn finish_with(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+        values: Option<&[f64]>,
+    ) -> Result<(), OptunaError> {
+        if !state.is_finished() {
+            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        }
+        let mut fields = vec![
+            ("op", Json::Str("finish".into())),
+            ("trial", Json::Num(trial_id as f64)),
+            ("state", Json::Str(state.as_str().into())),
+            ("value", value.map(Json::Num).unwrap_or(Json::Null)),
+            ("time", Json::Num(now_ms() as f64)),
+        ];
+        if let Some(vals) = values {
+            fields.push((
+                "values",
+                Json::Arr(vals.iter().map(|&v| encode_value(v)).collect()),
+            ));
+        } else if value.map_or(false, |v| !v.is_finite()) {
+            // scalar path with a non-finite value: the `value` field just
+            // serialized as null, which replays as None — ship a 1-vector
+            // through the lossless encoding instead, so journal replay
+            // agrees with the in-memory backend (which keeps NaN/±inf)
+            fields.push((
+                "values",
+                Json::Arr(vec![encode_value(value.expect("checked is_some"))]),
+            ));
+        }
+        self.append(
+            move |replayed| match replayed.trials.get(trial_id as usize) {
+                None => Err(bad_trial(trial_id)),
+                Some(t) if t.state.is_finished() => Err(OptunaError::Conflict(format!(
+                    "trial {trial_id} already finished as {}",
+                    t.state.as_str()
+                ))),
+                Some(_) => Ok(()),
+            },
+            Json::obj(fields),
+        )
+        .map(|_| ())
+    }
+
     /// Refresh, validate, append one entry, apply it — under an exclusive
     /// lock so id assignment is race-free across processes.
     fn append(
@@ -335,6 +394,33 @@ fn bad_trial(id: u64) -> OptunaError {
 
 fn bad_study(id: u64) -> OptunaError {
     OptunaError::Storage(format!("unknown study id {id}"))
+}
+
+/// Journal encoding of one objective value: JSON has no NaN/±inf, so
+/// non-finite values are written as marker strings and decoded exactly by
+/// [`decode_value`]. (The plain `Num` writer emits `null` for them, which
+/// replay could only read back as NaN — flipping a `-inf` objective from
+/// best-possible to worst-possible across a process restart.)
+fn encode_value(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Inverse of [`encode_value`]; anything unrecognized (e.g. a `null`
+/// written by an older binary) decodes to NaN so arity is preserved.
+fn decode_value(j: &Json) -> f64 {
+    match j.as_str() {
+        Some("inf") => f64::INFINITY,
+        Some("-inf") => f64::NEG_INFINITY,
+        _ => j.as_f64().unwrap_or(f64::NAN),
+    }
 }
 
 /// The `create_trial` journal entry (shared by `create_trial` and
@@ -404,14 +490,22 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
                 .and_then(|n| n.as_str())
                 .ok_or_else(|| OptunaError::Storage("create_study missing name".into()))?
                 .to_string();
-            let direction = StudyDirection::from_str(
-                entry.get("direction").and_then(|d| d.as_str()).unwrap_or(""),
-            )?;
+            // `directions` (multi-objective) wins when present; scalar
+            // `direction` is the pre-multi fallback
+            let directions = match entry.get("directions").and_then(|d| d.as_arr()) {
+                Some(arr) if !arr.is_empty() => arr
+                    .iter()
+                    .map(|d| StudyDirection::from_str(d.as_str().unwrap_or("")))
+                    .collect::<Result<Vec<_>, _>>()?,
+                _ => vec![StudyDirection::from_str(
+                    entry.get("direction").and_then(|d| d.as_str()).unwrap_or(""),
+                )?],
+            };
             let id = state.studies.len() as u64;
             state.by_name.insert(name.clone(), id);
             state.studies.push(StudyRec {
                 name,
-                direction,
+                directions,
                 trials: Vec::new(),
                 seq: 0,
                 waiting: VecDeque::new(),
@@ -546,8 +640,21 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
                 entry.get("state").and_then(|s| s.as_str()).unwrap_or(""),
             )?;
             state.trials[tid].state = st;
-            if let Some(v) = entry.get("value").and_then(|v| v.as_f64()) {
-                state.trials[tid].value = Some(v);
+            // `values` (multi-objective) wins; scalar `value` is the
+            // pre-`values` journal fallback. Elements decode through
+            // `decode_value` (non-finite marker strings), never dropped:
+            // arity is load-bearing.
+            let vector: Option<Vec<f64>> = entry
+                .get("values")
+                .and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().map(decode_value).collect());
+            match vector {
+                Some(vals) if !vals.is_empty() => state.trials[tid].set_values(&vals),
+                _ => {
+                    if let Some(v) = entry.get("value").and_then(|v| v.as_f64()) {
+                        state.trials[tid].value = Some(v);
+                    }
+                }
             }
             state.trials[tid].datetime_complete =
                 entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
@@ -565,6 +672,19 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
 
 impl Storage for JournalStorage {
     fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        self.create_study_multi(name, &[direction])
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        if directions.is_empty() {
+            return Err(OptunaError::MultiObjective(
+                "a study needs at least one objective direction".into(),
+            ));
+        }
         let name_owned = name.to_string();
         self.append(
             move |state| {
@@ -574,10 +694,21 @@ impl Storage for JournalStorage {
                     Ok(())
                 }
             },
+            // scalar `direction` (objective 0) is always written so
+            // pre-multi binaries keep replaying this journal
             Json::obj(vec![
                 ("op", Json::Str("create_study".into())),
                 ("name", Json::Str(name.into())),
-                ("direction", Json::Str(direction.as_str().into())),
+                ("direction", Json::Str(directions[0].as_str().into())),
+                (
+                    "directions",
+                    Json::Arr(
+                        directions
+                            .iter()
+                            .map(|d| Json::Str(d.as_str().into()))
+                            .collect(),
+                    ),
+                ),
             ]),
         )?;
         // id = index of the study we just appended
@@ -597,7 +728,16 @@ impl Storage for JournalStorage {
         self.with_read(|s| {
             s.studies
                 .get(study_id as usize)
-                .map(|st| st.direction)
+                .map(|st| st.directions[0])
+                .ok_or_else(|| bad_study(study_id))
+        })
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        self.with_read(|s| {
+            s.studies
+                .get(study_id as usize)
+                .map(|st| st.directions.clone())
                 .ok_or_else(|| bad_study(study_id))
         })
     }
@@ -697,27 +837,22 @@ impl Storage for JournalStorage {
         state: TrialState,
         value: Option<f64>,
     ) -> Result<(), OptunaError> {
-        if !state.is_finished() {
-            return Err(OptunaError::Storage("finish_trial with Running state".into()));
+        self.finish_with(trial_id, state, value, None)
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        match values {
+            // arity <= 1 stays on the scalar entry shape: no `values`
+            // field, so single-objective journals are byte-stable
+            [] => self.finish_with(trial_id, state, None, None),
+            [v] => self.finish_with(trial_id, state, Some(*v), None),
+            _ => self.finish_with(trial_id, state, Some(values[0]), Some(values)),
         }
-        self.append(
-            move |replayed| match replayed.trials.get(trial_id as usize) {
-                None => Err(bad_trial(trial_id)),
-                Some(t) if t.state.is_finished() => Err(OptunaError::Conflict(format!(
-                    "trial {trial_id} already finished as {}",
-                    t.state.as_str()
-                ))),
-                Some(_) => Ok(()),
-            },
-            Json::obj(vec![
-                ("op", Json::Str("finish".into())),
-                ("trial", Json::Num(trial_id as f64)),
-                ("state", Json::Str(state.as_str().into())),
-                ("value", value.map(Json::Num).unwrap_or(Json::Null)),
-                ("time", Json::Num(now_ms() as f64)),
-            ]),
-        )
-        .map(|_| ())
     }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
@@ -1017,6 +1152,95 @@ mod tests {
         assert_eq!(t.state, TrialState::Complete);
         assert!((t.params["x"].1 - 0.25).abs() < 1e-12);
         assert_eq!(t.intermediate_at(3), Some(0.9));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn multi_objective_values_survive_reopen() {
+        let p = tmp_path("moo");
+        let directions = [StudyDirection::Minimize, StudyDirection::Maximize];
+        {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study_multi("m", &directions).unwrap();
+            let (tid, _) = s.create_trial(sid).unwrap();
+            s.finish_trial_values(tid, TrialState::Complete, &[0.25, -1.5]).unwrap();
+        }
+        // a fresh process replays the identical directions and vector
+        let s = JournalStorage::open(&p).unwrap();
+        let sid = s.get_study_id("m").unwrap().unwrap();
+        assert_eq!(s.get_study_directions(sid).unwrap(), directions.to_vec());
+        assert_eq!(s.get_study_direction(sid).unwrap(), StudyDirection::Minimize);
+        let t = &s.get_all_trials(sid).unwrap()[0];
+        assert_eq!(t.values, vec![0.25, -1.5]);
+        assert_eq!(t.value, Some(0.25), "scalar mirror for objective 0");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn non_finite_values_roundtrip_exactly() {
+        // ±inf and NaN objectives must replay to the same front ordering
+        // they had in-process — JSON null would turn -inf into NaN and
+        // flip it from best to worst.
+        let p = tmp_path("nonfinite");
+        let dirs = [StudyDirection::Minimize; 3];
+        {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study_multi("nf", &dirs).unwrap();
+            let (tid, _) = s.create_trial(sid).unwrap();
+            s.finish_trial_values(
+                tid,
+                TrialState::Complete,
+                &[f64::NEG_INFINITY, f64::NAN, 2.0],
+            )
+            .unwrap();
+        }
+        let s = JournalStorage::open(&p).unwrap();
+        let sid = s.get_study_id("nf").unwrap().unwrap();
+        let t = &s.get_all_trials(sid).unwrap()[0];
+        assert_eq!(t.values[0], f64::NEG_INFINITY);
+        assert!(t.values[1].is_nan());
+        assert_eq!(t.values[2], 2.0);
+        assert_eq!(t.value, Some(f64::NEG_INFINITY), "scalar mirror too");
+
+        // the scalar (arity-1) path round-trips non-finite values too
+        let sid1 = s.create_study("nf-scalar", StudyDirection::Minimize).unwrap();
+        let (t1, _) = s.create_trial(sid1).unwrap();
+        s.finish_trial(t1, TrialState::Complete, Some(f64::NEG_INFINITY)).unwrap();
+        let b = JournalStorage::open(&p).unwrap();
+        assert_eq!(
+            b.get_trial(t1).unwrap().value,
+            Some(f64::NEG_INFINITY),
+            "scalar -inf must survive replay"
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pre_values_journal_lines_replay() {
+        // A journal written by a pre-multi binary: no `directions` on
+        // create_study, no `values` on finish. Replay must fall back to
+        // the scalar fields.
+        let p = tmp_path("legacy");
+        std::fs::write(
+            &p,
+            concat!(
+                "{\"op\":\"create_study\",\"name\":\"old\",\"direction\":\"maximize\"}\n",
+                "{\"op\":\"create_trial\",\"study\":0,\"time\":100}\n",
+                "{\"op\":\"finish\",\"trial\":0,\"state\":\"complete\",\"value\":0.75,\"time\":200}\n",
+            ),
+        )
+        .unwrap();
+        let s = JournalStorage::open(&p).unwrap();
+        let sid = s.get_study_id("old").unwrap().unwrap();
+        assert_eq!(s.get_study_directions(sid).unwrap(), vec![StudyDirection::Maximize]);
+        let t = &s.get_all_trials(sid).unwrap()[0];
+        assert_eq!(t.value, Some(0.75));
+        assert!(t.values.is_empty(), "no vector was ever recorded");
+        assert_eq!(t.objective_values(), vec![0.75]);
+        // ...and the journal stays writable with the new binary
+        let (t1, _) = s.create_trial(sid).unwrap();
+        s.finish_trial(t1, TrialState::Complete, Some(0.9)).unwrap();
+        assert_eq!(s.n_trials(sid).unwrap(), 2);
         std::fs::remove_file(p).ok();
     }
 

@@ -125,6 +125,34 @@ pub trait Storage: Send + Sync {
     /// Create a study; error if the name exists.
     fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError>;
 
+    /// Create a study with one direction **per objective** — the
+    /// multi-objective entry point. The default supports the
+    /// single-objective case only (delegating to
+    /// [`Storage::create_study`]) and returns a typed
+    /// [`OptunaError::MultiObjective`] for more, so scalar-only backends
+    /// stay correct without opting in. The shipped backends persist the
+    /// full vector.
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        match directions {
+            [d] => self.create_study(name, *d),
+            _ => Err(OptunaError::MultiObjective(format!(
+                "backend does not support {}-objective studies",
+                directions.len()
+            ))),
+        }
+    }
+
+    /// Per-objective directions of the study; length 1 for
+    /// single-objective studies. The default derives it from
+    /// [`Storage::get_study_direction`].
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        Ok(vec![self.get_study_direction(study_id)?])
+    }
+
     /// Look up a study id by name.
     fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError>;
 
@@ -158,6 +186,29 @@ pub trait Storage: Send + Sync {
         state: TrialState,
         value: Option<f64>,
     ) -> Result<(), OptunaError>;
+
+    /// Transition a trial to a finished state carrying a full objective
+    /// vector (multi-objective tell). Backends must install the
+    /// `value == values[0]` mirror (see [`FrozenTrial::set_values`]) so
+    /// scalar readers — samplers, pruners, the observation index — keep
+    /// seeing objective 0. The default handles arity ≤ 1 by delegating to
+    /// [`Storage::finish_trial`] and returns a typed error for more, so
+    /// decorators and scalar-only backends need no changes.
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        match values {
+            [] => self.finish_trial(trial_id, state, None),
+            [v] => self.finish_trial(trial_id, state, Some(*v)),
+            _ => Err(OptunaError::MultiObjective(format!(
+                "backend does not support {}-objective values",
+                values.len()
+            ))),
+        }
+    }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError>;
 
@@ -313,22 +364,47 @@ pub fn get_or_create_study(
     name: &str,
     direction: StudyDirection,
 ) -> Result<u64, OptunaError> {
-    if let Some(id) = storage.get_study_id(name)? {
-        let existing = storage.get_study_direction(id)?;
-        if existing != direction {
+    get_or_create_study_multi(storage, name, &[direction])
+}
+
+/// Multi-objective [`get_or_create_study`]: joining an existing study
+/// requires the full per-objective direction vector to match.
+pub fn get_or_create_study_multi(
+    storage: &dyn Storage,
+    name: &str,
+    directions: &[StudyDirection],
+) -> Result<u64, OptunaError> {
+    if directions.is_empty() {
+        return Err(OptunaError::MultiObjective(
+            "a study needs at least one objective direction".into(),
+        ));
+    }
+    let join = |id: u64| -> Result<u64, OptunaError> {
+        let existing = storage.get_study_directions(id)?;
+        if existing != directions {
             return Err(OptunaError::Storage(format!(
-                "study '{name}' exists with direction {}",
-                existing.as_str()
+                "study '{name}' exists with directions [{}]",
+                existing.iter().map(|d| d.as_str()).collect::<Vec<_>>().join(", ")
             )));
         }
-        return Ok(id);
+        Ok(id)
+    };
+    if let Some(id) = storage.get_study_id(name)? {
+        return join(id);
     }
-    match storage.create_study(name, direction) {
+    match storage.create_study_multi(name, directions) {
         Ok(id) => Ok(id),
-        // lost the race: someone created it between our check and create
-        Err(_) => storage
-            .get_study_id(name)?
-            .ok_or_else(|| OptunaError::Storage(format!("cannot create study '{name}'"))),
+        // a multi-objective arity error is a capability gap, not a race
+        Err(e @ OptunaError::MultiObjective(_)) => Err(e),
+        // lost the race: someone created it between our check and create —
+        // join the winner, which includes re-checking that it used OUR
+        // direction vector (a racing creator with different directions
+        // must surface as the same typed mismatch the sequential path
+        // reports, not silently flip an objective's sign)
+        Err(_) => match storage.get_study_id(name)? {
+            Some(id) => join(id),
+            None => Err(OptunaError::Storage(format!("cannot create study '{name}'"))),
+        },
     }
 }
 
@@ -349,6 +425,70 @@ pub(crate) mod conformance {
         heartbeat_and_stale_reaping(storage);
         waiting_queue(storage);
         capped_creation(storage);
+        multi_objective_values(storage);
+    }
+
+    fn multi_objective_values(s: &dyn Storage) {
+        // scalar arities always work through the vector API
+        let sid1 = s.create_study_multi("conf-moo-1", &[StudyDirection::Minimize]).unwrap();
+        assert_eq!(s.get_study_directions(sid1).unwrap(), vec![StudyDirection::Minimize]);
+        let (t1, _) = s.create_trial(sid1).unwrap();
+        s.finish_trial_values(t1, TrialState::Complete, &[0.25]).unwrap();
+        let tr = s.get_trial(t1).unwrap();
+        assert_eq!(tr.value, Some(0.25));
+        assert_eq!(tr.objective_values(), vec![0.25]);
+
+        let directions = [StudyDirection::Minimize, StudyDirection::Maximize];
+        let sid = match s.create_study_multi("conf-moo-2", &directions) {
+            Err(OptunaError::MultiObjective(_)) => return, // scalar-only backend
+            other => other.unwrap(),
+        };
+        assert_eq!(s.get_study_directions(sid).unwrap(), directions.to_vec());
+        // objective 0 direction is what scalar readers see
+        assert_eq!(s.get_study_direction(sid).unwrap(), StudyDirection::Minimize);
+
+        let (tid, _) = s.create_trial(sid).unwrap();
+        let d = Distribution::float(0.0, 1.0);
+        s.set_trial_param(tid, "x", &d, 0.5).unwrap();
+        s.finish_trial_values(tid, TrialState::Complete, &[1.5, -2.0]).unwrap();
+        let tr = s.get_trial(tid).unwrap();
+        assert_eq!(tr.state, TrialState::Complete);
+        assert_eq!(tr.values, vec![1.5, -2.0]);
+        assert_eq!(tr.value, Some(1.5), "value mirrors objective 0");
+        assert_eq!(tr.objective_values(), vec![1.5, -2.0]);
+
+        // the vector rides the snapshot/delta paths like any other field
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(all[0].values, vec![1.5, -2.0]);
+        let snap = s.get_trials_snapshot(sid).unwrap();
+        assert_eq!(snap[0].values, vec![1.5, -2.0]);
+        let delta = s.get_trials_since(sid, 0).unwrap();
+        assert_eq!(delta.trials[0].values, vec![1.5, -2.0]);
+
+        // double-finish is still a conflict through the vector API
+        assert!(matches!(
+            s.finish_trial_values(tid, TrialState::Complete, &[0.0, 0.0]),
+            Err(OptunaError::Conflict(_))
+        ));
+
+        // a multi study whose trial fails carries no values
+        let (tf, _) = s.create_trial(sid).unwrap();
+        s.finish_trial_values(tf, TrialState::Failed, &[]).unwrap();
+        let tr = s.get_trial(tf).unwrap();
+        assert_eq!(tr.value, None);
+        assert!(tr.objective_values().is_empty());
+
+        // directions must match to join (checked by get_or_create)
+        assert!(get_or_create_study_multi(
+            s,
+            "conf-moo-2",
+            &[StudyDirection::Minimize, StudyDirection::Minimize]
+        )
+        .is_err());
+        assert_eq!(
+            get_or_create_study_multi(s, "conf-moo-2", &directions).unwrap(),
+            sid
+        );
     }
 
     fn study_lifecycle(s: &dyn Storage) {

@@ -9,9 +9,12 @@ use std::time::Duration;
 use crate::core::{
     FrozenTrial, IndexSnapshot, ObservationIndex, OptunaError, StudyDirection, TrialState,
 };
+use crate::multi::{nondominated_sort, to_losses};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
-use crate::storage::{get_or_create_study, CachedStorage, InMemoryStorage, Storage, SEQ_UNTRACKED};
+use crate::storage::{
+    get_or_create_study_multi, CachedStorage, InMemoryStorage, Storage, SEQ_UNTRACKED,
+};
 use crate::trial::Trial;
 use crate::util::stats::nan_max_cmp;
 
@@ -74,14 +77,19 @@ pub struct Study {
     pub(crate) failover: Option<FailoverConfig>,
     pub(crate) retry_cb: Option<Arc<RetryCallback>>,
     pub study_id: u64,
+    /// Direction of objective 0 — what every single-objective consumer
+    /// (samplers' loss sign, pruners, the observation index) reads. On a
+    /// multi-objective study this is `directions[0]`.
     pub direction: StudyDirection,
+    /// One direction per objective; length 1 for single-objective studies.
+    pub directions: Vec<StudyDirection>,
     pub name: String,
 }
 
 /// Fluent construction (`Study::builder().sampler(...).build()?`).
 pub struct StudyBuilder {
     name: String,
-    direction: StudyDirection,
+    directions: Vec<StudyDirection>,
     storage: Option<Arc<dyn Storage>>,
     sampler: Option<Arc<dyn Sampler>>,
     pruner: Option<Arc<dyn Pruner>>,
@@ -98,7 +106,19 @@ impl StudyBuilder {
     }
 
     pub fn direction(mut self, direction: StudyDirection) -> Self {
-        self.direction = direction;
+        self.directions = vec![direction];
+        self
+    }
+
+    /// Make the study multi-objective: one direction per objective, in
+    /// objective order. The objective then reports a vector of the same
+    /// arity through [`Study::optimize_multi`] /
+    /// [`TrialOutcome::CompleteValues`], and the single-best accessors
+    /// (`best_trial`, `best_value`) are replaced by
+    /// [`Study::best_trials`] (the Pareto front) and
+    /// [`Study::hypervolume`].
+    pub fn directions(mut self, directions: &[StudyDirection]) -> Self {
+        self.directions = directions.to_vec();
         self
     }
 
@@ -160,16 +180,22 @@ impl StudyBuilder {
 
     /// Create (or join, for shared storage) the study.
     pub fn build(self) -> Result<Study, OptunaError> {
+        if self.directions.is_empty() {
+            return Err(OptunaError::MultiObjective(
+                "a study needs at least one objective direction".into(),
+            ));
+        }
         let storage = self
             .storage
             .unwrap_or_else(|| Arc::new(InMemoryStorage::new()));
         let storage = if self.cache { CachedStorage::wrap(storage) } else { storage };
         let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
         let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
-        let study_id = get_or_create_study(storage.as_ref(), &self.name, self.direction)?;
+        let study_id = get_or_create_study_multi(storage.as_ref(), &self.name, &self.directions)?;
+        let direction = self.directions[0];
         let obs_index = self
             .index
-            .then(|| Mutex::new(ObservationIndex::new(self.direction)));
+            .then(|| Mutex::new(ObservationIndex::new(direction)));
         Ok(Study {
             storage,
             sampler,
@@ -178,7 +204,8 @@ impl StudyBuilder {
             failover: self.failover,
             retry_cb: self.retry_cb,
             study_id,
-            direction: self.direction,
+            direction,
+            directions: self.directions,
             name: self.name,
         })
     }
@@ -210,6 +237,9 @@ impl HeartbeatRegistry {
 /// Result an objective hands back through [`Study::tell`].
 pub enum TrialOutcome {
     Complete(f64),
+    /// Multi-objective completion: one value per objective, in the
+    /// study's [`Study::directions`] order (arity-checked by `tell`).
+    CompleteValues(Vec<f64>),
     Pruned,
     Failed(String),
 }
@@ -218,7 +248,7 @@ impl Study {
     pub fn builder() -> StudyBuilder {
         StudyBuilder {
             name: "study".to_string(),
-            direction: StudyDirection::Minimize,
+            directions: vec![StudyDirection::Minimize],
             storage: None,
             sampler: None,
             pruner: None,
@@ -227,6 +257,16 @@ impl Study {
             failover: None,
             retry_cb: None,
         }
+    }
+
+    /// Number of objectives (the length of [`Study::directions`]).
+    pub fn n_objectives(&self) -> usize {
+        self.directions.len()
+    }
+
+    /// True when the study optimizes more than one objective.
+    pub fn is_multi_objective(&self) -> bool {
+        self.directions.len() > 1
     }
 
     /// Advance the observation index to the storage's current sequence
@@ -329,7 +369,8 @@ impl Study {
     fn build_fresh_trial(&self, trial_id: u64, number: u64) -> Result<Trial<'_>, OptunaError> {
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
         let index = self.sync_obs_index()?;
-        let ctx = StudyContext::with_index(self.direction, &trials, index.as_deref());
+        let ctx = StudyContext::with_index(self.direction, &trials, index.as_deref())
+            .with_directions(&self.directions);
         let space = self.sampler.infer_relative_search_space(&ctx);
         let relative = if space.is_empty() {
             Default::default()
@@ -401,11 +442,31 @@ impl Study {
         }
     }
 
-    /// Finish a trial with an outcome.
+    /// Finish a trial with an outcome. Scalar and vector completions are
+    /// arity-checked against [`Study::directions`] — a scalar tell on a
+    /// multi-objective study (or a wrong-length vector) is a typed
+    /// [`OptunaError::MultiObjective`], not silent data corruption.
     pub fn tell(&self, trial: Trial<'_>, outcome: TrialOutcome) -> Result<(), OptunaError> {
         match outcome {
             TrialOutcome::Complete(v) => {
+                if self.is_multi_objective() {
+                    return Err(OptunaError::MultiObjective(format!(
+                        "scalar tell on a {}-objective study — use TrialOutcome::CompleteValues",
+                        self.n_objectives()
+                    )));
+                }
                 self.storage.finish_trial(trial.trial_id, TrialState::Complete, Some(v))
+            }
+            TrialOutcome::CompleteValues(vs) => {
+                if vs.len() != self.n_objectives() {
+                    return Err(OptunaError::MultiObjective(format!(
+                        "objective returned {} values, study has {} objectives",
+                        vs.len(),
+                        self.n_objectives()
+                    )));
+                }
+                self.storage
+                    .finish_trial_values(trial.trial_id, TrialState::Complete, &vs)
             }
             TrialOutcome::Pruned => {
                 let v = trial.last_report.map(|(_, v)| v);
@@ -652,9 +713,117 @@ impl Study {
         })
     }
 
+    /// Multi-objective optimize loop: `objective` reports one value per
+    /// objective, in [`Study::directions`] order. Pruned and failed
+    /// trials are recorded, not fatal; a wrong-arity or non-finite vector
+    /// fails the trial.
+    ///
+    /// ```
+    /// use optuna_rs::prelude::*;
+    /// use std::sync::Arc;
+    ///
+    /// let study = Study::builder()
+    ///     .name("doc-moo")
+    ///     .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+    ///     .sampler(Arc::new(NsgaIiSampler::new(0)))
+    ///     .build()
+    ///     .unwrap();
+    /// study.optimize_multi(20, |trial| {
+    ///     let x = trial.suggest_float("x", 0.0, 1.0)?;
+    ///     Ok(vec![x, 1.0 - x])
+    /// }).unwrap();
+    /// assert!(!study.best_trials().unwrap().is_empty());
+    /// assert!(study.best_value().is_err(), "no single best under 2 objectives");
+    /// ```
+    pub fn optimize_multi<F>(&self, n_trials: usize, objective: F) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<Vec<f64>, OptunaError>,
+    {
+        for _ in 0..n_trials {
+            self.run_one_multi(&objective)?;
+        }
+        Ok(())
+    }
+
+    /// Run one multi-objective trial (the [`Study::optimize_multi`] body).
+    pub fn run_one_multi<F>(&self, objective: &F) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<Vec<f64>, OptunaError>,
+    {
+        let mut trial = self.ask()?;
+        let outcome = match objective(&mut trial) {
+            Ok(vs) if vs.len() != self.n_objectives() => TrialOutcome::Failed(format!(
+                "objective returned {} values, study has {} objectives",
+                vs.len(),
+                self.n_objectives()
+            )),
+            Ok(vs) if vs.iter().all(|v| v.is_finite()) => TrialOutcome::CompleteValues(vs),
+            Ok(vs) => TrialOutcome::Failed(format!("non-finite objective values {vs:?}")),
+            Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
+            Err(e) => TrialOutcome::Failed(e.to_string()),
+        };
+        match self.tell(trial, outcome) {
+            // same policy as run_trial: under failover, a reaped-by-peer
+            // conflict means the work is superseded, not broken
+            Err(OptunaError::Conflict(_)) if self.failover.is_some() => Ok(()),
+            other => other,
+        }
+    }
+
     /// All trials, ordered by number.
     pub fn trials(&self) -> Result<Vec<FrozenTrial>, OptunaError> {
         self.storage.get_all_trials(self.study_id)
+    }
+
+    /// The Pareto front: completed trials whose objective vectors are not
+    /// dominated by any other completed trial, ordered by trial number.
+    /// On a single-objective study this degenerates to the best trial(s)
+    /// (ties included). Trials whose recorded arity does not match the
+    /// study (e.g. scalar records in a study later rebuilt as
+    /// multi-objective) are not comparable and are excluded.
+    pub fn best_trials(&self) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let trials = self.storage.get_trials_snapshot(self.study_id)?;
+        let n_obj = self.n_objectives();
+        let candidates: Vec<&FrozenTrial> = trials
+            .iter()
+            .filter(|t| {
+                t.state == TrialState::Complete && t.objective_values().len() == n_obj
+            })
+            .collect();
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let losses: Vec<Vec<f64>> = candidates
+            .iter()
+            .map(|t| to_losses(&t.objective_values(), &self.directions))
+            .collect();
+        let fronts = nondominated_sort(&losses);
+        let mut front: Vec<FrozenTrial> =
+            fronts[0].iter().map(|&i| candidates[i].clone()).collect();
+        front.sort_by_key(|t| t.number);
+        Ok(front)
+    }
+
+    /// Exact hypervolume of the current Pareto front w.r.t. `ref_point`
+    /// (given in raw objective space, one coordinate per objective —
+    /// direction normalization happens internally). Supported for 1–3
+    /// objectives; front members that do not strictly dominate the
+    /// reference contribute nothing.
+    pub fn hypervolume(&self, ref_point: &[f64]) -> Result<f64, OptunaError> {
+        if ref_point.len() != self.n_objectives() {
+            return Err(OptunaError::MultiObjective(format!(
+                "reference point has {} coordinates, study has {} objectives",
+                ref_point.len(),
+                self.n_objectives()
+            )));
+        }
+        let reference = to_losses(ref_point, &self.directions);
+        let points: Vec<Vec<f64>> = self
+            .best_trials()?
+            .iter()
+            .map(|t| to_losses(&t.objective_values(), &self.directions))
+            .collect();
+        crate::multi::hypervolume(&points, &reference)
     }
 
     /// Best completed trial under the study direction. Scans the shared
@@ -665,7 +834,17 @@ impl Study {
     /// direction-normalized loss — the sampler/pruner convention. The
     /// naive `is_better` reduce was NaN-poisoned: `is_better(x, NaN)` is
     /// false both ways, so a NaN incumbent won forever.
+    ///
+    /// On a multi-objective study there is no single best trial: this
+    /// returns a typed [`OptunaError::MultiObjective`] instead of
+    /// silently ranking by objective 0 — use [`Study::best_trials`].
     pub fn best_trial(&self) -> Result<Option<FrozenTrial>, OptunaError> {
+        if self.is_multi_objective() {
+            return Err(OptunaError::MultiObjective(format!(
+                "best_trial on a {}-objective study — use best_trials (the Pareto front)",
+                self.n_objectives()
+            )));
+        }
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
         let sign = self.direction.min_sign();
         Ok(trials
@@ -689,41 +868,74 @@ impl Study {
     }
 
     /// Export the trial table as CSV (the pandas-dataframe analog, §4).
+    /// Single-objective studies keep the historical `value` header;
+    /// multi-objective studies emit one `value_<i>` column per objective.
     pub fn to_csv(&self) -> Result<String, OptunaError> {
-        let trials = self.trials()?;
-        // union of parameter names, ordered
-        let mut names: Vec<String> = Vec::new();
-        for t in &trials {
-            for k in t.params.keys() {
-                if !names.contains(k) {
-                    names.push(k.clone());
+        Ok(trials_to_csv(&self.trials()?, self.n_objectives()))
+    }
+
+    /// CSV of the Pareto front only (the CLI `pareto --out` export).
+    pub fn front_to_csv(&self) -> Result<String, OptunaError> {
+        Ok(trials_to_csv(&self.best_trials()?, self.n_objectives()))
+    }
+}
+
+/// Shared CSV writer behind [`Study::to_csv`] / [`Study::front_to_csv`]
+/// (and the CLI `pareto` export, which passes an already-computed front).
+/// `n_objectives == 1` must stay byte-identical to the pre-multi format
+/// (regression-tested): header `number,state,value`, empty cell for
+/// valueless trials.
+pub(crate) fn trials_to_csv(trials: &[FrozenTrial], n_objectives: usize) -> String {
+    // union of parameter names, ordered
+    let mut names: Vec<String> = Vec::new();
+    for t in trials {
+        for k in t.params.keys() {
+            if !names.contains(k) {
+                names.push(k.clone());
+            }
+        }
+    }
+    names.sort();
+    let mut out = String::from("number,state");
+    if n_objectives == 1 {
+        out.push_str(",value");
+    } else {
+        for i in 0..n_objectives {
+            out.push_str(&format!(",value_{i}"));
+        }
+    }
+    for n in &names {
+        out.push(',');
+        out.push_str(n);
+    }
+    out.push('\n');
+    for t in trials {
+        out.push_str(&format!("{},{}", t.number, t.state.as_str()));
+        if n_objectives == 1 {
+            out.push(',');
+            if let Some(v) = t.value {
+                out.push_str(&v.to_string());
+            }
+        } else {
+            let values = t.objective_values();
+            for i in 0..n_objectives {
+                out.push(',');
+                // wrong-arity records (scalar rows in a multi study) leave
+                // their cells empty rather than guessing an alignment
+                if values.len() == n_objectives {
+                    out.push_str(&values[i].to_string());
                 }
             }
         }
-        names.sort();
-        let mut out = String::from("number,state,value");
         for n in &names {
             out.push(',');
-            out.push_str(n);
+            if let Some(v) = t.param(n) {
+                out.push_str(&v.to_string());
+            }
         }
         out.push('\n');
-        for t in &trials {
-            out.push_str(&format!(
-                "{},{},{}",
-                t.number,
-                t.state.as_str(),
-                t.value.map(|v| v.to_string()).unwrap_or_default()
-            ));
-            for n in &names {
-                out.push(',');
-                if let Some(v) = t.param(n) {
-                    out.push_str(&v.to_string());
-                }
-            }
-            out.push('\n');
-        }
-        Ok(out)
     }
+    out
 }
 
 #[cfg(test)]
@@ -1281,6 +1493,160 @@ mod tests {
             failed[0].param_internal("x"),
             "the retry resumes the victim's parameters verbatim"
         );
+    }
+
+    #[test]
+    fn single_objective_csv_is_byte_identical_to_pre_multi_format() {
+        // Regression gate for the ISSUE 4 satellite: the multi-objective
+        // CSV rework must not change a single byte of single-objective
+        // exports. Deterministic rows via the enqueue-replay path.
+        let study = quadratic_study(30);
+        let d = crate::core::Distribution::float(0.0, 1.0);
+        let mut params = crate::storage::ParamSet::new();
+        params.insert("x".into(), (d, 0.25));
+        study.storage.enqueue_trial(study.study_id, &params, &BTreeMap::new()).unwrap();
+        let mut t = study.ask().unwrap();
+        let x = t.suggest_float("x", 0.0, 1.0).unwrap();
+        assert_eq!(x, 0.25);
+        study.tell(t, TrialOutcome::Complete(0.25)).unwrap();
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Failed("skip".into())).unwrap();
+        assert_eq!(
+            study.to_csv().unwrap(),
+            "number,state,value,x\n0,complete,0.25,0.25\n1,failed,,\n"
+        );
+    }
+
+    fn moo_study(seed: u64) -> Study {
+        Study::builder()
+            .name("moo")
+            .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+            .sampler(Arc::new(RandomSampler::new(seed)))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn multi_objective_end_to_end() {
+        let study = moo_study(31);
+        assert_eq!(study.n_objectives(), 2);
+        assert!(study.is_multi_objective());
+        study
+            .optimize_multi(40, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(vec![x, 1.0 - x]) // a perfect linear trade-off
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 40);
+        assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+        assert!(trials.iter().all(|t| t.objective_values().len() == 2));
+        // every point sits on the trade-off line, so ALL are nondominated
+        let front = study.best_trials().unwrap();
+        assert_eq!(front.len(), 40);
+        // the front is mutually nondominated
+        let losses: Vec<Vec<f64>> =
+            front.iter().map(|t| t.objective_values()).collect();
+        for (i, a) in losses.iter().enumerate() {
+            for b in &losses[i + 1..] {
+                assert!(
+                    !crate::multi::dominates(a, b) && !crate::multi::dominates(b, a),
+                    "front members dominate each other: {a:?} vs {b:?}"
+                );
+            }
+        }
+        // hypervolume of the x + (1-x) front w.r.t. (1.1, 1.1) is below
+        // the 1.21 box but comfortably above the single-corner value
+        let hv = study.hypervolume(&[1.1, 1.1]).unwrap();
+        assert!(hv > 0.5 && hv < 1.21, "hv={hv}");
+    }
+
+    #[test]
+    fn multi_objective_dominated_points_excluded_from_front() {
+        let study = moo_study(32);
+        let cases: &[(f64, f64)] = &[(0.1, 0.9), (0.9, 0.1), (0.5, 0.5), (0.6, 0.6)];
+        for &(a, b) in cases {
+            let t = study.ask().unwrap();
+            study.tell(t, TrialOutcome::CompleteValues(vec![a, b])).unwrap();
+        }
+        let front = study.best_trials().unwrap();
+        let numbers: Vec<u64> = front.iter().map(|t| t.number).collect();
+        assert_eq!(numbers, vec![0, 1, 2], "(0.6, 0.6) is dominated by (0.5, 0.5)");
+        // direction-aware: rebuild as maximize/maximize flips the front
+        let study = Study::builder()
+            .name("moo-max")
+            .directions(&[StudyDirection::Maximize, StudyDirection::Maximize])
+            .build()
+            .unwrap();
+        for &(a, b) in cases {
+            let t = study.ask().unwrap();
+            study.tell(t, TrialOutcome::CompleteValues(vec![a, b])).unwrap();
+        }
+        let numbers: Vec<u64> =
+            study.best_trials().unwrap().iter().map(|t| t.number).collect();
+        assert_eq!(numbers, vec![0, 1, 3], "(0.5, 0.5) is dominated by (0.6, 0.6)");
+    }
+
+    #[test]
+    fn best_trial_and_best_value_are_typed_errors_on_multi_study() {
+        let study = moo_study(33);
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::CompleteValues(vec![1.0, 2.0])).unwrap();
+        assert!(matches!(study.best_trial(), Err(OptunaError::MultiObjective(_))));
+        assert!(matches!(study.best_value(), Err(OptunaError::MultiObjective(_))));
+        // the front accessor is the supported path
+        assert_eq!(study.best_trials().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn tell_arity_mismatches_are_typed_errors() {
+        let study = moo_study(34);
+        let t = study.ask().unwrap();
+        let err = study.tell(t, TrialOutcome::Complete(1.0)).unwrap_err();
+        assert!(matches!(err, OptunaError::MultiObjective(_)), "{err}");
+        let t = study.ask().unwrap();
+        let err = study
+            .tell(t, TrialOutcome::CompleteValues(vec![1.0, 2.0, 3.0]))
+            .unwrap_err();
+        assert!(matches!(err, OptunaError::MultiObjective(_)), "{err}");
+        // arity-checked tells leave the trials untold (still running)
+        assert!(study.trials().unwrap().iter().all(|t| t.state == TrialState::Running));
+        // wrong-arity *objective* fails the trial instead of aborting the loop
+        study.optimize_multi(2, |_t| Ok(vec![1.0])).unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(
+            trials.iter().filter(|t| t.state == TrialState::Failed).count(),
+            2
+        );
+        // single-objective studies accept a 1-vector through the same API
+        let single = quadratic_study(35);
+        let t = single.ask().unwrap();
+        single.tell(t, TrialOutcome::CompleteValues(vec![0.5])).unwrap();
+        assert_eq!(single.best_value().unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn multi_csv_emits_one_value_column_per_objective() {
+        let study = moo_study(36);
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::CompleteValues(vec![0.25, 4.0])).unwrap();
+        let t = study.ask().unwrap();
+        study.tell(t, TrialOutcome::Failed("skip".into())).unwrap();
+        let csv = study.to_csv().unwrap();
+        assert_eq!(csv, "number,state,value_0,value_1\n0,complete,0.25,4\n1,failed,,\n");
+        let front_csv = study.front_to_csv().unwrap();
+        assert_eq!(front_csv, "number,state,value_0,value_1\n0,complete,0.25,4\n");
+    }
+
+    #[test]
+    fn hypervolume_checks_reference_arity() {
+        let study = moo_study(37);
+        assert!(matches!(
+            study.hypervolume(&[1.0]),
+            Err(OptunaError::MultiObjective(_))
+        ));
+        // empty study: zero volume, not an error
+        assert_eq!(study.hypervolume(&[1.0, 1.0]).unwrap(), 0.0);
     }
 
     #[test]

@@ -254,7 +254,8 @@ impl Trial<'_> {
             self.study.direction,
             &self.snapshot,
             self.index.as_deref(),
-        );
+        )
+        .with_directions(&self.study.directions);
         Ok(self
             .study
             .sampler

@@ -8,8 +8,10 @@
 //! (fixed bounds per dimension, known optima where available).
 
 mod functions;
+pub mod moo;
 
 pub use functions::all_functions;
+pub use moo::{moo_functions, MooFunction};
 
 /// One benchmark problem.
 pub struct TestFunction {

@@ -1,0 +1,185 @@
+//! Multi-objective benchmark functions: ZDT1, ZDT2 (Zitzler–Deb–Thiele
+//! 2000) and DTLZ2 (Deb–Thiele–Laumanns–Zitzler 2002) — the standard
+//! trio for exercising convergence *and* front-shape diversity (convex,
+//! concave, spherical). They extend the evalset protocol of the scalar
+//! suite (fixed bounds, known optima) to vector objectives; the `fig_moo`
+//! bench, the CLI `optimize` command, and `rust/tests/moo.rs` all run
+//! studies over them through [`MooFunction::objective`].
+
+use crate::core::OptunaError;
+use crate::trial::{Trial, TrialApi};
+
+/// One multi-objective benchmark problem (all objectives minimized).
+pub struct MooFunction {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_obj: usize,
+    /// (low, high) per dimension.
+    pub bounds: Vec<(f64, f64)>,
+    /// Reference point for hypervolume tracking: every objective value
+    /// reachable from uniform random sampling stays strictly below it,
+    /// so even an unconverged study scores a comparable number.
+    pub ref_point: Vec<f64>,
+    pub f: fn(&[f64]) -> Vec<f64>,
+}
+
+impl MooFunction {
+    /// Evaluate, asserting dimension.
+    pub fn eval(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim, "{}: wrong dimension", self.name);
+        let v = (self.f)(x);
+        debug_assert_eq!(v.len(), self.n_obj, "{}: wrong objective count", self.name);
+        v
+    }
+
+    /// The standard study objective over this function: suggest one
+    /// `x<ii>` parameter per dimension (zero-padded so CSV/param listings
+    /// sort numerically) and evaluate. The single definition every runner
+    /// (CLI, benches, acceptance tests) shares, so parameter naming can
+    /// never drift between them.
+    pub fn objective(&self, t: &mut Trial<'_>) -> Result<Vec<f64>, OptunaError> {
+        let x: Vec<f64> = self
+            .bounds
+            .iter()
+            .enumerate()
+            .map(|(i, (lo, hi))| t.suggest_float(&format!("x{i:02}"), *lo, *hi))
+            .collect::<Result<_, _>>()?;
+        Ok(self.eval(&x))
+    }
+}
+
+/// ZDT g-function: 1 + 9 · mean(x₁..) — 1 on the Pareto set (tail = 0).
+fn zdt_g(x: &[f64]) -> f64 {
+    let tail = &x[1..];
+    1.0 + 9.0 * tail.iter().sum::<f64>() / tail.len() as f64
+}
+
+/// ZDT1 — convex Pareto front `f₂ = 1 − √f₁` at g = 1.
+pub fn zdt1(x: &[f64]) -> Vec<f64> {
+    let f1 = x[0];
+    let g = zdt_g(x);
+    vec![f1, g * (1.0 - (f1 / g).sqrt())]
+}
+
+/// ZDT2 — concave Pareto front `f₂ = 1 − f₁²` at g = 1.
+pub fn zdt2(x: &[f64]) -> Vec<f64> {
+    let f1 = x[0];
+    let g = zdt_g(x);
+    vec![f1, g * (1.0 - (f1 / g).powi(2))]
+}
+
+/// DTLZ2 (3 objectives) — spherical front `‖f‖ = 1` at g = 0.
+pub fn dtlz2(x: &[f64]) -> Vec<f64> {
+    use std::f64::consts::FRAC_PI_2;
+    let g: f64 = x[2..].iter().map(|xi| (xi - 0.5) * (xi - 0.5)).sum();
+    let (t0, t1) = (x[0] * FRAC_PI_2, x[1] * FRAC_PI_2);
+    let scale = 1.0 + g;
+    vec![
+        scale * t0.cos() * t1.cos(),
+        scale * t0.cos() * t1.sin(),
+        scale * t0.sin(),
+    ]
+}
+
+/// The multi-objective problem table. ZDT dims follow the original paper
+/// (30); DTLZ2 uses the standard k = 10 tail (dim = 12).
+pub fn moo_functions() -> Vec<MooFunction> {
+    vec![
+        MooFunction {
+            name: "zdt1",
+            dim: 30,
+            n_obj: 2,
+            bounds: vec![(0.0, 1.0); 30],
+            // f1 <= 1, f2 <= g <= 10
+            ref_point: vec![1.1, 11.0],
+            f: zdt1,
+        },
+        MooFunction {
+            name: "zdt2",
+            dim: 30,
+            n_obj: 2,
+            bounds: vec![(0.0, 1.0); 30],
+            ref_point: vec![1.1, 11.0],
+            f: zdt2,
+        },
+        MooFunction {
+            name: "dtlz2",
+            dim: 12,
+            n_obj: 3,
+            bounds: vec![(0.0, 1.0); 12],
+            // each objective <= 1 + g <= 3.5
+            ref_point: vec![3.6, 3.6, 3.6],
+            f: dtlz2,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn table_is_well_formed() {
+        let fns = moo_functions();
+        assert_eq!(fns.len(), 3);
+        for f in &fns {
+            assert_eq!(f.bounds.len(), f.dim, "{}", f.name);
+            assert_eq!(f.ref_point.len(), f.n_obj, "{}", f.name);
+            let mid: Vec<f64> = f.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+            let v = f.eval(&mid);
+            assert_eq!(v.len(), f.n_obj, "{}", f.name);
+            assert!(v.iter().all(|x| x.is_finite()), "{}: {v:?}", f.name);
+        }
+    }
+
+    #[test]
+    fn zdt_fronts_at_g_equals_one() {
+        // tail = 0 puts the point on the true front
+        for f1 in [0.0, 0.25, 0.5, 1.0] {
+            let mut x = vec![0.0; 30];
+            x[0] = f1;
+            let v1 = zdt1(&x);
+            assert!((v1[0] - f1).abs() < 1e-12);
+            assert!((v1[1] - (1.0 - f1.sqrt())).abs() < 1e-12, "zdt1 front at {f1}");
+            let v2 = zdt2(&x);
+            assert!((v2[1] - (1.0 - f1 * f1)).abs() < 1e-12, "zdt2 front at {f1}");
+        }
+        // nonzero tail strictly worsens f2 at fixed f1
+        let mut x = vec![0.5; 30];
+        x[0] = 0.25;
+        assert!(zdt1(&x)[1] > 1.0 - 0.25f64.sqrt());
+    }
+
+    #[test]
+    fn dtlz2_front_is_unit_sphere_at_g_zero() {
+        let mut rng = Pcg64::new(0);
+        for _ in 0..50 {
+            let mut x = vec![0.5; 12]; // tail at 0.5 ⇒ g = 0
+            x[0] = rng.uniform();
+            x[1] = rng.uniform();
+            let v = dtlz2(&x);
+            let norm: f64 = v.iter().map(|a| a * a).sum::<f64>();
+            assert!((norm - 1.0).abs() < 1e-9, "‖f‖² = {norm}");
+            assert!(v.iter().all(|&a| (-1e-12..=1.0 + 1e-12).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn random_points_stay_inside_reference() {
+        let mut rng = Pcg64::new(1);
+        for f in moo_functions() {
+            for _ in 0..300 {
+                let x: Vec<f64> = f
+                    .bounds
+                    .iter()
+                    .map(|(lo, hi)| rng.uniform_range(*lo, *hi))
+                    .collect();
+                let v = f.eval(&x);
+                for (vi, ri) in v.iter().zip(&f.ref_point) {
+                    assert!(vi < ri, "{}: objective {vi} >= reference {ri}", f.name);
+                }
+            }
+        }
+    }
+}
