@@ -1,0 +1,155 @@
+//! Storage-plane throughput bench: aggregate ask/tell trial lifecycles
+//! per second vs thread count, sharded [`optuna_rs::storage::InMemoryStorage`]
+//! against the pre-shard single-Mutex baseline, plus a batch-size
+//! ablation (batch=1 vs batch=32 through the batched Storage API).
+//! Prints a paper-style table and writes machine-readable results to
+//! `BENCH_throughput.json` (override the path with `BENCH_THROUGHPUT_JSON`)
+//! so CI can archive the trend.
+//!
+//! One "pair" = one full trial lifecycle (create + finish), i.e. two
+//! storage write ops. Two scenarios:
+//!
+//! * `multi-study` — one study per thread: the sharded backend's
+//!   lock-striping means threads never contend, while the baseline
+//!   serializes everything on its global mutex. This is the ISSUE 5
+//!   acceptance scenario (≥4× at 8 threads).
+//! * `one-study` — every thread hammers the same study: both backends
+//!   serialize writes on one lock, so the gap narrows to the
+//!   constant-factor overhead of the extra global gate.
+//!
+//! Knobs: `THROUGHPUT_QUICK=1` shrinks the protocol ~8x;
+//! `THROUGHPUT_PAIRS` overrides pairs-per-thread directly.
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::cli::bench_ask_tell_pairs;
+use optuna_rs::storage::{InMemoryStorage, SingleMutexStorage, Storage};
+
+struct Row {
+    scenario: &'static str,
+    backend: &'static str,
+    threads: usize,
+    batch: usize,
+    pairs_per_sec: f64,
+}
+
+fn make_storage(backend: &str) -> Box<dyn Storage> {
+    match backend {
+        "sharded" => Box::new(InMemoryStorage::new()),
+        "single-mutex" => Box::new(SingleMutexStorage::new()),
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+/// Run one configuration on a fresh backend; returns aggregate trial
+/// lifecycles per second.
+fn run_config(
+    scenario: &'static str,
+    backend: &'static str,
+    threads: usize,
+    pairs: usize,
+    batch: usize,
+) -> Row {
+    let storage = make_storage(backend);
+    let shared = scenario == "one-study";
+    let secs = bench_ask_tell_pairs(storage.as_ref(), threads, pairs, batch, shared)
+        .expect("bench run");
+    Row {
+        scenario,
+        backend,
+        threads,
+        batch,
+        pairs_per_sec: (threads * pairs) as f64 / secs.max(1e-9),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("THROUGHPUT_QUICK").is_ok();
+    let pairs = env_usize("THROUGHPUT_PAIRS", if quick { 3_000 } else { 25_000 });
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut rows: Vec<Row> = Vec::new();
+
+    for scenario in ["multi-study", "one-study"] {
+        print_header(
+            &format!("ask/tell throughput, {scenario} ({pairs} pairs/thread)"),
+            &["backend", "threads", "batch", "pairs/s"],
+        );
+        for backend in ["sharded", "single-mutex"] {
+            for &threads in &thread_counts {
+                let row = run_config(scenario, backend, threads, pairs, 1);
+                println!(
+                    "{backend} | {threads} | 1 | {:.0}",
+                    row.pairs_per_sec
+                );
+                rows.push(row);
+            }
+        }
+    }
+
+    // batch ablation: single thread, one study, batch 1 vs 32
+    print_header(
+        &format!("batch ablation, 1 thread ({pairs} pairs)"),
+        &["backend", "threads", "batch", "pairs/s"],
+    );
+    for backend in ["sharded", "single-mutex"] {
+        for batch in [1usize, 32] {
+            let row = run_config("batch-ablation", backend, 1, pairs, batch);
+            println!("{backend} | 1 | {batch} | {:.0}", row.pairs_per_sec);
+            rows.push(row);
+        }
+    }
+
+    // headline numbers for the acceptance gate
+    let find = |scenario: &str, backend: &str, threads: usize, batch: usize| {
+        rows.iter()
+            .find(|r| {
+                r.scenario == scenario
+                    && r.backend == backend
+                    && r.threads == threads
+                    && r.batch == batch
+            })
+            .map(|r| r.pairs_per_sec)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup_8t =
+        find("multi-study", "sharded", 8, 1) / find("multi-study", "single-mutex", 8, 1);
+    let batch_speedup =
+        find("batch-ablation", "sharded", 1, 32) / find("batch-ablation", "sharded", 1, 1);
+    println!("\nsharded/single-mutex speedup @ 8 threads (multi-study): {speedup_8t:.2}x");
+    println!("batch=32 / batch=1 speedup @ 1 thread (sharded): {batch_speedup:.2}x");
+
+    write_bench_throughput_json(&rows, speedup_8t, batch_speedup);
+}
+
+/// Machine-readable results for CI artifacts (ISSUE 5 acceptance: the
+/// sharded backend must show ≥4× aggregate throughput at 8 threads over
+/// the single-Mutex baseline, and batch=32 must beat batch=1
+/// single-threaded).
+fn write_bench_throughput_json(rows: &[Row], speedup_8t: f64, batch_speedup: f64) {
+    let path = std::env::var("BENCH_THROUGHPUT_JSON")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    let mut body = String::from(
+        "{\n  \"bench\": \"storage_throughput\",\n  \"unit\": \"trial_lifecycles_per_sec\",\n",
+    );
+    body.push_str(&format!(
+        "  \"speedup_sharded_vs_single_mutex_8_threads\": {speedup_8t:.3},\n"
+    ));
+    body.push_str(&format!(
+        "  \"speedup_batch32_vs_batch1_1_thread\": {batch_speedup:.3},\n"
+    ));
+    body.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        body.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"backend\": \"{}\", \"threads\": {}, \
+             \"batch\": {}, \"pairs_per_sec\": {:.1}}}{comma}\n",
+            r.scenario, r.backend, r.threads, r.batch, r.pairs_per_sec
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

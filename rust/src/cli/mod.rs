@@ -25,6 +25,11 @@
 //!   processes against one journal (optionally SIGKILLing one mid-trial
 //!   with `--kill-one true`), waits, and verifies the invariants: full
 //!   budget completed, zero stranded Running/Waiting trials.
+//!
+//! `bench-throughput` probes the storage plane itself: N threads of
+//! batched ask/tell trial lifecycles against the sharded in-memory
+//! backend (or, with `--baseline true`, the pre-shard single-Mutex
+//! discipline) — the CLI face of `benches/fig_throughput.rs`.
 
 use crate::core::{OptunaError, StudyDirection, TrialState};
 use crate::multi::{hypervolume, to_losses, NsgaIiSampler};
@@ -32,7 +37,9 @@ use crate::pruner::{AshaPruner, HyperbandPruner, MedianPruner, NopPruner, Pruner
 use crate::sampler::{
     CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
 };
-use crate::storage::{now_ms, InMemoryStorage, JournalStorage, Storage};
+use crate::storage::{
+    now_ms, InMemoryStorage, JournalStorage, SingleMutexStorage, Storage, TrialFinish,
+};
 use crate::study::{FailoverConfig, Study};
 use crate::trial::{Trial, TrialApi};
 use crate::workloads::{ffmpeg_sim, hpl_sim, rocksdb_sim, svhn_surrogate};
@@ -78,7 +85,7 @@ impl Args {
 }
 
 fn usage() -> String {
-    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies> \
+    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies|bench-throughput> \
      --storage <memory:|journal://PATH> --study NAME \
      [--direction minimize|maximize] [--directions minimize,maximize,..] \
      [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2] \
@@ -86,8 +93,66 @@ fn usage() -> String {
      [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate|zdt1|zdt2|dtlz2] [--out FILE] \
      [--ref V0,V1,..] \
      [--heartbeat-ms N] [--grace-ms N] [--max-retry N] [--trial-sleep-ms N] \
-     [--workers N] [--kill-one true] [--timeout-ms N]"
+     [--workers N] [--kill-one true] [--timeout-ms N] \
+     [--threads N] [--pairs N] [--batch N] [--baseline true] [--shared-study true]"
         .to_string()
+}
+
+/// Storage-level ask/tell throughput probe: `threads` OS threads, each
+/// against its **own** study (the sharded backend's best case and the
+/// single-Mutex baseline's worst), each running `pairs` create+finish
+/// trial lifecycles in batches of `batch` through the batched Storage
+/// API. Returns elapsed seconds. Shared by the CLI `bench-throughput`
+/// command and `benches/fig_throughput.rs`.
+pub fn bench_ask_tell_pairs(
+    storage: &dyn Storage,
+    threads: usize,
+    pairs: usize,
+    batch: usize,
+    shared_study: bool,
+) -> Result<f64, String> {
+    assert!(threads >= 1 && batch >= 1);
+    let mut study_ids = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let name = if shared_study { "bench-shared".to_string() } else { format!("bench-{i}") };
+        let sid = crate::storage::get_or_create_study(
+            storage,
+            &name,
+            StudyDirection::Minimize,
+        )
+        .map_err(|e| e.to_string())?;
+        study_ids.push(sid);
+    }
+    let start = std::time::Instant::now();
+    std::thread::scope(|scope| -> Result<(), String> {
+        let mut handles = Vec::with_capacity(threads);
+        for &sid in &study_ids {
+            handles.push(scope.spawn(move || -> Result<(), String> {
+                let mut done = 0usize;
+                while done < pairs {
+                    let take = batch.min(pairs - done);
+                    let created =
+                        storage.create_trials(sid, take).map_err(|e| e.to_string())?;
+                    let finishes: Vec<TrialFinish> = created
+                        .iter()
+                        .map(|&(tid, n)| TrialFinish {
+                            trial_id: tid,
+                            state: TrialState::Complete,
+                            values: vec![n as f64],
+                        })
+                        .collect();
+                    storage.finish_trials(&finishes).map_err(|e| e.to_string())?;
+                    done += take;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| "bench thread panicked".to_string())??;
+        }
+        Ok(())
+    })?;
+    Ok(start.elapsed().as_secs_f64())
 }
 
 /// Open a storage backend from a URL-ish string.
@@ -502,6 +567,48 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
             let names = storage.study_names().map_err(|e| e.to_string())?;
             Ok(names.join("\n") + "\n")
         }
+        "bench-throughput" => {
+            // Storage-plane throughput probe: N threads × M ask/tell
+            // pairs in batches of B against a fresh in-memory backend
+            // (`--baseline true` swaps in the pre-shard single-Mutex
+            // discipline; `--storage` overrides the backend entirely,
+            // e.g. journal://). One "pair" = one trial lifecycle
+            // (create + finish).
+            let threads: usize = args
+                .get_or("threads", "8")
+                .parse()
+                .map_err(|e| format!("bad --threads: {e}"))?;
+            let pairs: usize = args
+                .get_or("pairs", "20000")
+                .parse()
+                .map_err(|e| format!("bad --pairs: {e}"))?;
+            let batch: usize = args
+                .get_or("batch", "1")
+                .parse()
+                .map_err(|e| format!("bad --batch: {e}"))?;
+            if threads == 0 || batch == 0 {
+                return Err("--threads and --batch must be >= 1".into());
+            }
+            let baseline =
+                matches!(args.get_or("baseline", "false").as_str(), "true" | "1" | "yes");
+            let shared =
+                matches!(args.get_or("shared-study", "false").as_str(), "true" | "1" | "yes");
+            let (storage, backend): (Arc<dyn Storage>, &str) = match args.get("storage") {
+                Some(url) => (open_storage(url)?, "url"),
+                None if baseline => (Arc::new(SingleMutexStorage::new()), "single-mutex"),
+                None => (Arc::new(InMemoryStorage::new()), "sharded"),
+            };
+            let secs = bench_ask_tell_pairs(storage.as_ref(), threads, pairs, batch, shared)?;
+            let total = (threads * pairs) as f64;
+            Ok(format!(
+                "bench-throughput: backend={backend} threads={threads} pairs={pairs} \
+                 batch={batch} shared-study={shared}\n\
+                 {:.3}s elapsed, {:.0} trials/s ({:.0} storage ops/s)\n",
+                secs,
+                total / secs,
+                2.0 * total / secs
+            ))
+        }
         other => Err(format!("unknown command '{other}'")),
     }
 }
@@ -878,6 +985,23 @@ mod tests {
         assert!(csv.lines().count() >= 2, "front has at least one member:\n{csv}");
         std::fs::remove_file(out_path).ok();
         std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn bench_throughput_runs_small() {
+        let out = run_inner(&argv(&[
+            "bench-throughput", "--threads", "2", "--pairs", "50", "--batch", "8",
+        ]))
+        .unwrap();
+        assert!(out.contains("backend=sharded"), "{out}");
+        assert!(out.contains("trials/s"), "{out}");
+        let out = run_inner(&argv(&[
+            "bench-throughput", "--threads", "2", "--pairs", "50", "--baseline", "true",
+            "--shared-study", "true",
+        ]))
+        .unwrap();
+        assert!(out.contains("backend=single-mutex"), "{out}");
+        assert!(run_inner(&argv(&["bench-throughput", "--threads", "0"])).is_err());
     }
 
     #[test]

@@ -20,7 +20,13 @@
 //!    `optuna` CLI.
 //!
 //! Because storage is the only communication channel, it is also the
-//! scaling bottleneck; [`storage::CachedStorage`] (applied automatically
+//! scaling bottleneck; [`storage::InMemoryStorage`] is lock-striped per
+//! study (concurrent studies never contend; see docs/ARCHITECTURE.md
+//! §"Concurrency & sharding"), the ask/tell pipeline batches —
+//! [`study::Study::ask_batch`]/[`study::Study::tell_batch`] ride
+//! [`storage::Storage::create_trials`]/[`storage::Storage::finish_trials`],
+//! one storage critical section per batch — and
+//! [`storage::CachedStorage`] (applied automatically
 //! by [`study::StudyBuilder`]) keeps generation-stamped shared snapshots
 //! and refreshes them with [`storage::Storage::get_trials_since`] deltas,
 //! making per-trial overhead O(new trials) instead of O(all trials). The

@@ -40,7 +40,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{ParamSet, Storage, TrialDelta, SEQ_UNTRACKED};
+use crate::storage::{ParamSet, Storage, TrialDelta, TrialFinish, SEQ_UNTRACKED};
 
 #[derive(Default)]
 struct StudyCache {
@@ -161,6 +161,17 @@ impl Storage for CachedStorage {
 
     fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
         self.inner.create_trial(study_id)
+    }
+
+    /// Write-through: the backend's batched claim bumps its sequence
+    /// number once per trial, so the next refresh merges the whole batch
+    /// in one delta.
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        self.inner.create_trials(study_id, n)
+    }
+
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        self.inner.finish_trials(finishes)
     }
 
     fn set_trial_param(

@@ -2,82 +2,132 @@
 //! no specification given, Optuna automatically uses its built-in
 //! in-memory data-structure as the storage back-end").
 //!
-//! A single `Mutex` guards the whole store: every operation is a few map
-//! lookups, so contention is negligible next to objective evaluation, and
-//! the simple locking keeps the backend obviously correct. (The perf pass
-//! measured the trade-off — see EXPERIMENTS.md §Perf.)
+//! # Sharding
+//!
+//! The store is **lock-striped per study**: a small directory `RwLock`
+//! guards study creation/lookup, and each study's mutable state lives
+//! behind its own `RwLock`. Concurrent studies therefore never contend —
+//! `optimize_parallel` workers on different studies scale with cores
+//! instead of serializing on one global mutex (the pre-shard design) —
+//! and readers of one study (`get_trials_since`, snapshots, stale-trial
+//! scans) don't block writers of *other* studies.
+//!
+//! ## Lock hierarchy
+//!
+//! 1. the **directory** `RwLock` (study slots + name map), then
+//! 2. a **study** `RwLock` (trials, seq, write log, waiting queue).
+//!
+//! The directory lock is never held while a study lock is taken for more
+//! than the `Arc` clone of the slot, and multiple study locks are only
+//! ever taken together by [`Storage::finish_trials`], in ascending
+//! study-id order — so the hierarchy is acyclic and deadlock-free. See
+//! docs/ARCHITECTURE.md §"Concurrency & sharding".
+//!
+//! ## Trial ids
+//!
+//! Trial ids encode `(study, number)`: the study id in the high bits,
+//! the dense per-study trial number in the low [`NUMBER_BITS`] bits.
+//! That keeps every per-trial operation resolvable to its shard without
+//! a global trial directory (which would be a second global lock on the
+//! hot path). Ids remain opaque u64s to callers, per the trait contract.
+//!
+//! Poisoned locks (a writer panicked mid-operation) surface as typed
+//! [`OptunaError::Storage`] errors instead of propagating the panic to
+//! every later caller.
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock, RwLockWriteGuard};
 use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{now_ms, ParamSet, Storage, TrialDelta};
+use crate::storage::{now_ms, ParamSet, Storage, TrialDelta, TrialFinish};
 
-struct StudyRec {
+/// Low bits of a trial id carrying the per-study trial number; the study
+/// id lives in the remaining high bits.
+const NUMBER_BITS: u32 = 40;
+const NUMBER_MASK: u64 = (1u64 << NUMBER_BITS) - 1;
+/// Maximum studies (high-bits capacity) and trials per study (low bits).
+const MAX_STUDIES: u64 = 1 << (64 - NUMBER_BITS);
+const MAX_TRIALS_PER_STUDY: u64 = 1 << NUMBER_BITS;
+
+fn compose_id(study_id: u64, number: u64) -> u64 {
+    (study_id << NUMBER_BITS) | number
+}
+
+fn decompose_id(trial_id: u64) -> (u64, u64) {
+    (trial_id >> NUMBER_BITS, trial_id & NUMBER_MASK)
+}
+
+/// A poisoned lock means a writer panicked while holding it; the data may
+/// be mid-mutation, so refuse it with a typed storage error rather than
+/// cascading the panic into every later caller.
+fn lock_poisoned<T>(_: std::sync::PoisonError<T>) -> OptunaError {
+    OptunaError::Storage("in-memory storage lock poisoned by a panicked writer".into())
+}
+
+/// Immutable-after-create study metadata, kept in the directory so name
+/// and direction lookups never touch a study's (contended) state lock.
+struct StudySlot {
     name: String,
-    /// One direction per objective; `directions[0]` is what the scalar
-    /// `get_study_direction` reports.
     directions: Vec<StudyDirection>,
-    /// trial ids in creation order
-    trials: Vec<u64>,
-    /// monotonic write counter (the delta-API generation; see the
-    /// consistency contract on [`Storage::study_seq`])
-    seq: u64,
-    /// Append-only (seq, trial_id) write log: `get_trials_since` binary-
-    /// searches it so a delta fetch costs O(log writes + changed trials)
-    /// instead of scanning every trial id of the study. Memory is bounded
-    /// by total writes (a handful of entries per trial lifecycle).
-    write_log: Vec<(u64, u64)>,
-    /// FIFO of `Waiting` trial ids so `pop_waiting_trial` — called on
-    /// every `ask` — is O(1) when the queue is empty instead of a scan
-    /// over the study's trials. Entries whose trial left `Waiting` by a
-    /// non-pop path are dropped lazily at pop time.
-    waiting: VecDeque<u64>,
+    state: Arc<RwLock<StudyState>>,
 }
 
-struct Inner {
-    studies: Vec<StudyRec>,
-    by_name: HashMap<String, u64>,
+/// One study's mutable state — the unit of lock striping.
+struct StudyState {
+    /// Trials indexed by their dense per-study number.
     trials: Vec<FrozenTrial>,
-    /// study id of each trial (parallel to `trials`)
-    trial_study: Vec<u64>,
-    /// study seq at each trial's last modification (parallel to `trials`)
-    trial_seq: Vec<u64>,
+    /// Monotonic write counter (the delta-API generation; see the
+    /// consistency contract on [`Storage::study_seq`]).
+    seq: u64,
+    /// Append-only (seq, number) write log: `get_trials_since` binary-
+    /// searches it so a delta fetch costs O(log writes + changed trials)
+    /// instead of scanning every trial of the study.
+    write_log: Vec<(u64, u64)>,
+    /// FIFO of `Waiting` trial numbers so `pop_waiting_trial` — called on
+    /// every `ask` — is O(1) when the queue is empty. Entries whose trial
+    /// left `Waiting` by a non-pop path are dropped lazily at pop time.
+    waiting: VecDeque<u64>,
+    /// Count of non-`Failed` trials, maintained incrementally so
+    /// `create_trial_capped` is O(1) instead of a scan per claim.
+    non_failed: u64,
 }
 
-impl Inner {
-    /// Record that `trial_id` changed: bump its study's seq, restamp, and
-    /// append to the study's write log.
-    fn touch(&mut self, trial_id: u64) {
-        let sid = self.trial_study[trial_id as usize] as usize;
-        self.studies[sid].seq += 1;
-        self.trial_seq[trial_id as usize] = self.studies[sid].seq;
-        let seq = self.studies[sid].seq;
-        self.studies[sid].write_log.push((seq, trial_id));
+impl StudyState {
+    fn new() -> Self {
+        StudyState {
+            trials: Vec::new(),
+            seq: 0,
+            write_log: Vec::new(),
+            waiting: VecDeque::new(),
+            non_failed: 0,
+        }
     }
 
-    /// Append a new trial record for `study_id` (caller has validated the
-    /// study id) and return (trial_id, number).
-    fn push_trial(&mut self, study_id: u64, trial: FrozenTrial) -> (u64, u64) {
-        let trial_id = trial.id;
-        let number = trial.number;
-        self.trials.push(trial);
-        self.trial_study.push(study_id);
-        self.trial_seq.push(0);
-        self.studies[study_id as usize].trials.push(trial_id);
-        self.touch(trial_id);
-        (trial_id, number)
+    /// Record that trial `number` changed: bump the seq and append to the
+    /// write log.
+    fn touch(&mut self, number: u64) {
+        self.seq += 1;
+        let seq = self.seq;
+        self.write_log.push((seq, number));
     }
 
-    /// Create a fresh `Running` trial (the shared body of `create_trial`
-    /// and `create_trial_capped`).
-    fn create_running(&mut self, study_id: u64) -> (u64, u64) {
-        let trial_id = self.trials.len() as u64;
-        let number = self.studies[study_id as usize].trials.len() as u64;
+    /// Create a fresh `Running` trial (the shared body of `create_trial`,
+    /// `create_trials` and `create_trial_capped`).
+    fn create_running(&mut self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        let number = self.trials.len() as u64;
+        if number >= MAX_TRIALS_PER_STUDY {
+            return Err(OptunaError::Storage(format!(
+                "study {study_id} reached the trial capacity of this backend"
+            )));
+        }
+        let trial_id = compose_id(study_id, number);
         let mut t = FrozenTrial::new(trial_id, number);
         t.datetime_start = Some(now_ms());
-        self.push_trial(study_id, t)
+        self.trials.push(t);
+        self.non_failed += 1;
+        self.touch(number);
+        Ok((trial_id, number))
     }
 
     /// Create a `Waiting` trial carrying a fixed parameter set (the shared
@@ -88,45 +138,97 @@ impl Inner {
         study_id: u64,
         params: &ParamSet,
         user_attrs: &BTreeMap<String, String>,
-    ) -> (u64, u64) {
-        let trial_id = self.trials.len() as u64;
-        let number = self.studies[study_id as usize].trials.len() as u64;
+    ) -> Result<(u64, u64), OptunaError> {
+        let number = self.trials.len() as u64;
+        if number >= MAX_TRIALS_PER_STUDY {
+            return Err(OptunaError::Storage(format!(
+                "study {study_id} reached the trial capacity of this backend"
+            )));
+        }
+        let trial_id = compose_id(study_id, number);
         let mut t = FrozenTrial::new(trial_id, number);
         t.state = TrialState::Waiting;
         t.params = params.clone();
         t.user_attrs = user_attrs.clone();
-        let out = self.push_trial(study_id, t);
-        self.studies[study_id as usize].waiting.push_back(trial_id);
-        out
+        self.trials.push(t);
+        self.non_failed += 1;
+        self.waiting.push_back(number);
+        self.touch(number);
+        Ok((trial_id, number))
+    }
+
+    /// Apply one validated finish to trial `number` (caller has checked
+    /// the state machine).
+    fn apply_finish(&mut self, number: u64, state: TrialState, values: &[f64], now: u64) {
+        let t = &mut self.trials[number as usize];
+        t.state = state;
+        if !values.is_empty() {
+            t.set_values(values);
+        }
+        t.datetime_complete = Some(now);
+        if state == TrialState::Failed {
+            self.non_failed -= 1;
+        }
+        self.touch(number);
     }
 }
 
-/// Process-local storage backend.
+struct Directory {
+    slots: Vec<StudySlot>,
+    by_name: HashMap<String, u64>,
+}
+
+/// Process-local storage backend, lock-striped per study.
 pub struct InMemoryStorage {
-    inner: Mutex<Inner>,
+    dir: RwLock<Directory>,
 }
 
 impl InMemoryStorage {
     pub fn new() -> Self {
         InMemoryStorage {
-            inner: Mutex::new(Inner {
-                studies: Vec::new(),
-                by_name: HashMap::new(),
-                trials: Vec::new(),
-                trial_study: Vec::new(),
-                trial_seq: Vec::new(),
-            }),
+            dir: RwLock::new(Directory { slots: Vec::new(), by_name: HashMap::new() }),
         }
     }
-}
 
-impl Default for InMemoryStorage {
-    fn default() -> Self {
-        Self::new()
+    /// Clone the study's state handle out of the directory (a brief read
+    /// lock) so the caller can lock the shard without holding the
+    /// directory — step 1 → 2 of the lock hierarchy.
+    fn study_state(&self, study_id: u64) -> Result<Arc<RwLock<StudyState>>, OptunaError> {
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        dir.slots
+            .get(study_id as usize)
+            .map(|s| Arc::clone(&s.state))
+            .ok_or_else(|| bad_study(study_id))
     }
-}
 
-impl InMemoryStorage {
+    /// Resolve a trial id to its study shard + per-study number. An id
+    /// whose encoded study does not exist is an unknown trial.
+    fn trial_shard(&self, trial_id: u64) -> Result<(Arc<RwLock<StudyState>>, u64), OptunaError> {
+        let (study_id, number) = decompose_id(trial_id);
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        let slot = dir
+            .slots
+            .get(study_id as usize)
+            .ok_or_else(|| bad_trial(trial_id))?;
+        Ok((Arc::clone(&slot.state), number))
+    }
+
+    /// Run a closure with a write lock on the trial's shard and a checked
+    /// mutable reference to the trial — the shared body of every
+    /// per-trial write.
+    fn with_trial_mut<T>(
+        &self,
+        trial_id: u64,
+        f: impl FnOnce(&mut StudyState, u64) -> Result<T, OptunaError>,
+    ) -> Result<T, OptunaError> {
+        let (shard, number) = self.trial_shard(trial_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        if number as usize >= st.trials.len() {
+            return Err(bad_trial(trial_id));
+        }
+        f(&mut st, number)
+    }
+
     /// Shared body of `finish_trial` / `finish_trial_values`: state-machine
     /// checks, then the objective vector (empty = keep whatever the trial
     /// carried, e.g. a pruned trial's last intermediate).
@@ -139,24 +241,22 @@ impl InMemoryStorage {
         if !state.is_finished() {
             return Err(OptunaError::Storage("finish_trial with Running state".into()));
         }
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        if t.state.is_finished() {
-            return Err(OptunaError::Conflict(format!(
-                "trial {trial_id} already finished as {}",
-                t.state.as_str()
-            )));
-        }
-        t.state = state;
-        if !values.is_empty() {
-            t.set_values(values);
-        }
-        t.datetime_complete = Some(now_ms());
-        g.touch(trial_id);
-        Ok(())
+        self.with_trial_mut(trial_id, |st, number| {
+            if st.trials[number as usize].state.is_finished() {
+                return Err(OptunaError::Conflict(format!(
+                    "trial {trial_id} already finished as {}",
+                    st.trials[number as usize].state.as_str()
+                )));
+            }
+            st.apply_finish(number, state, values, now_ms());
+            Ok(())
+        })
+    }
+}
+
+impl Default for InMemoryStorage {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -183,60 +283,62 @@ impl Storage for InMemoryStorage {
                 "a study needs at least one objective direction".into(),
             ));
         }
-        let mut g = self.inner.lock().unwrap();
-        if g.by_name.contains_key(name) {
+        let mut dir = self.dir.write().map_err(lock_poisoned)?;
+        if dir.by_name.contains_key(name) {
             return Err(OptunaError::Storage(format!("study '{name}' already exists")));
         }
-        let id = g.studies.len() as u64;
-        g.studies.push(StudyRec {
+        if dir.slots.len() as u64 >= MAX_STUDIES {
+            return Err(OptunaError::Storage(
+                "study capacity of this backend reached".into(),
+            ));
+        }
+        let id = dir.slots.len() as u64;
+        dir.slots.push(StudySlot {
             name: name.to_string(),
             directions: directions.to_vec(),
-            trials: Vec::new(),
-            seq: 0,
-            write_log: Vec::new(),
-            waiting: VecDeque::new(),
+            state: Arc::new(RwLock::new(StudyState::new())),
         });
-        g.by_name.insert(name.to_string(), id);
+        dir.by_name.insert(name.to_string(), id);
         Ok(id)
     }
 
     fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
-        Ok(self.inner.lock().unwrap().by_name.get(name).copied())
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        Ok(dir.by_name.get(name).copied())
     }
 
     fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        g.studies
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        dir.slots
             .get(study_id as usize)
             .map(|s| s.directions[0])
             .ok_or_else(|| bad_study(study_id))
     }
 
     fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        g.studies
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        dir.slots
             .get(study_id as usize)
             .map(|s| s.directions.clone())
             .ok_or_else(|| bad_study(study_id))
     }
 
     fn study_names(&self) -> Result<Vec<String>, OptunaError> {
-        Ok(self
-            .inner
-            .lock()
-            .unwrap()
-            .studies
-            .iter()
-            .map(|s| s.name.clone())
-            .collect())
+        let dir = self.dir.read().map_err(lock_poisoned)?;
+        Ok(dir.slots.iter().map(|s| s.name.clone()).collect())
     }
 
     fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        if study_id as usize >= g.studies.len() {
-            return Err(bad_study(study_id));
-        }
-        Ok(g.create_running(study_id))
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        st.create_running(study_id)
+    }
+
+    /// Batched creation: the whole batch is one study-lock acquisition.
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        (0..n).map(|_| st.create_running(study_id)).collect()
     }
 
     fn set_trial_param(
@@ -246,14 +348,13 @@ impl Storage for InMemoryStorage {
         dist: &Distribution,
         internal: f64,
     ) -> Result<(), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        t.params.insert(name.to_string(), (dist.clone(), internal));
-        g.touch(trial_id);
-        Ok(())
+        self.with_trial_mut(trial_id, |st, number| {
+            st.trials[number as usize]
+                .params
+                .insert(name.to_string(), (dist.clone(), internal));
+            st.touch(number);
+            Ok(())
+        })
     }
 
     fn set_trial_intermediate(
@@ -262,14 +363,11 @@ impl Storage for InMemoryStorage {
         step: u64,
         value: f64,
     ) -> Result<(), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        t.intermediate.insert(step, value);
-        g.touch(trial_id);
-        Ok(())
+        self.with_trial_mut(trial_id, |st, number| {
+            st.trials[number as usize].intermediate.insert(step, value);
+            st.touch(number);
+            Ok(())
+        })
     }
 
     fn set_trial_user_attr(
@@ -278,14 +376,13 @@ impl Storage for InMemoryStorage {
         key: &str,
         value: &str,
     ) -> Result<(), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        t.user_attrs.insert(key.to_string(), value.to_string());
-        g.touch(trial_id);
-        Ok(())
+        self.with_trial_mut(trial_id, |st, number| {
+            st.trials[number as usize]
+                .user_attrs
+                .insert(key.to_string(), value.to_string());
+            st.touch(number);
+            Ok(())
+        })
     }
 
     fn finish_trial(
@@ -309,37 +406,101 @@ impl Storage for InMemoryStorage {
         self.finish_with(trial_id, state, values)
     }
 
+    /// Batched finish: one study-lock acquisition per involved study
+    /// (locks taken in ascending study-id order, per the module-level
+    /// hierarchy), **atomic** — the whole batch is validated before any
+    /// entry is applied, so a conflict rejects the batch with no partial
+    /// state.
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        if finishes.is_empty() {
+            return Ok(());
+        }
+        for f in finishes {
+            if !f.state.is_finished() {
+                return Err(OptunaError::Storage(
+                    "finish_trials with Running state".into(),
+                ));
+            }
+        }
+        // resolve every involved shard under one directory read, in
+        // ascending study-id order (BTreeMap iteration)
+        let mut shards: BTreeMap<u64, Arc<RwLock<StudyState>>> = BTreeMap::new();
+        {
+            let dir = self.dir.read().map_err(lock_poisoned)?;
+            for f in finishes {
+                let (sid, _) = decompose_id(f.trial_id);
+                if !shards.contains_key(&sid) {
+                    let slot = dir
+                        .slots
+                        .get(sid as usize)
+                        .ok_or_else(|| bad_trial(f.trial_id))?;
+                    shards.insert(sid, Arc::clone(&slot.state));
+                }
+            }
+        }
+        let mut guards: BTreeMap<u64, RwLockWriteGuard<'_, StudyState>> = BTreeMap::new();
+        for (sid, shard) in &shards {
+            guards.insert(*sid, shard.write().map_err(lock_poisoned)?);
+        }
+        // validate the whole batch (duplicates included) before applying
+        let mut seen = HashSet::new();
+        for f in finishes {
+            let (sid, number) = decompose_id(f.trial_id);
+            let st = guards.get(&sid).expect("resolved above");
+            let t = st
+                .trials
+                .get(number as usize)
+                .ok_or_else(|| bad_trial(f.trial_id))?;
+            if t.state.is_finished() {
+                return Err(OptunaError::Conflict(format!(
+                    "trial {} already finished as {}",
+                    f.trial_id,
+                    t.state.as_str()
+                )));
+            }
+            if !seen.insert(f.trial_id) {
+                return Err(OptunaError::Conflict(format!(
+                    "trial {} finished twice in one batch",
+                    f.trial_id
+                )));
+            }
+        }
+        let now = now_ms();
+        for f in finishes {
+            let (sid, number) = decompose_id(f.trial_id);
+            let st = guards.get_mut(&sid).expect("resolved above");
+            st.apply_finish(number, f.state, &f.values, now);
+        }
+        Ok(())
+    }
+
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        g.trials
-            .get(trial_id as usize)
+        let (shard, number) = self.trial_shard(trial_id)?;
+        let st = shard.read().map_err(lock_poisoned)?;
+        st.trials
+            .get(number as usize)
             .cloned()
             .ok_or_else(|| bad_trial(trial_id))
     }
 
     fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        let s = g.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
-        Ok(s.trials
-            .iter()
-            .map(|&tid| g.trials[tid as usize].clone())
-            .collect())
+        let shard = self.study_state(study_id)?;
+        let st = shard.read().map_err(lock_poisoned)?;
+        // trials are indexed by number, so the clone is already in the
+        // contract's number order
+        Ok(st.trials.clone())
     }
 
     fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        g.studies
-            .get(study_id as usize)
-            .map(|s| s.trials.len())
-            .ok_or_else(|| bad_study(study_id))
+        let shard = self.study_state(study_id)?;
+        let st = shard.read().map_err(lock_poisoned)?;
+        Ok(st.trials.len())
     }
 
     fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        g.studies
-            .get(study_id as usize)
-            .map(|s| s.seq)
-            .ok_or_else(|| bad_study(study_id))
+        let shard = self.study_state(study_id)?;
+        let st = shard.read().map_err(lock_poisoned)?;
+        Ok(st.seq)
     }
 
     fn get_trials_since(
@@ -347,41 +508,43 @@ impl Storage for InMemoryStorage {
         study_id: u64,
         since_seq: u64,
     ) -> Result<TrialDelta, OptunaError> {
-        let g = self.inner.lock().unwrap();
-        let s = g.studies.get(study_id as usize).ok_or_else(|| bad_study(study_id))?;
+        let shard = self.study_state(study_id)?;
+        let st = shard.read().map_err(lock_poisoned)?;
         // Binary-search the write log (seqs are strictly increasing) and
         // dedup the tail: O(log writes + changed), not O(all trials) —
         // this is the hot call of both the snapshot cache and the
         // observation index.
-        let start = s.write_log.partition_point(|&(seq, _)| seq <= since_seq);
+        let start = st.write_log.partition_point(|&(seq, _)| seq <= since_seq);
         let mut seen = HashSet::new();
-        let mut ids: Vec<u64> = Vec::new();
-        for &(_, tid) in &s.write_log[start..] {
-            if seen.insert(tid) {
-                ids.push(tid);
+        let mut numbers: Vec<u64> = Vec::new();
+        for &(_, num) in &st.write_log[start..] {
+            if seen.insert(num) {
+                numbers.push(num);
             }
         }
         // the contract requires number order
-        ids.sort_unstable_by_key(|&tid| g.trials[tid as usize].number);
-        let trials = ids.iter().map(|&tid| g.trials[tid as usize].clone()).collect();
-        Ok(TrialDelta { seq: s.seq, trials })
+        numbers.sort_unstable();
+        let trials = numbers
+            .iter()
+            .map(|&num| st.trials[num as usize].clone())
+            .collect();
+        Ok(TrialDelta { seq: st.seq, trials })
     }
 
     fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .trials
-            .get_mut(trial_id as usize)
-            .ok_or_else(|| bad_trial(trial_id))?;
-        if t.state != TrialState::Running {
-            return Ok(()); // ticker raced a completion/reap: benign
-        }
-        t.last_heartbeat = Some(now_ms());
-        // deliberately NO touch(): heartbeats are liveness metadata read
-        // directly by fail_stale_trials, not snapshot state — bumping the
-        // seq here would invalidate every worker's cached snapshot (an
-        // O(n) rebuild) once per heartbeat interval for no consumer
-        Ok(())
+        self.with_trial_mut(trial_id, |st, number| {
+            let t = &mut st.trials[number as usize];
+            if t.state != TrialState::Running {
+                return Ok(()); // ticker raced a completion/reap: benign
+            }
+            t.last_heartbeat = Some(now_ms());
+            // deliberately NO touch(): heartbeats are liveness metadata
+            // read directly by fail_stale_trials, not snapshot state —
+            // bumping the seq here would invalidate every worker's cached
+            // snapshot (an O(n) rebuild) once per heartbeat interval for
+            // no consumer
+            Ok(())
+        })
     }
 
     fn fail_stale_trials(
@@ -392,35 +555,35 @@ impl Storage for InMemoryStorage {
     ) -> Result<Vec<FrozenTrial>, OptunaError> {
         let now = now_ms();
         let cutoff = now.saturating_sub(grace.as_millis() as u64);
-        let mut g = self.inner.lock().unwrap();
-        if study_id as usize >= g.studies.len() {
-            return Err(bad_study(study_id));
-        }
-        let stale: Vec<u64> = g.studies[study_id as usize]
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        let stale: Vec<u64> = st
             .trials
             .iter()
-            .copied()
-            .filter(|&tid| {
-                let t = &g.trials[tid as usize];
+            .filter(|t| {
                 t.state == TrialState::Running
                     && t.last_alive_ms().map(|ms| ms < cutoff).unwrap_or(false)
             })
+            .map(|t| t.number)
             .collect();
         let mut victims = Vec::with_capacity(stale.len());
-        for tid in stale {
-            let t = &mut g.trials[tid as usize];
-            t.state = TrialState::Failed;
-            t.datetime_complete = Some(now);
-            t.user_attrs
-                .insert("fail_reason".to_string(), "heartbeat expired".to_string());
-            victims.push(t.clone());
-            g.touch(tid);
-            // retry atomically with the flip (see the trait contract)
-            let victim = victims.last().expect("just pushed");
-            if let Some(attrs) = requeue(victim) {
-                let params = victim.params.clone();
-                g.enqueue_waiting(study_id, &params, &attrs);
+        for num in stale {
+            {
+                let t = &mut st.trials[num as usize];
+                t.state = TrialState::Failed;
+                t.datetime_complete = Some(now);
+                t.user_attrs
+                    .insert("fail_reason".to_string(), "heartbeat expired".to_string());
             }
+            st.non_failed -= 1;
+            st.touch(num);
+            let victim = st.trials[num as usize].clone();
+            // retry atomically with the flip (see the trait contract)
+            if let Some(attrs) = requeue(&victim) {
+                let params = victim.params.clone();
+                st.enqueue_waiting(study_id, &params, &attrs)?;
+            }
+            victims.push(victim);
         }
         Ok(victims)
     }
@@ -431,33 +594,29 @@ impl Storage for InMemoryStorage {
         params: &ParamSet,
         user_attrs: &BTreeMap<String, String>,
     ) -> Result<(u64, u64), OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        if study_id as usize >= g.studies.len() {
-            return Err(bad_study(study_id));
-        }
-        Ok(g.enqueue_waiting(study_id, params, user_attrs))
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        st.enqueue_waiting(study_id, params, user_attrs)
     }
 
     fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        if study_id as usize >= g.studies.len() {
-            return Err(bad_study(study_id));
-        }
-        let tid = loop {
-            match g.studies[study_id as usize].waiting.pop_front() {
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        let num = loop {
+            match st.waiting.pop_front() {
                 None => return Ok(None),
-                Some(tid) if g.trials[tid as usize].state == TrialState::Waiting => break tid,
+                Some(num) if st.trials[num as usize].state == TrialState::Waiting => break num,
                 Some(_) => continue, // left Waiting by a non-pop path: drop
             }
         };
         let now = now_ms();
-        let t = &mut g.trials[tid as usize];
+        let t = &mut st.trials[num as usize];
         t.state = TrialState::Running;
         t.datetime_start = Some(now);
         t.last_heartbeat = Some(now);
-        let number = t.number;
-        g.touch(tid);
-        Ok(Some((tid, number)))
+        let out = (t.id, t.number);
+        st.touch(num);
+        Ok(Some(out))
     }
 
     fn create_trial_capped(
@@ -465,19 +624,12 @@ impl Storage for InMemoryStorage {
         study_id: u64,
         cap: u64,
     ) -> Result<Option<(u64, u64)>, OptunaError> {
-        let mut g = self.inner.lock().unwrap();
-        if study_id as usize >= g.studies.len() {
-            return Err(bad_study(study_id));
-        }
-        let active = g.studies[study_id as usize]
-            .trials
-            .iter()
-            .filter(|&&tid| g.trials[tid as usize].state != TrialState::Failed)
-            .count() as u64;
-        if active >= cap {
+        let shard = self.study_state(study_id)?;
+        let mut st = shard.write().map_err(lock_poisoned)?;
+        if st.non_failed >= cap {
             return Ok(None);
         }
-        Ok(Some(g.create_running(study_id)))
+        st.create_running(study_id).map(Some)
     }
 }
 
@@ -487,7 +639,6 @@ mod tests {
     use crate::prop_assert;
     use crate::storage::conformance;
     use crate::util::quickcheck::check;
-    use std::sync::Arc;
 
     #[test]
     fn conformance_suite() {
@@ -542,6 +693,22 @@ mod tests {
     }
 
     #[test]
+    fn trial_ids_unique_across_studies() {
+        let s = InMemoryStorage::new();
+        let a = s.create_study("ids-a", StudyDirection::Minimize).unwrap();
+        let b = s.create_study("ids-b", StudyDirection::Minimize).unwrap();
+        let (ta, na) = s.create_trial(a).unwrap();
+        let (tb, nb) = s.create_trial(b).unwrap();
+        assert_eq!((na, nb), (0, 0), "numbers are per-study");
+        assert_ne!(ta, tb, "ids are storage-wide unique");
+        assert_eq!(s.get_trial(ta).unwrap().number, 0);
+        assert_eq!(s.get_trial(tb).unwrap().number, 0);
+        // unknown ids (bad study bits, bad number bits) are typed errors
+        assert!(s.get_trial(compose_id(99, 0)).is_err());
+        assert!(s.get_trial(compose_id(a, 99)).is_err());
+    }
+
+    #[test]
     fn concurrent_trial_creation_unique_numbers() {
         let s = Arc::new(InMemoryStorage::new());
         let sid = s.create_study("par", StudyDirection::Minimize).unwrap();
@@ -558,6 +725,98 @@ mod tests {
             .collect();
         numbers.sort_unstable();
         assert_eq!(numbers, (0..400).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn batched_create_and_finish() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("batch", StudyDirection::Minimize).unwrap();
+        let created = s.create_trials(sid, 4).unwrap();
+        let numbers: Vec<u64> = created.iter().map(|&(_, n)| n).collect();
+        assert_eq!(numbers, vec![0, 1, 2, 3]);
+        let finishes: Vec<TrialFinish> = created
+            .iter()
+            .map(|&(tid, n)| TrialFinish {
+                trial_id: tid,
+                state: TrialState::Complete,
+                values: vec![n as f64],
+            })
+            .collect();
+        s.finish_trials(&finishes).unwrap();
+        let all = s.get_all_trials(sid).unwrap();
+        assert!(all.iter().all(|t| t.state == TrialState::Complete));
+        assert_eq!(all[3].value, Some(3.0));
+    }
+
+    #[test]
+    fn batched_finish_is_atomic_on_conflict() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("atomic", StudyDirection::Minimize).unwrap();
+        let (done, _) = s.create_trial(sid).unwrap();
+        let (fresh, _) = s.create_trial(sid).unwrap();
+        s.finish_trial(done, TrialState::Complete, Some(1.0)).unwrap();
+        let batch = [
+            TrialFinish { trial_id: fresh, state: TrialState::Complete, values: vec![2.0] },
+            TrialFinish { trial_id: done, state: TrialState::Complete, values: vec![3.0] },
+        ];
+        assert!(matches!(s.finish_trials(&batch), Err(OptunaError::Conflict(_))));
+        // nothing from the rejected batch landed
+        assert_eq!(s.get_trial(fresh).unwrap().state, TrialState::Running);
+        assert_eq!(s.get_trial(done).unwrap().value, Some(1.0));
+        // a duplicate within one batch is the same conflict
+        let dup = [
+            TrialFinish { trial_id: fresh, state: TrialState::Complete, values: vec![1.0] },
+            TrialFinish { trial_id: fresh, state: TrialState::Failed, values: vec![] },
+        ];
+        assert!(matches!(s.finish_trials(&dup), Err(OptunaError::Conflict(_))));
+        assert_eq!(s.get_trial(fresh).unwrap().state, TrialState::Running);
+    }
+
+    #[test]
+    fn batched_finish_spans_studies_in_lock_order() {
+        let s = InMemoryStorage::new();
+        let a = s.create_study("span-a", StudyDirection::Minimize).unwrap();
+        let b = s.create_study("span-b", StudyDirection::Minimize).unwrap();
+        let (ta, _) = s.create_trial(a).unwrap();
+        let (tb, _) = s.create_trial(b).unwrap();
+        // deliberately out of study order: the impl sorts before locking
+        let batch = [
+            TrialFinish { trial_id: tb, state: TrialState::Complete, values: vec![2.0] },
+            TrialFinish { trial_id: ta, state: TrialState::Complete, values: vec![1.0] },
+        ];
+        s.finish_trials(&batch).unwrap();
+        assert_eq!(s.get_trial(ta).unwrap().value, Some(1.0));
+        assert_eq!(s.get_trial(tb).unwrap().value, Some(2.0));
+    }
+
+    #[test]
+    fn capped_counter_stays_consistent() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("cap-count", StudyDirection::Minimize).unwrap();
+        let no_requeue = |_: &FrozenTrial| -> Option<BTreeMap<String, String>> { None };
+        // mixed lifecycle: creates, finishes, a reap, an enqueue+pop
+        let (t0, _) = s.create_trial(sid).unwrap();
+        let (t1, _) = s.create_trial(sid).unwrap();
+        s.finish_trial(t0, TrialState::Complete, Some(1.0)).unwrap();
+        s.finish_trial(t1, TrialState::Failed, None).unwrap();
+        s.enqueue_trial(sid, &ParamSet::new(), &BTreeMap::new()).unwrap();
+        s.pop_waiting_trial(sid).unwrap().unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        // reaps the popped (now stale Running) trial
+        let victims = s.fail_stale_trials(sid, Duration::from_millis(1), &no_requeue).unwrap();
+        assert_eq!(victims.len(), 1);
+        let scan = s
+            .get_all_trials(sid)
+            .unwrap()
+            .iter()
+            .filter(|t| t.state != TrialState::Failed)
+            .count() as u64;
+        let shard = s.study_state(sid).unwrap();
+        assert_eq!(shard.read().unwrap().non_failed, scan, "counter == scan");
+        // and the cap honors it: 1 non-failed (the Complete trial)
+        assert_eq!(scan, 1);
+        assert!(s.create_trial_capped(sid, 1).unwrap().is_none());
+        assert!(s.create_trial_capped(sid, 2).unwrap().is_some());
     }
 
     #[test]

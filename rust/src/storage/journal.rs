@@ -19,10 +19,22 @@
 //! {"op":"enqueue","study":S,"params":[..],"attrs":[..]}
 //! {"op":"start","trial":T,"time":MS}              (claim a Waiting trial)
 //! {"op":"torn"}                                   (healing marker, no-op)
+//! {"op":"create_trials","study":S,"n":N,"time":MS}        (batched ask)
+//! {"op":"finish_trials","time":MS,"finishes":[{..},..]}   (batched tell)
 //! ```
 //! Ids are implicit: the i-th `create_study` line defines study id i, the
-//! i-th `create_trial`/`enqueue` line defines trial id i — so every
+//! i-th `create_trial`/`enqueue` line defines trial id i (a
+//! `create_trials` record defines `n` consecutive ids) — so every
 //! process derives identical ids from the identical byte stream.
+//!
+//! The batched ops (`create_trials`, `finish_trials`) are the journal
+//! half of the batched ask/tell pipeline: one exclusive flock and one
+//! appended record per batch instead of one per trial. Because
+//! `create_trials` assigns ids, journals containing it need a binary
+//! that knows the op (the format-bump case the forward-compatibility
+//! note below calls out); batch size 1 therefore falls back to the
+//! single-trial ops, keeping journals written by unbatched workloads
+//! byte-compatible with older binaries.
 //!
 //! Crash tolerance: a writer killed mid-append leaves a torn final line
 //! (no trailing `\n`). Replay never applies it, and the *next* writer
@@ -43,7 +55,7 @@
 //! objective-0 projection (the `value`/`direction` mirrors are always
 //! written alongside the vectors).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::os::unix::io::AsRawFd;
@@ -52,7 +64,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{now_ms, ParamSet, Storage, TrialDelta};
+use crate::storage::{now_ms, ParamSet, Storage, TrialDelta, TrialFinish};
 use crate::util::json::Json;
 
 /// Minimal `flock(2)` binding so the crate stays dependency-free. The
@@ -467,6 +479,53 @@ fn enqueue_entry(study_id: u64, params: &ParamSet, user_attrs: &BTreeMap<String,
     ])
 }
 
+/// Replay body of one trial creation (shared by the `create_trial` and
+/// `create_trials` ops): append a fresh `Running` trial to `sid`.
+fn apply_create_trial(state: &mut Replayed, sid: usize, time: Option<u64>) {
+    let tid = state.trials.len() as u64;
+    let number = state.studies[sid].trials.len() as u64;
+    let mut t = FrozenTrial::new(tid, number);
+    // writer clock; absent in pre-timestamp journals
+    t.datetime_start = time;
+    state.trials.push(t);
+    state.trial_study.push(sid as u64);
+    state.trial_seq.push(0);
+    state.studies[sid].trials.push(tid);
+    state.touch(tid as usize);
+}
+
+/// Replay body of one trial finish (shared by the `finish` op and each
+/// item of a `finish_trials` op). `fields` carries `state`/`value`/
+/// `values`; `time` is the writer's completion stamp.
+fn apply_finish_fields(
+    state: &mut Replayed,
+    tid: usize,
+    fields: &Json,
+    time: Option<u64>,
+) -> Result<(), OptunaError> {
+    let st = TrialState::from_str(fields.get("state").and_then(|s| s.as_str()).unwrap_or(""))?;
+    state.trials[tid].state = st;
+    // `values` (multi-objective) wins; scalar `value` is the
+    // pre-`values` journal fallback. Elements decode through
+    // `decode_value` (non-finite marker strings), never dropped:
+    // arity is load-bearing.
+    let vector: Option<Vec<f64>> = fields
+        .get("values")
+        .and_then(|v| v.as_arr())
+        .map(|arr| arr.iter().map(decode_value).collect());
+    match vector {
+        Some(vals) if !vals.is_empty() => state.trials[tid].set_values(&vals),
+        _ => {
+            if let Some(v) = fields.get("value").and_then(|v| v.as_f64()) {
+                state.trials[tid].value = Some(v);
+            }
+        }
+    }
+    state.trials[tid].datetime_complete = time;
+    state.touch(tid);
+    Ok(())
+}
+
 /// Apply one journal entry to the replayed state.
 fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
     let op = entry
@@ -520,16 +579,26 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
             if sid >= state.studies.len() {
                 return Err(bad_study(sid as u64));
             }
-            let tid = state.trials.len() as u64;
-            let number = state.studies[sid].trials.len() as u64;
-            let mut t = FrozenTrial::new(tid, number);
-            // writer clock; absent in pre-timestamp journals
-            t.datetime_start = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            state.trials.push(t);
-            state.trial_study.push(sid as u64);
-            state.trial_seq.push(0);
-            state.studies[sid].trials.push(tid);
-            state.touch(tid as usize);
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            apply_create_trial(state, sid, time);
+        }
+        "create_trials" => {
+            let sid = entry
+                .get("study")
+                .and_then(|s| s.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trials missing study".into()))?
+                as usize;
+            if sid >= state.studies.len() {
+                return Err(bad_study(sid as u64));
+            }
+            let n = entry
+                .get("n")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trials missing n".into()))?;
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            for _ in 0..n {
+                apply_create_trial(state, sid, time);
+            }
         }
         "enqueue" => {
             let sid = entry
@@ -636,29 +705,19 @@ fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
         }
         "finish" => {
             let tid = get_trial(state, entry)?;
-            let st = TrialState::from_str(
-                entry.get("state").and_then(|s| s.as_str()).unwrap_or(""),
-            )?;
-            state.trials[tid].state = st;
-            // `values` (multi-objective) wins; scalar `value` is the
-            // pre-`values` journal fallback. Elements decode through
-            // `decode_value` (non-finite marker strings), never dropped:
-            // arity is load-bearing.
-            let vector: Option<Vec<f64>> = entry
-                .get("values")
-                .and_then(|v| v.as_arr())
-                .map(|arr| arr.iter().map(decode_value).collect());
-            match vector {
-                Some(vals) if !vals.is_empty() => state.trials[tid].set_values(&vals),
-                _ => {
-                    if let Some(v) = entry.get("value").and_then(|v| v.as_f64()) {
-                        state.trials[tid].value = Some(v);
-                    }
-                }
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            apply_finish_fields(state, tid, entry, time)?;
+        }
+        "finish_trials" => {
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            let items = entry
+                .get("finishes")
+                .and_then(|f| f.as_arr())
+                .ok_or_else(|| OptunaError::Storage("finish_trials missing finishes".into()))?;
+            for item in items {
+                let tid = get_trial(state, item)?;
+                apply_finish_fields(state, tid, item, time)?;
             }
-            state.trials[tid].datetime_complete =
-                entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            state.touch(tid);
         }
         _other => {
             // Forward compatibility: ops unknown to this binary are
@@ -754,6 +813,35 @@ impl Storage for JournalStorage {
             self.append_locked(state, file, &create_trial_entry(study_id))?;
             let tid = state.trials.len() as u64 - 1;
             Ok((tid, state.trials[tid as usize].number))
+        })
+    }
+
+    /// Batched creation: one exclusive flock and **one** appended
+    /// `create_trials` record for the whole batch (batch size 1 falls
+    /// back to the plain `create_trial` op — see the module docs on
+    /// format compatibility).
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 1 {
+            return self.create_trial(study_id).map(|pair| vec![pair]);
+        }
+        self.with_write(|state, file| {
+            if study_id as usize >= state.studies.len() {
+                return Err(bad_study(study_id));
+            }
+            let entry = Json::obj(vec![
+                ("op", Json::Str("create_trials".into())),
+                ("study", Json::Num(study_id as f64)),
+                ("n", Json::Num(n as f64)),
+                ("time", Json::Num(now_ms() as f64)),
+            ]);
+            self.append_locked(state, file, &entry)?;
+            let total = state.trials.len();
+            Ok((total - n..total)
+                .map(|i| (i as u64, state.trials[i].number))
+                .collect())
         })
     }
 
@@ -853,6 +941,80 @@ impl Storage for JournalStorage {
             [v] => self.finish_with(trial_id, state, Some(*v), None),
             _ => self.finish_with(trial_id, state, Some(values[0]), Some(values)),
         }
+    }
+
+    /// Batched finish: one exclusive flock and **one** appended
+    /// `finish_trials` record. Atomic — the batch is validated (every
+    /// trial unfinished, no duplicates) before the record is written, so
+    /// a conflict rejects the whole batch. Batch size 1 falls back to the
+    /// scalar `finish` op, keeping single-objective journals byte-stable.
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        if finishes.is_empty() {
+            return Ok(());
+        }
+        if finishes.len() == 1 {
+            let f = &finishes[0];
+            return self.finish_trial_values(f.trial_id, f.state, &f.values);
+        }
+        for f in finishes {
+            if !f.state.is_finished() {
+                return Err(OptunaError::Storage("finish_trials with Running state".into()));
+            }
+        }
+        let items: Vec<Json> = finishes
+            .iter()
+            .map(|f| {
+                // scalar `value` mirrors objective 0 (finite only — the
+                // lossless `values` encoding carries non-finite exactly)
+                let mirror = f
+                    .values
+                    .first()
+                    .copied()
+                    .filter(|v| v.is_finite())
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null);
+                let mut fields = vec![
+                    ("trial", Json::Num(f.trial_id as f64)),
+                    ("state", Json::Str(f.state.as_str().into())),
+                    ("value", mirror),
+                ];
+                if !f.values.is_empty() {
+                    fields.push((
+                        "values",
+                        Json::Arr(f.values.iter().map(|&v| encode_value(v)).collect()),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let entry = Json::obj(vec![
+            ("op", Json::Str("finish_trials".into())),
+            ("time", Json::Num(now_ms() as f64)),
+            ("finishes", Json::Arr(items)),
+        ]);
+        self.with_write(|state, file| {
+            let mut seen = HashSet::new();
+            for f in finishes {
+                match state.trials.get(f.trial_id as usize) {
+                    None => return Err(bad_trial(f.trial_id)),
+                    Some(t) if t.state.is_finished() => {
+                        return Err(OptunaError::Conflict(format!(
+                            "trial {} already finished as {}",
+                            f.trial_id,
+                            t.state.as_str()
+                        )))
+                    }
+                    Some(_) => {}
+                }
+                if !seen.insert(f.trial_id) {
+                    return Err(OptunaError::Conflict(format!(
+                        "trial {} finished twice in one batch",
+                        f.trial_id
+                    )));
+                }
+            }
+            self.append_locked(state, file, &entry)
+        })
     }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
@@ -1173,6 +1335,58 @@ mod tests {
         let t = &s.get_all_trials(sid).unwrap()[0];
         assert_eq!(t.values, vec![0.25, -1.5]);
         assert_eq!(t.value, Some(0.25), "scalar mirror for objective 0");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn batched_records_replay_and_stay_atomic() {
+        let p = tmp_path("batched");
+        let (created, sid) = {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study("b", StudyDirection::Minimize).unwrap();
+            let created = s.create_trials(sid, 3).unwrap();
+            let numbers: Vec<u64> = created.iter().map(|&(_, n)| n).collect();
+            assert_eq!(numbers, vec![0, 1, 2]);
+            s.finish_trials(&[
+                TrialFinish {
+                    trial_id: created[0].0,
+                    state: TrialState::Complete,
+                    values: vec![0.5],
+                },
+                TrialFinish {
+                    trial_id: created[1].0,
+                    state: TrialState::Complete,
+                    values: vec![1.5, f64::NEG_INFINITY],
+                },
+            ])
+            .unwrap();
+            (created, sid)
+        };
+        // a fresh handle (≈ restart) replays the batched records exactly
+        let s = JournalStorage::open(&p).unwrap();
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].value, Some(0.5));
+        assert_eq!(all[1].values, vec![1.5, f64::NEG_INFINITY]);
+        assert_eq!(all[1].value, Some(1.5), "scalar mirror for objective 0");
+        assert_eq!(all[2].state, TrialState::Running);
+        // a conflicting batch is rejected atomically: the fresh trial of
+        // the batch must not be finished either
+        let batch = [
+            TrialFinish {
+                trial_id: created[2].0,
+                state: TrialState::Complete,
+                values: vec![9.0],
+            },
+            TrialFinish {
+                trial_id: created[0].0,
+                state: TrialState::Failed,
+                values: vec![],
+            },
+        ];
+        assert!(matches!(s.finish_trials(&batch), Err(OptunaError::Conflict(_))));
+        assert_eq!(s.get_trial(created[2].0).unwrap().state, TrialState::Running);
+        assert_eq!(s.get_trial(created[0].0).unwrap().value, Some(0.5));
         std::fs::remove_file(p).ok();
     }
 

@@ -25,10 +25,12 @@
 mod cached;
 mod in_memory;
 mod journal;
+mod single_mutex;
 
 pub use cached::CachedStorage;
 pub use in_memory::InMemoryStorage;
 pub use journal::JournalStorage;
+pub use single_mutex::SingleMutexStorage;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -52,6 +54,20 @@ pub type ParamSet = BTreeMap<String, (Distribution, f64)>;
 /// Sentinel sequence number meaning "this backend does not track
 /// per-study sequence numbers". See [`Storage::study_seq`].
 pub const SEQ_UNTRACKED: u64 = u64::MAX;
+
+/// One entry of a batched [`Storage::finish_trials`] call.
+///
+/// `values` follows the [`Storage::finish_trial_values`] semantics: empty
+/// keeps whatever value the trial already carried (e.g. a pruned trial's
+/// last intermediate), one element is the scalar path, and more is a
+/// multi-objective tell (backends install the `value == values[0]`
+/// mirror).
+#[derive(Debug, Clone)]
+pub struct TrialFinish {
+    pub trial_id: u64,
+    pub state: TrialState,
+    pub values: Vec<f64>,
+}
 
 /// A batch of trial changes, as returned by [`Storage::get_trials_since`].
 #[derive(Debug, Clone)]
@@ -163,6 +179,20 @@ pub trait Storage: Send + Sync {
     /// Create a running trial; returns (trial_id, trial_number).
     fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError>;
 
+    /// Create `n` running trials in one storage round-trip — the batched
+    /// half of the ask pipeline ([`crate::study::Study::ask_batch`]).
+    /// Returns the (trial_id, trial_number) pairs in creation order.
+    ///
+    /// The default loops over [`Storage::create_trial`]; the shipped
+    /// backends override it to claim the whole batch under **one**
+    /// critical section (one study-lock acquisition in
+    /// [`InMemoryStorage`], one exclusive flock + one appended record in
+    /// [`JournalStorage`]), which is what makes high-frequency ask/tell
+    /// loops scale — see `benches/fig_throughput.rs`.
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        (0..n).map(|_| self.create_trial(study_id)).collect()
+    }
+
     /// Record a sampled parameter (internal representation).
     fn set_trial_param(
         &self,
@@ -208,6 +238,23 @@ pub trait Storage: Send + Sync {
                 values.len()
             ))),
         }
+    }
+
+    /// Finish a batch of trials in one storage round-trip — the batched
+    /// half of the tell pipeline ([`crate::study::Study::tell_batch`]).
+    ///
+    /// The default loops over [`Storage::finish_trial_values`] and is
+    /// therefore **not** atomic (entries before an error stay applied).
+    /// The shipped backends override it to run the whole batch under one
+    /// critical section and make it atomic: the batch is validated first
+    /// (every trial unfinished, no trial finished twice within the
+    /// batch), and a [`OptunaError::Conflict`] rejects the batch with no
+    /// partial state.
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        for f in finishes {
+            self.finish_trial_values(f.trial_id, f.state, &f.values)?;
+        }
+        Ok(())
     }
 
     fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError>;
@@ -426,6 +473,118 @@ pub(crate) mod conformance {
         waiting_queue(storage);
         capped_creation(storage);
         multi_objective_values(storage);
+        batched_ops(storage);
+    }
+
+    fn batched_ops(s: &dyn Storage) {
+        let sid = s.create_study("conf-batch", StudyDirection::Minimize).unwrap();
+        // empty batches are no-ops
+        assert!(s.create_trials(sid, 0).unwrap().is_empty());
+        s.finish_trials(&[]).unwrap();
+        // a batch creates dense, ordered numbers
+        let created = s.create_trials(sid, 3).unwrap();
+        let numbers: Vec<u64> = created.iter().map(|&(_, n)| n).collect();
+        assert_eq!(numbers, vec![0, 1, 2]);
+        assert_eq!(s.n_trials(sid).unwrap(), 3);
+        assert!(s
+            .get_all_trials(sid)
+            .unwrap()
+            .iter()
+            .all(|t| t.state == TrialState::Running));
+        // unknown studies are errors, not silent empties
+        assert!(s.create_trials(9999, 2).is_err());
+        // a mixed batch finish: scalar value, keep-carried (pruned), failed
+        s.set_trial_intermediate(created[1].0, 1, 0.75).unwrap();
+        s.finish_trials(&[
+            TrialFinish {
+                trial_id: created[0].0,
+                state: TrialState::Complete,
+                values: vec![1.5],
+            },
+            TrialFinish { trial_id: created[1].0, state: TrialState::Pruned, values: vec![0.75] },
+            TrialFinish { trial_id: created[2].0, state: TrialState::Failed, values: vec![] },
+        ])
+        .unwrap();
+        let all = s.get_all_trials(sid).unwrap();
+        assert_eq!(all[0].state, TrialState::Complete);
+        assert_eq!(all[0].value, Some(1.5));
+        assert_eq!(all[1].state, TrialState::Pruned);
+        assert_eq!(all[1].value, Some(0.75));
+        assert_eq!(all[2].state, TrialState::Failed);
+        assert_eq!(all[2].value, None);
+        // single-entry error batches behave like the scalar API (these
+        // stay single-entry so trait-default loop impls agree with the
+        // atomic overrides)
+        assert!(s
+            .finish_trials(&[TrialFinish {
+                trial_id: created[0].0,
+                state: TrialState::Complete,
+                values: vec![9.0],
+            }])
+            .is_err());
+        assert_eq!(s.get_trial(created[0].0).unwrap().value, Some(1.5));
+        let (fresh, _) = s.create_trial(sid).unwrap();
+        assert!(s
+            .finish_trials(&[TrialFinish {
+                trial_id: fresh,
+                state: TrialState::Running,
+                values: vec![],
+            }])
+            .is_err());
+        assert_eq!(s.get_trial(fresh).unwrap().state, TrialState::Running);
+        s.finish_trials(&[TrialFinish {
+            trial_id: fresh,
+            state: TrialState::Complete,
+            values: vec![0.25],
+        }])
+        .unwrap();
+        // batched ops ride the delta stream like every other write
+        if s.study_seq(sid).unwrap() != SEQ_UNTRACKED {
+            let seq = s.study_seq(sid).unwrap();
+            let created = s.create_trials(sid, 2).unwrap();
+            let d = s.get_trials_since(sid, seq).unwrap();
+            assert_eq!(d.trials.len(), 2);
+            assert!(d.trials.iter().all(|t| t.state == TrialState::Running));
+            let seq = d.seq;
+            s.finish_trials(&[
+                TrialFinish {
+                    trial_id: created[0].0,
+                    state: TrialState::Complete,
+                    values: vec![1.0],
+                },
+                TrialFinish {
+                    trial_id: created[1].0,
+                    state: TrialState::Complete,
+                    values: vec![2.0],
+                },
+            ])
+            .unwrap();
+            let d = s.get_trials_since(sid, seq).unwrap();
+            assert_eq!(d.trials.len(), 2);
+            assert!(d.trials.iter().all(|t| t.state == TrialState::Complete));
+        }
+        // multi-objective vectors ride the batch path where supported
+        let directions = [StudyDirection::Minimize, StudyDirection::Maximize];
+        if let Ok(msid) = s.create_study_multi("conf-batch-moo", &directions) {
+            let created = s.create_trials(msid, 2).unwrap();
+            s.finish_trials(&[
+                TrialFinish {
+                    trial_id: created[0].0,
+                    state: TrialState::Complete,
+                    values: vec![1.0, -2.0],
+                },
+                TrialFinish {
+                    trial_id: created[1].0,
+                    state: TrialState::Complete,
+                    values: vec![3.0, 4.0],
+                },
+            ])
+            .unwrap();
+            let all = s.get_all_trials(msid).unwrap();
+            assert_eq!(all[0].values, vec![1.0, -2.0]);
+            assert_eq!(all[0].value, Some(1.0), "value mirrors objective 0");
+            assert_eq!(all[1].values, vec![3.0, 4.0]);
+        }
     }
 
     fn multi_objective_values(s: &dyn Storage) {

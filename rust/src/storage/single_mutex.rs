@@ -1,0 +1,234 @@
+//! `SingleMutexStorage` — the pre-shard ablation baseline.
+//!
+//! The original in-memory backend serialized **every** operation behind
+//! one global `Mutex`; the sharded [`super::InMemoryStorage`] replaced
+//! it with per-study lock striping. This decorator reproduces the old
+//! contention profile exactly — one process-wide mutex acquired around
+//! every call — over the current (semantically identical) implementation,
+//! so `benches/fig_throughput.rs` and the CLI `bench-throughput` command
+//! can measure the sharding win (sharded vs single-Mutex, same machine,
+//! same workload), and the differential fuzz suite gets one more oracle.
+//!
+//! Not intended for production use: it exists to keep the ablation
+//! honest and reproducible, not to be fast.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::storage::{InMemoryStorage, ParamSet, Storage, TrialDelta, TrialFinish};
+
+/// In-memory storage with the historical single-global-Mutex locking
+/// discipline (see the module docs).
+pub struct SingleMutexStorage {
+    inner: InMemoryStorage,
+    gate: Mutex<()>,
+}
+
+impl SingleMutexStorage {
+    pub fn new() -> Self {
+        SingleMutexStorage { inner: InMemoryStorage::new(), gate: Mutex::new(()) }
+    }
+
+    fn enter(&self) -> Result<MutexGuard<'_, ()>, OptunaError> {
+        self.gate.lock().map_err(|_| {
+            OptunaError::Storage("single-mutex storage gate poisoned by a panicked writer".into())
+        })
+    }
+}
+
+impl Default for SingleMutexStorage {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Storage for SingleMutexStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.create_study(name, direction)
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.create_study_multi(name, directions)
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_study_id(name)
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_study_direction(study_id)
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_study_directions(study_id)
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.study_names()
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.create_trial(study_id)
+    }
+
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.create_trials(study_id, n)
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.set_trial_param(trial_id, name, dist, internal)
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.set_trial_intermediate(trial_id, step, value)
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.set_trial_user_attr(trial_id, key, value)
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.finish_trial(trial_id, state, value)
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.finish_trial_values(trial_id, state, values)
+    }
+
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.finish_trials(finishes)
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_trial(trial_id)
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_all_trials(study_id)
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.n_trials(study_id)
+    }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.study_seq(study_id)
+    }
+
+    fn get_trials_since(
+        &self,
+        study_id: u64,
+        since_seq: u64,
+    ) -> Result<TrialDelta, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_trials_since(study_id, since_seq)
+    }
+
+    fn get_trials_snapshot(
+        &self,
+        study_id: u64,
+    ) -> Result<Arc<Vec<FrozenTrial>>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.get_trials_snapshot(study_id)
+    }
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.record_heartbeat(trial_id)
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.fail_stale_trials(study_id, grace, requeue)
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.enqueue_trial(study_id, params, user_attrs)
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.pop_waiting_trial(study_id)
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        let _g = self.enter()?;
+        self.inner.create_trial_capped(study_id, cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::conformance;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run_all(&SingleMutexStorage::new());
+    }
+}

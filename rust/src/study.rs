@@ -13,7 +13,8 @@ use crate::multi::{nondominated_sort, to_losses};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
 use crate::storage::{
-    get_or_create_study_multi, CachedStorage, InMemoryStorage, Storage, SEQ_UNTRACKED,
+    get_or_create_study_multi, CachedStorage, InMemoryStorage, Storage, TrialFinish,
+    SEQ_UNTRACKED,
 };
 use crate::trial::Trial;
 use crate::util::stats::nan_max_cmp;
@@ -314,6 +315,155 @@ impl Study {
         self.finish_ask(trial_id, number, true, heartbeats)
     }
 
+    /// Batched [`Study::ask`]: begin `n` trials in one pipeline pass.
+    ///
+    /// `Waiting` trials are popped first (like `ask`); the remainder is
+    /// claimed through [`Storage::create_trials`] — **one** storage
+    /// critical section for the whole batch instead of one per trial —
+    /// and the history snapshot + observation-index sync run **once**,
+    /// shared by every trial in the batch. The sampler's reusable
+    /// scratch (e.g. the TPE Parzen buffers) warms once per batch too,
+    /// since all suggests of the batch see the same generation.
+    ///
+    /// All fresh trials of the batch observe the history as of the
+    /// batch's start: trial `k` does not see trials `0..k` of its own
+    /// batch (they are `Running` and carry no observations yet — exactly
+    /// what a sequential ask-without-tell loop sees). Identical suggests
+    /// to the sequential path are guarded by `rust/tests/determinism.rs`.
+    ///
+    /// ```
+    /// use optuna_rs::prelude::*;
+    ///
+    /// let study = Study::builder().name("doc-batch").build().unwrap();
+    /// let mut batch = study.ask_batch(4).unwrap();
+    /// let outcomes: Vec<f64> = batch
+    ///     .iter_mut()
+    ///     .map(|t| t.suggest_float("x", 0.0, 1.0).unwrap())
+    ///     .collect();
+    /// study
+    ///     .tell_batch(
+    ///         batch
+    ///             .into_iter()
+    ///             .zip(outcomes)
+    ///             .map(|(t, v)| (t, TrialOutcome::Complete(v)))
+    ///             .collect(),
+    ///     )
+    ///     .unwrap();
+    /// assert_eq!(study.trials().unwrap().len(), 4);
+    /// ```
+    pub fn ask_batch(&self, n: usize) -> Result<Vec<Trial<'_>>, OptunaError> {
+        self.ask_batch_registered(n, None)
+    }
+
+    fn ask_batch_registered(
+        &self,
+        n: usize,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<Vec<Trial<'_>>, OptunaError> {
+        let mut popped = Vec::with_capacity(n);
+        while popped.len() < n {
+            match self.storage.pop_waiting_trial(self.study_id)? {
+                Some(pair) => popped.push(pair),
+                None => break,
+            }
+        }
+        let created = match self.storage.create_trials(self.study_id, n - popped.len()) {
+            Ok(created) => created,
+            Err(e) => {
+                // the pops already flipped trials to Running; don't
+                // strand them on a failed claim
+                self.release_popped(&popped);
+                return Err(e);
+            }
+        };
+        // register every claimed trial — popped retries included — before
+        // the (possibly slow) snapshot sync + sampling, for the same
+        // reason finish_ask does
+        if let Some(reg) = heartbeats {
+            for &(trial_id, _) in popped.iter().chain(&created) {
+                reg.insert(trial_id);
+            }
+        }
+        let built = (|| {
+            // ONE snapshot + ONE index sync shared by the whole batch,
+            // popped retries included
+            let trials = self.storage.get_trials_snapshot(self.study_id)?;
+            let index = self.sync_obs_index()?;
+            let mut out = Vec::with_capacity(n);
+            for &(trial_id, number) in &popped {
+                // a popped Waiting trial replays its stored parameters —
+                // read from the snapshot (taken after the pops, so it
+                // carries them), not via a per-trial storage round-trip
+                let seeded = match trials.get(number as usize) {
+                    Some(t) if t.id == trial_id => t.params.clone(),
+                    _ => self.storage.get_trial(trial_id)?.params,
+                };
+                out.push(Trial::resumed(
+                    self,
+                    trial_id,
+                    number,
+                    seeded,
+                    Arc::clone(&trials),
+                    index.clone(),
+                ));
+            }
+            let ctx = StudyContext::with_index(self.direction, &trials, index.as_deref())
+                .with_directions(&self.directions);
+            let space = self.sampler.infer_relative_search_space(&ctx);
+            for &(trial_id, number) in &created {
+                let relative = if space.is_empty() {
+                    Default::default()
+                } else {
+                    self.sampler.sample_relative(&ctx, number, &space)
+                };
+                out.push(Trial::new(
+                    self,
+                    trial_id,
+                    number,
+                    relative,
+                    space.clone(),
+                    Arc::clone(&trials),
+                    index.clone(),
+                ));
+            }
+            Ok(out)
+        })();
+        if built.is_err() {
+            // roll back every registration, popped trials included, so
+            // the ticker doesn't keep stranded trials alive past their
+            // reap grace — and return the popped configurations to the
+            // queue instead of stranding them Running
+            if let Some(reg) = heartbeats {
+                for &(trial_id, _) in popped.iter().chain(&created) {
+                    reg.remove(trial_id);
+                }
+            }
+            self.release_popped(&popped);
+        }
+        built
+    }
+
+    /// Best-effort release of popped-but-unreturnable `Waiting` trials
+    /// (an `ask_batch` error path): re-enqueue each configuration so the
+    /// retry is not lost, then fail the popped trial so it neither stays
+    /// `Running` forever nor holds a capped-budget slot. Every step is
+    /// best effort — this runs while storage is already erroring.
+    fn release_popped(&self, popped: &[(u64, u64)]) {
+        for &(trial_id, _) in popped {
+            if let Ok(t) = self.storage.get_trial(trial_id) {
+                self.storage
+                    .enqueue_trial(self.study_id, &t.params, &t.user_attrs)
+                    .ok();
+            }
+            self.storage
+                .set_trial_user_attr(trial_id, "fail_reason", "ask_batch aborted after pop")
+                .ok();
+            self.storage
+                .finish_trial(trial_id, TrialState::Failed, None)
+                .ok();
+        }
+    }
+
     /// Budget-capped [`Study::ask`]: pops a waiting trial if one exists,
     /// else creates a fresh trial only while the study holds fewer than
     /// `cap` non-`Failed` trials (see [`Storage::create_trial_capped`]).
@@ -481,6 +631,127 @@ impl Study {
         }
     }
 
+    /// Batched [`Study::tell`]: finish a batch of trials in **one**
+    /// storage round-trip ([`Storage::finish_trials`] — one critical
+    /// section, one journal record).
+    ///
+    /// Outcomes are arity-checked like `tell`; a check failure rejects
+    /// the call before anything is written (the trials stay running).
+    /// Without failover, a storage [`OptunaError::Conflict`] rejects the
+    /// whole batch atomically and propagates. With failover configured,
+    /// a conflict means a peer reaped one of the batch's trials — the
+    /// batch degrades to per-trial finishes with the conflicting entries
+    /// skipped, mirroring the optimize loops' conflict policy.
+    pub fn tell_batch(
+        &self,
+        batch: Vec<(Trial<'_>, TrialOutcome)>,
+    ) -> Result<(), OptunaError> {
+        let mut finishes = Vec::with_capacity(batch.len());
+        let mut fail_reasons: Vec<(u64, String)> = Vec::new();
+        for (trial, outcome) in batch {
+            let (finish, reason) = self.outcome_to_finish(&trial, outcome)?;
+            if let Some(msg) = reason {
+                fail_reasons.push((finish.trial_id, msg));
+            }
+            finishes.push(finish);
+        }
+        // `fail_reason` attributes land only after every outcome passed
+        // its checks, so an arity-check rejection really writes nothing
+        self.record_fail_reasons(&fail_reasons);
+        self.finish_batch(finishes)
+    }
+
+    /// Convert one trial outcome to its storage finish record, applying
+    /// the same arity checks as [`Study::tell`]. Performs **no** storage
+    /// writes: a failure's `fail_reason` comes back as the second tuple
+    /// element for the caller to record once batch-wide checks passed.
+    fn outcome_to_finish(
+        &self,
+        trial: &Trial<'_>,
+        outcome: TrialOutcome,
+    ) -> Result<(TrialFinish, Option<String>), OptunaError> {
+        Ok(match outcome {
+            TrialOutcome::Complete(v) => {
+                if self.is_multi_objective() {
+                    return Err(OptunaError::MultiObjective(format!(
+                        "scalar tell on a {}-objective study — use TrialOutcome::CompleteValues",
+                        self.n_objectives()
+                    )));
+                }
+                (
+                    TrialFinish {
+                        trial_id: trial.trial_id,
+                        state: TrialState::Complete,
+                        values: vec![v],
+                    },
+                    None,
+                )
+            }
+            TrialOutcome::CompleteValues(vs) => {
+                if vs.len() != self.n_objectives() {
+                    return Err(OptunaError::MultiObjective(format!(
+                        "objective returned {} values, study has {} objectives",
+                        vs.len(),
+                        self.n_objectives()
+                    )));
+                }
+                (
+                    TrialFinish {
+                        trial_id: trial.trial_id,
+                        state: TrialState::Complete,
+                        values: vs,
+                    },
+                    None,
+                )
+            }
+            TrialOutcome::Pruned => (
+                TrialFinish {
+                    trial_id: trial.trial_id,
+                    state: TrialState::Pruned,
+                    values: trial.last_report.map(|(_, v)| vec![v]).unwrap_or_default(),
+                },
+                None,
+            ),
+            TrialOutcome::Failed(msg) => (
+                TrialFinish {
+                    trial_id: trial.trial_id,
+                    state: TrialState::Failed,
+                    values: Vec::new(),
+                },
+                Some(msg),
+            ),
+        })
+    }
+
+    /// Record `fail_reason` attributes for a batch's failed outcomes
+    /// (best effort, like the single-trial tell path).
+    fn record_fail_reasons(&self, reasons: &[(u64, String)]) {
+        for (trial_id, msg) in reasons {
+            self.storage
+                .set_trial_user_attr(*trial_id, "fail_reason", msg)
+                .ok();
+        }
+    }
+
+    /// Land a batch of finishes, applying the failover conflict policy
+    /// (see [`Study::tell_batch`]).
+    fn finish_batch(&self, finishes: Vec<TrialFinish>) -> Result<(), OptunaError> {
+        match self.storage.finish_trials(&finishes) {
+            Err(OptunaError::Conflict(_)) if self.failover.is_some() => {
+                // a peer reaped part of the batch: land the rest
+                // individually, skipping the superseded entries
+                for f in finishes {
+                    match self.storage.finish_trial_values(f.trial_id, f.state, &f.values) {
+                        Err(OptunaError::Conflict(_)) => {}
+                        other => other?,
+                    }
+                }
+                Ok(())
+            }
+            other => other,
+        }
+    }
+
     /// Run one trial through `objective` (the optimize-loop body).
     pub fn run_one<F>(&self, objective: &F) -> Result<(), OptunaError>
     where
@@ -581,7 +852,31 @@ impl Study {
         F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError> + Sync,
         Self: Sync,
     {
+        self.optimize_parallel_batched(n_trials, n_workers, 1, objective)
+    }
+
+    /// [`Study::optimize_parallel`] with a per-worker batch size: each
+    /// worker claims up to `batch_size` budget slots at once, begins them
+    /// through [`Study::ask_batch`] (one storage critical section + one
+    /// snapshot sync per batch), evaluates them sequentially, and lands
+    /// the outcomes through one batched tell. `batch_size == 1` is
+    /// exactly the unbatched loop. Larger batches trade suggest
+    /// freshness (trials within a batch don't observe each other) for
+    /// storage throughput — the right trade when the objective is cheap
+    /// and storage is the bottleneck (see `benches/fig_throughput.rs`).
+    pub fn optimize_parallel_batched<F>(
+        &self,
+        n_trials: usize,
+        n_workers: usize,
+        batch_size: usize,
+        objective: F,
+    ) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError> + Sync,
+        Self: Sync,
+    {
         assert!(n_workers >= 1);
+        assert!(batch_size >= 1);
         let budget = AtomicUsize::new(n_trials);
         let first_error = std::sync::Mutex::new(None::<OptunaError>);
         let registry = HeartbeatRegistry::new();
@@ -595,20 +890,27 @@ impl Study {
             let workers: Vec<_> = (0..n_workers)
                 .map(|_| {
                     scope.spawn(|| loop {
-                        // claim a trial slot
+                        // claim up to batch_size trial slots
                         let prev = budget.fetch_update(
                             Ordering::SeqCst,
                             Ordering::SeqCst,
-                            |b| b.checked_sub(1),
+                            |b| {
+                                if b == 0 {
+                                    None
+                                } else {
+                                    Some(b - b.min(batch_size))
+                                }
+                            },
                         );
-                        if prev.is_err() {
+                        let Ok(prev) = prev else {
                             break;
-                        }
+                        };
+                        let take = prev.min(batch_size);
                         let result = self
                             .reap_stale_trials()
-                            .and_then(|_| self.ask_registered(Some(&registry)))
-                            .and_then(|trial| {
-                                self.run_trial(trial, &objective, Some(&registry))
+                            .and_then(|_| self.ask_batch_registered(take, Some(&registry)))
+                            .and_then(|trials| {
+                                self.run_batch(trials, &objective, Some(&registry))
                             });
                         if let Err(e) = result {
                             // a worker failed: stop draining the budget —
@@ -637,6 +939,72 @@ impl Study {
         match first_error.into_inner().unwrap() {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+
+    /// Evaluate a batch of asked trials and land the outcomes with one
+    /// batched tell (the [`Study::optimize_parallel_batched`] worker
+    /// body). Per-trial objective errors become recorded `Failed`/
+    /// `Pruned` outcomes, not loop errors, matching `run_trial`; an
+    /// outcome that fails conversion (arity misuse) is recorded as
+    /// `Failed` too — nothing in the batch is left `Running` — and the
+    /// first such error is surfaced after the batch lands.
+    fn run_batch<F>(
+        &self,
+        trials: Vec<Trial<'_>>,
+        objective: &F,
+        heartbeats: Option<&HeartbeatRegistry>,
+    ) -> Result<(), OptunaError>
+    where
+        F: Fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
+    {
+        let ids: Vec<u64> = trials.iter().map(|t| t.id()).collect();
+        let mut conversion_error = None;
+        let mut finishes = Vec::with_capacity(trials.len());
+        let mut fail_reasons: Vec<(u64, String)> = Vec::new();
+        for mut trial in trials {
+            let outcome = match objective(&mut trial) {
+                Ok(v) if v.is_finite() => TrialOutcome::Complete(v),
+                Ok(v) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
+                Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
+                Err(e) => TrialOutcome::Failed(e.to_string()),
+            };
+            match self.outcome_to_finish(&trial, outcome) {
+                Ok((f, reason)) => {
+                    if let Some(msg) = reason {
+                        fail_reasons.push((f.trial_id, msg));
+                    }
+                    finishes.push(f);
+                }
+                Err(e) => {
+                    // a misconfigured outcome (arity misuse) must not
+                    // strand the rest of the batch as Running: record
+                    // this trial as Failed, keep the first error to
+                    // surface after the batch lands, keep converting
+                    fail_reasons.push((trial.trial_id, e.to_string()));
+                    finishes.push(TrialFinish {
+                        trial_id: trial.trial_id,
+                        state: TrialState::Failed,
+                        values: Vec::new(),
+                    });
+                    if conversion_error.is_none() {
+                        conversion_error = Some(e);
+                    }
+                }
+            }
+        }
+        // land what converted even when a later conversion failed, so no
+        // evaluated work is silently dropped; then surface the error
+        self.record_fail_reasons(&fail_reasons);
+        let landed = self.finish_batch(finishes);
+        if let Some(reg) = heartbeats {
+            for id in ids {
+                reg.remove(id);
+            }
+        }
+        match conversion_error {
+            Some(e) => Err(e),
+            None => landed,
         }
     }
 
@@ -880,11 +1248,25 @@ impl Study {
     }
 }
 
+/// RFC-4180 field quoting: a field containing a comma, double quote, CR
+/// or LF is wrapped in double quotes with embedded quotes doubled. All
+/// other fields are emitted verbatim, which keeps the historical byte
+/// format for the (numeric / plain-identifier) common case.
+fn csv_field(s: &str) -> String {
+    if s.chars().any(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 /// Shared CSV writer behind [`Study::to_csv`] / [`Study::front_to_csv`]
 /// (and the CLI `pareto` export, which passes an already-computed front).
 /// `n_objectives == 1` must stay byte-identical to the pre-multi format
 /// (regression-tested): header `number,state,value`, empty cell for
-/// valueless trials.
+/// valueless trials. String content (parameter names, categorical
+/// values) is RFC-4180 quoted via [`csv_field`] so commas, quotes and
+/// newlines cannot shear the row grid.
 pub(crate) fn trials_to_csv(trials: &[FrozenTrial], n_objectives: usize) -> String {
     // union of parameter names, ordered
     let mut names: Vec<String> = Vec::new();
@@ -906,7 +1288,7 @@ pub(crate) fn trials_to_csv(trials: &[FrozenTrial], n_objectives: usize) -> Stri
     }
     for n in &names {
         out.push(',');
-        out.push_str(n);
+        out.push_str(&csv_field(n));
     }
     out.push('\n');
     for t in trials {
@@ -930,7 +1312,7 @@ pub(crate) fn trials_to_csv(trials: &[FrozenTrial], n_objectives: usize) -> Stri
         for n in &names {
             out.push(',');
             if let Some(v) = t.param(n) {
-                out.push_str(&v.to_string());
+                out.push_str(&csv_field(&v.to_string()));
             }
         }
         out.push('\n');
@@ -1110,6 +1492,151 @@ mod tests {
         let mut numbers: Vec<u64> = trials.iter().map(|t| t.number).collect();
         numbers.sort_unstable();
         assert_eq!(numbers, (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn ask_batch_pops_waiting_then_creates_fresh() {
+        let study = quadratic_study(41);
+        let d = crate::core::Distribution::float(0.0, 1.0);
+        let mut params = crate::storage::ParamSet::new();
+        params.insert("x".into(), (d, 0.25));
+        study
+            .storage
+            .enqueue_trial(study.study_id, &params, &BTreeMap::new())
+            .unwrap();
+        let mut batch = study.ask_batch(3).unwrap();
+        assert_eq!(batch.len(), 3);
+        // the queued configuration resumes first and replays its value
+        assert_eq!(batch[0].suggest_float("x", 0.0, 1.0).unwrap(), 0.25);
+        let values: Vec<f64> = batch
+            .iter_mut()
+            .map(|t| t.suggest_float("x", 0.0, 1.0).unwrap())
+            .collect();
+        let told: Vec<(Trial<'_>, TrialOutcome)> = batch
+            .into_iter()
+            .zip(values)
+            .map(|(t, v)| (t, TrialOutcome::Complete(v)))
+            .collect();
+        study.tell_batch(told).unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 3);
+        assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+        assert_eq!(trials[0].value, Some(0.25));
+    }
+
+    #[test]
+    fn tell_batch_mixed_outcomes() {
+        let study = quadratic_study(42);
+        let mut batch = study.ask_batch(3).unwrap();
+        batch[1].report(1, 0.7).unwrap();
+        let outcomes = vec![
+            TrialOutcome::Complete(1.0),
+            TrialOutcome::Pruned,
+            TrialOutcome::Failed("boom".into()),
+        ];
+        study
+            .tell_batch(batch.into_iter().zip(outcomes).collect())
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials[0].state, TrialState::Complete);
+        assert_eq!(trials[0].value, Some(1.0));
+        assert_eq!(trials[1].state, TrialState::Pruned);
+        assert_eq!(trials[1].value, Some(0.7), "pruned carries its last report");
+        assert_eq!(trials[2].state, TrialState::Failed);
+        assert_eq!(trials[2].user_attrs["fail_reason"], "boom");
+    }
+
+    #[test]
+    fn tell_batch_arity_error_leaves_batch_untold() {
+        let study = moo_study(44);
+        let batch = study.ask_batch(2).unwrap();
+        // a valid Failed outcome followed by an arity-violating Complete:
+        // the rejection must write NOTHING — not even the failure's
+        // fail_reason attribute
+        let mut outcomes = vec![
+            TrialOutcome::Failed("late loser".into()),
+            TrialOutcome::Complete(1.0),
+        ];
+        let err = study
+            .tell_batch(batch.into_iter().zip(outcomes.drain(..)).collect())
+            .unwrap_err();
+        assert!(matches!(err, OptunaError::MultiObjective(_)), "{err}");
+        for t in study.trials().unwrap() {
+            assert_eq!(t.state, TrialState::Running);
+            assert!(
+                !t.user_attrs.contains_key("fail_reason"),
+                "rejected batch must not leak fail_reason attrs"
+            );
+        }
+    }
+
+    #[test]
+    fn optimize_parallel_batched_arity_misuse_fails_cleanly() {
+        // a scalar objective on a multi-objective study: the worker loop
+        // must surface the typed error AND leave no trial stranded
+        // Running (every asked trial is recorded Failed)
+        let study = moo_study(45);
+        let err = study
+            .optimize_parallel_batched(8, 2, 4, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(x)
+            })
+            .unwrap_err();
+        assert!(matches!(err, OptunaError::MultiObjective(_)), "{err}");
+        let trials = study.trials().unwrap();
+        assert!(!trials.is_empty());
+        assert!(
+            trials.iter().all(|t| t.state == TrialState::Failed),
+            "no trial may stay Running after an arity-misuse batch"
+        );
+    }
+
+    #[test]
+    fn optimize_parallel_batched_exact_budget() {
+        let study = quadratic_study(43);
+        study
+            .optimize_parallel_batched(30, 4, 8, |t| {
+                let x = t.suggest_float("x", -1.0, 1.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 30, "batch claims must drain the budget exactly");
+        let mut numbers: Vec<u64> = trials.iter().map(|t| t.number).collect();
+        numbers.sort_unstable();
+        assert_eq!(numbers, (0..30).collect::<Vec<u64>>());
+        assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+    }
+
+    #[test]
+    fn csv_rfc4180_escapes_commas_quotes_newlines() {
+        // Byte-level regression: string content with CSV metacharacters
+        // must be quoted per RFC 4180 (quotes doubled), while plain rows
+        // keep the historical unquoted format.
+        let study = quadratic_study(40);
+        let dist = crate::core::Distribution::categorical(vec![
+            "plain",
+            "a,b",
+            "he said \"hi\"",
+            "line\nbreak",
+        ]);
+        for (internal, value) in [(1.0, 0.5), (2.0, 1.5), (3.0, 2.5), (0.0, 3.5)] {
+            let t = study.ask().unwrap();
+            let tid = t.id();
+            study
+                .storage
+                .set_trial_param(tid, "choice,col", &dist, internal)
+                .unwrap();
+            study.tell(t, TrialOutcome::Complete(value)).unwrap();
+        }
+        assert_eq!(
+            study.to_csv().unwrap(),
+            "number,state,value,\"choice,col\"\n\
+             0,complete,0.5,\"a,b\"\n\
+             1,complete,1.5,\"he said \"\"hi\"\"\"\n\
+             2,complete,2.5,\"line\nbreak\"\n\
+             3,complete,3.5,plain\n"
+        );
     }
 
     #[test]

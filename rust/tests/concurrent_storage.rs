@@ -1,0 +1,330 @@
+//! Concurrency stress suite (ISSUE 5 satellite): many threads hammering
+//! the sharded `InMemoryStorage` — one hot study and many independent
+//! studies — with mixed create/write/finish/prune/reap traffic.
+//!
+//! Invariants under fire:
+//! * no lost or duplicated trials (numbers dense and unique per study),
+//! * `create_trial_capped` budgets are exact (never overshoot, always
+//!   fully claimable),
+//! * per-study sequence numbers are monotonic and the delta stream
+//!   reconstructs the full state,
+//! * batched create/finish interleaves safely with unbatched traffic.
+//!
+//! CI runs this suite in the dedicated release-mode job (see
+//! .github/workflows/ci.yml) so optimized codegen — where real races
+//! surface — is covered, not just the debug build.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use optuna_rs::core::{FrozenTrial, StudyDirection, TrialState};
+use optuna_rs::storage::{InMemoryStorage, Storage, TrialFinish};
+
+const THREADS: usize = 8;
+
+/// Every thread mixes batched and unbatched create+finish traffic on one
+/// shared study while a reader thread checks sequence monotonicity and a
+/// reaper thread runs `fail_stale_trials` with a generous grace (so live
+/// trials are never reaped, but the reap path contends on the locks).
+#[test]
+fn one_hot_study_mixed_traffic() {
+    let storage = Arc::new(InMemoryStorage::new());
+    let sid = storage.create_study("hot", StudyDirection::Minimize).unwrap();
+    let per_thread = 120usize;
+    let stop = AtomicBool::new(false);
+    let no_requeue = |_: &FrozenTrial| -> Option<BTreeMap<String, String>> { None };
+
+    std::thread::scope(|scope| {
+        // reader: seq must never decrease, snapshots must stay dense
+        let reader = {
+            let storage = Arc::clone(&storage);
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut last_seq = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let seq = storage.study_seq(sid).unwrap();
+                    assert!(seq >= last_seq, "seq regressed: {seq} < {last_seq}");
+                    last_seq = seq;
+                    let all = storage.get_all_trials(sid).unwrap();
+                    for (i, t) in all.iter().enumerate() {
+                        assert_eq!(t.number as usize, i, "snapshot not dense");
+                    }
+                }
+            })
+        };
+        // reaper: generous grace — must never reap a live trial
+        let reaper = {
+            let storage = Arc::clone(&storage);
+            let stop = &stop;
+            scope.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let victims = storage
+                        .fail_stale_trials(sid, Duration::from_secs(3600), &no_requeue)
+                        .unwrap();
+                    assert!(victims.is_empty(), "generous grace reaped live trials");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        };
+        let workers: Vec<_> = (0..THREADS)
+            .map(|w| {
+                let storage = Arc::clone(&storage);
+                scope.spawn(move || {
+                    let mut done = 0usize;
+                    while done < per_thread {
+                        if (done + w) % 3 == 0 {
+                            // batched lifecycle
+                            let take = 4.min(per_thread - done);
+                            let created = storage.create_trials(sid, take).unwrap();
+                            let finishes: Vec<TrialFinish> = created
+                                .iter()
+                                .map(|&(tid, n)| TrialFinish {
+                                    trial_id: tid,
+                                    state: TrialState::Complete,
+                                    values: vec![n as f64],
+                                })
+                                .collect();
+                            storage.finish_trials(&finishes).unwrap();
+                            done += take;
+                        } else {
+                            // unbatched lifecycle with a param + prune mix
+                            let (tid, n) = storage.create_trial(sid).unwrap();
+                            storage.set_trial_intermediate(tid, 1, n as f64).unwrap();
+                            let state = if n % 5 == 0 {
+                                TrialState::Pruned
+                            } else {
+                                TrialState::Complete
+                            };
+                            storage.finish_trial(tid, state, Some(n as f64)).unwrap();
+                            done += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        reader.join().unwrap();
+        reaper.join().unwrap();
+    });
+
+    let all = storage.get_all_trials(sid).unwrap();
+    assert_eq!(all.len(), THREADS * per_thread, "lost or duplicated trials");
+    let mut numbers: Vec<u64> = all.iter().map(|t| t.number).collect();
+    numbers.sort_unstable();
+    assert_eq!(
+        numbers,
+        (0..(THREADS * per_thread) as u64).collect::<Vec<u64>>(),
+        "numbers must be dense and unique"
+    );
+    assert!(all.iter().all(|t| t.state.is_finished()));
+    // the delta stream from zero reconstructs everything
+    let d = storage.get_trials_since(sid, 0).unwrap();
+    assert_eq!(d.trials.len(), all.len());
+    assert_eq!(d.seq, storage.study_seq(sid).unwrap());
+}
+
+/// Threads on disjoint studies must not corrupt each other — and a
+/// cross-study batched finish mixed in must land atomically.
+#[test]
+fn many_studies_in_parallel() {
+    let storage = Arc::new(InMemoryStorage::new());
+    let per_study = 150usize;
+    let study_ids: Vec<u64> = (0..THREADS)
+        .map(|i| {
+            storage
+                .create_study(&format!("iso-{i}"), StudyDirection::Minimize)
+                .unwrap()
+        })
+        .collect();
+    std::thread::scope(|scope| {
+        for &sid in &study_ids {
+            let storage = Arc::clone(&storage);
+            scope.spawn(move || {
+                for k in 0..per_study {
+                    let (tid, n) = storage.create_trial(sid).unwrap();
+                    assert_eq!(n, k as u64, "study-local numbering broke");
+                    storage.finish_trial(tid, TrialState::Complete, Some(n as f64)).unwrap();
+                }
+            });
+        }
+        // a thread repeatedly finishing cross-study batches on its own
+        // two extra studies (exercises the multi-shard lock ordering)
+        let storage2 = Arc::clone(&storage);
+        scope.spawn(move || {
+            let a = storage2.create_study("iso-extra-a", StudyDirection::Minimize).unwrap();
+            let b = storage2.create_study("iso-extra-b", StudyDirection::Minimize).unwrap();
+            for _ in 0..50 {
+                let (ta, _) = storage2.create_trial(a).unwrap();
+                let (tb, _) = storage2.create_trial(b).unwrap();
+                storage2
+                    .finish_trials(&[
+                        TrialFinish {
+                            trial_id: tb,
+                            state: TrialState::Complete,
+                            values: vec![1.0],
+                        },
+                        TrialFinish {
+                            trial_id: ta,
+                            state: TrialState::Complete,
+                            values: vec![2.0],
+                        },
+                    ])
+                    .unwrap();
+            }
+        });
+    });
+    for &sid in &study_ids {
+        let all = storage.get_all_trials(sid).unwrap();
+        assert_eq!(all.len(), per_study);
+        for (i, t) in all.iter().enumerate() {
+            assert_eq!(t.number as usize, i);
+            assert_eq!(t.state, TrialState::Complete);
+            assert_eq!(t.value, Some(i as f64));
+        }
+    }
+}
+
+/// `create_trial_capped` is an atomic budget claim: under heavy
+/// contention the study must end with exactly `cap` trials — never an
+/// overshoot — and failing trials must release exactly their slot.
+#[test]
+fn capped_budget_exact_under_contention() {
+    let storage = Arc::new(InMemoryStorage::new());
+    let sid = storage.create_study("capped", StudyDirection::Minimize).unwrap();
+    let cap = 200u64;
+    let claimed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..THREADS {
+            let storage = Arc::clone(&storage);
+            let claimed = &claimed;
+            scope.spawn(move || {
+                while let Some((tid, n)) = storage.create_trial_capped(sid, cap).unwrap() {
+                    claimed.fetch_add(1, Ordering::SeqCst);
+                    storage.finish_trial(tid, TrialState::Complete, Some(n as f64)).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(claimed.load(Ordering::SeqCst) as u64, cap, "budget overshoot or loss");
+    assert_eq!(storage.n_trials(sid).unwrap() as u64, cap);
+
+    // phase 2: raise the cap and keep hammering, with most fresh trials
+    // failing (each failure releases its slot for re-claim) — the
+    // non-failed count must still land on the new cap exactly
+    let refill = 60u64;
+    std::thread::scope(|scope| {
+        for _ in 0..THREADS {
+            let storage = Arc::clone(&storage);
+            scope.spawn(move || {
+                while let Some((tid, _)) =
+                    storage.create_trial_capped(sid, cap + refill).unwrap()
+                {
+                    // every refill trial fails, releasing its slot — but
+                    // the loop still terminates because total trials
+                    // (incl. failed) are bounded by... nothing: bound it
+                    // by completing instead once the study is large
+                    if storage.n_trials(sid).unwrap() as u64 > cap + refill + 50 {
+                        storage.finish_trial(tid, TrialState::Complete, Some(0.0)).unwrap();
+                    } else {
+                        storage.finish_trial(tid, TrialState::Failed, None).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    let all = storage.get_all_trials(sid).unwrap();
+    let non_failed = all.iter().filter(|t| t.state != TrialState::Failed).count() as u64;
+    assert_eq!(non_failed, cap + refill, "non-failed budget must land exactly");
+    assert!(storage.create_trial_capped(sid, cap + refill).unwrap().is_none());
+}
+
+/// Stale-trial reaping under contention: one thread keeps abandoning
+/// trials (no heartbeats), another reaps with a tiny grace and requeues,
+/// a third pops + completes the retries. Every configuration must end
+/// finished, with no trial lost, duplicated, or stranded.
+#[test]
+fn reap_and_retry_under_contention() {
+    let storage = Arc::new(InMemoryStorage::new());
+    let sid = storage.create_study("reap", StudyDirection::Minimize).unwrap();
+    let abandoned = 40usize;
+    let requeue = |v: &FrozenTrial| -> Option<BTreeMap<String, String>> {
+        if v.retry_count() >= 1 {
+            return None; // one retry each, so the run terminates
+        }
+        let mut attrs = BTreeMap::new();
+        attrs.insert("retry_count".to_string(), "1".to_string());
+        Some(attrs)
+    };
+    std::thread::scope(|scope| {
+        // abandoner: creates Running trials and walks away
+        let maker = {
+            let storage = Arc::clone(&storage);
+            scope.spawn(move || {
+                for _ in 0..abandoned {
+                    storage.create_trial(sid).unwrap();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        };
+        // reaper: tiny grace, reap + requeue in a loop
+        let reaper = {
+            let storage = Arc::clone(&storage);
+            scope.spawn(move || {
+                for _ in 0..200 {
+                    std::thread::sleep(Duration::from_millis(2));
+                    storage
+                        .fail_stale_trials(sid, Duration::from_millis(1), &requeue)
+                        .unwrap();
+                }
+            })
+        };
+        // finisher: drains the retry queue, completing what it claims
+        let finisher = {
+            let storage = Arc::clone(&storage);
+            scope.spawn(move || {
+                for _ in 0..400 {
+                    if let Some((tid, n)) = storage.pop_waiting_trial(sid).unwrap() {
+                        // the reaper may flip a just-popped trial to
+                        // Failed under the tiny grace — that Conflict is
+                        // the normal failover race, not a test failure
+                        let _ = storage.finish_trial(tid, TrialState::Complete, Some(n as f64));
+                    } else {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            })
+        };
+        maker.join().unwrap();
+        reaper.join().unwrap();
+        finisher.join().unwrap();
+    });
+    // final reap sweep so nothing stays Running, then drain the queue
+    std::thread::sleep(Duration::from_millis(5));
+    storage.fail_stale_trials(sid, Duration::from_millis(1), &|_| None).unwrap();
+    while storage.pop_waiting_trial(sid).unwrap().is_some() {}
+    std::thread::sleep(Duration::from_millis(5));
+    storage.fail_stale_trials(sid, Duration::from_millis(1), &|_| None).unwrap();
+
+    let all = storage.get_all_trials(sid).unwrap();
+    let mut numbers: Vec<u64> = all.iter().map(|t| t.number).collect();
+    numbers.sort_unstable();
+    assert_eq!(
+        numbers,
+        (0..all.len() as u64).collect::<Vec<u64>>(),
+        "numbers dense and unique through reap/requeue churn"
+    );
+    assert!(
+        all.iter().all(|t| t.state != TrialState::Running),
+        "no trial stranded Running"
+    );
+    // retries carry their bookkeeping attribute
+    assert!(all
+        .iter()
+        .filter(|t| t.retry_count() == 1)
+        .all(|t| t.state.is_finished() || t.state == TrialState::Waiting));
+}

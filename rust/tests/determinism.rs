@@ -1,0 +1,230 @@
+//! Seeded determinism suite (ISSUE 5 satellite): the same seed must
+//! produce the identical trial sequence
+//!
+//! * across all storage backends (sharded in-memory, single-Mutex
+//!   baseline, journal; cached and uncached) — the storage layer is a
+//!   passive substrate, so swapping it must never perturb a sampler, and
+//! * across the batched vs unbatched suggest paths — `ask_batch` shares
+//!   one snapshot/index sync per batch, which must not change what gets
+//!   suggested.
+//!
+//! Covered samplers: random, TPE, NSGA-II (multi-objective).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use optuna_rs::multi::NsgaIiSampler;
+use optuna_rs::prelude::*;
+use optuna_rs::sampler::Sampler;
+use optuna_rs::storage::SingleMutexStorage;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "optuna_determinism_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// The comparable record of one finished trial: every suggested internal
+/// value (bit-exact) plus the objective vector.
+fn trajectory(study: &Study) -> Vec<(u64, Vec<(String, u64)>, Vec<u64>)> {
+    study
+        .trials()
+        .unwrap()
+        .iter()
+        .map(|t| {
+            (
+                t.number,
+                t.params
+                    .iter()
+                    .map(|(k, (_, v))| (k.clone(), v.to_bits()))
+                    .collect(),
+                t.objective_values().iter().map(|v| v.to_bits()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// Backend line-up, each a factory so every run gets a fresh store.
+fn backends(tag: &str) -> Vec<(String, Arc<dyn Storage>, Option<PathBuf>, bool)> {
+    let ja = tmp_path(&format!("{tag}_j1"));
+    let jb = tmp_path(&format!("{tag}_j2"));
+    vec![
+        ("in-memory+cache".into(), Arc::new(InMemoryStorage::new()), None, true),
+        ("in-memory-raw".into(), Arc::new(InMemoryStorage::new()), None, false),
+        ("single-mutex".into(), Arc::new(SingleMutexStorage::new()), None, true),
+        (
+            "journal+cache".into(),
+            Arc::new(JournalStorage::open(&ja).unwrap()),
+            Some(ja),
+            true,
+        ),
+        (
+            "journal-raw".into(),
+            Arc::new(JournalStorage::open(&jb).unwrap()),
+            Some(jb),
+            false,
+        ),
+    ]
+}
+
+fn single_objective_sampler(kind: &str, seed: u64) -> Arc<dyn Sampler> {
+    match kind {
+        "random" => Arc::new(RandomSampler::new(seed)),
+        "tpe" => Arc::new(TpeSampler::new(seed)),
+        other => panic!("unknown sampler {other}"),
+    }
+}
+
+#[test]
+fn same_seed_identical_trajectory_across_backends_single_objective() {
+    for sampler_kind in ["random", "tpe"] {
+        let mut runs = Vec::new();
+        for (name, storage, cleanup, cache) in backends(sampler_kind) {
+            let study = Study::builder()
+                .name("det")
+                .storage(storage)
+                .storage_caching(cache)
+                .sampler(single_objective_sampler(sampler_kind, 99))
+                .pruner(Arc::new(MedianPruner::new()))
+                .build()
+                .unwrap();
+            study
+                .optimize(30, |t| {
+                    let x = t.suggest_float("x", -5.0, 5.0)?;
+                    let k = t.suggest_int("k", 1, 4)?;
+                    let c = t.suggest_categorical("c", &["a", "b"])?;
+                    let bump = if c == "a" { 0.0 } else { 0.5 };
+                    t.report(1, x * x)?;
+                    if t.should_prune()? {
+                        return Err(OptunaError::TrialPruned);
+                    }
+                    Ok(x * x + k as f64 * 0.1 + bump)
+                })
+                .unwrap();
+            runs.push((name, trajectory(&study)));
+            if let Some(p) = cleanup {
+                std::fs::remove_file(p).ok();
+            }
+        }
+        for (name, run) in &runs[1..] {
+            assert_eq!(
+                run, &runs[0].1,
+                "{sampler_kind}: backend {name} diverged from {}",
+                runs[0].0
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_identical_trajectory_across_backends_nsga2() {
+    let mut runs = Vec::new();
+    for (name, storage, cleanup, cache) in backends("nsga2") {
+        let study = Study::builder()
+            .name("det-moo")
+            .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+            .storage(storage)
+            .storage_caching(cache)
+            .sampler(Arc::new(NsgaIiSampler::new(7)))
+            .build()
+            .unwrap();
+        study
+            .optimize_multi(40, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                let y = t.suggest_float("y", 0.0, 1.0)?;
+                Ok(vec![x, (1.0 - x) * (1.0 + y)])
+            })
+            .unwrap();
+        runs.push((name, trajectory(&study)));
+        if let Some(p) = cleanup {
+            std::fs::remove_file(p).ok();
+        }
+    }
+    for (name, run) in &runs[1..] {
+        assert_eq!(run, &runs[0].1, "nsga2: backend {name} diverged from {}", runs[0].0);
+    }
+}
+
+/// The batched suggest path must propose exactly what sequential asks
+/// (without intervening tells — the same information state) would: one
+/// shared snapshot per batch is an optimization, not a behavior change.
+#[test]
+fn ask_batch_suggests_match_sequential_asks() {
+    for sampler_kind in ["random", "tpe"] {
+        let build = || {
+            let study = Study::builder()
+                .name("det-batch")
+                .sampler(single_objective_sampler(sampler_kind, 1234))
+                .build()
+                .unwrap();
+            // identical warm-up history on both studies
+            study
+                .optimize(15, |t| {
+                    let x = t.suggest_float("x", -3.0, 3.0)?;
+                    Ok((x - 1.0).powi(2))
+                })
+                .unwrap();
+            study
+        };
+
+        let sequential = build();
+        let mut seq_values = Vec::new();
+        let mut open = Vec::new();
+        for _ in 0..4 {
+            let mut t = sequential.ask().unwrap();
+            seq_values.push(t.suggest_float("x", -3.0, 3.0).unwrap().to_bits());
+            open.push(t);
+        }
+        for t in open {
+            sequential.tell(t, TrialOutcome::Failed("probe".into())).unwrap();
+        }
+
+        let batched = build();
+        let mut batch = batched.ask_batch(4).unwrap();
+        let batch_values: Vec<u64> = batch
+            .iter_mut()
+            .map(|t| t.suggest_float("x", -3.0, 3.0).unwrap().to_bits())
+            .collect();
+        batched
+            .tell_batch(
+                batch
+                    .into_iter()
+                    .map(|t| (t, TrialOutcome::Failed("probe".into())))
+                    .collect(),
+            )
+            .unwrap();
+
+        assert_eq!(
+            batch_values, seq_values,
+            "{sampler_kind}: batched suggests diverged from sequential asks"
+        );
+    }
+}
+
+/// Random search is history-free, so batch size must not perturb the
+/// trajectory at all: batch=1 and batch=32 single-worker runs are
+/// bit-identical.
+#[test]
+fn random_sampler_batch_size_invariant_end_to_end() {
+    let run = |batch: usize| {
+        let study = Study::builder()
+            .name("det-batch-size")
+            .sampler(Arc::new(RandomSampler::new(2024)))
+            .build()
+            .unwrap();
+        study
+            .optimize_parallel_batched(48, 1, batch, |t| {
+                let x = t.suggest_float("x", -1.0, 1.0)?;
+                let c = t.suggest_categorical("c", &["u", "v", "w"])?;
+                Ok(x * x + c.len() as f64)
+            })
+            .unwrap();
+        trajectory(&study)
+    };
+    assert_eq!(run(1), run(32), "batch size changed the random trajectory");
+}
