@@ -1,0 +1,196 @@
+//! Journal recovery bench (ISSUE 6): cold-open (replay) time and file
+//! size for a full append-only history vs its snapshot-compacted form,
+//! in both line-JSON and CRC-framed binary framing. Prints a
+//! paper-style table and writes machine-readable results to
+//! `BENCH_journal.json` (override the path with `BENCH_JOURNAL_JSON`)
+//! so CI can archive the trend.
+//!
+//! The journal is populated through the public Storage API with a
+//! realistic per-trial op mix (create + 3 params + 2 intermediates +
+//! heartbeat + finish ≈ 8 records/trial), then copied aside and
+//! compacted with [`optuna_rs::storage::JournalStorage::compact_as`].
+//! "Recovery" is a fresh [`JournalStorage::open`] (which replays
+//! eagerly) plus one read; each variant reports the median of 3 opens.
+//!
+//! Knobs: `JOURNAL_QUICK=1` shrinks to 3k trials for CI;
+//! `JOURNAL_TRIALS` sets the trial count directly (the paper protocol
+//! is 1e5; 1e6 is the same command with `JOURNAL_TRIALS=1000000`).
+//!
+//! Acceptance (ISSUE 6): compacted recovery ≥10x faster than full
+//! replay at 1e5 finished trials.
+
+mod common;
+
+use common::{env_usize, print_header};
+use optuna_rs::core::{Distribution, StudyDirection, TrialState};
+use optuna_rs::storage::{JournalFormat, JournalStorage, Storage, TrialFinish};
+use std::time::Instant;
+
+struct Row {
+    variant: &'static str,
+    bytes: u64,
+    open_secs: f64,
+}
+
+/// Populate `path` with `n_trials` finished trials through the Storage
+/// API (line-JSON framing, fsync off — I/O pattern, not durability, is
+/// under test).
+fn populate(path: &std::path::Path, n_trials: usize) {
+    let storage = JournalStorage::open(path).expect("open journal");
+    let sid = storage.create_study("bench", StudyDirection::Minimize).expect("study");
+    let dist = Distribution::float(0.0, 1.0);
+    let batch = 256;
+    let mut made = 0usize;
+    while made < n_trials {
+        let take = batch.min(n_trials - made);
+        let created = storage.create_trials(sid, take).expect("create batch");
+        for &(tid, number) in &created {
+            let x = (number % 1000) as f64 / 1000.0;
+            for p in 0..3 {
+                storage
+                    .set_trial_param(tid, &format!("x{p}"), &dist, x)
+                    .expect("param");
+            }
+            for step in 0..2u64 {
+                storage.set_trial_intermediate(tid, step, x + step as f64).expect("report");
+            }
+            storage.record_heartbeat(tid).expect("heartbeat");
+        }
+        let finishes: Vec<TrialFinish> = created
+            .iter()
+            .map(|&(tid, number)| TrialFinish {
+                trial_id: tid,
+                state: TrialState::Complete,
+                values: vec![number as f64],
+            })
+            .collect();
+        storage.finish_trials(&finishes).expect("finish batch");
+        made += take;
+    }
+}
+
+/// Median cold-open time over 3 runs: fresh handle, eager replay, one
+/// read to prove the state is live.
+fn time_open(path: &std::path::Path, expect_trials: usize) -> f64 {
+    let mut secs = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let storage = JournalStorage::open(path).expect("reopen journal");
+        let sid = storage.get_study_id("bench").expect("study id").expect("study exists");
+        let n = storage.n_trials(sid).expect("n_trials");
+        secs.push(t0.elapsed().as_secs_f64());
+        assert_eq!(n, expect_trials, "replay dropped trials");
+    }
+    secs.sort_by(|a, b| a.total_cmp(b));
+    secs[1]
+}
+
+fn copy_to(src: &std::path::Path, dst: &std::path::Path) {
+    std::fs::remove_file(dst).ok();
+    std::fs::remove_file(lock_of(dst)).ok();
+    std::fs::copy(src, dst).expect("copy journal");
+}
+
+fn lock_of(path: &std::path::Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".lock");
+    std::path::PathBuf::from(os)
+}
+
+fn main() {
+    let quick = std::env::var("JOURNAL_QUICK").is_ok();
+    let n_trials = env_usize("JOURNAL_TRIALS", if quick { 3_000 } else { 100_000 });
+
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let full = dir.join(format!("fig_journal_full_{pid}.jsonl"));
+    let lines = dir.join(format!("fig_journal_lines_{pid}.jsonl"));
+    let binary = dir.join(format!("fig_journal_binary_{pid}.jsonl"));
+    for p in [&full, &lines, &binary] {
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(lock_of(p)).ok();
+    }
+
+    println!("populating {n_trials} trials (~8 records each)...");
+    populate(&full, n_trials);
+
+    // Snapshot-compact two copies: same line-JSON framing, and
+    // re-framed CRC binary.
+    copy_to(&full, &lines);
+    JournalStorage::open(&lines)
+        .expect("open copy")
+        .compact_as(JournalFormat::Lines)
+        .expect("compact lines");
+    copy_to(&full, &binary);
+    JournalStorage::open(&binary)
+        .expect("open copy")
+        .compact_as(JournalFormat::Binary)
+        .expect("compact binary");
+
+    let variants: [(&'static str, &std::path::Path); 3] = [
+        ("full-history", &full),
+        ("compacted-lines", &lines),
+        ("compacted-binary", &binary),
+    ];
+    print_header(
+        &format!("journal recovery, {n_trials} finished trials (median of 3 opens)"),
+        &["variant", "bytes", "open secs"],
+    );
+    let mut rows = Vec::new();
+    for (variant, path) in variants {
+        let bytes = std::fs::metadata(path).expect("stat").len();
+        let open_secs = time_open(path, n_trials);
+        println!("{variant} | {bytes} | {open_secs:.4}");
+        rows.push(Row { variant, bytes, open_secs });
+    }
+
+    let full_secs = rows[0].open_secs;
+    let speedup_lines = full_secs / rows[1].open_secs.max(1e-9);
+    let speedup_binary = full_secs / rows[2].open_secs.max(1e-9);
+    let shrink_lines = rows[0].bytes as f64 / rows[1].bytes.max(1) as f64;
+    let shrink_binary = rows[0].bytes as f64 / rows[2].bytes.max(1) as f64;
+    println!("\nrecovery speedup (compacted lines vs full):  {speedup_lines:.2}x");
+    println!("recovery speedup (compacted binary vs full): {speedup_binary:.2}x");
+    println!("file size shrink (lines/binary): {shrink_lines:.2}x / {shrink_binary:.2}x");
+
+    write_bench_journal_json(n_trials, &rows, speedup_lines, speedup_binary);
+
+    for p in [&full, &lines, &binary] {
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(lock_of(p)).ok();
+    }
+}
+
+/// Machine-readable results for CI artifacts (ISSUE 6 acceptance:
+/// compacted recovery ≥10x faster than full replay at 1e5 trials).
+fn write_bench_journal_json(
+    n_trials: usize,
+    rows: &[Row],
+    speedup_lines: f64,
+    speedup_binary: f64,
+) {
+    let path = std::env::var("BENCH_JOURNAL_JSON")
+        .unwrap_or_else(|_| "BENCH_journal.json".to_string());
+    let mut body =
+        String::from("{\n  \"bench\": \"journal_recovery\",\n  \"unit\": \"seconds\",\n");
+    body.push_str(&format!("  \"trials\": {n_trials},\n"));
+    body.push_str(&format!(
+        "  \"recovery_speedup_compacted_lines\": {speedup_lines:.3},\n"
+    ));
+    body.push_str(&format!(
+        "  \"recovery_speedup_compacted_binary\": {speedup_binary:.3},\n"
+    ));
+    body.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        body.push_str(&format!(
+            "    {{\"variant\": \"{}\", \"bytes\": {}, \"open_secs\": {:.6}}}{comma}\n",
+            r.variant, r.bytes, r.open_secs
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -8,7 +8,14 @@
 //! optuna export       --storage journal:///tmp/s.jsonl --study s1 --out trials.csv
 //! optuna dashboard    --storage journal:///tmp/s.jsonl --study s1 --out report.html
 //! optuna studies      --storage journal:///tmp/s.jsonl
+//! optuna compact      --storage journal:///tmp/s.jsonl [--format lines|binary]
 //! ```
+//!
+//! `journal+bin://PATH` selects the CRC-framed binary journal (v2) when
+//! creating a new file; existing files always open in whatever framing
+//! is on disk. `--auto-compact-mb N` makes long-lived workers compact
+//! the journal automatically once it grows past N MiB, and `compact`
+//! does it once, by hand (optionally re-framing with `--format`).
 //!
 //! Distributed optimization = run `optimize` from several processes with
 //! the same `--storage` URL and `--study` name; the journal file is the
@@ -38,7 +45,8 @@ use crate::sampler::{
     CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
 };
 use crate::storage::{
-    now_ms, InMemoryStorage, JournalStorage, SingleMutexStorage, Storage, TrialFinish,
+    now_ms, InMemoryStorage, JournalFormat, JournalOptions, JournalStorage, SingleMutexStorage,
+    Storage, TrialFinish,
 };
 use crate::study::{FailoverConfig, Study};
 use crate::trial::{Trial, TrialApi};
@@ -85,8 +93,9 @@ impl Args {
 }
 
 fn usage() -> String {
-    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies|bench-throughput> \
-     --storage <memory:|journal://PATH> --study NAME \
+    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies|compact|bench-throughput> \
+     --storage <memory:|journal://PATH|journal+bin://PATH> --study NAME \
+     [--auto-compact-mb N] [--format lines|binary] \
      [--direction minimize|maximize] [--directions minimize,maximize,..] \
      [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2] \
      [--pruner none|asha|median|hyperband] [--trials N] [--seed N] \
@@ -157,13 +166,46 @@ pub fn bench_ask_tell_pairs(
 
 /// Open a storage backend from a URL-ish string.
 pub fn open_storage(url: &str) -> Result<Arc<dyn Storage>, String> {
+    open_storage_with(url, None)
+}
+
+/// [`open_storage`] with journal tuning: `auto_compact_mb` is the
+/// `--auto-compact-mb` threshold (compact once the file exceeds N MiB).
+/// `journal+bin://` selects the binary (v2) framing for newly created
+/// files; an existing file always opens in whatever framing is on disk.
+pub fn open_storage_with(
+    url: &str,
+    auto_compact_mb: Option<u64>,
+) -> Result<Arc<dyn Storage>, String> {
     if url == "memory:" || url == "memory" {
         return Ok(Arc::new(InMemoryStorage::new()));
     }
-    if let Some(path) = url.strip_prefix("journal://") {
-        return Ok(Arc::new(JournalStorage::open(path).map_err(|e| e.to_string())?));
+    let (path, format) = if let Some(path) = url.strip_prefix("journal+bin://") {
+        (path, JournalFormat::Binary)
+    } else if let Some(path) = url.strip_prefix("journal://") {
+        (path, JournalFormat::Lines)
+    } else {
+        return Err(format!(
+            "unsupported storage url '{url}' (memory:, journal://PATH or journal+bin://PATH)"
+        ));
+    };
+    let options = JournalOptions {
+        format,
+        auto_compact_bytes: auto_compact_mb.map(|mb| mb.saturating_mul(1024 * 1024)),
+        ..Default::default()
+    };
+    Ok(Arc::new(JournalStorage::open_with(path, options).map_err(|e| e.to_string())?))
+}
+
+/// Parse the optional `--auto-compact-mb` flag.
+fn parse_auto_compact(args: &Args) -> Result<Option<u64>, String> {
+    match args.get("auto-compact-mb") {
+        Some(s) => s
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|e| format!("bad --auto-compact-mb: {e}")),
+        None => Ok(None),
     }
-    Err(format!("unsupported storage url '{url}' (memory: or journal://PATH)"))
 }
 
 pub fn make_sampler(kind: &str, seed: u64) -> Result<Arc<dyn Sampler>, String> {
@@ -248,7 +290,7 @@ fn build_study(
     create: bool,
     failover_default: Option<FailoverConfig>,
 ) -> Result<Study, String> {
-    let storage = open_storage(args.require("storage")?)?;
+    let storage = open_storage_with(args.require("storage")?, parse_auto_compact(args)?)?;
     let name = args.require("study")?.to_string();
     let existing = storage.get_study_id(&name).map_err(|e| e.to_string())?;
     if !create && existing.is_none() {
@@ -567,6 +609,32 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
             let names = storage.study_names().map_err(|e| e.to_string())?;
             Ok(names.join("\n") + "\n")
         }
+        "compact" => {
+            // One-shot snapshot + tail compaction. `--format` re-frames
+            // the journal (lines <-> binary); without it the on-disk
+            // framing is kept.
+            let url = args.require("storage")?;
+            let path = url
+                .strip_prefix("journal+bin://")
+                .or_else(|| url.strip_prefix("journal://"))
+                .ok_or_else(|| {
+                    format!("compact requires --storage journal://PATH, got '{url}'")
+                })?;
+            let storage = JournalStorage::open(path).map_err(|e| e.to_string())?;
+            let stats = match args.get("format") {
+                None => storage.compact(),
+                Some("lines") => storage.compact_as(JournalFormat::Lines),
+                Some("binary") => storage.compact_as(JournalFormat::Binary),
+                Some(other) => {
+                    return Err(format!("unknown --format '{other}' (lines|binary)"))
+                }
+            }
+            .map_err(|e| e.to_string())?;
+            Ok(format!(
+                "compacted gen {}: {} studies, {} trials, {} -> {} bytes\n",
+                stats.gen, stats.studies, stats.trials, stats.bytes_before, stats.bytes_after
+            ))
+        }
         "bench-throughput" => {
             // Storage-plane throughput probe: N threads × M ask/tell
             // pairs in batches of B against a fresh in-memory backend
@@ -621,7 +689,7 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
 /// on this command directly.
 fn run_distributed(args: &Args) -> Result<String, String> {
     let url = args.require("storage")?.to_string();
-    if !url.starts_with("journal://") {
+    if !url.starts_with("journal://") && !url.starts_with("journal+bin://") {
         return Err(
             "distributed requires --storage journal://PATH (shared across processes)".into(),
         );
@@ -700,8 +768,14 @@ fn run_distributed(args: &Args) -> Result<String, String> {
             "--trial-sleep-ms",
             sleep_s.as_str(),
         ];
+        let mut extra: Vec<&str> = Vec::new();
+        if let Some(mb) = args.get("auto-compact-mb") {
+            extra.push("--auto-compact-mb");
+            extra.push(mb);
+        }
         let child = std::process::Command::new(&exe)
             .args(worker_args)
+            .args(&extra)
             .stdout(std::process::Stdio::null())
             .spawn()
             .map_err(|e| format!("spawn worker: {e}"))?;
@@ -848,6 +922,68 @@ mod tests {
         let out = run_inner(&argv(&["studies", "--storage", &url])).unwrap();
         assert_eq!(out, "s1\n");
         std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn compact_cli_flow() {
+        let url = tmp_journal("compact");
+        run_inner(&argv(&["create-study", "--storage", &url, "--study", "c1"])).unwrap();
+        run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "c1", "--trials", "12",
+            "--sampler", "random", "--seed", "11",
+        ]))
+        .unwrap();
+        let out = run_inner(&argv(&["compact", "--storage", &url])).unwrap();
+        assert!(out.starts_with("compacted gen 1:"), "{out}");
+        assert!(out.contains("1 studies, 12 trials"), "{out}");
+        // the compacted journal still serves reads and re-framing works
+        let best = run_inner(&argv(&["best", "--storage", &url, "--study", "c1"])).unwrap();
+        assert!(best.contains("trial #"), "{best}");
+        let out = run_inner(&argv(&[
+            "compact", "--storage", &url, "--format", "binary",
+        ]))
+        .unwrap();
+        assert!(out.starts_with("compacted gen 2:"), "{out}");
+        let csv = run_inner(&argv(&["export", "--storage", &url, "--study", "c1"])).unwrap();
+        assert_eq!(csv.lines().count(), 13, "header + 12 trials:\n{csv}");
+        // bad targets are rejected loudly
+        let err =
+            run_inner(&argv(&["compact", "--storage", &url, "--format", "xml"])).unwrap_err();
+        assert!(err.contains("unknown --format"), "{err}");
+        let err = run_inner(&argv(&["compact", "--storage", "memory:"])).unwrap_err();
+        assert!(err.contains("journal://"), "{err}");
+        let path = url.strip_prefix("journal://").unwrap();
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(format!("{path}.lock")).ok();
+    }
+
+    #[test]
+    fn binary_journal_scheme_and_auto_compact_flag() {
+        let lines_url = tmp_journal("binfmt");
+        let path = lines_url.strip_prefix("journal://").unwrap().to_string();
+        let url = format!("journal+bin://{path}");
+        run_inner(&argv(&["create-study", "--storage", &url, "--study", "b1"])).unwrap();
+        // a tiny auto-compact threshold triggers during the optimize run
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "b1", "--trials", "10",
+            "--sampler", "random", "--seed", "2", "--auto-compact-mb", "0",
+        ]))
+        .unwrap();
+        assert!(out.contains("completed 10 trials"), "{out}");
+        let head = std::fs::read(&path).unwrap();
+        assert!(head.starts_with(b"OPTJRNL1"), "binary magic expected");
+        // plain journal:// reopens the same file (on-disk framing wins)
+        let best =
+            run_inner(&argv(&["best", "--storage", &lines_url, "--study", "b1"])).unwrap();
+        assert!(best.contains("trial #"), "{best}");
+        assert!(run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "b1", "--trials", "1",
+            "--auto-compact-mb", "zero",
+        ]))
+        .unwrap_err()
+        .contains("auto-compact-mb"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(format!("{path}.lock")).ok();
     }
 
     #[test]

@@ -40,7 +40,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{ParamSet, Storage, TrialDelta, TrialFinish, SEQ_UNTRACKED};
+use crate::storage::{
+    Compactable, CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish, SEQ_UNTRACKED,
+};
 
 #[derive(Default)]
 struct StudyCache {
@@ -299,6 +301,22 @@ impl Storage for CachedStorage {
         cap: u64,
     ) -> Result<Option<(u64, u64)>, OptunaError> {
         self.inner.create_trial_capped(study_id, cap)
+    }
+
+    /// Compaction forwards to the inner backend. No cache invalidation is
+    /// needed: compaction is a semantics-preserving rewrite that keeps
+    /// sequence cursors valid, so cached snapshots and their `seq` stay
+    /// correct across it.
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        self.inner.try_compact()
+    }
+}
+
+impl Compactable for CachedStorage {
+    fn compact(&self) -> Result<CompactionStats, OptunaError> {
+        self.try_compact()?.ok_or_else(|| {
+            OptunaError::Storage("inner storage backend is not compactable".into())
+        })
     }
 }
 

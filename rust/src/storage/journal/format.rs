@@ -1,0 +1,397 @@
+//! Record framing — the byte layer below replay.
+//!
+//! Two framings share one op grammar (the JSON entries documented in the
+//! module docs of [`super`]):
+//!
+//! * **Lines** (v1, the compatibility format and differential-testing
+//!   oracle): one JSON object per `\n`-terminated line. Torn tails are
+//!   healed with the `{"op":"torn"}` marker discipline.
+//! * **Binary** (v2): an 8-byte magic (`OPTJRNL1`) followed by framed
+//!   records `[kind u8][len u32 LE][~len u32 LE][crc32 u32 LE][payload]`.
+//!   `kind` 0 carries the same JSON text a line would; `kind` 1 carries
+//!   the binary-encoded snapshot payload (see [`super::snapshot`]). The
+//!   CRC (IEEE, over `kind` plus payload) makes every mid-file corruption
+//!   a typed hard error naming the byte offset; the redundant `~len` word
+//!   keeps a corrupted length from masquerading as a torn tail and
+//!   silently swallowing committed records behind it. A record whose
+//!   bytes genuinely stop at EOF is a torn append: replay leaves it
+//!   unconsumed and the next writer truncates it away (the binary
+//!   analogue of the torn-marker heal — framing makes the fragment
+//!   self-delimiting, so no marker is needed).
+
+use crate::core::OptunaError;
+use crate::util::json::Json;
+
+/// Magic prefix of a binary-framed journal file.
+pub const BINARY_MAGIC: &[u8; 8] = b"OPTJRNL1";
+
+/// `[kind][len][~len][crc]` — bytes before a binary record's payload.
+pub const RECORD_HEADER_LEN: usize = 13;
+
+/// Payload is the JSON text of one journal op (identical to a line).
+pub const KIND_JSON: u8 = 0;
+/// Payload is a binary-encoded snapshot (see [`super::snapshot`]).
+pub const KIND_SNAPSHOT: u8 = 1;
+
+/// On-disk framing of a journal file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JournalFormat {
+    /// Line-delimited JSON (v1) — the compatibility format.
+    Lines,
+    /// Length-prefixed + CRC32 records behind the `OPTJRNL1` magic (v2).
+    Binary,
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3), the polynomial zlib/PNG use.
+pub fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// What the head bytes of a non-empty journal file identify as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Detected {
+    Lines,
+    Binary,
+    /// Fewer than 8 bytes forming a proper prefix of [`BINARY_MAGIC`]: a
+    /// writer died inside the very first append of a binary journal. The
+    /// whole file is a torn tail; the next writer truncates it to zero.
+    TornMagicStub,
+}
+
+/// Classify a journal file by its head bytes (`head` is the first
+/// `min(len, 256)` bytes of a file of total length `len`).
+///
+/// Anything that is neither the binary magic nor line-JSON (every line
+/// record starts with `{`) is a hard error rather than a guess: format
+/// misdetection would replay garbage positionally and shift every id.
+pub fn detect(head: &[u8], len: u64) -> Result<Detected, OptunaError> {
+    debug_assert!(!head.is_empty());
+    if head.len() >= BINARY_MAGIC.len() && &head[..BINARY_MAGIC.len()] == BINARY_MAGIC {
+        return Ok(Detected::Binary);
+    }
+    if matches!(head[0], b'{' | b'\n') {
+        return Ok(Detected::Lines);
+    }
+    if len < BINARY_MAGIC.len() as u64 && BINARY_MAGIC.starts_with(head) {
+        return Ok(Detected::TornMagicStub);
+    }
+    Err(OptunaError::Storage(
+        "unrecognized journal header (neither line-JSON nor OPTJRNL1 binary magic)".into(),
+    ))
+}
+
+/// Parse the compaction generation a journal head claims: the `gen` of a
+/// complete `compact_begin` first record, else 0 (never compacted — or
+/// the head window is too small to tell, which cannot happen for files
+/// our compactor wrote: its `compact_begin` record is tiny by design so
+/// the generation is always sniffable from one small head read).
+pub fn sniff_gen(format: JournalFormat, head: &[u8]) -> u64 {
+    let payload: &[u8] = match format {
+        JournalFormat::Lines => {
+            let Some(nl) = head.iter().position(|&b| b == b'\n') else {
+                return 0;
+            };
+            &head[..nl]
+        }
+        JournalFormat::Binary => {
+            let body = &head[BINARY_MAGIC.len().min(head.len())..];
+            if body.len() < RECORD_HEADER_LEN {
+                return 0;
+            }
+            let len = u32::from_le_bytes(body[1..5].try_into().unwrap()) as usize;
+            if body[0] != KIND_JSON || body.len() < RECORD_HEADER_LEN + len {
+                return 0;
+            }
+            &body[RECORD_HEADER_LEN..RECORD_HEADER_LEN + len]
+        }
+    };
+    let Some(entry) = std::str::from_utf8(payload).ok().and_then(|t| Json::parse(t).ok()) else {
+        return 0;
+    };
+    if entry.get("op").and_then(|o| o.as_str()) != Some("compact_begin") {
+        return 0;
+    }
+    entry.get("gen").and_then(|g| g.as_i64()).map(|g| g as u64).unwrap_or(0)
+}
+
+/// Append one JSON-payload record in the given framing to `out`.
+pub fn push_json_record(format: JournalFormat, payload: &str, out: &mut Vec<u8>) {
+    match format {
+        JournalFormat::Lines => {
+            out.extend_from_slice(payload.as_bytes());
+            out.push(b'\n');
+        }
+        JournalFormat::Binary => push_binary_record(KIND_JSON, payload.as_bytes(), out),
+    }
+}
+
+/// Append one framed binary record (`kind` + CRC header + payload).
+pub fn push_binary_record(kind: u8, payload: &[u8], out: &mut Vec<u8>) {
+    let len = payload.len() as u32;
+    out.push(kind);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&(!len).to_le_bytes());
+    out.extend_from_slice(&crc32(&[&[kind], payload]).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// One step of the record scanner (see [`next_record`]).
+pub enum Scan<'a> {
+    /// A complete JSON-payload record; `raw` is the payload text.
+    Json { parsed: Json, raw: &'a str, end: usize },
+    /// A complete binary snapshot record (binary framing only).
+    Snapshot { payload: &'a [u8], end: usize },
+    /// Bytes that carry no op: an empty line, the binary magic, or a
+    /// healed torn line fragment. Advance to `end` and continue.
+    Skip { end: usize },
+    /// An incomplete record at the buffer's tail (a torn append, or a
+    /// heal still in flight). Stop: leave the bytes unconsumed for the
+    /// writer that owns them.
+    Pending,
+}
+
+/// Verdict on a run of unparseable journal lines (lines framing only).
+enum TornRun {
+    /// A `{"op":"torn"}` healing marker terminates the run: skip it.
+    Healed,
+    /// The buffer ends before a verdict — a heal may be in flight; leave
+    /// the bytes unconsumed and re-examine on the next refresh.
+    Pending,
+    /// A parseable non-marker line follows: this is real mid-file
+    /// corruption, not a healed torn tail.
+    Corrupt,
+}
+
+/// Parse one journal line; `None` for non-UTF-8 or non-JSON bytes.
+fn parse_line(line: &[u8]) -> Option<(Json, &str)> {
+    let text = std::str::from_utf8(line).ok()?;
+    Json::parse(text).ok().map(|j| (j, text))
+}
+
+/// Scan complete lines starting at byte `from`: a run of unparseable
+/// lines is a healed torn write iff a `torn` marker terminates it before
+/// any other parseable line.
+fn torn_run_is_healed(buf: &[u8], mut from: usize) -> TornRun {
+    while let Some(nl) = buf[from..].iter().position(|&b| b == b'\n') {
+        let line = &buf[from..from + nl];
+        from += nl + 1;
+        if line.is_empty() {
+            continue;
+        }
+        match parse_line(line) {
+            Some((entry, _)) => {
+                return if entry.get("op").and_then(|o| o.as_str()) == Some("torn") {
+                    TornRun::Healed
+                } else {
+                    TornRun::Corrupt
+                };
+            }
+            None => continue, // another fragment of the same torn run
+        }
+    }
+    TornRun::Pending
+}
+
+/// Decode the next record of `buf` starting at `pos`. `file_base` is the
+/// absolute file offset of `buf[0]` — corruption errors name absolute
+/// byte offsets with it.
+pub fn next_record<'a>(
+    format: JournalFormat,
+    buf: &'a [u8],
+    pos: usize,
+    file_base: u64,
+) -> Result<Scan<'a>, OptunaError> {
+    match format {
+        JournalFormat::Lines => next_line_record(buf, pos),
+        JournalFormat::Binary => next_binary_record(buf, pos, file_base),
+    }
+}
+
+fn next_line_record(buf: &[u8], pos: usize) -> Result<Scan<'_>, OptunaError> {
+    let Some(nl) = buf[pos..].iter().position(|&b| b == b'\n') else {
+        return Ok(Scan::Pending);
+    };
+    let line = &buf[pos..pos + nl];
+    let end = pos + nl + 1;
+    if line.is_empty() {
+        return Ok(Scan::Skip { end });
+    }
+    match parse_line(line) {
+        Some((parsed, raw)) => Ok(Scan::Json { parsed, raw, end }),
+        None => {
+            // An unparseable complete line is legal only as a torn
+            // fragment that a later writer healed — in which case a
+            // `{"op":"torn"}` marker follows the (run of) fragment
+            // line(s). Anything else is real corruption and aborts the
+            // replay; id assignment is positional, so silently skipping
+            // would shift every later trial id.
+            match torn_run_is_healed(buf, end) {
+                TornRun::Healed => Ok(Scan::Skip { end }),
+                TornRun::Pending => Ok(Scan::Pending),
+                TornRun::Corrupt => Err(OptunaError::Storage(
+                    "corrupt journal line (unparseable, not a healed torn tail)".into(),
+                )),
+            }
+        }
+    }
+}
+
+fn next_binary_record(buf: &[u8], pos: usize, file_base: u64) -> Result<Scan<'_>, OptunaError> {
+    if file_base == 0 && pos == 0 {
+        // `detect` vouched for the magic before a binary replay starts.
+        debug_assert!(buf.len() >= BINARY_MAGIC.len());
+        return Ok(Scan::Skip { end: BINARY_MAGIC.len() });
+    }
+    let offset = file_base + pos as u64;
+    let rest = &buf[pos..];
+    if rest.len() < RECORD_HEADER_LEN {
+        return Ok(Scan::Pending); // torn mid-header append
+    }
+    let kind = rest[0];
+    let len = u32::from_le_bytes(rest[1..5].try_into().unwrap());
+    let len_inv = u32::from_le_bytes(rest[5..9].try_into().unwrap());
+    if len_inv != !len {
+        // A corrupted length word must not be mistaken for a torn tail:
+        // treating it as one would let the next writer truncate away
+        // every committed record behind it.
+        return Err(OptunaError::Storage(format!(
+            "corrupt journal record header (length check failed) at byte offset {offset}"
+        )));
+    }
+    let total = RECORD_HEADER_LEN + len as usize;
+    if rest.len() < total {
+        return Ok(Scan::Pending); // torn mid-payload append
+    }
+    let payload = &rest[RECORD_HEADER_LEN..total];
+    let stored = u32::from_le_bytes(rest[9..13].try_into().unwrap());
+    if crc32(&[&[kind], payload]) != stored {
+        return Err(OptunaError::Storage(format!(
+            "CRC mismatch in journal record at byte offset {offset}"
+        )));
+    }
+    let end = pos + total;
+    match kind {
+        KIND_JSON => {
+            let raw = std::str::from_utf8(payload).map_err(|_| {
+                OptunaError::Storage(format!(
+                    "non-UTF-8 journal record payload at byte offset {offset}"
+                ))
+            })?;
+            let parsed = Json::parse(raw).map_err(|e| {
+                OptunaError::Storage(format!(
+                    "bad JSON in journal record at byte offset {offset}: {e}"
+                ))
+            })?;
+            Ok(Scan::Json { parsed, raw, end })
+        }
+        KIND_SNAPSHOT => Ok(Scan::Snapshot { payload, end }),
+        other => Err(OptunaError::Storage(format!(
+            "unknown journal record kind {other} at byte offset {offset}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE CRC-32 test vectors
+        assert_eq!(crc32(&[b""]), 0);
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926, "split input");
+    }
+
+    #[test]
+    fn binary_record_roundtrip() {
+        let mut out = Vec::new();
+        out.extend_from_slice(BINARY_MAGIC);
+        push_json_record(JournalFormat::Binary, "{\"op\":\"torn\"}", &mut out);
+        push_binary_record(KIND_SNAPSHOT, &[1, 2, 3], &mut out);
+        let Scan::Skip { end } = next_record(JournalFormat::Binary, &out, 0, 0).unwrap() else {
+            panic!("magic must scan as Skip");
+        };
+        let Scan::Json { raw, end, .. } = next_record(JournalFormat::Binary, &out, end, 0).unwrap()
+        else {
+            panic!("json record");
+        };
+        assert_eq!(raw, "{\"op\":\"torn\"}");
+        let Scan::Snapshot { payload, end } =
+            next_record(JournalFormat::Binary, &out, end, 0).unwrap()
+        else {
+            panic!("snapshot record");
+        };
+        assert_eq!(payload, &[1, 2, 3]);
+        assert_eq!(end, out.len());
+    }
+
+    #[test]
+    fn binary_truncation_is_pending_corruption_is_error() {
+        let mut out = Vec::new();
+        out.extend_from_slice(BINARY_MAGIC);
+        push_json_record(JournalFormat::Binary, "{\"op\":\"torn\"}", &mut out);
+        let start = BINARY_MAGIC.len();
+        // every truncation point inside the record reads as a torn tail
+        for cut in start..out.len() {
+            let scan = next_record(JournalFormat::Binary, &out[..cut], start, 0);
+            assert!(matches!(scan, Ok(Scan::Pending)), "cut at {cut}");
+        }
+        // a payload flip is a CRC hard error naming the offset
+        let mut bad = out.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x20;
+        let err = next_record(JournalFormat::Binary, &bad, start, 0).unwrap_err();
+        assert!(format!("{err:?}").contains(&format!("byte offset {start}")));
+        // a length-word flip is a header hard error, not a torn tail
+        let mut bad = out.clone();
+        bad[start + 3] ^= 0x01; // high byte of len, extends past EOF
+        assert!(next_record(JournalFormat::Binary, &bad, start, 0).is_err());
+    }
+
+    #[test]
+    fn detect_classifies_heads() {
+        assert_eq!(detect(BINARY_MAGIC, 100).unwrap(), Detected::Binary);
+        assert_eq!(detect(b"{\"op\":\"torn\"}", 14).unwrap(), Detected::Lines);
+        assert_eq!(detect(b"OPTJ", 4).unwrap(), Detected::TornMagicStub);
+        assert!(detect(b"PK\x03\x04", 4).is_err(), "foreign file");
+        assert!(detect(b"OPTJRNL2xxx", 11).is_err(), "wrong magic version");
+    }
+
+    #[test]
+    fn sniff_gen_reads_compact_begin_heads() {
+        let line = b"{\"gen\":7,\"op\":\"compact_begin\"}\n{\"op\":\"snapshot\"}\n";
+        assert_eq!(sniff_gen(JournalFormat::Lines, line), 7);
+        assert_eq!(sniff_gen(JournalFormat::Lines, b"{\"op\":\"create_study\"}\n"), 0);
+        assert_eq!(sniff_gen(JournalFormat::Lines, b"{\"op\":\"cre"), 0, "no newline yet");
+        let mut bin = Vec::new();
+        bin.extend_from_slice(BINARY_MAGIC);
+        push_json_record(JournalFormat::Binary, "{\"gen\":3,\"op\":\"compact_begin\"}", &mut bin);
+        assert_eq!(sniff_gen(JournalFormat::Binary, &bin), 3);
+        assert_eq!(sniff_gen(JournalFormat::Binary, &bin[..10]), 0, "short head");
+    }
+}

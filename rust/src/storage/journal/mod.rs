@@ -1,13 +1,17 @@
-//! Journal storage: append-only JSONL + advisory `flock`.
+//! Journal storage: append-only journal + advisory `flock`, with snapshot
+//! compaction and an optional CRC-framed binary format.
 //!
 //! The multi-process backend behind the paper's Fig 7 workflow — run the
 //! same binary N times with the same journal path and the workers share
 //! one study with no coordinator process. This is the architectural
 //! equivalent of the paper's SQLite backend: a single file, crash-safe by
-//! construction (the journal is replayed from the top; a torn final line
-//! is ignored), and safe across processes on one host via `flock(2)`.
+//! construction (the journal is replayed from the top; a torn final
+//! record is ignored), and safe across processes on one host via
+//! `flock(2)`.
 //!
-//! Entry grammar (one JSON object per line):
+//! Entry grammar (each entry is one JSON object — one line in the v1
+//! lines framing, one framed record in the v2 binary framing; see
+//! [`format`]):
 //! ```text
 //! {"op":"create_study","name":N,"direction":D,"directions":[D,..]}
 //! {"op":"create_trial","study":S,"time":MS}
@@ -21,9 +25,12 @@
 //! {"op":"torn"}                                   (healing marker, no-op)
 //! {"op":"create_trials","study":S,"n":N,"time":MS}        (batched ask)
 //! {"op":"finish_trials","time":MS,"finishes":[{..},..]}   (batched tell)
+//! {"op":"compact_begin","gen":G}                  (compaction header...)
+//! {"op":"snapshot",...}                           (...checkpointed state...)
+//! {"op":"compact_end","gen":G}                    (...and its license)
 //! ```
-//! Ids are implicit: the i-th `create_study` line defines study id i, the
-//! i-th `create_trial`/`enqueue` line defines trial id i (a
+//! Ids are implicit: the i-th `create_study` record defines study id i,
+//! the i-th `create_trial`/`enqueue` record defines trial id i (a
 //! `create_trials` record defines `n` consecutive ids) — so every
 //! process derives identical ids from the identical byte stream.
 //!
@@ -36,16 +43,44 @@
 //! single-trial ops, keeping journals written by unbatched workloads
 //! byte-compatible with older binaries.
 //!
-//! Crash tolerance: a writer killed mid-append leaves a torn final line
-//! (no trailing `\n`). Replay never applies it, and the *next* writer
-//! heals the file by newline-terminating the fragment and stamping a
-//! `{"op":"torn"}` marker before its own record. Replay skips an
-//! unparseable line **only** when such a marker vouches for it — any
-//! other unparseable line is a hard "corrupt journal" error, because ids
-//! are positional and skipping would silently shift every later trial
-//! id. Ops unknown to this binary are ignored on replay, so old binaries
-//! can read journals written by newer ones. `time` fields record the
-//! *writer's* clock, keeping replay deterministic across processes.
+//! # Compaction
+//!
+//! [`JournalStorage::compact`] rewrites the file as a *compaction
+//! header* — `compact_begin`, a snapshot of the full replayed state
+//! ([`snapshot`]), any ops this binary does not understand carried
+//! through verbatim, `compact_end` — so reopening replays one snapshot
+//! plus the live tail instead of the whole history: O(state), not
+//! O(ops). Mirroring the torn-marker discipline, the snapshot alone
+//! licenses nothing; only the `compact_end` marker (with the matching
+//! generation) commits it, and replay fails loudly on a header without
+//! its license. The swap itself is write-aside + fsync + `rename` under
+//! the exclusive lock, and every refresh re-sniffs the file head: a peer
+//! that held an offset into the pre-compaction file sees the generation
+//! change and transparently rebuilds from byte 0 (cheap, by
+//! construction). Per-study/per-trial sequence cursors are checkpointed
+//! exactly, so delta readers and [`CachedStorage`] replicas stay valid
+//! across a compaction.
+//!
+//! All locking goes through a sidecar lockfile (`<path>.lock`) rather
+//! than the journal fd itself: the lockfile inode is stable across the
+//! compaction rename, so there is no window where two processes hold
+//! "the" lock on different inodes of the journal path.
+//!
+//! # Crash tolerance
+//!
+//! A writer killed mid-append leaves a torn final record. Replay never
+//! applies it, and the *next* writer heals the file — in lines framing
+//! by newline-terminating the fragment and stamping a `{"op":"torn"}`
+//! marker that vouches for it; in binary framing by truncating the
+//! self-delimiting fragment (no marker needed — see [`format`]). Replay
+//! skips an unparseable line **only** when a marker vouches for it, and
+//! a binary record that is complete but fails its CRC is a hard error
+//! naming the byte offset — any other mid-file damage aborts replay,
+//! because ids are positional and skipping would silently shift every
+//! later trial id. Ops unknown to this binary are ignored on replay (and
+//! preserved across compaction), so old binaries can read journals
+//! written by newer ones. `time` fields record the *writer's* clock,
+//! keeping replay deterministic across processes.
 //!
 //! Replay is **unknown-field-tolerant** in both directions: the
 //! multi-objective fields (`directions` on `create_study`, `values` on
@@ -54,21 +89,35 @@
 //! and multi-objective journals replay on pre-multi binaries as their
 //! objective-0 projection (the `value`/`direction` mirrors are always
 //! written alongside the vectors).
+//!
+//! [`CachedStorage`]: crate::storage::CachedStorage
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+pub mod format;
+mod replay;
+mod snapshot;
+
+use std::collections::{BTreeMap, HashSet};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::os::unix::io::AsRawFd;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
-use crate::storage::{now_ms, ParamSet, Storage, TrialDelta, TrialFinish};
+use crate::storage::{
+    now_ms, Compactable, CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish,
+};
 use crate::util::json::Json;
 
-/// Minimal `flock(2)` binding so the crate stays dependency-free. The
-/// constants are identical on Linux and the BSDs (including macOS).
+pub use format::JournalFormat;
+
+use replay::{bad_study, bad_trial, encode_value, Replayed};
+
+/// Minimal `flock(2)`/`ftruncate(2)` bindings so the crate stays
+/// dependency-free. The constants are identical on Linux and the BSDs
+/// (including macOS); `off_t` is 64-bit on every supported target.
 mod sys {
     use std::os::raw::c_int;
 
@@ -78,103 +127,67 @@ mod sys {
 
     extern "C" {
         pub fn flock(fd: c_int, operation: c_int) -> c_int;
+        pub fn ftruncate(fd: c_int, length: i64) -> c_int;
     }
 }
 
-struct StudyRec {
-    name: String,
-    /// One direction per objective; `directions[0]` feeds the scalar
-    /// `get_study_direction`.
-    directions: Vec<StudyDirection>,
-    trials: Vec<u64>,
-    /// Monotonic write counter, derived purely from the journal byte
-    /// stream during replay — so every process that has replayed the same
-    /// prefix reports the same sequence number (see [`Storage::study_seq`]).
-    seq: u64,
-    /// FIFO of enqueued (`Waiting`) trial ids, rebuilt by replay. Pops
-    /// lazily drop entries whose trial was claimed by another process
-    /// (its `start` op flipped the state), so an empty/stale queue costs
-    /// O(1) per `ask` instead of a scan over the study's trials.
-    waiting: VecDeque<u64>,
+/// Construction-time options for [`JournalStorage::open_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct JournalOptions {
+    /// Framing used when *creating* a journal (and the default target of
+    /// compaction). Opening an existing file always honors what is on
+    /// disk — the head bytes, not this option, decide how a file reads.
+    pub format: JournalFormat,
+    /// Whether to fsync after each append (durability vs throughput; the
+    /// perf ablation in benches/perf_micro.rs measures both).
+    pub fsync: bool,
+    /// Compact automatically once the journal exceeds this many bytes
+    /// (checked after each write, with hysteresis: a compaction only
+    /// re-arms after the file doubles past its post-compaction size, so
+    /// a workload whose live state is itself above the threshold does
+    /// not re-compact on every append). `None` disables auto-compaction.
+    pub auto_compact_bytes: Option<u64>,
 }
 
-#[derive(Default)]
-struct Replayed {
-    studies: Vec<StudyRec>,
-    by_name: HashMap<String, u64>,
-    trials: Vec<FrozenTrial>,
-    trial_study: Vec<u64>,
-    /// Study seq at each trial's last modification (parallel to `trials`).
-    trial_seq: Vec<u64>,
-    /// Byte offset of the first unapplied journal byte.
-    offset: u64,
-}
-
-impl Replayed {
-    fn touch(&mut self, trial_id: usize) {
-        let sid = self.trial_study[trial_id] as usize;
-        self.studies[sid].seq += 1;
-        self.trial_seq[trial_id] = self.studies[sid].seq;
+impl Default for JournalOptions {
+    fn default() -> Self {
+        JournalOptions { format: JournalFormat::Lines, fsync: false, auto_compact_bytes: None }
     }
 }
 
-/// Parse one journal line; `None` for non-UTF-8 or non-JSON bytes.
-fn parse_line(line: &[u8]) -> Option<Json> {
-    let text = std::str::from_utf8(line).ok()?;
-    Json::parse(text).ok()
-}
-
-/// Verdict on a run of unparseable journal lines (see `refresh_locked`).
-enum TornRun {
-    /// A `{"op":"torn"}` healing marker terminates the run: skip it.
-    Healed,
-    /// The buffer ends before a verdict — a heal may be in flight; leave
-    /// the bytes unconsumed and re-examine on the next refresh.
-    Pending,
-    /// A parseable non-marker line follows: this is real mid-file
-    /// corruption, not a healed torn tail.
-    Corrupt,
-}
-
-/// Scan complete lines starting at byte `from`: a run of unparseable
-/// lines is a healed torn write iff a `torn` marker terminates it before
-/// any other parseable line.
-fn torn_run_is_healed(buf: &[u8], mut from: usize) -> TornRun {
-    while let Some(nl) = buf[from..].iter().position(|&b| b == b'\n') {
-        let line = &buf[from..from + nl];
-        from += nl + 1;
-        if line.is_empty() {
-            continue;
-        }
-        match parse_line(line) {
-            Some(entry) => {
-                return if entry.get("op").and_then(|o| o.as_str()) == Some("torn") {
-                    TornRun::Healed
-                } else {
-                    TornRun::Corrupt
-                };
-            }
-            None => continue, // another fragment of the same torn run
-        }
+impl JournalOptions {
+    /// Options for a binary-framed (v2) journal.
+    pub fn binary() -> Self {
+        JournalOptions { format: JournalFormat::Binary, ..Default::default() }
     }
-    TornRun::Pending
 }
 
 /// File-backed multi-process storage.
 pub struct JournalStorage {
     path: PathBuf,
+    /// Sidecar lockfile (`<path>.lock`), opened once at construction. All
+    /// flocks go through this fd: its inode is stable across the
+    /// compaction `rename`, unlike the journal path's (see module docs).
+    lock_file: File,
     state: Mutex<Replayed>,
     /// Whether to fsync after each append (durability vs throughput; the
     /// perf ablation in benches/perf_micro.rs measures both).
     pub fsync: bool,
+    /// Framing for newly created files / default compaction target.
+    preferred_format: JournalFormat,
+    auto_compact_bytes: Option<u64>,
+    /// File size right after our last compaction (0 = none yet) — the
+    /// auto-compaction hysteresis baseline.
+    last_compact_len: AtomicU64,
 }
 
-struct FileLock {
-    file: File,
+/// Advisory lock on the sidecar lockfile, released on drop.
+struct FlockGuard<'a> {
+    file: &'a File,
 }
 
-impl FileLock {
-    fn acquire(file: File, exclusive: bool) -> Result<FileLock, OptunaError> {
+impl<'a> FlockGuard<'a> {
+    fn acquire(file: &'a File, exclusive: bool) -> Result<FlockGuard<'a>, OptunaError> {
         let op = if exclusive { sys::LOCK_EX } else { sys::LOCK_SH };
         let rc = unsafe { sys::flock(file.as_raw_fd(), op) };
         if rc != 0 {
@@ -183,30 +196,53 @@ impl FileLock {
                 std::io::Error::last_os_error()
             )));
         }
-        Ok(FileLock { file })
+        Ok(FlockGuard { file })
     }
 }
 
-impl Drop for FileLock {
+impl Drop for FlockGuard<'_> {
     fn drop(&mut self) {
         unsafe { sys::flock(self.file.as_raw_fd(), sys::LOCK_UN) };
     }
 }
 
 impl JournalStorage {
-    /// Open (creating if absent) a journal at `path`.
+    /// Open (creating if absent) a line-JSON journal at `path`.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Self, OptunaError> {
+        Self::open_with(path, JournalOptions::default())
+    }
+
+    /// Open (creating if absent) a journal at `path` with explicit
+    /// options. The `format` option applies to newly created files; an
+    /// existing file is read in whatever framing its head bytes declare.
+    pub fn open_with<P: AsRef<Path>>(
+        path: P,
+        options: JournalOptions,
+    ) -> Result<Self, OptunaError> {
         let path = path.as_ref().to_path_buf();
+        let lock_path = lock_path_for(&path);
+        let lock_file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .read(true)
+            .open(&lock_path)
+            .map_err(|e| OptunaError::Storage(format!("open {lock_path:?}: {e}")))?;
         OpenOptions::new()
             .create(true)
             .append(true)
             .read(true)
             .open(&path)
             .map_err(|e| OptunaError::Storage(format!("open {path:?}: {e}")))?;
+        let mut state = Replayed::default();
+        state.format = options.format;
         Ok(JournalStorage {
             path,
-            state: Mutex::new(Replayed::default()),
-            fsync: false,
+            lock_file,
+            state: Mutex::new(state),
+            fsync: options.fsync,
+            preferred_format: options.format,
+            auto_compact_bytes: options.auto_compact_bytes,
+            last_compact_len: AtomicU64::new(0),
         })
     }
 
@@ -222,52 +258,83 @@ impl JournalStorage {
             .map_err(|e| self.io_err("open", e))
     }
 
+    fn truncate(&self, file: &File, len: u64) -> Result<(), OptunaError> {
+        let rc = unsafe { sys::ftruncate(file.as_raw_fd(), len as i64) };
+        if rc != 0 {
+            return Err(self.io_err("ftruncate", std::io::Error::last_os_error()));
+        }
+        Ok(())
+    }
+
     /// Read and apply journal bytes past the cached offset. Caller must
-    /// hold at least a shared flock for cross-process consistency.
+    /// hold at least a shared flock (on the sidecar lockfile) for
+    /// cross-process consistency.
+    ///
+    /// Every refresh re-reads the file head and re-sniffs framing and
+    /// compaction generation: if either disagrees with the cached state
+    /// — or the file shrank below our offset — a peer swapped the file
+    /// (compaction), and the state is rebuilt from byte 0. Rebuilding is
+    /// cheap by construction: the swapped-in file is one snapshot plus
+    /// the live tail.
     fn refresh_locked(&self, state: &mut Replayed, file: &mut File) -> Result<(), OptunaError> {
         let len = file
             .seek(SeekFrom::End(0))
             .map_err(|e| self.io_err("seek", e))?;
-        if len <= state.offset {
+        if len == 0 {
+            if state.offset > 0 {
+                // swapped to empty (never produced by compaction, but a
+                // user can truncate a journal to reset it)
+                *state = Replayed::default();
+                state.format = self.preferred_format;
+            }
+            state.torn_magic_stub = false;
+            return Ok(());
+        }
+        let mut head = [0u8; 256];
+        file.seek(SeekFrom::Start(0)).map_err(|e| self.io_err("seek", e))?;
+        let mut filled = 0usize;
+        let want = (len as usize).min(head.len());
+        while filled < want {
+            let n = file.read(&mut head[filled..want]).map_err(|e| self.io_err("read", e))?;
+            if n == 0 {
+                break;
+            }
+            filled += n;
+        }
+        let head = &head[..filled];
+        let (fmt, stub) = match format::detect(head, len)? {
+            format::Detected::Lines => (JournalFormat::Lines, false),
+            format::Detected::Binary => (JournalFormat::Binary, false),
+            format::Detected::TornMagicStub => (JournalFormat::Binary, true),
+        };
+        let gen = if stub { 0 } else { format::sniff_gen(fmt, head) };
+        if state.offset > 0 && (fmt != state.format || gen != state.gen || len < state.offset) {
+            *state = Replayed::default();
+        }
+        state.format = fmt;
+        state.torn_magic_stub = stub;
+        if stub || len <= state.offset {
             return Ok(());
         }
         file.seek(SeekFrom::Start(state.offset))
             .map_err(|e| self.io_err("seek", e))?;
         let mut buf = Vec::with_capacity((len - state.offset) as usize);
         file.read_to_end(&mut buf).map_err(|e| self.io_err("read", e))?;
-        let mut consumed = 0usize;
-        let mut start = 0usize;
-        while let Some(nl) = buf[start..].iter().position(|&b| b == b'\n') {
-            let line = &buf[start..start + nl];
-            if !line.is_empty() {
-                match parse_line(line) {
-                    Some(entry) => apply(state, &entry)?,
-                    None => {
-                        // An unparseable complete line is legal only as a
-                        // torn fragment that a later writer healed — in
-                        // which case a `{"op":"torn"}` marker follows the
-                        // (run of) fragment line(s). Anything else is real
-                        // corruption and aborts the replay; id assignment
-                        // is positional, so silently skipping would shift
-                        // every later trial id.
-                        match torn_run_is_healed(&buf, start + nl + 1) {
-                            TornRun::Healed => {} // skip the fragment
-                            TornRun::Pending => break, // heal in flight: retry next refresh
-                            TornRun::Corrupt => {
-                                return Err(OptunaError::Storage(
-                                    "corrupt journal line (unparseable, not a healed torn tail)"
-                                        .into(),
-                                ))
-                            }
-                        }
-                    }
-                }
+        let consumed = match replay::consume(state, &buf) {
+            Ok(n) => n,
+            Err(e) => {
+                // `consume` may have applied a prefix of the buffer before
+                // erroring; keeping that half-built state with an
+                // unadvanced offset would double-apply those records on
+                // the next refresh. Drop it: every retry replays from
+                // scratch and reports the same error.
+                *state = Replayed::default();
+                state.format = fmt;
+                return Err(e);
             }
-            start += nl + 1;
-            consumed = start;
-        }
-        // Trailing bytes without '\n' are a torn write: leave them for the
-        // writer that owns them (they are re-read next refresh).
+        };
+        // Trailing bytes of an incomplete record are a torn write: leave
+        // them for the writer that owns them (re-read next refresh).
         state.offset += consumed as u64;
         Ok(())
     }
@@ -278,42 +345,63 @@ impl JournalStorage {
         f: impl FnOnce(&Replayed) -> Result<T, OptunaError>,
     ) -> Result<T, OptunaError> {
         let mut state = self.state.lock().unwrap();
-        let lock = FileLock::acquire(self.open_file()?, false)?;
-        let mut file = lock.file.try_clone().map_err(|e| self.io_err("clone", e))?;
-        self.refresh_locked(&mut state, &mut file)?;
-        drop(lock);
+        {
+            let _guard = FlockGuard::acquire(&self.lock_file, false)?;
+            let mut file = self.open_file()?;
+            self.refresh_locked(&mut state, &mut file)?;
+        }
         f(&state)
     }
 
     /// Write one entry at the journal's tail and fold it into `state`.
     /// Caller holds the exclusive flock and has already refreshed +
-    /// validated. If a killed writer left a torn (unterminated) fragment
-    /// at the tail, newline-terminate it first so our record starts a
-    /// fresh line — replay then skips the fragment as an unparseable
-    /// line. The entry is consumed via `refresh_locked`, which keeps
-    /// `state.offset` exact even when healing inserted bytes.
+    /// validated. If a killed writer left a torn fragment at the tail,
+    /// heal it first — lines framing newline-terminates the fragment and
+    /// stamps the `torn` marker that licenses replay to skip it; binary
+    /// framing truncates the self-delimiting fragment away (a torn magic
+    /// stub truncates to zero and the magic is rewritten). The entry is
+    /// consumed via `refresh_locked`, which keeps `state.offset` exact
+    /// even when healing changed the tail.
     fn append_locked(
         &self,
         state: &mut Replayed,
         file: &mut File,
         entry: &Json,
     ) -> Result<(), OptunaError> {
-        let len = file
+        let mut len = file
             .seek(SeekFrom::End(0))
             .map_err(|e| self.io_err("seek", e))?;
-        let mut line = String::new();
-        if len > state.offset {
-            // Unconsumed bytes after a refresh == torn tail from a crash.
-            // Terminate the fragment and stamp the healing marker that
-            // licenses replay to skip it (see `torn_run_is_healed`) — all
-            // in the same append as our record.
-            line.push_str("\n{\"op\":\"torn\"}\n");
+        if state.torn_magic_stub {
+            // the whole file is a torn first append of a binary journal
+            self.truncate(file, 0)?;
+            state.torn_magic_stub = false;
+            state.offset = 0;
+            len = 0;
         }
-        line.push_str(&entry.to_string());
-        line.push('\n');
+        let mut out = Vec::new();
+        match state.format {
+            JournalFormat::Lines => {
+                if len > state.offset {
+                    // Unconsumed bytes after a refresh == torn tail from a
+                    // crash. Terminate the fragment and stamp the healing
+                    // marker that licenses replay to skip it — all in the
+                    // same append as our record.
+                    out.extend_from_slice(b"\n{\"op\":\"torn\"}\n");
+                }
+            }
+            JournalFormat::Binary => {
+                if len > state.offset {
+                    // a torn framed record is self-delimiting: drop it
+                    self.truncate(file, state.offset)?;
+                }
+                if state.offset == 0 {
+                    out.extend_from_slice(format::BINARY_MAGIC);
+                }
+            }
+        }
+        format::push_json_record(state.format, &entry.to_string(), &mut out);
         // the file is opened with O_APPEND, so this lands at the tail
-        file.write_all(line.as_bytes())
-            .map_err(|e| self.io_err("write", e))?;
+        file.write_all(&out).map_err(|e| self.io_err("write", e))?;
         if self.fsync {
             file.sync_data().map_err(|e| self.io_err("fsync", e))?;
         }
@@ -322,16 +410,163 @@ impl JournalStorage {
 
     /// Run `f` with a refreshed state under the exclusive (write) flock —
     /// the shared preamble of every mutating operation. `f` appends via
-    /// [`JournalStorage::append_locked`].
+    /// [`JournalStorage::append_locked`]. After the locks are released,
+    /// the auto-compaction threshold (if configured) is checked.
     fn with_write<T>(
         &self,
         f: impl FnOnce(&mut Replayed, &mut File) -> Result<T, OptunaError>,
     ) -> Result<T, OptunaError> {
+        let (out, tail_len, fmt) = {
+            let mut state = self.state.lock().unwrap();
+            let _guard = FlockGuard::acquire(&self.lock_file, true)?;
+            let mut file = self.open_file()?;
+            self.refresh_locked(&mut state, &mut file)?;
+            let out = f(&mut state, &mut file)?;
+            (out, state.offset, state.format)
+        };
+        if let Some(threshold) = self.auto_compact_bytes {
+            // hysteresis: only once the file doubles past its last
+            // post-compaction size — a live state larger than the
+            // threshold must not re-compact on every append
+            if tail_len > threshold && tail_len > 2 * self.last_compact_len.load(Ordering::Relaxed)
+            {
+                self.compact_impl(Some(fmt))?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compact the journal in its current on-disk framing. See the
+    /// module docs for the protocol; returns before/after sizes.
+    pub fn compact(&self) -> Result<CompactionStats, OptunaError> {
+        self.compact_impl(None)
+    }
+
+    /// Compact the journal, rewriting it in `format` — the migration
+    /// path between the lines and binary framings (a compaction is a
+    /// semantics-preserving rewrite, so it may also re-frame).
+    pub fn compact_as(&self, format: JournalFormat) -> Result<CompactionStats, OptunaError> {
+        self.compact_impl(Some(format))
+    }
+
+    fn compact_impl(&self, to: Option<JournalFormat>) -> Result<CompactionStats, OptunaError> {
         let mut state = self.state.lock().unwrap();
-        let lock = FileLock::acquire(self.open_file()?, true)?;
-        let mut file = lock.file.try_clone().map_err(|e| self.io_err("clone", e))?;
+        let _guard = FlockGuard::acquire(&self.lock_file, true)?;
+        let mut file = self.open_file()?;
         self.refresh_locked(&mut state, &mut file)?;
-        f(&mut state, &mut file)
+        let fmt = to.unwrap_or(state.format);
+        let bytes_before = file
+            .seek(SeekFrom::End(0))
+            .map_err(|e| self.io_err("seek", e))?;
+        let gen = state.gen + 1;
+        let mut buf = Vec::new();
+        if fmt == JournalFormat::Binary {
+            buf.extend_from_slice(format::BINARY_MAGIC);
+        }
+        let begin = Json::obj(vec![
+            ("op", Json::Str("compact_begin".into())),
+            ("gen", Json::Num(gen as f64)),
+        ]);
+        format::push_json_record(fmt, &begin.to_string(), &mut buf);
+        match fmt {
+            JournalFormat::Lines => {
+                format::push_json_record(fmt, &snapshot::build_json(&state).to_string(), &mut buf)
+            }
+            JournalFormat::Binary => {
+                let payload = snapshot::build_binary(&state);
+                format::push_binary_record(format::KIND_SNAPSHOT, &payload, &mut buf)
+            }
+        }
+        for raw in &state.unknown_ops {
+            // ops from a newer binary ride through the compaction intact
+            format::push_json_record(fmt, raw, &mut buf);
+        }
+        let end = Json::obj(vec![
+            ("op", Json::Str("compact_end".into())),
+            ("gen", Json::Num(gen as f64)),
+        ]);
+        format::push_json_record(fmt, &end.to_string(), &mut buf);
+        self.verify_compacted(&state, fmt, &buf)?;
+        // write aside + fsync + rename: the journal path only ever points
+        // at a complete compacted file or the old one, never in between
+        let tmp = self.path.with_extension("compact.tmp");
+        {
+            let mut f = File::create(&tmp).map_err(|e| self.io_err("create tmp", e))?;
+            f.write_all(&buf).map_err(|e| self.io_err("write tmp", e))?;
+            f.sync_all().map_err(|e| self.io_err("fsync tmp", e))?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(|e| self.io_err("rename", e))?;
+        if let Some(parent) = self.path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            // make the rename itself durable
+            if let Ok(dir) = File::open(parent) {
+                dir.sync_all().ok();
+            }
+        }
+        let stats = CompactionStats {
+            gen,
+            bytes_before,
+            bytes_after: buf.len() as u64,
+            studies: state.studies.len(),
+            trials: state.trials.len(),
+        };
+        self.last_compact_len.store(stats.bytes_after, Ordering::Relaxed);
+        // rebuild our own state from the swapped-in file (still under the
+        // exclusive lock, so the content is exactly `buf`)
+        *state = Replayed::default();
+        state.format = fmt;
+        let mut fresh = self.open_file()?;
+        self.refresh_locked(&mut state, &mut fresh)?;
+        Ok(stats)
+    }
+
+    /// Pre-rename verification: replay the compacted buffer and require
+    /// it to reproduce the state it checkpoints. A compaction that loses
+    /// a study, a trial, or a seq cursor must fail here — before the
+    /// original file is touched.
+    fn verify_compacted(
+        &self,
+        state: &Replayed,
+        fmt: JournalFormat,
+        buf: &[u8],
+    ) -> Result<(), OptunaError> {
+        let fail = |what: &str| {
+            Err(OptunaError::Storage(format!(
+                "compaction verification failed ({what}); journal left untouched"
+            )))
+        };
+        let mut check = Replayed::default();
+        check.format = fmt;
+        let consumed = match replay::consume(&mut check, buf) {
+            Ok(n) => n,
+            Err(e) => {
+                return Err(OptunaError::Storage(format!(
+                    "compaction verification failed (replay: {e:?}); journal left untouched"
+                )))
+            }
+        };
+        if consumed != buf.len() {
+            return fail("incomplete replay");
+        }
+        if check.studies.len() != state.studies.len() || check.trials.len() != state.trials.len() {
+            return fail("study/trial count mismatch");
+        }
+        if check.trial_seq != state.trial_seq || check.trial_study != state.trial_study {
+            return fail("trial cursor mismatch");
+        }
+        if check.unknown_ops != state.unknown_ops {
+            return fail("carried-through op mismatch");
+        }
+        for (a, b) in state.studies.iter().zip(&check.studies) {
+            if a.name != b.name
+                || a.directions != b.directions
+                || a.trials != b.trials
+                || a.seq != b.seq
+                || a.waiting != b.waiting
+            {
+                return fail("study record mismatch");
+            }
+        }
+        Ok(())
     }
 
     /// Shared body of `finish_trial` / `finish_trial_values`: the scalar
@@ -400,39 +635,12 @@ impl JournalStorage {
     }
 }
 
-fn bad_trial(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown trial id {id}"))
-}
-
-fn bad_study(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown study id {id}"))
-}
-
-/// Journal encoding of one objective value: JSON has no NaN/±inf, so
-/// non-finite values are written as marker strings and decoded exactly by
-/// [`decode_value`]. (The plain `Num` writer emits `null` for them, which
-/// replay could only read back as NaN — flipping a `-inf` objective from
-/// best-possible to worst-possible across a process restart.)
-fn encode_value(v: f64) -> Json {
-    if v.is_finite() {
-        Json::Num(v)
-    } else if v.is_nan() {
-        Json::Str("nan".into())
-    } else if v > 0.0 {
-        Json::Str("inf".into())
-    } else {
-        Json::Str("-inf".into())
-    }
-}
-
-/// Inverse of [`encode_value`]; anything unrecognized (e.g. a `null`
-/// written by an older binary) decodes to NaN so arity is preserved.
-fn decode_value(j: &Json) -> f64 {
-    match j.as_str() {
-        Some("inf") => f64::INFINITY,
-        Some("-inf") => f64::NEG_INFINITY,
-        _ => j.as_f64().unwrap_or(f64::NAN),
-    }
+/// Sidecar lockfile path: `<path>.lock` (appended, not replacing the
+/// extension — `a.jsonl` locks via `a.jsonl.lock`).
+fn lock_path_for(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".lock");
+    PathBuf::from(os)
 }
 
 /// The `create_trial` journal entry (shared by `create_trial` and
@@ -479,254 +687,10 @@ fn enqueue_entry(study_id: u64, params: &ParamSet, user_attrs: &BTreeMap<String,
     ])
 }
 
-/// Replay body of one trial creation (shared by the `create_trial` and
-/// `create_trials` ops): append a fresh `Running` trial to `sid`.
-fn apply_create_trial(state: &mut Replayed, sid: usize, time: Option<u64>) {
-    let tid = state.trials.len() as u64;
-    let number = state.studies[sid].trials.len() as u64;
-    let mut t = FrozenTrial::new(tid, number);
-    // writer clock; absent in pre-timestamp journals
-    t.datetime_start = time;
-    state.trials.push(t);
-    state.trial_study.push(sid as u64);
-    state.trial_seq.push(0);
-    state.studies[sid].trials.push(tid);
-    state.touch(tid as usize);
-}
-
-/// Replay body of one trial finish (shared by the `finish` op and each
-/// item of a `finish_trials` op). `fields` carries `state`/`value`/
-/// `values`; `time` is the writer's completion stamp.
-fn apply_finish_fields(
-    state: &mut Replayed,
-    tid: usize,
-    fields: &Json,
-    time: Option<u64>,
-) -> Result<(), OptunaError> {
-    let st = TrialState::from_str(fields.get("state").and_then(|s| s.as_str()).unwrap_or(""))?;
-    state.trials[tid].state = st;
-    // `values` (multi-objective) wins; scalar `value` is the
-    // pre-`values` journal fallback. Elements decode through
-    // `decode_value` (non-finite marker strings), never dropped:
-    // arity is load-bearing.
-    let vector: Option<Vec<f64>> = fields
-        .get("values")
-        .and_then(|v| v.as_arr())
-        .map(|arr| arr.iter().map(decode_value).collect());
-    match vector {
-        Some(vals) if !vals.is_empty() => state.trials[tid].set_values(&vals),
-        _ => {
-            if let Some(v) = fields.get("value").and_then(|v| v.as_f64()) {
-                state.trials[tid].value = Some(v);
-            }
-        }
+impl Compactable for JournalStorage {
+    fn compact(&self) -> Result<CompactionStats, OptunaError> {
+        JournalStorage::compact(self)
     }
-    state.trials[tid].datetime_complete = time;
-    state.touch(tid);
-    Ok(())
-}
-
-/// Apply one journal entry to the replayed state.
-fn apply(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
-    let op = entry
-        .get("op")
-        .and_then(|o| o.as_str())
-        .ok_or_else(|| OptunaError::Storage("journal entry missing op".into()))?;
-    let get_trial = |state: &mut Replayed, entry: &Json| -> Result<usize, OptunaError> {
-        let tid = entry
-            .get("trial")
-            .and_then(|t| t.as_i64())
-            .ok_or_else(|| OptunaError::Storage("entry missing trial".into()))? as usize;
-        if tid >= state.trials.len() {
-            return Err(bad_trial(tid as u64));
-        }
-        Ok(tid)
-    };
-    match op {
-        "create_study" => {
-            let name = entry
-                .get("name")
-                .and_then(|n| n.as_str())
-                .ok_or_else(|| OptunaError::Storage("create_study missing name".into()))?
-                .to_string();
-            // `directions` (multi-objective) wins when present; scalar
-            // `direction` is the pre-multi fallback
-            let directions = match entry.get("directions").and_then(|d| d.as_arr()) {
-                Some(arr) if !arr.is_empty() => arr
-                    .iter()
-                    .map(|d| StudyDirection::from_str(d.as_str().unwrap_or("")))
-                    .collect::<Result<Vec<_>, _>>()?,
-                _ => vec![StudyDirection::from_str(
-                    entry.get("direction").and_then(|d| d.as_str()).unwrap_or(""),
-                )?],
-            };
-            let id = state.studies.len() as u64;
-            state.by_name.insert(name.clone(), id);
-            state.studies.push(StudyRec {
-                name,
-                directions,
-                trials: Vec::new(),
-                seq: 0,
-                waiting: VecDeque::new(),
-            });
-        }
-        "create_trial" => {
-            let sid = entry
-                .get("study")
-                .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trial missing study".into()))?
-                as usize;
-            if sid >= state.studies.len() {
-                return Err(bad_study(sid as u64));
-            }
-            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            apply_create_trial(state, sid, time);
-        }
-        "create_trials" => {
-            let sid = entry
-                .get("study")
-                .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trials missing study".into()))?
-                as usize;
-            if sid >= state.studies.len() {
-                return Err(bad_study(sid as u64));
-            }
-            let n = entry
-                .get("n")
-                .and_then(|v| v.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trials missing n".into()))?;
-            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            for _ in 0..n {
-                apply_create_trial(state, sid, time);
-            }
-        }
-        "enqueue" => {
-            let sid = entry
-                .get("study")
-                .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("enqueue missing study".into()))?
-                as usize;
-            if sid >= state.studies.len() {
-                return Err(bad_study(sid as u64));
-            }
-            let tid = state.trials.len() as u64;
-            let number = state.studies[sid].trials.len() as u64;
-            let mut t = FrozenTrial::new(tid, number);
-            t.state = TrialState::Waiting;
-            for p in entry.get("params").and_then(|p| p.as_arr()).unwrap_or(&[]) {
-                let name = p
-                    .get("name")
-                    .and_then(|n| n.as_str())
-                    .ok_or_else(|| OptunaError::Storage("enqueue param missing name".into()))?;
-                let dist = Distribution::from_json(
-                    p.get("dist")
-                        .ok_or_else(|| OptunaError::Storage("enqueue param missing dist".into()))?,
-                )?;
-                let value = p
-                    .get("value")
-                    .and_then(|v| v.as_f64())
-                    .ok_or_else(|| OptunaError::Storage("enqueue param missing value".into()))?;
-                t.params.insert(name.to_string(), (dist, value));
-            }
-            for a in entry.get("attrs").and_then(|a| a.as_arr()).unwrap_or(&[]) {
-                let key = a.get("key").and_then(|k| k.as_str()).unwrap_or("");
-                let value = a.get("value").and_then(|v| v.as_str()).unwrap_or("");
-                t.user_attrs.insert(key.to_string(), value.to_string());
-            }
-            state.trials.push(t);
-            state.trial_study.push(sid as u64);
-            state.trial_seq.push(0);
-            state.studies[sid].trials.push(tid);
-            state.studies[sid].waiting.push_back(tid);
-            state.touch(tid as usize);
-        }
-        "start" => {
-            let tid = get_trial(state, entry)?;
-            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            let t = &mut state.trials[tid];
-            t.state = TrialState::Running;
-            t.datetime_start = time;
-            t.last_heartbeat = time;
-            state.touch(tid);
-        }
-        "heartbeat" => {
-            let tid = get_trial(state, entry)?;
-            if state.trials[tid].state == TrialState::Running {
-                if let Some(ms) = entry.get("time").and_then(|v| v.as_i64()) {
-                    state.trials[tid].last_heartbeat = Some(ms as u64);
-                }
-            }
-            // deliberately no touch(): heartbeats are liveness metadata
-            // read straight from the replayed state by fail_stale_trials;
-            // bumping the seq would churn every peer's snapshot cache
-            // once per heartbeat interval for no snapshot consumer
-        }
-        "torn" => {
-            // healing marker: the unparseable line(s) immediately before
-            // this one were a torn write, already skipped by the replay
-            // loop — the marker itself is a no-op
-        }
-        "param" => {
-            let tid = get_trial(state, entry)?;
-            let name = entry
-                .get("name")
-                .and_then(|n| n.as_str())
-                .ok_or_else(|| OptunaError::Storage("param missing name".into()))?;
-            let dist = Distribution::from_json(
-                entry
-                    .get("dist")
-                    .ok_or_else(|| OptunaError::Storage("param missing dist".into()))?,
-            )?;
-            let value = entry
-                .get("value")
-                .and_then(|v| v.as_f64())
-                .ok_or_else(|| OptunaError::Storage("param missing value".into()))?;
-            state.trials[tid].params.insert(name.to_string(), (dist, value));
-            state.touch(tid);
-        }
-        "intermediate" => {
-            let tid = get_trial(state, entry)?;
-            let step = entry.get("step").and_then(|s| s.as_i64()).unwrap_or(0) as u64;
-            let value = entry
-                .get("value")
-                .and_then(|v| v.as_f64())
-                .ok_or_else(|| OptunaError::Storage("intermediate missing value".into()))?;
-            state.trials[tid].intermediate.insert(step, value);
-            state.touch(tid);
-        }
-        "attr" => {
-            let tid = get_trial(state, entry)?;
-            let key = entry.get("key").and_then(|k| k.as_str()).unwrap_or("");
-            let value = entry.get("value").and_then(|v| v.as_str()).unwrap_or("");
-            state.trials[tid]
-                .user_attrs
-                .insert(key.to_string(), value.to_string());
-            state.touch(tid);
-        }
-        "finish" => {
-            let tid = get_trial(state, entry)?;
-            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            apply_finish_fields(state, tid, entry, time)?;
-        }
-        "finish_trials" => {
-            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
-            let items = entry
-                .get("finishes")
-                .and_then(|f| f.as_arr())
-                .ok_or_else(|| OptunaError::Storage("finish_trials missing finishes".into()))?;
-            for item in items {
-                let tid = get_trial(state, item)?;
-                apply_finish_fields(state, tid, item, time)?;
-            }
-        }
-        _other => {
-            // Forward compatibility: ops unknown to this binary are
-            // skipped, so journals written by newer versions stay
-            // readable. (A future op that assigns ids would need a
-            // format bump; pure-annotation ops degrade gracefully.)
-        }
-    }
-    Ok(())
 }
 
 impl Storage for JournalStorage {
@@ -1227,6 +1191,10 @@ impl Storage for JournalStorage {
             Ok(Some((tid, state.trials[tid as usize].number)))
         })
     }
+
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        self.compact().map(Some)
+    }
 }
 
 #[cfg(test)]
@@ -1247,11 +1215,23 @@ mod tests {
         p
     }
 
+    fn cleanup(p: &Path) {
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(lock_path_for(p)).ok();
+    }
+
     #[test]
     fn conformance_suite() {
         let p = tmp_path("conf");
         conformance::run_all(&JournalStorage::open(&p).unwrap());
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
+    }
+
+    #[test]
+    fn conformance_suite_binary_format() {
+        let p = tmp_path("confbin");
+        conformance::run_all(&JournalStorage::open_with(&p, JournalOptions::binary()).unwrap());
+        cleanup(&p);
     }
 
     #[test]
@@ -1270,7 +1250,7 @@ mod tests {
         let (tid2, n2) = b.create_trial(sid).unwrap();
         assert_eq!(n2, 1);
         assert_eq!(a.get_trial(tid2).unwrap().number, 1);
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1292,7 +1272,7 @@ mod tests {
         assert_eq!(d.seq, 3);
         assert_eq!(d.trials.len(), 1);
         assert_eq!(d.trials[0].state, TrialState::Complete);
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1314,7 +1294,7 @@ mod tests {
         assert_eq!(t.state, TrialState::Complete);
         assert!((t.params["x"].1 - 0.25).abs() < 1e-12);
         assert_eq!(t.intermediate_at(3), Some(0.9));
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1335,7 +1315,7 @@ mod tests {
         let t = &s.get_all_trials(sid).unwrap()[0];
         assert_eq!(t.values, vec![0.25, -1.5]);
         assert_eq!(t.value, Some(0.25), "scalar mirror for objective 0");
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1387,7 +1367,7 @@ mod tests {
         assert!(matches!(s.finish_trials(&batch), Err(OptunaError::Conflict(_))));
         assert_eq!(s.get_trial(created[2].0).unwrap().state, TrialState::Running);
         assert_eq!(s.get_trial(created[0].0).unwrap().value, Some(0.5));
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1426,7 +1406,7 @@ mod tests {
             Some(f64::NEG_INFINITY),
             "scalar -inf must survive replay"
         );
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1455,7 +1435,7 @@ mod tests {
         let (t1, _) = s.create_trial(sid).unwrap();
         s.finish_trial(t1, TrialState::Complete, Some(0.9)).unwrap();
         assert_eq!(s.n_trials(sid).unwrap(), 2);
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1475,7 +1455,7 @@ mod tests {
         let s = JournalStorage::open(&p).unwrap();
         let sid = s.get_study_id("s").unwrap().unwrap();
         assert_eq!(s.n_trials(sid).unwrap(), 1); // torn line invisible
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1509,7 +1489,45 @@ mod tests {
         // the healed journal stays fully writable and consistent
         b.finish_trial(t1, TrialState::Complete, Some(1.0)).unwrap();
         assert_eq!(a.get_trial(t1).unwrap().state, TrialState::Complete);
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
+    }
+
+    #[test]
+    fn binary_torn_tail_healed_by_truncation() {
+        let p = tmp_path("binheal");
+        let a = JournalStorage::open_with(&p, JournalOptions::binary()).unwrap();
+        let sid = a.create_study("s", StudyDirection::Minimize).unwrap();
+        let (t0, _) = a.create_trial(sid).unwrap();
+        // a writer SIGKILLed mid-append leaves a partial framed record
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[format::KIND_JSON, 200, 0]).unwrap(); // half a header
+        }
+        let b = JournalStorage::open(&p).unwrap(); // format honors disk, not options
+        assert_eq!(b.n_trials(sid).unwrap(), 1, "torn record must be invisible");
+        let (_, num1) = b.create_trial(sid).unwrap();
+        assert_eq!(num1, 1, "no trial number double-assignment");
+        // the heal truncated the fragment: a full re-replay stays clean
+        let c = JournalStorage::open(&p).unwrap();
+        assert_eq!(c.n_trials(sid).unwrap(), 2);
+        assert_eq!(c.get_trial(t0).unwrap().number, 0);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn torn_magic_stub_healed() {
+        // a writer died inside the very first append of a binary journal:
+        // only a prefix of the magic hit the disk
+        let p = tmp_path("stub");
+        std::fs::write(&p, &format::BINARY_MAGIC[..5]).unwrap();
+        let s = JournalStorage::open_with(&p, JournalOptions::binary()).unwrap();
+        assert_eq!(s.study_names().unwrap(), Vec::<String>::new());
+        let sid = s.create_study("s", StudyDirection::Minimize).unwrap();
+        assert_eq!(s.get_study_id("s").unwrap(), Some(sid));
+        let c = JournalStorage::open(&p).unwrap();
+        assert_eq!(c.study_names().unwrap(), vec!["s".to_string()]);
+        cleanup(&p);
     }
 
     #[test]
@@ -1531,7 +1549,7 @@ mod tests {
         std::fs::write(&p, lines.join("\n") + "\n").unwrap();
         let s = JournalStorage::open(&p).unwrap();
         assert!(s.get_study_id("s").is_err());
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1550,7 +1568,7 @@ mod tests {
         assert!(got_b.is_none(), "a waiting trial must be claimed at most once");
         let (tid, _) = got_a.unwrap();
         assert_eq!(b.get_trial(tid).unwrap().state, TrialState::Running);
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
     }
 
     #[test]
@@ -1572,6 +1590,197 @@ mod tests {
             .collect();
         nums.sort_unstable();
         assert_eq!(nums, (0..100).collect::<Vec<u64>>());
-        std::fs::remove_file(p).ok();
+        cleanup(&p);
+    }
+
+    /// Write a little of everything into `s` so compaction has waiting
+    /// queues, multi-objective vectors, non-finite values, params,
+    /// intermediates and attrs to preserve.
+    fn populate(s: &JournalStorage) -> (u64, u64) {
+        let sid = s
+            .create_study_multi("a", &[StudyDirection::Minimize, StudyDirection::Maximize])
+            .unwrap();
+        for i in 0..5 {
+            let (tid, _) = s.create_trial(sid).unwrap();
+            s.set_trial_param(tid, "x", &Distribution::float(0.0, 1.0), 0.1 * i as f64)
+                .unwrap();
+            s.set_trial_intermediate(tid, 0, i as f64).unwrap();
+            s.set_trial_user_attr(tid, "k", "v").unwrap();
+            s.finish_trial_values(
+                tid,
+                TrialState::Complete,
+                &[i as f64, if i == 3 { f64::NEG_INFINITY } else { -(i as f64) }],
+            )
+            .unwrap();
+        }
+        let mut params = ParamSet::new();
+        params.insert("x".into(), (Distribution::float(0.0, 1.0), 0.7));
+        s.enqueue_trial(sid, &params, &BTreeMap::new()).unwrap();
+        let sid2 = s.create_study("b", StudyDirection::Minimize).unwrap();
+        let (t, _) = s.create_trial(sid2).unwrap();
+        s.finish_trial(t, TrialState::Pruned, Some(0.5)).unwrap();
+        (sid, sid2)
+    }
+
+    /// Observable state of a study, for before/after-compaction diffs.
+    fn fingerprint(s: &JournalStorage, sid: u64) -> (u64, Vec<String>) {
+        let seq = s.study_seq(sid).unwrap();
+        let trials = s
+            .get_all_trials(sid)
+            .unwrap()
+            .iter()
+            .map(|t| {
+                format!(
+                    "{}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
+                    t.number,
+                    t.state,
+                    t.value.map(f64::to_bits),
+                    t.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    t.params
+                        .iter()
+                        .map(|(k, (_, v))| (k.clone(), v.to_bits()))
+                        .collect::<Vec<_>>(),
+                    t.intermediate,
+                    t.user_attrs,
+                )
+            })
+            .collect();
+        (seq, trials)
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_generation() {
+        for fmt in [JournalFormat::Lines, JournalFormat::Binary] {
+            let p = tmp_path("compact");
+            let opts = JournalOptions { format: fmt, ..Default::default() };
+            let s = JournalStorage::open_with(&p, opts).unwrap();
+            let (sid, sid2) = populate(&s);
+            let before_a = fingerprint(&s, sid);
+            let before_b = fingerprint(&s, sid2);
+            let len_before = std::fs::metadata(&p).unwrap().len();
+            let stats = s.compact().unwrap();
+            assert_eq!(stats.gen, 1);
+            assert_eq!(stats.bytes_before, len_before);
+            assert_eq!(stats.studies, 2);
+            assert_eq!(stats.trials, 7);
+            assert_eq!(fingerprint(&s, sid), before_a, "same handle, post-compaction");
+            // a fresh open replays snapshot + license only
+            let f = JournalStorage::open(&p).unwrap();
+            assert_eq!(fingerprint(&f, sid), before_a);
+            assert_eq!(fingerprint(&f, sid2), before_b);
+            // still writable, ids continue where they left off
+            let (tid, num) = f.create_trial(sid).unwrap();
+            assert_eq!(num, 6);
+            assert_eq!(tid, 7);
+            // the waiting queue survived: the enqueued trial is claimable
+            let popped = f.pop_waiting_trial(sid).unwrap();
+            assert_eq!(popped.map(|(_, n)| n), Some(5));
+            // a second compaction bumps the generation
+            assert_eq!(f.compact().unwrap().gen, 2);
+            cleanup(&p);
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_delta_cursors() {
+        let p = tmp_path("cursor");
+        let s = JournalStorage::open(&p).unwrap();
+        let (sid, _) = populate(&s);
+        let seq = s.study_seq(sid).unwrap();
+        s.compact().unwrap();
+        // nothing changed since `seq`: the delta across the compaction
+        // boundary must be empty, not a wholesale resend
+        let d = s.get_trials_since(sid, seq).unwrap();
+        assert_eq!(d.seq, seq);
+        assert!(d.trials.is_empty(), "compaction must not invalidate cursors");
+        let (tid, _) = s.create_trial(sid).unwrap();
+        let d = s.get_trials_since(sid, seq).unwrap();
+        assert_eq!(d.trials.len(), 1);
+        assert_eq!(d.trials[0].id, tid);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn peer_handle_survives_compaction_swap() {
+        // handle `a` holds a replay offset into the old file; peer `b`
+        // compacts (rename swap). `a` must detect the generation change,
+        // rebuild, and keep writing — no double replay, no lost tail.
+        let p = tmp_path("swap");
+        let a = JournalStorage::open(&p).unwrap();
+        let b = JournalStorage::open(&p).unwrap();
+        let (sid, _) = populate(&a);
+        let before = fingerprint(&a, sid);
+        b.compact().unwrap();
+        assert_eq!(fingerprint(&a, sid), before);
+        let (_, num) = a.create_trial(sid).unwrap();
+        assert_eq!(num, 6);
+        assert_eq!(b.n_trials(sid).unwrap(), 7);
+        // and compacting from alternating handles keeps converging
+        a.compact_as(JournalFormat::Binary).unwrap();
+        assert_eq!(b.n_trials(sid).unwrap(), 7);
+        let c = JournalStorage::open(&p).unwrap();
+        assert_eq!(fingerprint(&c, sid).1.len(), 7);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn compaction_reframes_between_lines_and_binary() {
+        let p = tmp_path("reframe");
+        let s = JournalStorage::open(&p).unwrap();
+        let (sid, _) = populate(&s);
+        let before = fingerprint(&s, sid);
+        s.compact_as(JournalFormat::Binary).unwrap();
+        assert_eq!(&std::fs::read(&p).unwrap()[..8], format::BINARY_MAGIC);
+        assert_eq!(fingerprint(&s, sid), before);
+        let f = JournalStorage::open(&p).unwrap(); // disk wins over default options
+        assert_eq!(fingerprint(&f, sid), before);
+        f.create_trial(sid).unwrap();
+        // ...and back to lines
+        f.compact_as(JournalFormat::Lines).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap()[0], b'{');
+        let g = JournalStorage::open(&p).unwrap();
+        assert_eq!(g.n_trials(sid).unwrap(), 8);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn auto_compaction_triggers_with_hysteresis() {
+        let p = tmp_path("auto");
+        let opts = JournalOptions {
+            auto_compact_bytes: Some(2_000),
+            ..Default::default()
+        };
+        let s = JournalStorage::open_with(&p, opts).unwrap();
+        let sid = s.create_study("s", StudyDirection::Minimize).unwrap();
+        for i in 0..200 {
+            let (tid, _) = s.create_trial(sid).unwrap();
+            s.finish_trial(tid, TrialState::Complete, Some(i as f64)).unwrap();
+        }
+        // the journal would be tens of KB of history; auto-compaction
+        // must have kept it near the live-state size
+        let len = std::fs::metadata(&p).unwrap().len();
+        let head = std::fs::read_to_string(&p).unwrap();
+        assert!(head.starts_with("{\"gen\":"), "auto-compaction ran");
+        // hysteresis: the file may grow past the threshold between
+        // compactions but stays bounded by 2x the compacted size + slack
+        let compacted = s.compact().unwrap();
+        assert!(
+            len <= 2 * compacted.bytes_after + 4_096,
+            "len {len} vs compacted {}",
+            compacted.bytes_after
+        );
+        assert_eq!(s.n_trials(sid).unwrap(), 200);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn try_compact_capability() {
+        let p = tmp_path("cap");
+        let s = JournalStorage::open(&p).unwrap();
+        populate(&s);
+        let stats = Storage::try_compact(&s).unwrap().expect("journal is compactable");
+        assert_eq!(stats.gen, 1);
+        assert!(stats.bytes_after > 0);
+        cleanup(&p);
     }
 }

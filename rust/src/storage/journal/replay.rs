@@ -1,0 +1,549 @@
+//! Journal replay: fold a stream of framed records into [`Replayed`].
+//!
+//! Replay is purely positional — the i-th `create_study` record defines
+//! study id i, the i-th trial-creating record defines trial id i — so the
+//! scanner ([`super::format`]) may *never* silently skip a record it
+//! cannot read; only healed torn tails (vouched by a marker or by the
+//! binary framing itself) are skippable.
+//!
+//! # Compaction header state machine
+//!
+//! A compacted journal starts with a three-part header written atomically
+//! (build-aside + `rename`) by [`super::JournalStorage::compact_as`]:
+//!
+//! ```text
+//! {"gen":G,"op":"compact_begin"}     arms the check; G = generation
+//! {"op":"snapshot",...}              the checkpointed state (or a binary
+//!                                    snapshot record in binary framing)
+//! ...unknown ops carried through...  preserved verbatim for newer binaries
+//! {"gen":G,"op":"compact_end"}       the marker that LICENSES the snapshot
+//! ```
+//!
+//! Mirroring the torn-marker discipline, the snapshot alone proves
+//! nothing: only a matching `compact_end` commits it. Because the header
+//! is rename-atomic, no crash of ours can leave it half-written — so a
+//! `compact_begin` without a committed `compact_end` by end-of-scan is
+//! always corruption (e.g. a truncated file) and replay fails loudly
+//! instead of presenting the prefix as a healthy (possibly empty) study.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::util::json::Json;
+
+use super::format::{self, JournalFormat, Scan};
+use super::snapshot;
+
+pub(super) struct StudyRec {
+    pub name: String,
+    /// One direction per objective; `directions[0]` feeds the scalar
+    /// `get_study_direction`.
+    pub directions: Vec<StudyDirection>,
+    pub trials: Vec<u64>,
+    /// Monotonic write counter, derived purely from the journal byte
+    /// stream during replay — so every process that has replayed the same
+    /// prefix reports the same sequence number (see
+    /// [`crate::storage::Storage::study_seq`]). Compaction snapshots carry
+    /// it, so cursors survive a compaction unchanged.
+    pub seq: u64,
+    /// FIFO of enqueued (`Waiting`) trial ids, rebuilt by replay. Pops
+    /// lazily drop entries whose trial was claimed by another process
+    /// (its `start` op flipped the state), so an empty/stale queue costs
+    /// O(1) per `ask` instead of a scan over the study's trials.
+    pub waiting: VecDeque<u64>,
+}
+
+pub(super) struct Replayed {
+    pub studies: Vec<StudyRec>,
+    pub by_name: HashMap<String, u64>,
+    pub trials: Vec<FrozenTrial>,
+    pub trial_study: Vec<u64>,
+    /// Study seq at each trial's last modification (parallel to `trials`).
+    pub trial_seq: Vec<u64>,
+    /// Byte offset of the first unapplied journal byte.
+    pub offset: u64,
+    /// Framing of the file this state was replayed from (refresh detects
+    /// it from the head bytes; an empty file takes the handle's preferred
+    /// format).
+    pub format: JournalFormat,
+    /// Compaction generation of the replayed file: the `gen` of its
+    /// header, 0 for a never-compacted journal. Refresh re-sniffs the
+    /// head every pass; a changed generation means a peer swapped the
+    /// file underneath us and this state must be rebuilt from byte 0.
+    pub gen: u64,
+    /// Ops this binary does not know, preserved verbatim (payload text)
+    /// so compaction re-emits them — a newer binary reading the compacted
+    /// journal still sees its records.
+    pub unknown_ops: Vec<String>,
+    /// `compact_begin` seen, snapshot record not yet.
+    pub awaiting_snapshot: bool,
+    /// Snapshot loaded but not yet licensed by `compact_end`.
+    pub snapshot_uncommitted: bool,
+    /// The file is a torn first append of a binary journal (a proper
+    /// prefix of the magic): the next writer truncates it to zero.
+    pub torn_magic_stub: bool,
+}
+
+impl Default for Replayed {
+    fn default() -> Self {
+        Replayed {
+            studies: Vec::new(),
+            by_name: HashMap::new(),
+            trials: Vec::new(),
+            trial_study: Vec::new(),
+            trial_seq: Vec::new(),
+            offset: 0,
+            format: JournalFormat::Lines,
+            gen: 0,
+            unknown_ops: Vec::new(),
+            awaiting_snapshot: false,
+            snapshot_uncommitted: false,
+            torn_magic_stub: false,
+        }
+    }
+}
+
+impl Replayed {
+    pub fn touch(&mut self, trial_id: usize) {
+        let sid = self.trial_study[trial_id] as usize;
+        self.studies[sid].seq += 1;
+        self.trial_seq[trial_id] = self.studies[sid].seq;
+    }
+
+    /// Inside the compaction header: between `compact_begin` and the
+    /// licensing `compact_end`.
+    fn in_compaction_header(&self) -> bool {
+        self.awaiting_snapshot || self.snapshot_uncommitted
+    }
+}
+
+pub(super) fn bad_trial(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown trial id {id}"))
+}
+
+pub(super) fn bad_study(id: u64) -> OptunaError {
+    OptunaError::Storage(format!("unknown study id {id}"))
+}
+
+/// Journal encoding of one objective value: JSON has no NaN/±inf, so
+/// non-finite values are written as marker strings and decoded exactly by
+/// [`decode_value`]. (The plain `Num` writer emits `null` for them, which
+/// replay could only read back as NaN — flipping a `-inf` objective from
+/// best-possible to worst-possible across a process restart.)
+pub(super) fn encode_value(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Inverse of [`encode_value`]; anything unrecognized (e.g. a `null`
+/// written by an older binary) decodes to NaN so arity is preserved.
+pub(super) fn decode_value(j: &Json) -> f64 {
+    match j.as_str() {
+        Some("inf") => f64::INFINITY,
+        Some("-inf") => f64::NEG_INFINITY,
+        _ => j.as_f64().unwrap_or(f64::NAN),
+    }
+}
+
+/// Fold every complete record of `buf` (the file bytes from
+/// `state.offset` to EOF) into `state`; returns the count of consumed
+/// bytes. Trailing bytes of an incomplete record are left unconsumed —
+/// they belong to the writer that tore them. The caller advances
+/// `state.offset` by the returned count.
+pub(super) fn consume(state: &mut Replayed, buf: &[u8]) -> Result<usize, OptunaError> {
+    let base = state.offset;
+    let mut pos = 0usize;
+    let mut consumed = 0usize;
+    loop {
+        if pos >= buf.len() {
+            break;
+        }
+        match format::next_record(state.format, buf, pos, base)? {
+            Scan::Skip { end } => {
+                pos = end;
+                consumed = pos;
+            }
+            Scan::Json { parsed, raw, end } => {
+                apply_record(state, &parsed, raw, base + pos as u64)?;
+                pos = end;
+                consumed = pos;
+            }
+            Scan::Snapshot { payload, end } => {
+                if !state.awaiting_snapshot {
+                    return Err(OptunaError::Storage(format!(
+                        "snapshot record outside a compaction header at byte offset {}",
+                        base + pos as u64
+                    )));
+                }
+                snapshot::apply_binary(state, payload)?;
+                state.awaiting_snapshot = false;
+                state.snapshot_uncommitted = true;
+                pos = end;
+                consumed = pos;
+            }
+            Scan::Pending => break,
+        }
+    }
+    if state.in_compaction_header() {
+        // The compaction header is written atomically (rename), so an
+        // unlicensed snapshot can only mean truncation or corruption.
+        // Presenting the prefix as healthy would silently drop every
+        // committed record the snapshot stood for.
+        return Err(OptunaError::Storage(
+            "interrupted compaction: snapshot without a committed compact_end marker".into(),
+        ));
+    }
+    Ok(consumed)
+}
+
+/// The ops this binary understands (compaction header ops aside). Inside
+/// a compaction header only *unknown* ops are legal — they are the
+/// carried-through records of a newer binary; a known op there means the
+/// file was cut and spliced.
+fn is_known_op(op: &str) -> bool {
+    matches!(
+        op,
+        "create_study"
+            | "create_trial"
+            | "create_trials"
+            | "enqueue"
+            | "start"
+            | "heartbeat"
+            | "torn"
+            | "param"
+            | "intermediate"
+            | "attr"
+            | "finish"
+            | "finish_trials"
+    )
+}
+
+/// Apply one parsed record. `raw` is its payload text (kept verbatim for
+/// unknown ops); `abs_offset` is its absolute file offset, used both for
+/// error messages and to pin `compact_begin` to the head of the file.
+fn apply_record(
+    state: &mut Replayed,
+    entry: &Json,
+    raw: &str,
+    abs_offset: u64,
+) -> Result<(), OptunaError> {
+    let op = entry
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or_else(|| OptunaError::Storage("journal entry missing op".into()))?;
+    match op {
+        "compact_begin" => {
+            let head = match state.format {
+                JournalFormat::Lines => 0,
+                JournalFormat::Binary => format::BINARY_MAGIC.len() as u64,
+            };
+            if abs_offset != head || state.gen != 0 || !state.studies.is_empty()
+                || !state.trials.is_empty() || !state.unknown_ops.is_empty()
+            {
+                return Err(OptunaError::Storage(format!(
+                    "compact_begin away from the journal head at byte offset {abs_offset}"
+                )));
+            }
+            let gen = entry.get("gen").and_then(|g| g.as_i64()).unwrap_or(0);
+            if gen < 1 {
+                return Err(OptunaError::Storage("compact_begin with bad gen".into()));
+            }
+            state.gen = gen as u64;
+            state.awaiting_snapshot = true;
+            Ok(())
+        }
+        "snapshot" => {
+            if !state.awaiting_snapshot {
+                return Err(OptunaError::Storage(format!(
+                    "snapshot record outside a compaction header at byte offset {abs_offset}"
+                )));
+            }
+            snapshot::apply_json(state, entry)?;
+            state.awaiting_snapshot = false;
+            state.snapshot_uncommitted = true;
+            Ok(())
+        }
+        "compact_end" => {
+            if !state.snapshot_uncommitted {
+                return Err(OptunaError::Storage(format!(
+                    "compact_end without a preceding snapshot at byte offset {abs_offset}"
+                )));
+            }
+            let gen = entry.get("gen").and_then(|g| g.as_i64()).unwrap_or(-1);
+            if gen != state.gen as i64 {
+                return Err(OptunaError::Storage(format!(
+                    "compact_end generation mismatch (header gen {}, marker gen {gen})",
+                    state.gen
+                )));
+            }
+            state.snapshot_uncommitted = false;
+            Ok(())
+        }
+        _ if state.in_compaction_header() => {
+            if is_known_op(op) {
+                return Err(OptunaError::Storage(format!(
+                    "op '{op}' inside a compaction header at byte offset {abs_offset}"
+                )));
+            }
+            state.unknown_ops.push(raw.to_string());
+            Ok(())
+        }
+        _ => apply(state, op, entry, raw),
+    }
+}
+
+/// Replay body of one trial creation (shared by the `create_trial` and
+/// `create_trials` ops): append a fresh `Running` trial to `sid`.
+fn apply_create_trial(state: &mut Replayed, sid: usize, time: Option<u64>) {
+    let tid = state.trials.len() as u64;
+    let number = state.studies[sid].trials.len() as u64;
+    let mut t = FrozenTrial::new(tid, number);
+    // writer clock; absent in pre-timestamp journals
+    t.datetime_start = time;
+    state.trials.push(t);
+    state.trial_study.push(sid as u64);
+    state.trial_seq.push(0);
+    state.studies[sid].trials.push(tid);
+    state.touch(tid as usize);
+}
+
+/// Replay body of one trial finish (shared by the `finish` op and each
+/// item of a `finish_trials` op). `fields` carries `state`/`value`/
+/// `values`; `time` is the writer's completion stamp.
+fn apply_finish_fields(
+    state: &mut Replayed,
+    tid: usize,
+    fields: &Json,
+    time: Option<u64>,
+) -> Result<(), OptunaError> {
+    let st = TrialState::from_str(fields.get("state").and_then(|s| s.as_str()).unwrap_or(""))?;
+    state.trials[tid].state = st;
+    // `values` (multi-objective) wins; scalar `value` is the
+    // pre-`values` journal fallback. Elements decode through
+    // `decode_value` (non-finite marker strings), never dropped:
+    // arity is load-bearing.
+    let vector: Option<Vec<f64>> = fields
+        .get("values")
+        .and_then(|v| v.as_arr())
+        .map(|arr| arr.iter().map(decode_value).collect());
+    match vector {
+        Some(vals) if !vals.is_empty() => state.trials[tid].set_values(&vals),
+        _ => {
+            if let Some(v) = fields.get("value").and_then(|v| v.as_f64()) {
+                state.trials[tid].value = Some(v);
+            }
+        }
+    }
+    state.trials[tid].datetime_complete = time;
+    state.touch(tid);
+    Ok(())
+}
+
+/// Apply one ordinary (non-compaction-header) journal entry.
+fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), OptunaError> {
+    let get_trial = |state: &mut Replayed, entry: &Json| -> Result<usize, OptunaError> {
+        let tid = entry
+            .get("trial")
+            .and_then(|t| t.as_i64())
+            .ok_or_else(|| OptunaError::Storage("entry missing trial".into()))? as usize;
+        if tid >= state.trials.len() {
+            return Err(bad_trial(tid as u64));
+        }
+        Ok(tid)
+    };
+    match op {
+        "create_study" => {
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| OptunaError::Storage("create_study missing name".into()))?
+                .to_string();
+            // `directions` (multi-objective) wins when present; scalar
+            // `direction` is the pre-multi fallback
+            let directions = match entry.get("directions").and_then(|d| d.as_arr()) {
+                Some(arr) if !arr.is_empty() => arr
+                    .iter()
+                    .map(|d| StudyDirection::from_str(d.as_str().unwrap_or("")))
+                    .collect::<Result<Vec<_>, _>>()?,
+                _ => vec![StudyDirection::from_str(
+                    entry.get("direction").and_then(|d| d.as_str()).unwrap_or(""),
+                )?],
+            };
+            let id = state.studies.len() as u64;
+            state.by_name.insert(name.clone(), id);
+            state.studies.push(StudyRec {
+                name,
+                directions,
+                trials: Vec::new(),
+                seq: 0,
+                waiting: VecDeque::new(),
+            });
+        }
+        "create_trial" => {
+            let sid = entry
+                .get("study")
+                .and_then(|s| s.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trial missing study".into()))?
+                as usize;
+            if sid >= state.studies.len() {
+                return Err(bad_study(sid as u64));
+            }
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            apply_create_trial(state, sid, time);
+        }
+        "create_trials" => {
+            let sid = entry
+                .get("study")
+                .and_then(|s| s.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trials missing study".into()))?
+                as usize;
+            if sid >= state.studies.len() {
+                return Err(bad_study(sid as u64));
+            }
+            let n = entry
+                .get("n")
+                .and_then(|v| v.as_i64())
+                .ok_or_else(|| OptunaError::Storage("create_trials missing n".into()))?;
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            for _ in 0..n {
+                apply_create_trial(state, sid, time);
+            }
+        }
+        "enqueue" => {
+            let sid = entry
+                .get("study")
+                .and_then(|s| s.as_i64())
+                .ok_or_else(|| OptunaError::Storage("enqueue missing study".into()))?
+                as usize;
+            if sid >= state.studies.len() {
+                return Err(bad_study(sid as u64));
+            }
+            let tid = state.trials.len() as u64;
+            let number = state.studies[sid].trials.len() as u64;
+            let mut t = FrozenTrial::new(tid, number);
+            t.state = TrialState::Waiting;
+            for p in entry.get("params").and_then(|p| p.as_arr()).unwrap_or(&[]) {
+                let name = p
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| OptunaError::Storage("enqueue param missing name".into()))?;
+                let dist = Distribution::from_json(
+                    p.get("dist")
+                        .ok_or_else(|| OptunaError::Storage("enqueue param missing dist".into()))?,
+                )?;
+                let value = p
+                    .get("value")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| OptunaError::Storage("enqueue param missing value".into()))?;
+                t.params.insert(name.to_string(), (dist, value));
+            }
+            for a in entry.get("attrs").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+                let key = a.get("key").and_then(|k| k.as_str()).unwrap_or("");
+                let value = a.get("value").and_then(|v| v.as_str()).unwrap_or("");
+                t.user_attrs.insert(key.to_string(), value.to_string());
+            }
+            state.trials.push(t);
+            state.trial_study.push(sid as u64);
+            state.trial_seq.push(0);
+            state.studies[sid].trials.push(tid);
+            state.studies[sid].waiting.push_back(tid);
+            state.touch(tid as usize);
+        }
+        "start" => {
+            let tid = get_trial(state, entry)?;
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            let t = &mut state.trials[tid];
+            t.state = TrialState::Running;
+            t.datetime_start = time;
+            t.last_heartbeat = time;
+            state.touch(tid);
+        }
+        "heartbeat" => {
+            let tid = get_trial(state, entry)?;
+            if state.trials[tid].state == TrialState::Running {
+                if let Some(ms) = entry.get("time").and_then(|v| v.as_i64()) {
+                    state.trials[tid].last_heartbeat = Some(ms as u64);
+                }
+            }
+            // deliberately no touch(): heartbeats are liveness metadata
+            // read straight from the replayed state by fail_stale_trials;
+            // bumping the seq would churn every peer's snapshot cache
+            // once per heartbeat interval for no snapshot consumer
+        }
+        "torn" => {
+            // healing marker: the unparseable line(s) immediately before
+            // this one were a torn write, already skipped by the replay
+            // loop — the marker itself is a no-op
+        }
+        "param" => {
+            let tid = get_trial(state, entry)?;
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| OptunaError::Storage("param missing name".into()))?;
+            let dist = Distribution::from_json(
+                entry
+                    .get("dist")
+                    .ok_or_else(|| OptunaError::Storage("param missing dist".into()))?,
+            )?;
+            let value = entry
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| OptunaError::Storage("param missing value".into()))?;
+            state.trials[tid].params.insert(name.to_string(), (dist, value));
+            state.touch(tid);
+        }
+        "intermediate" => {
+            let tid = get_trial(state, entry)?;
+            let step = entry.get("step").and_then(|s| s.as_i64()).unwrap_or(0) as u64;
+            let value = entry
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| OptunaError::Storage("intermediate missing value".into()))?;
+            state.trials[tid].intermediate.insert(step, value);
+            state.touch(tid);
+        }
+        "attr" => {
+            let tid = get_trial(state, entry)?;
+            let key = entry.get("key").and_then(|k| k.as_str()).unwrap_or("");
+            let value = entry.get("value").and_then(|v| v.as_str()).unwrap_or("");
+            state.trials[tid]
+                .user_attrs
+                .insert(key.to_string(), value.to_string());
+            state.touch(tid);
+        }
+        "finish" => {
+            let tid = get_trial(state, entry)?;
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            apply_finish_fields(state, tid, entry, time)?;
+        }
+        "finish_trials" => {
+            let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
+            let items = entry
+                .get("finishes")
+                .and_then(|f| f.as_arr())
+                .ok_or_else(|| OptunaError::Storage("finish_trials missing finishes".into()))?;
+            for item in items {
+                let tid = get_trial(state, item)?;
+                apply_finish_fields(state, tid, item, time)?;
+            }
+        }
+        _other => {
+            // Forward compatibility: ops unknown to this binary are
+            // skipped on replay, so journals written by newer versions
+            // stay readable — and preserved verbatim, so a compaction by
+            // this binary carries them through for the newer one. (A
+            // future op that assigns ids would need a format bump;
+            // pure-annotation ops degrade gracefully.)
+            state.unknown_ops.push(raw.to_string());
+        }
+    }
+    Ok(())
+}

@@ -29,7 +29,7 @@ mod single_mutex;
 
 pub use cached::CachedStorage;
 pub use in_memory::InMemoryStorage;
-pub use journal::JournalStorage;
+pub use journal::{JournalFormat, JournalOptions, JournalStorage};
 pub use single_mutex::SingleMutexStorage;
 
 use std::collections::BTreeMap;
@@ -402,6 +402,42 @@ pub trait Storage: Send + Sync {
         }
         self.create_trial(study_id).map(Some)
     }
+
+    /// Compact the backend's persistent log, if it has one. Backends
+    /// without a compactable representation (in-memory) return
+    /// `Ok(None)`; [`JournalStorage`] rewrites its file as a snapshot
+    /// header plus live tail and returns the stats. Decorators
+    /// ([`CachedStorage`]) forward to their inner backend, which is how
+    /// the capability stays reachable behind `Arc<dyn Storage>`.
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        Ok(None)
+    }
+}
+
+/// What a [`Compactable::compact`] call did: the generation written and
+/// the size/state it checkpointed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactionStats {
+    /// Compaction generation written into the `compact_begin`/`compact_end`
+    /// markers (monotonic per journal file; peers use it to detect swaps).
+    pub gen: u64,
+    /// Journal size before the compaction, in bytes.
+    pub bytes_before: u64,
+    /// Journal size after the compaction (snapshot header + carried ops).
+    pub bytes_after: u64,
+    /// Studies checkpointed.
+    pub studies: usize,
+    /// Trials checkpointed.
+    pub trials: usize,
+}
+
+/// Capability trait for backends whose persistent representation can be
+/// compacted in place. [`Storage::try_compact`] is the dynamic,
+/// always-callable probe; this trait is the static face of the same
+/// capability for callers holding a concrete type.
+pub trait Compactable {
+    /// Compact now, returning before/after stats.
+    fn compact(&self) -> Result<CompactionStats, OptunaError>;
 }
 
 /// Get an existing study id or create the study (the CLI / distributed

@@ -1,0 +1,372 @@
+//! Crash-injection property suite (ISSUE 6 satellite): truncate and
+//! corrupt journal files at every byte offset — plain line-JSON,
+//! snapshot-compacted lines, and CRC-framed binary journals, with the
+//! offsets straddling the snapshot/compaction header — and assert that
+//! replay either heals (opens with exactly the committed prefix) or
+//! fails loudly. It must never silently drop committed records.
+//!
+//! The oracle is differential: cutting a file mid-record must behave
+//! exactly like cutting it at the last record boundary at or before the
+//! cut (both open to the same state, or both fail). Committed records
+//! are whole framed records; the fragment past the boundary belongs to
+//! the writer that tore it.
+//!
+//! For corruption (byte flips), the framing contracts differ by design:
+//!
+//! * **Lines** (v1): a flip inside any line that still has a complete
+//!   parseable line after it is mid-file corruption → hard error (the
+//!   torn-marker discipline only vouches for tails). A flip inside the
+//!   final line run is indistinguishable from a torn append → replay
+//!   presents the prefix before that line (or errors, in a compaction
+//!   header).
+//! * **Binary** (v2): every record carries a CRC32 and a redundant
+//!   length word, so *any* flip anywhere — magic, header, payload,
+//!   snapshot — is a hard `OptunaError::Storage`. No flip may open.
+
+use std::path::{Path, PathBuf};
+
+use optuna_rs::core::{Distribution, StudyDirection, TrialState};
+use optuna_rs::storage::{JournalFormat, JournalStorage, Storage};
+use optuna_rs::util::rng::Pcg64;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "optuna_crash_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn rm(path: &Path) {
+    let mut lock = path.as_os_str().to_os_string();
+    lock.push(".lock");
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(lock).ok();
+}
+
+/// Open `path` read-only and dump the full observable state, or the
+/// (loud) open error. Everything the journal commits is in here: study
+/// names, directions, queue order, and per-trial record fingerprints.
+fn state_of(path: &Path) -> Result<String, String> {
+    let storage = JournalStorage::open(path).map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    for name in storage.study_names().map_err(|e| e.to_string())? {
+        let sid = storage
+            .get_study_id(&name)
+            .map_err(|e| e.to_string())?
+            .expect("named study exists");
+        let dirs = storage.get_study_directions(sid).map_err(|e| e.to_string())?;
+        out.push_str(&format!("study {name} dirs={dirs:?}\n"));
+        for t in storage.get_all_trials(sid).map_err(|e| e.to_string())? {
+            let params: Vec<String> = t
+                .params
+                .iter()
+                .map(|(k, (d, v))| format!("{k}:{d:?}={:016x}", v.to_bits()))
+                .collect();
+            out.push_str(&format!(
+                "  #{} {} value={:?} values={:?} params=[{}] inter={:?} attrs={:?}\n",
+                t.number,
+                t.state.as_str(),
+                t.value.map(f64::to_bits),
+                t.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                params.join(","),
+                t.intermediate,
+                t.user_attrs,
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Write `bytes` to a scratch file and read its observable state.
+fn state_of_bytes(scratch: &Path, bytes: &[u8]) -> Result<String, String> {
+    rm(scratch);
+    std::fs::write(scratch, bytes).expect("write scratch");
+    let r = state_of(scratch);
+    rm(scratch);
+    r
+}
+
+/// Populate a journal with enough variety to make every record class
+/// appear: two studies (one multi-objective), params, intermediates,
+/// attrs, finishes (incl. non-finite values), a waiting queue.
+fn populate(path: &Path, trials_per_study: usize) {
+    let s = JournalStorage::open(path).expect("open journal");
+    let a = s.create_study("alpha", StudyDirection::Minimize).expect("study a");
+    let b = s
+        .create_study_multi("beta", &[StudyDirection::Minimize, StudyDirection::Maximize])
+        .expect("study b");
+    let dist = Distribution::float(0.0, 1.0);
+    for i in 0..trials_per_study {
+        let (tid, num) = s.create_trial(a).expect("create");
+        s.set_trial_param(tid, "x", &dist, num as f64 / 7.0).expect("param");
+        s.set_trial_intermediate(tid, 1, num as f64).expect("inter");
+        s.set_trial_user_attr(tid, "k", "v").expect("attr");
+        let value = match i % 4 {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            _ => i as f64,
+        };
+        s.finish_trial(tid, TrialState::Complete, Some(value)).expect("finish");
+
+        let (tid, _) = s.create_trial(b).expect("create b");
+        s.finish_trial_values(tid, TrialState::Complete, &[i as f64, -(i as f64)])
+            .expect("finish b");
+    }
+    // leave live state behind too: a Running trial and a waiting queue
+    s.create_trial(a).expect("running");
+    s.enqueue_trial(a, &Default::default(), &Default::default()).expect("enqueue");
+}
+
+/// Record boundaries of a line-JSON journal: 0 and every byte after a
+/// newline.
+fn line_boundaries(buf: &[u8]) -> Vec<usize> {
+    let mut b = vec![0];
+    b.extend(buf.iter().enumerate().filter(|&(_, &c)| c == b'\n').map(|(i, _)| i + 1));
+    b
+}
+
+/// Record boundaries of a binary journal: 0, the end of the magic, and
+/// the end of every complete `[kind][len][~len][crc][payload]` frame
+/// (13-byte header; spec'd in docs/ARCHITECTURE.md §journal v2).
+fn binary_boundaries(buf: &[u8]) -> Vec<usize> {
+    let mut b = vec![0];
+    if buf.len() < 8 {
+        return b;
+    }
+    let mut pos = 8;
+    b.push(pos);
+    while pos + 13 <= buf.len() {
+        let len = u32::from_le_bytes(buf[pos + 1..pos + 5].try_into().unwrap()) as usize;
+        let next = pos + 13 + len;
+        if next > buf.len() {
+            break;
+        }
+        pos = next;
+        b.push(pos);
+    }
+    b
+}
+
+fn boundary_at_or_before(boundaries: &[usize], cut: usize) -> usize {
+    *boundaries.iter().rev().find(|&&b| b <= cut).unwrap()
+}
+
+/// The truncation property: a cut mid-record behaves exactly like the
+/// cut at the last record boundary before it — same state or same
+/// loud failure. Committed records are never silently dropped, torn
+/// fragments never applied.
+fn check_truncation(scratch: &Path, buf: &[u8], boundaries: &[usize], cuts: &[usize]) {
+    for &cut in cuts {
+        let at_cut = state_of_bytes(scratch, &buf[..cut]);
+        let at_boundary = state_of_bytes(scratch, &buf[..boundary_at_or_before(boundaries, cut)]);
+        match (&at_cut, &at_boundary) {
+            (Ok(a), Ok(b)) => assert_eq!(a, b, "cut at byte {cut} of {}", buf.len()),
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "cut at byte {cut} of {}: cut and boundary diverge:\n{at_cut:?}\nvs\n{at_boundary:?}",
+                buf.len()
+            ),
+        }
+    }
+}
+
+/// The lines-framing corruption property (see module docs): flips with
+/// a complete parseable line after them must fail loudly; flips in the
+/// final line run may instead heal to the prefix before that line.
+fn check_lines_flips(scratch: &Path, buf: &[u8], flips: &[usize]) {
+    for &flip in flips {
+        let mut bad = buf.to_vec();
+        bad[flip] ^= 0xFF;
+        let result = state_of_bytes(scratch, &bad);
+        let newlines_after = buf[flip + 1..].iter().filter(|&&c| c == b'\n').count();
+        if newlines_after >= 2 {
+            assert!(
+                result.is_err(),
+                "flip at byte {flip}: mid-file corruption opened silently"
+            );
+        } else if let Ok(state) = result {
+            let line_start = buf[..flip]
+                .iter()
+                .rposition(|&c| c == b'\n')
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let expected = state_of_bytes(scratch, &buf[..line_start])
+                .expect("prefix at a line boundary opens");
+            assert_eq!(state, expected, "flip at byte {flip}: healed to the wrong prefix");
+        }
+    }
+}
+
+/// The binary-framing corruption property: every flip is a hard error.
+fn check_binary_flips(scratch: &Path, buf: &[u8], flips: &[usize]) {
+    for &flip in flips {
+        let mut bad = buf.to_vec();
+        bad[flip] ^= 0xFF;
+        assert!(
+            state_of_bytes(scratch, &bad).is_err(),
+            "flip at byte {flip} of {}: CRC-framed journal opened silently",
+            buf.len()
+        );
+    }
+}
+
+/// Build the three journal variants from one populated history:
+/// (plain lines, compacted lines + live tail, compacted binary + live
+/// tail). The tails ensure cuts and flips straddle the compaction
+/// boundary in both directions.
+fn build_variants(tag: &str, trials_per_study: usize) -> (PathBuf, PathBuf, PathBuf) {
+    let plain = tmp_path(&format!("{tag}_plain"));
+    populate(&plain, trials_per_study);
+
+    let compacted = tmp_path(&format!("{tag}_lines"));
+    std::fs::copy(&plain, &compacted).expect("copy");
+    let s = JournalStorage::open(&compacted).expect("open copy");
+    s.compact_as(JournalFormat::Lines).expect("compact lines");
+    s.create_trial(0).expect("tail record"); // live tail past the header
+    s.finish_trial(s.create_trial(0).expect("tail").0, TrialState::Pruned, None)
+        .expect("tail finish");
+    drop(s);
+
+    let binary = tmp_path(&format!("{tag}_bin"));
+    std::fs::copy(&plain, &binary).expect("copy");
+    let s = JournalStorage::open(&binary).expect("open copy");
+    s.compact_as(JournalFormat::Binary).expect("compact binary");
+    s.create_trial(0).expect("tail record");
+    s.finish_trial(s.create_trial(0).expect("tail").0, TrialState::Pruned, None)
+        .expect("tail finish");
+    drop(s);
+
+    (plain, compacted, binary)
+}
+
+#[test]
+fn every_offset_truncation_and_flip() {
+    let (plain, compacted, binary) = build_variants("sweep", 3);
+    let scratch = tmp_path("sweep_scratch");
+
+    let buf = std::fs::read(&plain).expect("read plain");
+    let all: Vec<usize> = (0..=buf.len()).collect();
+    check_truncation(&scratch, &buf, &line_boundaries(&buf), &all);
+    check_lines_flips(&scratch, &buf, &all[..buf.len()]);
+
+    let buf = std::fs::read(&compacted).expect("read compacted");
+    let all: Vec<usize> = (0..=buf.len()).collect();
+    check_truncation(&scratch, &buf, &line_boundaries(&buf), &all);
+    check_lines_flips(&scratch, &buf, &all[..buf.len()]);
+
+    let buf = std::fs::read(&binary).expect("read binary");
+    let all: Vec<usize> = (0..=buf.len()).collect();
+    check_truncation(&scratch, &buf, &binary_boundaries(&buf), &all);
+    check_binary_flips(&scratch, &buf, &all[..buf.len()]);
+
+    for p in [plain, compacted, binary] {
+        rm(&p);
+    }
+}
+
+#[test]
+fn seeded_random_offsets_at_scale() {
+    let (plain, compacted, binary) = build_variants("scale", 60);
+    let scratch = tmp_path("scale_scratch");
+    let mut rng = Pcg64::new(20260806);
+
+    for (path, lines) in [(&plain, true), (&compacted, true), (&binary, false)] {
+        let buf = std::fs::read(path).expect("read journal");
+        let cuts: Vec<usize> = (0..60).map(|_| rng.index(buf.len() + 1)).collect();
+        let flips: Vec<usize> = (0..60).map(|_| rng.index(buf.len())).collect();
+        if lines {
+            check_truncation(&scratch, &buf, &line_boundaries(&buf), &cuts);
+            check_lines_flips(&scratch, &buf, &flips);
+        } else {
+            check_truncation(&scratch, &buf, &binary_boundaries(&buf), &cuts);
+            check_binary_flips(&scratch, &buf, &flips);
+        }
+    }
+
+    for p in [plain, compacted, binary] {
+        rm(&p);
+    }
+}
+
+#[test]
+fn interrupted_compaction_fails_loudly() {
+    let scratch = tmp_path("interrupted");
+    // snapshot without its licensing compact_end: must never present the
+    // (empty) prefix as healthy
+    let err = state_of_bytes(
+        &scratch,
+        b"{\"gen\":1,\"op\":\"compact_begin\"}\n\
+          {\"op\":\"snapshot\",\"version\":1,\"studies\":[],\"trials\":[]}\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("interrupted compaction"), "{err}");
+
+    // compact_begin alone: same verdict
+    let err = state_of_bytes(&scratch, b"{\"gen\":1,\"op\":\"compact_begin\"}\n").unwrap_err();
+    assert!(err.contains("interrupted compaction"), "{err}");
+
+    // generation mismatch between begin and end markers
+    let err = state_of_bytes(
+        &scratch,
+        b"{\"gen\":1,\"op\":\"compact_begin\"}\n\
+          {\"op\":\"snapshot\",\"version\":1,\"studies\":[],\"trials\":[]}\n\
+          {\"gen\":2,\"op\":\"compact_end\"}\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("generation mismatch"), "{err}");
+
+    // a known op spliced into the header is corruption, not carry-through
+    let err = state_of_bytes(
+        &scratch,
+        b"{\"gen\":1,\"op\":\"compact_begin\"}\n\
+          {\"op\":\"snapshot\",\"version\":1,\"studies\":[],\"trials\":[]}\n\
+          {\"name\":\"x\",\"op\":\"create_study\"}\n\
+          {\"gen\":1,\"op\":\"compact_end\"}\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("inside a compaction header"), "{err}");
+
+    // compact_begin not at the head of the file
+    let err = state_of_bytes(
+        &scratch,
+        b"{\"direction\":\"minimize\",\"name\":\"s\",\"op\":\"create_study\"}\n\
+          {\"gen\":1,\"op\":\"compact_begin\"}\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("away from the journal head"), "{err}");
+
+    // snapshot with no compact_begin at all
+    let err = state_of_bytes(
+        &scratch,
+        b"{\"op\":\"snapshot\",\"version\":1,\"studies\":[],\"trials\":[]}\n",
+    )
+    .unwrap_err();
+    assert!(err.contains("outside a compaction header"), "{err}");
+}
+
+#[test]
+fn torn_tail_still_heals_on_next_append() {
+    // Crash-then-continue: a torn tail is not just tolerated on read, the
+    // next writer heals it and the journal keeps going.
+    let path = tmp_path("heal");
+    populate(&path, 2);
+    let full = std::fs::read(&path).expect("read");
+    let cut = full.len() - 3; // mid-record
+    std::fs::write(&path, &full[..cut]).expect("truncate");
+
+    let s = JournalStorage::open(&path).expect("torn journal opens");
+    let sid = s.get_study_id("alpha").expect("ok").expect("study");
+    let before = s.n_trials(sid).expect("count");
+    s.create_trial(sid).expect("append heals the tail");
+    assert_eq!(s.n_trials(sid).expect("count"), before + 1);
+
+    // and a fresh handle agrees (the heal is durable, not in-memory)
+    drop(s);
+    let s = JournalStorage::open(&path).expect("healed journal opens");
+    assert_eq!(s.n_trials(s.get_study_id("alpha").unwrap().unwrap()).unwrap(), before + 1);
+    rm(&path);
+}

@@ -1,0 +1,235 @@
+//! Cross-version replay guarantees (ISSUE 6 satellite): journals
+//! written before snapshots existed open on this binary; unknown future
+//! ops ride through replay *and* repeated compactions verbatim;
+//! CRC-corrupted binary records abort with a typed
+//! `OptunaError::Storage` naming the byte offset. Plus the
+//! multi-process regression for the compaction swap: concurrent
+//! openers and writers racing an in-flight compaction must never
+//! double-replay the snapshot or lose the live tail (the sidecar-flock
+//! ordering fix).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use optuna_rs::core::{Distribution, OptunaError, StudyDirection, TrialState};
+use optuna_rs::storage::{JournalFormat, JournalOptions, JournalStorage, Storage};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "optuna_versions_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn rm(path: &Path) {
+    let mut lock = path.as_os_str().to_os_string();
+    lock.push(".lock");
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(lock).ok();
+}
+
+#[test]
+fn pre_snapshot_journal_opens_on_new_binary() {
+    // A v1 journal as an old binary wrote it: scalar `direction`, no
+    // snapshot/compaction ops anywhere, one op per line.
+    let dist = Distribution::float(0.0, 1.0).to_json().to_string();
+    let legacy = format!(
+        concat!(
+            "{{\"direction\":\"minimize\",\"name\":\"legacy\",\"op\":\"create_study\"}}\n",
+            "{{\"op\":\"create_trial\",\"study\":0,\"time\":1000}}\n",
+            "{{\"dist\":{dist},\"name\":\"x\",\"op\":\"param\",\"trial\":0,\"value\":0.25}}\n",
+            "{{\"op\":\"intermediate\",\"step\":1,\"trial\":0,\"value\":2.5}}\n",
+            "{{\"op\":\"finish\",\"state\":\"complete\",\"time\":2000,\"trial\":0,\"value\":3.5}}\n",
+            "{{\"op\":\"create_trial\",\"study\":0,\"time\":3000}}\n",
+        ),
+        dist = dist
+    );
+    let path = tmp_path("legacy");
+    std::fs::write(&path, legacy).expect("write legacy journal");
+
+    let check = |s: &JournalStorage, n: usize| {
+        let sid = s.get_study_id("legacy").expect("ok").expect("study replayed");
+        assert_eq!(
+            s.get_study_directions(sid).expect("dirs"),
+            vec![StudyDirection::Minimize]
+        );
+        let trials = s.get_all_trials(sid).expect("trials");
+        assert_eq!(trials.len(), n);
+        assert_eq!(trials[0].state, TrialState::Complete);
+        assert_eq!(trials[0].value, Some(3.5));
+        assert_eq!(trials[0].params["x"].1, 0.25);
+        assert_eq!(trials[0].intermediate[&1], 2.5);
+        assert_eq!(trials[1].state, TrialState::Running);
+    };
+    let s = JournalStorage::open(&path).expect("legacy journal opens");
+    check(&s, 2);
+
+    // the new binary can keep writing it, snapshot it, even re-frame it
+    s.create_trial(0).expect("append to legacy journal");
+    s.compact_as(JournalFormat::Binary).expect("compact legacy to binary");
+    drop(s);
+    let s = JournalStorage::open(&path).expect("reopen after compaction");
+    check(&s, 3);
+    rm(&path);
+}
+
+#[test]
+fn unknown_future_ops_survive_replay_and_two_compactions() {
+    let path = tmp_path("future");
+    {
+        let s = JournalStorage::open(&path).expect("open");
+        let sid = s.create_study("fwd", StudyDirection::Minimize).expect("study");
+        s.create_trial(sid).expect("trial");
+    }
+    // splice in ops only a future binary understands (pure annotations)
+    let mut bytes = std::fs::read(&path).expect("read");
+    bytes.extend_from_slice(b"{\"note\":\"keep-me\",\"op\":\"future_annotation\"}\n");
+    bytes.extend_from_slice(b"{\"op\":\"future_lease\",\"ttl\":9}\n");
+    std::fs::write(&path, bytes).expect("splice");
+
+    // replay skips them without dropping surrounding records...
+    let s = JournalStorage::open(&path).expect("open with future ops");
+    assert_eq!(s.n_trials(0).expect("count"), 1);
+    s.finish_trial(0, TrialState::Complete, Some(1.0)).expect("keep writing");
+
+    // ...and two successive compactions (with a re-framing in between)
+    // carry them through verbatim.
+    s.compact().expect("first compaction");
+    let on_disk = std::fs::read_to_string(&path).expect("read compacted");
+    assert!(on_disk.contains("future_annotation"), "unknown op dropped:\n{on_disk}");
+    assert!(on_disk.contains("future_lease"), "unknown op dropped:\n{on_disk}");
+
+    s.compact_as(JournalFormat::Binary).expect("second compaction, binary");
+    let on_disk = std::fs::read(&path).expect("read binary");
+    let hay = String::from_utf8_lossy(&on_disk);
+    assert!(hay.contains("future_annotation"), "unknown op dropped by binary compaction");
+    assert!(hay.contains("future_lease"), "unknown op dropped by binary compaction");
+
+    // the compacted journal still opens and the known state is intact
+    drop(s);
+    let s = JournalStorage::open(&path).expect("reopen");
+    let trials = s.get_all_trials(0).expect("trials");
+    assert_eq!(trials.len(), 1);
+    assert_eq!(trials[0].value, Some(1.0));
+    rm(&path);
+}
+
+#[test]
+fn crc_corruption_aborts_with_typed_error_naming_offset() {
+    let path = tmp_path("crc");
+    {
+        let s = JournalStorage::open_with(&path, JournalOptions::binary()).expect("open");
+        let sid = s.create_study("crc", StudyDirection::Minimize).expect("study");
+        s.create_trial(sid).expect("trial");
+        s.finish_trial(0, TrialState::Complete, Some(7.0)).expect("finish");
+    }
+    let good = std::fs::read(&path).expect("read");
+
+    // walk the frames to the second record past the 8-byte magic
+    let first_len =
+        u32::from_le_bytes(good[9..13].try_into().expect("len word")) as usize;
+    let second = 8 + 13 + first_len;
+    assert!(second + 13 < good.len(), "journal should hold several records");
+
+    // flip one payload byte of that record: open must fail with a typed
+    // Storage error naming the record's byte offset
+    let mut bad = good.clone();
+    bad[second + 13] ^= 0x01;
+    std::fs::write(&path, &bad).expect("corrupt");
+    let err = match JournalStorage::open(&path) {
+        Err(e) => e,
+        Ok(_) => panic!("CRC corruption must abort the open"),
+    };
+    match &err {
+        OptunaError::Storage(msg) => {
+            assert!(msg.contains("CRC mismatch"), "{msg}");
+            assert!(msg.contains(&format!("byte offset {second}")), "{msg}");
+        }
+        other => panic!("expected OptunaError::Storage, got {other:?}"),
+    }
+
+    // a corrupted length word is equally loud (and names its offset)
+    let mut bad = good.clone();
+    bad[second + 2] ^= 0xFF;
+    std::fs::write(&path, &bad).expect("corrupt length");
+    let err = match JournalStorage::open(&path) {
+        Err(e) => e,
+        Ok(_) => panic!("length corruption must abort the open"),
+    };
+    match &err {
+        OptunaError::Storage(msg) => {
+            assert!(msg.contains("length check failed"), "{msg}");
+            assert!(msg.contains(&format!("byte offset {second}")), "{msg}");
+        }
+        other => panic!("expected OptunaError::Storage, got {other:?}"),
+    }
+    rm(&path);
+}
+
+/// Satellite-4 regression: peers racing an in-flight compaction. The
+/// swap is flock-ordered (every reader/writer and the compactor
+/// serialize on the *stable sidecar* lock, so no one reads the journal
+/// mid-rename), and refresh re-sniffs the header generation — a handle
+/// that replayed the pre-compaction file must rebuild from byte 0, not
+/// re-apply the snapshot on top of its state (double-replay) or keep an
+/// offset past the new EOF (lost tail).
+#[test]
+fn concurrent_open_during_compaction_never_double_replays_or_loses_tail() {
+    let path = tmp_path("race");
+    let writer = JournalStorage::open(&path).expect("writer handle");
+    let sid = writer.create_study("race", StudyDirection::Minimize).expect("study");
+
+    const TRIALS: usize = 150;
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        // peer 1: compacts in a loop while the writer appends
+        let compactor = scope.spawn(|| {
+            let s = JournalStorage::open(&path).expect("compactor handle");
+            let mut gens = Vec::new();
+            while !done.load(Ordering::Relaxed) {
+                let stats = s.compact().expect("concurrent compact");
+                gens.push(stats.gen);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            assert!(gens.windows(2).all(|w| w[1] > w[0]), "generations not monotonic");
+        });
+        // peer 2: keeps opening fresh handles mid-compaction; every view
+        // must be a dense, duplicate-free prefix of the trial history
+        let opener = scope.spawn(|| {
+            while !done.load(Ordering::Relaxed) {
+                let s = JournalStorage::open(&path).expect("opener handle");
+                let trials = s.get_all_trials(sid).expect("read");
+                for (i, t) in trials.iter().enumerate() {
+                    assert_eq!(
+                        t.number, i as u64,
+                        "duplicate or missing trial number: snapshot double-replayed \
+                         or tail lost"
+                    );
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        });
+
+        for _ in 0..TRIALS {
+            writer.create_trial(sid).expect("append during compaction");
+        }
+        done.store(true, Ordering::Relaxed);
+        compactor.join().expect("compactor");
+        opener.join().expect("opener");
+    });
+
+    // no lost tail: every appended trial survived the swaps, once
+    let trials = writer.get_all_trials(sid).expect("final read");
+    assert_eq!(trials.len(), TRIALS, "trials lost (or duplicated) across compaction swaps");
+    for (i, t) in trials.iter().enumerate() {
+        assert_eq!(t.number, i as u64);
+    }
+    // and a cold open agrees with the long-lived writer handle
+    let fresh = JournalStorage::open(&path).expect("cold open");
+    assert_eq!(fresh.n_trials(sid).expect("count"), TRIALS);
+    rm(&path);
+}

@@ -15,6 +15,13 @@
 //! after a sleep longer than its grace, so every backend reaps exactly
 //! the set of `Running` trials. Liveness metadata (heartbeats,
 //! datetimes) is outside the comparison, per the storage contract.
+//!
+//! ISSUE 6 replicas: `journal-binary` runs the CRC-framed binary
+//! journal, and both it and `journal-compacted` are snapshot-compacted
+//! *mid-script* at deterministic op counts (through the
+//! `Storage::try_compact` capability), so every comparison after that
+//! point replays through a snapshot + tail — the line-JSON backend and
+//! the in-memory model are the oracles.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
@@ -23,8 +30,8 @@ use std::time::Duration;
 
 use optuna_rs::core::{Distribution, FrozenTrial, StudyDirection, TrialState};
 use optuna_rs::storage::{
-    CachedStorage, InMemoryStorage, JournalStorage, ParamSet, SingleMutexStorage, Storage,
-    TrialFinish,
+    CachedStorage, InMemoryStorage, JournalOptions, JournalStorage, ParamSet,
+    SingleMutexStorage, Storage, TrialFinish,
 };
 use optuna_rs::util::rng::Pcg64;
 
@@ -183,6 +190,8 @@ fn random_value(rng: &mut Pcg64) -> f64 {
 fn run_fuzz(seed: u64, n_ops: usize) {
     let journal_a = tmp_path("a");
     let journal_b = tmp_path("b");
+    let journal_c = tmp_path("c");
+    let journal_d = tmp_path("d");
     let mut backends = vec![
         Backend::new("in-memory", Box::new(InMemoryStorage::new())),
         Backend::new("single-mutex", Box::new(SingleMutexStorage::new())),
@@ -196,6 +205,14 @@ fn run_fuzz(seed: u64, n_ops: usize) {
             Box::new(CachedStorage::new(Arc::new(
                 JournalStorage::open(&journal_b).unwrap(),
             ))),
+        ),
+        Backend::new(
+            "journal-compacted",
+            Box::new(JournalStorage::open(&journal_c).unwrap()),
+        ),
+        Backend::new(
+            "journal-binary",
+            Box::new(JournalStorage::open_with(&journal_d, JournalOptions::binary()).unwrap()),
         ),
     ];
     let mut model: Vec<ModelStudy> = Vec::new();
@@ -496,6 +513,19 @@ fn run_fuzz(seed: u64, n_ops: usize) {
             _ => {} // guarded arm missed (empty study): skip
         }
 
+        // mid-script snapshot compaction of the designated replicas:
+        // everything after this point replays through snapshot + tail
+        if op % 40 == 24 {
+            for b in backends.iter_mut() {
+                if matches!(b.name, "journal-compacted" | "journal-binary") {
+                    b.storage
+                        .try_compact()
+                        .expect("mid-script compact")
+                        .expect("journal backends are compactable");
+                }
+            }
+        }
+
         // periodic deep comparison
         if op % 8 == 0 {
             compare_all(&mut backends, &model, seed, op);
@@ -518,8 +548,12 @@ fn run_fuzz(seed: u64, n_ops: usize) {
         }
     }
 
-    std::fs::remove_file(journal_a).ok();
-    std::fs::remove_file(journal_b).ok();
+    for p in [journal_a, journal_b, journal_c, journal_d] {
+        let mut lock = p.clone().into_os_string();
+        lock.push(".lock");
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(lock).ok();
+    }
 }
 
 /// Full observable-state comparison across backends, plus each backend's
