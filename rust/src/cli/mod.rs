@@ -45,8 +45,8 @@ use crate::sampler::{
     CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
 };
 use crate::storage::{
-    now_ms, InMemoryStorage, JournalFormat, JournalOptions, JournalStorage, SingleMutexStorage,
-    Storage, TrialFinish,
+    now_ms, FaultInjectionStorage, FaultSchedule, InMemoryStorage, JournalFormat,
+    JournalOptions, JournalStorage, ResilienceConfig, SingleMutexStorage, Storage, TrialFinish,
 };
 use crate::study::{FailoverConfig, Study};
 use crate::trial::{Trial, TrialApi};
@@ -103,6 +103,9 @@ fn usage() -> String {
      [--ref V0,V1,..] \
      [--heartbeat-ms N] [--grace-ms N] [--max-retry N] [--trial-sleep-ms N] \
      [--workers N] [--kill-one true] [--timeout-ms N] \
+     [--faults 'seed=N;op=PAT,kind=K,p=P,latency-ms=N,mode=M,times=N;..'] \
+     [--resilience true] [--retry N] [--retry-base-ms N] [--retry-max-ms N] \
+     [--op-deadline-ms N] [--retry-jitter-seed N] \
      [--threads N] [--pairs N] [--batch N] [--baseline true] [--shared-study true]"
         .to_string()
 }
@@ -266,6 +269,50 @@ fn parse_failover(
     }))
 }
 
+/// Parse the resilience flags into a [`ResilienceConfig`]. Mirrors
+/// `parse_failover`'s opt-in rule: `--resilience true` or any tuning
+/// flag (`--retry`, `--retry-base-ms`, `--retry-max-ms`,
+/// `--op-deadline-ms`, `--retry-jitter-seed`) turns the retry layer on,
+/// so no flag is ever silently ignored; `--resilience false` forces it
+/// off (the ablation switch for chaos runs).
+fn parse_resilience(args: &Args) -> Result<Option<ResilienceConfig>, String> {
+    match args.get("resilience") {
+        Some("false" | "off" | "0") => return Ok(None),
+        Some("true" | "on" | "1") | None => {}
+        Some(other) => return Err(format!("bad --resilience '{other}' (true|false)")),
+    }
+    let any_flag = args.get("resilience").is_some()
+        || args.get("retry").is_some()
+        || args.get("retry-base-ms").is_some()
+        || args.get("retry-max-ms").is_some()
+        || args.get("op-deadline-ms").is_some()
+        || args.get("retry-jitter-seed").is_some();
+    if !any_flag {
+        return Ok(None);
+    }
+    let mut cfg = ResilienceConfig::new();
+    if let Some(s) = args.get("retry") {
+        cfg = cfg.retries(s.parse().map_err(|e| format!("bad --retry: {e}"))?);
+    }
+    let base_ms: u64 = match args.get("retry-base-ms") {
+        Some(s) => s.parse().map_err(|e| format!("bad --retry-base-ms: {e}"))?,
+        None => cfg.base_backoff.as_millis() as u64,
+    };
+    let max_ms: u64 = match args.get("retry-max-ms") {
+        Some(s) => s.parse().map_err(|e| format!("bad --retry-max-ms: {e}"))?,
+        None => cfg.max_backoff.as_millis() as u64,
+    };
+    cfg = cfg.backoff(Duration::from_millis(base_ms.max(1)), Duration::from_millis(max_ms.max(1)));
+    if let Some(s) = args.get("op-deadline-ms") {
+        let ms: u64 = s.parse().map_err(|e| format!("bad --op-deadline-ms: {e}"))?;
+        cfg = cfg.deadline(Duration::from_millis(ms.max(1)));
+    }
+    if let Some(s) = args.get("retry-jitter-seed") {
+        cfg = cfg.jitter_seed(s.parse().map_err(|e| format!("bad --retry-jitter-seed: {e}"))?);
+    }
+    Ok(Some(cfg))
+}
+
 /// Parse an explicit `--directions a,b,..` (or scalar `--direction`) flag;
 /// `Ok(None)` when neither was given.
 fn parse_directions(args: &Args) -> Result<Option<Vec<StudyDirection>>, String> {
@@ -291,6 +338,23 @@ fn build_study(
     failover_default: Option<FailoverConfig>,
 ) -> Result<Study, String> {
     let storage = open_storage_with(args.require("storage")?, parse_auto_compact(args)?)?;
+    // decorator stack, innermost first: backend ⟨ fault injection ⟨
+    // resilience ⟨ snapshot cache (the builder adds the last two) —
+    // injected faults exercise the retry layer, not the other way round
+    let storage: Arc<dyn Storage> = match args.get("faults") {
+        Some(spec) => {
+            let schedule =
+                FaultSchedule::parse(spec).map_err(|e| format!("bad --faults: {e}"))?;
+            Arc::new(FaultInjectionStorage::new(storage, schedule))
+        }
+        None => storage,
+    };
+    // wrapped here (not via the builder) so the study lookup below is
+    // already behind the retry layer when faults are being injected
+    let storage: Arc<dyn Storage> = match parse_resilience(args)? {
+        Some(cfg) => Arc::new(crate::storage::ResilientStorage::new(storage, cfg)),
+        None => storage,
+    };
     let name = args.require("study")?.to_string();
     let existing = storage.get_study_id(&name).map_err(|e| e.to_string())?;
     if !create && existing.is_none() {
@@ -773,6 +837,23 @@ fn run_distributed(args: &Args) -> Result<String, String> {
             extra.push("--auto-compact-mb");
             extra.push(mb);
         }
+        // chaos + resilience flags ride through to every worker: each
+        // process injects from the same seeded schedule against the
+        // shared journal, and retries/degrades behind its own wrapper
+        for (flag, key) in [
+            ("--faults", "faults"),
+            ("--resilience", "resilience"),
+            ("--retry", "retry"),
+            ("--retry-base-ms", "retry-base-ms"),
+            ("--retry-max-ms", "retry-max-ms"),
+            ("--op-deadline-ms", "op-deadline-ms"),
+            ("--retry-jitter-seed", "retry-jitter-seed"),
+        ] {
+            if let Some(v) = args.get(key) {
+                extra.push(flag);
+                extra.push(v);
+            }
+        }
         let child = std::process::Command::new(&exe)
             .args(worker_args)
             .args(&extra)
@@ -1171,6 +1252,68 @@ mod tests {
         let cfg = parse_failover(&grace_only, None).unwrap().unwrap();
         assert_eq!(cfg.grace, Duration::from_millis(2000));
         assert_eq!(cfg.heartbeat_interval, Duration::from_millis(500), "default heartbeat");
+    }
+
+    #[test]
+    fn resilience_flags_parse() {
+        // no flags: the retry layer stays off
+        let plain = Args::parse(&argv(&["optimize"])).unwrap();
+        assert!(parse_resilience(&plain).unwrap().is_none());
+        // the toggle alone yields the defaults
+        let on = Args::parse(&argv(&["worker", "--resilience", "true"])).unwrap();
+        let cfg = parse_resilience(&on).unwrap().unwrap();
+        assert_eq!(cfg.max_retries, ResilienceConfig::new().max_retries);
+        // any tuning flag opts in — --retry alone must not be dropped
+        let tuned = Args::parse(&argv(&[
+            "worker", "--retry", "3", "--retry-base-ms", "2", "--op-deadline-ms", "250",
+        ]))
+        .unwrap();
+        let cfg = parse_resilience(&tuned).unwrap().unwrap();
+        assert_eq!(cfg.max_retries, 3);
+        assert_eq!(cfg.base_backoff, Duration::from_millis(2));
+        assert_eq!(cfg.op_deadline, Duration::from_millis(250));
+        // the explicit off switch wins over tuning flags (ablation runs)
+        let off = Args::parse(&argv(&[
+            "worker", "--resilience", "false", "--retry", "3",
+        ]))
+        .unwrap();
+        assert!(parse_resilience(&off).unwrap().is_none());
+        let bad = Args::parse(&argv(&["worker", "--resilience", "maybe"])).unwrap();
+        assert!(parse_resilience(&bad).is_err());
+    }
+
+    #[test]
+    fn worker_command_completes_under_injected_faults() {
+        let url = tmp_journal("chaos-cli");
+        // a deliberately nasty but transient schedule; the resilience
+        // layer + failover loop must still land the exact budget
+        let out = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "chaos", "--trials", "6",
+            "--sampler", "random", "--faults", "seed=11;kind=busy,p=0.1",
+            "--resilience", "true", "--retry-base-ms", "1", "--retry-max-ms", "2",
+            "--heartbeat-ms", "10", "--grace-ms", "30000",
+        ]))
+        .unwrap();
+        assert!(out.contains("done; study at 6 finished trials"), "{out}");
+        // ablation: a deterministic one-shot fault on the study lookup
+        // (which runs before the failover loop can ride anything out)
+        // must kill the run when the retry layer is off...
+        let one_shot = "seed=3;op=get_study_id,kind=timeout,p=1,times=1";
+        let err = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "chaos", "--trials", "6",
+            "--sampler", "random", "--faults", one_shot, "--resilience", "false",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("injected timeout fault"), "{err}");
+        // ...and be absorbed by one retry when it is on
+        let out = run_inner(&argv(&[
+            "worker", "--storage", &url, "--study", "chaos", "--trials", "6",
+            "--sampler", "random", "--faults", one_shot, "--resilience", "true",
+            "--retry-base-ms", "1", "--retry-max-ms", "2",
+        ]))
+        .unwrap();
+        assert!(out.contains("done; study at 6 finished trials"), "{out}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! ones, category index for categoricals), which is what storage records
 //! and what TPE/CMA-ES/GP consume.
 
-use crate::core::types::{OptunaError, ParamValue};
+use crate::core::types::{ErrorKind, OptunaError, ParamValue};
 use crate::util::json::Json;
 
 /// Domain of one hyperparameter.
@@ -189,8 +189,11 @@ impl Distribution {
         let kind = j
             .get("kind")
             .and_then(|k| k.as_str())
-            .ok_or_else(|| OptunaError::Storage("distribution missing kind".into()))?;
-        let err = |m: &str| OptunaError::Storage(format!("bad distribution json: {m}"));
+            .ok_or_else(|| {
+                OptunaError::storage(ErrorKind::Corrupt, "distribution missing kind")
+            })?;
+        let err =
+            |m: &str| OptunaError::storage(ErrorKind::Corrupt, format!("bad distribution json: {m}"));
         match kind {
             "float" => Ok(Distribution::Float {
                 low: j.get("low").and_then(|v| v.as_f64()).ok_or_else(|| err("low"))?,

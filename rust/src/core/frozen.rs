@@ -129,7 +129,7 @@ impl FrozenTrial {
     /// Require the final value (objective bookkeeping).
     pub fn require_value(&self) -> Result<f64, OptunaError> {
         self.value.ok_or_else(|| {
-            OptunaError::Storage(format!("trial {} has no value", self.number))
+            OptunaError::Storage(format!("trial {} has no value", self.number).into())
         })
     }
 }

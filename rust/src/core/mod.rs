@@ -8,4 +8,4 @@ pub mod types;
 pub use distribution::Distribution;
 pub use frozen::FrozenTrial;
 pub use obs_index::{IndexSnapshot, ObservationIndex, ParamColumn, StepColumn};
-pub use types::{OptunaError, ParamValue, StudyDirection, TrialState};
+pub use types::{ErrorKind, OptunaError, ParamValue, StorageError, StudyDirection, TrialState};

@@ -37,7 +37,12 @@ impl StudyDirection {
         match s {
             "minimize" => Ok(StudyDirection::Minimize),
             "maximize" => Ok(StudyDirection::Maximize),
-            other => Err(OptunaError::Storage(format!("bad direction '{other}'"))),
+            // reached when replaying damaged on-disk state (and for CLI
+            // typos) — permanent either way
+            other => Err(OptunaError::storage(
+                ErrorKind::Corrupt,
+                format!("bad direction '{other}'"),
+            )),
         }
     }
 }
@@ -76,7 +81,10 @@ impl TrialState {
             "complete" => Ok(TrialState::Complete),
             "pruned" => Ok(TrialState::Pruned),
             "failed" => Ok(TrialState::Failed),
-            other => Err(OptunaError::Storage(format!("bad state '{other}'"))),
+            other => Err(OptunaError::storage(
+                ErrorKind::Corrupt,
+                format!("bad state '{other}'"),
+            )),
         }
     }
 }
@@ -124,11 +132,118 @@ impl fmt::Display for ParamValue {
     }
 }
 
+/// What failed inside the storage layer — the axis the resilience layer
+/// retries on. Transient kinds (`Io`, `Busy`, `Timeout`) are failures of
+/// the *moment*: the same call may succeed a few milliseconds later, so
+/// [`crate::storage::ResilientStorage`] retries them with backoff.
+/// Permanent kinds (`Poisoned`, `Corrupt`, `Logic`) are failures of the
+/// *state or the call itself*: retrying replays the identical failure,
+/// so they surface immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// An I/O syscall failed (open/read/write/fsync/rename). Disks and
+    /// filesystems recover; the retry layer treats this as transient.
+    Io,
+    /// A lock or other shared gate could not be taken right now
+    /// (e.g. a contended `flock`). Transient by definition.
+    Busy,
+    /// A per-op deadline elapsed before the backend answered. Transient:
+    /// the next attempt gets a fresh deadline.
+    Timeout,
+    /// An in-process lock was poisoned by a panicked writer. Permanent —
+    /// the guarded state may be half-mutated, so retrying is unsound.
+    Poisoned,
+    /// On-disk state failed validation (bad CRC, torn-but-unvouched
+    /// record, malformed snapshot). Permanent: the bytes will not heal.
+    Corrupt,
+    /// The call itself is wrong (unknown id, double finish, misuse of an
+    /// API). Permanent: the same call always fails the same way.
+    Logic,
+}
+
+impl ErrorKind {
+    /// Whether a retry of the same operation can plausibly succeed.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, ErrorKind::Io | ErrorKind::Busy | ErrorKind::Timeout)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorKind::Io => "io",
+            ErrorKind::Busy => "busy",
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Poisoned => "poisoned",
+            ErrorKind::Corrupt => "corrupt",
+            ErrorKind::Logic => "logic",
+        }
+    }
+}
+
+/// Structured payload of [`OptunaError::Storage`]: the message plus the
+/// [`ErrorKind`] that classifies it as transient or permanent, and — for
+/// errors surfaced by the retry layer after exhausting its budget — the
+/// number of attempts that were made.
+///
+/// `From<&str>` / `From<String>` build a `Logic` (permanent) error, so
+/// plain-message construction sites stay terse; transient sites classify
+/// explicitly via [`StorageError::new`] / `OptunaError::storage`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageError {
+    pub kind: ErrorKind,
+    /// Attempts made before this error surfaced: 1 for an unretried
+    /// error, >1 when a retry budget was exhausted.
+    pub attempt: u32,
+    pub message: String,
+}
+
+impl StorageError {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> Self {
+        StorageError { kind, attempt: 1, message: message.into() }
+    }
+
+    /// Stamp the attempt count (the retry layer does this on give-up).
+    pub fn with_attempt(mut self, attempt: u32) -> Self {
+        self.attempt = attempt;
+        self
+    }
+
+    /// Whether a retry of the same operation can plausibly succeed.
+    pub fn is_transient(&self) -> bool {
+        self.kind.is_transient()
+    }
+}
+
+impl From<String> for StorageError {
+    fn from(message: String) -> Self {
+        StorageError::new(ErrorKind::Logic, message)
+    }
+}
+
+impl From<&str> for StorageError {
+    fn from(message: &str) -> Self {
+        StorageError::new(ErrorKind::Logic, message)
+    }
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)?;
+        if self.kind != ErrorKind::Logic {
+            write!(f, " [{}]", self.kind.as_str())?;
+        }
+        if self.attempt > 1 {
+            write!(f, " (after {} attempts)", self.attempt)?;
+        }
+        Ok(())
+    }
+}
+
 /// Framework error type.
 #[derive(Debug)]
 pub enum OptunaError {
-    /// Storage-layer failure (I/O, lock, corrupt journal, unknown ids).
-    Storage(String),
+    /// Storage-layer failure (I/O, lock, corrupt journal, unknown ids),
+    /// classified transient/permanent by its [`StorageError::kind`].
+    Storage(StorageError),
     /// Lost a storage race: the write conflicts with state another worker
     /// installed first (e.g. finishing a trial a peer already reaped to
     /// `Failed`). Benign under failover — the optimize loops skip these.
@@ -147,6 +262,21 @@ pub enum OptunaError {
     Objective(String),
     /// PJRT runtime failure.
     Runtime(String),
+}
+
+impl OptunaError {
+    /// Shorthand for a classified storage error.
+    pub fn storage(kind: ErrorKind, message: impl Into<String>) -> Self {
+        OptunaError::Storage(StorageError::new(kind, message))
+    }
+
+    /// True for a storage error whose kind is retryable ([`ErrorKind::
+    /// is_transient`]). The optimize loops treat these like `Conflict`
+    /// under failover: the trial is abandoned to the reaper instead of
+    /// killing the worker.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, OptunaError::Storage(e) if e.is_transient())
+    }
 }
 
 impl fmt::Display for OptunaError {
@@ -204,6 +334,45 @@ mod tests {
         assert_eq!(ParamValue::Cat("a".into()).as_str(), Some("a"));
         assert_eq!(ParamValue::Cat("a".into()).as_f64(), None);
         assert_eq!(ParamValue::Float(1.0).as_i64(), None);
+    }
+
+    #[test]
+    fn error_kind_transiency_split() {
+        for k in [ErrorKind::Io, ErrorKind::Busy, ErrorKind::Timeout] {
+            assert!(k.is_transient(), "{k:?}");
+        }
+        for k in [ErrorKind::Poisoned, ErrorKind::Corrupt, ErrorKind::Logic] {
+            assert!(!k.is_transient(), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn storage_error_defaults_and_display() {
+        // plain-message construction stays permanent (Logic), displays as
+        // the bare message — the pre-taxonomy error text is preserved
+        let e: StorageError = "study vanished".into();
+        assert_eq!(e.kind, ErrorKind::Logic);
+        assert_eq!(e.attempt, 1);
+        assert!(!e.is_transient());
+        assert_eq!(
+            OptunaError::Storage(e).to_string(),
+            "storage error: study vanished"
+        );
+        // classified transient errors carry kind + attempt in Display
+        let e = StorageError::new(ErrorKind::Io, "write /x: EIO").with_attempt(4);
+        assert!(e.is_transient());
+        assert_eq!(
+            OptunaError::Storage(e).to_string(),
+            "storage error: write /x: EIO [io] (after 4 attempts)"
+        );
+    }
+
+    #[test]
+    fn optuna_error_transient_helper() {
+        assert!(OptunaError::storage(ErrorKind::Busy, "flock").is_transient());
+        assert!(!OptunaError::storage(ErrorKind::Corrupt, "crc").is_transient());
+        assert!(!OptunaError::Conflict("raced".into()).is_transient());
+        assert!(!OptunaError::TrialPruned.is_transient());
     }
 
     #[test]

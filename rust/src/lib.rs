@@ -91,7 +91,10 @@ pub mod prelude {
         CmaEsSampler, GpSampler, GridSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler,
         TpeSampler,
     };
-    pub use crate::storage::{CachedStorage, InMemoryStorage, JournalStorage, Storage};
+    pub use crate::storage::{
+        CachedStorage, FaultInjectionStorage, FaultSchedule, InMemoryStorage, JournalStorage,
+        ResilienceConfig, ResilientStorage, Storage,
+    };
     pub use crate::study::{FailoverConfig, Study, StudyBuilder, TrialOutcome};
     pub use crate::trial::{FixedTrial, Trial, TrialApi};
 }

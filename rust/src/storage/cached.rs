@@ -315,7 +315,10 @@ impl Storage for CachedStorage {
 impl Compactable for CachedStorage {
     fn compact(&self) -> Result<CompactionStats, OptunaError> {
         self.try_compact()?.ok_or_else(|| {
-            OptunaError::Storage("inner storage backend is not compactable".into())
+            OptunaError::storage(
+                crate::core::ErrorKind::Logic,
+                "inner storage backend is not compactable",
+            )
         })
     }
 }

@@ -1,0 +1,643 @@
+//! Deterministic fault injection — the chaos oracle of the resilience
+//! layer.
+//!
+//! [`FaultInjectionStorage`] wraps any [`Storage`] and, driven by a
+//! seeded [`FaultSchedule`], injects three fault shapes per operation:
+//!
+//! * **error-before** — the op never reaches the backend (a refused
+//!   connection, a failed open): the injected [`ErrorKind`] comes back
+//!   and the backend state is untouched.
+//! * **error-after** — the op runs against the backend *and then* the
+//!   error comes back: the "ambiguous outcome" every distributed-storage
+//!   client must survive (the write landed, the ack was lost).
+//! * **latency-only** — the op succeeds after an added sleep, which is
+//!   what per-op deadlines are measured against.
+//!
+//! Decisions are a pure function of `(schedule seed, op ticket)` via
+//! [`Pcg64::with_stream`], so a given interleaving of storage calls
+//! always sees the same faults — rerunning a failing chaos seed
+//! reproduces the same storm. The decorator is meant to sit directly on
+//! top of a raw backend, under [`ResilientStorage`]:
+//! `Cached⟨Resilient⟨FaultInjection⟨backend⟩⟩⟩` (see
+//! docs/ARCHITECTURE.md, "Resilience & fault injection").
+//!
+//! [`ResilientStorage`]: super::ResilientStorage
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::storage::{CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish};
+use crate::util::rng::Pcg64;
+
+/// When, relative to the wrapped backend call, an injected error fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Fail without touching the backend.
+    ErrorBefore,
+    /// Run the backend op, discard its result, fail anyway — the
+    /// ambiguous "did my write land?" outcome.
+    ErrorAfter,
+    /// No error: only the added latency.
+    LatencyOnly,
+}
+
+impl FaultMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultMode::ErrorBefore => "before",
+            FaultMode::ErrorAfter => "after",
+            FaultMode::LatencyOnly => "latency",
+        }
+    }
+}
+
+/// One line of a fault schedule: which ops it can hit, with what
+/// probability, and what it does to them.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Storage-trait method name this rule applies to (`"create_trial"`,
+    /// `"finish_trials"`, ...); `None` matches every op.
+    pub op: Option<String>,
+    /// Kind of the injected error. Transient kinds exercise the retry
+    /// path; permanent kinds exercise surfacing.
+    pub kind: ErrorKind,
+    /// Per-invocation firing probability in [0, 1].
+    pub probability: f64,
+    /// Sleep applied whenever the rule fires (all modes).
+    pub latency: Duration,
+    pub mode: FaultMode,
+    /// Total-fire quota: the rule disarms after firing this many times
+    /// (`None` = unlimited). `times=1` scripts a one-shot fault — e.g.
+    /// one lost finish ack whose retry must then reach the backend.
+    pub max_fires: Option<u64>,
+}
+
+impl FaultRule {
+    fn matches(&self, op: &str) -> bool {
+        match &self.op {
+            None => true,
+            Some(sel) => sel == op || sel == "*",
+        }
+    }
+}
+
+/// A seeded list of [`FaultRule`]s. The first matching rule whose
+/// probability draw fires wins; rules are consulted in order.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultSchedule {
+    /// The empty schedule: injects nothing, adds no latency. A
+    /// [`FaultInjectionStorage`] carrying it is a transparent
+    /// pass-through (the conformance suite runs against exactly this).
+    pub fn none() -> Self {
+        FaultSchedule { seed: 0, rules: Vec::new() }
+    }
+
+    /// Parse the CLI spec format: `;`-separated segments, one `seed=N`
+    /// plus any number of rules, each a `,`-separated `key=value` list.
+    ///
+    /// Rule keys (all optional): `op` (method name or `*`, default `*`),
+    /// `kind` (`io|busy|timeout|poisoned|corrupt`, default `io`), `p`
+    /// (probability, default `1.0`), `latency-ms` (default `0`), `mode`
+    /// (`before|after|latency`, default `before`).
+    ///
+    /// ```
+    /// use optuna_rs::storage::FaultSchedule;
+    /// let s = FaultSchedule::parse("seed=7;op=*,kind=io,p=0.05,latency-ms=2,mode=before")
+    ///     .unwrap();
+    /// assert_eq!(s.seed, 7);
+    /// assert_eq!(s.rules.len(), 1);
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut schedule = FaultSchedule::none();
+        for segment in spec.split(';') {
+            let segment = segment.trim();
+            if segment.is_empty() {
+                continue;
+            }
+            if let Some(seed) = segment.strip_prefix("seed=") {
+                schedule.seed =
+                    seed.parse().map_err(|_| format!("bad fault seed '{seed}'"))?;
+                continue;
+            }
+            let mut rule = FaultRule {
+                op: None,
+                kind: ErrorKind::Io,
+                probability: 1.0,
+                latency: Duration::ZERO,
+                mode: FaultMode::ErrorBefore,
+                max_fires: None,
+            };
+            for pair in segment.split(',') {
+                let (key, value) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad fault rule entry '{pair}' (want key=value)"))?;
+                match key.trim() {
+                    "op" => {
+                        let v = value.trim();
+                        rule.op = if v == "*" { None } else { Some(v.to_string()) };
+                    }
+                    "kind" => {
+                        rule.kind = match value.trim() {
+                            "io" => ErrorKind::Io,
+                            "busy" => ErrorKind::Busy,
+                            "timeout" => ErrorKind::Timeout,
+                            "poisoned" => ErrorKind::Poisoned,
+                            "corrupt" => ErrorKind::Corrupt,
+                            other => return Err(format!("bad fault kind '{other}'")),
+                        };
+                    }
+                    "p" => {
+                        let p: f64 = value
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad fault probability '{value}'"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!("fault probability {p} outside [0, 1]"));
+                        }
+                        rule.probability = p;
+                    }
+                    "latency-ms" => {
+                        let ms: u64 = value
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad fault latency '{value}'"))?;
+                        rule.latency = Duration::from_millis(ms);
+                    }
+                    "mode" => {
+                        rule.mode = match value.trim() {
+                            "before" => FaultMode::ErrorBefore,
+                            "after" => FaultMode::ErrorAfter,
+                            "latency" => FaultMode::LatencyOnly,
+                            other => return Err(format!("bad fault mode '{other}'")),
+                        };
+                    }
+                    "times" => {
+                        let n: u64 = value
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad fault fire quota '{value}'"))?;
+                        rule.max_fires = Some(n);
+                    }
+                    other => return Err(format!("unknown fault rule key '{other}'")),
+                }
+            }
+            schedule.rules.push(rule);
+        }
+        Ok(schedule)
+    }
+}
+
+/// [`Storage`] decorator injecting scripted faults (see the module docs).
+pub struct FaultInjectionStorage {
+    inner: Arc<dyn Storage>,
+    schedule: FaultSchedule,
+    /// Monotonic op ticket: the deterministic per-invocation RNG stream.
+    op_seq: AtomicU64,
+    /// Per-rule fire counters (parallel to `schedule.rules`), enforcing
+    /// [`FaultRule::max_fires`].
+    fired: Vec<AtomicU64>,
+    injected: AtomicU64,
+}
+
+impl FaultInjectionStorage {
+    pub fn new(inner: Arc<dyn Storage>, schedule: FaultSchedule) -> Self {
+        let fired = schedule.rules.iter().map(|_| AtomicU64::new(0)).collect();
+        FaultInjectionStorage {
+            inner,
+            schedule,
+            op_seq: AtomicU64::new(0),
+            fired,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// How many faults (including latency-only ones) have fired.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    fn fault(kind: ErrorKind, op: &str, ticket: u64) -> OptunaError {
+        OptunaError::storage(
+            kind,
+            format!("injected {} fault on {op} (ticket {ticket})", kind.as_str()),
+        )
+    }
+
+    /// Run `f` through the schedule. Every invocation consumes one
+    /// ticket; the `(seed, ticket)` pair seeds the probability draws, so
+    /// the same call sequence always sees the same faults.
+    fn around<T>(
+        &self,
+        op: &'static str,
+        f: impl FnOnce() -> Result<T, OptunaError>,
+    ) -> Result<T, OptunaError> {
+        if self.schedule.rules.is_empty() {
+            return f();
+        }
+        let ticket = self.op_seq.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::with_stream(self.schedule.seed, ticket);
+        let mut winner = None;
+        for (i, rule) in self.schedule.rules.iter().enumerate() {
+            if !rule.matches(op) || rng.uniform() >= rule.probability {
+                continue;
+            }
+            // atomically consume one unit of the rule's fire quota
+            let quota_ok = match rule.max_fires {
+                None => true,
+                Some(max) => self.fired[i]
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                        (n < max).then_some(n + 1)
+                    })
+                    .is_ok(),
+            };
+            if quota_ok {
+                winner = Some(rule);
+                break;
+            }
+        }
+        let rule = match winner {
+            None => return f(),
+            Some(rule) => rule,
+        };
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        if !rule.latency.is_zero() {
+            std::thread::sleep(rule.latency);
+        }
+        match rule.mode {
+            FaultMode::LatencyOnly => f(),
+            FaultMode::ErrorBefore => Err(Self::fault(rule.kind, op, ticket)),
+            FaultMode::ErrorAfter => {
+                // the ambiguous outcome: the backend op really runs, the
+                // caller is told it failed
+                let _ = f();
+                Err(Self::fault(rule.kind, op, ticket))
+            }
+        }
+    }
+}
+
+impl Storage for FaultInjectionStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        self.around("create_study", || self.inner.create_study(name, direction))
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        self.around("create_study_multi", || self.inner.create_study_multi(name, directions))
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        self.around("get_study_directions", || self.inner.get_study_directions(study_id))
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        self.around("get_study_id", || self.inner.get_study_id(name))
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        self.around("get_study_direction", || self.inner.get_study_direction(study_id))
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        self.around("study_names", || self.inner.study_names())
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        self.around("create_trial", || self.inner.create_trial(study_id))
+    }
+
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        self.around("create_trials", || self.inner.create_trials(study_id, n))
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        self.around("set_trial_param", || {
+            self.inner.set_trial_param(trial_id, name, dist, internal)
+        })
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        self.around("set_trial_intermediate", || {
+            self.inner.set_trial_intermediate(trial_id, step, value)
+        })
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        self.around("set_trial_user_attr", || {
+            self.inner.set_trial_user_attr(trial_id, key, value)
+        })
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        self.around("finish_trial", || self.inner.finish_trial(trial_id, state, value))
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.around("finish_trial_values", || {
+            self.inner.finish_trial_values(trial_id, state, values)
+        })
+    }
+
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        self.around("finish_trials", || self.inner.finish_trials(finishes))
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        self.around("get_trial", || self.inner.get_trial(trial_id))
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.around("get_all_trials", || self.inner.get_all_trials(study_id))
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        self.around("n_trials", || self.inner.n_trials(study_id))
+    }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        self.around("study_seq", || self.inner.study_seq(study_id))
+    }
+
+    fn get_trials_since(&self, study_id: u64, since_seq: u64) -> Result<TrialDelta, OptunaError> {
+        self.around("get_trials_since", || self.inner.get_trials_since(study_id, since_seq))
+    }
+
+    fn get_trials_snapshot(&self, study_id: u64) -> Result<Arc<Vec<FrozenTrial>>, OptunaError> {
+        self.around("get_trials_snapshot", || self.inner.get_trials_snapshot(study_id))
+    }
+
+    fn is_write_through_cache(&self) -> bool {
+        self.inner.is_write_through_cache()
+    }
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        self.around("record_heartbeat", || self.inner.record_heartbeat(trial_id))
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.around("fail_stale_trials", || {
+            self.inner.fail_stale_trials(study_id, grace, requeue)
+        })
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        self.around("enqueue_trial", || self.inner.enqueue_trial(study_id, params, user_attrs))
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.around("pop_waiting_trial", || self.inner.pop_waiting_trial(study_id))
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.around("create_trial_capped", || self.inner.create_trial_capped(study_id, cap))
+    }
+
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        self.around("try_compact", || self.inner.try_compact())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryStorage;
+
+    fn rule(op: &str, kind: ErrorKind, p: f64, mode: FaultMode) -> FaultRule {
+        FaultRule {
+            op: if op == "*" { None } else { Some(op.to_string()) },
+            kind,
+            probability: p,
+            latency: Duration::ZERO,
+            mode,
+            max_fires: None,
+        }
+    }
+
+    #[test]
+    fn empty_schedule_is_transparent() {
+        let s = FaultInjectionStorage::new(
+            Arc::new(InMemoryStorage::new()),
+            FaultSchedule::none(),
+        );
+        crate::storage::conformance::run_all(&s);
+        assert_eq!(s.injected(), 0);
+    }
+
+    #[test]
+    fn empty_schedule_is_transparent_over_every_backend() {
+        // the decorator must be a perfect pass-through regardless of
+        // what it wraps — sharded, single-mutex, and durable backends
+        // all pass the full conformance suite (error taxonomy included)
+        let s = FaultInjectionStorage::new(
+            Arc::new(crate::storage::SingleMutexStorage::new()),
+            FaultSchedule::none(),
+        );
+        crate::storage::conformance::run_all(&s);
+        assert_eq!(s.injected(), 0);
+
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "optuna_rs_fi_conf_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let s = FaultInjectionStorage::new(
+            Arc::new(crate::storage::JournalStorage::open(&path).unwrap()),
+            FaultSchedule::none(),
+        );
+        crate::storage::conformance::run_all(&s);
+        assert_eq!(s.injected(), 0);
+        drop(s);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn error_before_leaves_backend_untouched() {
+        let schedule = FaultSchedule {
+            seed: 1,
+            rules: vec![rule("create_trial", ErrorKind::Busy, 1.0, FaultMode::ErrorBefore)],
+        };
+        let s = FaultInjectionStorage::new(Arc::new(InMemoryStorage::new()), schedule);
+        let sid = s.create_study("fi", StudyDirection::Minimize).unwrap();
+        let err = s.create_trial(sid).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        assert_eq!(s.n_trials(sid).unwrap(), 0, "error-before must not reach the backend");
+        assert_eq!(s.injected(), 1);
+    }
+
+    #[test]
+    fn error_after_is_an_ambiguous_outcome() {
+        let schedule = FaultSchedule {
+            seed: 2,
+            rules: vec![rule("finish_trial", ErrorKind::Io, 1.0, FaultMode::ErrorAfter)],
+        };
+        let s = FaultInjectionStorage::new(Arc::new(InMemoryStorage::new()), schedule);
+        let sid = s.create_study("fi", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        let err = s.finish_trial(tid, TrialState::Complete, Some(0.5)).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        // the write landed even though the caller was told it failed
+        let t = s.get_trial(tid).unwrap();
+        assert_eq!(t.state, TrialState::Complete);
+        assert_eq!(t.value, Some(0.5));
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_ticket() {
+        let schedule = FaultSchedule {
+            seed: 42,
+            rules: vec![rule("*", ErrorKind::Timeout, 0.3, FaultMode::ErrorBefore)],
+        };
+        let run = || -> Vec<bool> {
+            let s = FaultInjectionStorage::new(
+                Arc::new(InMemoryStorage::new()),
+                schedule.clone(),
+            );
+            let sid = loop {
+                // even create_study can be faulted: retry until it lands
+                if let Ok(sid) = s.create_study("fi", StudyDirection::Minimize) {
+                    break sid;
+                }
+            };
+            (0..64).map(|_| s.n_trials(sid).is_err()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed + same call sequence must fire the same faults");
+        assert!(a.iter().any(|&f| f), "p=0.3 over 64 draws should fire at least once");
+        assert!(!a.iter().all(|&f| f), "p=0.3 over 64 draws should also pass ops through");
+    }
+
+    #[test]
+    fn first_matching_rule_wins_and_selectors_filter() {
+        let schedule = FaultSchedule {
+            seed: 3,
+            rules: vec![
+                rule("get_trial", ErrorKind::Corrupt, 1.0, FaultMode::ErrorBefore),
+                rule("*", ErrorKind::Busy, 0.0, FaultMode::ErrorBefore),
+            ],
+        };
+        let s = FaultInjectionStorage::new(Arc::new(InMemoryStorage::new()), schedule);
+        let sid = s.create_study("fi", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        // the get_trial rule fires (p=1) with its own kind...
+        match s.get_trial(tid).unwrap_err() {
+            OptunaError::Storage(e) => assert_eq!(e.kind, ErrorKind::Corrupt),
+            other => panic!("expected storage error, got {other:?}"),
+        }
+        // ...while every other op passes (the catch-all rule has p=0)
+        assert_eq!(s.n_trials(sid).unwrap(), 1);
+    }
+
+    #[test]
+    fn fire_quota_disarms_the_rule() {
+        let schedule = FaultSchedule {
+            seed: 5,
+            rules: vec![FaultRule {
+                max_fires: Some(2),
+                ..rule("create_trial", ErrorKind::Busy, 1.0, FaultMode::ErrorBefore)
+            }],
+        };
+        let s = FaultInjectionStorage::new(Arc::new(InMemoryStorage::new()), schedule);
+        let sid = s.create_study("fi", StudyDirection::Minimize).unwrap();
+        assert!(s.create_trial(sid).is_err());
+        assert!(s.create_trial(sid).is_err());
+        // quota spent: the rule is disarmed
+        assert!(s.create_trial(sid).is_ok());
+        assert!(s.create_trial(sid).is_ok());
+        assert_eq!(s.injected(), 2);
+    }
+
+    #[test]
+    fn parse_spec_roundtrip_and_errors() {
+        let s = FaultSchedule::parse("seed=7;op=*,kind=io,p=0.05,latency-ms=2,mode=before")
+            .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.rules.len(), 1);
+        let r = &s.rules[0];
+        assert!(r.op.is_none());
+        assert_eq!(r.kind, ErrorKind::Io);
+        assert!((r.probability - 0.05).abs() < 1e-12);
+        assert_eq!(r.latency, Duration::from_millis(2));
+        assert_eq!(r.mode, FaultMode::ErrorBefore);
+
+        let s = FaultSchedule::parse(
+            "seed=9;op=finish_trial,kind=timeout,mode=after;op=get_all_trials,mode=latency,latency-ms=1",
+        )
+        .unwrap();
+        assert_eq!(s.rules.len(), 2);
+        assert_eq!(s.rules[0].op.as_deref(), Some("finish_trial"));
+        assert_eq!(s.rules[0].mode, FaultMode::ErrorAfter);
+        assert_eq!(s.rules[1].mode, FaultMode::LatencyOnly);
+        // defaults: p=1, kind=io, unlimited fires
+        assert!((s.rules[0].probability - 1.0).abs() < 1e-12);
+        assert_eq!(s.rules[1].kind, ErrorKind::Io);
+        assert_eq!(s.rules[0].max_fires, None);
+
+        let s = FaultSchedule::parse("seed=1;op=finish_trial,mode=after,times=1").unwrap();
+        assert_eq!(s.rules[0].max_fires, Some(1));
+        assert!(FaultSchedule::parse("op=*,times=x").is_err());
+
+        assert!(FaultSchedule::parse("seed=x").is_err());
+        assert!(FaultSchedule::parse("op=*,p=1.5").is_err());
+        assert!(FaultSchedule::parse("op=*,kind=flaky").is_err());
+        assert!(FaultSchedule::parse("op=*,mode=sometimes").is_err());
+        assert!(FaultSchedule::parse("banana").is_err());
+        // the empty spec is the empty schedule
+        assert!(FaultSchedule::parse("").unwrap().rules.is_empty());
+    }
+}

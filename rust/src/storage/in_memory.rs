@@ -39,7 +39,7 @@ use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::{Arc, RwLock, RwLockWriteGuard};
 use std::time::Duration;
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::storage::{now_ms, ParamSet, Storage, TrialDelta, TrialFinish};
 
 /// Low bits of a trial id carrying the per-study trial number; the study
@@ -62,7 +62,11 @@ fn decompose_id(trial_id: u64) -> (u64, u64) {
 /// be mid-mutation, so refuse it with a typed storage error rather than
 /// cascading the panic into every later caller.
 fn lock_poisoned<T>(_: std::sync::PoisonError<T>) -> OptunaError {
-    OptunaError::Storage("in-memory storage lock poisoned by a panicked writer".into())
+    // permanent: the guarded state may be half-mutated, retrying is unsound
+    OptunaError::storage(
+        ErrorKind::Poisoned,
+        "in-memory storage lock poisoned by a panicked writer",
+    )
 }
 
 /// Immutable-after-create study metadata, kept in the directory so name
@@ -117,9 +121,10 @@ impl StudyState {
     fn create_running(&mut self, study_id: u64) -> Result<(u64, u64), OptunaError> {
         let number = self.trials.len() as u64;
         if number >= MAX_TRIALS_PER_STUDY {
-            return Err(OptunaError::Storage(format!(
-                "study {study_id} reached the trial capacity of this backend"
-            )));
+            return Err(OptunaError::storage(
+                ErrorKind::Logic,
+                format!("study {study_id} reached the trial capacity of this backend"),
+            ));
         }
         let trial_id = compose_id(study_id, number);
         let mut t = FrozenTrial::new(trial_id, number);
@@ -141,9 +146,10 @@ impl StudyState {
     ) -> Result<(u64, u64), OptunaError> {
         let number = self.trials.len() as u64;
         if number >= MAX_TRIALS_PER_STUDY {
-            return Err(OptunaError::Storage(format!(
-                "study {study_id} reached the trial capacity of this backend"
-            )));
+            return Err(OptunaError::storage(
+                ErrorKind::Logic,
+                format!("study {study_id} reached the trial capacity of this backend"),
+            ));
         }
         let trial_id = compose_id(study_id, number);
         let mut t = FrozenTrial::new(trial_id, number);
@@ -261,11 +267,11 @@ impl Default for InMemoryStorage {
 }
 
 fn bad_trial(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown trial id {id}"))
+    OptunaError::storage(ErrorKind::Logic, format!("unknown trial id {id}"))
 }
 
 fn bad_study(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown study id {id}"))
+    OptunaError::storage(ErrorKind::Logic, format!("unknown study id {id}"))
 }
 
 impl Storage for InMemoryStorage {
@@ -285,7 +291,10 @@ impl Storage for InMemoryStorage {
         }
         let mut dir = self.dir.write().map_err(lock_poisoned)?;
         if dir.by_name.contains_key(name) {
-            return Err(OptunaError::Storage(format!("study '{name}' already exists")));
+            return Err(OptunaError::storage(
+                ErrorKind::Logic,
+                format!("study '{name}' already exists"),
+            ));
         }
         if dir.slots.len() as u64 >= MAX_STUDIES {
             return Err(OptunaError::Storage(
@@ -554,7 +563,7 @@ impl Storage for InMemoryStorage {
         requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
     ) -> Result<Vec<FrozenTrial>, OptunaError> {
         let now = now_ms();
-        let cutoff = now.saturating_sub(grace.as_millis() as u64);
+        let cutoff = crate::storage::stale_cutoff_ms(now, grace);
         let shard = self.study_state(study_id)?;
         let mut st = shard.write().map_err(lock_poisoned)?;
         let stale: Vec<u64> = st
@@ -681,6 +690,47 @@ mod tests {
         assert_eq!(d.trials[1].intermediate_at(2), Some(0.2));
         // quiet tail
         assert!(s.get_trials_since(sid, d.seq).unwrap().trials.is_empty());
+    }
+
+    #[test]
+    fn stale_reaping_is_clock_skew_safe() {
+        let s = InMemoryStorage::new();
+        let sid = s.create_study("skew", StudyDirection::Minimize).unwrap();
+        let (t_old, n_old) = s.create_trial(sid).unwrap();
+        let (t_future, n_future) = s.create_trial(sid).unwrap();
+        let now = now_ms();
+        {
+            let shard = s.study_state(sid).unwrap();
+            let mut st = shard.write().unwrap();
+            st.trials[n_old as usize].last_heartbeat = Some(now.saturating_sub(10_000));
+            // the wall clock stepped backwards mid-run: this heartbeat
+            // now sits an hour in the future
+            st.trials[n_future as usize].last_heartbeat = Some(now + 3_600_000);
+        }
+        let victims =
+            s.fail_stale_trials(sid, Duration::from_millis(1_000), &|_| None).unwrap();
+        assert_eq!(victims.len(), 1, "only the genuinely stale trial is reaped");
+        assert_eq!(victims[0].id, t_old);
+        assert_eq!(
+            s.get_trial(t_future).unwrap().state,
+            TrialState::Running,
+            "a future heartbeat reads as alive, never as stale"
+        );
+
+        // regression: this grace (~585M years) overflows 64 bits of
+        // milliseconds; a truncating cast aliases it to ~384ms and would
+        // reap the live-but-quiet trial below
+        let (t_quiet, n_quiet) = s.create_trial(sid).unwrap();
+        {
+            let shard = s.study_state(sid).unwrap();
+            let mut st = shard.write().unwrap();
+            st.trials[n_quiet as usize].last_heartbeat = Some(now.saturating_sub(10_000));
+        }
+        let victims = s
+            .fail_stale_trials(sid, Duration::from_secs(18_446_744_073_709_552), &|_| None)
+            .unwrap();
+        assert!(victims.is_empty(), "a huge grace must reap nothing");
+        assert_eq!(s.get_trial(t_quiet).unwrap().state, TrialState::Running);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //!   analogue of the torn-marker heal — framing makes the fragment
 //!   self-delimiting, so no marker is needed).
 
-use crate::core::OptunaError;
+use crate::core::{ErrorKind, OptunaError};
 use crate::util::json::Json;
 
 /// Magic prefix of a binary-framed journal file.
@@ -99,8 +99,9 @@ pub fn detect(head: &[u8], len: u64) -> Result<Detected, OptunaError> {
     if len < BINARY_MAGIC.len() as u64 && BINARY_MAGIC.starts_with(head) {
         return Ok(Detected::TornMagicStub);
     }
-    Err(OptunaError::Storage(
-        "unrecognized journal header (neither line-JSON nor OPTJRNL1 binary magic)".into(),
+    Err(OptunaError::storage(
+        ErrorKind::Corrupt,
+        "unrecognized journal header (neither line-JSON nor OPTJRNL1 binary magic)",
     ))
 }
 
@@ -252,8 +253,9 @@ fn next_line_record(buf: &[u8], pos: usize) -> Result<Scan<'_>, OptunaError> {
             match torn_run_is_healed(buf, end) {
                 TornRun::Healed => Ok(Scan::Skip { end }),
                 TornRun::Pending => Ok(Scan::Pending),
-                TornRun::Corrupt => Err(OptunaError::Storage(
-                    "corrupt journal line (unparseable, not a healed torn tail)".into(),
+                TornRun::Corrupt => Err(OptunaError::storage(
+                    ErrorKind::Corrupt,
+                    "corrupt journal line (unparseable, not a healed torn tail)",
                 )),
             }
         }
@@ -278,7 +280,7 @@ fn next_binary_record(buf: &[u8], pos: usize, file_base: u64) -> Result<Scan<'_>
         // A corrupted length word must not be mistaken for a torn tail:
         // treating it as one would let the next writer truncate away
         // every committed record behind it.
-        return Err(OptunaError::Storage(format!(
+        return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
             "corrupt journal record header (length check failed) at byte offset {offset}"
         )));
     }
@@ -289,7 +291,7 @@ fn next_binary_record(buf: &[u8], pos: usize, file_base: u64) -> Result<Scan<'_>
     let payload = &rest[RECORD_HEADER_LEN..total];
     let stored = u32::from_le_bytes(rest[9..13].try_into().unwrap());
     if crc32(&[&[kind], payload]) != stored {
-        return Err(OptunaError::Storage(format!(
+        return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
             "CRC mismatch in journal record at byte offset {offset}"
         )));
     }
@@ -297,19 +299,19 @@ fn next_binary_record(buf: &[u8], pos: usize, file_base: u64) -> Result<Scan<'_>
     match kind {
         KIND_JSON => {
             let raw = std::str::from_utf8(payload).map_err(|_| {
-                OptunaError::Storage(format!(
+                OptunaError::storage(ErrorKind::Corrupt, format!(
                     "non-UTF-8 journal record payload at byte offset {offset}"
                 ))
             })?;
             let parsed = Json::parse(raw).map_err(|e| {
-                OptunaError::Storage(format!(
+                OptunaError::storage(ErrorKind::Corrupt, format!(
                     "bad JSON in journal record at byte offset {offset}: {e}"
                 ))
             })?;
             Ok(Scan::Json { parsed, raw, end })
         }
         KIND_SNAPSHOT => Ok(Scan::Snapshot { payload, end }),
-        other => Err(OptunaError::Storage(format!(
+        other => Err(OptunaError::storage(ErrorKind::Corrupt, format!(
             "unknown journal record kind {other} at byte offset {offset}"
         ))),
     }

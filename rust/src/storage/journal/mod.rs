@@ -105,7 +105,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::storage::{
     now_ms, Compactable, CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish,
 };
@@ -191,10 +191,12 @@ impl<'a> FlockGuard<'a> {
         let op = if exclusive { sys::LOCK_EX } else { sys::LOCK_SH };
         let rc = unsafe { sys::flock(file.as_raw_fd(), op) };
         if rc != 0 {
-            return Err(OptunaError::Storage(format!(
-                "flock failed: {}",
-                std::io::Error::last_os_error()
-            )));
+            // the lock fd is shared state another process may hold —
+            // transient: a later attempt can win the lock
+            return Err(OptunaError::storage(
+                ErrorKind::Busy,
+                format!("flock failed: {}", std::io::Error::last_os_error()),
+            ));
         }
         Ok(FlockGuard { file })
     }
@@ -226,13 +228,13 @@ impl JournalStorage {
             .write(true)
             .read(true)
             .open(&lock_path)
-            .map_err(|e| OptunaError::Storage(format!("open {lock_path:?}: {e}")))?;
+            .map_err(|e| OptunaError::storage(ErrorKind::Io, format!("open {lock_path:?}: {e}")))?;
         OpenOptions::new()
             .create(true)
             .append(true)
             .read(true)
             .open(&path)
-            .map_err(|e| OptunaError::Storage(format!("open {path:?}: {e}")))?;
+            .map_err(|e| OptunaError::storage(ErrorKind::Io, format!("open {path:?}: {e}")))?;
         let mut state = Replayed::default();
         state.format = options.format;
         Ok(JournalStorage {
@@ -247,7 +249,8 @@ impl JournalStorage {
     }
 
     fn io_err(&self, what: &str, e: std::io::Error) -> OptunaError {
-        OptunaError::Storage(format!("{what} {:?}: {e}", self.path))
+        // syscall failures are transient: the retry layer re-runs the op
+        OptunaError::storage(ErrorKind::Io, format!("{what} {:?}: {e}", self.path))
     }
 
     fn open_file(&self) -> Result<File, OptunaError> {
@@ -530,18 +533,20 @@ impl JournalStorage {
         buf: &[u8],
     ) -> Result<(), OptunaError> {
         let fail = |what: &str| {
-            Err(OptunaError::Storage(format!(
-                "compaction verification failed ({what}); journal left untouched"
-            )))
+            Err(OptunaError::storage(
+                ErrorKind::Corrupt,
+                format!("compaction verification failed ({what}); journal left untouched"),
+            ))
         };
         let mut check = Replayed::default();
         check.format = fmt;
         let consumed = match replay::consume(&mut check, buf) {
             Ok(n) => n,
             Err(e) => {
-                return Err(OptunaError::Storage(format!(
-                    "compaction verification failed (replay: {e:?}); journal left untouched"
-                )))
+                return Err(OptunaError::storage(
+                    ErrorKind::Corrupt,
+                    format!("compaction verification failed (replay: {e:?}); journal left untouched"),
+                ))
             }
         };
         if consumed != buf.len() {
@@ -712,7 +717,7 @@ impl Storage for JournalStorage {
         self.append(
             move |state| {
                 if state.by_name.contains_key(&name_owned) {
-                    Err(OptunaError::Storage(format!("study '{name_owned}' already exists")))
+                    Err(OptunaError::storage(ErrorKind::Logic, format!("study '{name_owned}' already exists")))
                 } else {
                     Ok(())
                 }
@@ -1060,7 +1065,7 @@ impl Storage for JournalStorage {
         requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
     ) -> Result<Vec<FrozenTrial>, OptunaError> {
         let now = now_ms();
-        let cutoff = now.saturating_sub(grace.as_millis() as u64);
+        let cutoff = crate::storage::stale_cutoff_ms(now, grace);
         self.with_write(|state, file| {
             let st = state
                 .studies
@@ -1224,6 +1229,37 @@ mod tests {
     fn conformance_suite() {
         let p = tmp_path("conf");
         conformance::run_all(&JournalStorage::open(&p).unwrap());
+        cleanup(&p);
+    }
+
+    #[test]
+    fn stale_reaping_survives_clock_skew() {
+        let p = tmp_path("skew");
+        let (sid, tid) = {
+            let s = JournalStorage::open(&p).unwrap();
+            let sid = s.create_study("skew", StudyDirection::Minimize).unwrap();
+            let (tid, _) = s.create_trial(sid).unwrap();
+            (sid, tid)
+        };
+        // a peer whose wall clock runs an hour ahead stamped this
+        // heartbeat (equivalently: our clock stepped backwards)
+        let future = now_ms() + 3_600_000;
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            writeln!(f, "{{\"op\":\"heartbeat\",\"trial\":{tid},\"time\":{future}}}").unwrap();
+        }
+        let s = JournalStorage::open(&p).unwrap();
+        let victims =
+            s.fail_stale_trials(sid, Duration::from_millis(1), &|_| None).unwrap();
+        assert!(victims.is_empty(), "a future heartbeat must read as alive");
+        assert_eq!(s.get_trial(tid).unwrap().state, TrialState::Running);
+        // and a 64-bit-overflowing grace (~585M years; a truncating cast
+        // aliases it to ~384ms) must reap nothing, not everything
+        let victims = s
+            .fail_stale_trials(sid, Duration::from_secs(18_446_744_073_709_552), &|_| None)
+            .unwrap();
+        assert!(victims.is_empty());
         cleanup(&p);
     }
 

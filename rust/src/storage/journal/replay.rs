@@ -28,7 +28,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::util::json::Json;
 
 use super::format::{self, JournalFormat, Scan};
@@ -118,11 +118,12 @@ impl Replayed {
 }
 
 pub(super) fn bad_trial(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown trial id {id}"))
+    // unknown ids are a caller/state mismatch, not file damage
+    OptunaError::storage(ErrorKind::Logic, format!("unknown trial id {id}"))
 }
 
 pub(super) fn bad_study(id: u64) -> OptunaError {
-    OptunaError::Storage(format!("unknown study id {id}"))
+    OptunaError::storage(ErrorKind::Logic, format!("unknown study id {id}"))
 }
 
 /// Journal encoding of one objective value: JSON has no NaN/±inf, so
@@ -177,7 +178,7 @@ pub(super) fn consume(state: &mut Replayed, buf: &[u8]) -> Result<usize, OptunaE
             }
             Scan::Snapshot { payload, end } => {
                 if !state.awaiting_snapshot {
-                    return Err(OptunaError::Storage(format!(
+                    return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                         "snapshot record outside a compaction header at byte offset {}",
                         base + pos as u64
                     )));
@@ -196,8 +197,9 @@ pub(super) fn consume(state: &mut Replayed, buf: &[u8]) -> Result<usize, OptunaE
         // unlicensed snapshot can only mean truncation or corruption.
         // Presenting the prefix as healthy would silently drop every
         // committed record the snapshot stood for.
-        return Err(OptunaError::Storage(
-            "interrupted compaction: snapshot without a committed compact_end marker".into(),
+        return Err(OptunaError::storage(
+            ErrorKind::Corrupt,
+            "interrupted compaction: snapshot without a committed compact_end marker",
         ));
     }
     Ok(consumed)
@@ -237,7 +239,7 @@ fn apply_record(
     let op = entry
         .get("op")
         .and_then(|o| o.as_str())
-        .ok_or_else(|| OptunaError::Storage("journal entry missing op".into()))?;
+        .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "journal entry missing op"))?;
     match op {
         "compact_begin" => {
             let head = match state.format {
@@ -247,13 +249,13 @@ fn apply_record(
             if abs_offset != head || state.gen != 0 || !state.studies.is_empty()
                 || !state.trials.is_empty() || !state.unknown_ops.is_empty()
             {
-                return Err(OptunaError::Storage(format!(
+                return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                     "compact_begin away from the journal head at byte offset {abs_offset}"
                 )));
             }
             let gen = entry.get("gen").and_then(|g| g.as_i64()).unwrap_or(0);
             if gen < 1 {
-                return Err(OptunaError::Storage("compact_begin with bad gen".into()));
+                return Err(OptunaError::storage(ErrorKind::Corrupt, "compact_begin with bad gen"));
             }
             state.gen = gen as u64;
             state.awaiting_snapshot = true;
@@ -261,7 +263,7 @@ fn apply_record(
         }
         "snapshot" => {
             if !state.awaiting_snapshot {
-                return Err(OptunaError::Storage(format!(
+                return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                     "snapshot record outside a compaction header at byte offset {abs_offset}"
                 )));
             }
@@ -272,13 +274,13 @@ fn apply_record(
         }
         "compact_end" => {
             if !state.snapshot_uncommitted {
-                return Err(OptunaError::Storage(format!(
+                return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                     "compact_end without a preceding snapshot at byte offset {abs_offset}"
                 )));
             }
             let gen = entry.get("gen").and_then(|g| g.as_i64()).unwrap_or(-1);
             if gen != state.gen as i64 {
-                return Err(OptunaError::Storage(format!(
+                return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                     "compact_end generation mismatch (header gen {}, marker gen {gen})",
                     state.gen
                 )));
@@ -288,7 +290,7 @@ fn apply_record(
         }
         _ if state.in_compaction_header() => {
             if is_known_op(op) {
-                return Err(OptunaError::Storage(format!(
+                return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
                     "op '{op}' inside a compaction header at byte offset {abs_offset}"
                 )));
             }
@@ -352,7 +354,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
         let tid = entry
             .get("trial")
             .and_then(|t| t.as_i64())
-            .ok_or_else(|| OptunaError::Storage("entry missing trial".into()))? as usize;
+            .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "entry missing trial"))? as usize;
         if tid >= state.trials.len() {
             return Err(bad_trial(tid as u64));
         }
@@ -363,7 +365,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let name = entry
                 .get("name")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| OptunaError::Storage("create_study missing name".into()))?
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "create_study missing name"))?
                 .to_string();
             // `directions` (multi-objective) wins when present; scalar
             // `direction` is the pre-multi fallback
@@ -390,7 +392,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let sid = entry
                 .get("study")
                 .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trial missing study".into()))?
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "create_trial missing study"))?
                 as usize;
             if sid >= state.studies.len() {
                 return Err(bad_study(sid as u64));
@@ -402,7 +404,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let sid = entry
                 .get("study")
                 .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trials missing study".into()))?
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "create_trials missing study"))?
                 as usize;
             if sid >= state.studies.len() {
                 return Err(bad_study(sid as u64));
@@ -410,7 +412,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let n = entry
                 .get("n")
                 .and_then(|v| v.as_i64())
-                .ok_or_else(|| OptunaError::Storage("create_trials missing n".into()))?;
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "create_trials missing n"))?;
             let time = entry.get("time").and_then(|v| v.as_i64()).map(|v| v as u64);
             for _ in 0..n {
                 apply_create_trial(state, sid, time);
@@ -420,7 +422,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let sid = entry
                 .get("study")
                 .and_then(|s| s.as_i64())
-                .ok_or_else(|| OptunaError::Storage("enqueue missing study".into()))?
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "enqueue missing study"))?
                 as usize;
             if sid >= state.studies.len() {
                 return Err(bad_study(sid as u64));
@@ -433,15 +435,15 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
                 let name = p
                     .get("name")
                     .and_then(|n| n.as_str())
-                    .ok_or_else(|| OptunaError::Storage("enqueue param missing name".into()))?;
+                    .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "enqueue param missing name"))?;
                 let dist = Distribution::from_json(
                     p.get("dist")
-                        .ok_or_else(|| OptunaError::Storage("enqueue param missing dist".into()))?,
+                        .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "enqueue param missing dist"))?,
                 )?;
                 let value = p
                     .get("value")
                     .and_then(|v| v.as_f64())
-                    .ok_or_else(|| OptunaError::Storage("enqueue param missing value".into()))?;
+                    .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "enqueue param missing value"))?;
                 t.params.insert(name.to_string(), (dist, value));
             }
             for a in entry.get("attrs").and_then(|a| a.as_arr()).unwrap_or(&[]) {
@@ -487,16 +489,16 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let name = entry
                 .get("name")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| OptunaError::Storage("param missing name".into()))?;
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "param missing name"))?;
             let dist = Distribution::from_json(
                 entry
                     .get("dist")
-                    .ok_or_else(|| OptunaError::Storage("param missing dist".into()))?,
+                    .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "param missing dist"))?,
             )?;
             let value = entry
                 .get("value")
                 .and_then(|v| v.as_f64())
-                .ok_or_else(|| OptunaError::Storage("param missing value".into()))?;
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "param missing value"))?;
             state.trials[tid].params.insert(name.to_string(), (dist, value));
             state.touch(tid);
         }
@@ -506,7 +508,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let value = entry
                 .get("value")
                 .and_then(|v| v.as_f64())
-                .ok_or_else(|| OptunaError::Storage("intermediate missing value".into()))?;
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "intermediate missing value"))?;
             state.trials[tid].intermediate.insert(step, value);
             state.touch(tid);
         }
@@ -529,7 +531,7 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             let items = entry
                 .get("finishes")
                 .and_then(|f| f.as_arr())
-                .ok_or_else(|| OptunaError::Storage("finish_trials missing finishes".into()))?;
+                .ok_or_else(|| OptunaError::storage(ErrorKind::Corrupt, "finish_trials missing finishes"))?;
             for item in items {
                 let tid = get_trial(state, item)?;
                 apply_finish_fields(state, tid, item, time)?;

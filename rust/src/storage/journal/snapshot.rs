@@ -26,7 +26,7 @@
 
 use std::collections::VecDeque;
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::util::json::Json;
 
 use super::replay::{decode_value, encode_value, Replayed, StudyRec};
@@ -36,7 +36,7 @@ use super::replay::{decode_value, encode_value, Replayed, StudyRec};
 const SNAPSHOT_VERSION: u32 = 1;
 
 fn corrupt(what: &str) -> OptunaError {
-    OptunaError::Storage(format!("corrupt snapshot payload: {what}"))
+    OptunaError::storage(ErrorKind::Corrupt, format!("corrupt snapshot payload: {what}"))
 }
 
 // --- shared state/direction codes (binary encoding) --------------------
@@ -187,7 +187,7 @@ pub(super) fn build_json(state: &Replayed) -> Json {
 pub(super) fn apply_json(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
     let version = entry.get("version").and_then(|v| v.as_i64()).unwrap_or(0);
     if version != SNAPSHOT_VERSION as i64 {
-        return Err(OptunaError::Storage(format!(
+        return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
             "unsupported snapshot version {version} (this binary reads version {SNAPSHOT_VERSION})"
         )));
     }
@@ -434,7 +434,7 @@ pub(super) fn apply_binary(state: &mut Replayed, payload: &[u8]) -> Result<(), O
     let mut r = Reader { buf: payload, pos: 0 };
     let version = r.u32()?;
     if version != SNAPSHOT_VERSION {
-        return Err(OptunaError::Storage(format!(
+        return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
             "unsupported snapshot version {version} (this binary reads version {SNAPSHOT_VERSION})"
         )));
     }

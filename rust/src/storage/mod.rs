@@ -23,14 +23,22 @@
 //! the *decision* layer O(delta) too, not just the snapshot reads.
 
 mod cached;
+mod fault_injection;
 mod in_memory;
 mod journal;
+mod resilient;
 mod single_mutex;
 
 pub use cached::CachedStorage;
+pub use fault_injection::{FaultInjectionStorage, FaultMode, FaultRule, FaultSchedule};
 pub use in_memory::InMemoryStorage;
 pub use journal::{JournalFormat, JournalOptions, JournalStorage};
+pub use resilient::{ResilienceConfig, ResilienceStats, ResilientStorage};
 pub use single_mutex::SingleMutexStorage;
+
+// the classification axis of `OptunaError::Storage`, re-exported where
+// the resilience layer that consumes it lives
+pub use crate::core::{ErrorKind, StorageError};
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -45,6 +53,18 @@ pub fn now_ms() -> u64 {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)
         .unwrap_or(0)
+}
+
+/// Clock-skew-safe staleness cutoff for `fail_stale_trials`: `now -
+/// grace`, saturating at both ends. `grace.as_millis()` (a `u128`) is
+/// clamped — not truncated — to 64 bits, so a huge grace can never
+/// alias to a tiny one and reap the whole study; and a grace longer
+/// than the epoch yields cutoff 0 (nothing is stale) instead of
+/// wrapping. Heartbeats stamped in the *future* (a wall clock that
+/// stepped backwards mid-run) are safe by construction: `last_alive >
+/// now >= cutoff` simply reads as alive.
+pub(crate) fn stale_cutoff_ms(now: u64, grace: Duration) -> u64 {
+    now.saturating_sub(grace.as_millis().min(u64::MAX as u128) as u64)
 }
 
 /// Parameter set carried by an enqueued (retried) trial:
@@ -465,10 +485,13 @@ pub fn get_or_create_study_multi(
     let join = |id: u64| -> Result<u64, OptunaError> {
         let existing = storage.get_study_directions(id)?;
         if existing != directions {
-            return Err(OptunaError::Storage(format!(
-                "study '{name}' exists with directions [{}]",
-                existing.iter().map(|d| d.as_str()).collect::<Vec<_>>().join(", ")
-            )));
+            return Err(OptunaError::storage(
+                ErrorKind::Logic,
+                format!(
+                    "study '{name}' exists with directions [{}]",
+                    existing.iter().map(|d| d.as_str()).collect::<Vec<_>>().join(", ")
+                ),
+            ));
         }
         Ok(id)
     };
@@ -486,7 +509,10 @@ pub fn get_or_create_study_multi(
         // reports, not silently flip an objective's sign)
         Err(_) => match storage.get_study_id(name)? {
             Some(id) => join(id),
-            None => Err(OptunaError::Storage(format!("cannot create study '{name}'"))),
+            None => Err(OptunaError::storage(
+                ErrorKind::Logic,
+                format!("cannot create study '{name}'"),
+            )),
         },
     }
 }
@@ -510,6 +536,57 @@ pub(crate) mod conformance {
         capped_creation(storage);
         multi_objective_values(storage);
         batched_ops(storage);
+        error_taxonomy(storage);
+    }
+
+    /// Transient-vs-permanent semantics every backend (and every
+    /// decorator stack) must preserve: misuse and unknown ids are
+    /// *permanent* storage errors — the retry layer must see at a glance
+    /// that replaying them is pointless — while lost races stay typed as
+    /// [`OptunaError::Conflict`]. A backend that misclassified these as
+    /// transient would make [`ResilientStorage`] spin its whole backoff
+    /// budget on errors that can never heal.
+    fn error_taxonomy(s: &dyn Storage) {
+        let permanent = |r: Result<(), OptunaError>, what: &str| match r {
+            Err(OptunaError::Storage(e)) => {
+                assert!(!e.is_transient(), "{what} must be permanent, got kind {:?}", e.kind);
+            }
+            other => panic!("{what} must be a storage error, got {other:?}"),
+        };
+        // unknown ids: the same call always fails the same way
+        permanent(s.get_trial(u64::MAX).map(|_| ()), "unknown trial id");
+        permanent(s.get_all_trials(u64::MAX / 2).map(|_| ()), "unknown study id");
+        permanent(s.n_trials(u64::MAX / 2).map(|_| ()), "unknown study id (n_trials)");
+        permanent(s.record_heartbeat(u64::MAX).map(|_| ()), "heartbeat on unknown trial");
+
+        let sid = s.create_study("conf-taxonomy", StudyDirection::Minimize).unwrap();
+        // duplicate study names are misuse, not a retryable hiccup
+        permanent(
+            s.create_study("conf-taxonomy", StudyDirection::Minimize).map(|_| ()),
+            "duplicate study name",
+        );
+        // finishing with a non-terminal state is misuse
+        let (tid, _) = s.create_trial(sid).unwrap();
+        permanent(
+            s.finish_trial(tid, TrialState::Running, None),
+            "finish with Running state",
+        );
+        // a double finish is a lost race: typed Conflict, not Storage
+        s.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        match s.finish_trial(tid, TrialState::Failed, None) {
+            Err(OptunaError::Conflict(_)) => {}
+            other => panic!("double finish must be a Conflict, got {other:?}"),
+        }
+        // clock-skew guard: a grace period that overflows 64 bits of
+        // milliseconds clamps (reaping nothing) instead of truncating
+        // into a tiny window that would reap live trials
+        let (alive, _) = s.create_trial(sid).unwrap();
+        s.record_heartbeat(alive).unwrap();
+        let victims = s
+            .fail_stale_trials(sid, Duration::from_secs(18_446_744_073_709_552), &|_| None)
+            .unwrap();
+        assert!(victims.is_empty(), "a huge grace must never reap");
+        assert_eq!(s.get_trial(alive).unwrap().state, TrialState::Running);
     }
 
     fn batched_ops(s: &dyn Storage) {

@@ -1,0 +1,812 @@
+//! Retrying, degrading storage decorator — the resilience layer.
+//!
+//! [`ResilientStorage`] wraps any [`Storage`] and turns *transient*
+//! failures (see [`ErrorKind::is_transient`]) into retries with capped
+//! exponential backoff and deterministic seeded jitter, bounded by a
+//! retry budget and a per-op deadline. Permanent failures pass through
+//! untouched — retrying a corrupt file or a misused API replays the
+//! identical failure.
+//!
+//! When the budget is exhausted the layer **degrades instead of dying**,
+//! per operation:
+//!
+//! * `record_heartbeat` / `try_compact` — dropped (counted in
+//!   [`ResilienceStats`]): liveness stamps and log hygiene are best-
+//!   effort by design, the next tick retries anyway.
+//! * `get_all_trials` / `get_trials_snapshot` — served from the last
+//!   snapshot this layer saw succeed (counted as a stale read); the
+//!   error surfaces only when there has never been one.
+//! * `get_trials_since` — an empty delta at the caller's own cursor, so
+//!   a [`CachedStorage`] stacked on top keeps serving its last-merged
+//!   snapshot (bounded staleness instead of an error).
+//! * writes — the final error surfaces to the caller, stamped with the
+//!   attempt count ([`StorageError::attempt`]); the optimize loops then
+//!   decide (under failover a transient write failure abandons the trial
+//!   to the reaper instead of killing the worker).
+//!
+//! One write family gets an extra step: a `finish_*` retry that comes
+//! back [`OptunaError::Conflict`] may be the *ambiguous outcome* of an
+//! earlier attempt that landed but whose acknowledgment was lost. The
+//! layer verifies against the backend — if every target trial sits in
+//! exactly the requested terminal state, the finish is accepted as done.
+//!
+//! The intended stack is `Cached⟨Resilient⟨backend⟩⟩` (the builder wires
+//! this), or `Cached⟨Resilient⟨FaultInjection⟨backend⟩⟩⟩` under chaos
+//! testing — see docs/ARCHITECTURE.md, "Resilience & fault injection".
+//!
+//! [`CachedStorage`]: super::CachedStorage
+//! [`StorageError::attempt`]: crate::core::StorageError
+//! [`ErrorKind::is_transient`]: crate::core::ErrorKind::is_transient
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::storage::{
+    CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish, SEQ_UNTRACKED,
+};
+use crate::util::rng::Pcg64;
+
+/// Retry/backoff/deadline policy of a [`ResilientStorage`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    /// Retries after the first attempt (total attempts = `max_retries+1`).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub base_backoff: Duration,
+    /// Ceiling the doubling saturates at.
+    pub max_backoff: Duration,
+    /// Per-op time budget: no retry is scheduled that would overrun it.
+    /// (It bounds the retry loop, not a single blocked backend call.)
+    pub op_deadline: Duration,
+    /// Seed of the deterministic jitter stream (each pause is scaled by
+    /// a factor in [0.5, 1.0) drawn from `(jitter_seed, pause ticket)`).
+    pub jitter_seed: u64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            max_retries: 8,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+            op_deadline: Duration::from_secs(5),
+            jitter_seed: 0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn retries(mut self, n: u32) -> Self {
+        self.max_retries = n;
+        self
+    }
+
+    pub fn backoff(mut self, base: Duration, max: Duration) -> Self {
+        self.base_backoff = base;
+        self.max_backoff = max;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.op_deadline = d;
+        self
+    }
+
+    pub fn jitter_seed(mut self, seed: u64) -> Self {
+        self.jitter_seed = seed;
+        self
+    }
+}
+
+/// Counters a [`ResilientStorage`] accumulates — its "log" of degraded
+/// behaviour (there is no logging framework to write to).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceStats {
+    /// Backoff-then-retry cycles taken.
+    pub retries: u64,
+    /// Ops that failed at least once and then succeeded.
+    pub recovered: u64,
+    /// Ops whose transient failure survived the whole retry budget.
+    pub exhausted: u64,
+    /// `record_heartbeat` failures swallowed after exhaustion.
+    pub dropped_heartbeats: u64,
+    /// `try_compact` failures swallowed after exhaustion.
+    pub dropped_compactions: u64,
+    /// Reads served from the last-good snapshot / an empty delta.
+    pub stale_reads: u64,
+    /// `finish_*` conflicts accepted after verifying the earlier attempt
+    /// had landed (the ambiguous-outcome path).
+    pub absorbed_ambiguous: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    retries: AtomicU64,
+    recovered: AtomicU64,
+    exhausted: AtomicU64,
+    dropped_heartbeats: AtomicU64,
+    dropped_compactions: AtomicU64,
+    stale_reads: AtomicU64,
+    absorbed_ambiguous: AtomicU64,
+}
+
+/// [`Storage`] decorator retrying transient errors and degrading on
+/// exhaustion (see the module docs).
+pub struct ResilientStorage {
+    inner: Arc<dyn Storage>,
+    config: ResilienceConfig,
+    counters: Counters,
+    /// Ticket feeding the jitter stream: one draw per backoff pause.
+    pause_seq: AtomicU64,
+    /// Last snapshot per study that the backend served successfully —
+    /// the read-degradation fallback.
+    last_good: Mutex<HashMap<u64, Arc<Vec<FrozenTrial>>>>,
+}
+
+impl ResilientStorage {
+    pub fn new(inner: Arc<dyn Storage>, config: ResilienceConfig) -> Self {
+        ResilientStorage {
+            inner,
+            config,
+            counters: Counters::default(),
+            pause_seq: AtomicU64::new(0),
+            last_good: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Snapshot of the accumulated counters.
+    pub fn stats(&self) -> ResilienceStats {
+        let c = &self.counters;
+        ResilienceStats {
+            retries: c.retries.load(Ordering::Relaxed),
+            recovered: c.recovered.load(Ordering::Relaxed),
+            exhausted: c.exhausted.load(Ordering::Relaxed),
+            dropped_heartbeats: c.dropped_heartbeats.load(Ordering::Relaxed),
+            dropped_compactions: c.dropped_compactions.load(Ordering::Relaxed),
+            stale_reads: c.stale_reads.load(Ordering::Relaxed),
+            absorbed_ambiguous: c.absorbed_ambiguous.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Backoff before retry number `attempt` (1-based): capped
+    /// exponential, scaled by a deterministic jitter factor in [0.5, 1.0)
+    /// so a fleet of workers hammered by the same fault decorrelates.
+    fn pause_before_retry(&self, attempt: u32) -> Duration {
+        let base = self.config.base_backoff.as_nanos().max(1) as u64;
+        let cap = self.config.max_backoff.as_nanos().max(1) as u64;
+        let exp = base.saturating_mul(1u64 << (attempt - 1).min(20)).min(cap);
+        let ticket = self.pause_seq.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::with_stream(self.config.jitter_seed, ticket);
+        let factor = 0.5 + 0.5 * rng.uniform();
+        Duration::from_nanos((exp as f64 * factor) as u64)
+    }
+
+    /// Run `call` with the retry policy; returns the result plus how
+    /// many attempts were made. Transient errors that survive the budget
+    /// come back stamped with the attempt count.
+    fn retry_loop<T>(
+        &self,
+        mut call: impl FnMut() -> Result<T, OptunaError>,
+    ) -> (Result<T, OptunaError>, u32) {
+        let started = Instant::now();
+        let mut attempt: u32 = 1;
+        loop {
+            match call() {
+                Ok(v) => {
+                    if attempt > 1 {
+                        self.counters.recovered.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (Ok(v), attempt);
+                }
+                Err(e) if e.is_transient() && attempt <= self.config.max_retries => {
+                    let pause = self.pause_before_retry(attempt);
+                    if started.elapsed() + pause > self.config.op_deadline {
+                        // the deadline is part of the budget: give up now
+                        self.counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                        return (Err(stamp(e, attempt)), attempt);
+                    }
+                    self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(pause);
+                    attempt += 1;
+                }
+                Err(e) => {
+                    if e.is_transient() {
+                        self.counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (Err(stamp(e, attempt)), attempt);
+                }
+            }
+        }
+    }
+
+    fn with_retry<T>(
+        &self,
+        call: impl FnMut() -> Result<T, OptunaError>,
+    ) -> Result<T, OptunaError> {
+        self.retry_loop(call).0
+    }
+
+    fn remember(&self, study_id: u64, snapshot: Arc<Vec<FrozenTrial>>) {
+        self.last_good
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(study_id, snapshot);
+    }
+
+    fn last_good(&self, study_id: u64) -> Option<Arc<Vec<FrozenTrial>>> {
+        self.last_good
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&study_id)
+            .cloned()
+    }
+
+    /// Shared tail of the `finish_*` family: a [`OptunaError::Conflict`]
+    /// on a retry may mean an earlier attempt landed but its ack was
+    /// lost. Verify: if every target trial is in exactly the requested
+    /// terminal state, the finish already happened — report success.
+    fn finish_verified(
+        &self,
+        targets: &[(u64, TrialState)],
+        call: impl FnMut() -> Result<(), OptunaError>,
+    ) -> Result<(), OptunaError> {
+        let (res, attempts) = self.retry_loop(call);
+        match res {
+            Err(OptunaError::Conflict(c)) if attempts > 1 => {
+                let landed = targets.iter().all(|(id, want)| {
+                    matches!(
+                        self.with_retry(|| self.inner.get_trial(*id)),
+                        Ok(t) if t.state == *want
+                    )
+                });
+                if landed {
+                    self.counters.absorbed_ambiguous.fetch_add(1, Ordering::Relaxed);
+                    Ok(())
+                } else {
+                    Err(OptunaError::Conflict(c))
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Stamp the attempt count onto a surfacing storage error.
+fn stamp(e: OptunaError, attempt: u32) -> OptunaError {
+    match e {
+        OptunaError::Storage(se) if attempt > 1 => {
+            OptunaError::Storage(se.with_attempt(attempt))
+        }
+        other => other,
+    }
+}
+
+impl Storage for ResilientStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        self.with_retry(|| self.inner.create_study(name, direction))
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        self.with_retry(|| self.inner.create_study_multi(name, directions))
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        self.with_retry(|| self.inner.get_study_directions(study_id))
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        self.with_retry(|| self.inner.get_study_id(name))
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        self.with_retry(|| self.inner.get_study_direction(study_id))
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        self.with_retry(|| self.inner.study_names())
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        self.with_retry(|| self.inner.create_trial(study_id))
+    }
+
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        self.with_retry(|| self.inner.create_trials(study_id, n))
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        self.with_retry(|| self.inner.set_trial_param(trial_id, name, dist, internal))
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        self.with_retry(|| self.inner.set_trial_intermediate(trial_id, step, value))
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        self.with_retry(|| self.inner.set_trial_user_attr(trial_id, key, value))
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        self.finish_verified(&[(trial_id, state)], || {
+            self.inner.finish_trial(trial_id, state, value)
+        })
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.finish_verified(&[(trial_id, state)], || {
+            self.inner.finish_trial_values(trial_id, state, values)
+        })
+    }
+
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        let targets: Vec<(u64, TrialState)> =
+            finishes.iter().map(|f| (f.trial_id, f.state)).collect();
+        self.finish_verified(&targets, || self.inner.finish_trials(finishes))
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        self.with_retry(|| self.inner.get_trial(trial_id))
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        let res = self.with_retry(|| self.inner.get_all_trials(study_id));
+        match res {
+            Ok(trials) => {
+                self.remember(study_id, Arc::new(trials.clone()));
+                Ok(trials)
+            }
+            Err(e) if e.is_transient() => match self.last_good(study_id) {
+                Some(snap) => {
+                    self.counters.stale_reads.fetch_add(1, Ordering::Relaxed);
+                    Ok((*snap).clone())
+                }
+                None => Err(e),
+            },
+            Err(e) => Err(e),
+        }
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        self.with_retry(|| self.inner.n_trials(study_id))
+    }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        self.with_retry(|| self.inner.study_seq(study_id))
+    }
+
+    fn get_trials_since(&self, study_id: u64, since_seq: u64) -> Result<TrialDelta, OptunaError> {
+        let res = self.with_retry(|| self.inner.get_trials_since(study_id, since_seq));
+        match res {
+            // Degrade to "nothing changed" at the caller's own cursor: a
+            // stacked cache keeps serving its last-merged snapshot. Only
+            // sound for a real cursor — an untracked caller (cursor
+            // SEQ_UNTRACKED) treats the delta as the *complete* trial
+            // list, and an empty one would erase its view.
+            Err(e) if e.is_transient() && since_seq != SEQ_UNTRACKED => {
+                self.counters.stale_reads.fetch_add(1, Ordering::Relaxed);
+                Ok(TrialDelta { seq: since_seq, trials: Vec::new() })
+            }
+            other => other,
+        }
+    }
+
+    fn get_trials_snapshot(&self, study_id: u64) -> Result<Arc<Vec<FrozenTrial>>, OptunaError> {
+        let res = self.with_retry(|| self.inner.get_trials_snapshot(study_id));
+        match res {
+            Ok(snap) => {
+                self.remember(study_id, Arc::clone(&snap));
+                Ok(snap)
+            }
+            Err(e) if e.is_transient() => match self.last_good(study_id) {
+                Some(snap) => {
+                    self.counters.stale_reads.fetch_add(1, Ordering::Relaxed);
+                    Ok(snap)
+                }
+                None => Err(e),
+            },
+            Err(e) => Err(e),
+        }
+    }
+
+    fn is_write_through_cache(&self) -> bool {
+        self.inner.is_write_through_cache()
+    }
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        match self.with_retry(|| self.inner.record_heartbeat(trial_id)) {
+            // liveness stamps are best-effort: the next tick retries
+            Err(e) if e.is_transient() => {
+                self.counters.dropped_heartbeats.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            other => other,
+        }
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.with_retry(|| self.inner.fail_stale_trials(study_id, grace, requeue))
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        self.with_retry(|| self.inner.enqueue_trial(study_id, params, user_attrs))
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.with_retry(|| self.inner.pop_waiting_trial(study_id))
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.with_retry(|| self.inner.create_trial_capped(study_id, cap))
+    }
+
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        match self.with_retry(|| self.inner.try_compact()) {
+            // log hygiene is best-effort: auto-compaction retries later
+            Err(e) if e.is_transient() => {
+                self.counters.dropped_compactions.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ErrorKind;
+    use crate::storage::fault_injection::{FaultMode, FaultRule, FaultSchedule};
+    use crate::storage::{FaultInjectionStorage, InMemoryStorage};
+    use std::sync::atomic::AtomicU32;
+
+    /// Test double: forwards to an [`InMemoryStorage`], failing the next
+    /// `fail_next` ops with `kind` before they reach it.
+    struct FlakyStorage {
+        inner: InMemoryStorage,
+        fail_next: AtomicU32,
+        kind: ErrorKind,
+    }
+
+    impl FlakyStorage {
+        fn new(kind: ErrorKind) -> Self {
+            FlakyStorage { inner: InMemoryStorage::new(), fail_next: AtomicU32::new(0), kind }
+        }
+
+        fn fail_next(&self, n: u32) {
+            self.fail_next.store(n, Ordering::Relaxed);
+        }
+
+        fn gate(&self) -> Result<(), OptunaError> {
+            let left = self.fail_next.load(Ordering::Relaxed);
+            if left > 0 {
+                self.fail_next.store(left - 1, Ordering::Relaxed);
+                return Err(OptunaError::storage(self.kind, "flaky: simulated failure"));
+            }
+            Ok(())
+        }
+    }
+
+    impl Storage for FlakyStorage {
+        fn create_study(
+            &self,
+            name: &str,
+            direction: StudyDirection,
+        ) -> Result<u64, OptunaError> {
+            self.gate()?;
+            self.inner.create_study(name, direction)
+        }
+
+        fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+            self.gate()?;
+            self.inner.get_study_id(name)
+        }
+
+        fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+            self.gate()?;
+            self.inner.get_study_direction(study_id)
+        }
+
+        fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+            self.gate()?;
+            self.inner.study_names()
+        }
+
+        fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+            self.gate()?;
+            self.inner.create_trial(study_id)
+        }
+
+        fn set_trial_param(
+            &self,
+            trial_id: u64,
+            name: &str,
+            dist: &Distribution,
+            internal: f64,
+        ) -> Result<(), OptunaError> {
+            self.gate()?;
+            self.inner.set_trial_param(trial_id, name, dist, internal)
+        }
+
+        fn set_trial_intermediate(
+            &self,
+            trial_id: u64,
+            step: u64,
+            value: f64,
+        ) -> Result<(), OptunaError> {
+            self.gate()?;
+            self.inner.set_trial_intermediate(trial_id, step, value)
+        }
+
+        fn set_trial_user_attr(
+            &self,
+            trial_id: u64,
+            key: &str,
+            value: &str,
+        ) -> Result<(), OptunaError> {
+            self.gate()?;
+            self.inner.set_trial_user_attr(trial_id, key, value)
+        }
+
+        fn finish_trial(
+            &self,
+            trial_id: u64,
+            state: TrialState,
+            value: Option<f64>,
+        ) -> Result<(), OptunaError> {
+            self.gate()?;
+            self.inner.finish_trial(trial_id, state, value)
+        }
+
+        fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+            self.gate()?;
+            self.inner.get_trial(trial_id)
+        }
+
+        fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+            self.gate()?;
+            self.inner.get_all_trials(study_id)
+        }
+
+        fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+            self.gate()?;
+            self.inner.n_trials(study_id)
+        }
+
+        fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+            self.gate()?;
+            self.inner.record_heartbeat(trial_id)
+        }
+
+        fn get_trials_since(
+            &self,
+            study_id: u64,
+            since_seq: u64,
+        ) -> Result<TrialDelta, OptunaError> {
+            self.gate()?;
+            self.inner.get_trials_since(study_id, since_seq)
+        }
+
+        fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+            self.gate()?;
+            self.inner.study_seq(study_id)
+        }
+    }
+
+    fn fast_config() -> ResilienceConfig {
+        // nanosecond-scale backoff keeps the suite quick
+        ResilienceConfig::new()
+            .retries(4)
+            .backoff(Duration::from_nanos(100), Duration::from_micros(10))
+            .deadline(Duration::from_secs(5))
+            .jitter_seed(7)
+    }
+
+    #[test]
+    fn transient_errors_are_retried_to_success() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Busy));
+        let r = ResilientStorage::new(flaky.clone(), fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        flaky.fail_next(3);
+        let (tid, _) = r.create_trial(sid).unwrap();
+        r.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        let stats = r.stats();
+        assert_eq!(stats.retries, 3);
+        assert_eq!(stats.recovered, 1);
+        assert_eq!(stats.exhausted, 0);
+    }
+
+    #[test]
+    fn permanent_errors_surface_without_retry() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Corrupt));
+        let r = ResilientStorage::new(flaky.clone(), fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        flaky.fail_next(1);
+        let err = r.create_trial(sid).unwrap_err();
+        match &err {
+            OptunaError::Storage(e) => {
+                assert_eq!(e.kind, ErrorKind::Corrupt);
+                assert_eq!(e.attempt, 1, "no retry happened");
+            }
+            other => panic!("expected storage error, got {other:?}"),
+        }
+        assert_eq!(r.stats().retries, 0);
+        // the single injected failure was consumed by the one attempt
+        assert_eq!(r.create_trial(sid).unwrap().1, 0);
+    }
+
+    #[test]
+    fn exhaustion_stamps_the_attempt_count() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Io));
+        let r = ResilientStorage::new(flaky.clone(), fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        flaky.fail_next(u32::MAX);
+        let err = r.create_trial(sid).unwrap_err();
+        match &err {
+            OptunaError::Storage(e) => {
+                assert_eq!(e.kind, ErrorKind::Io);
+                assert_eq!(e.attempt, 5, "4 retries = 5 attempts");
+                assert!(e.is_transient());
+                let shown = err.to_string();
+                assert!(shown.contains("after 5 attempts"), "{shown}");
+            }
+            other => panic!("expected storage error, got {other:?}"),
+        }
+        assert_eq!(r.stats().exhausted, 1);
+    }
+
+    #[test]
+    fn heartbeats_are_dropped_not_fatal() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Timeout));
+        let r = ResilientStorage::new(flaky.clone(), fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        let (tid, _) = r.create_trial(sid).unwrap();
+        flaky.fail_next(u32::MAX);
+        r.record_heartbeat(tid).unwrap();
+        assert_eq!(r.stats().dropped_heartbeats, 1);
+        flaky.fail_next(0);
+        // permanent heartbeat failures still surface (bad id = Logic)
+        assert!(r.record_heartbeat(99_999).is_err());
+    }
+
+    #[test]
+    fn reads_degrade_to_the_last_good_snapshot() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Io));
+        let r = ResilientStorage::new(flaky.clone(), fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        let (tid, _) = r.create_trial(sid).unwrap();
+        r.finish_trial(tid, TrialState::Complete, Some(2.5)).unwrap();
+        // prime the last-good snapshot, then cut the backend off
+        let live = r.get_all_trials(sid).unwrap();
+        assert_eq!(live.len(), 1);
+        let seq = r.study_seq(sid).unwrap();
+        flaky.fail_next(u32::MAX);
+        let stale = r.get_all_trials(sid).unwrap();
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].value, Some(2.5));
+        let snap = r.get_trials_snapshot(sid).unwrap();
+        assert_eq!(snap.len(), 1);
+        // the delta stream degrades to "nothing changed" at the cursor
+        let delta = r.get_trials_since(sid, seq).unwrap();
+        assert_eq!(delta.seq, seq);
+        assert!(delta.trials.is_empty());
+        assert!(r.stats().stale_reads >= 3);
+        // an untracked cursor must NOT degrade (it would erase the view)
+        assert!(r.get_trials_since(sid, SEQ_UNTRACKED).is_err());
+        // writes surface the failure instead of degrading
+        assert!(r.create_trial(sid).is_err());
+    }
+
+    #[test]
+    fn ambiguous_finish_is_verified_and_absorbed() {
+        // a one-shot error-after on finish_trial: the write lands, the
+        // ack is lost; the retry reaches the backend, sees Conflict, and
+        // the layer must verify-absorb it
+        let schedule = FaultSchedule {
+            seed: 11,
+            rules: vec![FaultRule {
+                op: Some("finish_trial".into()),
+                kind: ErrorKind::Io,
+                probability: 1.0,
+                latency: Duration::ZERO,
+                mode: FaultMode::ErrorAfter,
+                max_fires: Some(1),
+            }],
+        };
+        let chaos =
+            Arc::new(FaultInjectionStorage::new(Arc::new(InMemoryStorage::new()), schedule));
+        let r = ResilientStorage::new(chaos, fast_config());
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        let (tid, _) = r.create_trial(sid).unwrap();
+        r.finish_trial(tid, TrialState::Complete, Some(0.25)).unwrap();
+        let t = r.get_trial(tid).unwrap();
+        assert_eq!(t.state, TrialState::Complete);
+        assert_eq!(t.value, Some(0.25));
+        assert_eq!(r.stats().absorbed_ambiguous, 1);
+        // a genuine first-attempt conflict still surfaces
+        match r.finish_trial(tid, TrialState::Failed, None) {
+            Err(OptunaError::Conflict(_)) => {}
+            other => panic!("expected a conflict, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_caps_the_retry_loop() {
+        let flaky = Arc::new(FlakyStorage::new(ErrorKind::Busy));
+        let config = ResilienceConfig::new()
+            .retries(1_000)
+            .backoff(Duration::from_millis(5), Duration::from_millis(5))
+            .deadline(Duration::from_millis(20));
+        let r = ResilientStorage::new(flaky.clone(), config);
+        let sid = r.create_study("res", StudyDirection::Minimize).unwrap();
+        flaky.fail_next(u32::MAX);
+        let started = Instant::now();
+        assert!(r.create_trial(sid).is_err());
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "the deadline must stop a 1000-retry budget early"
+        );
+        let stats = r.stats();
+        assert!(stats.retries < 1_000);
+        assert_eq!(stats.exhausted, 1);
+    }
+
+    #[test]
+    fn resilient_wrapper_passes_conformance() {
+        let r = ResilientStorage::new(
+            Arc::new(InMemoryStorage::new()),
+            ResilienceConfig::default(),
+        );
+        crate::storage::conformance::run_all(&r);
+    }
+}

@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
-use crate::core::{Distribution, FrozenTrial, OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState};
 use crate::storage::{InMemoryStorage, ParamSet, Storage, TrialDelta, TrialFinish};
 
 /// In-memory storage with the historical single-global-Mutex locking
@@ -33,7 +33,10 @@ impl SingleMutexStorage {
 
     fn enter(&self) -> Result<MutexGuard<'_, ()>, OptunaError> {
         self.gate.lock().map_err(|_| {
-            OptunaError::Storage("single-mutex storage gate poisoned by a panicked writer".into())
+            OptunaError::storage(
+                ErrorKind::Poisoned,
+                "single-mutex storage gate poisoned by a panicked writer",
+            )
         })
     }
 }

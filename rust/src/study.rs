@@ -13,8 +13,8 @@ use crate::multi::{nondominated_sort, to_losses};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
 use crate::storage::{
-    get_or_create_study_multi, CachedStorage, InMemoryStorage, Storage, TrialFinish,
-    SEQ_UNTRACKED,
+    get_or_create_study_multi, CachedStorage, InMemoryStorage, ResilienceConfig,
+    ResilientStorage, Storage, TrialFinish, SEQ_UNTRACKED,
 };
 use crate::trial::Trial;
 use crate::util::stats::nan_max_cmp;
@@ -97,6 +97,7 @@ pub struct StudyBuilder {
     cache: bool,
     index: bool,
     failover: Option<FailoverConfig>,
+    resilience: Option<ResilienceConfig>,
     retry_cb: Option<Arc<RetryCallback>>,
 }
 
@@ -167,6 +168,18 @@ impl StudyBuilder {
         self
     }
 
+    /// Wrap the storage backend in a [`ResilientStorage`]: transient
+    /// storage errors ([`crate::storage::ErrorKind::is_transient`]) are
+    /// retried with capped exponential backoff under `cfg`'s budget and
+    /// deadline, and exhausted heartbeats/reads degrade instead of
+    /// erroring. The decorator is applied *under* the snapshot cache
+    /// (`Cached⟨Resilient⟨backend⟩⟩`), so degraded reads feed the cache
+    /// its own last-good view. Off by default.
+    pub fn resilience(mut self, cfg: ResilienceConfig) -> Self {
+        self.resilience = Some(cfg);
+        self
+    }
+
     /// Custom retry decision hook; only consulted when failover is
     /// enabled. The hook runs while the storage lock is held and must
     /// not call back into the study or its storage — see
@@ -189,6 +202,12 @@ impl StudyBuilder {
         let storage = self
             .storage
             .unwrap_or_else(|| Arc::new(InMemoryStorage::new()));
+        // resilience wraps the backend first, the cache wraps resilience:
+        // a degraded (stale) read then feeds the cache its last-good view
+        let storage: Arc<dyn Storage> = match self.resilience {
+            Some(cfg) => Arc::new(ResilientStorage::new(storage, cfg)),
+            None => storage,
+        };
         let storage = if self.cache { CachedStorage::wrap(storage) } else { storage };
         let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
         let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
@@ -222,17 +241,44 @@ impl HeartbeatRegistry {
         HeartbeatRegistry { trials: Mutex::new(HashSet::new()) }
     }
 
+    // The set is only ever mutated via insert/remove, which cannot leave
+    // it half-updated — so a panicking objective thread that poisons the
+    // mutex leaves perfectly usable state behind. Recover it: treating
+    // the poison as fatal would silently stop heartbeats for every
+    // *surviving* worker, getting their live trials reaped.
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashSet<u64>> {
+        self.trials.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn insert(&self, trial_id: u64) {
-        self.trials.lock().unwrap().insert(trial_id);
+        self.lock().insert(trial_id);
     }
 
     fn remove(&self, trial_id: u64) {
-        self.trials.lock().unwrap().remove(&trial_id);
+        self.lock().remove(&trial_id);
     }
 
     fn ids(&self) -> Vec<u64> {
-        self.trials.lock().unwrap().iter().copied().collect()
+        self.lock().iter().copied().collect()
     }
+}
+
+/// Evaluate an objective with a panic firewall. A panicking objective is
+/// an *objective* failure, not a harness failure: letting it unwind
+/// through the optimize loops would poison shared state and strand the
+/// heartbeat ticker (the stop flag is only set on the normal exit path),
+/// hanging the scope join. `Err(message)` is the extracted panic payload;
+/// the caller records it as a `Failed` outcome like any objective error.
+fn catch_objective<R>(
+    f: impl FnOnce() -> Result<R, OptunaError>,
+) -> Result<Result<R, OptunaError>, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|payload| {
+        payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string())
+    })
 }
 
 /// Result an objective hands back through [`Study::tell`].
@@ -256,6 +302,7 @@ impl Study {
             cache: true,
             index: true,
             failover: None,
+            resilience: None,
             retry_cb: None,
         }
     }
@@ -737,12 +784,17 @@ impl Study {
     /// (see [`Study::tell_batch`]).
     fn finish_batch(&self, finishes: Vec<TrialFinish>) -> Result<(), OptunaError> {
         match self.storage.finish_trials(&finishes) {
-            Err(OptunaError::Conflict(_)) if self.failover.is_some() => {
-                // a peer reaped part of the batch: land the rest
-                // individually, skipping the superseded entries
+            Err(e)
+                if self.failover.is_some()
+                    && (matches!(e, OptunaError::Conflict(_)) || e.is_transient()) =>
+            {
+                // a peer reaped part of the batch (or the batched write
+                // transiently failed): land the rest individually,
+                // skipping superseded or still-unreachable entries
                 for f in finishes {
                     match self.storage.finish_trial_values(f.trial_id, f.state, &f.values) {
-                        Err(OptunaError::Conflict(_)) => {}
+                        Err(e)
+                            if matches!(e, OptunaError::Conflict(_)) || e.is_transient() => {}
                         other => other?,
                     }
                 }
@@ -781,11 +833,14 @@ impl Study {
         if let Some(reg) = heartbeats {
             reg.insert(trial_id);
         }
-        let outcome = match objective(&mut trial) {
-            Ok(v) if v.is_finite() => TrialOutcome::Complete(v),
-            Ok(v) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
-            Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
-            Err(e) => TrialOutcome::Failed(e.to_string()),
+        let outcome = match catch_objective(|| objective(&mut trial)) {
+            Ok(Ok(v)) if v.is_finite() => TrialOutcome::Complete(v),
+            Ok(Ok(v)) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
+            Ok(Err(OptunaError::TrialPruned)) => TrialOutcome::Pruned,
+            Ok(Err(e)) => TrialOutcome::Failed(e.to_string()),
+            Err(panic_msg) => {
+                TrialOutcome::Failed(format!("objective panicked: {panic_msg}"))
+            }
         };
         let result = self.tell(trial, outcome);
         if let Some(reg) = heartbeats {
@@ -793,8 +848,16 @@ impl Study {
         }
         match result {
             // only under an explicit failover policy: a study that never
-            // opted into reaping should surface conflicts, not eat results
-            Err(OptunaError::Conflict(_)) if self.failover.is_some() => Ok(()),
+            // opted into reaping should surface conflicts, not eat results.
+            // Transient storage errors get the same treatment: the trial
+            // stops heartbeating, so the reaper will fail + re-enqueue it
+            // — superseded work, not a broken study.
+            Err(e)
+                if self.failover.is_some()
+                    && (matches!(e, OptunaError::Conflict(_)) || e.is_transient()) =>
+            {
+                Ok(())
+            }
             other => other,
         }
     }
@@ -913,6 +976,18 @@ impl Study {
                                 self.run_batch(trials, &objective, Some(&registry))
                             });
                         if let Err(e) = result {
+                            if self.failover.is_some() && e.is_transient() {
+                                // storage transiently unreachable past the
+                                // resilience layer's retry budget: return
+                                // the claimed slots and retry the batch.
+                                // The ask paths roll back claims on error,
+                                // and under failover a post-claim failure
+                                // is reaped + re-enqueued, so slots are
+                                // not double-spent.
+                                budget.fetch_add(take, Ordering::SeqCst);
+                                std::thread::sleep(Duration::from_millis(1));
+                                continue;
+                            }
                             // a worker failed: stop draining the budget —
                             // the study is in an error state, running the
                             // remaining trials would mask it
@@ -963,11 +1038,16 @@ impl Study {
         let mut finishes = Vec::with_capacity(trials.len());
         let mut fail_reasons: Vec<(u64, String)> = Vec::new();
         for mut trial in trials {
-            let outcome = match objective(&mut trial) {
-                Ok(v) if v.is_finite() => TrialOutcome::Complete(v),
-                Ok(v) => TrialOutcome::Failed(format!("non-finite objective value {v}")),
-                Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
-                Err(e) => TrialOutcome::Failed(e.to_string()),
+            let outcome = match catch_objective(|| objective(&mut trial)) {
+                Ok(Ok(v)) if v.is_finite() => TrialOutcome::Complete(v),
+                Ok(Ok(v)) => {
+                    TrialOutcome::Failed(format!("non-finite objective value {v}"))
+                }
+                Ok(Err(OptunaError::TrialPruned)) => TrialOutcome::Pruned,
+                Ok(Err(e)) => TrialOutcome::Failed(e.to_string()),
+                Err(panic_msg) => {
+                    TrialOutcome::Failed(format!("objective panicked: {panic_msg}"))
+                }
             };
             match self.outcome_to_finish(&trial, outcome) {
                 Ok((f, reason)) => {
@@ -1043,9 +1123,32 @@ impl Study {
                 scope.spawn(move || self.heartbeat_loop(interval, reg, stop))
             });
             let run: Result<(), OptunaError> = (|| {
+                // under failover, a transiently-unreachable store (past
+                // the resilience layer's own retry budget) pauses the
+                // loop instead of killing it: nothing claimed is lost —
+                // the ask paths roll back on error and stranded peers'
+                // trials go stale and are reaped on a later iteration
+                let transient_pause = |e: OptunaError| -> Result<(), OptunaError> {
+                    if self.failover.is_some() && e.is_transient() {
+                        std::thread::sleep(poll);
+                        Ok(())
+                    } else {
+                        Err(e)
+                    }
+                };
                 loop {
-                    self.reap_stale_trials()?;
-                    match self.ask_capped_registered(target, Some(&registry))? {
+                    if let Err(e) = self.reap_stale_trials() {
+                        transient_pause(e)?;
+                        continue;
+                    }
+                    let asked = match self.ask_capped_registered(target, Some(&registry)) {
+                        Ok(asked) => asked,
+                        Err(e) => {
+                            transient_pause(e)?;
+                            continue;
+                        }
+                    };
+                    match asked {
                         Some(trial) => {
                             self.run_trial(trial, &objective, Some(&registry))?;
                         }
@@ -1054,8 +1157,16 @@ impl Study {
                             // finished work, else wait on peers' trials
                             // (which either finish or go stale and are
                             // reaped on a later iteration)
-                            let trials =
-                                self.storage.get_trials_snapshot(self.study_id)?;
+                            let trials = match self
+                                .storage
+                                .get_trials_snapshot(self.study_id)
+                            {
+                                Ok(trials) => trials,
+                                Err(e) => {
+                                    transient_pause(e)?;
+                                    continue;
+                                }
+                            };
                             let done = trials
                                 .iter()
                                 .filter(|t| {
@@ -1119,21 +1230,34 @@ impl Study {
         F: Fn(&mut Trial<'_>) -> Result<Vec<f64>, OptunaError>,
     {
         let mut trial = self.ask()?;
-        let outcome = match objective(&mut trial) {
-            Ok(vs) if vs.len() != self.n_objectives() => TrialOutcome::Failed(format!(
+        let outcome = match catch_objective(|| objective(&mut trial)) {
+            Ok(Ok(vs)) if vs.len() != self.n_objectives() => TrialOutcome::Failed(format!(
                 "objective returned {} values, study has {} objectives",
                 vs.len(),
                 self.n_objectives()
             )),
-            Ok(vs) if vs.iter().all(|v| v.is_finite()) => TrialOutcome::CompleteValues(vs),
-            Ok(vs) => TrialOutcome::Failed(format!("non-finite objective values {vs:?}")),
-            Err(OptunaError::TrialPruned) => TrialOutcome::Pruned,
-            Err(e) => TrialOutcome::Failed(e.to_string()),
+            Ok(Ok(vs)) if vs.iter().all(|v| v.is_finite()) => {
+                TrialOutcome::CompleteValues(vs)
+            }
+            Ok(Ok(vs)) => {
+                TrialOutcome::Failed(format!("non-finite objective values {vs:?}"))
+            }
+            Ok(Err(OptunaError::TrialPruned)) => TrialOutcome::Pruned,
+            Ok(Err(e)) => TrialOutcome::Failed(e.to_string()),
+            Err(panic_msg) => {
+                TrialOutcome::Failed(format!("objective panicked: {panic_msg}"))
+            }
         };
         match self.tell(trial, outcome) {
             // same policy as run_trial: under failover, a reaped-by-peer
-            // conflict means the work is superseded, not broken
-            Err(OptunaError::Conflict(_)) if self.failover.is_some() => Ok(()),
+            // conflict (or a transiently-unreachable store — the reaper
+            // will supersede the trial) means the work is not broken
+            Err(e)
+                if self.failover.is_some()
+                    && (matches!(e, OptunaError::Conflict(_)) || e.is_transient()) =>
+            {
+                Ok(())
+            }
             other => other,
         }
     }
@@ -2191,5 +2315,73 @@ mod tests {
             })
             .unwrap();
         assert!(study.best_value().unwrap().unwrap() > 0.8);
+    }
+
+    #[test]
+    fn heartbeat_registry_recovers_from_poisoning() {
+        // A thread dying while holding the registry lock must not turn
+        // off heartbeats for the *surviving* workers' trials.
+        let reg = HeartbeatRegistry::new();
+        reg.insert(1);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = reg.trials.lock().unwrap();
+            panic!("worker died mid-registration");
+        }));
+        assert!(poison.is_err());
+        assert!(reg.trials.lock().is_err(), "the mutex really is poisoned");
+        reg.insert(2);
+        reg.remove(1);
+        assert_eq!(reg.ids(), vec![2]);
+    }
+
+    #[test]
+    fn panicking_objective_is_recorded_not_fatal() {
+        let study = Study::builder()
+            .name("panicky")
+            .sampler(Arc::new(RandomSampler::new(5)))
+            .failover(FailoverConfig {
+                heartbeat_interval: Duration::from_millis(5),
+                grace: Duration::from_millis(500),
+                max_retry: 0,
+            })
+            .build()
+            .unwrap();
+        let n = AtomicUsize::new(0);
+        // two of six objective evaluations panic (deterministically, via
+        // the shared counter); the loop — heartbeat ticker included —
+        // must survive them and finish the full budget
+        study
+            .optimize_parallel(6, 2, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                if n.fetch_add(1, Ordering::SeqCst) % 3 == 0 {
+                    panic!("boom at x={x}");
+                }
+                Ok(x)
+            })
+            .unwrap();
+        let trials = study.trials().unwrap();
+        assert_eq!(trials.len(), 6);
+        assert!(
+            trials
+                .iter()
+                .all(|t| !matches!(t.state, TrialState::Running | TrialState::Waiting)),
+            "a panicking objective must not strand its trial"
+        );
+        let failed: Vec<_> =
+            trials.iter().filter(|t| t.state == TrialState::Failed).collect();
+        assert_eq!(failed.len(), 2);
+        for t in &failed {
+            let reason = t.user_attrs.get("fail_reason").expect("panic must be recorded");
+            assert!(reason.contains("objective panicked"), "{reason}");
+            assert!(reason.contains("boom at"), "{reason}");
+        }
+        // the same study object keeps working after the panics
+        study
+            .optimize(2, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(x)
+            })
+            .unwrap();
+        assert_eq!(study.trials().unwrap().len(), 8);
     }
 }

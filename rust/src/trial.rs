@@ -220,10 +220,9 @@ impl TrialApi for Trial<'_> {
         let trials = self.study.storage.get_trials_snapshot(self.study.study_id)?;
         let index = self.study.sync_obs_index()?;
         let Some(me) = trials.iter().find(|t| t.id == self.trial_id) else {
-            return Err(OptunaError::Storage(format!(
-                "trial {} missing from snapshot",
-                self.trial_id
-            )));
+            return Err(OptunaError::Storage(
+                format!("trial {} missing from snapshot", self.trial_id).into(),
+            ));
         };
         let ctx = PruningContext {
             direction: self.study.direction,

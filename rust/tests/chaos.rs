@@ -1,0 +1,257 @@
+//! Chaos suite (ISSUE 7 tentpole): multi-worker fault storms against the
+//! full decorator stack `Cached⟨Resilient⟨FaultInjection⟨backend⟩⟩⟩`.
+//!
+//! The load-bearing claims, each an explicit assertion below:
+//! * under a seeded storm injecting transient errors (plus latency)
+//!   across **all** storage ops, eight `optimize_until` workers still
+//!   finish their exact shared budget with zero stranded trials, and the
+//!   final study state is **fingerprint-identical** to a fault-free run
+//!   (the faults are absorbed, not papered over with lost/extra work);
+//! * the *same* schedule without the resilience layer kills the run —
+//!   the in-test ablation proving the storm has teeth;
+//! * "ambiguous outcome" faults (write lands, ack is lost) are verified
+//!   and absorbed rather than double-applied or surfaced.
+//!
+//! Fingerprints mirror tests/storage_fuzz.rs: everything except
+//! timestamps and heartbeats, with float bit-exactness.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use optuna_rs::core::{FrozenTrial, OptunaError, TrialState};
+use optuna_rs::prelude::*;
+
+const WORKERS: usize = 8;
+const TARGET: u64 = 48;
+
+/// A storm that hits every storage op: ≥5% transient `Busy` injections
+/// (with a 1 ms stall per hit) plus a rarer `Io` layer underneath.
+fn storm_schedule() -> FaultSchedule {
+    FaultSchedule::parse("seed=77;kind=busy,p=0.05,latency-ms=1;kind=io,p=0.02")
+        .expect("storm spec parses")
+}
+
+/// Objective for the fingerprint-identity tests: a pure function of the
+/// trial *number*, plus a user attribute derived from it (one extra
+/// storage write op under the storm). `suggest_*` is deliberately not
+/// used here — `RandomSampler` draws from one shared sequential stream,
+/// so which values land on which trial depends on worker interleaving,
+/// and interleavings differ between a stormy and a fault-free run. With
+/// every recorded field a function of the number, byte-identical final
+/// state across wildly different fault interleavings is well-defined.
+fn pure_objective(t: &mut Trial<'_>) -> Result<f64, OptunaError> {
+    let n = t.number();
+    t.set_user_attr("tag", &format!("n{n}"))?;
+    let x = n as f64 * 0.25 - 5.0;
+    Ok((x - 1.0).powi(2))
+}
+
+/// Objective for the tests that don't compare state across runs: goes
+/// through the define-by-run `suggest_*` path so parameter writes are
+/// also under the storm.
+fn sampled_objective(t: &mut Trial<'_>) -> Result<f64, OptunaError> {
+    let x = t.suggest_float("x", -5.0, 5.0)?;
+    let y = t.suggest_float("y", -5.0, 5.0)?;
+    Ok((x - 1.0).powi(2) + (y + 2.0).powi(2))
+}
+
+/// Everything that must survive a fault storm bit-for-bit: number,
+/// state, values, params, intermediates, attrs. Deliberately excludes
+/// datetimes and heartbeats (wall-clock artifacts).
+fn fingerprint(t: &FrozenTrial) -> String {
+    let params: Vec<String> = t
+        .params
+        .iter()
+        .map(|(k, (d, v))| format!("{k}:{d:?}={:016x}", v.to_bits()))
+        .collect();
+    let inter: Vec<String> = t
+        .intermediate
+        .iter()
+        .map(|(s, v)| format!("{s}={:016x}", v.to_bits()))
+        .collect();
+    let attrs: Vec<String> = t.user_attrs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!(
+        "#{} {} value={:?} values={:?} params=[{}] inter=[{}] attrs=[{}]",
+        t.number,
+        t.state.as_str(),
+        t.value.map(f64::to_bits),
+        t.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        params.join(","),
+        inter.join(","),
+        attrs.join(",")
+    )
+}
+
+fn fingerprints(trials: &[FrozenTrial]) -> Vec<String> {
+    let mut sorted: Vec<&FrozenTrial> = trials.iter().collect();
+    sorted.sort_by_key(|t| t.number);
+    sorted.into_iter().map(fingerprint).collect()
+}
+
+/// Build one worker's study over a shared (possibly fault-injected)
+/// backend: resilience under the snapshot cache, failover with a grace
+/// long enough that nothing is reaped during a healthy run.
+fn worker_study(shared: &Arc<dyn Storage>, name: &str) -> Study {
+    Study::builder()
+        .name(name)
+        .storage(Arc::clone(shared))
+        .sampler(Arc::new(RandomSampler::new(42)))
+        .resilience(
+            ResilienceConfig::new()
+                .retries(8)
+                .backoff(Duration::from_micros(50), Duration::from_millis(2))
+                .jitter_seed(9),
+        )
+        .failover(FailoverConfig {
+            heartbeat_interval: Duration::from_millis(20),
+            grace: Duration::from_secs(60),
+            max_retry: 3,
+        })
+        .build()
+        .expect("study builds through the resilience layer")
+}
+
+/// Run `WORKERS` cooperating `optimize_until` loops over one shared
+/// backend and return the final trial list.
+fn run_workers(
+    shared: Arc<dyn Storage>,
+    name: &str,
+    objective: fn(&mut Trial<'_>) -> Result<f64, OptunaError>,
+) -> Vec<FrozenTrial> {
+    // built sequentially so study creation does not race itself; the
+    // workers then hammer the shared budget concurrently
+    let studies: Vec<Study> = (0..WORKERS).map(|_| worker_study(&shared, name)).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = studies
+            .iter()
+            .map(|study| scope.spawn(move || study.optimize_until(TARGET, objective)))
+            .collect();
+        for h in handles {
+            h.join().expect("worker thread panicked").expect("worker loop survives the storm");
+        }
+    });
+    studies[0].trials().expect("final read")
+}
+
+fn assert_exact_budget(trials: &[FrozenTrial]) {
+    assert_eq!(trials.len() as u64, TARGET, "exact budget, no lost or extra trials");
+    assert!(
+        trials
+            .iter()
+            .all(|t| !matches!(t.state, TrialState::Running | TrialState::Waiting)),
+        "zero stranded trials"
+    );
+    assert!(
+        trials.iter().all(|t| t.state == TrialState::Complete),
+        "a healthy storm run absorbs every fault without failing a trial"
+    );
+    let mut numbers: Vec<u64> = trials.iter().map(|t| t.number).collect();
+    numbers.sort_unstable();
+    assert_eq!(numbers, (0..TARGET).collect::<Vec<u64>>(), "dense unique numbers");
+}
+
+#[test]
+fn fault_storm_is_absorbed_and_state_matches_fault_free_run() {
+    // fault-free reference: same backend type, same objective, no
+    // injection — the ground truth the chaos run must reproduce
+    let clean: Arc<dyn Storage> = Arc::new(InMemoryStorage::new());
+    let reference = run_workers(clean, "chaos-clean", pure_objective);
+    assert_exact_budget(&reference);
+
+    let injected = Arc::new(FaultInjectionStorage::new(
+        Arc::new(InMemoryStorage::new()),
+        storm_schedule(),
+    ));
+    let stormy =
+        run_workers(Arc::clone(&injected) as Arc<dyn Storage>, "chaos-storm", pure_objective);
+    assert_exact_budget(&stormy);
+    assert!(
+        injected.injected() > 0,
+        "the storm must actually fire (otherwise this test proves nothing)"
+    );
+    assert_eq!(
+        fingerprints(&stormy),
+        fingerprints(&reference),
+        "final state must be fingerprint-identical to the fault-free run"
+    );
+}
+
+#[test]
+fn same_storm_without_resilience_kills_the_run() {
+    // ablation: identical schedule, identical backend, but no retry
+    // layer and no failover — the first injected error that hits an
+    // ask/tell path must surface and abort the loop
+    let injected = Arc::new(FaultInjectionStorage::new(
+        Arc::new(InMemoryStorage::new()),
+        storm_schedule(),
+    ));
+    // the storm may fire anywhere — study creation included — so the
+    // whole unprotected lifecycle is under the assertion
+    let outcome = Study::builder()
+        .name("chaos-bare")
+        .storage(Arc::clone(&injected) as Arc<dyn Storage>)
+        .sampler(Arc::new(RandomSampler::new(42)))
+        .build()
+        .and_then(|study| study.optimize_until(TARGET, sampled_objective));
+    let err =
+        outcome.expect_err("an unprotected run through a transient storm must die");
+    assert!(err.is_transient(), "the storm injects transient kinds only: {err}");
+    assert!(injected.injected() > 0);
+}
+
+#[test]
+fn ambiguous_finish_faults_do_not_lose_or_double_apply_work() {
+    // mode=after: the backend finish *lands*, then the ack is eaten —
+    // the retry hits a double-finish Conflict which the resilience
+    // layer must verify against the stored state and absorb
+    let schedule = FaultSchedule::parse("seed=5;op=finish_trial,kind=io,p=0.3,mode=after")
+        .expect("ambiguous spec parses");
+    let injected = Arc::new(FaultInjectionStorage::new(
+        Arc::new(InMemoryStorage::new()),
+        schedule,
+    ));
+    let stormy = run_workers(
+        Arc::clone(&injected) as Arc<dyn Storage>,
+        "chaos-ambiguous",
+        pure_objective,
+    );
+    assert_exact_budget(&stormy);
+    assert!(injected.injected() > 0, "the ambiguous faults must actually fire");
+
+    // and the landed values are exactly the fault-free ones: nothing was
+    // re-finished with different data or dropped on the floor
+    let clean: Arc<dyn Storage> = Arc::new(InMemoryStorage::new());
+    let reference = run_workers(clean, "chaos-ambiguous-clean", pure_objective);
+    assert_eq!(fingerprints(&stormy), fingerprints(&reference));
+}
+
+#[test]
+fn chaos_survives_on_the_journal_backend_too() {
+    // smaller storm over the durable backend: the same invariants must
+    // hold when every op round-trips through the journal's file locking
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("optuna-chaos-{}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let journal = JournalStorage::open(&path).expect("open journal");
+        let injected = Arc::new(FaultInjectionStorage::new(
+            Arc::new(journal),
+            FaultSchedule::parse("seed=13;kind=busy,p=0.05").expect("spec parses"),
+        ));
+        let study = worker_study(&(Arc::clone(&injected) as Arc<dyn Storage>), "chaos-journal");
+        study
+            .optimize_until(16, sampled_objective)
+            .expect("journal worker survives the storm");
+        let trials = study.trials().expect("final read");
+        assert_eq!(trials.len(), 16);
+        assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+    }
+    // a fresh handle replays the journal to the same healthy state
+    let reopened = JournalStorage::open(&path).expect("reopen journal");
+    let sid = reopened.get_study_id("chaos-journal").expect("lookup").expect("study exists");
+    let trials = reopened.get_all_trials(sid).expect("read back");
+    assert_eq!(trials.len(), 16);
+    assert!(trials.iter().all(|t| t.state == TrialState::Complete));
+    drop(reopened);
+    let _ = std::fs::remove_file(&path);
+}

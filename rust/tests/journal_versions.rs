@@ -145,9 +145,10 @@ fn crc_corruption_aborts_with_typed_error_naming_offset() {
         Ok(_) => panic!("CRC corruption must abort the open"),
     };
     match &err {
-        OptunaError::Storage(msg) => {
-            assert!(msg.contains("CRC mismatch"), "{msg}");
-            assert!(msg.contains(&format!("byte offset {second}")), "{msg}");
+        OptunaError::Storage(e) => {
+            assert!(e.message.contains("CRC mismatch"), "{e}");
+            assert!(e.message.contains(&format!("byte offset {second}")), "{e}");
+            assert!(!e.is_transient(), "file damage must be permanent");
         }
         other => panic!("expected OptunaError::Storage, got {other:?}"),
     }
@@ -161,9 +162,10 @@ fn crc_corruption_aborts_with_typed_error_naming_offset() {
         Ok(_) => panic!("length corruption must abort the open"),
     };
     match &err {
-        OptunaError::Storage(msg) => {
-            assert!(msg.contains("length check failed"), "{msg}");
-            assert!(msg.contains(&format!("byte offset {second}")), "{msg}");
+        OptunaError::Storage(e) => {
+            assert!(e.message.contains("length check failed"), "{e}");
+            assert!(e.message.contains(&format!("byte offset {second}")), "{e}");
+            assert!(!e.is_transient(), "file damage must be permanent");
         }
         other => panic!("expected OptunaError::Storage, got {other:?}"),
     }
