@@ -39,11 +39,9 @@
 //! discipline) — the CLI face of `benches/fig_throughput.rs`.
 
 use crate::core::{OptunaError, StudyDirection, TrialState};
-use crate::multi::{hypervolume, to_losses, NsgaIiSampler};
-use crate::pruner::{AshaPruner, HyperbandPruner, MedianPruner, NopPruner, Pruner};
-use crate::sampler::{
-    CmaEsSampler, GpSampler, RandomSampler, RfSampler, Sampler, TpeCmaEsSampler, TpeSampler,
-};
+use crate::multi::{hypervolume, to_losses};
+use crate::pruner::Pruner;
+use crate::sampler::Sampler;
 use crate::storage::{
     now_ms, FaultInjectionStorage, FaultSchedule, InMemoryStorage, JournalFormat,
     JournalOptions, JournalStorage, ResilienceConfig, SingleMutexStorage, Storage, TrialFinish,
@@ -97,9 +95,10 @@ fn usage() -> String {
      --storage <memory:|journal://PATH|journal+bin://PATH> --study NAME \
      [--auto-compact-mb N] [--format lines|binary] \
      [--direction minimize|maximize] [--directions minimize,maximize,..] \
-     [--sampler random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2] \
-     [--pruner none|asha|median|hyperband] [--trials N] [--seed N] \
-     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate|zdt1|zdt2|dtlz2] [--out FILE] \
+     [--sampler SPEC: random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2, e.g. 'tpe:group=true,n_startup=20'] \
+     [--pruner SPEC: none|asha|median|percentile|sync-sh|hyperband, \
+      e.g. 'hyperband:min_resource=1,max_resource=81,reduction=3'] [--trials N] [--seed N] \
+     [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate|zdt1|zdt2|dtlz2|czdt1|acclat] [--out FILE] \
      [--ref V0,V1,..] \
      [--heartbeat-ms N] [--grace-ms N] [--max-retry N] [--trial-sleep-ms N] \
      [--workers N] [--kill-one true] [--timeout-ms N] \
@@ -211,27 +210,19 @@ fn parse_auto_compact(args: &Args) -> Result<Option<u64>, String> {
     }
 }
 
-pub fn make_sampler(kind: &str, seed: u64) -> Result<Arc<dyn Sampler>, String> {
-    Ok(match kind {
-        "random" => Arc::new(RandomSampler::new(seed)),
-        "tpe" => Arc::new(TpeSampler::new(seed)),
-        "cmaes" => Arc::new(CmaEsSampler::new(seed)),
-        "tpe+cmaes" => Arc::new(TpeCmaEsSampler::new(seed)),
-        "gp" => Arc::new(GpSampler::new(seed)),
-        "rf" => Arc::new(RfSampler::new(seed)),
-        "nsga2" => Arc::new(NsgaIiSampler::new(seed)),
-        other => return Err(format!("unknown sampler '{other}'")),
-    })
+/// Resolve `--sampler` through the process-global algorithm registry.
+/// Accepts bare names (`tpe`) and full spec strings
+/// (`tpe:group=true,n_startup=20`, `nsga2:population=40,constraints=true`);
+/// unknown names error with the list of registered ones.
+pub fn make_sampler(spec: &str, seed: u64) -> Result<Arc<dyn Sampler>, String> {
+    crate::registry::make_sampler(spec, seed)
 }
 
-pub fn make_pruner(kind: &str) -> Result<Arc<dyn Pruner>, String> {
-    Ok(match kind {
-        "none" => Arc::new(NopPruner),
-        "asha" => Arc::new(AshaPruner::new()),
-        "median" => Arc::new(MedianPruner::new()),
-        "hyperband" => Arc::new(HyperbandPruner::new(3, 1, 4)),
-        other => return Err(format!("unknown pruner '{other}'")),
-    })
+/// Resolve `--pruner` through the registry; same spec grammar as
+/// [`make_sampler`] (`asha:reduction=3`,
+/// `hyperband:min_resource=1,max_resource=81,reduction=3`, ...).
+pub fn make_pruner(spec: &str, seed: u64) -> Result<Arc<dyn Pruner>, String> {
+    crate::registry::make_pruner(spec, seed)
 }
 
 /// Parse the failover flags. `default`: policy applied when the command
@@ -377,7 +368,7 @@ fn build_study(
         .directions(&directions)
         .storage(storage)
         .sampler(make_sampler(&args.get_or("sampler", "tpe"), seed)?)
-        .pruner(make_pruner(&args.get_or("pruner", "none"))?);
+        .pruner(make_pruner(&args.get_or("pruner", "none"), seed)?);
     if let Some(cfg) = parse_failover(args, failover_default)? {
         builder = builder.failover(cfg);
     }
@@ -439,11 +430,23 @@ fn run_workload(study: &Study, workload: &str, n_trials: usize) -> Result<(), Op
 /// A boxed multi-objective CLI objective.
 type MooObjective = Box<dyn Fn(&mut Trial<'_>) -> Result<Vec<f64>, OptunaError> + Send + Sync>;
 
-/// Multi-objective workloads (the evalset MOO table): `None` when the
-/// workload is single-objective. Returns the objective, its arity, and
-/// the function's hypervolume reference point.
+/// Multi-objective workloads (the evalset MOO table plus the
+/// constrained cmoo table): `None` when the workload is
+/// single-objective. Returns the objective, its arity, and the
+/// function's hypervolume reference point. Constrained workloads report
+/// their constraint vectors from inside the objective, so the optimize
+/// command's front/hypervolume reporting is feasibility-aware with no
+/// extra flags.
 fn moo_workload_objective(workload: &str) -> Option<(MooObjective, usize, Vec<f64>)> {
-    let f = crate::workloads::evalset::moo_functions()
+    if let Some(f) = crate::workloads::evalset::moo_functions()
+        .into_iter()
+        .find(|f| f.name == workload)
+    {
+        let (n_obj, ref_point) = (f.n_obj, f.ref_point.clone());
+        let objective: MooObjective = Box::new(move |t: &mut Trial<'_>| f.objective(t));
+        return Some((objective, n_obj, ref_point));
+    }
+    let f = crate::workloads::evalset::cmoo_functions()
         .into_iter()
         .find(|f| f.name == workload)?;
     let (n_obj, ref_point) = (f.n_obj, f.ref_point.clone());
@@ -1087,8 +1090,30 @@ mod tests {
         assert!(Args::parse(&argv(&["optimize", "--trials"])).is_err());
         assert!(run_inner(&argv(&["bogus-cmd"])).is_err());
         assert!(open_storage("redis://x").is_err());
-        assert!(make_sampler("genetic", 0).is_err());
-        assert!(make_pruner("oracle").is_err());
+        // unknown algorithm names enumerate what IS registered
+        let err = make_sampler("genetic", 0).unwrap_err();
+        assert!(err.contains("unknown sampler 'genetic'"), "{err}");
+        for name in ["random", "tpe", "cmaes", "tpe+cmaes", "gp", "rf", "nsga2"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        let err = make_pruner("oracle", 0).unwrap_err();
+        assert!(err.contains("unknown pruner 'oracle'"), "{err}");
+        for name in ["none", "asha", "median", "percentile", "sync-sh", "hyperband"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        // spec strings with real knobs resolve through the same path
+        assert_eq!(make_sampler("tpe:group=true,n_startup=20", 0).unwrap().name(), "tpe");
+        assert_eq!(
+            make_pruner("hyperband:min_resource=1,max_resource=81,reduction=3", 0)
+                .unwrap()
+                .name(),
+            "hyperband"
+        );
+        // malformed knobs are loud, naming the offending key
+        let err = make_sampler("tpe:gamma=zero", 0).unwrap_err();
+        assert!(err.contains("gamma"), "{err}");
+        let err = make_pruner("asha:bogus=1", 0).unwrap_err();
+        assert!(err.contains("bogus"), "{err}");
     }
 
     #[test]
@@ -1173,6 +1198,44 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("minimizes every objective"), "{err}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn constrained_workload_cli_flow() {
+        let url = tmp_journal("cmoo");
+        run_inner(&argv(&[
+            "create-study", "--storage", &url, "--study", "c1",
+            "--directions", "minimize,minimize",
+        ]))
+        .unwrap();
+        // spec-string sampler + constrained workload through the journal
+        // backend: constraints persist, so the reported front is the
+        // feasibility-aware one
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "c1", "--trials", "30",
+            "--workload", "czdt1", "--sampler", "nsga2:population=8,constraints=true",
+            "--seed", "9",
+        ]))
+        .unwrap();
+        assert!(out.contains("pareto front ="), "{out}");
+        // every front member replayed from the journal must be feasible:
+        // with 30 random-ish trials on czdt1 some feasible completion
+        // exists (70% of the space is feasible), and Deb's rules then
+        // exclude every infeasible point from the front
+        let storage = open_storage(&url).unwrap();
+        let study = crate::study::Study::builder()
+            .name("c1")
+            .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+            .storage(storage)
+            .build()
+            .unwrap();
+        let front = study.best_trials().unwrap();
+        assert!(!front.is_empty());
+        for t in &front {
+            assert!(!t.constraints.is_empty(), "constraints must persist via journal");
+            assert!(t.is_feasible(), "trial {} on the front is infeasible", t.number);
+        }
         std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
     }
 

@@ -44,6 +44,13 @@ pub struct FrozenTrial {
     /// period — the crashed-worker story the paper's Fig 7 architecture
     /// otherwise lacks.
     pub last_heartbeat: Option<u64>,
+    /// Constraint values reported by `Trial::report_constraints`, ordered
+    /// by constraint index. A value `<= 0` means the constraint is
+    /// satisfied; positive values measure violation (Deb's rules in
+    /// `multi::dominance` compare infeasible trials by total violation).
+    /// Empty for trials that never reported constraints — such trials are
+    /// treated as feasible, so unconstrained studies are unaffected.
+    pub constraints: Vec<f64>,
 }
 
 impl FrozenTrial {
@@ -60,7 +67,26 @@ impl FrozenTrial {
             datetime_start: None,
             datetime_complete: None,
             last_heartbeat: None,
+            constraints: Vec::new(),
         }
+    }
+
+    /// Whether every reported constraint is satisfied (`c <= 0`). Trials
+    /// with no constraints are feasible; a NaN constraint value is
+    /// *infeasible* (a diverged constraint evaluation must not smuggle the
+    /// trial into the feasible set).
+    pub fn is_feasible(&self) -> bool {
+        self.constraints.iter().all(|&c| c <= 0.0)
+    }
+
+    /// Total constraint violation: `Σ max(0, c_i)`. Zero iff feasible; a
+    /// NaN constraint contributes +∞ (worst possible — mirrors
+    /// [`FrozenTrial::is_feasible`]).
+    pub fn total_violation(&self) -> f64 {
+        self.constraints
+            .iter()
+            .map(|&c| if c.is_nan() { f64::INFINITY } else { c.max(0.0) })
+            .sum()
     }
 
     /// The trial's objective vector: `values` when a vector was recorded,
@@ -199,6 +225,24 @@ mod tests {
         t.set_values(&[]);
         assert_eq!(t.value, None);
         assert!(t.objective_values().is_empty());
+    }
+
+    #[test]
+    fn feasibility_and_violation() {
+        let mut t = FrozenTrial::new(0, 0);
+        // no constraints reported => feasible, zero violation
+        assert!(t.is_feasible());
+        assert_eq!(t.total_violation(), 0.0);
+        t.constraints = vec![-1.0, 0.0];
+        assert!(t.is_feasible());
+        assert_eq!(t.total_violation(), 0.0);
+        t.constraints = vec![-1.0, 0.5, 2.0];
+        assert!(!t.is_feasible());
+        assert_eq!(t.total_violation(), 2.5);
+        // NaN constraint: infeasible with infinite violation
+        t.constraints = vec![-1.0, f64::NAN];
+        assert!(!t.is_feasible());
+        assert_eq!(t.total_violation(), f64::INFINITY);
     }
 
     #[test]

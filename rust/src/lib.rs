@@ -70,6 +70,7 @@ pub mod dashboard;
 pub mod mlmodel;
 pub mod multi;
 pub mod pruner;
+pub mod registry;
 pub mod runtime;
 pub mod sampler;
 pub mod storage;

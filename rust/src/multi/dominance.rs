@@ -25,6 +25,36 @@ pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     strictly_better
 }
 
+/// Total violation of a constraint vector: `Σ max(0, c_i)`, with NaN
+/// components counting as +∞ (a diverged constraint evaluation is the
+/// worst possible outcome, mirroring NaN losses under [`nan_max_cmp`]).
+/// Zero iff the vector is feasible; empty vectors are feasible.
+pub fn total_violation(constraints: &[f64]) -> f64 {
+    constraints
+        .iter()
+        .map(|&c| if c.is_nan() { f64::INFINITY } else { c.max(0.0) })
+        .sum()
+}
+
+/// Constrained dominance — Deb's rules (Deb et al. 2002 §VI):
+///
+/// 1. a feasible solution dominates any infeasible one;
+/// 2. two infeasible solutions are compared by total violation alone
+///    (smaller dominates);
+/// 3. two feasible solutions fall back to Pareto [`dominates`].
+///
+/// `a_viol`/`b_viol` are [`total_violation`] values (0 = feasible).
+pub fn dominates_constrained(a: &[f64], a_viol: f64, b: &[f64], b_viol: f64) -> bool {
+    let a_feasible = a_viol <= 0.0;
+    let b_feasible = b_viol <= 0.0;
+    match (a_feasible, b_feasible) {
+        (true, false) => true,
+        (false, true) => false,
+        (false, false) => a_viol < b_viol,
+        (true, true) => dominates(a, b),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,5 +83,30 @@ mod tests {
         // equal NaNs compare equal: the finite objective decides
         assert!(dominates(&[1.0, f64::NAN], &[2.0, f64::NAN]));
         assert!(!dominates(&[f64::NAN, f64::NAN], &[f64::NAN, f64::NAN]));
+    }
+
+    #[test]
+    fn violation_sums_positive_parts() {
+        assert_eq!(total_violation(&[]), 0.0);
+        assert_eq!(total_violation(&[-3.0, 0.0]), 0.0);
+        assert_eq!(total_violation(&[-3.0, 1.0, 0.5]), 1.5);
+        assert_eq!(total_violation(&[f64::NAN]), f64::INFINITY);
+    }
+
+    #[test]
+    fn deb_rules() {
+        // rule 1: any feasible beats any infeasible, regardless of losses
+        assert!(dominates_constrained(&[9.0, 9.0], 0.0, &[1.0, 1.0], 0.1));
+        assert!(!dominates_constrained(&[1.0, 1.0], 0.1, &[9.0, 9.0], 0.0));
+        // rule 2: infeasible vs infeasible — violation only
+        assert!(dominates_constrained(&[9.0, 9.0], 0.1, &[1.0, 1.0], 0.2));
+        assert!(!dominates_constrained(&[1.0, 1.0], 0.2, &[9.0, 9.0], 0.1));
+        assert!(!dominates_constrained(&[1.0, 1.0], 0.2, &[9.0, 9.0], 0.2));
+        // rule 3: feasible vs feasible — plain Pareto
+        assert!(dominates_constrained(&[1.0, 1.0], 0.0, &[2.0, 2.0], 0.0));
+        assert!(!dominates_constrained(&[1.0, 3.0], 0.0, &[2.0, 2.0], 0.0));
+        // NaN violation never dominates, is dominated by feasible
+        assert!(dominates_constrained(&[9.0], 0.0, &[1.0], f64::NAN));
+        assert!(!dominates_constrained(&[1.0], f64::NAN, &[9.0], 0.1));
     }
 }

@@ -7,15 +7,20 @@
 //!
 //! * [`dominance`] — Pareto dominance over direction-normalized losses,
 //!   NaN-safe via [`crate::util::stats::nan_max_cmp`] (a diverged
-//!   objective ranks worst, it never panics a comparison);
+//!   objective ranks worst, it never panics a comparison), plus Deb's
+//!   constrained dominance ([`dominates_constrained`]: feasible beats
+//!   infeasible, infeasible compared by [`total_violation`]);
 //! * [`nds`] — fast nondominated sorting (Deb's domination-count
 //!   algorithm, O(M·N²)) and crowding distance, the selection machinery
-//!   of NSGA-II and of [`crate::study::Study::best_trials`];
-//! * [`NsgaIiSampler`] — constraint-free NSGA-II as a drop-in
+//!   of NSGA-II and of [`crate::study::Study::best_trials`], with a
+//!   constraint-aware variant ([`nondominated_sort_constrained`]);
+//! * [`NsgaIiSampler`] — NSGA-II as a drop-in
 //!   [`crate::sampler::Sampler`]: binary tournament selection on
 //!   (rank, crowding), simulated-binary crossover and polynomial mutation
 //!   over the intersection search space, falling back to uniform random
-//!   sampling until `population_size` trials have completed;
+//!   sampling until `population_size` trials have completed; with
+//!   [`NsgaIiConfig::constraints`] set, selection runs under Deb's rules
+//!   over `Trial::report_constraints` values;
 //! * [`hypervolume()`] — exact hypervolume indicator for
 //!   1–3 objectives (sweep for d=2, slicing over the third axis for
 //!   d=3), the quality number `BENCH_moo.json` tracks and
@@ -32,9 +37,9 @@ pub mod hypervolume;
 pub mod nds;
 mod nsga2;
 
-pub use dominance::dominates;
+pub use dominance::{dominates, dominates_constrained, total_violation};
 pub use hypervolume::hypervolume;
-pub use nds::{crowding_distance, nondominated_sort};
+pub use nds::{crowding_distance, nondominated_sort, nondominated_sort_constrained};
 pub use nsga2::{NsgaIiConfig, NsgaIiSampler};
 
 use crate::core::StudyDirection;

@@ -3,7 +3,7 @@
 
 use std::cmp::Ordering;
 
-use crate::multi::dominance::dominates;
+use crate::multi::dominance::{dominates, dominates_constrained};
 use crate::util::stats::nan_max_cmp;
 
 /// Partition loss vectors into Pareto fronts: `fronts[0]` is the
@@ -16,7 +16,26 @@ use crate::util::stats::nan_max_cmp;
 /// (see [`crate::multi::to_losses`]) and NaN-safe per the dominance
 /// comparator.
 pub fn nondominated_sort(losses: &[Vec<f64>]) -> Vec<Vec<usize>> {
-    let n = losses.len();
+    sort_by_dominance(losses.len(), |i, j| dominates(&losses[i], &losses[j]))
+}
+
+/// [`nondominated_sort`] under Deb's constrained dominance:
+/// `violations[i]` is the [`crate::multi::total_violation`] of trial `i`
+/// (0 = feasible). When feasible solutions exist, front 0 is drawn from
+/// them exclusively — every infeasible solution is dominated by rule 1.
+pub fn nondominated_sort_constrained(
+    losses: &[Vec<f64>],
+    violations: &[f64],
+) -> Vec<Vec<usize>> {
+    debug_assert_eq!(losses.len(), violations.len());
+    sort_by_dominance(losses.len(), |i, j| {
+        dominates_constrained(&losses[i], violations[i], &losses[j], violations[j])
+    })
+}
+
+/// Deb's domination-count front peeling over an arbitrary dominance
+/// relation (must be a strict partial order — irreflexive, transitive).
+fn sort_by_dominance(n: usize, dom: impl Fn(usize, usize) -> bool) -> Vec<Vec<usize>> {
     if n == 0 {
         return Vec::new();
     }
@@ -25,10 +44,10 @@ pub fn nondominated_sort(losses: &[Vec<f64>]) -> Vec<Vec<usize>> {
     let mut count = vec![0usize; n];
     for i in 0..n {
         for j in (i + 1)..n {
-            if dominates(&losses[i], &losses[j]) {
+            if dom(i, j) {
                 dominated[i].push(j);
                 count[j] += 1;
-            } else if dominates(&losses[j], &losses[i]) {
+            } else if dom(j, i) {
                 dominated[j].push(i);
                 count[i] += 1;
             }
@@ -161,6 +180,51 @@ mod tests {
         assert_eq!(rank_crowding_cmp(1, 0.5, 1, 0.2), Ordering::Less, "lonelier wins ties");
         assert_eq!(rank_crowding_cmp(1, 0.2, 1, 0.5), Ordering::Greater);
         assert_eq!(rank_crowding_cmp(2, f64::INFINITY, 2, 1.0), Ordering::Less);
+    }
+
+    #[test]
+    fn constrained_sort_front0_is_feasible() {
+        // three feasible (one dominated), two infeasible with different
+        // violations — fronts must be: feasible nondominated, dominated
+        // feasible, then infeasible by ascending violation
+        let losses = vec![
+            vec![1.0, 4.0], // feasible, front 0
+            vec![4.0, 1.0], // feasible, front 0
+            vec![5.0, 5.0], // feasible but dominated -> front 1
+            vec![0.0, 0.0], // best losses but violation 2.0 -> front 3
+            vec![9.0, 9.0], // violation 1.0 -> front 2
+        ];
+        let viol = vec![0.0, 0.0, 0.0, 2.0, 1.0];
+        let fronts = nondominated_sort_constrained(&losses, &viol);
+        let mut f0 = fronts[0].clone();
+        f0.sort_unstable();
+        assert_eq!(f0, vec![0, 1]);
+        assert_eq!(fronts[1], vec![2]);
+        assert_eq!(fronts[2], vec![4]);
+        assert_eq!(fronts[3], vec![3], "great losses cannot rescue infeasibility");
+    }
+
+    #[test]
+    fn constrained_sort_all_feasible_matches_plain() {
+        let losses = vec![
+            vec![1.0, 4.0],
+            vec![3.0, 3.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+        ];
+        let viol = vec![0.0; 4];
+        assert_eq!(
+            nondominated_sort_constrained(&losses, &viol),
+            nondominated_sort(&losses)
+        );
+    }
+
+    #[test]
+    fn constrained_sort_all_infeasible_orders_by_violation() {
+        let losses = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let viol = vec![3.0, 1.0, 2.0];
+        let fronts = nondominated_sort_constrained(&losses, &viol);
+        assert_eq!(fronts, vec![vec![1], vec![2], vec![0]]);
     }
 
     /// ISSUE 4 property: front 0 is mutually nondominated, and every

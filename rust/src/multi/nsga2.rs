@@ -1,4 +1,5 @@
-//! NSGA-II (Deb et al. 2002) as a drop-in [`Sampler`] — constraint-free.
+//! NSGA-II (Deb et al. 2002) as a drop-in [`Sampler`], optionally with
+//! Deb's constrained dominance ([`NsgaIiConfig::constraints`]).
 //!
 //! Ask-time flow: the relative search space is the intersection space
 //! over completed trials (the same inference CMA-ES/GP use, §3.1). Once
@@ -19,7 +20,9 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::core::{Distribution, FrozenTrial, TrialState};
-use crate::multi::nds::{crowding_distance, nondominated_sort, rank_crowding_cmp};
+use crate::multi::nds::{
+    crowding_distance, nondominated_sort, nondominated_sort_constrained, rank_crowding_cmp,
+};
 use crate::multi::to_losses;
 use crate::sampler::{
     intersection_search_space_ctx, RandomSampler, Sampler, SearchSpace, StudyContext,
@@ -41,6 +44,13 @@ pub struct NsgaIiConfig {
     pub mutation_prob: Option<f64>,
     /// Polynomial-mutation distribution index η_m.
     pub eta_mutation: f64,
+    /// Feasibility-aware selection (Deb's constrained dominance over
+    /// `Trial::report_constraints` values): feasible trials dominate
+    /// infeasible ones, infeasible trials are ranked by total violation.
+    /// Off by default — unconstrained studies are byte-identical to the
+    /// pre-constraints sampler (trials without constraints are feasible
+    /// with zero violation, making the two sorts agree anyway).
+    pub constraints: bool,
 }
 
 impl Default for NsgaIiConfig {
@@ -51,6 +61,7 @@ impl Default for NsgaIiConfig {
             eta_crossover: 20.0,
             mutation_prob: None,
             eta_mutation: 20.0,
+            constraints: false,
         }
     }
 }
@@ -73,26 +84,74 @@ impl NsgaIiSampler {
         NsgaIiSampler { cfg, rng: Mutex::new(Pcg64::new(seed)) }
     }
 
+    /// Registry constructor (spec `nsga2:population=12,constraints=true`).
+    /// Knobs: `population`, `crossover`, `eta_crossover`, `mutation`,
+    /// `eta_mutation`, `constraints`.
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut c = NsgaIiConfig::default();
+        if let Some(v) = cfg.get_usize("population")? {
+            if v < 2 {
+                return Err(format!("population must be >= 2, got {v}"));
+            }
+            c.population_size = v;
+        }
+        if let Some(v) = cfg.get_f64("crossover")? {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("crossover must be a probability in [0, 1], got {v}"));
+            }
+            c.crossover_prob = v;
+        }
+        if let Some(v) = cfg.get_f64("eta_crossover")? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("eta_crossover must be positive, got {v}"));
+            }
+            c.eta_crossover = v;
+        }
+        if let Some(v) = cfg.get_f64("mutation")? {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("mutation must be a probability in [0, 1], got {v}"));
+            }
+            c.mutation_prob = Some(v);
+        }
+        if let Some(v) = cfg.get_f64("eta_mutation")? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("eta_mutation must be positive, got {v}"));
+            }
+            c.eta_mutation = v;
+        }
+        if let Some(v) = cfg.get_bool("constraints")? {
+            c.constraints = v;
+        }
+        Ok(Self::with_config(seed, c))
+    }
+
     /// Completed trials comparable under this study's objectives: full
     /// objective vector of the right arity and a value for every
     /// parameter of the intersection space (guaranteed for completed
-    /// trials by the intersection inference itself).
+    /// trials by the intersection inference itself). The third element is
+    /// each member's total constraint violation (all zero when the study
+    /// never reports constraints).
     fn population<'a>(
         ctx: &'a StudyContext<'_>,
         n_obj: usize,
-    ) -> (Vec<&'a FrozenTrial>, Vec<Vec<f64>>) {
+    ) -> (Vec<&'a FrozenTrial>, Vec<Vec<f64>>, Vec<f64>) {
         let directions = ctx.directions();
         let mut pop = Vec::new();
         let mut losses = Vec::new();
+        let mut violations = Vec::new();
         for t in ctx.trials.iter().filter(|t| t.state == TrialState::Complete) {
             let values = t.objective_values();
             if values.len() != n_obj {
                 continue;
             }
             losses.push(to_losses(&values, directions));
+            violations.push(t.total_violation());
             pop.push(t);
         }
-        (pop, losses)
+        (pop, losses, violations)
     }
 }
 
@@ -149,13 +208,17 @@ impl Sampler for NsgaIiSampler {
         space: &SearchSpace,
     ) -> BTreeMap<String, f64> {
         let n_obj = ctx.directions().len();
-        let (pop, losses) = Self::population(ctx, n_obj);
+        let (pop, losses, violations) = Self::population(ctx, n_obj);
         if pop.len() < self.cfg.population_size || space.is_empty() {
             return BTreeMap::new(); // random warm-up via sample_independent
         }
         // elite selection: fill from successive fronts, truncating the
         // last one by descending crowding distance
-        let fronts = nondominated_sort(&losses);
+        let fronts = if self.cfg.constraints {
+            nondominated_sort_constrained(&losses, &violations)
+        } else {
+            nondominated_sort(&losses)
+        };
         let mut rank = vec![0usize; pop.len()];
         let mut crowd = vec![0.0f64; pop.len()];
         let mut elite: Vec<usize> = Vec::with_capacity(self.cfg.population_size);
@@ -346,6 +409,44 @@ mod tests {
         let space = s.infer_relative_search_space(&ctx);
         let child = s.sample_relative(&ctx, 5, &space);
         assert_eq!(child.len(), 2, "4 comparable trials = population_size, breeding starts");
+    }
+
+    #[test]
+    fn constrained_selection_breeds_from_feasible_parents() {
+        // Half the population sits at the (infeasible) loss optimum near
+        // x=y=0.05, half at the feasible region near x=y=0.9. The
+        // constraint-aware sampler's elite is all-feasible, so children
+        // cluster high; the blind sampler breeds from the low cluster.
+        let mut trials = Vec::new();
+        let mut rng = Pcg64::new(3);
+        for i in 0..8 {
+            let (base, viol) = if i % 2 == 0 { (0.05, 1.0) } else { (0.9, -1.0) };
+            let x = base + rng.uniform_range(0.0, 0.05);
+            let y = base + rng.uniform_range(0.0, 0.05);
+            let mut t = multi_trial(i, x, y, &[x, y]);
+            t.constraints = vec![viol];
+            trials.push(t);
+        }
+        let dirs = dirs2();
+        let run = |constraints: bool| -> f64 {
+            let s = NsgaIiSampler::with_config(
+                7,
+                NsgaIiConfig { population_size: 4, constraints, ..Default::default() },
+            );
+            let ctx =
+                StudyContext::new(StudyDirection::Minimize, &trials).with_directions(&dirs);
+            let space = s.infer_relative_search_space(&ctx);
+            let mut sum = 0.0;
+            for n in 0..40 {
+                let child = s.sample_relative(&ctx, n, &space);
+                sum += child["x"] + child["y"];
+            }
+            sum / 80.0 // mean coordinate over 40 children
+        };
+        let aware = run(true);
+        let blind = run(false);
+        assert!(aware > 0.6, "aware children should sit in the feasible cluster: {aware}");
+        assert!(blind < 0.4, "blind children chase the infeasible optimum: {blind}");
     }
 
     #[test]

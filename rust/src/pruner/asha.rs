@@ -48,6 +48,20 @@ impl AshaPruner {
         }
     }
 
+    /// Registry constructor (spec `asha:min_resource=2,reduction=3,s=1`).
+    pub fn from_config(cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        let min_resource = cfg.get_u64("min_resource")?.unwrap_or(1);
+        if min_resource < 1 {
+            return Err("min_resource must be >= 1".into());
+        }
+        let reduction = cfg.get_u64("reduction")?.unwrap_or(4);
+        if reduction < 2 {
+            return Err(format!("reduction must be >= 2, got {reduction}"));
+        }
+        let s = cfg.get_u64("s")?.unwrap_or(0);
+        Ok(Self::with_params(min_resource, reduction, s))
+    }
+
     /// Line 1: current rung of a step.
     pub fn rung_of(&self, step: u64) -> u64 {
         let ratio = step as f64 / self.min_resource as f64;

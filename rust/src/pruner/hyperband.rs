@@ -1,30 +1,127 @@
-//! Hyperband pruner (Li et al. 2018) — extension feature: a portfolio of
-//! ASHA brackets with different early-stopping rates, so aggressive and
-//! conservative halving schedules hedge each other.
+//! Hyperband pruner (Li et al. 2018) — a portfolio of ASHA brackets with
+//! different early-stopping rates, so aggressive and conservative halving
+//! schedules hedge each other.
+//!
+//! Bracket `b` runs SuccessiveHalving with `min_early_stopping_rate = b`:
+//! `b = 0` starts pruning at the very first rung (aggressive, cheap per
+//! trial), larger `b` delays the first rung by η^b steps (conservative,
+//! expensive per trial). Each trial is assigned to one bracket by a
+//! deterministic hash of its number, weighted by the Hyperband paper's
+//! per-bracket configuration counts `n_s = ⌈(s_max+1)/(s+1) · η^s⌉` with
+//! `s = s_max − b` — the aggressive bracket hosts the most trials because
+//! each of its trials consumes the least expected resource. Hashing (not
+//! round-robin) keeps the allocation stable under out-of-order trial
+//! creation across distributed workers and makes bracket membership a
+//! pure function of the trial number.
+//!
+//! The per-bracket decision delegates to [`AshaPruner`], which answers
+//! over the indexed [`crate::core::StepColumn`] path when the study
+//! maintains an observation index and falls back to scanning otherwise.
 
 use crate::pruner::{AshaPruner, Pruner, PruningContext};
 
-/// Assigns each trial (by number) round-robin to one of `n_brackets` ASHA
-/// pruners whose `min_early_stopping_rate` grows with the bracket index.
+/// Assigns each trial (by hashed number, budget-weighted) to one of
+/// `n_brackets` ASHA pruners whose `min_early_stopping_rate` grows with
+/// the bracket index.
 pub struct HyperbandPruner {
     brackets: Vec<AshaPruner>,
+    /// Normalized allocation weight per bracket (sums to 1).
+    weights: Vec<f64>,
+}
+
+/// SplitMix64 finalizer: a cheap, well-mixed u64 → u64 hash. Trial
+/// numbers are sequential — without mixing, "mod n_brackets" allocation
+/// correlates bracket membership with creation order (and with worker
+/// identity under batched ask), biasing every bracket's population.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 impl HyperbandPruner {
     pub fn new(n_brackets: usize, min_resource: u64, reduction_factor: u64) -> Self {
         assert!(n_brackets >= 1);
-        let brackets = (0..n_brackets)
+        let brackets: Vec<AshaPruner> = (0..n_brackets)
             .map(|s| AshaPruner::with_params(min_resource, reduction_factor, s as u64))
             .collect();
-        HyperbandPruner { brackets }
+        // Paper budget split: bracket b (our index) is paper-bracket
+        // s = s_max − b and receives n_s ∝ η^s / (s + 1) configurations.
+        let s_max = (n_brackets - 1) as u32;
+        let eta = reduction_factor as f64;
+        let mut weights: Vec<f64> = (0..n_brackets)
+            .map(|b| {
+                let s = s_max - b as u32;
+                eta.powi(s as i32) / (s + 1) as f64
+            })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        weights.iter_mut().for_each(|w| *w /= total);
+        HyperbandPruner { brackets, weights }
+    }
+
+    /// Registry constructor (spec
+    /// `hyperband:min_resource=1,max_resource=81,reduction=3`). Either
+    /// `brackets` sets the bracket count directly, or `max_resource`
+    /// derives it as `⌊log_η(max/min)⌋ + 1` (the paper's `s_max + 1`);
+    /// giving both is an error. Defaults: 3 brackets, `min_resource=1`,
+    /// `reduction=4`.
+    pub fn from_config(cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        let min_resource = cfg.get_u64("min_resource")?.unwrap_or(1);
+        if min_resource < 1 {
+            return Err("min_resource must be >= 1".into());
+        }
+        let reduction = cfg.get_u64("reduction")?.unwrap_or(4);
+        if reduction < 2 {
+            return Err(format!("reduction must be >= 2, got {reduction}"));
+        }
+        let brackets = cfg.get_usize("brackets")?;
+        let max_resource = cfg.get_u64("max_resource")?;
+        let n_brackets = match (brackets, max_resource) {
+            (Some(_), Some(_)) => {
+                return Err(
+                    "give either 'brackets' or 'max_resource', not both".into()
+                );
+            }
+            (Some(0), None) => return Err("brackets must be >= 1".into()),
+            (Some(n), None) => n,
+            (None, Some(max)) => {
+                if max < min_resource {
+                    return Err(format!(
+                        "max_resource ({max}) must be >= min_resource ({min_resource})"
+                    ));
+                }
+                let ratio = max as f64 / min_resource as f64;
+                ratio.log(reduction as f64).floor() as usize + 1
+            }
+            (None, None) => 3,
+        };
+        Ok(Self::new(n_brackets, min_resource, reduction))
     }
 
     pub fn n_brackets(&self) -> usize {
         self.brackets.len()
     }
 
+    /// Bracket index of a trial: hash the trial number to a uniform
+    /// point in [0, 1), then pick by cumulative budget weight. Pure in
+    /// the trial number — every worker agrees without coordination.
+    pub fn bracket_index_of(&self, trial_number: u64) -> usize {
+        // top 53 bits → uniform double in [0, 1)
+        let u = (splitmix64(trial_number) >> 11) as f64 / (1u64 << 53) as f64;
+        let mut acc = 0.0;
+        for (i, w) in self.weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return i;
+            }
+        }
+        self.brackets.len() - 1 // float-rounding tail
+    }
+
     fn bracket_of(&self, trial_number: u64) -> &AshaPruner {
-        &self.brackets[(trial_number % self.brackets.len() as u64) as usize]
+        &self.brackets[self.bracket_index_of(trial_number)]
     }
 }
 
@@ -43,6 +140,7 @@ mod tests {
     use super::*;
     use crate::core::FrozenTrial;
     use crate::pruner::testutil::{ctx, curve_trial};
+    use crate::registry::SpecConfig;
 
     #[test]
     fn brackets_get_increasing_stopping_rates() {
@@ -55,11 +153,74 @@ mod tests {
     #[test]
     fn conservative_bracket_spares_early_steps() {
         let hb = HyperbandPruner::new(2, 1, 4);
-        // 8 trials with curves; trial numbers decide brackets
-        let all: Vec<FrozenTrial> = (0..8).map(|i| curve_trial(i, &[i as f64])).collect();
-        let bad_even = all[6].clone(); // bracket 0 (s=0): step 1 is a rung
-        let bad_odd = all[7].clone(); // bracket 1 (s=1): first rung at step 4
-        assert!(hb.should_prune(&ctx(&all, &bad_even, 1)));
-        assert!(!hb.should_prune(&ctx(&all, &bad_odd, 1)));
+        // bad trials (value 9.9 among 0..7) in each bracket; bracket 0
+        // (s=0) has a rung at step 1, bracket 1's first rung is step 4
+        let all: Vec<FrozenTrial> = (0..50).map(|i| curve_trial(i, &[i as f64])).collect();
+        let in_bracket =
+            |b: usize| (0..50u64).find(|&n| hb.bracket_index_of(n) == b).unwrap();
+        let bad_aggressive = curve_trial(in_bracket(0), &[9.9]);
+        let bad_conservative = curve_trial(in_bracket(1), &[9.9]);
+        assert!(hb.should_prune(&ctx(&all, &bad_aggressive, 1)));
+        assert!(!hb.should_prune(&ctx(&all, &bad_conservative, 1)));
+    }
+
+    #[test]
+    fn bracket_allocation_matches_budget_weights() {
+        // η=4, 3 brackets: weights ∝ [16/3, 4/2, 1/1] → [0.64, 0.24, 0.12]
+        let hb = HyperbandPruner::new(3, 1, 4);
+        let n = 100_000u64;
+        let mut counts = [0usize; 3];
+        for t in 0..n {
+            counts[hb.bracket_index_of(t)] += 1;
+        }
+        let expect = [16.0 / 3.0 / 8.333_333, 2.0 / 8.333_333, 1.0 / 8.333_333];
+        for b in 0..3 {
+            let frac = counts[b] as f64 / n as f64;
+            assert!(
+                (frac - expect[b]).abs() < 0.01,
+                "bracket {b}: frac={frac:.4} expect={:.4}",
+                expect[b]
+            );
+        }
+        // aggressive brackets always host more trials than conservative
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+    }
+
+    #[test]
+    fn allocation_is_a_pure_function_of_trial_number() {
+        let a = HyperbandPruner::new(4, 1, 3);
+        let b = HyperbandPruner::new(4, 1, 3);
+        for t in 0..1000 {
+            assert_eq!(a.bracket_index_of(t), b.bracket_index_of(t));
+        }
+    }
+
+    #[test]
+    fn single_bracket_degenerates_to_asha() {
+        let hb = HyperbandPruner::new(1, 1, 4);
+        for t in 0..100 {
+            assert_eq!(hb.bracket_index_of(t), 0);
+        }
+    }
+
+    #[test]
+    fn from_config_derives_bracket_count_from_max_resource() {
+        // the ISSUE's canonical spec: η=3, R=81 → s_max=4 → 5 brackets
+        let mut cfg =
+            SpecConfig::parse_pairs("min_resource=1,max_resource=81,reduction=3").unwrap();
+        let hb = HyperbandPruner::from_config(&mut cfg).unwrap();
+        cfg.finish().unwrap();
+        assert_eq!(hb.n_brackets(), 5);
+        // defaults reproduce the historical CLI construction new(3,1,4)
+        let mut empty = SpecConfig::parse_pairs("").unwrap();
+        let hb = HyperbandPruner::from_config(&mut empty).unwrap();
+        assert_eq!(hb.n_brackets(), 3);
+        // brackets and max_resource are mutually exclusive
+        let mut both = SpecConfig::parse_pairs("brackets=2,max_resource=81").unwrap();
+        let err = HyperbandPruner::from_config(&mut both).unwrap_err();
+        assert!(err.contains("brackets") && err.contains("max_resource"), "{err}");
+        // max below min is rejected
+        let mut bad = SpecConfig::parse_pairs("min_resource=9,max_resource=3").unwrap();
+        assert!(HyperbandPruner::from_config(&mut bad).is_err());
     }
 }

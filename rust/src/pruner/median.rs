@@ -22,6 +22,18 @@ impl MedianPruner {
     pub fn with_params(n_startup_trials: usize, n_warmup_steps: u64) -> Self {
         MedianPruner { n_startup_trials, n_warmup_steps }
     }
+
+    /// Registry constructor (spec `median:n_startup=5,warmup=2`).
+    pub fn from_config(cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        let mut p = MedianPruner::new();
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            p.n_startup_trials = v;
+        }
+        if let Some(v) = cfg.get_u64("warmup")? {
+            p.n_warmup_steps = v;
+        }
+        Ok(p)
+    }
 }
 
 impl Default for MedianPruner {

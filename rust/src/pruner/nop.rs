@@ -5,6 +5,13 @@ use crate::pruner::{Pruner, PruningContext};
 /// Never prunes.
 pub struct NopPruner;
 
+impl NopPruner {
+    /// Registry constructor (specs `none` / `nop`) — no knobs.
+    pub fn from_config(_cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        Ok(NopPruner)
+    }
+}
+
 impl Pruner for NopPruner {
     fn should_prune(&self, _ctx: &PruningContext<'_>) -> bool {
         false

@@ -19,6 +19,26 @@ impl PercentilePruner {
         assert!(percentile > 0.0 && percentile <= 100.0);
         PercentilePruner { percentile, n_startup_trials: 5, n_warmup_steps: 0 }
     }
+
+    /// Registry constructor (spec `percentile:percentile=25,n_startup=2`).
+    /// `percentile` is required — there is no sensible universal default
+    /// (Optuna callers always pass one).
+    pub fn from_config(cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        let pct = cfg
+            .get_f64("percentile")?
+            .ok_or("missing required key 'percentile' (a value in (0, 100])")?;
+        if !(pct > 0.0 && pct <= 100.0) {
+            return Err(format!("percentile must be in (0, 100], got {pct}"));
+        }
+        let mut p = PercentilePruner::new(pct);
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            p.n_startup_trials = v;
+        }
+        if let Some(v) = cfg.get_u64("warmup")? {
+            p.n_warmup_steps = v;
+        }
+        Ok(p)
+    }
 }
 
 impl Pruner for PercentilePruner {

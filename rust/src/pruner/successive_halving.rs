@@ -24,6 +24,31 @@ impl SyncHalvingPruner {
         SyncHalvingPruner { min_resource: 1, reduction_factor: 4, cohort }
     }
 
+    /// Registry constructor (spec `sync-sh:cohort=8,min_resource=1,reduction=4`).
+    /// `cohort` is required — the bracket size defines the pruner.
+    pub fn from_config(cfg: &mut crate::registry::SpecConfig) -> Result<Self, String> {
+        let cohort = cfg
+            .get_usize("cohort")?
+            .ok_or("missing required key 'cohort' (rung-0 bracket size)")?;
+        if cohort < 1 {
+            return Err("cohort must be >= 1".into());
+        }
+        let mut p = SyncHalvingPruner::new(cohort);
+        if let Some(v) = cfg.get_u64("min_resource")? {
+            if v < 1 {
+                return Err("min_resource must be >= 1".into());
+            }
+            p.min_resource = v;
+        }
+        if let Some(v) = cfg.get_u64("reduction")? {
+            if v < 2 {
+                return Err(format!("reduction must be >= 2, got {v}"));
+            }
+            p.reduction_factor = v;
+        }
+        Ok(p)
+    }
+
     fn rung_of(&self, step: u64) -> Option<u64> {
         let ratio = step as f64 / self.min_resource as f64;
         if ratio < 1.0 {

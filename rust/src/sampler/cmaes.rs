@@ -227,6 +227,24 @@ impl CmaEsSampler {
         }
     }
 
+    /// Registry constructor (spec `cmaes:sigma=0.5,n_startup=8`).
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut s = CmaEsSampler::new(seed);
+        if let Some(v) = cfg.get_f64("sigma")? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("sigma must be positive and finite, got {v}"));
+            }
+            s.sigma0 = v;
+        }
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            s.n_startup_trials = v;
+        }
+        Ok(s)
+    }
+
     fn space_key(space: &SearchSpace) -> String {
         let mut key = String::new();
         for (name, dist) in space {

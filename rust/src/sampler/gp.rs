@@ -47,6 +47,36 @@ impl GpSampler {
         }
     }
 
+    /// Registry constructor (spec `gp:n_startup=5,max_obs=100,...`).
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut s = GpSampler::new(seed);
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            s.n_startup_trials = v;
+        }
+        if let Some(v) = cfg.get_usize("max_obs")? {
+            if v == 0 {
+                return Err("max_obs must be >= 1".into());
+            }
+            s.max_observations = v;
+        }
+        if let Some(v) = cfg.get_usize("candidates")? {
+            if v == 0 {
+                return Err("candidates must be >= 1".into());
+            }
+            s.n_candidates = v;
+        }
+        if let Some(v) = cfg.get_f64("noise")? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("noise must be positive and finite, got {v}"));
+            }
+            s.noise = v;
+        }
+        Ok(s)
+    }
+
     fn matern52(r2: f64, ls: f64) -> f64 {
         let r = r2.sqrt() / ls;
         let s5r = 5.0f64.sqrt() * r;

@@ -18,6 +18,14 @@ impl RandomSampler {
         RandomSampler { rng: Mutex::new(Pcg64::new(seed)) }
     }
 
+    /// Registry constructor (spec `random`) — no knobs.
+    pub fn from_config(
+        _cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        Ok(RandomSampler::new(seed))
+    }
+
     /// Uniform draw in a distribution's internal space.
     pub fn draw(rng: &mut Pcg64, dist: &Distribution) -> f64 {
         match dist {

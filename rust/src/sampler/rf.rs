@@ -144,6 +144,48 @@ impl RfSampler {
         }
     }
 
+    /// Registry constructor (spec `rf:trees=32,depth=10,...`).
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut s = RfSampler::new(seed);
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            s.n_startup_trials = v;
+        }
+        if let Some(v) = cfg.get_usize("trees")? {
+            if v == 0 {
+                return Err("trees must be >= 1".into());
+            }
+            s.n_trees = v;
+        }
+        if let Some(v) = cfg.get_usize("depth")? {
+            if v == 0 {
+                return Err("depth must be >= 1".into());
+            }
+            s.max_depth = v;
+        }
+        if let Some(v) = cfg.get_usize("min_leaf")? {
+            if v == 0 {
+                return Err("min_leaf must be >= 1".into());
+            }
+            s.min_leaf = v;
+        }
+        if let Some(v) = cfg.get_usize("candidates")? {
+            if v == 0 {
+                return Err("candidates must be >= 1".into());
+            }
+            s.n_candidates = v;
+        }
+        if let Some(v) = cfg.get_usize("max_obs")? {
+            if v == 0 {
+                return Err("max_obs must be >= 1".into());
+            }
+            s.max_observations = v;
+        }
+        Ok(s)
+    }
+
     fn normal_cdf(z: f64) -> f64 {
         0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
     }

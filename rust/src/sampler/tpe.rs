@@ -99,6 +99,15 @@ pub struct TpeConfig {
     /// default — the streamed per-`suggest` path stays decision-identical
     /// with prior versions.
     pub group: bool,
+    /// γ quantile factor: the "below" (good) split holds
+    /// `ceil(gamma_factor · √n)` observations (clamped to [1, 25]).
+    pub gamma_factor: f64,
+    /// Constraint-aware splitting: trials with a violated
+    /// [`crate::core::FrozenTrial`] constraint are assigned an infinite
+    /// loss, pinning them to the "above" (bad) model so the good-side
+    /// Parzen estimator is fitted to feasible observations only. Forces
+    /// the scan observation path (the index columns are constraint-blind).
+    pub constraints: bool,
 }
 
 impl Default for TpeConfig {
@@ -108,6 +117,8 @@ impl Default for TpeConfig {
             n_ei_candidates: 24,
             max_observations: 63,
             group: false,
+            gamma_factor: 0.25,
+            constraints: false,
         }
     }
 }
@@ -163,9 +174,58 @@ impl TpeSampler {
         }
     }
 
-    /// γ(n): number of trials in the "below" (good) split.
+    /// Registry constructor (spec `tpe:group=true,n_startup=20,...`).
+    /// Knobs: `n_startup`, `candidates`, `max_obs`, `group`, `gamma`
+    /// (quantile factor), `constraints`.
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut c = TpeConfig::default();
+        if let Some(v) = cfg.get_usize("n_startup")? {
+            c.n_startup_trials = v;
+        }
+        if let Some(v) = cfg.get_usize("candidates")? {
+            if v == 0 {
+                return Err("candidates must be >= 1".into());
+            }
+            c.n_ei_candidates = v;
+        }
+        if let Some(v) = cfg.get_usize("max_obs")? {
+            if v == 0 {
+                return Err("max_obs must be >= 1".into());
+            }
+            c.max_observations = v;
+        }
+        if let Some(v) = cfg.get_bool("group")? {
+            c.group = v;
+        }
+        if let Some(v) = cfg.get_f64("gamma")? {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("gamma must be a positive finite factor, got {v}"));
+            }
+            c.gamma_factor = v;
+        }
+        if let Some(v) = cfg.get_bool("constraints")? {
+            c.constraints = v;
+        }
+        Ok(Self::with_config(seed, c, TpeBackend::Native))
+    }
+
+    /// γ(n): number of trials in the "below" (good) split, under the
+    /// default [`TpeConfig::gamma_factor`].
     fn gamma(n: usize) -> usize {
-        ((0.25 * (n as f64).sqrt()).ceil() as usize).clamp(1, 25).min(n)
+        Self::gamma_with(0.25, n)
+    }
+
+    /// γ(n) under an explicit quantile factor.
+    fn gamma_with(factor: f64, n: usize) -> usize {
+        ((factor * (n as f64).sqrt()).ceil() as usize).clamp(1, 25).min(n)
+    }
+
+    /// γ(n) under this sampler's configured factor.
+    fn gamma_n(&self, n: usize) -> usize {
+        Self::gamma_with(self.config.gamma_factor, n)
     }
 
     /// Observations of `name` among finished trials, with min-sign losses.
@@ -181,6 +241,19 @@ impl TpeSampler {
         name: &str,
         dist: &Distribution,
     ) -> Vec<(f64, f64)> {
+        Self::observations_with(ctx, name, dist, false)
+    }
+
+    /// [`Self::observations`], optionally constraint-aware: with
+    /// `constraints` set, an infeasible trial's loss becomes +∞, sorting
+    /// it past every finite feasible loss (and thus out of the "below"
+    /// split whenever enough feasible observations exist).
+    fn observations_with(
+        ctx: &StudyContext<'_>,
+        name: &str,
+        dist: &Distribution,
+        constraints: bool,
+    ) -> Vec<(f64, f64)> {
         let sign = ctx.direction.min_sign();
         ctx.trials
             .iter()
@@ -190,7 +263,11 @@ impl TpeSampler {
                 if d != dist {
                     return None;
                 }
-                Some((*v, sign * t.value_or_last_intermediate()?))
+                let mut loss = sign * t.value_or_last_intermediate()?;
+                if constraints && !t.is_feasible() {
+                    loss = f64::INFINITY;
+                }
+                Some((*v, loss))
             })
             .collect()
     }
@@ -217,18 +294,26 @@ impl TpeSampler {
     /// Loss-ordered observation values for `(name, dist)`: from the index
     /// when available (O(1)), otherwise scanned out of the trial snapshot
     /// (O(n log n)). `owned` is the backing store for the scan path.
+    /// Constraint-aware mode always scans — the index columns order by
+    /// raw loss and know nothing about feasibility.
     fn values_by_loss<'a>(
+        &self,
         ctx: &'a StudyContext<'_>,
         name: &str,
         dist: &Distribution,
         owned: &'a mut Vec<f64>,
     ) -> &'a [f64] {
         match ctx.index {
-            Some(ix) => ix
+            Some(ix) if !self.config.constraints => ix
                 .param_column(name, dist)
                 .map_or(&[][..], |c| c.values_by_loss()),
-            None => {
-                *owned = Self::sort_by_loss(Self::observations(ctx, name, dist));
+            _ => {
+                *owned = Self::sort_by_loss(Self::observations_with(
+                    ctx,
+                    name,
+                    dist,
+                    self.config.constraints,
+                ));
                 &owned[..]
             }
         }
@@ -257,13 +342,13 @@ impl TpeSampler {
         dist: &Distribution,
     ) -> f64 {
         let mut owned = Vec::new();
-        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        let values = self.values_by_loss(ctx, name, dist, &mut owned);
         if values.len() < self.config.n_startup_trials {
             let mut rng = self.rng.lock().unwrap();
             return RandomSampler::draw(&mut rng, dist);
         }
         let (max_obs, n_cand) = self.backend_limits();
-        let n_below = Self::gamma(values.len());
+        let n_below = self.gamma_n(values.len());
         let (lo, hi) = dist.internal_range();
 
         let mut scratch = self.scratch.lock().unwrap();
@@ -325,13 +410,13 @@ impl TpeSampler {
         dist: &Distribution,
     ) -> Prepared {
         let mut owned = Vec::new();
-        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        let values = self.values_by_loss(ctx, name, dist, &mut owned);
         if values.len() < self.config.n_startup_trials {
             let mut rng = self.rng.lock().unwrap();
             return Prepared::Drawn(RandomSampler::draw(&mut rng, dist));
         }
         let (max_obs, n_cand) = self.backend_limits();
-        let n_below = Self::gamma(values.len());
+        let n_below = self.gamma_n(values.len());
         let (lo, hi) = dist.internal_range();
         let below =
             ParzenEstimator::fit(&subsample(values[..n_below].to_vec(), max_obs), lo, hi);
@@ -356,12 +441,12 @@ impl TpeSampler {
         n_categories: usize,
     ) -> f64 {
         let mut owned = Vec::new();
-        let values = Self::values_by_loss(ctx, name, dist, &mut owned);
+        let values = self.values_by_loss(ctx, name, dist, &mut owned);
         if values.len() < self.config.n_startup_trials {
             let mut rng = self.rng.lock().unwrap();
             return RandomSampler::draw(&mut rng, dist);
         }
-        let (below, above) = values.split_at(Self::gamma(values.len()));
+        let (below, above) = values.split_at(self.gamma_n(values.len()));
         let weight = |vals: &[f64]| -> Vec<f64> {
             // Laplace-smoothed category frequencies
             let mut w = vec![1.0f64; n_categories];
@@ -730,6 +815,76 @@ mod tests {
             "two numeric params, ONE batched call"
         );
         assert_eq!(scorer.single_calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn gamma_factor_is_configurable() {
+        assert_eq!(TpeSampler::gamma_with(0.25, 100), TpeSampler::gamma(100));
+        assert_eq!(TpeSampler::gamma_with(0.5, 100), 5);
+        assert_eq!(TpeSampler::gamma_with(1.0, 100), 10);
+        assert_eq!(TpeSampler::gamma_with(10.0, 100), 25); // capped
+        let s = TpeSampler::with_config(
+            0,
+            TpeConfig { gamma_factor: 0.5, ..Default::default() },
+            TpeBackend::Native,
+        );
+        assert_eq!(s.gamma_n(100), 5);
+    }
+
+    #[test]
+    fn constraint_aware_split_avoids_infeasible_optimum() {
+        // Trials at x<0 have the best losses but violate a constraint;
+        // feasible trials live at x>0 with moderate losses. Blind TPE
+        // chases the infeasible lobe; constraint-aware TPE must not.
+        let d = Distribution::float(-5.0, 5.0);
+        let mut rng = Pcg64::new(11);
+        let mut trials = Vec::new();
+        for i in 0..60 {
+            let (x, loss, viol) = if i % 2 == 0 {
+                let x = rng.uniform_range(-4.0, -3.0);
+                (x, 0.01 * (x + 3.5).powi(2), 1.0) // great loss, infeasible
+            } else {
+                let x = rng.uniform_range(2.0, 4.0);
+                (x, 1.0 + 0.1 * (x - 3.0).powi(2), -1.0) // ok loss, feasible
+            };
+            let mut t =
+                completed_trial(i, &[("x", d.clone(), ParamValue::Float(x))], loss);
+            t.constraints = vec![viol];
+            trials.push(t);
+        }
+        let aware = TpeSampler::with_config(
+            6,
+            TpeConfig { constraints: true, ..Default::default() },
+            TpeBackend::Native,
+        );
+        let blind = TpeSampler::new(6);
+        let c = ctx(&trials);
+        let (mut aware_pos, mut blind_neg) = (0, 0);
+        for i in 0..50 {
+            if aware.sample_independent(&c, i, "x", &d) > 0.0 {
+                aware_pos += 1;
+            }
+            if blind.sample_independent(&c, i, "x", &d) < 0.0 {
+                blind_neg += 1;
+            }
+        }
+        assert!(aware_pos > 40, "aware sampler stuck infeasible: {aware_pos}/50");
+        assert!(blind_neg > 40, "blind ablation should chase x<0: {blind_neg}/50");
+    }
+
+    #[test]
+    fn from_config_parses_knobs() {
+        let mut cfg =
+            crate::registry::SpecConfig::parse_pairs("n_startup=3,gamma=0.5,group=yes")
+                .unwrap();
+        let s = TpeSampler::from_config(&mut cfg, 9).unwrap();
+        cfg.finish().unwrap();
+        assert_eq!(s.config.n_startup_trials, 3);
+        assert!(s.config.group);
+        assert_eq!(s.gamma_n(100), 5);
+        let mut bad = crate::registry::SpecConfig::parse_pairs("gamma=-1").unwrap();
+        let err = TpeSampler::from_config(&mut bad, 0).unwrap_err();
+        assert!(err.contains("gamma"), "{err}");
     }
 
     #[test]

@@ -32,6 +32,15 @@ impl TpeCmaEsSampler {
         }
     }
 
+    /// Registry constructor (spec `tpe+cmaes:n_switch=60`).
+    pub fn from_config(
+        cfg: &mut crate::registry::SpecConfig,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let n_switch = cfg.get_usize("n_switch")?.unwrap_or(40);
+        Ok(Self::with_switch(seed, n_switch))
+    }
+
     fn n_complete(ctx: &StudyContext<'_>) -> usize {
         ctx.trials
             .iter()

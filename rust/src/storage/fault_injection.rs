@@ -355,6 +355,16 @@ impl Storage for FaultInjectionStorage {
         })
     }
 
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.around("set_trial_constraints", || {
+            self.inner.set_trial_constraints(trial_id, constraints)
+        })
+    }
+
     fn finish_trial(
         &self,
         trial_id: u64,

@@ -394,6 +394,18 @@ impl Storage for InMemoryStorage {
         })
     }
 
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.with_trial_mut(trial_id, |st, number| {
+            st.trials[number as usize].constraints = constraints.to_vec();
+            st.touch(number);
+            Ok(())
+        })
+    }
+
     fn finish_trial(
         &self,
         trial_id: u64,

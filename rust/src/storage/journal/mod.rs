@@ -18,6 +18,7 @@
 //! {"op":"param","trial":T,"name":N,"dist":{..},"value":V}
 //! {"op":"intermediate","trial":T,"step":K,"value":V}
 //! {"op":"attr","trial":T,"key":K,"value":V}
+//! {"op":"constraints","trial":T,"values":[C,..]}  (trial constraint values)
 //! {"op":"finish","trial":T,"state":ST,"value":V|null,"time":MS,"values":[V,..]}
 //! {"op":"heartbeat","trial":T,"time":MS}          (fault tolerance)
 //! {"op":"enqueue","study":S,"params":[..],"attrs":[..]}
@@ -88,7 +89,10 @@
 //! binaries replay here (scalar `value`/`direction` are the fallback),
 //! and multi-objective journals replay on pre-multi binaries as their
 //! objective-0 projection (the `value`/`direction` mirrors are always
-//! written alongside the vectors).
+//! written alongside the vectors). Constraints follow the same rule: the
+//! `constraints` op is a pure annotation, so pre-constraints binaries
+//! skip it as an unknown op (and carry it through compaction), while
+//! journals without it replay here with every trial unconstrained.
 //!
 //! [`CachedStorage`]: crate::storage::CachedStorage
 
@@ -883,6 +887,31 @@ impl Storage for JournalStorage {
                 ("trial", Json::Num(trial_id as f64)),
                 ("key", Json::Str(key.into())),
                 ("value", Json::Str(value.into())),
+            ]),
+        )
+        .map(|_| ())
+    }
+
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.append(
+            move |state| {
+                if trial_id as usize >= state.trials.len() {
+                    Err(bad_trial(trial_id))
+                } else {
+                    Ok(())
+                }
+            },
+            Json::obj(vec![
+                ("op", Json::Str("constraints".into())),
+                ("trial", Json::Num(trial_id as f64)),
+                (
+                    "values",
+                    Json::Arr(constraints.iter().map(|&c| encode_value(c)).collect()),
+                ),
             ]),
         )
         .map(|_| ())

@@ -222,6 +222,7 @@ fn is_known_op(op: &str) -> bool {
             | "param"
             | "intermediate"
             | "attr"
+            | "constraints"
             | "finish"
             | "finish_trials"
     )
@@ -519,6 +520,17 @@ fn apply(state: &mut Replayed, op: &str, entry: &Json, raw: &str) -> Result<(), 
             state.trials[tid]
                 .user_attrs
                 .insert(key.to_string(), value.to_string());
+            state.touch(tid);
+        }
+        "constraints" => {
+            let tid = get_trial(state, entry)?;
+            let values = entry
+                .get("values")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| {
+                    OptunaError::storage(ErrorKind::Corrupt, "constraints missing values")
+                })?;
+            state.trials[tid].constraints = values.iter().map(decode_value).collect();
             state.touch(tid);
         }
         "finish" => {

@@ -33,7 +33,13 @@ use super::replay::{decode_value, encode_value, Replayed, StudyRec};
 
 /// Version stamp inside both snapshot encodings: readers reject payloads
 /// newer than they understand instead of misdecoding them.
-const SNAPSHOT_VERSION: u32 = 1;
+///
+/// History: v1 had no per-trial constraints; v2 appends a constraints
+/// vector to each binary trial record (the JSON encoding carries it as an
+/// optional field, so both JSON versions read both ways). Readers accept
+/// `MIN_SNAPSHOT_VERSION..=SNAPSHOT_VERSION`.
+const SNAPSHOT_VERSION: u32 = 2;
+const MIN_SNAPSHOT_VERSION: u32 = 1;
 
 fn corrupt(what: &str) -> OptunaError {
     OptunaError::storage(ErrorKind::Corrupt, format!("corrupt snapshot payload: {what}"))
@@ -120,6 +126,12 @@ pub(super) fn build_json(state: &Replayed) -> Json {
                     Json::Arr(t.values.iter().map(|&v| encode_value(v)).collect()),
                 ));
             }
+            if !t.constraints.is_empty() {
+                fields.push((
+                    "constraints",
+                    Json::Arr(t.constraints.iter().map(|&c| encode_value(c)).collect()),
+                ));
+            }
             if !t.params.is_empty() {
                 fields.push((
                     "params",
@@ -186,9 +198,10 @@ pub(super) fn build_json(state: &Replayed) -> Json {
 /// Apply a JSON snapshot entry onto a pristine state.
 pub(super) fn apply_json(state: &mut Replayed, entry: &Json) -> Result<(), OptunaError> {
     let version = entry.get("version").and_then(|v| v.as_i64()).unwrap_or(0);
-    if version != SNAPSHOT_VERSION as i64 {
+    if version < MIN_SNAPSHOT_VERSION as i64 || version > SNAPSHOT_VERSION as i64 {
         return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
-            "unsupported snapshot version {version} (this binary reads version {SNAPSHOT_VERSION})"
+            "unsupported snapshot version {version} (this binary reads versions \
+             {MIN_SNAPSHOT_VERSION}..={SNAPSHOT_VERSION})"
         )));
     }
     let studies = entry
@@ -244,6 +257,10 @@ pub(super) fn apply_json(state: &mut Replayed, entry: &Json) -> Result<(), Optun
         ft.value = t.get("value").map(decode_value);
         if let Some(vals) = t.get("values").and_then(|v| v.as_arr()) {
             ft.values = vals.iter().map(decode_value).collect();
+        }
+        // optional since v1 snapshots predate constraints; missing → feasible
+        if let Some(cons) = t.get("constraints").and_then(|c| c.as_arr()) {
+            ft.constraints = cons.iter().map(decode_value).collect();
         }
         for p in t.get("params").and_then(|p| p.as_arr()).unwrap_or(&[]) {
             let name = p
@@ -405,6 +422,11 @@ pub(super) fn build_binary(state: &Replayed) -> Vec<u8> {
         for &v in &t.values {
             w.f64(v);
         }
+        // v2: constraints vector (empty = feasible / unconstrained)
+        w.u32(t.constraints.len() as u32);
+        for &c in &t.constraints {
+            w.f64(c);
+        }
         w.u32(t.params.len() as u32);
         for (name, (dist, value)) in &t.params {
             let key = (name.clone(), dist.to_json().to_string());
@@ -433,9 +455,10 @@ pub(super) fn build_binary(state: &Replayed) -> Vec<u8> {
 pub(super) fn apply_binary(state: &mut Replayed, payload: &[u8]) -> Result<(), OptunaError> {
     let mut r = Reader { buf: payload, pos: 0 };
     let version = r.u32()?;
-    if version != SNAPSHOT_VERSION {
+    if !(MIN_SNAPSHOT_VERSION..=SNAPSHOT_VERSION).contains(&version) {
         return Err(OptunaError::storage(ErrorKind::Corrupt, format!(
-            "unsupported snapshot version {version} (this binary reads version {SNAPSHOT_VERSION})"
+            "unsupported snapshot version {version} (this binary reads versions \
+             {MIN_SNAPSHOT_VERSION}..={SNAPSHOT_VERSION})"
         )));
     }
     let n_studies = r.u32()?;
@@ -487,6 +510,14 @@ pub(super) fn apply_binary(state: &mut Replayed, payload: &[u8]) -> Result<(), O
             values.push(r.f64()?);
         }
         ft.values = values;
+        if version >= 2 {
+            let n_cons = r.u32()?;
+            let mut constraints = Vec::with_capacity(n_cons as usize);
+            for _ in 0..n_cons {
+                constraints.push(r.f64()?);
+            }
+            ft.constraints = constraints;
+        }
         let n_params = r.u32()?;
         for _ in 0..n_params {
             let idx = r.u32()? as usize;
@@ -544,6 +575,7 @@ mod tests {
             (Distribution::log_float(1e-5, 1e-1), (1e-3f64).ln()),
         );
         t0.intermediate.insert(3, f64::NAN);
+        t0.constraints = vec![-0.5, f64::INFINITY, f64::NAN];
         t0.user_attrs.insert("k".into(), "v".into());
         t0.datetime_start = Some(100);
         t0.datetime_complete = Some(200);
@@ -582,6 +614,7 @@ mod tests {
             assert_eq!(a.value.map(f64::to_bits), b.value.map(f64::to_bits));
             let bits = |v: &Vec<f64>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&a.values), bits(&b.values));
+            assert_eq!(bits(&a.constraints), bits(&b.constraints));
             assert_eq!(a.params.keys().collect::<Vec<_>>(), b.params.keys().collect::<Vec<_>>());
             for (k, (_, va)) in &a.params {
                 assert_eq!(va.to_bits(), b.params[k].1.to_bits());
@@ -638,6 +671,52 @@ mod tests {
                 "truncation at {cut} must not decode"
             );
         }
+    }
+
+    #[test]
+    fn binary_snapshot_reads_v1_payloads() {
+        // a pre-constraints (v1) trial record: no constraints block between
+        // the values vector and the params vector
+        let mut w = Writer(Vec::new());
+        w.u32(1); // version
+        w.u32(1); // studies
+        w.str("s0");
+        w.u32(1);
+        w.u8(direction_code(StudyDirection::Minimize));
+        w.u64(7); // seq
+        w.u32(0); // waiting
+        w.u32(0); // dictionary
+        w.u32(1); // trials
+        w.u64(0); // study id
+        w.u8(state_code(TrialState::Complete));
+        w.u8(1); // Some(value)
+        w.f64(1.5);
+        w.u32(0); // values
+        w.u32(0); // params
+        w.u32(0); // intermediates
+        w.u32(0); // attrs
+        w.opt_u64(None);
+        w.opt_u64(None);
+        w.opt_u64(None);
+        w.u64(7); // trial seq
+        let mut got = Replayed::default();
+        apply_binary(&mut got, &w.0).unwrap();
+        assert_eq!(got.trials.len(), 1);
+        assert_eq!(got.trials[0].value, Some(1.5));
+        assert!(got.trials[0].constraints.is_empty(), "v1 trials are unconstrained");
+    }
+
+    #[test]
+    fn json_snapshot_tolerates_v1_entries() {
+        // a v1 writer never emitted "constraints"; entries must still apply
+        let text = r#"{"op":"snapshot","version":1,"studies":[{"name":"s0",
+            "directions":["minimize"],"seq":3,"waiting":[]}],
+            "trials":[{"study":0,"state":"complete","seq":3,"value":2.0}]}"#;
+        let entry = Json::parse(text).unwrap();
+        let mut got = Replayed::default();
+        apply_json(&mut got, &entry).unwrap();
+        assert_eq!(got.trials.len(), 1);
+        assert!(got.trials[0].constraints.is_empty());
     }
 
     #[test]

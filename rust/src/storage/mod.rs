@@ -229,6 +229,22 @@ pub trait Storage: Send + Sync {
     fn set_trial_user_attr(&self, trial_id: u64, key: &str, value: &str)
         -> Result<(), OptunaError>;
 
+    /// Record the trial's constraint vector (`Trial::report_constraints`;
+    /// value ≤ 0 = satisfied, see [`FrozenTrial::is_feasible`]). Replaces
+    /// any previously reported vector. The default errors: a backend must
+    /// opt in to constraint persistence (all three shipped backends do;
+    /// the conformance row is capability-tolerant like the queue rows).
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        let (_, _) = (trial_id, constraints);
+        Err(OptunaError::Storage(
+            "backend does not support trial constraints".into(),
+        ))
+    }
+
     /// Transition a trial to a finished state (Complete/Pruned/Failed).
     fn finish_trial(
         &self,
@@ -535,8 +551,39 @@ pub(crate) mod conformance {
         waiting_queue(storage);
         capped_creation(storage);
         multi_objective_values(storage);
+        trial_constraints(storage);
         batched_ops(storage);
         error_taxonomy(storage);
+    }
+
+    /// Constraint vectors persist verbatim (capability-tolerant: backends
+    /// without constraint support may reject the write, but must not
+    /// corrupt the trial).
+    fn trial_constraints(s: &dyn Storage) {
+        let sid = s.create_study("conf-constraints", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        if let Err(e) = s.set_trial_constraints(tid, &[-1.0, 0.5]) {
+            // a capability gap is fine; the trial must still be intact
+            assert!(matches!(e, OptunaError::Storage(_)), "unexpected error {e:?}");
+            assert!(s.get_trial(tid).unwrap().constraints.is_empty());
+            return;
+        }
+        assert_eq!(s.get_trial(tid).unwrap().constraints, vec![-1.0, 0.5]);
+        assert!(!s.get_trial(tid).unwrap().is_feasible());
+        // a re-report overwrites (last write wins, like params/attrs)
+        s.set_trial_constraints(tid, &[-0.25]).unwrap();
+        assert_eq!(s.get_trial(tid).unwrap().constraints, vec![-0.25]);
+        assert!(s.get_trial(tid).unwrap().is_feasible());
+        // non-finite values survive the round trip bit-exactly
+        s.set_trial_constraints(tid, &[f64::NAN, f64::NEG_INFINITY]).unwrap();
+        let got = s.get_trial(tid).unwrap().constraints;
+        assert_eq!(got.len(), 2);
+        assert!(got[0].is_nan());
+        assert_eq!(got[1], f64::NEG_INFINITY);
+        // constraints survive finishing, and unknown trials are errors
+        s.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        assert_eq!(s.get_trial(tid).unwrap().constraints.len(), 2);
+        assert!(s.set_trial_constraints(u64::MAX, &[0.0]).is_err());
     }
 
     /// Transient-vs-permanent semantics every backend (and every

@@ -353,6 +353,14 @@ impl Storage for ResilientStorage {
         self.with_retry(|| self.inner.set_trial_user_attr(trial_id, key, value))
     }
 
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.with_retry(|| self.inner.set_trial_constraints(trial_id, constraints))
+    }
+
     fn finish_trial(
         &self,
         trial_id: u64,

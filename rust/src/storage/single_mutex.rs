@@ -123,6 +123,15 @@ impl Storage for SingleMutexStorage {
         self.inner.set_trial_user_attr(trial_id, key, value)
     }
 
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        let _g = self.enter()?;
+        self.inner.set_trial_constraints(trial_id, constraints)
+    }
+
     fn finish_trial(
         &self,
         trial_id: u64,

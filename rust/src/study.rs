@@ -9,7 +9,7 @@ use std::time::Duration;
 use crate::core::{
     FrozenTrial, IndexSnapshot, ObservationIndex, OptunaError, StudyDirection, TrialState,
 };
-use crate::multi::{nondominated_sort, to_losses};
+use crate::multi::{nondominated_sort, nondominated_sort_constrained, to_losses};
 use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
 use crate::storage::{
@@ -94,6 +94,9 @@ pub struct StudyBuilder {
     storage: Option<Arc<dyn Storage>>,
     sampler: Option<Arc<dyn Sampler>>,
     pruner: Option<Arc<dyn Pruner>>,
+    sampler_spec: Option<String>,
+    pruner_spec: Option<String>,
+    seed: u64,
     cache: bool,
     index: bool,
     failover: Option<FailoverConfig>,
@@ -136,6 +139,36 @@ impl StudyBuilder {
 
     pub fn pruner(mut self, pruner: Arc<dyn Pruner>) -> Self {
         self.pruner = Some(pruner);
+        self
+    }
+
+    /// Resolve the sampler from a registry spec string at [`build`] time —
+    /// `"tpe"`, `"tpe:group=true,n_startup=20"`, `"nsga2:population=40,
+    /// constraints=true"`, or any name added via
+    /// [`crate::registry::register_sampler`]. Mutually exclusive with
+    /// [`sampler`]; the seed comes from [`seed`].
+    ///
+    /// [`build`]: StudyBuilder::build
+    /// [`sampler`]: StudyBuilder::sampler
+    /// [`seed`]: StudyBuilder::seed
+    pub fn sampler_spec(mut self, spec: &str) -> Self {
+        self.sampler_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Resolve the pruner from a registry spec string at build time —
+    /// `"asha:reduction=3"`, `"hyperband:max_resource=81"`, `"none"`, etc.
+    /// Mutually exclusive with [`StudyBuilder::pruner`].
+    pub fn pruner_spec(mut self, spec: &str) -> Self {
+        self.pruner_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Seed handed to spec-resolved samplers/pruners (default 0). Has no
+    /// effect on explicitly constructed instances passed via
+    /// [`StudyBuilder::sampler`] / [`StudyBuilder::pruner`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
         self
     }
 
@@ -209,8 +242,28 @@ impl StudyBuilder {
             None => storage,
         };
         let storage = if self.cache { CachedStorage::wrap(storage) } else { storage };
-        let sampler = self.sampler.unwrap_or_else(|| Arc::new(TpeSampler::new(0)));
-        let pruner = self.pruner.unwrap_or_else(|| Arc::new(NopPruner));
+        let sampler: Arc<dyn Sampler> = match (self.sampler, &self.sampler_spec) {
+            (Some(_), Some(_)) => {
+                return Err(OptunaError::InvalidParam(
+                    "give either .sampler(instance) or .sampler_spec(string), not both".into(),
+                ))
+            }
+            (None, Some(spec)) => crate::registry::make_sampler(spec, self.seed)
+                .map_err(OptunaError::InvalidParam)?,
+            (Some(s), None) => s,
+            (None, None) => Arc::new(TpeSampler::new(self.seed)),
+        };
+        let pruner: Arc<dyn Pruner> = match (self.pruner, &self.pruner_spec) {
+            (Some(_), Some(_)) => {
+                return Err(OptunaError::InvalidParam(
+                    "give either .pruner(instance) or .pruner_spec(string), not both".into(),
+                ))
+            }
+            (None, Some(spec)) => crate::registry::make_pruner(spec, self.seed)
+                .map_err(OptunaError::InvalidParam)?,
+            (Some(p), None) => p,
+            (None, None) => Arc::new(NopPruner),
+        };
         let study_id = get_or_create_study_multi(storage.as_ref(), &self.name, &self.directions)?;
         let direction = self.directions[0];
         let obs_index = self
@@ -299,6 +352,9 @@ impl Study {
             storage: None,
             sampler: None,
             pruner: None,
+            sampler_spec: None,
+            pruner_spec: None,
+            seed: 0,
             cache: true,
             index: true,
             failover: None,
@@ -1267,12 +1323,32 @@ impl Study {
         self.storage.get_all_trials(self.study_id)
     }
 
+    /// The resolved sampler's name (logs, dashboards; lets callers that
+    /// built the study from a spec string confirm what they got).
+    pub fn sampler_name(&self) -> &'static str {
+        self.sampler.name()
+    }
+
+    /// The resolved pruner's name.
+    pub fn pruner_name(&self) -> &'static str {
+        self.pruner.name()
+    }
+
     /// The Pareto front: completed trials whose objective vectors are not
     /// dominated by any other completed trial, ordered by trial number.
     /// On a single-objective study this degenerates to the best trial(s)
     /// (ties included). Trials whose recorded arity does not match the
     /// study (e.g. scalar records in a study later rebuilt as
     /// multi-objective) are not comparable and are excluded.
+    ///
+    /// When any candidate reported constraints
+    /// ([`crate::trial::TrialApi::report_constraints`]) the front is
+    /// computed under Deb's feasibility-aware dominance
+    /// ([`crate::multi::dominates_constrained`]): any feasible trial
+    /// beats every infeasible one, so the front is fully feasible
+    /// whenever at least one feasible trial exists. Unconstrained
+    /// studies are unaffected (all-zero violations reduce to plain
+    /// Pareto dominance).
     pub fn best_trials(&self) -> Result<Vec<FrozenTrial>, OptunaError> {
         let trials = self.storage.get_trials_snapshot(self.study_id)?;
         let n_obj = self.n_objectives();
@@ -1289,7 +1365,13 @@ impl Study {
             .iter()
             .map(|t| to_losses(&t.objective_values(), &self.directions))
             .collect();
-        let fronts = nondominated_sort(&losses);
+        let fronts = if candidates.iter().any(|t| !t.constraints.is_empty()) {
+            let violations: Vec<f64> =
+                candidates.iter().map(|t| t.total_violation()).collect();
+            nondominated_sort_constrained(&losses, &violations)
+        } else {
+            nondominated_sort(&losses)
+        };
         let mut front: Vec<FrozenTrial> =
             fronts[0].iter().map(|&i| candidates[i].clone()).collect();
         front.sort_by_key(|t| t.number);
@@ -2383,5 +2465,75 @@ mod tests {
             })
             .unwrap();
         assert_eq!(study.trials().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn sampler_spec_resolves_through_registry() {
+        let study = Study::builder()
+            .name("spec")
+            .sampler_spec("tpe:n_startup=3,candidates=8")
+            .pruner_spec("asha:reduction=3")
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(study.sampler.name(), "tpe");
+        assert_eq!(study.pruner.name(), "asha");
+        study
+            .optimize(8, |t| {
+                let x = t.suggest_float("x", -1.0, 1.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+        assert_eq!(study.trials().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn sampler_spec_errors_are_typed_and_enumerate_names() {
+        let err = Study::builder()
+            .name("spec-bad")
+            .sampler_spec("genetic")
+            .build()
+            .unwrap_err();
+        match err {
+            OptunaError::InvalidParam(msg) => {
+                assert!(msg.contains("unknown sampler 'genetic'"), "{msg}");
+                assert!(msg.contains("tpe"), "must enumerate registered names: {msg}");
+            }
+            other => panic!("expected InvalidParam, got {other:?}"),
+        }
+        // spec + explicit instance is a contradiction, not a silent pick
+        let err = Study::builder()
+            .name("spec-both")
+            .sampler(Arc::new(RandomSampler::new(0)))
+            .sampler_spec("random")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, OptunaError::InvalidParam(_)), "{err:?}");
+    }
+
+    #[test]
+    fn best_trials_applies_deb_dominance_when_constraints_reported() {
+        let study = Study::builder()
+            .name("constrained-front")
+            .directions(&[StudyDirection::Minimize, StudyDirection::Minimize])
+            .sampler(Arc::new(RandomSampler::new(11)))
+            .build()
+            .unwrap();
+        // four hand-placed points: the two infeasible ones Pareto-dominate
+        // everything, but Deb's rules must keep them off the front
+        let place = |xy: (f64, f64), violation: f64| {
+            let mut t = study.ask().unwrap();
+            t.suggest_float("x", 0.0, 1.0).unwrap();
+            t.report_constraints(&[violation]).unwrap();
+            study.tell(t, TrialOutcome::CompleteValues(vec![xy.0, xy.1])).unwrap();
+        };
+        place((0.0, 0.0), 1.0); // infeasible, dominates all
+        place((0.1, 0.1), 0.5); // infeasible
+        place((0.5, 1.0), -1.0); // feasible, front
+        place((1.0, 0.5), 0.0); // feasible (boundary), front
+        let front = study.best_trials().unwrap();
+        let numbers: Vec<u64> = front.iter().map(|t| t.number).collect();
+        assert_eq!(numbers, vec![2, 3], "front must be the feasible points");
+        assert!(front.iter().all(|t| t.is_feasible()));
     }
 }

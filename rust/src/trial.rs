@@ -85,6 +85,13 @@ pub trait TrialApi {
     /// Attach a user attribute to the trial.
     fn set_user_attr(&mut self, key: &str, value: &str) -> Result<(), OptunaError>;
 
+    /// Report the trial's constraint values: `c <= 0` means satisfied,
+    /// anything positive (or NaN) violates. Feasibility-aware samplers
+    /// ([`crate::multi::dominates_constrained`], constrained NSGA-II /
+    /// TPE) read these off the [`FrozenTrial`]; an empty vector — or
+    /// never calling this — leaves the trial unconstrained (feasible).
+    fn report_constraints(&mut self, constraints: &[f64]) -> Result<(), OptunaError>;
+
     /// Trial number within the study.
     fn number(&self) -> u64;
 }
@@ -238,6 +245,10 @@ impl TrialApi for Trial<'_> {
         self.study.storage.set_trial_user_attr(self.trial_id, key, value)
     }
 
+    fn report_constraints(&mut self, constraints: &[f64]) -> Result<(), OptunaError> {
+        self.study.storage.set_trial_constraints(self.trial_id, constraints)
+    }
+
     fn number(&self) -> u64 {
         self.number
     }
@@ -268,6 +279,7 @@ pub struct FixedTrial {
     /// Params the objective asked for that were not provided.
     missing: Vec<String>,
     user_attrs: BTreeMap<String, String>,
+    constraints: Vec<f64>,
 }
 
 impl FixedTrial {
@@ -279,6 +291,7 @@ impl FixedTrial {
                 .collect(),
             missing: Vec::new(),
             user_attrs: BTreeMap::new(),
+            constraints: Vec::new(),
         }
     }
 
@@ -292,12 +305,18 @@ impl FixedTrial {
                 .collect(),
             missing: Vec::new(),
             user_attrs: BTreeMap::new(),
+            constraints: Vec::new(),
         }
     }
 
     /// Names the objective requested but the fixed set lacked.
     pub fn missing_params(&self) -> &[String] {
         &self.missing
+    }
+
+    /// Constraint values the objective reported during replay.
+    pub fn reported_constraints(&self) -> &[f64] {
+        &self.constraints
     }
 }
 
@@ -332,6 +351,11 @@ impl TrialApi for FixedTrial {
     fn set_user_attr(&mut self, key: &str, value: &str) -> Result<(), OptunaError> {
         self.user_attrs.insert(key.to_string(), value.to_string());
         Ok(())
+    }
+
+    fn report_constraints(&mut self, constraints: &[f64]) -> Result<(), OptunaError> {
+        self.constraints = constraints.to_vec();
+        Ok(()) // deployment: recorded but drives nothing
     }
 
     fn number(&self) -> u64 {

@@ -1,0 +1,220 @@
+//! Constrained multi-objective workloads (ISSUE 8): the evalset MOO
+//! protocol extended with inequality constraints `c(x) <= 0`. Each
+//! problem's [`ConstrainedMooFunction::objective`] reports its
+//! constraint vector through
+//! [`crate::trial::TrialApi::report_constraints`], so a study running it
+//! gets feasibility-aware fronts from [`crate::study::Study::best_trials`]
+//! and feasibility-aware selection from constrained NSGA-II / TPE — with
+//! no extra wiring in the runner (CLI, benches, tests all share this
+//! single definition, like the unconstrained table).
+//!
+//! Two problems:
+//!
+//! * `czdt1` — ZDT1 with the unconstrained optimum forbidden:
+//!   `c = 0.3 − f₁ <= 0` cuts off the `f₁ < 0.3` arm of the convex
+//!   front, where blind optimizers concentrate. The feasible front is
+//!   `f₂ = 1 − √f₁` on `f₁ ∈ [0.3, 1]`.
+//! * `acclat` — an accuracy-vs-latency model-deployment sim under a
+//!   memory cap: deeper/wider networks are more accurate but slower and
+//!   bigger; quantization shrinks memory and latency at an accuracy
+//!   cost. The cap makes the accurate corner infeasible unless
+//!   quantized — the constraint actively bends the front.
+
+use crate::core::OptunaError;
+use crate::trial::{Trial, TrialApi};
+
+/// One constrained multi-objective problem (objectives minimized,
+/// constraints satisfied at `c <= 0`).
+pub struct ConstrainedMooFunction {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_obj: usize,
+    pub n_cons: usize,
+    /// (low, high) per dimension.
+    pub bounds: Vec<(f64, f64)>,
+    /// Hypervolume reference point (see [`super::MooFunction::ref_point`]).
+    pub ref_point: Vec<f64>,
+    /// `x -> (objectives, constraints)`.
+    pub f: fn(&[f64]) -> (Vec<f64>, Vec<f64>),
+}
+
+impl ConstrainedMooFunction {
+    /// Evaluate, asserting dimension and arities.
+    pub fn eval(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(x.len(), self.dim, "{}: wrong dimension", self.name);
+        let (v, c) = (self.f)(x);
+        debug_assert_eq!(v.len(), self.n_obj, "{}: wrong objective count", self.name);
+        debug_assert_eq!(c.len(), self.n_cons, "{}: wrong constraint count", self.name);
+        (v, c)
+    }
+
+    /// The shared study objective: suggest one `x<ii>` parameter per
+    /// dimension, evaluate, report the constraint vector, return the
+    /// objective vector (same naming scheme as the unconstrained table).
+    pub fn objective(&self, t: &mut Trial<'_>) -> Result<Vec<f64>, OptunaError> {
+        let x: Vec<f64> = self
+            .bounds
+            .iter()
+            .enumerate()
+            .map(|(i, (lo, hi))| t.suggest_float(&format!("x{i:02}"), *lo, *hi))
+            .collect::<Result<_, _>>()?;
+        let (values, constraints) = self.eval(&x);
+        t.report_constraints(&constraints)?;
+        Ok(values)
+    }
+}
+
+/// ZDT1 (dim 8) with `f₁ >= 0.3` as the constraint `0.3 − f₁ <= 0`.
+/// Dim 8 (not the classic 30) keeps the bench's fixed-budget studies
+/// able to reach the front region at all.
+pub fn czdt1(x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let v = super::moo::zdt1(x);
+    let c = 0.3 - v[0];
+    (v, vec![c])
+}
+
+/// Accuracy-vs-latency under a memory cap. Parameters:
+/// `x0` = layers in [1, 12], `x1` = log₂ width in [4, 9]
+/// (width 16..512), `x2` = quantization fraction in [0, 1].
+///
+/// * error (minimize): falls with capacity = layers·width, rises
+///   mildly with quantization;
+/// * latency (minimize): rises with layers and width, falls with
+///   quantization;
+/// * memory constraint: `layers·width·(1 − q/2)` must fit an 8 "MB"
+///   cap (`c = mem/cap − 1 <= 0`) — the accurate corner only fits
+///   when quantized.
+pub fn acclat(x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let (layers, log_width, quant) = (x[0], x[1], x[2]);
+    let width = log_width.exp2();
+    let capacity = layers * width;
+    let error = 0.02 + 1.6 / capacity.powf(0.4) + 0.08 * quant;
+    let latency_ms = 0.05 * layers * width.powf(0.8) / (1.0 + 2.0 * quant);
+    let mem_mb = layers * width * (1.0 - 0.5 * quant) / 256.0;
+    let cap_mb = 8.0;
+    (vec![error, latency_ms], vec![mem_mb / cap_mb - 1.0])
+}
+
+/// The constrained problem table (the shape of
+/// [`super::moo_functions`], constraints added).
+pub fn cmoo_functions() -> Vec<ConstrainedMooFunction> {
+    vec![
+        ConstrainedMooFunction {
+            name: "czdt1",
+            dim: 8,
+            n_obj: 2,
+            n_cons: 1,
+            bounds: vec![(0.0, 1.0); 8],
+            // f1 <= 1, f2 <= g <= 10 (same envelope as zdt1)
+            ref_point: vec![1.1, 11.0],
+            f: czdt1,
+        },
+        ConstrainedMooFunction {
+            name: "acclat",
+            dim: 3,
+            n_obj: 2,
+            n_cons: 1,
+            bounds: vec![(1.0, 12.0), (4.0, 9.0), (0.0, 1.0)],
+            // error <= 0.02 + 1.6/16^0.4 + 0.08 < 0.63; latency <=
+            // 0.05·12·512^0.8 < 89
+            ref_point: vec![0.8, 100.0],
+            f: acclat,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn table_is_well_formed() {
+        for f in cmoo_functions() {
+            assert_eq!(f.bounds.len(), f.dim, "{}", f.name);
+            assert_eq!(f.ref_point.len(), f.n_obj, "{}", f.name);
+            let mid: Vec<f64> = f.bounds.iter().map(|(lo, hi)| 0.5 * (lo + hi)).collect();
+            let (v, c) = f.eval(&mid);
+            assert_eq!(v.len(), f.n_obj, "{}", f.name);
+            assert_eq!(c.len(), f.n_cons, "{}", f.name);
+            assert!(v.iter().chain(&c).all(|x| x.is_finite()), "{}: {v:?} {c:?}", f.name);
+        }
+    }
+
+    #[test]
+    fn czdt1_constraint_cuts_the_low_f1_arm() {
+        // on the true front (tail = 0): f1 < 0.3 infeasible, f1 >= 0.3 feasible
+        let at = |f1: f64| {
+            let mut x = vec![0.0; 8];
+            x[0] = f1;
+            czdt1(&x)
+        };
+        let (v, c) = at(0.1);
+        assert!(c[0] > 0.0, "f1=0.1 must violate");
+        assert!((v[1] - (1.0 - 0.1f64.sqrt())).abs() < 1e-12);
+        let (_, c) = at(0.3);
+        assert!(c[0].abs() < 1e-12, "f1=0.3 is the boundary");
+        let (_, c) = at(0.8);
+        assert!(c[0] < 0.0, "f1=0.8 is feasible");
+    }
+
+    #[test]
+    fn acclat_tradeoffs_point_the_right_way() {
+        // more capacity: more accurate, slower, bigger
+        let small = acclat(&[2.0, 5.0, 0.0]);
+        let large = acclat(&[10.0, 8.0, 0.0]);
+        assert!(large.0[0] < small.0[0], "bigger nets are more accurate");
+        assert!(large.0[1] > small.0[1], "bigger nets are slower");
+        assert!(large.1[0] > small.1[0], "bigger nets use more memory");
+        // the big accurate corner violates the cap until quantized
+        assert!(large.1[0] > 0.0, "10x256 must exceed the 8MB cap");
+        let quantized = acclat(&[10.0, 8.0, 1.0]);
+        assert!(quantized.1[0] < large.1[0]);
+        assert!(quantized.0[1] < large.0[1], "quantization buys latency");
+        assert!(quantized.0[0] > large.0[0], "quantization costs accuracy");
+        // and the small corner is always feasible
+        assert!(small.1[0] < 0.0);
+    }
+
+    #[test]
+    fn random_points_stay_inside_reference() {
+        let mut rng = Pcg64::new(3);
+        for f in cmoo_functions() {
+            for _ in 0..300 {
+                let x: Vec<f64> = f
+                    .bounds
+                    .iter()
+                    .map(|(lo, hi)| rng.uniform_range(*lo, *hi))
+                    .collect();
+                let (v, _) = f.eval(&x);
+                for (vi, ri) in v.iter().zip(&f.ref_point) {
+                    assert!(vi < ri, "{}: objective {vi} >= reference {ri}", f.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feasible_region_is_reachable_by_random_search() {
+        let mut rng = Pcg64::new(4);
+        for f in cmoo_functions() {
+            let mut feasible = 0;
+            for _ in 0..200 {
+                let x: Vec<f64> = f
+                    .bounds
+                    .iter()
+                    .map(|(lo, hi)| rng.uniform_range(*lo, *hi))
+                    .collect();
+                let (_, c) = f.eval(&x);
+                if c.iter().all(|&ci| ci <= 0.0) {
+                    feasible += 1;
+                }
+            }
+            assert!(
+                feasible >= 20,
+                "{}: only {feasible}/200 random points feasible — too tight to optimize",
+                f.name
+            );
+        }
+    }
+}

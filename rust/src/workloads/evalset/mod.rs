@@ -8,8 +8,10 @@
 //! (fixed bounds per dimension, known optima where available).
 
 mod functions;
+pub mod cmoo;
 pub mod moo;
 
+pub use cmoo::{cmoo_functions, ConstrainedMooFunction};
 pub use functions::all_functions;
 pub use moo::{moo_functions, MooFunction};
 

@@ -78,6 +78,41 @@ fn pre_snapshot_journal_opens_on_new_binary() {
 }
 
 #[test]
+fn pre_constraints_journal_replays_trials_as_unconstrained() {
+    // A journal written before the `constraints` op existed (ISSUE 8):
+    // every trial replays with an empty constraint vector, i.e. feasible.
+    let legacy = concat!(
+        "{\"direction\":\"minimize\",\"name\":\"precon\",\"op\":\"create_study\"}\n",
+        "{\"op\":\"create_trial\",\"study\":0,\"time\":1000}\n",
+        "{\"op\":\"finish\",\"state\":\"complete\",\"time\":2000,\"trial\":0,\"value\":1.0}\n",
+    );
+    let path = tmp_path("precon");
+    std::fs::write(&path, legacy).expect("write legacy journal");
+    let s = JournalStorage::open(&path).expect("pre-constraints journal opens");
+    let t = s.get_trial(0).expect("trial");
+    assert!(t.constraints.is_empty());
+    assert!(t.is_feasible(), "no constraints recorded means feasible");
+
+    // the new binary can attach constraints, and they survive reopen,
+    // compaction, and a binary re-framing
+    let (tid, _) = s.create_trial(0).expect("new trial");
+    s.set_trial_constraints(tid, &[0.75, f64::NAN]).expect("write constraints");
+    drop(s);
+    let s = JournalStorage::open(&path).expect("reopen");
+    let t = s.get_trial(tid).expect("trial");
+    assert_eq!(t.constraints[0], 0.75);
+    assert!(t.constraints[1].is_nan(), "NaN constraint must survive replay");
+    assert!(!t.is_feasible());
+    s.compact().expect("compact");
+    s.compact_as(JournalFormat::Binary).expect("binary compaction");
+    drop(s);
+    let s = JournalStorage::open(&path).expect("reopen after compactions");
+    assert_eq!(s.get_trial(tid).expect("trial").constraints.len(), 2);
+    assert!(s.get_trial(0).expect("trial 0").constraints.is_empty());
+    rm(&path);
+}
+
+#[test]
 fn unknown_future_ops_survive_replay_and_two_compactions() {
     let path = tmp_path("future");
     {

@@ -1,0 +1,102 @@
+//! Out-of-crate extension test for the algorithm registry (ISSUE 8
+//! acceptance): a sampler defined *here* — outside the crate — is
+//! registered by name, resolved through a spec string with its own
+//! config key, and drives a real study end to end via
+//! `StudyBuilder::sampler_spec`.
+
+use optuna_rs::core::Distribution;
+use optuna_rs::prelude::*;
+use optuna_rs::registry;
+use optuna_rs::sampler::{SearchSpace, StudyContext};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A deliberately boring external sampler: every parameter lands at a
+/// fixed fraction of its internal range. Deterministic, so the test can
+/// assert the exact values that come out of `suggest_float`.
+struct FixedFractionSampler {
+    frac: f64,
+}
+
+impl Sampler for FixedFractionSampler {
+    fn infer_relative_search_space(&self, _ctx: &StudyContext<'_>) -> SearchSpace {
+        SearchSpace::new()
+    }
+
+    fn sample_relative(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _space: &SearchSpace,
+    ) -> BTreeMap<String, f64> {
+        BTreeMap::new()
+    }
+
+    fn sample_independent(
+        &self,
+        _ctx: &StudyContext<'_>,
+        _trial_number: u64,
+        _name: &str,
+        dist: &Distribution,
+    ) -> f64 {
+        let (lo, hi) = dist.internal_range();
+        lo + self.frac * (hi - lo)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-fraction"
+    }
+}
+
+fn register() {
+    registry::register_sampler("fixed-fraction", |cfg, _seed| {
+        let frac = cfg.get_f64("frac")?.unwrap_or(0.5);
+        if !(0.0..=1.0).contains(&frac) {
+            return Err(format!("frac must be in [0, 1], got {frac}"));
+        }
+        Ok(Arc::new(FixedFractionSampler { frac }) as Arc<dyn Sampler>)
+    });
+}
+
+#[test]
+fn external_sampler_resolves_by_spec_and_runs_a_study() {
+    register();
+
+    // listed alongside the built-ins
+    assert!(registry::sampler_names().iter().any(|n| n == "fixed-fraction"));
+
+    let study = Study::builder()
+        .name("ext-sampler")
+        .sampler_spec("fixed-fraction:frac=0.25")
+        .build()
+        .expect("external name must resolve like a built-in");
+    assert_eq!(study.sampler_name(), "fixed-fraction");
+
+    study
+        .optimize(5, |t| {
+            let x = t.suggest_float("x", -4.0, 4.0)?;
+            let y = t.suggest_float("y", 0.0, 10.0)?;
+            // frac=0.25 of each range, every trial
+            assert!((x - (-2.0)).abs() < 1e-12, "x = {x}");
+            assert!((y - 2.5).abs() < 1e-12, "y = {y}");
+            Ok(x * x + y)
+        })
+        .expect("optimize");
+    let best = study.best_trial().expect("best").expect("some trial");
+    assert!((best.value.unwrap() - 6.5).abs() < 1e-9);
+}
+
+#[test]
+fn external_sampler_config_errors_are_attributed() {
+    register();
+
+    // factory-level validation error names the algorithm
+    let err = registry::make_sampler("fixed-fraction:frac=2.0", 0).unwrap_err();
+    assert!(err.contains("fixed-fraction"), "{err}");
+    assert!(err.contains("frac"), "{err}");
+
+    // leftover unknown keys are rejected after the factory ran
+    let err = registry::make_sampler("fixed-fraction:frca=0.5", 0).unwrap_err();
+    assert!(err.contains("unknown key"), "{err}");
+    assert!(err.contains("frca"), "{err}");
+}
