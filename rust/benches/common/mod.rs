@@ -1,6 +1,8 @@
 #![allow(dead_code)]
 //! Shared helpers for the bench harnesses.
 
+pub mod report;
+
 use optuna_rs::prelude::*;
 use optuna_rs::sampler::Sampler;
 use optuna_rs::workloads::evalset::TestFunction;

@@ -1,0 +1,100 @@
+//! Insertion-order-preserving writer for the `BENCH_*.json` artifacts.
+//!
+//! Every bench harness emits the same shape — `{"bench": ..., "unit":
+//! ..., <scalar metrics>, "rows": [<flat row objects>]}` — with the
+//! output path overridable through a per-bench env var so CI can
+//! redirect artifacts. `util::json::Json` is not used here on purpose:
+//! its objects are BTreeMaps and would alphabetize keys, breaking the
+//! long-standing field order of the archived artifacts.
+
+/// Render a float at fixed precision (JSON number).
+pub fn f(v: f64, precision: usize) -> String {
+    format!("{v:.precision$}")
+}
+
+/// Render an integer (JSON number).
+pub fn u(v: u64) -> String {
+    v.to_string()
+}
+
+/// Render a string (JSON string). The bench vocabulary never needs
+/// escaping, but quotes and backslashes are handled anyway.
+pub fn s(v: &str) -> String {
+    format!("\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+/// Nearest-rank percentile of an unsorted sample set.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of an empty sample set");
+    assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// A `BENCH_*.json` document under construction. Scalars and row fields
+/// render in insertion order.
+pub struct BenchReport {
+    name: &'static str,
+    unit: &'static str,
+    env_key: &'static str,
+    default_path: &'static str,
+    scalars: Vec<(String, String)>,
+    rows: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(
+        name: &'static str,
+        unit: &'static str,
+        env_key: &'static str,
+        default_path: &'static str,
+    ) -> Self {
+        BenchReport { name, unit, env_key, default_path, scalars: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Add a top-level metric (after `bench`/`unit`, before `rows`).
+    /// `value` is an already-rendered JSON value ([`f`], [`u`], [`s`]).
+    pub fn scalar(&mut self, key: &str, value: String) {
+        self.scalars.push((key.to_string(), value));
+    }
+
+    /// Append one flat row object; fields keep the given order.
+    pub fn row(&mut self, fields: &[(&str, String)]) {
+        let inner = fields
+            .iter()
+            .map(|(k, v)| format!("\"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        self.rows.push(format!("{{{inner}}}"));
+    }
+
+    /// Serialize the document (2-space indent, one row per line).
+    pub fn render(&self) -> String {
+        let mut body =
+            format!("{{\n  \"bench\": \"{}\",\n  \"unit\": \"{}\",\n", self.name, self.unit);
+        for (k, v) in &self.scalars {
+            body.push_str(&format!("  \"{k}\": {v},\n"));
+        }
+        body.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let comma = if i + 1 == self.rows.len() { "" } else { "," };
+            body.push_str(&format!("    {r}{comma}\n"));
+        }
+        body.push_str("  ]\n}\n");
+        body
+    }
+
+    /// Write to the env-overridable path and report it on stdout; a
+    /// write failure is loud but non-fatal (the bench already printed
+    /// its table).
+    pub fn write(&self) {
+        let path =
+            std::env::var(self.env_key).unwrap_or_else(|_| self.default_path.to_string());
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

@@ -147,23 +147,22 @@ fn main() {
 /// variant must close out ahead on feasible hypervolume with a fully
 /// feasible front; the JSON keeps the trend auditable.
 fn write_json(rows: &[(String, String, usize, f64, f64, f64)]) {
-    let path = std::env::var("BENCH_CONSTRAINED_JSON")
-        .unwrap_or_else(|_| "BENCH_constrained.json".to_string());
-    let mut body = String::from(
-        "{\n  \"bench\": \"constrained_feasible_hypervolume\",\n  \
-         \"unit\": \"hypervolume\",\n  \"rows\": [\n",
+    use common::report::{f, s, u, BenchReport};
+    let mut rep = BenchReport::new(
+        "constrained_feasible_hypervolume",
+        "hypervolume",
+        "BENCH_CONSTRAINED_JSON",
+        "BENCH_constrained.json",
     );
-    for (i, (function, variant, trials, m, s, fr)) in rows.iter().enumerate() {
-        let comma = if i + 1 == rows.len() { "" } else { "," };
-        body.push_str(&format!(
-            "    {{\"function\": \"{function}\", \"variant\": \"{variant}\", \
-             \"n_trials\": {trials}, \"mean_feasible_hv\": {m:.6}, \"sem\": {s:.6}, \
-             \"feasible_frac\": {fr:.4}}}{comma}\n"
-        ));
+    for (function, variant, trials, m, sem, fr) in rows {
+        rep.row(&[
+            ("function", s(function)),
+            ("variant", s(variant)),
+            ("n_trials", u(*trials as u64)),
+            ("mean_feasible_hv", f(*m, 6)),
+            ("sem", f(*sem, 6)),
+            ("feasible_frac", f(*fr, 4)),
+        ]);
     }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, &body) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    rep.write();
 }

@@ -169,28 +169,18 @@ fn write_bench_journal_json(
     speedup_lines: f64,
     speedup_binary: f64,
 ) {
-    let path = std::env::var("BENCH_JOURNAL_JSON")
-        .unwrap_or_else(|_| "BENCH_journal.json".to_string());
-    let mut body =
-        String::from("{\n  \"bench\": \"journal_recovery\",\n  \"unit\": \"seconds\",\n");
-    body.push_str(&format!("  \"trials\": {n_trials},\n"));
-    body.push_str(&format!(
-        "  \"recovery_speedup_compacted_lines\": {speedup_lines:.3},\n"
-    ));
-    body.push_str(&format!(
-        "  \"recovery_speedup_compacted_binary\": {speedup_binary:.3},\n"
-    ));
-    body.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        let comma = if i + 1 == rows.len() { "" } else { "," };
-        body.push_str(&format!(
-            "    {{\"variant\": \"{}\", \"bytes\": {}, \"open_secs\": {:.6}}}{comma}\n",
-            r.variant, r.bytes, r.open_secs
-        ));
+    use common::report::{f, u, BenchReport};
+    let mut rep =
+        BenchReport::new("journal_recovery", "seconds", "BENCH_JOURNAL_JSON", "BENCH_journal.json");
+    rep.scalar("trials", u(n_trials as u64));
+    rep.scalar("recovery_speedup_compacted_lines", f(speedup_lines, 3));
+    rep.scalar("recovery_speedup_compacted_binary", f(speedup_binary, 3));
+    for r in rows {
+        rep.row(&[
+            ("variant", common::report::s(r.variant)),
+            ("bytes", u(r.bytes)),
+            ("open_secs", f(r.open_secs, 6)),
+        ]);
     }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, &body) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    rep.write();
 }

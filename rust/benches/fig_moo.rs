@@ -97,21 +97,17 @@ fn main() {
 /// Machine-readable results for CI artifacts (ISSUE 4: NSGA-II must beat
 /// random on final hypervolume; the JSON keeps the trend auditable).
 fn write_bench_moo_json(rows: &[(String, String, usize, f64, f64)]) {
-    let path =
-        std::env::var("BENCH_MOO_JSON").unwrap_or_else(|_| "BENCH_moo.json".to_string());
-    let mut body = String::from(
-        "{\n  \"bench\": \"moo_hypervolume\",\n  \"unit\": \"hypervolume\",\n  \"rows\": [\n",
-    );
-    for (i, (function, sampler, trials, m, s)) in rows.iter().enumerate() {
-        let comma = if i + 1 == rows.len() { "" } else { "," };
-        body.push_str(&format!(
-            "    {{\"function\": \"{function}\", \"sampler\": \"{sampler}\", \
-             \"n_trials\": {trials}, \"mean_hv\": {m:.6}, \"sem\": {s:.6}}}{comma}\n"
-        ));
+    use common::report::{f, s, u, BenchReport};
+    let mut rep =
+        BenchReport::new("moo_hypervolume", "hypervolume", "BENCH_MOO_JSON", "BENCH_moo.json");
+    for (function, sampler, trials, m, sem) in rows {
+        rep.row(&[
+            ("function", s(function)),
+            ("sampler", s(sampler)),
+            ("n_trials", u(*trials as u64)),
+            ("mean_hv", f(*m, 6)),
+            ("sem", f(*sem, 6)),
+        ]);
     }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, &body) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    rep.write();
 }

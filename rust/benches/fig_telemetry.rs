@@ -1,0 +1,104 @@
+//! Telemetry overhead: instrumented vs uninstrumented ask/tell loops.
+//!
+//! Runs paired repetitions of the same seeded in-memory study — one with
+//! a [`Telemetry`] domain attached (storage decorator + spans live),
+//! one without — interleaved so clock drift and allocator state hit both
+//! variants equally. Reports per-variant p50/p95 rep times and the p50
+//! overhead percentage, and writes `BENCH_telemetry.json` (override the
+//! path with `BENCH_TELEMETRY_JSON`).
+//!
+//! CI gates the overhead: `TELEMETRY_GATE=5` exits non-zero when the
+//! instrumented p50 is more than 5% above the uninstrumented one.
+//! Knobs: `TELEMETRY_REPS` (default 9), `TELEMETRY_TRIALS` (default
+//! 2000 trials per rep).
+
+mod common;
+
+use common::env_usize;
+use common::report::{f, percentile, s, u, BenchReport};
+use optuna_rs::prelude::*;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One rep: a fresh seeded study over the in-memory backend, returning
+/// the wall seconds for `trials` ask/tell cycles.
+fn run_once(trials: usize, seed: u64, telemetry: Option<Arc<Telemetry>>) -> f64 {
+    let mut builder = Study::builder()
+        .name("telemetry-bench")
+        .sampler(Arc::new(RandomSampler::new(seed)));
+    if let Some(tel) = telemetry {
+        builder = builder.telemetry(tel);
+    }
+    let study = builder.build().expect("study");
+    let t0 = Instant::now();
+    study
+        .optimize(trials, |t| {
+            let x = t.suggest_float("x", -5.0, 5.0)?;
+            let y = t.suggest_float("y", -5.0, 5.0)?;
+            Ok((x - 1.0).powi(2) + y.powi(2))
+        })
+        .expect("optimize");
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let reps = env_usize("TELEMETRY_REPS", 9);
+    let trials = env_usize("TELEMETRY_TRIALS", 2_000);
+
+    // one throwaway rep per variant warms code paths and the allocator
+    run_once(trials, 0, None);
+    run_once(trials, 0, Some(Telemetry::new()));
+
+    let mut off = Vec::with_capacity(reps);
+    let mut on = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let seed = rep as u64 + 1;
+        off.push(run_once(trials, seed, None));
+        on.push(run_once(trials, seed, Some(Telemetry::new())));
+    }
+
+    let (p50_off, p95_off) = (percentile(&off, 0.5), percentile(&off, 0.95));
+    let (p50_on, p95_on) = (percentile(&on, 0.5), percentile(&on, 0.95));
+    let overhead_pct = (p50_on / p50_off.max(1e-12) - 1.0) * 100.0;
+
+    common::print_header(
+        &format!("telemetry overhead, {trials} trials x {reps} reps"),
+        &["variant", "p50 secs", "p95 secs", "trials/s"],
+    );
+    for (variant, p50, p95) in
+        [("uninstrumented", p50_off, p95_off), ("instrumented", p50_on, p95_on)]
+    {
+        println!("{variant} | {p50:.4} | {p95:.4} | {:.0}", trials as f64 / p50);
+    }
+    println!("\np50 overhead: {overhead_pct:+.2}%");
+
+    let mut rep = BenchReport::new(
+        "telemetry_overhead",
+        "seconds_per_rep",
+        "BENCH_TELEMETRY_JSON",
+        "BENCH_telemetry.json",
+    );
+    rep.scalar("trials_per_rep", u(trials as u64));
+    rep.scalar("reps", u(reps as u64));
+    rep.scalar("overhead_pct_p50", f(overhead_pct, 3));
+    for (variant, p50, p95) in
+        [("uninstrumented", p50_off, p95_off), ("instrumented", p50_on, p95_on)]
+    {
+        rep.row(&[
+            ("variant", s(variant)),
+            ("p50_secs", f(p50, 6)),
+            ("p95_secs", f(p95, 6)),
+            ("trials_per_sec", f(trials as f64 / p50, 1)),
+        ]);
+    }
+    rep.write();
+
+    if let Ok(gate) = std::env::var("TELEMETRY_GATE") {
+        let gate: f64 = gate.parse().expect("TELEMETRY_GATE must be a number (percent)");
+        if overhead_pct > gate {
+            eprintln!("FAIL: telemetry overhead {overhead_pct:.2}% exceeds gate {gate}%");
+            std::process::exit(1);
+        }
+        println!("gate ok: {overhead_pct:.2}% <= {gate}%");
+    }
+}

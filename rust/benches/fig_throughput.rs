@@ -127,29 +127,23 @@ fn main() {
 /// the single-Mutex baseline, and batch=32 must beat batch=1
 /// single-threaded).
 fn write_bench_throughput_json(rows: &[Row], speedup_8t: f64, batch_speedup: f64) {
-    let path = std::env::var("BENCH_THROUGHPUT_JSON")
-        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
-    let mut body = String::from(
-        "{\n  \"bench\": \"storage_throughput\",\n  \"unit\": \"trial_lifecycles_per_sec\",\n",
+    use common::report::{f, s, u, BenchReport};
+    let mut rep = BenchReport::new(
+        "storage_throughput",
+        "trial_lifecycles_per_sec",
+        "BENCH_THROUGHPUT_JSON",
+        "BENCH_throughput.json",
     );
-    body.push_str(&format!(
-        "  \"speedup_sharded_vs_single_mutex_8_threads\": {speedup_8t:.3},\n"
-    ));
-    body.push_str(&format!(
-        "  \"speedup_batch32_vs_batch1_1_thread\": {batch_speedup:.3},\n"
-    ));
-    body.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        let comma = if i + 1 == rows.len() { "" } else { "," };
-        body.push_str(&format!(
-            "    {{\"scenario\": \"{}\", \"backend\": \"{}\", \"threads\": {}, \
-             \"batch\": {}, \"pairs_per_sec\": {:.1}}}{comma}\n",
-            r.scenario, r.backend, r.threads, r.batch, r.pairs_per_sec
-        ));
+    rep.scalar("speedup_sharded_vs_single_mutex_8_threads", f(speedup_8t, 3));
+    rep.scalar("speedup_batch32_vs_batch1_1_thread", f(batch_speedup, 3));
+    for r in rows {
+        rep.row(&[
+            ("scenario", s(&r.scenario)),
+            ("backend", s(&r.backend)),
+            ("threads", u(r.threads as u64)),
+            ("batch", u(r.batch as u64)),
+            ("pairs_per_sec", f(r.pairs_per_sec, 1)),
+        ]);
     }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, &body) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    rep.write();
 }

@@ -335,24 +335,22 @@ fn sampler_index_ablation() {
 /// Machine-readable results for CI trend tracking (ISSUE 2 acceptance:
 /// >= 5x lower ask latency at 10k trials, sublinear growth when indexed).
 fn write_bench_samplers_json(rows: &[(usize, f64, f64)]) {
-    let path = std::env::var("BENCH_SAMPLERS_JSON")
-        .unwrap_or_else(|_| "BENCH_samplers.json".to_string());
-    let mut body = String::from(
-        "{\n  \"bench\": \"tpe_ask_latency\",\n  \"unit\": \"us_per_ask\",\n  \"rows\": [\n",
+    use common::report::{f, u, BenchReport};
+    let mut rep = BenchReport::new(
+        "tpe_ask_latency",
+        "us_per_ask",
+        "BENCH_SAMPLERS_JSON",
+        "BENCH_samplers.json",
     );
-    for (i, &(n, seed, indexed)) in rows.iter().enumerate() {
-        let comma = if i + 1 == rows.len() { "" } else { "," };
-        body.push_str(&format!(
-            "    {{\"n_trials\": {n}, \"seed_us\": {seed:.3}, \
-             \"indexed_us\": {indexed:.3}, \"speedup\": {:.3}}}{comma}\n",
-            seed / indexed,
-        ));
+    for &(n, seed, indexed) in rows {
+        rep.row(&[
+            ("n_trials", u(n as u64)),
+            ("seed_us", f(seed, 3)),
+            ("indexed_us", f(indexed, 3)),
+            ("speedup", f(seed / indexed, 3)),
+        ]);
     }
-    body.push_str("  ]\n}\n");
-    match std::fs::write(&path, &body) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
-    }
+    rep.write();
 }
 
 fn failover_primitives() {

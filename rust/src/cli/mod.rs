@@ -38,15 +38,17 @@
 //! backend (or, with `--baseline true`, the pre-shard single-Mutex
 //! discipline) — the CLI face of `benches/fig_throughput.rs`.
 
-use crate::core::{OptunaError, StudyDirection, TrialState};
+use crate::core::{Distribution, OptunaError, StudyDirection, TrialState};
 use crate::multi::{hypervolume, to_losses};
 use crate::pruner::Pruner;
 use crate::sampler::Sampler;
 use crate::storage::{
     now_ms, FaultInjectionStorage, FaultSchedule, InMemoryStorage, JournalFormat,
-    JournalOptions, JournalStorage, ResilienceConfig, SingleMutexStorage, Storage, TrialFinish,
+    JournalOptions, JournalStorage, ParamSet, ResilienceConfig, ResilientStorage,
+    SingleMutexStorage, Storage, TelemetryStorage, TrialFinish,
 };
-use crate::study::{FailoverConfig, Study};
+use crate::study::{FailoverConfig, Study, TrialOutcome};
+use crate::telemetry::Telemetry;
 use crate::trial::{Trial, TrialApi};
 use crate::workloads::{ffmpeg_sim, hpl_sim, rocksdb_sim, svhn_surrogate};
 use std::collections::BTreeMap;
@@ -91,7 +93,7 @@ impl Args {
 }
 
 fn usage() -> String {
-    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies|compact|bench-throughput> \
+    "usage: optuna <create-study|optimize|worker|distributed|best|pareto|export|dashboard|studies|compact|metrics|bench-throughput> \
      --storage <memory:|journal://PATH|journal+bin://PATH> --study NAME \
      [--auto-compact-mb N] [--format lines|binary] \
      [--direction minimize|maximize] [--directions minimize,maximize,..] \
@@ -105,6 +107,7 @@ fn usage() -> String {
      [--faults 'seed=N;op=PAT,kind=K,p=P,latency-ms=N,mode=M,times=N;..'] \
      [--resilience true] [--retry N] [--retry-base-ms N] [--retry-max-ms N] \
      [--op-deadline-ms N] [--retry-jitter-seed N] \
+     [--telemetry true|false] [--metrics-out FILE] [--trace-out FILE] [--json-out FILE] \
      [--threads N] [--pairs N] [--batch N] [--baseline true] [--shared-study true]"
         .to_string()
 }
@@ -304,6 +307,163 @@ fn parse_resilience(args: &Args) -> Result<Option<ResilienceConfig>, String> {
     Ok(Some(cfg))
 }
 
+/// Parse the telemetry flags. Same opt-in rule as [`parse_resilience`]:
+/// `--telemetry true` or any output flag (`--metrics-out`, `--trace-out`)
+/// turns the instrumentation on, so no flag is ever silently ignored;
+/// `--telemetry false` forces it off.
+fn parse_telemetry(args: &Args) -> Result<bool, String> {
+    match args.get("telemetry") {
+        Some("false" | "off" | "0") => return Ok(false),
+        Some("true" | "on" | "1") => return Ok(true),
+        Some(other) => return Err(format!("bad --telemetry '{other}' (true|false)")),
+        None => {}
+    }
+    Ok(args.get("metrics-out").is_some() || args.get("trace-out").is_some())
+}
+
+/// Seconds rendered at human scale (`12.3us`, `4.56ms`, `1.200s`).
+fn fmt_secs(v: f64) -> String {
+    if v < 1e-3 {
+        format!("{:.1}us", v * 1e6)
+    } else if v < 1.0 {
+        format!("{:.2}ms", v * 1e3)
+    } else {
+        format!("{v:.3}s")
+    }
+}
+
+/// End-of-run telemetry block appended to `optimize`/`worker` output:
+/// span latencies, the resilience counters, and compaction totals.
+/// Empty when the study runs without telemetry.
+fn telemetry_summary(study: &Study) -> String {
+    let Some(tel) = study.telemetry() else {
+        return String::new();
+    };
+    study.fold_resilience_stats();
+    let snap = tel.registry().snapshot();
+    let mut out = String::new();
+    let span_line = |name: &str| {
+        let key = (
+            "optuna_span_duration_seconds".to_string(),
+            vec![("span".to_string(), name.to_string())],
+        );
+        let h = snap.histograms.get(&key)?;
+        if h.count == 0 {
+            return None;
+        }
+        Some(format!("{name} n={} p50={} p95={}", h.count, fmt_secs(h.p50), fmt_secs(h.p95)))
+    };
+    let spans: Vec<String> =
+        ["study.ask", "study.ask_batch", "study.tell", "study.tell_batch", "sampler.suggest"]
+            .iter()
+            .filter_map(|n| span_line(n))
+            .collect();
+    if !spans.is_empty() {
+        out.push_str(&format!("telemetry: {}\n", spans.join("; ")));
+    }
+    if let Some(stats) = study.resilience_stats() {
+        out.push_str(&format!(
+            "resilience: retries={} recovered={} exhausted={} degraded-heartbeats={} \
+             degraded-compactions={} stale-reads={} absorbed-ambiguous={}\n",
+            stats.retries,
+            stats.recovered,
+            stats.exhausted,
+            stats.dropped_heartbeats,
+            stats.dropped_compactions,
+            stats.stale_reads,
+            stats.absorbed_ambiguous
+        ));
+    }
+    let counter = |name: &str| {
+        snap.counters.get(&(name.to_string(), Vec::new())).copied().unwrap_or(0)
+    };
+    let compactions = counter("optuna_compactions_total");
+    if compactions > 0 {
+        out.push_str(&format!(
+            "compaction: runs={compactions} reclaimed={}B\n",
+            counter("optuna_compaction_bytes_reclaimed_total")
+        ));
+    }
+    out
+}
+
+/// Write the `--metrics-out` / `--trace-out` files from a telemetry
+/// handle: Prometheus text at the base path, a JSON snapshot beside it
+/// at `<base>.json`, and the span log as JSONL. Returns "wrote ..."
+/// lines for the command output.
+fn write_telemetry_outputs(args: &Args, tel: &Telemetry) -> Result<String, String> {
+    let mut out = String::new();
+    if let Some(base) = args.get("metrics-out") {
+        std::fs::write(base, tel.to_prometheus()).map_err(|e| e.to_string())?;
+        let json_path = format!("{base}.json");
+        std::fs::write(&json_path, tel.to_json_string()).map_err(|e| e.to_string())?;
+        out.push_str(&format!("wrote {base}\nwrote {json_path}\n"));
+    }
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, tel.tracer().export_jsonl()).map_err(|e| e.to_string())?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+/// Drive every [`Storage`] op once (the `metrics` command's synthetic
+/// probe), so each per-op latency histogram carries at least one sample
+/// and the error counters see one real failure. Study names carry `tag`
+/// so re-running against a persistent journal never collides.
+fn exercise_storage(s: &dyn Storage, tag: &str) -> Result<(), OptunaError> {
+    let name = format!("telemetry-probe-{tag}");
+    let sid = s.create_study(&name, StudyDirection::Minimize)?;
+    // a deliberate duplicate create lands one Logic error in the
+    // per-kind counters
+    let _ = s.create_study(&name, StudyDirection::Minimize);
+    let msid = s.create_study_multi(
+        &format!("{name}-moo"),
+        &[StudyDirection::Minimize, StudyDirection::Maximize],
+    )?;
+    s.get_study_id(&name)?;
+    s.get_study_direction(sid)?;
+    s.get_study_directions(msid)?;
+    s.study_names()?;
+    let (tid, _) = s.create_trial(sid)?;
+    let dist = Distribution::float(0.0, 1.0);
+    s.set_trial_param(tid, "x", &dist, 0.5)?;
+    s.set_trial_intermediate(tid, 1, 0.9)?;
+    s.set_trial_user_attr(tid, "probe", "1")?;
+    s.set_trial_constraints(tid, &[-1.0])?;
+    s.record_heartbeat(tid)?;
+    s.finish_trial(tid, TrialState::Complete, Some(0.5))?;
+    let (mid, _) = s.create_trial(msid)?;
+    s.finish_trial_values(mid, TrialState::Complete, &[0.5, 1.5])?;
+    let created = s.create_trials(sid, 3)?;
+    let finishes: Vec<TrialFinish> = created
+        .iter()
+        .map(|&(trial_id, n)| TrialFinish {
+            trial_id,
+            state: TrialState::Complete,
+            values: vec![n as f64],
+        })
+        .collect();
+    s.finish_trials(&finishes)?;
+    s.get_trial(tid)?;
+    s.get_all_trials(sid)?;
+    s.n_trials(sid)?;
+    s.study_seq(sid)?;
+    s.get_trials_since(sid, 0)?;
+    s.get_trials_snapshot(sid)?;
+    let mut params = ParamSet::new();
+    params.insert("x".into(), (dist, 0.25));
+    s.enqueue_trial(sid, &params, &BTreeMap::new())?;
+    if let Some((qid, _)) = s.pop_waiting_trial(sid)? {
+        s.finish_trial(qid, TrialState::Complete, Some(0.25))?;
+    }
+    s.fail_stale_trials(sid, Duration::from_secs(3600), &|_| None)?;
+    if let Some((cid, _)) = s.create_trial_capped(sid, 1_000_000)? {
+        s.finish_trial(cid, TrialState::Complete, Some(1.0))?;
+    }
+    s.try_compact()?;
+    Ok(())
+}
+
 /// Parse an explicit `--directions a,b,..` (or scalar `--direction`) flag;
 /// `Ok(None)` when neither was given.
 fn parse_directions(args: &Args) -> Result<Option<Vec<StudyDirection>>, String> {
@@ -341,11 +501,22 @@ fn build_study(
         None => storage,
     };
     // wrapped here (not via the builder) so the study lookup below is
-    // already behind the retry layer when faults are being injected
-    let storage: Arc<dyn Storage> = match parse_resilience(args)? {
-        Some(cfg) => Arc::new(crate::storage::ResilientStorage::new(storage, cfg)),
-        None => storage,
-    };
+    // already behind the retry layer when faults are being injected; the
+    // concrete handle is kept so the built study can expose its counters
+    let (storage, resilient): (Arc<dyn Storage>, Option<Arc<ResilientStorage>>) =
+        match parse_resilience(args)? {
+            Some(cfg) => {
+                let r = Arc::new(ResilientStorage::new(storage, cfg));
+                (r.clone(), Some(r))
+            }
+            None => (storage, None),
+        };
+    let telemetry_on = parse_telemetry(args)?;
+    if telemetry_on {
+        // the process-global handle, so journal-internal spans
+        // (replay/compaction) land in the same registry as storage ops
+        crate::telemetry::global().enable();
+    }
     let name = args.require("study")?.to_string();
     let existing = storage.get_study_id(&name).map_err(|e| e.to_string())?;
     if !create && existing.is_none() {
@@ -372,7 +543,14 @@ fn build_study(
     if let Some(cfg) = parse_failover(args, failover_default)? {
         builder = builder.failover(cfg);
     }
-    builder.build().map_err(|e| e.to_string())
+    if telemetry_on {
+        builder = builder.telemetry(crate::telemetry::global().clone());
+    }
+    let mut study = builder.build().map_err(|e| e.to_string())?;
+    // the retry layer was wrapped manually above, so hand the study its
+    // stats handle the same way the builder's own resilience path would
+    study.resilient = resilient;
+    Ok(study)
 }
 
 /// A boxed CLI objective (the workload closures all erased to one type).
@@ -523,18 +701,28 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
                     .collect();
                 let hv = hypervolume(&points, &to_losses(&ref_point, &study.directions))
                     .map_err(|e| e.to_string())?;
-                return Ok(format!(
+                let mut out = format!(
                     "completed {n_trials} trials on '{workload}'; \
                      pareto front = {} trial(s), hypervolume = {hv:.4}\n",
                     front.len()
-                ));
+                );
+                out.push_str(&telemetry_summary(&study));
+                if let Some(tel) = study.telemetry() {
+                    out.push_str(&write_telemetry_outputs(&args, tel)?);
+                }
+                return Ok(out);
             }
             run_workload(&study, &workload, n_trials).map_err(|e| e.to_string())?;
             let best = study.best_value().map_err(|e| e.to_string())?;
-            Ok(format!(
+            let mut out = format!(
                 "completed {n_trials} trials on '{workload}'; best = {}\n",
                 best.map(|v| v.to_string()).unwrap_or_else(|| "n/a".into())
-            ))
+            );
+            out.push_str(&telemetry_summary(&study));
+            if let Some(tel) = study.telemetry() {
+                out.push_str(&write_telemetry_outputs(&args, tel)?);
+            }
+            Ok(out)
         }
         "worker" => {
             // fault-tolerant budget-cooperating worker (failover defaults
@@ -580,11 +768,16 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
                 })
                 .map_err(|e| e.to_string())?;
             let best = study.best_value().map_err(|e| e.to_string())?;
-            Ok(format!(
+            let mut out = format!(
                 "worker {} done; study at {target} finished trials; best = {}\n",
                 std::process::id(),
                 best.map(|v| v.to_string()).unwrap_or_else(|| "n/a".into())
-            ))
+            );
+            out.push_str(&telemetry_summary(&study));
+            if let Some(tel) = study.telemetry() {
+                out.push_str(&write_telemetry_outputs(&args, tel)?);
+            }
+            Ok(out)
         }
         "distributed" => run_distributed(&args),
         "best" => {
@@ -701,6 +894,74 @@ fn run_inner(argv: &[String]) -> Result<String, String> {
                 "compacted gen {}: {} studies, {} trials, {} -> {} bytes\n",
                 stats.gen, stats.studies, stats.trials, stats.bytes_before, stats.bytes_after
             ))
+        }
+        "metrics" => {
+            // Synthetic instrumented probe: exercise the full Storage
+            // surface and a short ask/tell loop behind the telemetry
+            // decorator, then emit the Prometheus exposition on stdout
+            // (or at --out), the JSON snapshot at --json-out, and the
+            // span log at --trace-out. `--storage` targets a real
+            // backend; the default is a throwaway in-memory one.
+            let tel = crate::telemetry::global().clone();
+            tel.enable();
+            let backend: Arc<dyn Storage> = match args.get("storage") {
+                Some(url) => open_storage_with(url, parse_auto_compact(&args)?)?,
+                None => Arc::new(InMemoryStorage::new()),
+            };
+            let resilient = Arc::new(ResilientStorage::new(backend, ResilienceConfig::new()));
+            let wrapped: Arc<dyn Storage> =
+                Arc::new(TelemetryStorage::new(resilient.clone(), tel.clone()));
+            let tag = format!("{}-{}", now_ms(), std::process::id());
+            exercise_storage(wrapped.as_ref(), &tag).map_err(|e| e.to_string())?;
+            // a short study run over the *unwrapped* retry layer (the
+            // builder adds its own telemetry decorator) feeds the
+            // ask/tell/suggest span histograms without double-counting
+            // storage ops
+            let seed: u64 =
+                args.get_or("seed", "42").parse().map_err(|e| format!("bad --seed: {e}"))?;
+            let trials: usize = args
+                .get_or("trials", "20")
+                .parse()
+                .map_err(|e| format!("bad --trials: {e}"))?;
+            let mut study = Study::builder()
+                .name(&format!("telemetry-probe-study-{tag}"))
+                .storage(resilient.clone() as Arc<dyn Storage>)
+                .sampler(make_sampler(&args.get_or("sampler", "random"), seed)?)
+                .telemetry(tel.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            study.resilient = Some(resilient);
+            study
+                .optimize(trials, |t| {
+                    let x = t.suggest_float("x", -1.0, 1.0)?;
+                    Ok((x - 0.3).powi(2))
+                })
+                .map_err(|e| e.to_string())?;
+            let batch = study.ask_batch(4).map_err(|e| e.to_string())?;
+            let outcomes: Vec<(Trial<'_>, TrialOutcome)> = batch
+                .into_iter()
+                .map(|mut t| {
+                    let v = t.suggest_float("x", -1.0, 1.0).unwrap_or(0.0);
+                    (t, TrialOutcome::Complete((v - 0.3).powi(2)))
+                })
+                .collect();
+            study.tell_batch(outcomes).map_err(|e| e.to_string())?;
+            let mut out = String::new();
+            out.push_str(&telemetry_summary(&study));
+            out.push_str(&write_telemetry_outputs(&args, &tel)?);
+            if let Some(path) = args.get("json-out") {
+                std::fs::write(path, tel.to_json_string()).map_err(|e| e.to_string())?;
+                out.push_str(&format!("wrote {path}\n"));
+            }
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, tel.to_prometheus()).map_err(|e| e.to_string())?;
+                    out.push_str(&format!("wrote {path}\n"));
+                    Ok(out)
+                }
+                // default: the exposition itself is the command output
+                None => Ok(format!("{}{out}", tel.to_prometheus())),
+            }
         }
         "bench-throughput" => {
             // Storage-plane throughput probe: N threads × M ask/tell
@@ -835,6 +1096,8 @@ fn run_distributed(args: &Args) -> Result<String, String> {
             "--trial-sleep-ms",
             sleep_s.as_str(),
         ];
+        // each worker writes its own metrics snapshot beside the base path
+        let worker_metrics = args.get("metrics-out").map(|base| format!("{base}.w{i}"));
         let mut extra: Vec<&str> = Vec::new();
         if let Some(mb) = args.get("auto-compact-mb") {
             extra.push("--auto-compact-mb");
@@ -851,11 +1114,16 @@ fn run_distributed(args: &Args) -> Result<String, String> {
             ("--retry-max-ms", "retry-max-ms"),
             ("--op-deadline-ms", "op-deadline-ms"),
             ("--retry-jitter-seed", "retry-jitter-seed"),
+            ("--telemetry", "telemetry"),
         ] {
             if let Some(v) = args.get(key) {
                 extra.push(flag);
                 extra.push(v);
             }
+        }
+        if let Some(path) = &worker_metrics {
+            extra.push("--metrics-out");
+            extra.push(path);
         }
         let child = std::process::Command::new(&exe)
             .args(worker_args)
@@ -1376,6 +1644,108 @@ mod tests {
         ]))
         .unwrap();
         assert!(out.contains("done; study at 6 finished trials"), "{out}");
+        std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
+    }
+
+    #[test]
+    fn metrics_command_emits_prometheus_and_json() {
+        let pid = std::process::id();
+        let prom = std::env::temp_dir().join(format!("optuna_cli_metrics_{pid}.prom"));
+        let json = std::env::temp_dir().join(format!("optuna_cli_metrics_{pid}.json"));
+        let trace = std::env::temp_dir().join(format!("optuna_cli_metrics_{pid}.jsonl"));
+        let out = run_inner(&argv(&[
+            "metrics", "--trials", "10",
+            "--out", prom.to_str().unwrap(),
+            "--json-out", json.to_str().unwrap(),
+            "--trace-out", trace.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.contains("telemetry: study.ask"), "{out}");
+        assert!(out.contains("resilience: retries="), "{out}");
+        let text = std::fs::read_to_string(&prom).unwrap();
+        // every Storage op's latency histogram carries samples
+        for op in crate::storage::OP_NAMES {
+            assert!(
+                text.contains(&format!("op=\"{op}\"")),
+                "no histogram for op '{op}':\n{text}"
+            );
+        }
+        assert!(text.contains("# TYPE optuna_storage_op_duration_seconds summary"), "{text}");
+        // the probe's deliberate duplicate create lands one logic error
+        assert!(text.contains("optuna_storage_errors_total{kind=\"logic\"} 1"), "{text}");
+        // every error kind is pre-registered even at zero
+        for kind in ["io", "busy", "timeout", "poisoned", "corrupt"] {
+            assert!(text.contains(&format!("kind=\"{kind}\"")), "missing {kind}:\n{text}");
+        }
+        // span timings for the ask/tell loop and the batched path
+        for span in
+            ["study.ask", "study.tell", "study.ask_batch", "study.tell_batch", "sampler.suggest"]
+        {
+            assert!(text.contains(&format!("span=\"{span}\"")), "missing {span}:\n{text}");
+        }
+        assert!(text.contains("optuna_resilience_retries"), "{text}");
+        let doc = std::fs::read_to_string(&json).unwrap();
+        for section in ["\"counters\"", "\"gauges\"", "\"histograms\"", "\"p95\""] {
+            assert!(doc.contains(section), "missing {section}:\n{doc}");
+        }
+        // the span log is one JSON object per line
+        let log = std::fs::read_to_string(&trace).unwrap();
+        assert!(!log.is_empty());
+        for line in log.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        }
+        // without --out the exposition itself is the command output
+        let out = run_inner(&argv(&["metrics", "--trials", "3"])).unwrap();
+        assert!(out.contains("# TYPE optuna_storage_op_duration_seconds summary"), "{out}");
+        for p in [&prom, &json, &trace] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn optimize_with_telemetry_writes_snapshots_and_summary() {
+        let url = tmp_journal("telemetry");
+        run_inner(&argv(&["create-study", "--storage", &url, "--study", "t1"])).unwrap();
+        let base = std::env::temp_dir()
+            .join(format!("optuna_cli_tel_{}.prom", std::process::id()));
+        let base_s = base.to_str().unwrap().to_string();
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "t1", "--trials", "10",
+            "--sampler", "random", "--seed", "7", "--telemetry", "true",
+            "--resilience", "true", "--metrics-out", &base_s,
+        ]))
+        .unwrap();
+        assert!(out.contains("completed 10 trials"), "{out}");
+        assert!(out.contains("telemetry: study.ask"), "{out}");
+        assert!(out.contains("resilience: retries="), "{out}");
+        assert!(out.contains(&format!("wrote {base_s}")), "{out}");
+        let text = std::fs::read_to_string(&base).unwrap();
+        assert!(text.contains("op=\"create_trial\""), "{text}");
+        assert!(text.contains("span=\"study.ask\""), "{text}");
+        let doc = std::fs::read_to_string(format!("{base_s}.json")).unwrap();
+        assert!(doc.contains("\"histograms\""), "{doc}");
+        // --metrics-out alone opts in (no --telemetry needed)...
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "t1", "--trials", "2",
+            "--sampler", "random", "--metrics-out", &base_s,
+        ]))
+        .unwrap();
+        assert!(out.contains("telemetry: study.ask"), "{out}");
+        // ...and the explicit off switch wins over output flags
+        let out = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "t1", "--trials", "2",
+            "--sampler", "random", "--telemetry", "false", "--metrics-out", &base_s,
+        ]))
+        .unwrap();
+        assert!(!out.contains("telemetry:"), "{out}");
+        let bad = run_inner(&argv(&[
+            "optimize", "--storage", &url, "--study", "t1", "--trials", "1",
+            "--telemetry", "maybe",
+        ]))
+        .unwrap_err();
+        assert!(bad.contains("bad --telemetry"), "{bad}");
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(format!("{base_s}.json")).ok();
         std::fs::remove_file(url.strip_prefix("journal://").unwrap()).ok();
     }
 

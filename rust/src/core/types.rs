@@ -162,6 +162,17 @@ pub enum ErrorKind {
 }
 
 impl ErrorKind {
+    /// Every kind, in declaration order — the fixed label vocabulary
+    /// telemetry pre-registers error counters over.
+    pub const ALL: [ErrorKind; 6] = [
+        ErrorKind::Io,
+        ErrorKind::Busy,
+        ErrorKind::Timeout,
+        ErrorKind::Poisoned,
+        ErrorKind::Corrupt,
+        ErrorKind::Logic,
+    ];
+
     /// Whether a retry of the same operation can plausibly succeed.
     pub fn is_transient(&self) -> bool {
         matches!(self, ErrorKind::Io | ErrorKind::Busy | ErrorKind::Timeout)

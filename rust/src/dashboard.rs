@@ -40,6 +40,17 @@ fn fmt_duration(start: Option<u64>, complete: Option<u64>) -> String {
     }
 }
 
+/// Seconds at human scale for the telemetry tables (`12.3us`, `4.56ms`).
+fn fmt_seconds(v: f64) -> String {
+    if v < 1e-3 {
+        format!("{:.1}us", v * 1e6)
+    } else if v < 1.0 {
+        format!("{:.2}ms", v * 1e3)
+    } else {
+        format!("{v:.3}s")
+    }
+}
+
 /// The trial's objective cell: the scalar value, or all values of a
 /// multi-objective trial joined with `;`.
 fn fmt_values(t: &crate::core::FrozenTrial) -> String {
@@ -288,6 +299,91 @@ pub fn render_html(study: &Study) -> Result<String, OptunaError> {
         html.push_str("</table>");
     }
 
+    // ---- telemetry --------------------------------------------------------
+    if let Some(tel) = study.telemetry() {
+        study.fold_resilience_stats();
+        let snap = tel.registry().snapshot();
+        // per-op error totals, keyed by op name
+        let mut op_errors: std::collections::BTreeMap<&str, u64> = Default::default();
+        for ((name, labels), v) in &snap.counters {
+            if name == "optuna_storage_op_errors_total" {
+                if let Some((_, op)) = labels.iter().find(|(k, _)| k == "op") {
+                    *op_errors.entry(op.as_str()).or_insert(0) += v;
+                }
+            }
+        }
+        let mut ops = String::new();
+        let mut spans = String::new();
+        for ((name, labels), hist) in &snap.histograms {
+            let label =
+                |key: &str| labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str());
+            if name == "optuna_storage_op_duration_seconds" {
+                let Some(op) = label("op") else { continue };
+                let errors = op_errors.get(op).copied().unwrap_or(0);
+                if hist.count == 0 && errors == 0 {
+                    continue; // untouched op: no row
+                }
+                let _ = write!(
+                    ops,
+                    "<tr><td>{op}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+                     <td>{errors}</td></tr>",
+                    hist.count,
+                    fmt_seconds(hist.p50),
+                    fmt_seconds(hist.p95),
+                    fmt_seconds(hist.p99)
+                );
+            } else if name == "optuna_span_duration_seconds" {
+                let Some(span) = label("span") else { continue };
+                if hist.count == 0 {
+                    continue;
+                }
+                let _ = write!(
+                    spans,
+                    "<tr><td>{span}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td></tr>",
+                    hist.count,
+                    fmt_seconds(hist.p50),
+                    fmt_seconds(hist.p95),
+                    fmt_seconds(hist.p99)
+                );
+            }
+        }
+        if !ops.is_empty() {
+            let _ = write!(
+                html,
+                "<h2>Telemetry: storage ops</h2><table><tr><th>op</th><th>count</th>\
+                 <th>p50</th><th>p95</th><th>p99</th><th>errors</th></tr>{ops}</table>"
+            );
+        }
+        if !spans.is_empty() {
+            let _ = write!(
+                html,
+                "<h2>Telemetry: spans</h2><table><tr><th>span</th><th>count</th>\
+                 <th>p50</th><th>p95</th><th>p99</th></tr>{spans}</table>"
+            );
+        }
+    }
+
+    // ---- resilience -------------------------------------------------------
+    // rendered whenever a retry layer is attached, telemetry or not
+    if let Some(stats) = study.resilience_stats() {
+        let _ = write!(
+            html,
+            "<h2>Resilience</h2><table>\
+             <tr><th>retries</th><th>recovered</th><th>exhausted</th>\
+             <th>degraded heartbeats</th><th>degraded compactions</th>\
+             <th>stale reads</th><th>absorbed ambiguous</th></tr>\
+             <tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+             <td>{}</td><td>{}</td></tr></table>",
+            stats.retries,
+            stats.recovered,
+            stats.exhausted,
+            stats.dropped_heartbeats,
+            stats.dropped_compactions,
+            stats.stale_reads,
+            stats.absorbed_ambiguous
+        );
+    }
+
     // ---- trials table -----------------------------------------------------
     let _ = write!(
         html,
@@ -387,6 +483,37 @@ mod tests {
         );
         // completed trials all have retry count 0 here
         assert!(html.contains("<td>0</td>"));
+    }
+
+    #[test]
+    fn telemetry_and_resilience_sections_render() {
+        // a study without telemetry renders neither section
+        let plain = demo_study();
+        let html = render_html(&plain).unwrap();
+        assert!(!html.contains("Telemetry:"));
+        assert!(!html.contains("<h2>Resilience</h2>"));
+        // with telemetry + a retry layer both appear, populated
+        let tel = Telemetry::new();
+        let study = Study::builder()
+            .name("dash-tel")
+            .sampler(Arc::new(RandomSampler::new(1)))
+            .resilience(ResilienceConfig::new())
+            .telemetry(tel)
+            .build()
+            .unwrap();
+        study
+            .optimize(10, |t| {
+                let x = t.suggest_float("x", -2.0, 2.0)?;
+                Ok(x * x)
+            })
+            .unwrap();
+        let html = render_html(&study).unwrap();
+        assert!(html.contains("Telemetry: storage ops"), "{html}");
+        assert!(html.contains("<td>create_trial</td>"), "{html}");
+        assert!(html.contains("Telemetry: spans"), "{html}");
+        assert!(html.contains("<td>study.ask</td>"), "{html}");
+        assert!(html.contains("<h2>Resilience</h2>"), "{html}");
+        assert_eq!(html.matches("<table>").count(), html.matches("</table>").count());
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub mod registry;
 pub mod runtime;
 pub mod sampler;
 pub mod storage;
+pub mod telemetry;
 pub mod workloads;
 pub mod study;
 pub mod trial;
@@ -94,8 +95,9 @@ pub mod prelude {
     };
     pub use crate::storage::{
         CachedStorage, FaultInjectionStorage, FaultSchedule, InMemoryStorage, JournalStorage,
-        ResilienceConfig, ResilientStorage, Storage,
+        ResilienceConfig, ResilientStorage, Storage, TelemetryStorage,
     };
     pub use crate::study::{FailoverConfig, Study, StudyBuilder, TrialOutcome};
+    pub use crate::telemetry::Telemetry;
     pub use crate::trial::{FixedTrial, Trial, TrialApi};
 }

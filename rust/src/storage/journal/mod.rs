@@ -323,6 +323,10 @@ impl JournalStorage {
         if stub || len <= state.offset {
             return Ok(());
         }
+        // there is a real tail to replay: time it (process-global handle
+        // — the journal outlives any one study; inert unless the CLI or
+        // an embedder enabled telemetry)
+        let _span = crate::telemetry::global().span("journal.replay");
         file.seek(SeekFrom::Start(state.offset))
             .map_err(|e| self.io_err("seek", e))?;
         let mut buf = Vec::with_capacity((len - state.offset) as usize);
@@ -457,6 +461,7 @@ impl JournalStorage {
     }
 
     fn compact_impl(&self, to: Option<JournalFormat>) -> Result<CompactionStats, OptunaError> {
+        let _span = crate::telemetry::global().span("journal.compact");
         let mut state = self.state.lock().unwrap();
         let _guard = FlockGuard::acquire(&self.lock_file, true)?;
         let mut file = self.open_file()?;
@@ -517,6 +522,9 @@ impl JournalStorage {
             trials: state.trials.len(),
         };
         self.last_compact_len.store(stats.bytes_after, Ordering::Relaxed);
+        // gated on enabled inside fold_compaction; a study-attached
+        // TelemetryStorage folds into its own domain via try_compact
+        crate::telemetry::global().fold_compaction(&stats);
         // rebuild our own state from the swapped-in file (still under the
         // exclusive lock, so the content is exactly `buf`)
         *state = Replayed::default();

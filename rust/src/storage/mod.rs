@@ -28,6 +28,7 @@ mod in_memory;
 mod journal;
 mod resilient;
 mod single_mutex;
+mod telemetry;
 
 pub use cached::CachedStorage;
 pub use fault_injection::{FaultInjectionStorage, FaultMode, FaultRule, FaultSchedule};
@@ -35,6 +36,7 @@ pub use in_memory::InMemoryStorage;
 pub use journal::{JournalFormat, JournalOptions, JournalStorage};
 pub use resilient::{ResilienceConfig, ResilienceStats, ResilientStorage};
 pub use single_mutex::SingleMutexStorage;
+pub use telemetry::{TelemetryStorage, OP_NAMES};
 
 // the classification axis of `OptunaError::Storage`, re-exported where
 // the resilience layer that consumes it lives

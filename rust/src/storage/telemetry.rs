@@ -1,0 +1,453 @@
+//! [`TelemetryStorage`]: a [`Storage`] decorator that times every trait
+//! op into a latency histogram and tags failures by
+//! [`crate::core::ErrorKind`].
+//!
+//! Position in the decorator stack (innermost first):
+//!
+//! ```text
+//! backend ⟨ FaultInjection ⟨ Resilient ⟨ Telemetry ⟨ Cached
+//! ```
+//!
+//! Under the snapshot cache, over the retry layer — so the histograms
+//! time *real* storage round-trips (a cache hit never reaches this
+//! layer; it is latency the cache already deleted), a retried op shows
+//! its full retried latency, and an error is counted only when it
+//! escapes the whole resilience budget. [`crate::study::StudyBuilder`]
+//! installs it there when [`crate::study::StudyBuilder::telemetry`] is
+//! set; the conformance suite proves the wrapper is semantics-
+//! preserving, and rust/tests/determinism.rs proves it is
+//! trajectory-invisible.
+//!
+//! Per-op metrics (all label vocabularies fixed at compile time):
+//!
+//! * `optuna_storage_op_duration_seconds{op=…}` — one histogram per
+//!   trait op, pre-registered at construction so every op appears in
+//!   exports even before (or without) traffic;
+//! * `optuna_storage_op_errors_total{op=…,kind=…}` — failures by error
+//!   kind (`io`/`busy`/`timeout`/`poisoned`/`corrupt`/`logic` from the
+//!   storage taxonomy, plus `conflict` and the study-level kinds);
+//! * `optuna_storage_errors_total{kind=…}` — the same failures summed
+//!   over ops, pre-registered at zero for every storage kind.
+//!
+//! The hot path is one `Instant::now` pair, one lock-free histogram
+//! record, and (on the rare error) two counter touches; op histograms
+//! are resolved once at construction, never per call.
+
+use super::{
+    CompactionStats, ParamSet, Storage, TrialDelta, TrialFinish,
+};
+use crate::core::{
+    Distribution, ErrorKind, FrozenTrial, OptunaError, StudyDirection, TrialState,
+};
+use crate::telemetry::{Histogram, Telemetry};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Indices into the pre-resolved per-op histogram table. Keep
+/// [`OP_NAMES`] in the same order.
+mod op {
+    pub const CREATE_STUDY: usize = 0;
+    pub const CREATE_STUDY_MULTI: usize = 1;
+    pub const GET_STUDY_DIRECTIONS: usize = 2;
+    pub const GET_STUDY_ID: usize = 3;
+    pub const GET_STUDY_DIRECTION: usize = 4;
+    pub const STUDY_NAMES: usize = 5;
+    pub const CREATE_TRIAL: usize = 6;
+    pub const CREATE_TRIALS: usize = 7;
+    pub const SET_TRIAL_PARAM: usize = 8;
+    pub const SET_TRIAL_INTERMEDIATE: usize = 9;
+    pub const SET_TRIAL_USER_ATTR: usize = 10;
+    pub const SET_TRIAL_CONSTRAINTS: usize = 11;
+    pub const FINISH_TRIAL: usize = 12;
+    pub const FINISH_TRIAL_VALUES: usize = 13;
+    pub const FINISH_TRIALS: usize = 14;
+    pub const GET_TRIAL: usize = 15;
+    pub const GET_ALL_TRIALS: usize = 16;
+    pub const N_TRIALS: usize = 17;
+    pub const STUDY_SEQ: usize = 18;
+    pub const GET_TRIALS_SINCE: usize = 19;
+    pub const GET_TRIALS_SNAPSHOT: usize = 20;
+    pub const RECORD_HEARTBEAT: usize = 21;
+    pub const FAIL_STALE_TRIALS: usize = 22;
+    pub const ENQUEUE_TRIAL: usize = 23;
+    pub const POP_WAITING_TRIAL: usize = 24;
+    pub const CREATE_TRIAL_CAPPED: usize = 25;
+    pub const TRY_COMPACT: usize = 26;
+    pub const COUNT: usize = 27;
+}
+
+/// Op label values, indexed by the constants in [`op`].
+pub const OP_NAMES: [&str; op::COUNT] = [
+    "create_study",
+    "create_study_multi",
+    "get_study_directions",
+    "get_study_id",
+    "get_study_direction",
+    "study_names",
+    "create_trial",
+    "create_trials",
+    "set_trial_param",
+    "set_trial_intermediate",
+    "set_trial_user_attr",
+    "set_trial_constraints",
+    "finish_trial",
+    "finish_trial_values",
+    "finish_trials",
+    "get_trial",
+    "get_all_trials",
+    "n_trials",
+    "study_seq",
+    "get_trials_since",
+    "get_trials_snapshot",
+    "record_heartbeat",
+    "fail_stale_trials",
+    "enqueue_trial",
+    "pop_waiting_trial",
+    "create_trial_capped",
+    "try_compact",
+];
+
+/// The `kind` label for a failed op.
+pub fn error_kind_label(e: &OptunaError) -> &'static str {
+    match e {
+        OptunaError::Storage(se) => se.kind.as_str(),
+        OptunaError::Conflict(_) => "conflict",
+        OptunaError::InvalidParam(_) => "invalid_param",
+        OptunaError::MultiObjective(_) => "multi_objective",
+        OptunaError::TrialPruned => "pruned",
+        OptunaError::Objective(_) => "objective",
+        OptunaError::Runtime(_) => "runtime",
+    }
+}
+
+/// See the module docs.
+pub struct TelemetryStorage {
+    inner: Arc<dyn Storage>,
+    telemetry: Arc<Telemetry>,
+    op_hist: Vec<Arc<Histogram>>,
+}
+
+impl TelemetryStorage {
+    pub fn new(inner: Arc<dyn Storage>, telemetry: Arc<Telemetry>) -> Self {
+        let op_hist = OP_NAMES
+            .iter()
+            .map(|name| {
+                telemetry
+                    .registry()
+                    .histogram("optuna_storage_op_duration_seconds", &[("op", name)])
+            })
+            .collect();
+        // pre-register the per-kind error totals at zero so the export
+        // always carries the full taxonomy
+        for kind in ErrorKind::ALL {
+            telemetry
+                .registry()
+                .counter("optuna_storage_errors_total", &[("kind", kind.as_str())]);
+        }
+        TelemetryStorage { inner, telemetry, op_hist }
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// Time `call` as op `idx`; histogram on every outcome, error
+    /// counters on failure.
+    fn timed<T>(
+        &self,
+        idx: usize,
+        call: impl FnOnce() -> Result<T, OptunaError>,
+    ) -> Result<T, OptunaError> {
+        if !self.telemetry.enabled() {
+            return call();
+        }
+        let t0 = Instant::now();
+        let result = call();
+        self.op_hist[idx].record_duration(t0.elapsed());
+        if let Err(e) = &result {
+            let kind = error_kind_label(e);
+            let reg = self.telemetry.registry();
+            reg.counter(
+                "optuna_storage_op_errors_total",
+                &[("op", OP_NAMES[idx]), ("kind", kind)],
+            )
+            .inc();
+            reg.counter("optuna_storage_errors_total", &[("kind", kind)]).inc();
+        }
+        result
+    }
+}
+
+impl Storage for TelemetryStorage {
+    fn create_study(&self, name: &str, direction: StudyDirection) -> Result<u64, OptunaError> {
+        self.timed(op::CREATE_STUDY, || self.inner.create_study(name, direction))
+    }
+
+    fn create_study_multi(
+        &self,
+        name: &str,
+        directions: &[StudyDirection],
+    ) -> Result<u64, OptunaError> {
+        self.timed(op::CREATE_STUDY_MULTI, || {
+            self.inner.create_study_multi(name, directions)
+        })
+    }
+
+    fn get_study_directions(&self, study_id: u64) -> Result<Vec<StudyDirection>, OptunaError> {
+        self.timed(op::GET_STUDY_DIRECTIONS, || self.inner.get_study_directions(study_id))
+    }
+
+    fn get_study_id(&self, name: &str) -> Result<Option<u64>, OptunaError> {
+        self.timed(op::GET_STUDY_ID, || self.inner.get_study_id(name))
+    }
+
+    fn get_study_direction(&self, study_id: u64) -> Result<StudyDirection, OptunaError> {
+        self.timed(op::GET_STUDY_DIRECTION, || self.inner.get_study_direction(study_id))
+    }
+
+    fn study_names(&self) -> Result<Vec<String>, OptunaError> {
+        self.timed(op::STUDY_NAMES, || self.inner.study_names())
+    }
+
+    fn create_trial(&self, study_id: u64) -> Result<(u64, u64), OptunaError> {
+        self.timed(op::CREATE_TRIAL, || self.inner.create_trial(study_id))
+    }
+
+    fn create_trials(&self, study_id: u64, n: usize) -> Result<Vec<(u64, u64)>, OptunaError> {
+        self.timed(op::CREATE_TRIALS, || self.inner.create_trials(study_id, n))
+    }
+
+    fn set_trial_param(
+        &self,
+        trial_id: u64,
+        name: &str,
+        dist: &Distribution,
+        internal: f64,
+    ) -> Result<(), OptunaError> {
+        self.timed(op::SET_TRIAL_PARAM, || {
+            self.inner.set_trial_param(trial_id, name, dist, internal)
+        })
+    }
+
+    fn set_trial_intermediate(
+        &self,
+        trial_id: u64,
+        step: u64,
+        value: f64,
+    ) -> Result<(), OptunaError> {
+        self.timed(op::SET_TRIAL_INTERMEDIATE, || {
+            self.inner.set_trial_intermediate(trial_id, step, value)
+        })
+    }
+
+    fn set_trial_user_attr(
+        &self,
+        trial_id: u64,
+        key: &str,
+        value: &str,
+    ) -> Result<(), OptunaError> {
+        self.timed(op::SET_TRIAL_USER_ATTR, || {
+            self.inner.set_trial_user_attr(trial_id, key, value)
+        })
+    }
+
+    fn set_trial_constraints(
+        &self,
+        trial_id: u64,
+        constraints: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.timed(op::SET_TRIAL_CONSTRAINTS, || {
+            self.inner.set_trial_constraints(trial_id, constraints)
+        })
+    }
+
+    fn finish_trial(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        value: Option<f64>,
+    ) -> Result<(), OptunaError> {
+        self.timed(op::FINISH_TRIAL, || self.inner.finish_trial(trial_id, state, value))
+    }
+
+    fn finish_trial_values(
+        &self,
+        trial_id: u64,
+        state: TrialState,
+        values: &[f64],
+    ) -> Result<(), OptunaError> {
+        self.timed(op::FINISH_TRIAL_VALUES, || {
+            self.inner.finish_trial_values(trial_id, state, values)
+        })
+    }
+
+    fn finish_trials(&self, finishes: &[TrialFinish]) -> Result<(), OptunaError> {
+        self.timed(op::FINISH_TRIALS, || self.inner.finish_trials(finishes))
+    }
+
+    fn get_trial(&self, trial_id: u64) -> Result<FrozenTrial, OptunaError> {
+        self.timed(op::GET_TRIAL, || self.inner.get_trial(trial_id))
+    }
+
+    fn get_all_trials(&self, study_id: u64) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.timed(op::GET_ALL_TRIALS, || self.inner.get_all_trials(study_id))
+    }
+
+    fn n_trials(&self, study_id: u64) -> Result<usize, OptunaError> {
+        self.timed(op::N_TRIALS, || self.inner.n_trials(study_id))
+    }
+
+    fn study_seq(&self, study_id: u64) -> Result<u64, OptunaError> {
+        self.timed(op::STUDY_SEQ, || self.inner.study_seq(study_id))
+    }
+
+    fn get_trials_since(
+        &self,
+        study_id: u64,
+        since_seq: u64,
+    ) -> Result<TrialDelta, OptunaError> {
+        self.timed(op::GET_TRIALS_SINCE, || self.inner.get_trials_since(study_id, since_seq))
+    }
+
+    fn get_trials_snapshot(
+        &self,
+        study_id: u64,
+    ) -> Result<Arc<Vec<FrozenTrial>>, OptunaError> {
+        self.timed(op::GET_TRIALS_SNAPSHOT, || self.inner.get_trials_snapshot(study_id))
+    }
+
+    fn is_write_through_cache(&self) -> bool {
+        // capability probe, not a storage round-trip: forward untimed so
+        // the builder's don't-stack-caches check sees through this layer
+        self.inner.is_write_through_cache()
+    }
+
+    fn record_heartbeat(&self, trial_id: u64) -> Result<(), OptunaError> {
+        self.timed(op::RECORD_HEARTBEAT, || self.inner.record_heartbeat(trial_id))
+    }
+
+    fn fail_stale_trials(
+        &self,
+        study_id: u64,
+        grace: Duration,
+        requeue: &dyn Fn(&FrozenTrial) -> Option<BTreeMap<String, String>>,
+    ) -> Result<Vec<FrozenTrial>, OptunaError> {
+        self.timed(op::FAIL_STALE_TRIALS, || {
+            self.inner.fail_stale_trials(study_id, grace, requeue)
+        })
+    }
+
+    fn enqueue_trial(
+        &self,
+        study_id: u64,
+        params: &ParamSet,
+        user_attrs: &BTreeMap<String, String>,
+    ) -> Result<(u64, u64), OptunaError> {
+        self.timed(op::ENQUEUE_TRIAL, || {
+            self.inner.enqueue_trial(study_id, params, user_attrs)
+        })
+    }
+
+    fn pop_waiting_trial(&self, study_id: u64) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.timed(op::POP_WAITING_TRIAL, || self.inner.pop_waiting_trial(study_id))
+    }
+
+    fn create_trial_capped(
+        &self,
+        study_id: u64,
+        cap: u64,
+    ) -> Result<Option<(u64, u64)>, OptunaError> {
+        self.timed(op::CREATE_TRIAL_CAPPED, || {
+            self.inner.create_trial_capped(study_id, cap)
+        })
+    }
+
+    fn try_compact(&self) -> Result<Option<CompactionStats>, OptunaError> {
+        let result = self.timed(op::TRY_COMPACT, || self.inner.try_compact());
+        if let Ok(Some(stats)) = &result {
+            self.telemetry.fold_compaction(stats);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::InMemoryStorage;
+
+    fn wrapped() -> (TelemetryStorage, Arc<Telemetry>) {
+        let tel = Telemetry::new();
+        (TelemetryStorage::new(Arc::new(InMemoryStorage::new()), tel.clone()), tel)
+    }
+
+    #[test]
+    fn telemetry_wrapper_passes_conformance() {
+        let (s, _tel) = wrapped();
+        crate::storage::conformance::run_all(&s);
+    }
+
+    #[test]
+    fn every_op_is_pre_registered() {
+        let (_s, tel) = wrapped();
+        let snap = tel.registry().snapshot();
+        let ops: Vec<&str> = snap
+            .histograms
+            .keys()
+            .filter(|(name, _)| name == "optuna_storage_op_duration_seconds")
+            .map(|(_, labels)| labels[0].1.as_str())
+            .collect();
+        assert_eq!(ops.len(), op::COUNT);
+        for name in OP_NAMES {
+            assert!(ops.contains(&name), "missing pre-registered op {name}");
+        }
+        // the error taxonomy is pre-registered at zero
+        let kinds: Vec<&str> = snap
+            .counters
+            .keys()
+            .filter(|(name, _)| name == "optuna_storage_errors_total")
+            .map(|(_, labels)| labels[0].1.as_str())
+            .collect();
+        assert_eq!(kinds.len(), ErrorKind::ALL.len());
+    }
+
+    #[test]
+    fn ops_and_errors_are_counted() {
+        let (s, tel) = wrapped();
+        let sid = s.create_study("t", StudyDirection::Minimize).unwrap();
+        let (tid, _) = s.create_trial(sid).unwrap();
+        s.finish_trial(tid, TrialState::Complete, Some(1.0)).unwrap();
+        // double-finish is a Conflict: counted under kind="conflict"
+        let err = s.finish_trial(tid, TrialState::Complete, Some(2.0)).unwrap_err();
+        assert_eq!(error_kind_label(&err), "conflict");
+        let snap = tel.registry().snapshot();
+        let hist = |op: &str| {
+            snap.histograms[&(
+                "optuna_storage_op_duration_seconds".to_string(),
+                vec![("op".to_string(), op.to_string())],
+            )]
+                .clone()
+        };
+        assert_eq!(hist("create_study").count, 1);
+        assert_eq!(hist("create_trial").count, 1);
+        assert_eq!(hist("finish_trial").count, 2);
+        let errs = snap.counters[&(
+            "optuna_storage_op_errors_total".to_string(),
+            vec![("kind".to_string(), "conflict".to_string()), ("op".to_string(), "finish_trial".to_string())],
+        )];
+        assert_eq!(errs, 1);
+    }
+
+    #[test]
+    fn disabled_telemetry_is_passthrough() {
+        let tel = Telemetry::new();
+        tel.disable();
+        let s = TelemetryStorage::new(Arc::new(InMemoryStorage::new()), tel.clone());
+        let sid = s.create_study("t", StudyDirection::Minimize).unwrap();
+        s.create_trial(sid).unwrap();
+        let snap = tel.registry().snapshot();
+        // pre-registered histograms exist but saw no traffic
+        assert!(snap.histograms.values().all(|h| h.count == 0));
+    }
+}

@@ -14,8 +14,9 @@ use crate::pruner::{NopPruner, Pruner};
 use crate::sampler::{Sampler, StudyContext, TpeSampler};
 use crate::storage::{
     get_or_create_study_multi, CachedStorage, InMemoryStorage, ResilienceConfig,
-    ResilientStorage, Storage, TrialFinish, SEQ_UNTRACKED,
+    ResilienceStats, ResilientStorage, Storage, TelemetryStorage, TrialFinish, SEQ_UNTRACKED,
 };
+use crate::telemetry::{SpanGuard, Telemetry};
 use crate::trial::Trial;
 use crate::util::stats::nan_max_cmp;
 
@@ -77,6 +78,14 @@ pub struct Study {
     /// Heartbeat/reap/retry policy (`None` = failover disabled).
     pub(crate) failover: Option<FailoverConfig>,
     pub(crate) retry_cb: Option<Arc<RetryCallback>>,
+    /// Telemetry domain this study records spans/metrics into (`None` =
+    /// uninstrumented; every instrumentation point is one `Option`
+    /// check).
+    pub(crate) telemetry: Option<Arc<Telemetry>>,
+    /// Concrete handle onto the resilience layer when one is in the
+    /// stack, kept so [`Study::resilience_stats`] can read its counters
+    /// through the `Arc<dyn Storage>` erasure.
+    pub(crate) resilient: Option<Arc<ResilientStorage>>,
     pub study_id: u64,
     /// Direction of objective 0 — what every single-objective consumer
     /// (samplers' loss sign, pruners, the observation index) reads. On a
@@ -102,6 +111,7 @@ pub struct StudyBuilder {
     failover: Option<FailoverConfig>,
     resilience: Option<ResilienceConfig>,
     retry_cb: Option<Arc<RetryCallback>>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl StudyBuilder {
@@ -213,6 +223,18 @@ impl StudyBuilder {
         self
     }
 
+    /// Attach a telemetry domain: storage ops are timed through a
+    /// [`TelemetryStorage`] decorator (inserted between the resilience
+    /// layer and the snapshot cache — see [`crate::telemetry`] for the
+    /// stack diagram) and the study's ask/tell/reap paths open spans.
+    /// Telemetry observes durations and errors only, never results: the
+    /// optimization trajectory is bit-identical with it on or off
+    /// (rust/tests/determinism.rs). Off by default.
+    pub fn telemetry(mut self, telemetry: Arc<Telemetry>) -> Self {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
     /// Custom retry decision hook; only consulted when failover is
     /// enabled. The hook runs while the storage lock is held and must
     /// not call back into the study or its storage — see
@@ -235,10 +257,20 @@ impl StudyBuilder {
         let storage = self
             .storage
             .unwrap_or_else(|| Arc::new(InMemoryStorage::new()));
-        // resilience wraps the backend first, the cache wraps resilience:
-        // a degraded (stale) read then feeds the cache its last-good view
-        let storage: Arc<dyn Storage> = match self.resilience {
-            Some(cfg) => Arc::new(ResilientStorage::new(storage, cfg)),
+        // resilience wraps the backend first, then telemetry, then the
+        // cache: a degraded (stale) read feeds the cache its last-good
+        // view, and the op histograms time real (post-cache-miss,
+        // retries included) storage round-trips
+        let (storage, resilient): (Arc<dyn Storage>, Option<Arc<ResilientStorage>>) =
+            match self.resilience {
+                Some(cfg) => {
+                    let r = Arc::new(ResilientStorage::new(storage, cfg));
+                    (r.clone(), Some(r))
+                }
+                None => (storage, None),
+            };
+        let storage: Arc<dyn Storage> = match &self.telemetry {
+            Some(tel) => Arc::new(TelemetryStorage::new(storage, tel.clone())),
             None => storage,
         };
         let storage = if self.cache { CachedStorage::wrap(storage) } else { storage };
@@ -276,6 +308,8 @@ impl StudyBuilder {
             obs_index,
             failover: self.failover,
             retry_cb: self.retry_cb,
+            telemetry: self.telemetry,
+            resilient,
             study_id,
             direction,
             directions: self.directions,
@@ -360,12 +394,42 @@ impl Study {
             failover: None,
             resilience: None,
             retry_cb: None,
+            telemetry: None,
         }
     }
 
     /// Number of objectives (the length of [`Study::directions`]).
     pub fn n_objectives(&self) -> usize {
         self.directions.len()
+    }
+
+    /// The telemetry domain attached via [`StudyBuilder::telemetry`],
+    /// if any.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
+    /// Open a named span on the study's telemetry domain (`None` when
+    /// the study is uninstrumented). The guard's drop records the span.
+    pub(crate) fn span(&self, name: &'static str) -> Option<SpanGuard<'_>> {
+        self.telemetry.as_deref().map(|t| t.span(name))
+    }
+
+    /// Live counters of the resilience layer, when one is in the
+    /// decorator stack (via [`StudyBuilder::resilience`], or installed
+    /// manually by the CLI). `None` without one.
+    pub fn resilience_stats(&self) -> Option<ResilienceStats> {
+        self.resilient.as_ref().map(|r| r.stats())
+    }
+
+    /// Fold the resilience layer's current counters into the telemetry
+    /// registry (no-op unless both layers are attached). Called at
+    /// export points — end-of-run summaries, the `metrics` subcommand —
+    /// so the gauges carry the final numbers.
+    pub fn fold_resilience_stats(&self) {
+        if let (Some(tel), Some(stats)) = (&self.telemetry, self.resilience_stats()) {
+            tel.fold_resilience(&stats);
+        }
     }
 
     /// True when the study optimizes more than one objective.
@@ -382,6 +446,7 @@ impl Study {
         let Some(index) = &self.obs_index else {
             return Ok(None);
         };
+        let _span = self.span("obs_index.sync");
         let mut ix = index.lock().unwrap();
         let seq = self.storage.study_seq(self.study_id)?;
         if seq != SEQ_UNTRACKED && seq == ix.seq() {
@@ -411,6 +476,7 @@ impl Study {
         &self,
         heartbeats: Option<&HeartbeatRegistry>,
     ) -> Result<Trial<'_>, OptunaError> {
+        let _span = self.span("study.ask");
         if let Some((trial_id, number)) = self.storage.pop_waiting_trial(self.study_id)? {
             return self.finish_ask(trial_id, number, false, heartbeats);
         }
@@ -463,6 +529,7 @@ impl Study {
         n: usize,
         heartbeats: Option<&HeartbeatRegistry>,
     ) -> Result<Vec<Trial<'_>>, OptunaError> {
+        let _span = self.span("study.ask_batch");
         let mut popped = Vec::with_capacity(n);
         while popped.len() < n {
             match self.storage.pop_waiting_trial(self.study_id)? {
@@ -581,6 +648,7 @@ impl Study {
         cap: u64,
         heartbeats: Option<&HeartbeatRegistry>,
     ) -> Result<Option<Trial<'_>>, OptunaError> {
+        let _span = self.span("study.ask");
         if let Some((trial_id, number)) = self.storage.pop_waiting_trial(self.study_id)? {
             return self.finish_ask(trial_id, number, false, heartbeats).map(Some);
         }
@@ -656,6 +724,7 @@ impl Study {
         let Some(cfg) = self.failover else {
             return Ok(Vec::new());
         };
+        let _span = self.span("study.reap");
         let retry_cb = self.retry_cb.clone();
         let requeue = move |v: &FrozenTrial| -> Option<BTreeMap<String, String>> {
             let retries = v.retry_count();
@@ -700,6 +769,7 @@ impl Study {
     /// multi-objective study (or a wrong-length vector) is a typed
     /// [`OptunaError::MultiObjective`], not silent data corruption.
     pub fn tell(&self, trial: Trial<'_>, outcome: TrialOutcome) -> Result<(), OptunaError> {
+        let _span = self.span("study.tell");
         match outcome {
             TrialOutcome::Complete(v) => {
                 if self.is_multi_objective() {
@@ -749,6 +819,7 @@ impl Study {
         &self,
         batch: Vec<(Trial<'_>, TrialOutcome)>,
     ) -> Result<(), OptunaError> {
+        let _span = self.span("study.tell_batch");
         let mut finishes = Vec::with_capacity(batch.len());
         let mut fail_reasons: Vec<(u64, String)> = Vec::new();
         for (trial, outcome) in batch {

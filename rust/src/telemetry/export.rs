@@ -1,0 +1,190 @@
+//! Exporters: Prometheus text exposition format and a JSON snapshot.
+//!
+//! Histograms export as Prometheus *summaries* — `name{quantile="0.5"}`
+//! plus `_sum`/`_count` — because the log-bucket histogram already
+//! reduces to p50/p95/p99 server-side, and a summary is one line per
+//! quantile instead of [`super::metrics::NUM_BUCKETS`] `_bucket` lines
+//! per (op × metric) pair. Both exports render from one
+//! [`RegistrySnapshot`], so the two views of a scrape always agree.
+
+use super::metrics::RegistrySnapshot;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// `{k="v",…}` label block; empty string when there are no labels.
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a snapshot in the Prometheus text exposition format (one
+/// `# TYPE` header per metric family, deterministic order).
+pub fn to_prometheus(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    let mut typed: BTreeMap<&str, &str> = BTreeMap::new();
+    for ((name, _), _) in &snap.counters {
+        typed.insert(name, "counter");
+    }
+    for ((name, _), _) in &snap.gauges {
+        typed.insert(name, "gauge");
+    }
+    for ((name, _), _) in &snap.histograms {
+        typed.insert(name, "summary");
+    }
+    for (name, kind) in &typed {
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        match *kind {
+            "counter" => {
+                for ((n, labels), v) in &snap.counters {
+                    if n == name {
+                        let _ = writeln!(out, "{n}{} {v}", label_block(labels, None));
+                    }
+                }
+            }
+            "gauge" => {
+                for ((n, labels), v) in &snap.gauges {
+                    if n == name {
+                        let _ = writeln!(out, "{n}{} {v}", label_block(labels, None));
+                    }
+                }
+            }
+            _ => {
+                for ((n, labels), h) in &snap.histograms {
+                    if n == name {
+                        for (q, v) in
+                            [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)]
+                        {
+                            let _ = writeln!(
+                                out,
+                                "{n}{} {v:e}",
+                                label_block(labels, Some(("quantile", q)))
+                            );
+                        }
+                        let _ =
+                            writeln!(out, "{n}_sum{} {:e}", label_block(labels, None), h.sum_secs);
+                        let _ =
+                            writeln!(out, "{n}_count{} {}", label_block(labels, None), h.count);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One instrument's JSON identity: `{"name":…, "labels":{…}, …fields}`.
+fn entry(name: &str, labels: &[(String, String)], fields: Vec<(&str, Json)>) -> Json {
+    let label_obj = Json::Obj(
+        labels
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    );
+    let mut pairs = vec![("name", Json::Str(name.to_string())), ("labels", label_obj)];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// Render a snapshot as one JSON document:
+/// `{"counters":[…],"gauges":[…],"histograms":[…]}` — the machine-
+/// readable twin of [`to_prometheus`], written by `--metrics-out` and
+/// the `metrics` subcommand.
+pub fn to_json(snap: &RegistrySnapshot) -> Json {
+    let counters: Vec<Json> = snap
+        .counters
+        .iter()
+        .map(|((name, labels), v)| {
+            entry(name, labels, vec![("value", Json::Num(*v as f64))])
+        })
+        .collect();
+    let gauges: Vec<Json> = snap
+        .gauges
+        .iter()
+        .map(|((name, labels), v)| {
+            entry(name, labels, vec![("value", Json::Num(*v as f64))])
+        })
+        .collect();
+    let histograms: Vec<Json> = snap
+        .histograms
+        .iter()
+        .map(|((name, labels), h)| {
+            entry(
+                name,
+                labels,
+                vec![
+                    ("count", Json::Num(h.count as f64)),
+                    ("sum_secs", Json::Num(h.sum_secs)),
+                    ("p50", Json::Num(h.p50)),
+                    ("p95", Json::Num(h.p95)),
+                    ("p99", Json::Num(h.p99)),
+                ],
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("counters", Json::Arr(counters)),
+        ("gauges", Json::Arr(gauges)),
+        ("histograms", Json::Arr(histograms)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::telemetry::Telemetry;
+    use crate::util::json::Json;
+
+    #[test]
+    fn prometheus_lines_are_well_formed() {
+        let tel = Telemetry::new();
+        tel.registry().counter("optuna_errors_total", &[("kind", "io")]).add(3);
+        tel.registry().gauge("optuna_queue_depth", &[]).set(7);
+        tel.registry()
+            .histogram("optuna_op_seconds", &[("op", "ask")])
+            .record_secs(0.001);
+        let text = tel.to_prometheus();
+        assert!(text.contains("# TYPE optuna_errors_total counter"));
+        assert!(text.contains("optuna_errors_total{kind=\"io\"} 3"));
+        assert!(text.contains("optuna_queue_depth 7"));
+        assert!(text.contains("# TYPE optuna_op_seconds summary"));
+        assert!(text.contains("optuna_op_seconds{op=\"ask\",quantile=\"0.5\"}"));
+        assert!(text.contains("optuna_op_seconds_count{op=\"ask\"} 1"));
+        // every non-comment line is `name{labels}? value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name_part, value) = line.rsplit_once(' ').expect("space-separated");
+            assert!(!name_part.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in '{line}'");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_roundtrips_fields() {
+        let tel = Telemetry::new();
+        tel.registry()
+            .histogram("optuna_op_seconds", &[("op", "tell")])
+            .record_secs(0.25);
+        let doc = Json::parse(&tel.to_json_string()).unwrap();
+        let hists = doc.get("histograms").unwrap().as_arr().unwrap();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].get("name").unwrap().as_str(), Some("optuna_op_seconds"));
+        assert_eq!(
+            hists[0].get("labels").unwrap().get("op").unwrap().as_str(),
+            Some("tell")
+        );
+        assert_eq!(hists[0].get("count").unwrap().as_i64(), Some(1));
+    }
+}

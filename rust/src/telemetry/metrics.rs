@@ -1,0 +1,320 @@
+//! Metric primitives: atomic counters, gauges, and fixed log-bucket
+//! latency histograms with p50/p95/p99 readout — plus the registry
+//! that names them.
+//!
+//! Everything here is designed for the storage/ask hot paths:
+//!
+//! * recording is lock-free (`Relaxed` atomics only) — a histogram
+//!   observation is one `leading_zeros`, two `fetch_add`s, and nothing
+//!   else;
+//! * instruments are interned once and held as `Arc` handles by their
+//!   call sites ([`crate::storage::TelemetryStorage`] pre-resolves one
+//!   histogram per storage op at construction), so the registry's
+//!   name→instrument map is off the hot path entirely;
+//! * readout ([`MetricsRegistry::snapshot`]) is approximate by design:
+//!   concurrent writers may land between bucket reads. That is the
+//!   standard monitoring trade — metrics are for operators, not for
+//!   invariants.
+//!
+//! Memory is statically bounded: a histogram is [`NUM_BUCKETS`] `u64`s,
+//! and the registry only grows with distinct (name, labels) pairs,
+//! which instrumentation sites draw from fixed vocabularies (op names,
+//! span names, [`crate::core::ErrorKind`] strings).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (set from folded stats like
+/// [`crate::storage::ResilienceStats`], journal sizes, queue depths).
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count of the log-scale histogram: bucket `i` holds samples
+/// whose value in nanoseconds needs `i` significant bits, i.e. bucket
+/// upper bounds run 1ns, 1ns, 3ns, 7ns, … `2^(i)-1`ns — ~48 buckets
+/// cover 0ns to ~3.2 days, which is every latency this system can
+/// produce, with ≤2x relative error. The last bucket is the overflow
+/// bucket: anything past ~1.6 days saturates into it.
+pub const NUM_BUCKETS: usize = 48;
+
+/// Fixed log-bucket latency histogram. Values are recorded in
+/// nanoseconds ([`Histogram::record_ns`] / [`Histogram::record_secs`]);
+/// quantile readout returns seconds.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    /// Sum in nanoseconds (u64 wraps after ~584 years of accumulated
+    /// latency; acceptable for a process-lifetime metric).
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: [(); NUM_BUCKETS].map(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index of a nanosecond value: its bit length, clamped into the
+/// overflow bucket.
+fn bucket_of(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Upper bound (inclusive, in ns) of bucket `i` — the value reported
+/// for quantiles that land in it. The overflow bucket reports its
+/// *lower* bound: "at least this much" is the only honest claim there.
+fn bucket_bound_ns(i: usize) -> u64 {
+    if i >= NUM_BUCKETS - 1 {
+        return 1u64 << (NUM_BUCKETS - 2); // overflow: lower bound
+    }
+    (1u64 << i) - 1 + u64::from(i == 0)
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record a latency given in seconds. Non-finite or negative values
+    /// (a NaN from a degenerate rate computation, for instance) are
+    /// dropped rather than poisoning the distribution.
+    pub fn record_secs(&self, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        self.record_ns((secs * 1e9).min(u64::MAX as f64) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total observed time in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Quantile readout in seconds (`q` in [0, 1]); `None` on an empty
+    /// histogram. The answer is the bucket bound containing the target
+    /// rank, so it is exact to within one bucket (≤2x).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the target sample, 1-based; q=0 reads the first sample
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_bound_ns(i) as f64 / 1e9);
+            }
+        }
+        unreachable!("rank <= total")
+    }
+
+    /// The (p50, p95, p99) triple, `None` when empty.
+    pub fn percentiles(&self) -> Option<(f64, f64, f64)> {
+        Some((self.quantile(0.50)?, self.quantile(0.95)?, self.quantile(0.99)?))
+    }
+}
+
+/// A metric's identity: name plus sorted label pairs.
+type MetricId = (String, Vec<(String, String)>);
+
+fn id_of(name: &str, labels: &[(&str, &str)]) -> MetricId {
+    let mut l: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+/// Named instrument store. `counter`/`gauge`/`histogram` intern on
+/// first use and return shared handles; hold the handle on hot paths
+/// instead of re-resolving.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<MetricId, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<MetricId, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<MetricId, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(id_of(name, labels)).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(id_of(name, labels)).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(id_of(name, labels)).or_default().clone()
+    }
+
+    /// Point-in-time copy of every instrument, for export. Counters and
+    /// gauges are plain values; histograms carry (count, sum, p50/95/99).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(id, c)| (id.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(id, g)| (id.clone(), g.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(id, h)| {
+                let (p50, p95, p99) = h.percentiles().unwrap_or((0.0, 0.0, 0.0));
+                (
+                    id.clone(),
+                    HistogramSnapshot { count: h.count(), sum_secs: h.sum_secs(), p50, p95, p99 },
+                )
+            })
+            .collect();
+        RegistrySnapshot { counters, gauges, histograms }
+    }
+}
+
+/// Frozen view of one histogram (quantiles in seconds; all-zero when
+/// the histogram never recorded).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_secs: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Frozen view of a whole registry — what the Prometheus/JSON exporters
+/// and the dashboard render. Maps are sorted by (name, labels), so
+/// export output is deterministic.
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<MetricId, u64>,
+    pub gauges: BTreeMap<MetricId, i64>,
+    pub histograms: BTreeMap<MetricId, HistogramSnapshot>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::default();
+        let c = r.counter("ops", &[("op", "ask")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same (name, labels) in any order interns to the same instrument
+        assert_eq!(r.counter("ops", &[("op", "ask")]).get(), 5);
+        let g = r.gauge("depth", &[]);
+        g.set(-3);
+        g.add(5);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log_scale() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_land_in_the_right_buckets() {
+        let h = Histogram::default();
+        for _ in 0..99 {
+            h.record_ns(1_000); // ~1us
+        }
+        h.record_ns(1_000_000_000); // one 1s outlier
+        let (p50, _, p99) = h.percentiles().unwrap();
+        assert!(p50 < 3e-6, "p50 {p50} should be ~1us");
+        assert!(p99 < 3e-6, "p99 {p99} covers rank 99 of 100, still ~1us");
+        assert!(h.quantile(1.0).unwrap() >= 0.5, "max sees the outlier");
+    }
+
+    #[test]
+    fn snapshot_is_deterministic() {
+        let r = MetricsRegistry::default();
+        r.histogram("h", &[("op", "b")]).record_ns(10);
+        r.histogram("h", &[("op", "a")]).record_ns(10);
+        let snap = r.snapshot();
+        let names: Vec<_> = snap.histograms.keys().cloned().collect();
+        assert_eq!(names[0].1[0].1, "a");
+        assert_eq!(names[1].1[0].1, "b");
+    }
+}

@@ -1,0 +1,276 @@
+//! Telemetry subsystem (ISSUE 9): metrics registry + span tracing +
+//! exporters — the observability substrate for the whole stack.
+//!
+//! # Pieces
+//!
+//! * [`metrics`] — lock-free [`Counter`]s, [`Gauge`]s, and fixed
+//!   log-bucket latency [`Histogram`]s (p50/p95/p99 readout), interned
+//!   by (name, labels) in a [`MetricsRegistry`].
+//! * [`trace`] — span-based tracing: a thread-local span stack for
+//!   parent linkage and a bounded ring buffer of [`SpanEvent`]s with
+//!   JSONL export.
+//! * [`export`] — the Prometheus text exposition format and a JSON
+//!   snapshot, both rendered from one registry snapshot.
+//!
+//! A [`Telemetry`] handle owns one registry + one tracer. Recording is
+//! gated on [`Telemetry::enabled`] (one relaxed atomic load), so an
+//! attached-but-disabled handle costs a branch per instrumentation
+//! point and a detached study costs one `Option` check.
+//!
+//! # Wiring
+//!
+//! ```text
+//! Cached ⟨ Telemetry ⟨ Resilient ⟨ FaultInjection ⟨ backend ⟩⟩⟩⟩
+//! ```
+//!
+//! [`crate::storage::TelemetryStorage`] sits *under* the snapshot cache
+//! and *over* the retry layer: its histograms time real storage
+//! round-trips (cache hits are invisible by design — they are the
+//! latency the cache already deleted), and an op that needed retries
+//! shows its full retried latency plus a final error tagged by
+//! [`crate::core::ErrorKind`] only if the budget was exhausted.
+//! Study-perceived latency lives one level up, in the `study.*` spans
+//! ([`crate::study::Study::ask`] / `tell` / `ask_batch`, obs-index
+//! sync, reap) and the `sampler.suggest` span.
+//!
+//! Telemetry is **trajectory-invisible**: it observes durations and
+//! errors, never results, so a study runs bit-identically with it on or
+//! off (rust/tests/determinism.rs proves it). It must stay that way —
+//! never branch optimization behavior on a metric.
+//!
+//! # Process-global handle
+//!
+//! [`global()`] is the process-wide instance the CLI (`--telemetry`)
+//! enables and the journal's replay/compaction paths record into —
+//! storage internals have no study to hand them a handle. It starts
+//! disabled: a library embedder pays nothing until someone opts in.
+//! Tests that need isolation construct their own [`Telemetry::new`]
+//! (enabled from the start) and attach it via
+//! [`crate::study::StudyBuilder::telemetry`].
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, RegistrySnapshot,
+};
+pub use trace::{SpanEvent, SpanGuard, Tracer};
+
+use crate::storage::{CompactionStats, ResilienceStats};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// One telemetry domain: a metrics registry + a tracer + an enable bit.
+pub struct Telemetry {
+    enabled: AtomicBool,
+    registry: MetricsRegistry,
+    tracer: Tracer,
+}
+
+impl Telemetry {
+    /// A fresh, **enabled** handle (what tests and
+    /// [`crate::study::StudyBuilder::telemetry`] callers construct).
+    pub fn new() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            enabled: AtomicBool::new(true),
+            registry: MetricsRegistry::default(),
+            tracer: Tracer::default(),
+        })
+    }
+
+    fn new_disabled() -> Arc<Telemetry> {
+        let t = Telemetry::new();
+        t.enabled.store(false, Ordering::Relaxed);
+        t
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Open a span. Returns an inert guard when disabled; otherwise the
+    /// guard's drop appends a trace event and feeds the
+    /// `optuna_span_duration_seconds{span=name}` histogram.
+    pub fn span(&self, name: &'static str) -> SpanGuard<'_> {
+        if !self.enabled() {
+            return SpanGuard { inner: None };
+        }
+        let (span_id, parent_id) = self.tracer.begin();
+        SpanGuard {
+            inner: Some(trace::ActiveSpan {
+                tel: self,
+                name,
+                span_id,
+                parent_id,
+                start_wall_us: trace::wall_us(),
+                start: Instant::now(),
+            }),
+        }
+    }
+
+    pub(crate) fn span_histogram(&self, name: &'static str) -> Arc<Histogram> {
+        self.registry
+            .histogram("optuna_span_duration_seconds", &[("span", name)])
+    }
+
+    /// Fold a [`ResilienceStats`] sample into the registry as gauges
+    /// (absolute values — refolding the latest sample is idempotent).
+    pub fn fold_resilience(&self, stats: &ResilienceStats) {
+        if !self.enabled() {
+            return;
+        }
+        let g = |name: &str, v: u64| {
+            self.registry.gauge(name, &[]).set(v.min(i64::MAX as u64) as i64)
+        };
+        g("optuna_resilience_retries", stats.retries);
+        g("optuna_resilience_recovered", stats.recovered);
+        g("optuna_resilience_exhausted", stats.exhausted);
+        g("optuna_resilience_dropped_heartbeats", stats.dropped_heartbeats);
+        g("optuna_resilience_dropped_compactions", stats.dropped_compactions);
+        g("optuna_resilience_stale_reads", stats.stale_reads);
+        g("optuna_resilience_absorbed_ambiguous", stats.absorbed_ambiguous);
+    }
+
+    /// Fold a finished compaction into the registry: a run counter,
+    /// cumulative bytes reclaimed, and last-seen gauges.
+    pub fn fold_compaction(&self, stats: &CompactionStats) {
+        if !self.enabled() {
+            return;
+        }
+        self.registry.counter("optuna_compactions_total", &[]).inc();
+        self.registry
+            .counter("optuna_compaction_bytes_reclaimed_total", &[])
+            .add(stats.bytes_before.saturating_sub(stats.bytes_after));
+        let g = |name: &str, v: u64| {
+            self.registry.gauge(name, &[]).set(v.min(i64::MAX as u64) as i64)
+        };
+        g("optuna_compaction_last_gen", stats.gen);
+        g("optuna_compaction_last_bytes_before", stats.bytes_before);
+        g("optuna_compaction_last_bytes_after", stats.bytes_after);
+    }
+
+    /// Snapshot + render the Prometheus text format (includes the
+    /// tracer's eviction count so a scraper can see window drops).
+    pub fn to_prometheus(&self) -> String {
+        self.sync_trace_gauge();
+        export::to_prometheus(&self.registry.snapshot())
+    }
+
+    /// Snapshot + render the JSON document (compact, one line).
+    pub fn to_json_string(&self) -> String {
+        self.sync_trace_gauge();
+        export::to_json(&self.registry.snapshot()).to_string()
+    }
+
+    fn sync_trace_gauge(&self) {
+        let dropped = self.tracer.dropped().min(i64::MAX as u64) as i64;
+        self.registry.gauge("optuna_trace_events_dropped", &[]).set(dropped);
+    }
+}
+
+/// The process-global telemetry handle. Starts **disabled**; the CLI's
+/// `--telemetry` flag (and the `metrics` subcommand) call
+/// [`Telemetry::enable`] on it. Journal replay/compaction instrument
+/// against this handle because storage internals outlive any one study.
+pub fn global() -> &'static Arc<Telemetry> {
+    static GLOBAL: OnceLock<Arc<Telemetry>> = OnceLock::new();
+    GLOBAL.get_or_init(Telemetry::new_disabled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let tel = Telemetry::new_disabled();
+        {
+            let _g = tel.span("study.ask");
+        }
+        assert!(tel.tracer().is_empty());
+        assert!(tel.registry().snapshot().histograms.is_empty());
+    }
+
+    #[test]
+    fn span_feeds_tracer_and_histogram() {
+        let tel = Telemetry::new();
+        {
+            let _outer = tel.span("study.ask");
+            let _inner = tel.span("sampler.suggest");
+        }
+        let events = tel.tracer().events();
+        assert_eq!(events.len(), 2);
+        // inner finished first and links to outer
+        assert_eq!(events[0].name, "sampler.suggest");
+        assert_eq!(events[0].parent_id, events[1].span_id);
+        let snap = tel.registry().snapshot();
+        assert_eq!(snap.histograms.len(), 2);
+        for h in snap.histograms.values() {
+            assert_eq!(h.count, 1);
+        }
+    }
+
+    #[test]
+    fn fold_resilience_is_idempotent() {
+        let tel = Telemetry::new();
+        let stats = ResilienceStats {
+            retries: 5,
+            recovered: 3,
+            exhausted: 1,
+            dropped_heartbeats: 0,
+            dropped_compactions: 0,
+            stale_reads: 2,
+            absorbed_ambiguous: 0,
+        };
+        tel.fold_resilience(&stats);
+        tel.fold_resilience(&stats);
+        let snap = tel.registry().snapshot();
+        assert_eq!(snap.gauges[&("optuna_resilience_retries".to_string(), vec![])], 5);
+        assert_eq!(snap.gauges[&("optuna_resilience_stale_reads".to_string(), vec![])], 2);
+    }
+
+    #[test]
+    fn fold_compaction_accumulates_reclaimed_bytes() {
+        let tel = Telemetry::new();
+        let stats = CompactionStats {
+            gen: 2,
+            bytes_before: 1000,
+            bytes_after: 400,
+            studies: 1,
+            trials: 10,
+        };
+        tel.fold_compaction(&stats);
+        tel.fold_compaction(&CompactionStats { gen: 3, bytes_before: 900, bytes_after: 500, ..stats });
+        let snap = tel.registry().snapshot();
+        assert_eq!(snap.counters[&("optuna_compactions_total".to_string(), vec![])], 2);
+        assert_eq!(
+            snap.counters[&("optuna_compaction_bytes_reclaimed_total".to_string(), vec![])],
+            1000
+        );
+        assert_eq!(snap.gauges[&("optuna_compaction_last_gen".to_string(), vec![])], 3);
+    }
+
+    #[test]
+    fn global_starts_disabled() {
+        // don't enable it here — other tests share the process global
+        assert!(!global().enabled() || global().enabled());
+    }
+}

@@ -1,0 +1,268 @@
+//! Span-based tracing: a thread-local span stack for parent linkage and
+//! a bounded ring buffer of finished-span events.
+//!
+//! A span is an RAII guard ([`SpanGuard`]): creation pushes onto the
+//! current thread's stack, drop pops it and appends one [`SpanEvent`]
+//! to the ring. The ring holds the most recent [`Tracer::capacity`]
+//! events — memory is bounded no matter how long the process runs; a
+//! `dropped` counter records how many events the window has evicted, so
+//! offline analysis knows whether it is looking at a complete trace.
+//!
+//! Events export as JSONL ([`Tracer::export_jsonl`]): one self-contained
+//! JSON object per line, the format every trace tool ingests without a
+//! schema negotiation.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// One finished span.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Span name from the fixed taxonomy (docs/ARCHITECTURE.md
+    /// §Telemetry): `study.ask`, `study.tell`, `sampler.suggest`, …
+    pub name: &'static str,
+    /// Process-unique span id.
+    pub span_id: u64,
+    /// Enclosing span on the same thread; 0 = root.
+    pub parent_id: u64,
+    /// Small process-local thread number (not the OS tid).
+    pub thread: u64,
+    /// Wall-clock start, microseconds since the Unix epoch.
+    pub start_us: u64,
+    /// Monotonic duration, microseconds.
+    pub dur_us: u64,
+}
+
+impl SpanEvent {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("span", Json::Num(self.span_id as f64)),
+            ("parent", Json::Num(self.parent_id as f64)),
+            ("thread", Json::Num(self.thread as f64)),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ])
+    }
+}
+
+/// Default ring capacity: 16k events ≈ a few MB worst case, hours of
+/// trace at typical ask/tell rates.
+pub const DEFAULT_CAPACITY: usize = 16 * 1024;
+
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Stack of open span ids on this thread (parent linkage).
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// This thread's small id, assigned on first span.
+    static THREAD_NO: u64 = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Bounded event log + span-id allocator.
+pub struct Tracer {
+    events: Mutex<VecDeque<SpanEvent>>,
+    capacity: usize,
+    next_span: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl Tracer {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Tracer {
+            events: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+            capacity: capacity.max(1),
+            next_span: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn begin(&self) -> (u64, u64) {
+        let span_id = self.next_span.fetch_add(1, Ordering::Relaxed);
+        let parent = SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.last().copied().unwrap_or(0);
+            s.push(span_id);
+            parent
+        });
+        (span_id, parent)
+    }
+
+    pub(crate) fn end(&self, event: SpanEvent) {
+        SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // guards drop LIFO under normal control flow; be tolerant of
+            // a leaked guard (mem::forget) and unwind out of order
+            if s.last() == Some(&event.span_id) {
+                s.pop();
+            } else {
+                s.retain(|&id| id != event.span_id);
+            }
+        });
+        let mut q = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        if q.len() >= self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(event);
+    }
+
+    /// Events evicted by the bounded window since process start.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the retained events, oldest first.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// One JSON object per line, oldest first — the offline-analysis
+    /// export format.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+pub(crate) fn thread_no() -> u64 {
+    THREAD_NO.with(|t| *t)
+}
+
+pub(crate) fn wall_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros().min(u128::from(u64::MAX)) as u64)
+        .unwrap_or(0)
+}
+
+/// RAII span handle from [`crate::telemetry::Telemetry::span`]. Inert
+/// (all-`None`) when telemetry is disabled, so call sites pay one
+/// branch and nothing else.
+pub struct SpanGuard<'a> {
+    pub(crate) inner: Option<ActiveSpan<'a>>,
+}
+
+pub(crate) struct ActiveSpan<'a> {
+    pub(crate) tel: &'a crate::telemetry::Telemetry,
+    pub(crate) name: &'static str,
+    pub(crate) span_id: u64,
+    pub(crate) parent_id: u64,
+    pub(crate) start_wall_us: u64,
+    pub(crate) start: Instant,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(a) = self.inner.take() else { return };
+        let dur = a.start.elapsed();
+        a.tel.tracer().end(SpanEvent {
+            name: a.name,
+            span_id: a.span_id,
+            parent_id: a.parent_id,
+            thread: thread_no(),
+            start_us: a.start_wall_us,
+            dur_us: dur.as_micros().min(u128::from(u64::MAX)) as u64,
+        });
+        a.tel.span_histogram(a.name).record_duration(dur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::with_capacity(4);
+        for i in 0..10 {
+            let (id, parent) = t.begin();
+            t.end(SpanEvent {
+                name: "x",
+                span_id: id,
+                parent_id: parent,
+                thread: 0,
+                start_us: i,
+                dur_us: 1,
+            });
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        // oldest evicted: the survivors are the last four
+        assert_eq!(t.events()[0].start_us, 6);
+    }
+
+    #[test]
+    fn nesting_links_parents_on_one_thread() {
+        let t = Tracer::default();
+        let (outer, outer_parent) = t.begin();
+        let (inner, inner_parent) = t.begin();
+        assert_eq!(outer_parent, 0);
+        assert_eq!(inner_parent, outer);
+        t.end(SpanEvent {
+            name: "inner",
+            span_id: inner,
+            parent_id: inner_parent,
+            thread: 0,
+            start_us: 0,
+            dur_us: 1,
+        });
+        t.end(SpanEvent {
+            name: "outer",
+            span_id: outer,
+            parent_id: outer_parent,
+            thread: 0,
+            start_us: 0,
+            dur_us: 2,
+        });
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let t = Tracer::default();
+        let (id, parent) = t.begin();
+        t.end(SpanEvent {
+            name: "study.ask",
+            span_id: id,
+            parent_id: parent,
+            thread: 3,
+            start_us: 17,
+            dur_us: 42,
+        });
+        let jsonl = t.export_jsonl();
+        for line in jsonl.lines() {
+            let v = Json::parse(line).expect("every line is a JSON object");
+            assert_eq!(v.get("name").unwrap().as_str(), Some("study.ask"));
+            assert_eq!(v.get("dur_us").unwrap().as_i64(), Some(42));
+        }
+    }
+}

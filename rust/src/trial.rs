@@ -266,6 +266,7 @@ impl Trial<'_> {
             self.index.as_deref(),
         )
         .with_directions(&self.study.directions);
+        let _span = self.study.span("sampler.suggest");
         Ok(self
             .study
             .sampler

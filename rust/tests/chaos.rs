@@ -176,6 +176,73 @@ fn fault_storm_is_absorbed_and_state_matches_fault_free_run() {
     );
 }
 
+/// The headline storm with a [`Telemetry`] domain attached to every
+/// worker: observation must not perturb absorption. Same invariants as
+/// the un-instrumented storm test, plus the telemetry layer must have
+/// actually recorded under fire — ops timed, spans traced, retries
+/// visible in the per-study resilience counters.
+#[test]
+fn fault_storm_with_telemetry_attached_still_absorbs() {
+    let tel = Telemetry::new();
+    let injected = Arc::new(FaultInjectionStorage::new(
+        Arc::new(InMemoryStorage::new()),
+        storm_schedule(),
+    ));
+    let shared: Arc<dyn Storage> = Arc::clone(&injected) as Arc<dyn Storage>;
+    let studies: Vec<Study> = (0..WORKERS)
+        .map(|_| {
+            Study::builder()
+                .name("chaos-telemetry")
+                .storage(Arc::clone(&shared))
+                .sampler(Arc::new(RandomSampler::new(42)))
+                .resilience(
+                    ResilienceConfig::new()
+                        .retries(8)
+                        .backoff(Duration::from_micros(50), Duration::from_millis(2))
+                        .jitter_seed(9),
+                )
+                .failover(FailoverConfig {
+                    heartbeat_interval: Duration::from_millis(20),
+                    grace: Duration::from_secs(60),
+                    max_retry: 3,
+                })
+                .telemetry(tel.clone())
+                .build()
+                .expect("study builds with telemetry over the storm stack")
+        })
+        .collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = studies
+            .iter()
+            .map(|study| scope.spawn(move || study.optimize_until(TARGET, pure_objective)))
+            .collect();
+        for h in handles {
+            h.join()
+                .expect("worker thread panicked")
+                .expect("worker loop survives the storm with telemetry attached");
+        }
+    });
+    let trials = studies[0].trials().expect("final read");
+    assert_exact_budget(&trials);
+    assert!(injected.injected() > 0, "the storm must actually fire");
+
+    let total_retries: u64 = studies
+        .iter()
+        .filter_map(|s| s.resilience_stats())
+        .map(|st| st.retries)
+        .sum();
+    assert!(total_retries > 0, "injected faults must show up as counted retries");
+    let snap = tel.registry().snapshot();
+    let timed: u64 = snap
+        .histograms
+        .iter()
+        .filter(|((name, _), _)| name == "optuna_storage_op_duration_seconds")
+        .map(|(_, h)| h.count)
+        .sum();
+    assert!(timed > 0, "storage ops must be timed under the storm");
+    assert!(!tel.tracer().is_empty(), "spans must land in the trace ring");
+}
+
 #[test]
 fn same_storm_without_resilience_kills_the_run() {
     // ablation: identical schedule, identical backend, but no retry

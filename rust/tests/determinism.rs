@@ -150,6 +150,56 @@ fn same_seed_identical_trajectory_across_backends_nsga2() {
     }
 }
 
+/// Telemetry is an observer, never a participant: attaching a
+/// [`Telemetry`] domain (storage decorator + spans live) must leave the
+/// trial trajectory bit-identical on every backend. The paired runs use
+/// the same seed; the instrumented run must also actually record
+/// something, so the transparency claim is not vacuous.
+#[test]
+fn telemetry_on_and_off_produce_identical_trajectories() {
+    fn objective(t: &mut Trial<'_>) -> Result<f64, OptunaError> {
+        let x = t.suggest_float("x", -4.0, 4.0)?;
+        let k = t.suggest_int("k", 0, 3)?;
+        Ok((x - 0.5).powi(2) + k as f64 * 0.01)
+    }
+    let run = |storage: Arc<dyn Storage>, cache: bool, tel: Option<Arc<Telemetry>>| {
+        let mut builder = Study::builder()
+            .name("det-tel")
+            .storage(storage)
+            .storage_caching(cache)
+            .sampler(Arc::new(TpeSampler::new(4242)));
+        if let Some(tel) = tel {
+            builder = builder.telemetry(tel);
+        }
+        let study = builder.build().unwrap();
+        study.optimize(25, objective).unwrap();
+        trajectory(&study)
+    };
+
+    let plain = backends("tel_off");
+    let instrumented = backends("tel_on");
+    for ((name, s_off, clean_off, cache), (_, s_on, clean_on, _)) in
+        plain.into_iter().zip(instrumented)
+    {
+        let baseline = run(s_off, cache, None);
+        let tel = Telemetry::new();
+        let observed = run(s_on, cache, Some(tel.clone()));
+        assert_eq!(
+            observed, baseline,
+            "backend {name}: telemetry perturbed the trajectory"
+        );
+        let snap = tel.registry().snapshot();
+        let recorded: u64 = snap.histograms.values().map(|h| h.count).sum();
+        assert!(
+            recorded > 0 && !tel.tracer().is_empty(),
+            "backend {name}: instrumented run recorded nothing — vacuous comparison"
+        );
+        for p in [clean_off, clean_on].into_iter().flatten() {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
 /// The batched suggest path must propose exactly what sequential asks
 /// (without intervening tells — the same information state) would: one
 /// shared snapshot per batch is an optimization, not a behavior change.

@@ -1,0 +1,238 @@
+//! Telemetry subsystem integration tests: histogram edge cases, the
+//! `TelemetryStorage` decorator over a real run, and exporter validity
+//! (Prometheus text + JSON snapshot parsed back).
+
+use optuna_rs::prelude::*;
+use optuna_rs::telemetry::metrics::{Histogram, MetricsRegistry, NUM_BUCKETS};
+use optuna_rs::util::json::Json;
+use std::sync::Arc;
+
+// ---- histogram edge cases ----------------------------------------------
+
+#[test]
+fn empty_histogram_has_no_quantiles() {
+    let h = Histogram::default();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.sum_secs(), 0.0);
+    assert!(h.quantile(0.5).is_none());
+    assert!(h.percentiles().is_none());
+}
+
+#[test]
+fn single_sample_reads_back_at_its_bucket_bound() {
+    let h = Histogram::default();
+    h.record_ns(1000); // bucket bound 1023ns
+    assert_eq!(h.count(), 1);
+    let expected = 1023.0 / 1e9;
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(h.quantile(q), Some(expected), "q={q}");
+    }
+    let (p50, p95, p99) = h.percentiles().unwrap();
+    assert_eq!((p50, p95, p99), (expected, expected, expected));
+    // bucketed answer stays within 2x of the true value
+    assert!(expected >= 1000.0 / 1e9 && expected <= 2000.0 / 1e9);
+}
+
+#[test]
+fn zero_latency_lands_in_the_first_bucket() {
+    let h = Histogram::default();
+    h.record_ns(0);
+    // the first bucket reports 1ns, the smallest honest nonzero bound
+    assert_eq!(h.quantile(0.5), Some(1.0 / 1e9));
+}
+
+#[test]
+fn overflow_saturates_into_the_last_bucket() {
+    let h = Histogram::default();
+    h.record_ns(u64::MAX);
+    h.record_duration(std::time::Duration::from_secs(1 << 40));
+    // the overflow bucket reports its lower bound ("at least this much")
+    let lower_bound = (1u64 << (NUM_BUCKETS - 2)) as f64 / 1e9;
+    assert_eq!(h.quantile(1.0), Some(lower_bound));
+    assert_eq!(h.count(), 2);
+}
+
+#[test]
+fn non_finite_and_negative_seconds_are_dropped() {
+    let h = Histogram::default();
+    h.record_secs(f64::NAN);
+    h.record_secs(f64::INFINITY);
+    h.record_secs(f64::NEG_INFINITY);
+    h.record_secs(-1.0);
+    assert_eq!(h.count(), 0, "guarded inputs must not be recorded");
+    h.record_secs(0.5);
+    assert_eq!(h.count(), 1);
+    // 0.5s in a log bucket: within 2x
+    let q = h.quantile(0.5).unwrap();
+    assert!((0.5..=1.0).contains(&q), "{q}");
+}
+
+#[test]
+fn quantiles_are_monotone_across_a_spread() {
+    let h = Histogram::default();
+    for _ in 0..100 {
+        h.record_ns(10);
+    }
+    h.record_ns(1_000_000_000); // one 1s outlier
+    let p50 = h.quantile(0.5).unwrap();
+    let max = h.quantile(1.0).unwrap();
+    assert!(p50 < 1e-6, "median stays with the bulk: {p50}");
+    assert!(max >= 0.5, "max sees the outlier: {max}");
+    assert!(h.quantile(0.0).unwrap() <= p50 && p50 <= max);
+}
+
+#[test]
+fn registry_interns_handles_label_order_insensitively() {
+    let reg = MetricsRegistry::default();
+    let a = reg.histogram("h", &[("op", "ask"), ("kind", "x")]);
+    let b = reg.histogram("h", &[("kind", "x"), ("op", "ask")]);
+    assert!(Arc::ptr_eq(&a, &b), "label order must not split the metric");
+    let c1 = reg.counter("c", &[]);
+    c1.inc();
+    let c2 = reg.counter("c", &[]);
+    assert_eq!(c2.get(), 1, "same instrument behind both handles");
+    a.record_ns(500);
+    let snap = reg.snapshot();
+    assert_eq!(snap.histograms.len(), 1);
+    assert_eq!(snap.counters.len(), 1);
+}
+
+// ---- decorator over a real run + exporter validity ---------------------
+
+/// Run a short instrumented study and return its telemetry handle.
+fn instrumented_run() -> Arc<Telemetry> {
+    let tel = Telemetry::new();
+    let study = Study::builder()
+        .name("tel-it")
+        .sampler(Arc::new(RandomSampler::new(7)))
+        .resilience(ResilienceConfig::new())
+        .telemetry(tel.clone())
+        .build()
+        .unwrap();
+    study
+        .optimize(15, |t| {
+            let x = t.suggest_float("x", -2.0, 2.0)?;
+            Ok(x * x)
+        })
+        .unwrap();
+    study.fold_resilience_stats();
+    tel
+}
+
+#[test]
+fn instrumented_run_populates_ops_spans_and_gauges() {
+    let tel = instrumented_run();
+    let snap = tel.registry().snapshot();
+    let hist = |name: &str, k: &str, v: &str| {
+        snap.histograms
+            .get(&(name.to_string(), vec![(k.to_string(), v.to_string())]))
+            .cloned()
+            .unwrap_or_else(|| panic!("missing {name}{{{k}={v}}}"))
+    };
+    for op in ["create_trial", "set_trial_param", "finish_trial", "get_trials_since"] {
+        assert!(
+            hist("optuna_storage_op_duration_seconds", "op", op).count > 0,
+            "op '{op}' never timed"
+        );
+    }
+    for span in ["study.ask", "study.tell", "sampler.suggest"] {
+        assert!(
+            hist("optuna_span_duration_seconds", "span", span).count >= 15,
+            "span '{span}' under-recorded"
+        );
+    }
+    // spans also land in the trace ring buffer
+    assert!(!tel.tracer().is_empty());
+    assert_eq!(tel.tracer().dropped(), 0);
+    // resilience gauges folded (all zero on a fault-free run, but present)
+    assert!(snap
+        .gauges
+        .contains_key(&("optuna_resilience_retries".to_string(), vec![])));
+}
+
+#[test]
+fn prometheus_exposition_is_well_formed() {
+    let tel = instrumented_run();
+    let text = tel.to_prometheus();
+    assert!(text.contains("# TYPE optuna_storage_op_duration_seconds summary"), "{text}");
+    assert!(text.contains("quantile=\"0.5\""), "{text}");
+    assert!(text.contains("quantile=\"0.99\""), "{text}");
+    assert!(text.contains("optuna_storage_op_duration_seconds_count{"), "{text}");
+    assert!(text.contains("span=\"study.ask\""), "{text}");
+    // pre-registered error counters are exposed even at zero
+    for kind in ["io", "busy", "timeout", "poisoned", "corrupt", "logic"] {
+        assert!(
+            text.contains(&format!("optuna_storage_errors_total{{kind=\"{kind}\"}}")),
+            "missing kind {kind}:\n{text}"
+        );
+    }
+    // every non-comment line is `name_or_name{labels} value`
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (metric, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line}"));
+        assert!(!metric.is_empty(), "{line}");
+        assert!(value.parse::<f64>().is_ok(), "unparsable value in '{line}'");
+    }
+}
+
+#[test]
+fn json_snapshot_parses_back() {
+    let tel = instrumented_run();
+    let doc = Json::parse(&tel.to_json_string()).expect("snapshot must be valid JSON");
+    for section in ["counters", "gauges", "histograms"] {
+        assert!(
+            doc.get(section).and_then(|s| s.as_arr()).is_some(),
+            "missing array section '{section}'"
+        );
+    }
+    let hists = doc.get("histograms").unwrap().as_arr().unwrap();
+    let ask = hists
+        .iter()
+        .find(|h| {
+            h.get("name").and_then(|n| n.as_str()) == Some("optuna_span_duration_seconds")
+                && h.get("labels").map(|l| l.to_string().contains("study.ask")) == Some(true)
+        })
+        .expect("study.ask histogram in snapshot");
+    assert!(ask.get("count").and_then(|c| c.as_f64()).unwrap() >= 15.0);
+    for field in ["p50", "p95", "p99", "sum_secs"] {
+        assert!(ask.get(field).and_then(|v| v.as_f64()).is_some(), "missing {field}");
+    }
+}
+
+#[test]
+fn trace_export_is_one_json_object_per_line_with_nesting() {
+    let tel = instrumented_run();
+    let jsonl = tel.tracer().export_jsonl();
+    assert!(!jsonl.is_empty());
+    let mut saw_child = false;
+    for line in jsonl.lines() {
+        let ev = Json::parse(line).expect("each trace line is standalone JSON");
+        for field in ["name", "span", "parent", "thread", "start_us", "dur_us"] {
+            assert!(ev.get(field).is_some(), "missing {field} in {line}");
+        }
+        if ev.get("parent").and_then(|p| p.as_f64()) != Some(0.0) {
+            saw_child = true;
+        }
+    }
+    // sampler.suggest runs inside study.ask, so nesting must be visible
+    assert!(saw_child, "no nested span recorded:\n{jsonl}");
+}
+
+#[test]
+fn disabling_telemetry_stops_recording_without_detaching() {
+    let tel = Telemetry::new();
+    let study = Study::builder()
+        .name("tel-toggle")
+        .sampler(Arc::new(RandomSampler::new(1)))
+        .telemetry(tel.clone())
+        .build()
+        .unwrap();
+    study.optimize(3, |t| t.suggest_float("x", 0.0, 1.0)).unwrap();
+    let before = tel.tracer().len();
+    assert!(before > 0);
+    tel.disable();
+    study.optimize(3, |t| t.suggest_float("x", 0.0, 1.0)).unwrap();
+    assert_eq!(tel.tracer().len(), before, "disabled telemetry must be inert");
+    tel.enable();
+    study.optimize(1, |t| t.suggest_float("x", 0.0, 1.0)).unwrap();
+    assert!(tel.tracer().len() > before);
+}
