@@ -1,0 +1,250 @@
+//! Sampler-kernel ablation (ISSUE 10 acceptance): the vectorized TPE
+//! scoring path vs the per-candidate scalar oracle, end to end and at
+//! the kernel level, plus the bit-packed dominance sort vs its scalar
+//! oracle. Written to `BENCH_samplers.json` (override the path with
+//! `BENCH_SAMPLERS_JSON`).
+//!
+//! Rows:
+//!   1. `kind="ask"` — `sample_independent` latency over an indexed
+//!      pre-filled history, kernel ∈ {scalar, vector} × history ∈
+//!      {100, 1k, 10k, 100k}. Flat-ish across history sizes (the
+//!      observation index + `max_observations` cap bound the mixture),
+//!      with `vector` ahead at every size.
+//!   2. `kind="score"` — raw batched scoring (`kernels::score_into`
+//!      with precompiled mixtures) vs the scalar `logpdf` difference
+//!      loop on the same candidate grid. This isolates the hoisted
+//!      `erf`/`ln` work — the actual vectorization win.
+//!   3. `kind="nds"` — `nondominated_sort` (flat-key bit-packed) vs
+//!      `nondominated_sort_scalar` on random 2-/3-objective losses.
+//!
+//! Headline scalar: `speedup_vector_at_1e4` (ask-level, history=10^4).
+//! Acceptance: >= 2x. Knobs: SAMPLERS_QUICK=1 shrinks iteration counts
+//! and drops the 10^5 row; SAMPLERS_GATE=1 makes the acceptance
+//! threshold a hard assert.
+
+mod common;
+
+use common::print_header;
+use common::report::{f, percentile, s, u, BenchReport};
+use optuna_rs::core::{Distribution, FrozenTrial, ObservationIndex, ParamValue, TrialState};
+use optuna_rs::multi::{nondominated_sort, nondominated_sort_scalar};
+use optuna_rs::prelude::*;
+use optuna_rs::sampler::kernels::{self, KernelScratch, MixtureKernel};
+use optuna_rs::sampler::{
+    ParzenEstimator, Sampler, StudyContext, TpeBackend, TpeConfig, TpeKernel,
+};
+use optuna_rs::util::rng::Pcg64;
+use std::time::Instant;
+
+fn quick() -> bool {
+    std::env::var("SAMPLERS_QUICK").is_ok()
+}
+
+fn scale(n: usize) -> usize {
+    if quick() {
+        (n / 10).max(1)
+    } else {
+        n
+    }
+}
+
+/// Mean seconds/call over `iters` calls of `f`.
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Per-call microsecond samples (for percentiles).
+fn sample_us<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    out
+}
+
+/// A complete float-parameter history of size `n`: the SoA observation
+/// index over it is what feeds the kernels in production.
+fn history(n: usize) -> (Vec<FrozenTrial>, Distribution) {
+    let d = Distribution::float(-5.0, 5.0);
+    let trials = (0..n)
+        .map(|i| {
+            let mut t = FrozenTrial::new(i as u64, i as u64);
+            let x = (i as f64 / n as f64) * 10.0 - 5.0;
+            t.params
+                .insert("x".into(), (d.clone(), d.internal(&ParamValue::Float(x)).unwrap()));
+            t.state = TrialState::Complete;
+            t.value = Some(x * x);
+            t
+        })
+        .collect();
+    (trials, d)
+}
+
+fn kernel_name(k: TpeKernel) -> &'static str {
+    match k {
+        TpeKernel::Scalar => "scalar",
+        TpeKernel::Vector => "vector",
+    }
+}
+
+/// Row set 1: end-to-end suggest latency over the indexed history.
+/// Returns (n, kernel, mean_us, p50_us) per row.
+fn ask_latency(rep: &mut BenchReport) -> f64 {
+    print_header(
+        "TPE ask latency over the SoA index (us/suggest)",
+        &["history", "scalar mean", "vector mean", "speedup"],
+    );
+    let sizes: &[usize] = if quick() {
+        &[100, 1_000, 10_000]
+    } else {
+        &[100, 1_000, 10_000, 100_000]
+    };
+    let mut speedup_at_1e4 = f64::NAN;
+    for &n in sizes {
+        let (trials, d) = history(n);
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let snap = ix.apply(&trials, 1);
+        let ctx = StudyContext::with_index(StudyDirection::Minimize, &trials, Some(&*snap));
+        let mut means = [0.0f64; 2];
+        for (slot, kernel) in [(0usize, TpeKernel::Scalar), (1, TpeKernel::Vector)] {
+            let sampler = TpeSampler::with_config(
+                0,
+                TpeConfig { kernel, ..Default::default() },
+                TpeBackend::Native,
+            );
+            // warm the per-sampler scratch buffers outside the timing
+            for _ in 0..8 {
+                let _ = sampler.sample_independent(&ctx, 0, "x", &d);
+            }
+            let samples = sample_us(scale(2000), || {
+                std::hint::black_box(sampler.sample_independent(&ctx, 0, "x", &d));
+            });
+            let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+            means[slot] = mean;
+            rep.row(&[
+                ("kind", s("ask")),
+                ("n_trials", u(n as u64)),
+                ("kernel", s(kernel_name(kernel))),
+                ("mean_us", f(mean, 3)),
+                ("p50_us", f(percentile(&samples, 0.5), 3)),
+                ("p95_us", f(percentile(&samples, 0.95), 3)),
+            ]);
+        }
+        let speedup = means[0] / means[1];
+        if n == 10_000 {
+            speedup_at_1e4 = speedup;
+        }
+        println!("{n} | {:.2} | {:.2} | {speedup:.2}x", means[0], means[1]);
+    }
+    speedup_at_1e4
+}
+
+/// Row set 2: the scoring kernel in isolation — precompiled mixtures,
+/// one candidate grid, scalar logpdf-difference loop vs score_into.
+fn score_kernel(rep: &mut BenchReport) {
+    print_header(
+        "batched scoring kernel vs scalar logpdf loop (us/call)",
+        &["candidates", "scalar", "vector", "speedup"],
+    );
+    let below = ParzenEstimator::fit(
+        &(0..40).map(|i| i as f64 / 8.0).collect::<Vec<_>>(),
+        -1.0,
+        6.0,
+    );
+    let above = ParzenEstimator::fit(
+        &(0..60).map(|i| i as f64 / 12.0).collect::<Vec<_>>(),
+        -1.0,
+        6.0,
+    );
+    let mut below_k = MixtureKernel::default();
+    let mut above_k = MixtureKernel::default();
+    let mut scratch = KernelScratch::default();
+    let mut out: Vec<f64> = Vec::new();
+    for n_cand in [24usize, 128, 512, 4096] {
+        let cand: Vec<f64> =
+            (0..n_cand).map(|i| i as f64 * 7.0 / n_cand as f64 - 1.0).collect();
+        let iters = scale(2000);
+        let scalar_us = bench(iters, || {
+            out.clear();
+            for &x in &cand {
+                out.push(below.logpdf(x) - above.logpdf(x));
+            }
+            std::hint::black_box(&out);
+        }) * 1e6;
+        let vector_us = bench(iters, || {
+            // recompiled per call: production compiles per suggest too
+            below_k.compile_from(&below);
+            above_k.compile_from(&above);
+            kernels::score_into(&cand, &below_k, &above_k, &mut scratch, &mut out);
+            std::hint::black_box(&out);
+        }) * 1e6;
+        let speedup = scalar_us / vector_us;
+        rep.row(&[
+            ("kind", s("score")),
+            ("n_candidates", u(n_cand as u64)),
+            ("scalar_us", f(scalar_us, 3)),
+            ("vector_us", f(vector_us, 3)),
+            ("speedup", f(speedup, 3)),
+        ]);
+        println!("{n_cand} | {scalar_us:.2} | {vector_us:.2} | {speedup:.2}x");
+    }
+}
+
+/// Row set 3: flat-key bit-packed nondominated sort vs the scalar oracle.
+fn nds_sort(rep: &mut BenchReport) {
+    print_header(
+        "nondominated sort: flat-key bitmap vs scalar (us/sort)",
+        &["points", "dim", "scalar", "vector", "speedup"],
+    );
+    let mut rng = Pcg64::new(7);
+    for &(n, dim) in &[(64usize, 2usize), (256, 2), (256, 3), (1024, 3)] {
+        let losses: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.uniform_range(0.0, 1.0)).collect())
+            .collect();
+        let iters = scale(if n >= 1024 { 60 } else { 400 });
+        let scalar_us = bench(iters, || {
+            std::hint::black_box(nondominated_sort_scalar(&losses));
+        }) * 1e6;
+        let vector_us = bench(iters, || {
+            std::hint::black_box(nondominated_sort(&losses));
+        }) * 1e6;
+        let speedup = scalar_us / vector_us;
+        rep.row(&[
+            ("kind", s("nds")),
+            ("n_points", u(n as u64)),
+            ("dim", u(dim as u64)),
+            ("scalar_us", f(scalar_us, 3)),
+            ("vector_us", f(vector_us, 3)),
+            ("speedup", f(speedup, 3)),
+        ]);
+        println!("{n} | {dim} | {scalar_us:.2} | {vector_us:.2} | {speedup:.2}x");
+    }
+}
+
+fn main() {
+    println!("fig_samplers: set SAMPLERS_QUICK=1 for a fast smoke run");
+    let mut rep = BenchReport::new(
+        "fig_samplers",
+        "us",
+        "BENCH_SAMPLERS_JSON",
+        "BENCH_samplers.json",
+    );
+    rep.scalar("simd_feature", s(if cfg!(feature = "simd") { "on" } else { "off" }));
+    let speedup_at_1e4 = ask_latency(&mut rep);
+    score_kernel(&mut rep);
+    nds_sort(&mut rep);
+    rep.scalar("speedup_vector_at_1e4", f(speedup_at_1e4, 3));
+    rep.write();
+    if std::env::var("SAMPLERS_GATE").is_ok() {
+        assert!(
+            speedup_at_1e4 >= 2.0,
+            "acceptance gate: vector kernel {speedup_at_1e4:.2}x at 10^4 trials (need >= 2x)"
+        );
+    }
+}

@@ -97,7 +97,8 @@ fn usage() -> String {
      --storage <memory:|journal://PATH|journal+bin://PATH> --study NAME \
      [--auto-compact-mb N] [--format lines|binary] \
      [--direction minimize|maximize] [--directions minimize,maximize,..] \
-     [--sampler SPEC: random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2, e.g. 'tpe:group=true,n_startup=20'] \
+     [--sampler SPEC: random|tpe|cmaes|tpe+cmaes|gp|rf|nsga2, \
+      e.g. 'tpe:group=true,n_startup=20,kernel=scalar|vector'] \
      [--pruner SPEC: none|asha|median|percentile|sync-sh|hyperband, \
       e.g. 'hyperband:min_resource=1,max_resource=81,reduction=3'] [--trials N] [--seed N] \
      [--workload quadratic|rocksdb|hpl|ffmpeg|svhn-surrogate|zdt1|zdt2|dtlz2|czdt1|acclat] [--out FILE] \
@@ -1371,6 +1372,9 @@ mod tests {
         }
         // spec strings with real knobs resolve through the same path
         assert_eq!(make_sampler("tpe:group=true,n_startup=20", 0).unwrap().name(), "tpe");
+        assert_eq!(make_sampler("tpe:kernel=scalar", 0).unwrap().name(), "tpe");
+        let err = make_sampler("tpe:kernel=avx", 0).unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
         assert_eq!(
             make_pruner("hyperband:min_resource=1,max_resource=81,reduction=3", 0)
                 .unwrap()

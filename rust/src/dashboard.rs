@@ -7,9 +7,13 @@ use crate::core::{OptunaError, TrialState};
 use crate::study::Study;
 use std::fmt::Write as _;
 
-/// Map a value range to SVG y (flipped).
+/// Map a value range to SVG y (flipped). Degenerate inputs clamp to the
+/// mid-band instead of leaking `NaN` coordinates into the SVG: a
+/// one-trial (or all-equal) history collapses the range to `lo == hi`,
+/// and a NaN objective value survives into the trial table — both used
+/// to normalize to `NaN/0` here and render an invisible plot.
 fn y_of(v: f64, lo: f64, hi: f64, height: f64) -> f64 {
-    if hi <= lo {
+    if !v.is_finite() || !(hi > lo) || !(hi - lo).is_finite() {
         return height / 2.0;
     }
     height - (v - lo) / (hi - lo) * height
@@ -467,6 +471,46 @@ mod tests {
         let study = Study::builder().name("empty").build().unwrap();
         let html = render_html(&study).unwrap();
         assert!(html.contains("Trials (0 total)"));
+    }
+
+    #[test]
+    fn one_complete_trial_renders_without_nan() {
+        // regression: a single trial makes lo == hi in the optimization
+        // history, which used to normalize to NaN/0 and emit NaN
+        // coordinates into the SVG
+        let study = Study::builder()
+            .name("dash-one")
+            .sampler(Arc::new(RandomSampler::new(5)))
+            .build()
+            .unwrap();
+        study.optimize(1, |t| t.suggest_float("x", 0.0, 1.0).map(|_| 3.5)).unwrap();
+        let html = render_html(&study).unwrap();
+        assert!(html.contains("Optimization history"));
+        assert!(!html.contains("NaN"), "degenerate range leaked NaN: {html}");
+    }
+
+    #[test]
+    fn nan_objective_value_renders_without_nan_coordinates() {
+        // a diverged trial (NaN value) may print "NaN" in the trials
+        // table, but must never produce NaN SVG coordinates
+        let study = Study::builder()
+            .name("dash-nan")
+            .sampler(Arc::new(RandomSampler::new(6)))
+            .build()
+            .unwrap();
+        study
+            .optimize(4, |t| {
+                let x = t.suggest_float("x", 0.0, 1.0)?;
+                Ok(if x < 0.5 { f64::NAN } else { x })
+            })
+            .unwrap();
+        let html = render_html(&study).unwrap();
+        // attribute coordinates are quoted, polyline points comma-joined
+        assert!(!html.contains("'NaN'"), "NaN attribute coordinate: {html}");
+        assert!(
+            !html.contains("NaN,") && !html.contains(",NaN"),
+            "NaN polyline coordinate: {html}"
+        );
     }
 
     #[test]

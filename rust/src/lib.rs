@@ -1,3 +1,8 @@
+// The opt-in `simd` feature replaces the autovectorized TPE kernel lane
+// loop with explicit `std::simd` ops (nightly-only; see
+// `sampler/kernels/`). Results are bit-identical either way.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # optuna-rs
 //!
 //! A Rust + JAX + Pallas reproduction of **"Optuna: A Next-generation

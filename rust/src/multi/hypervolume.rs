@@ -21,6 +21,7 @@
 
 use crate::core::OptunaError;
 use crate::multi::dominance::dominates;
+use crate::sampler::kernels::dominance as dkern;
 use crate::util::stats::nan_max_cmp;
 
 /// Exact hypervolume of `points` (minimization losses) w.r.t. `reference`.
@@ -60,8 +61,20 @@ pub fn hypervolume(points: &[Vec<f64>], reference: &[f64]) -> Result<f64, Optuna
 
 /// 2-d sweep over the nondominated subset. `points` are strictly inside
 /// the (r0, r1) box.
+///
+/// The nondominated filter runs on flat `u64` key columns
+/// ([`crate::sampler::kernels::dominance`]) — one integer compare per
+/// objective instead of a `nan_max_cmp` match — keeping the selected
+/// subset, its order, and therefore every float in the strip sum
+/// bit-identical to the scalar [`pareto_filter_scalar`] route.
 fn hv2(points: &[&[f64]], r0: f64, r1: f64) -> f64 {
-    let mut front = pareto_filter(points);
+    let mut front: Vec<&[f64]> = match dkern::FlatKeys::from_slices(points) {
+        Some(flat) => dkern::pareto_filter_indices(&flat)
+            .into_iter()
+            .map(|i| points[i])
+            .collect(),
+        None => pareto_filter_scalar(points), // ragged — cannot happen from hypervolume()
+    };
     // ascending loss 0 ⇒ (strictly) descending loss 1 on a nondominated set
     front.sort_by(|a, b| nan_max_cmp(&a[0], &b[0]));
     let mut hv = 0.0;
@@ -73,7 +86,9 @@ fn hv2(points: &[&[f64]], r0: f64, r1: f64) -> f64 {
     hv
 }
 
-/// 3-d slicing along the third axis.
+/// 3-d slicing along the third axis. The per-slab active set reuses one
+/// buffer — the old per-slab `Vec` collect made hv3 allocation-bound at
+/// NSGA-II population sizes.
 fn hv3(points: &[&[f64]], reference: &[f64]) -> f64 {
     if points.is_empty() {
         return 0.0;
@@ -82,26 +97,24 @@ fn hv3(points: &[&[f64]], reference: &[f64]) -> f64 {
     zs.sort_by(nan_max_cmp);
     zs.dedup();
     let mut hv = 0.0;
+    let mut active: Vec<&[f64]> = Vec::with_capacity(points.len());
     for (k, &z) in zs.iter().enumerate() {
         let z_next = zs.get(k + 1).copied().unwrap_or(reference[2]);
         let slab = z_next - z;
         if slab <= 0.0 {
             continue;
         }
-        let active: Vec<&[f64]> = points
-            .iter()
-            .copied()
-            .filter(|p| p[2] <= z)
-            .map(|p| &p[..2])
-            .collect();
+        active.clear();
+        active.extend(points.iter().copied().filter(|p| p[2] <= z).map(|p| &p[..2]));
         hv += slab * hv2(&active, reference[0], reference[1]);
     }
     hv
 }
 
 /// Drop dominated (and duplicate) points — the sweeps assume a
-/// mutually-nondominated input.
-fn pareto_filter<'a>(points: &[&'a [f64]]) -> Vec<&'a [f64]> {
+/// mutually-nondominated input. Scalar oracle for the key-based filter
+/// in [`hv2`] (differential-tested below).
+fn pareto_filter_scalar<'a>(points: &[&'a [f64]]) -> Vec<&'a [f64]> {
     let mut kept: Vec<&[f64]> = Vec::with_capacity(points.len());
     'outer: for &p in points {
         for &q in points {
@@ -226,6 +239,32 @@ mod tests {
         assert!(hypervolume(&[vec![0.0; 4]], &[1.0; 4]).is_err());
         assert!(hypervolume(&[], &[]).is_err());
         assert!(hypervolume(&[vec![0.0, 0.0]], &[1.0]).is_err());
+    }
+
+    /// The key-based nondominated filter must select the identical
+    /// subset, in the identical order, as the scalar oracle — the strip
+    /// sums downstream are only bit-stable if this holds.
+    #[test]
+    fn property_key_filter_equals_scalar_filter() {
+        check("hv_filter_equiv", 60, |rng| {
+            let n = rng.int_range(0, 20) as usize;
+            // coarse half-grid: duplicates and dominance ties are common
+            let points: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..2).map(|_| rng.int_range(0, 5) as f64 / 2.0).collect())
+                .collect();
+            let refs: Vec<&[f64]> = points.iter().map(|p| p.as_slice()).collect();
+            let scalar = pareto_filter_scalar(&refs);
+            let flat = dkern::FlatKeys::from_slices(&refs).unwrap();
+            let keyed: Vec<&[f64]> = dkern::pareto_filter_indices(&flat)
+                .into_iter()
+                .map(|i| refs[i])
+                .collect();
+            prop_assert!(
+                keyed == scalar,
+                "filter diverged: keyed={keyed:?} scalar={scalar:?} input={points:?}"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -39,7 +39,10 @@ mod nsga2;
 
 pub use dominance::{dominates, dominates_constrained, total_violation};
 pub use hypervolume::hypervolume;
-pub use nds::{crowding_distance, nondominated_sort, nondominated_sort_constrained};
+pub use nds::{
+    crowding_distance, nondominated_sort, nondominated_sort_constrained,
+    nondominated_sort_constrained_scalar, nondominated_sort_scalar,
+};
 pub use nsga2::{NsgaIiConfig, NsgaIiSampler};
 
 use crate::core::StudyDirection;

@@ -4,6 +4,7 @@
 use std::cmp::Ordering;
 
 use crate::multi::dominance::{dominates, dominates_constrained};
+use crate::sampler::kernels::dominance as dkern;
 use crate::util::stats::nan_max_cmp;
 
 /// Partition loss vectors into Pareto fronts: `fronts[0]` is the
@@ -15,7 +16,24 @@ use crate::util::stats::nan_max_cmp;
 /// All vectors must share one length; losses are minimization-normalized
 /// (see [`crate::multi::to_losses`]) and NaN-safe per the dominance
 /// comparator.
+///
+/// Rectangular inputs take the vectorized kernel (`u64`-key compares +
+/// bit-packed peeling, [`crate::sampler::kernels::dominance`]), which
+/// produces front-for-front identical output to
+/// [`nondominated_sort_scalar`]; ragged inputs fall back to the scalar
+/// oracle.
 pub fn nondominated_sort(losses: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    match dkern::FlatKeys::from_rows(losses) {
+        Some(flat) => dkern::sort_fronts(&flat, None),
+        None => nondominated_sort_scalar(losses),
+    }
+}
+
+/// Scalar-oracle [`nondominated_sort`]: per-pair [`dominates`] calls and
+/// `Vec`-list peeling. Kept public, like `SingleMutexStorage`, as the
+/// differential baseline for the kernel path (`rust/tests/kernel_equiv.rs`)
+/// and for ragged inputs.
+pub fn nondominated_sort_scalar(losses: &[Vec<f64>]) -> Vec<Vec<usize>> {
     sort_by_dominance(losses.len(), |i, j| dominates(&losses[i], &losses[j]))
 }
 
@@ -28,6 +46,19 @@ pub fn nondominated_sort_constrained(
     violations: &[f64],
 ) -> Vec<Vec<usize>> {
     debug_assert_eq!(losses.len(), violations.len());
+    match dkern::FlatKeys::from_rows(losses) {
+        Some(flat) if violations.len() == losses.len() => {
+            dkern::sort_fronts(&flat, Some(violations))
+        }
+        _ => nondominated_sort_constrained_scalar(losses, violations),
+    }
+}
+
+/// Scalar oracle for [`nondominated_sort_constrained`].
+pub fn nondominated_sort_constrained_scalar(
+    losses: &[Vec<f64>],
+    violations: &[f64],
+) -> Vec<Vec<usize>> {
     sort_by_dominance(losses.len(), |i, j| {
         dominates_constrained(&losses[i], violations[i], &losses[j], violations[j])
     })
@@ -225,6 +256,46 @@ mod tests {
         let viol = vec![3.0, 1.0, 2.0];
         let fronts = nondominated_sort_constrained(&losses, &viol);
         assert_eq!(fronts, vec![vec![1], vec![2], vec![0]]);
+    }
+
+    /// The vectorized path must replicate the scalar oracle exactly —
+    /// same fronts, same nesting, same within-front order — including
+    /// under NaN losses, ±0.0, infinities, and heavy ties.
+    #[test]
+    fn property_kernel_sort_equals_scalar_oracle() {
+        check("nds_kernel_equiv", 60, |rng| {
+            let n = rng.int_range(0, 80) as usize;
+            let dim = rng.int_range(1, 4) as usize;
+            let losses: Vec<Vec<f64>> = (0..n)
+                .map(|_| {
+                    (0..dim)
+                        .map(|_| match rng.index(8) {
+                            0 => f64::NAN,
+                            1 => f64::INFINITY,
+                            2 => -0.0,
+                            _ => rng.int_range(0, 5) as f64,
+                        })
+                        .collect()
+                })
+                .collect();
+            let fast = nondominated_sort(&losses);
+            let oracle = nondominated_sort_scalar(&losses);
+            prop_assert!(fast == oracle, "plain sort diverged: {fast:?} vs {oracle:?}");
+            let viol: Vec<f64> = (0..n)
+                .map(|_| match rng.index(3) {
+                    0 => 0.0,
+                    1 => f64::NAN,
+                    _ => rng.uniform_range(0.0, 2.0),
+                })
+                .collect();
+            let fast_c = nondominated_sort_constrained(&losses, &viol);
+            let oracle_c = nondominated_sort_constrained_scalar(&losses, &viol);
+            prop_assert!(
+                fast_c == oracle_c,
+                "constrained sort diverged: {fast_c:?} vs {oracle_c:?}"
+            );
+            Ok(())
+        });
     }
 
     /// ISSUE 4 property: front 0 is mutually nondominated, and every

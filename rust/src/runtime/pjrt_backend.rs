@@ -219,17 +219,21 @@ impl CandidateScorer for TpeKernelScorer {
             for (i, &c) in cand.iter().enumerate() {
                 cand_pad[i] = c as f32;
             }
+            // to_kernel_inputs stays f64 (bit-equivalence with the native
+            // kernels); the Pallas kernel's 32-bit ABI truncates here, at
+            // the literal boundary, and nowhere earlier
+            let f32s = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
             let (bm, bs, bw) = below.to_kernel_inputs(self.n_comp);
             let (am, asg, aw) = above.to_kernel_inputs(self.n_comp);
             let bounds = [below.low as f32, below.high as f32];
             let inputs = vec![
                 literal_f32(&cand_pad, &[self.n_cand])?,
-                literal_f32(&bm, &[self.n_comp])?,
-                literal_f32(&bs, &[self.n_comp])?,
-                literal_f32(&bw, &[self.n_comp])?,
-                literal_f32(&am, &[self.n_comp])?,
-                literal_f32(&asg, &[self.n_comp])?,
-                literal_f32(&aw, &[self.n_comp])?,
+                literal_f32(&f32s(&bm), &[self.n_comp])?,
+                literal_f32(&f32s(&bs), &[self.n_comp])?,
+                literal_f32(&f32s(&bw), &[self.n_comp])?,
+                literal_f32(&f32s(&am), &[self.n_comp])?,
+                literal_f32(&f32s(&asg), &[self.n_comp])?,
+                literal_f32(&f32s(&aw), &[self.n_comp])?,
                 literal_f32(&bounds, &[2])?,
             ];
             let outs = self.runtime.execute("tpe_score", &inputs)?;

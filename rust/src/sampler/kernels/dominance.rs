@@ -1,0 +1,302 @@
+//! Branch-free Pareto dominance over flat key columns, plus bit-packed
+//! Deb front peeling — the vectorized twin of `multi/nds.rs` and the
+//! `multi/hypervolume.rs` filter loop.
+//!
+//! ## The key embedding
+//!
+//! [`nan_max_cmp`] defines a total order on `f64` (NaN greatest, equal
+//! NaNs equal, `−0.0 == 0.0`). [`loss_key`] embeds that order into `u64`
+//! monotonically, so every per-objective comparison in a dominance check
+//! becomes one unsigned integer compare — no NaN branch, no
+//! `partial_cmp` `Option`, no `Ordering` match. A dominance test over m
+//! objectives is then `all(kaᵢ ≤ kbᵢ) && any(kaᵢ < kbᵢ)` over contiguous
+//! `u64` rows: exactly the shape LLVM turns into SIMD compares.
+//!
+//! ## Equivalence with the scalar oracle
+//!
+//! The scalar `sort_by_dominance` is pure index bookkeeping once the
+//! dominance relation is fixed: its `dominated[i]` lists are built in
+//! ascending index order and its fronts peel in ascending order. The
+//! bit-packed peeling below iterates set bits ascending, so it replays
+//! the identical decision sequence — `rust/tests/kernel_equiv.rs` and
+//! the tests below assert front-for-front equality (same nesting, same
+//! order) against `nondominated_sort_scalar`.
+//!
+//! Ragged inputs (rows of unequal length) have no flat layout; callers
+//! fall back to the scalar path when [`FlatKeys::from_rows`] declines.
+
+use crate::util::stats::nan_max_cmp;
+
+/// Monotone embedding of [`nan_max_cmp`]'s total order into `u64`:
+/// `loss_key(a) < loss_key(b) ⟺ nan_max_cmp(a, b) == Less`, and equal
+/// keys exactly where the comparator says `Equal` (`−0.0` canonicalizes
+/// to `+0.0`; every NaN maps to `u64::MAX`, above `+∞`).
+#[inline]
+pub fn loss_key(x: f64) -> u64 {
+    if x.is_nan() {
+        return u64::MAX;
+    }
+    let x = if x == 0.0 { 0.0 } else { x }; // −0.0 → +0.0
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b // negative: reverse magnitude order below the positives
+    } else {
+        b | (1u64 << 63) // non-negative: shift above every negative
+    }
+}
+
+/// A rectangular loss matrix as one flat row-major `u64` key array.
+#[derive(Debug, Clone)]
+pub struct FlatKeys {
+    keys: Vec<u64>,
+    n: usize,
+    m: usize,
+}
+
+impl FlatKeys {
+    /// Flatten `rows`; `None` when the rows disagree on length (no
+    /// rectangular layout — callers keep the scalar path).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Option<FlatKeys> {
+        Self::build(rows.len(), rows.first().map_or(0, |r| r.len()), |i| &rows[i])
+    }
+
+    /// [`Self::from_rows`] over borrowed slices.
+    pub fn from_slices(rows: &[&[f64]]) -> Option<FlatKeys> {
+        Self::build(rows.len(), rows.first().map_or(0, |r| r.len()), |i| rows[i])
+    }
+
+    fn build<'a>(n: usize, m: usize, row: impl Fn(usize) -> &'a [f64]) -> Option<FlatKeys> {
+        let mut keys = Vec::with_capacity(n * m);
+        for i in 0..n {
+            let r = row(i);
+            if r.len() != m {
+                return None;
+            }
+            keys.extend(r.iter().map(|&x| loss_key(x)));
+        }
+        Some(FlatKeys { keys, n, m })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[u64] {
+        &self.keys[i * self.m..(i + 1) * self.m]
+    }
+}
+
+/// `(a dominates b, b dominates a)` in one pass over the key rows.
+/// Width-specialized for the common m = 2 and m = 3 so the compare chain
+/// is a handful of scalar ops with no loop at all.
+#[inline]
+fn pareto_pair(a: &[u64], b: &[u64]) -> (bool, bool) {
+    let (a_lt, a_gt) = match a.len() {
+        2 => (a[0] < b[0] || a[1] < b[1], a[0] > b[0] || a[1] > b[1]),
+        3 => (
+            a[0] < b[0] || a[1] < b[1] || a[2] < b[2],
+            a[0] > b[0] || a[1] > b[1] || a[2] > b[2],
+        ),
+        _ => {
+            let (mut lt, mut gt) = (false, false);
+            for (x, y) in a.iter().zip(b) {
+                lt |= x < y;
+                gt |= x > y;
+            }
+            (lt, gt)
+        }
+    };
+    (a_lt && !a_gt, a_gt && !a_lt)
+}
+
+/// `(a dom b, b dom a)` under Deb's constrained rules — the key-space
+/// twin of `dominates_constrained` (violations compare with plain `<`,
+/// so a NaN violation neither dominates nor is "smaller").
+#[inline]
+fn constrained_pair(a: &[u64], b: &[u64], va: f64, vb: f64) -> (bool, bool) {
+    match (va <= 0.0, vb <= 0.0) {
+        (true, false) => (true, false),
+        (false, true) => (false, true),
+        (false, false) => (va < vb, vb < va),
+        (true, true) => pareto_pair(a, b),
+    }
+}
+
+/// Deb front peeling over an n×n bit-packed dominance matrix. With
+/// `violations`, pairs compare under constrained dominance. Produces
+/// exactly what the scalar `sort_by_dominance` produces — same fronts,
+/// same within-front order.
+pub fn sort_fronts(flat: &FlatKeys, violations: Option<&[f64]>) -> Vec<Vec<usize>> {
+    let n = flat.n;
+    if n == 0 {
+        return Vec::new();
+    }
+    let words = (n + 63) / 64;
+    // dominated[i*words..] = bitset of indices i dominates
+    let mut dominated = vec![0u64; n * words];
+    let mut count = vec![0usize; n];
+    for i in 0..n {
+        let ri = flat.row(i);
+        for j in (i + 1)..n {
+            let (dij, dji) = match violations {
+                None => pareto_pair(ri, flat.row(j)),
+                Some(v) => constrained_pair(ri, flat.row(j), v[i], v[j]),
+            };
+            if dij {
+                dominated[i * words + j / 64] |= 1u64 << (j % 64);
+                count[j] += 1;
+            } else if dji {
+                dominated[j * words + i / 64] |= 1u64 << (i % 64);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            // ascending set-bit walk == the scalar dominated[i] list order
+            for (w, &word) in dominated[i * words..(i + 1) * words].iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let j = w * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    count[j] -= 1;
+                    if count[j] == 0 {
+                        next.push(j);
+                    }
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Indices of the mutually-nondominated, duplicate-free subset, in input
+/// order — the key-space twin of the hypervolume sweep's
+/// `pareto_filter` (which compares with [`nan_max_cmp`] per objective).
+pub fn pareto_filter_indices(flat: &FlatKeys) -> Vec<usize> {
+    let n = flat.n;
+    let mut kept: Vec<usize> = Vec::with_capacity(n);
+    'outer: for p in 0..n {
+        let rp = flat.row(p);
+        for q in 0..n {
+            if q != p && pareto_pair(flat.row(q), rp).0 {
+                continue 'outer;
+            }
+        }
+        if kept.iter().any(|&k| flat.row(k) == rp) {
+            continue; // exact duplicate (key-equal ⟺ nan_max-equal) already kept
+        }
+        kept.push(p);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multi::dominance::{dominates, dominates_constrained};
+    use crate::prop_assert;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Pcg64;
+    use std::cmp::Ordering;
+
+    fn weird_value(rng: &mut Pcg64) -> f64 {
+        match rng.index(10) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            3 => -0.0,
+            4 => 0.0,
+            5..=7 => rng.int_range(-3, 3) as f64, // coarse grid: ties abound
+            _ => rng.uniform_range(-100.0, 100.0),
+        }
+    }
+
+    #[test]
+    fn key_embedding_preserves_total_order() {
+        check("kernels::loss_key_order", 400, |rng| {
+            let a = weird_value(rng);
+            let b = weird_value(rng);
+            let want = nan_max_cmp(&a, &b);
+            let got = loss_key(a).cmp(&loss_key(b));
+            prop_assert!(got == want, "key order for ({a}, {b}): {got:?} vs {want:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pareto_pair_matches_scalar_dominates() {
+        check("kernels::pareto_pair", 300, |rng| {
+            let m = 1 + rng.index(5);
+            let a: Vec<f64> = (0..m).map(|_| weird_value(rng)).collect();
+            let b: Vec<f64> = (0..m).map(|_| weird_value(rng)).collect();
+            let flat = FlatKeys::from_rows(&[a.clone(), b.clone()]).unwrap();
+            let (dab, dba) = pareto_pair(flat.row(0), flat.row(1));
+            prop_assert!(
+                dab == dominates(&a, &b) && dba == dominates(&b, &a),
+                "pair mismatch a={a:?} b={b:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constrained_pair_matches_scalar() {
+        check("kernels::constrained_pair", 300, |rng| {
+            let m = 1 + rng.index(3);
+            let a: Vec<f64> = (0..m).map(|_| weird_value(rng)).collect();
+            let b: Vec<f64> = (0..m).map(|_| weird_value(rng)).collect();
+            let viol = |rng: &mut Pcg64| match rng.index(4) {
+                0 => 0.0,
+                1 => f64::NAN,
+                _ => rng.uniform_range(0.0, 2.0),
+            };
+            let (va, vb) = (viol(rng), viol(rng));
+            let flat = FlatKeys::from_rows(&[a.clone(), b.clone()]).unwrap();
+            let (dab, dba) = constrained_pair(flat.row(0), flat.row(1), va, vb);
+            prop_assert!(
+                dab == dominates_constrained(&a, va, &b, vb)
+                    && dba == dominates_constrained(&b, vb, &a, va),
+                "constrained pair mismatch a={a:?}({va}) b={b:?}({vb})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ragged_rows_decline_flat_layout() {
+        assert!(FlatKeys::from_rows(&[vec![1.0, 2.0], vec![1.0]]).is_none());
+        assert!(FlatKeys::from_rows(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn filter_keeps_order_and_drops_duplicates() {
+        let rows = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0], // dominated by (2,2)
+            vec![1.0, 4.0], // duplicate of row 0
+            vec![4.0, 1.0],
+        ];
+        let flat = FlatKeys::from_rows(&rows).unwrap();
+        assert_eq!(pareto_filter_indices(&flat), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn duplicate_keys_compare_equal_through_nan_and_signed_zero() {
+        let flat =
+            FlatKeys::from_rows(&[vec![f64::NAN, -0.0], vec![f64::NAN, 0.0]]).unwrap();
+        assert_eq!(flat.row(0), flat.row(1));
+        assert_eq!(nan_max_cmp(&-0.0, &0.0), Ordering::Equal);
+    }
+}

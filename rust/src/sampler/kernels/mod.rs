@@ -1,0 +1,27 @@
+//! Vectorizable scoring/sorting kernels over flat structure-of-arrays
+//! data (ISSUE 10).
+//!
+//! The observation index (`core/obs_index.rs`) already hands the
+//! samplers loss-sorted SoA columns; these kernels are the matching
+//! compute layer: chunked, branch-free inner loops over contiguous
+//! arrays that LLVM autovectorizes, with every float operation kept in
+//! the scalar oracle's exact order so the results are **bit-identical**
+//! — the scalar paths stay alive as differential oracles (the
+//! `SingleMutexStorage` pattern from the storage layer), asserted by
+//! `rust/tests/kernel_equiv.rs` and the per-module property tests.
+//!
+//! * [`tpe_score`] — batched TPE acquisition (`log l − log g`) over a
+//!   candidate grid, selected per sampler via the `tpe:kernel=…` registry
+//!   knob ([`crate::sampler::TpeKernel`]).
+//! * [`dominance`] — `u64`-key Pareto dominance, bit-packed Deb front
+//!   peeling, and the hypervolume sweep's nondominated filter.
+//!
+//! An opt-in `std::simd` path (`--features simd`, nightly) replaces the
+//! autovectorized TPE lane loop with explicit `f64x8` ops; only
+//! exactly-rounded IEEE arithmetic runs in SIMD registers, so the
+//! feature changes codegen, never results.
+
+pub mod dominance;
+pub mod tpe_score;
+
+pub use tpe_score::{score_into, KernelScratch, MixtureKernel, LANES};

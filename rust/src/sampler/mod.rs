@@ -17,6 +17,7 @@
 mod cmaes;
 mod gp;
 mod grid;
+pub mod kernels;
 mod parzen;
 mod random;
 mod rf;
@@ -31,7 +32,7 @@ pub use parzen::ParzenEstimator;
 pub use random::RandomSampler;
 pub use rf::RfSampler;
 pub use search_space::{intersection_search_space, intersection_search_space_ctx};
-pub use tpe::{CandidateScorer, ScoreGroup, TpeBackend, TpeConfig, TpeSampler};
+pub use tpe::{CandidateScorer, ScoreGroup, TpeBackend, TpeConfig, TpeKernel, TpeSampler};
 pub use tpe_cmaes::TpeCmaEsSampler;
 
 use std::collections::BTreeMap;

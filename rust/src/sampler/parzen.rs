@@ -28,7 +28,10 @@ pub struct ParzenEstimator {
     pub high: f64,
 }
 
-fn ndtr(z: f64) -> f64 {
+/// Standard normal CDF — shared with the batched kernels
+/// (`sampler/kernels/tpe_score.rs`), which must evaluate the truncation
+/// mass with the identical expression to stay bit-equal to [`ParzenEstimator::logpdf`].
+pub(crate) fn ndtr(z: f64) -> f64 {
     0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
 }
 
@@ -147,17 +150,23 @@ impl ParzenEstimator {
         rng.trunc_normal(self.mus[k], self.sigmas[k], self.low, self.high)
     }
 
-    /// Pad the mixture to `k_max` components as f32 vectors in the layout
-    /// the Pallas kernel expects (dead components: weight 0, sigma 1).
-    pub fn to_kernel_inputs(&self, k_max: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    /// Pad the mixture to `k_max` components as flat `f64` vectors in the
+    /// layout batched scorers expect (dead components: weight 0, sigma 1).
+    ///
+    /// Kept in `f64` end to end: any consumer that truncated here (the
+    /// old signature returned `f32`) could never be bit-equal to the
+    /// scalar [`Self::logpdf`]. Backends with a genuinely 32-bit ABI
+    /// (the PJRT Pallas kernel) convert at their literal boundary
+    /// instead.
+    pub fn to_kernel_inputs(&self, k_max: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
         assert!(self.len() <= k_max, "mixture {} > kernel max {k_max}", self.len());
-        let mut mus = vec![0.0f32; k_max];
-        let mut sigmas = vec![1.0f32; k_max];
-        let mut weights = vec![0.0f32; k_max];
+        let mut mus = vec![0.0f64; k_max];
+        let mut sigmas = vec![1.0f64; k_max];
+        let mut weights = vec![0.0f64; k_max];
         for i in 0..self.len() {
-            mus[i] = self.mus[i] as f32;
-            sigmas[i] = self.sigmas[i] as f32;
-            weights[i] = self.weights[i] as f32;
+            mus[i] = self.mus[i];
+            sigmas[i] = self.sigmas[i];
+            weights[i] = self.weights[i];
         }
         (mus, sigmas, weights)
     }
@@ -248,6 +257,9 @@ mod tests {
         assert_eq!(weights[0..3], [1.0, 1.0, 1.0]);
         assert_eq!(weights[3..], [0.0; 5]);
         assert!(sigmas[4] == 1.0); // dead sigma placeholder positive
+        // live components carry the exact f64 values — no f32 round-trip
+        assert_eq!(mus[..3], pe.mus[..]);
+        assert_eq!(sigmas[..3], pe.sigmas[..]);
     }
 
     #[test]

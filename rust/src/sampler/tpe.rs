@@ -32,6 +32,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::core::{Distribution, TrialState};
+use crate::sampler::kernels::{self, KernelScratch, MixtureKernel};
 use crate::sampler::parzen::ParzenEstimator;
 use crate::sampler::random::RandomSampler;
 use crate::sampler::search_space::intersection_search_space_ctx;
@@ -83,6 +84,20 @@ pub enum TpeBackend {
     External(Arc<dyn CandidateScorer>),
 }
 
+/// Native scoring strategy (`tpe:kernel=scalar|vector` registry knob).
+/// Both produce bit-identical suggestions — the scalar loop is kept as
+/// the differential oracle for the batched kernel
+/// (`rust/tests/kernel_equiv.rs`); `vector` is the default because it
+/// hoists the candidate-invariant `erf`/`ln` work out of the candidate
+/// loop (see [`crate::sampler::kernels::tpe_score`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpeKernel {
+    /// Per-candidate `ParzenEstimator::logpdf` calls — the oracle.
+    Scalar,
+    /// Batched [`crate::sampler::kernels::score_into`] over the grid.
+    Vector,
+}
+
 /// TPE configuration (defaults mirror Optuna v0.x).
 pub struct TpeConfig {
     /// Random sampling for the first N trials.
@@ -108,6 +123,8 @@ pub struct TpeConfig {
     /// Parzen estimator is fitted to feasible observations only. Forces
     /// the scan observation path (the index columns are constraint-blind).
     pub constraints: bool,
+    /// Native scoring strategy; irrelevant for [`TpeBackend::External`].
+    pub kernel: TpeKernel,
 }
 
 impl Default for TpeConfig {
@@ -119,6 +136,7 @@ impl Default for TpeConfig {
             group: false,
             gamma_factor: 0.25,
             constraints: false,
+            kernel: TpeKernel::Vector,
         }
     }
 }
@@ -133,6 +151,10 @@ struct TpeScratch {
     scores: Vec<f64>,
     below: ParzenEstimator,
     above: ParzenEstimator,
+    // compiled mixtures + chunk buffers for the vector kernel
+    below_k: MixtureKernel,
+    above_k: MixtureKernel,
+    kscratch: KernelScratch,
 }
 
 /// Outcome of preparing one numeric parameter for (possibly batched)
@@ -176,7 +198,7 @@ impl TpeSampler {
 
     /// Registry constructor (spec `tpe:group=true,n_startup=20,...`).
     /// Knobs: `n_startup`, `candidates`, `max_obs`, `group`, `gamma`
-    /// (quantile factor), `constraints`.
+    /// (quantile factor), `constraints`, `kernel` (`scalar|vector`).
     pub fn from_config(
         cfg: &mut crate::registry::SpecConfig,
         seed: u64,
@@ -208,6 +230,17 @@ impl TpeSampler {
         }
         if let Some(v) = cfg.get_bool("constraints")? {
             c.constraints = v;
+        }
+        if let Some(v) = cfg.get_str("kernel") {
+            c.kernel = match v.as_str() {
+                "scalar" => TpeKernel::Scalar,
+                "vector" => TpeKernel::Vector,
+                other => {
+                    return Err(format!(
+                        "kernel must be 'scalar' or 'vector', got '{other}'"
+                    ))
+                }
+            };
         }
         Ok(Self::with_config(seed, c, TpeBackend::Native))
     }
@@ -369,9 +402,24 @@ impl TpeSampler {
                 // cheap in-process scoring: stay inside the scratch lock,
                 // zero allocation per call
                 let s = &mut *scratch;
-                s.scores.clear();
-                for &x in &s.cand {
-                    s.scores.push(s.below.logpdf(x) - s.above.logpdf(x));
+                match self.config.kernel {
+                    TpeKernel::Vector => {
+                        s.below_k.compile_from(&s.below);
+                        s.above_k.compile_from(&s.above);
+                        kernels::score_into(
+                            &s.cand,
+                            &s.below_k,
+                            &s.above_k,
+                            &mut s.kscratch,
+                            &mut s.scores,
+                        );
+                    }
+                    TpeKernel::Scalar => {
+                        s.scores.clear();
+                        for &x in &s.cand {
+                            s.scores.push(s.below.logpdf(x) - s.above.logpdf(x));
+                        }
+                    }
                 }
                 let mut best = 0usize;
                 for i in 1..s.cand.len() {
@@ -532,12 +580,36 @@ impl Sampler for TpeSampler {
             return out;
         }
         let scores: Vec<Vec<f64>> = match &self.backend {
-            TpeBackend::Native => pending
-                .iter()
-                .map(|(_, b, a, c)| {
-                    c.iter().map(|&x| b.logpdf(x) - a.logpdf(x)).collect()
-                })
-                .collect(),
+            TpeBackend::Native => match self.config.kernel {
+                TpeKernel::Vector => {
+                    // reuse the suggest-path scratch (compiled mixtures +
+                    // chunk buffers) across the batch
+                    let mut scratch = self.scratch.lock().unwrap();
+                    let s = &mut *scratch;
+                    pending
+                        .iter()
+                        .map(|(_, b, a, c)| {
+                            s.below_k.compile_from(b);
+                            s.above_k.compile_from(a);
+                            let mut out = Vec::with_capacity(c.len());
+                            kernels::score_into(
+                                c,
+                                &s.below_k,
+                                &s.above_k,
+                                &mut s.kscratch,
+                                &mut out,
+                            );
+                            out
+                        })
+                        .collect()
+                }
+                TpeKernel::Scalar => pending
+                    .iter()
+                    .map(|(_, b, a, c)| {
+                        c.iter().map(|&x| b.logpdf(x) - a.logpdf(x)).collect()
+                    })
+                    .collect(),
+            },
             TpeBackend::External(scorer) => {
                 let groups: Vec<ScoreGroup<'_>> = pending
                     .iter()
@@ -885,6 +957,70 @@ mod tests {
         let mut bad = crate::registry::SpecConfig::parse_pairs("gamma=-1").unwrap();
         let err = TpeSampler::from_config(&mut bad, 0).unwrap_err();
         assert!(err.contains("gamma"), "{err}");
+    }
+
+    #[test]
+    fn vector_and_scalar_kernels_suggest_identically() {
+        // the batched kernel must be a pure codegen change: every
+        // suggestion bit-identical to the scalar-oracle sampler under
+        // the same seed, with and without an observation index
+        let d = Distribution::float(-5.0, 5.0);
+        let trials = bowl_history(70, 29);
+        let mut ix = ObservationIndex::new(StudyDirection::Minimize);
+        let snap = ix.apply(&trials, 1);
+        let mk = |kernel| {
+            TpeSampler::with_config(
+                77,
+                TpeConfig { kernel, ..Default::default() },
+                TpeBackend::Native,
+            )
+        };
+        let (vec_s, sca_s) = (mk(TpeKernel::Vector), mk(TpeKernel::Scalar));
+        for i in 0..60 {
+            let c = if i % 2 == 0 {
+                StudyContext::new(StudyDirection::Minimize, &trials)
+            } else {
+                StudyContext::with_index(StudyDirection::Minimize, &trials, Some(&*snap))
+            };
+            let a = vec_s.sample_independent(&c, i, "x", &d);
+            let b = sca_s.sample_independent(&c, i, "x", &d);
+            assert_eq!(a.to_bits(), b.to_bits(), "suggestion {i} diverged");
+        }
+    }
+
+    #[test]
+    fn group_mode_kernels_agree() {
+        let trials = bowl_history(40, 33);
+        let mk = |kernel| {
+            TpeSampler::with_config(
+                8,
+                TpeConfig { group: true, kernel, ..Default::default() },
+                TpeBackend::Native,
+            )
+        };
+        let (vec_s, sca_s) = (mk(TpeKernel::Vector), mk(TpeKernel::Scalar));
+        let c = ctx(&trials);
+        let space = vec_s.infer_relative_search_space(&c);
+        for i in 0..20 {
+            let a = vec_s.sample_relative(&c, i, &space);
+            let b = sca_s.sample_relative(&c, i, &space);
+            assert_eq!(a.len(), b.len());
+            for (k, v) in &a {
+                assert_eq!(v.to_bits(), b[k].to_bits(), "param {k} diverged at ask {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_config_parses_kernel_knob() {
+        let mut cfg = crate::registry::SpecConfig::parse_pairs("kernel=scalar").unwrap();
+        let s = TpeSampler::from_config(&mut cfg, 0).unwrap();
+        cfg.finish().unwrap();
+        assert_eq!(s.config.kernel, TpeKernel::Scalar);
+        assert_eq!(TpeConfig::default().kernel, TpeKernel::Vector);
+        let mut bad = crate::registry::SpecConfig::parse_pairs("kernel=avx").unwrap();
+        let err = TpeSampler::from_config(&mut bad, 0).unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
     }
 
     #[test]

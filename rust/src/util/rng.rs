@@ -119,18 +119,70 @@ impl Pcg64 {
         }
     }
 
-    /// Sample from unnormalized weights; weights must be >= 0, sum > 0.
+    /// Sample from unnormalized weights. See [`Self::try_weighted_index`]
+    /// for the degenerate-input contract; panics only when *no* index
+    /// carries a usable (finite, non-negative) weight.
     pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
-        debug_assert!(total > 0.0);
-        let mut u = self.uniform() * total;
-        for (i, w) in weights.iter().enumerate() {
-            u -= w;
-            if u <= 0.0 {
-                return i;
+        self.try_weighted_index(weights)
+            .expect("weighted_index: no finite non-negative weight to sample from")
+    }
+
+    /// Sample an index with probability proportional to its weight.
+    ///
+    /// The old implementation summed blindly and walked `u -= w`, so a
+    /// NaN weight poisoned `u` (the `u <= 0.0` test never fires) and an
+    /// all-zero vector fell through — both silently returned the *last*
+    /// index, the `debug_assert!(total > 0.0)` being stripped in release.
+    /// Now:
+    ///
+    /// * non-finite and negative weights are skipped entirely (a NaN or
+    ///   −1 weight can never be returned);
+    /// * if no positive mass remains (all-zero vector, or a sum that
+    ///   overflows to +∞), the pick is uniform over the indices that at
+    ///   least carried a valid `>= 0` finite weight;
+    /// * with nothing valid at all, [`NoValidWeights`] — the caller
+    ///   decides, instead of receiving a silently-biased index.
+    ///
+    /// For well-formed inputs (all weights finite and positive) this is
+    /// the historical fast path bit for bit: one [`Self::uniform`] draw,
+    /// the same subtraction walk, the same result — the determinism
+    /// suites pin the RNG stream.
+    pub fn try_weighted_index(&mut self, weights: &[f64]) -> Result<usize, NoValidWeights> {
+        let total: f64 = weights
+            .iter()
+            .filter(|w| w.is_finite() && **w > 0.0)
+            .sum();
+        if total > 0.0 && total.is_finite() {
+            let mut u = self.uniform() * total;
+            let mut last_positive = 0usize;
+            for (i, &w) in weights.iter().enumerate() {
+                if !(w.is_finite() && w > 0.0) {
+                    continue;
+                }
+                u -= w;
+                if u <= 0.0 {
+                    return Ok(i);
+                }
+                last_positive = i;
+            }
+            // float residue: land on the last *positive* index, never on
+            // a trailing zero/NaN like the old code did
+            return Ok(last_positive);
+        }
+        let n_valid = weights.iter().filter(|w| w.is_finite() && **w >= 0.0).count();
+        if n_valid == 0 {
+            return Err(NoValidWeights);
+        }
+        let mut pick = self.index(n_valid);
+        for (i, &w) in weights.iter().enumerate() {
+            if w.is_finite() && w >= 0.0 {
+                if pick == 0 {
+                    return Ok(i);
+                }
+                pick -= 1;
             }
         }
-        weights.len() - 1
+        unreachable!("valid-weight count changed mid-scan")
     }
 
     /// Fresh generator split off this one (for child tasks).
@@ -140,6 +192,19 @@ impl Pcg64 {
         Pcg64::with_stream(seed, stream)
     }
 }
+
+/// Error from [`Pcg64::try_weighted_index`]: every weight was NaN,
+/// infinite, or negative — there is no defensible index to return.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoValidWeights;
+
+impl std::fmt::Display for NoValidWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "weighted sampling: no finite non-negative weight in the vector")
+    }
+}
+
+impl std::error::Error for NoValidWeights {}
 
 #[cfg(test)]
 mod tests {
@@ -226,6 +291,77 @@ mod tests {
         }
         assert_eq!(counts[0], 0);
         assert!(counts[2] > 5 * counts[1] / 2);
+    }
+
+    #[test]
+    fn weighted_index_all_zero_falls_back_to_uniform() {
+        // regression: the old walk never fired `u <= 0` here and always
+        // returned the last index
+        let mut r = Pcg64::new(21);
+        let w = [0.0, 0.0, 0.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..6000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 1500, "index {i} under uniform fallback: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_index_skips_nan_weight() {
+        // regression: a single NaN used to poison u and select the last
+        // index unconditionally
+        let mut r = Pcg64::new(23);
+        let w = [1.0, f64::NAN, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..6000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0, "NaN-weighted index was sampled: {counts:?}");
+        assert!(counts[0] > 2000 && counts[2] > 2000, "bias: {counts:?}");
+    }
+
+    #[test]
+    fn weighted_index_never_returns_trailing_zero() {
+        // regression: float residue in the subtraction walk used to land
+        // on the last index even when its weight was zero
+        let mut r = Pcg64::new(25);
+        let w = [1.0, 1.0, 0.0];
+        for _ in 0..10_000 {
+            assert_ne!(r.weighted_index(&w), 2);
+        }
+    }
+
+    #[test]
+    fn weighted_index_all_invalid_is_typed_error() {
+        let mut r = Pcg64::new(27);
+        assert_eq!(
+            r.try_weighted_index(&[f64::NAN, -1.0, f64::INFINITY]),
+            Err(NoValidWeights)
+        );
+        assert_eq!(r.try_weighted_index(&[]), Err(NoValidWeights));
+    }
+
+    #[test]
+    fn weighted_index_valid_path_consumes_one_uniform_and_is_unchanged() {
+        // all-positive vectors must keep the historical draw discipline
+        // exactly — the determinism suites pin the RNG stream
+        let mut a = Pcg64::new(29);
+        let mut b = Pcg64::new(29);
+        let w = [2.0, 1.0, 5.0];
+        let i = a.weighted_index(&w);
+        let mut u = b.uniform() * (2.0 + 1.0 + 5.0);
+        let mut want = w.len() - 1;
+        for (k, &x) in w.iter().enumerate() {
+            u -= x;
+            if u <= 0.0 {
+                want = k;
+                break;
+            }
+        }
+        assert_eq!(i, want, "selection diverged from the historical walk");
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG stream advanced differently");
     }
 
     #[test]

@@ -200,6 +200,54 @@ fn telemetry_on_and_off_produce_identical_trajectories() {
     }
 }
 
+/// The TPE kernel knob (`tpe:kernel=vector|scalar`) selects an execution
+/// strategy, not an algorithm: on every storage backend the vectorized
+/// batch kernels and the per-candidate scalar oracle must walk the exact
+/// same trajectory from the same seed — bit for bit, through pruning and
+/// mixed distributions.
+#[test]
+fn tpe_kernel_on_vs_off_identical_across_backends() {
+    use optuna_rs::registry::make_sampler;
+
+    let mut runs = Vec::new();
+    for spec in ["tpe:kernel=vector", "tpe:kernel=scalar"] {
+        for (name, storage, cleanup, cache) in backends("kernel") {
+            let study = Study::builder()
+                .name("det-kernel")
+                .storage(storage)
+                .storage_caching(cache)
+                .sampler(make_sampler(spec, 99).unwrap())
+                .pruner(Arc::new(MedianPruner::new()))
+                .build()
+                .unwrap();
+            study
+                .optimize(30, |t| {
+                    let x = t.suggest_float("x", -5.0, 5.0)?;
+                    let k = t.suggest_int("k", 1, 4)?;
+                    let c = t.suggest_categorical("c", &["a", "b"])?;
+                    let bump = if c == "a" { 0.0 } else { 0.5 };
+                    t.report(1, x * x)?;
+                    if t.should_prune()? {
+                        return Err(OptunaError::TrialPruned);
+                    }
+                    Ok(x * x + k as f64 * 0.1 + bump)
+                })
+                .unwrap();
+            runs.push((format!("{spec}/{name}"), trajectory(&study)));
+            if let Some(p) = cleanup {
+                std::fs::remove_file(p).ok();
+            }
+        }
+    }
+    for (name, run) in &runs[1..] {
+        assert_eq!(
+            run, &runs[0].1,
+            "kernel determinism: {name} diverged from {}",
+            runs[0].0
+        );
+    }
+}
+
 /// The batched suggest path must propose exactly what sequential asks
 /// (without intervening tells — the same information state) would: one
 /// shared snapshot per batch is an optimization, not a behavior change.

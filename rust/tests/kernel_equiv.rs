@@ -1,0 +1,247 @@
+//! Kernel equivalence suite (ISSUE 10): the vectorized sampler kernels
+//! must make **bit-identical decisions** to their scalar oracles at
+//! fixed seeds.
+//!
+//! * TPE: whole-study trajectories under `tpe:kernel=vector` (the
+//!   default) vs `tpe:kernel=scalar` — every suggested internal value
+//!   compared by `to_bits`, across directions, mixed distributions,
+//!   pruning, group mode, and NaN objectives.
+//! * Dominance: `nondominated_sort{,_constrained}` (flat-key bit-packed
+//!   peeling) vs the `_scalar` oracles on adversarial inputs — NaN, ±0,
+//!   ±∞, heavy ties, duplicates.
+//! * Hypervolume: the key-filtered sweeps vs an independent brute-force
+//!   coordinate-compression oracle.
+//!
+//! The scalar paths exist precisely for this suite (the
+//! `SingleMutexStorage` pattern): a kernel regression shows up as a
+//! front-order or trajectory diff, not a tolerance creep.
+
+use std::sync::Arc;
+
+use optuna_rs::multi::{
+    hypervolume, nondominated_sort, nondominated_sort_constrained,
+    nondominated_sort_constrained_scalar, nondominated_sort_scalar,
+};
+use optuna_rs::prelude::*;
+use optuna_rs::registry::make_sampler;
+use optuna_rs::util::rng::Pcg64;
+use optuna_rs::util::stats::nan_max_cmp;
+
+/// Bit-exact record of a finished study: (number, params as bits, values
+/// as bits) per trial.
+fn trajectory(study: &Study) -> Vec<(u64, Vec<(String, u64)>, Vec<u64>)> {
+    study
+        .trials()
+        .unwrap()
+        .iter()
+        .map(|t| {
+            (
+                t.number,
+                t.params
+                    .iter()
+                    .map(|(k, (_, v))| (k.clone(), v.to_bits()))
+                    .collect(),
+                t.objective_values().iter().map(|v| v.to_bits()).collect(),
+            )
+        })
+        .collect()
+}
+
+fn run_tpe_study(spec: &str, seed: u64, direction: StudyDirection) -> Vec<(u64, Vec<(String, u64)>, Vec<u64>)> {
+    let study = Study::builder()
+        .name("kernel-equiv")
+        .direction(direction)
+        .sampler(make_sampler(spec, seed).unwrap())
+        .pruner(Arc::new(MedianPruner::new()))
+        .build()
+        .unwrap();
+    study
+        .optimize(60, |t| {
+            let x = t.suggest_float("x", -5.0, 5.0)?;
+            let k = t.suggest_int("k", 1, 4)?;
+            let c = t.suggest_categorical("c", &["a", "b", "cc"])?;
+            t.report(1, x * x)?;
+            if t.should_prune()? {
+                return Err(OptunaError::TrialPruned);
+            }
+            if x > 4.5 {
+                return Ok(f64::NAN); // diverged region: NaN losses in history
+            }
+            Ok(x * x + k as f64 * 0.1 + c.len() as f64 * 0.01)
+        })
+        .unwrap();
+    trajectory(&study)
+}
+
+#[test]
+fn tpe_vector_kernel_trajectory_is_bit_identical_to_scalar() {
+    for direction in [StudyDirection::Minimize, StudyDirection::Maximize] {
+        for seed in [7u64, 99, 12345] {
+            let vec_run = run_tpe_study("tpe:kernel=vector", seed, direction);
+            let sca_run = run_tpe_study("tpe:kernel=scalar", seed, direction);
+            assert_eq!(
+                vec_run, sca_run,
+                "seed {seed} {direction:?}: vector kernel diverged from scalar oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn tpe_default_spec_is_the_vector_kernel_and_still_matches() {
+    // `tpe` (no knob) defaults to kernel=vector: the kernel rollout must
+    // not change what a plain spec suggests vs the scalar oracle
+    let plain = run_tpe_study("tpe", 4242, StudyDirection::Minimize);
+    let scalar = run_tpe_study("tpe:kernel=scalar", 4242, StudyDirection::Minimize);
+    assert_eq!(plain, scalar, "default spec diverged from the scalar oracle");
+}
+
+#[test]
+fn tpe_group_mode_kernels_are_bit_identical() {
+    let run = |spec: &str| {
+        let study = Study::builder()
+            .name("kernel-equiv-group")
+            .sampler(make_sampler(spec, 31).unwrap())
+            .build()
+            .unwrap();
+        study
+            .optimize(45, |t| {
+                let x = t.suggest_float("x", -5.0, 5.0)?;
+                let y = t.suggest_float("y", -5.0, 5.0)?;
+                Ok(x * x + (y - 1.0) * (y - 1.0))
+            })
+            .unwrap();
+        trajectory(&study)
+    };
+    assert_eq!(
+        run("tpe:group=true,kernel=vector"),
+        run("tpe:group=true,kernel=scalar"),
+        "group-mode batched scoring diverged from the scalar oracle"
+    );
+}
+
+/// Loss grids drawn to make every edge case common: NaN, ±∞, signed
+/// zero, coarse-grid ties, exact duplicate rows.
+fn adversarial_losses(rng: &mut Pcg64, n: usize, dim: usize) -> Vec<Vec<f64>> {
+    let mut rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            (0..dim)
+                .map(|_| match rng.index(10) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => f64::NEG_INFINITY,
+                    3 => -0.0,
+                    _ => rng.int_range(-3, 3) as f64,
+                })
+                .collect()
+        })
+        .collect();
+    // splice in exact duplicates of earlier rows
+    for _ in 0..n / 4 {
+        let src = rng.index(n);
+        let dst = rng.index(n);
+        rows[dst] = rows[src].clone();
+    }
+    rows
+}
+
+#[test]
+fn nondominated_sort_kernel_matches_scalar_oracle() {
+    let mut rng = Pcg64::new(2026);
+    for case in 0..150 {
+        let n = rng.index(90);
+        let dim = 1 + rng.index(4);
+        let losses = adversarial_losses(&mut rng, n.max(1), dim);
+        assert_eq!(
+            nondominated_sort(&losses),
+            nondominated_sort_scalar(&losses),
+            "case {case}: plain sort diverged (n={n}, dim={dim})"
+        );
+        let viol: Vec<f64> = (0..losses.len())
+            .map(|_| match rng.index(4) {
+                0 => 0.0,
+                1 => f64::NAN,
+                _ => rng.uniform_range(0.0, 3.0),
+            })
+            .collect();
+        assert_eq!(
+            nondominated_sort_constrained(&losses, &viol),
+            nondominated_sort_constrained_scalar(&losses, &viol),
+            "case {case}: constrained sort diverged (n={n}, dim={dim})"
+        );
+    }
+}
+
+/// Brute-force hypervolume by coordinate compression — an oracle fully
+/// independent of both the sweep and the filter under test.
+fn hv_brute(points: &[Vec<f64>], reference: &[f64]) -> f64 {
+    let d = reference.len();
+    let inside: Vec<&Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x < r))
+        .collect();
+    if inside.is_empty() {
+        return 0.0;
+    }
+    let mut axes: Vec<Vec<f64>> = Vec::with_capacity(d);
+    for m in 0..d {
+        let mut xs: Vec<f64> = inside.iter().map(|p| p[m]).collect();
+        xs.push(reference[m]);
+        xs.sort_by(nan_max_cmp);
+        xs.dedup();
+        axes.push(xs);
+    }
+    let radix: Vec<usize> = axes.iter().map(|a| a.len() - 1).collect();
+    if radix.iter().any(|&r| r == 0) {
+        return 0.0;
+    }
+    let mut idx = vec![0usize; d];
+    let mut total = 0.0;
+    loop {
+        let corner: Vec<f64> = (0..d).map(|m| axes[m][idx[m]]).collect();
+        if inside.iter().any(|p| p.iter().zip(&corner).all(|(a, b)| a <= b)) {
+            total += (0..d)
+                .map(|m| axes[m][idx[m] + 1] - axes[m][idx[m]])
+                .product::<f64>();
+        }
+        let mut m = 0;
+        loop {
+            idx[m] += 1;
+            if idx[m] < radix[m] {
+                break;
+            }
+            idx[m] = 0;
+            m += 1;
+            if m == d {
+                return total;
+            }
+        }
+    }
+}
+
+#[test]
+fn hypervolume_with_key_filter_matches_brute_force() {
+    let mut rng = Pcg64::new(77);
+    for case in 0..120 {
+        let d = 2 + rng.index(2); // 2 or 3
+        let n = rng.index(14);
+        // half-grid coords: duplicates, ties, and boundary hits abound
+        let points: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|_| match rng.index(12) {
+                        0 => f64::NAN,
+                        _ => rng.int_range(0, 5) as f64 / 2.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        let reference = vec![2.0; d];
+        let fast = hypervolume(&points, &reference).unwrap();
+        let brute = hv_brute(&points, &reference);
+        assert!(
+            (fast - brute).abs() < 1e-9,
+            "case {case}: d={d} fast={fast} brute={brute} points={points:?}"
+        );
+    }
+}
